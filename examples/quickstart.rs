@@ -1,0 +1,99 @@
+//! Quickstart: the whole stack in one file.
+//!
+//! 1. Numeric path — spawn a 4-device TP coordinator, execute the
+//!    AOT-compiled sliced-GEMM artifact (Pallas kernel -> HLO -> PJRT) on
+//!    every device, ring-all-reduce the partials with the functional
+//!    collective, and check the result against a CPU oracle.
+//! 2. Timing path — simulate the same serialized "GEMM -> AR" pattern at
+//!    paper scale (T-NLG FC-2, TP=8) under Sequential vs T3 vs T3-MCA and
+//!    print the speedups (paper Figure 16).
+//!
+//! Run: `make artifacts && cargo run --release --example quickstart`
+
+use t3::config::SystemConfig;
+use t3::coordinator::Coordinator;
+use t3::exec::{run_sublayer, sublayer_speedup, Scenario};
+use t3::models::{by_name, SubLayer};
+use t3::runtime::{Runtime, TensorF32};
+use t3::sim::rng::Rng;
+
+fn main() -> anyhow::Result<()> {
+    println!("== T3 quickstart ==\n");
+
+    // ---------------- numeric path ----------------
+    let dir = Runtime::default_dir();
+    if Runtime::artifacts_available(&dir) {
+        let tp = 4usize;
+        let (m, k, n) = (256usize, 128usize, 512usize);
+        let mut coord = Coordinator::new(tp, dir)?;
+        let mut rng = Rng::new(1);
+        let w: Vec<f32> = (0..k * n).map(|_| rng.f32_range(-0.5, 0.5)).collect();
+        let xs: Vec<Vec<f32>> = (0..tp)
+            .map(|_| (0..m * k).map(|_| rng.f32_range(-0.5, 0.5)).collect())
+            .collect();
+        // Every worker runs its K-slice partial GEMM through PJRT...
+        let inputs: Vec<Vec<TensorF32>> = xs
+            .iter()
+            .map(|x| {
+                vec![
+                    TensorF32::new(x.clone(), &[m, k]),
+                    TensorF32::new(w.clone(), &[k, n]),
+                ]
+            })
+            .collect();
+        let outs = coord.exec_all("sliced_gemm", inputs)?;
+        // ...and the leader all-reduces the partials with the functional
+        // ring (the dataflow T3 performs in hardware).
+        let partials: Vec<Vec<f32>> = outs.into_iter().map(|mut o| o.swap_remove(0)).collect();
+        let reduced = coord.all_reduce(partials);
+        // Oracle.
+        let mut want = vec![0.0f64; m * n];
+        for x in &xs {
+            for r in 0..m {
+                for c in 0..n {
+                    let mut acc = 0.0;
+                    for kk in 0..k {
+                        acc += x[r * k + kk] as f64 * w[kk * n + c] as f64;
+                    }
+                    want[r * n + c] += acc;
+                }
+            }
+        }
+        let max_err = reduced
+            .iter()
+            .zip(&want)
+            .map(|(a, b)| (*a as f64 - b).abs())
+            .fold(0.0f64, f64::max);
+        println!(
+            "numeric: {tp}-device sliced GEMM (Pallas->HLO->PJRT) + ring-AR vs oracle: max err {max_err:.2e}"
+        );
+        assert!(max_err < 1e-3);
+    } else {
+        println!("numeric: skipped (run `make artifacts` to enable the PJRT path)");
+    }
+
+    // ---------------- timing path ----------------
+    let sys = SystemConfig::table1();
+    let model = by_name("T-NLG").unwrap();
+    let tp = 8;
+    println!("\ntiming: T-NLG FC-2(fwd), TP={tp}, Table-1 system");
+    let seq = run_sublayer(&sys, &model, tp, SubLayer::Fc2Fwd, Scenario::Sequential);
+    println!(
+        "  Sequential: GEMM {:.3}ms + RS {:.3}ms + AG {:.3}ms = {:.3}ms",
+        seq.gemm.as_ms_f64(),
+        seq.rs.as_ms_f64(),
+        seq.ag.as_ms_f64(),
+        seq.total.as_ms_f64()
+    );
+    for sc in [Scenario::T3, Scenario::T3Mca, Scenario::IdealOverlap] {
+        let r = run_sublayer(&sys, &model, tp, SubLayer::Fc2Fwd, sc);
+        println!(
+            "  {:22} {:.3}ms  ({:.2}x)",
+            sc.name(),
+            r.total.as_ms_f64(),
+            sublayer_speedup(&seq, &r)
+        );
+    }
+    println!("\nquickstart OK");
+    Ok(())
+}

@@ -1,0 +1,106 @@
+"""AOT lowering: JAX/Pallas graphs -> HLO *text* artifacts for the Rust
+runtime.
+
+HLO text (not ``HloModuleProto.serialize()``) is the interchange format:
+jax >= 0.5 emits protos with 64-bit instruction ids which the ``xla``
+crate's xla_extension 0.5.1 rejects (``proto.id() <= INT_MAX``); the text
+parser reassigns ids and round-trips cleanly. All entries are lowered with
+``return_tuple=True`` and unwrapped with ``to_tuple*`` on the Rust side.
+
+Run once via ``make artifacts``; Python never executes on the request
+path.
+
+Usage: python -m compile.aot [--out-dir ../artifacts]
+"""
+
+from __future__ import annotations
+
+import argparse
+import os
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model
+
+
+def to_hlo_text(lowered) -> str:
+    """Lowered jax computation -> XLA HLO text."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def f32(*shape):
+    return jax.ShapeDtypeStruct(shape, jnp.float32)
+
+
+def entries():
+    """(name, fn, example_args) for every artifact."""
+    m = model
+    return [
+        (
+            "sliced_gemm",
+            m.sliced_gemm,
+            (f32(m.GEMM_M, m.GEMM_K_SLICE), f32(m.GEMM_K_SLICE, m.GEMM_N)),
+        ),
+        (
+            "mlp_fwd",
+            m.mlp_fwd_entry,
+            (
+                f32(m.TOKENS, m.HIDDEN),
+                f32(m.HIDDEN, m.FFN_SLICE),
+                f32(m.FFN_SLICE, m.HIDDEN),
+            ),
+        ),
+        (
+            "loss_grad",
+            m.loss_grad_entry,
+            (f32(m.TOKENS, m.HIDDEN), f32(m.TOKENS, m.HIDDEN)),
+        ),
+        (
+            "mlp_bwd",
+            m.mlp_bwd_entry,
+            (
+                f32(m.TOKENS, m.HIDDEN),
+                f32(m.TOKENS, m.FFN_SLICE),
+                f32(m.FFN_SLICE, m.HIDDEN),
+                f32(m.TOKENS, m.HIDDEN),
+            ),
+        ),
+    ]
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out-dir", default=os.path.join("..", "artifacts"))
+    ap.add_argument("--out", default=None, help="(compat) ignored single-file path")
+    args = ap.parse_args()
+    out_dir = args.out_dir
+    if args.out is not None:
+        out_dir = os.path.dirname(args.out) or "."
+    os.makedirs(out_dir, exist_ok=True)
+
+    manifest = []
+    for name, fn, example in entries():
+        lowered = jax.jit(fn).lower(*example)
+        text = to_hlo_text(lowered)
+        path = os.path.join(out_dir, f"{name}.hlo.txt")
+        with open(path, "w") as f:
+            f.write(text)
+        shapes = ";".join(
+            "x".join(map(str, a.shape)) + ":f32" for a in example
+        )
+        manifest.append(f"{name} {shapes}")
+        print(f"wrote {path} ({len(text)} chars)")
+
+    with open(os.path.join(out_dir, "manifest.txt"), "w") as f:
+        f.write("\n".join(manifest) + "\n")
+    print(f"wrote {os.path.join(out_dir, 'manifest.txt')}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,155 @@
+"""Layer-1: Pallas tiled-GEMM kernel — the producer the T3 hardware fuses.
+
+The kernel embodies the tiling contract the Rust simulator's Tracker
+assumes (Section 4.2.1 of the paper, mirrored in ``rust/src/gemm``): every
+grid step (the Pallas analog of a workgroup/wavefront) produces one
+complete ``block_m x block_n`` output tile; the accumulation (K) dimension
+is kept whole inside the kernel, exactly like the tensor-sliced GEMMs of
+Figure 5 whose K shrinks with TP degree while the tile grid is unchanged.
+
+Hardware adaptation (paper targets AMD GPUs; Pallas targets the TPU-ish
+abstract machine):
+
+* the grid plays the role of the WG launch; one grid step = one WG tile;
+* ``BlockSpec`` index maps express the HBM->VMEM staging the GPU kernel
+  gets from LDS tiling;
+* a GEMM *stage* (set of concurrently-resident WGs) is a contiguous range
+  of grid indices;
+* the staggered stage->chunk schedule of Section 4.4 is a *grid-index
+  permutation implemented purely in the index maps* —
+  ``matmul_staggered`` below — leaving the kernel body untouched. That is
+  T3's transparency claim, preserved on this substrate.
+
+``interpret=True`` everywhere: the CPU PJRT plugin cannot execute Mosaic
+custom-calls; interpret mode lowers to plain HLO, which is what the Rust
+runtime loads (see /opt/xla-example/README.md).
+"""
+
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+# Default tile: matches the Rust `Tiling::default()` (128x128 WG tiles) and
+# the MXU-friendly 128-lane shape.
+BLOCK_M = 128
+BLOCK_N = 128
+
+
+def _matmul_kernel(x_ref, w_ref, o_ref):
+    """One output tile: full-K dot product at fp32 accumulation."""
+    x = x_ref[...]
+    w = w_ref[...]
+    acc = jnp.dot(x, w, preferred_element_type=jnp.float32)
+    o_ref[...] = acc.astype(o_ref.dtype)
+
+
+def _grid_specs(m, n, k, block_m, block_n, stagger=None):
+    """Block specs for a (m/bm, n/bn) grid.
+
+    `stagger = (devices, device_id)` permutes the tile-row processing
+    order into the staggered chunk schedule of Section 4.4, as a pure
+    index-map change (closed-form arithmetic over the grid index — Pallas
+    index maps cannot capture arrays).
+    """
+    if stagger is None:
+        def row(i):
+            return i
+    else:
+        devices, device_id = stagger
+        tiles_m = m // block_m
+        assert tiles_m % devices == 0, (
+            f"staggered kernel needs devices | tile rows ({tiles_m} % {devices})"
+        )
+        rpc = tiles_m // devices  # rows per chunk
+
+        def row(i):
+            chunk = (device_id + 1 + i // rpc) % devices
+            return chunk * rpc + i % rpc
+
+    x_spec = pl.BlockSpec((block_m, k), lambda i, j: (row(i), 0))
+    w_spec = pl.BlockSpec((k, block_n), lambda i, j: (0, j))
+    o_spec = pl.BlockSpec((block_m, block_n), lambda i, j: (row(i), j))
+    return x_spec, w_spec, o_spec
+
+
+@functools.partial(
+    jax.jit, static_argnames=("block_m", "block_n", "interpret")
+)
+def matmul(x, w, *, block_m=BLOCK_M, block_n=BLOCK_N, interpret=True):
+    """`x @ w` via the Pallas tiled kernel.
+
+    Requires m % block_m == 0 and n % block_n == 0 (the production tiling;
+    ragged edges are handled by the callers padding, as BLAS kernels do).
+    """
+    m, k = x.shape
+    k2, n = w.shape
+    assert k == k2, f"inner dims mismatch: {k} vs {k2}"
+    assert m % block_m == 0, f"m={m} not a multiple of {block_m}"
+    assert n % block_n == 0, f"n={n} not a multiple of {block_n}"
+    x_spec, w_spec, o_spec = _grid_specs(m, n, k, block_m, block_n)
+    out_dtype = jnp.promote_types(x.dtype, w.dtype)
+    return pl.pallas_call(
+        _matmul_kernel,
+        grid=(m // block_m, n // block_n),
+        in_specs=[x_spec, w_spec],
+        out_specs=o_spec,
+        out_shape=jax.ShapeDtypeStruct((m, n), out_dtype),
+        interpret=interpret,
+    )(x, w)
+
+
+def staggered_row_order(tiles_m: int, devices: int, device_id: int):
+    """Tile-row processing order for T3's staggered chunk schedule.
+
+    Mirrors `rust/src/gemm::ChunkPlan`: tile-rows are split into `devices`
+    chunks (first `tiles_m % devices` chunks one row larger); device `d`
+    processes chunks in ring order starting from `(d+1) % devices`.
+    """
+    base, extra = divmod(tiles_m, devices)
+    starts, s = [], 0
+    sizes = []
+    for c in range(devices):
+        sz = base + (1 if c < extra else 0)
+        starts.append(s)
+        sizes.append(sz)
+        s += sz
+    order = []
+    for i in range(devices):
+        c = (device_id + 1 + i) % devices
+        order.extend(range(starts[c], starts[c] + sizes[c]))
+    return order
+
+
+@functools.partial(
+    jax.jit,
+    static_argnames=("devices", "device_id", "block_m", "block_n", "interpret"),
+)
+def matmul_staggered(
+    x, w, *, devices, device_id, block_m=BLOCK_M, block_n=BLOCK_N, interpret=True
+):
+    """`x @ w` with the tile rows processed in staggered chunk order.
+
+    Numerically identical to :func:`matmul` — each output tile is written
+    exactly once — but the production *order* matches what device
+    `device_id` of a `devices`-way fused GEMM-RS would follow. The kernel
+    body is unchanged: only the BlockSpec index maps differ (§4.4).
+    """
+    m, k = x.shape
+    _, n = w.shape
+    assert m % block_m == 0 and n % block_n == 0
+    x_spec, w_spec, o_spec = _grid_specs(
+        m, n, k, block_m, block_n, stagger=(devices, device_id)
+    )
+    out_dtype = jnp.promote_types(x.dtype, w.dtype)
+    return pl.pallas_call(
+        _matmul_kernel,
+        grid=(m // block_m, n // block_n),
+        in_specs=[x_spec, w_spec],
+        out_specs=o_spec,
+        out_shape=jax.ShapeDtypeStruct((m, n), out_dtype),
+        interpret=interpret,
+    )(x, w)

@@ -1,0 +1,59 @@
+"""Pure-jnp oracles for the Pallas kernel and the collective dataflow.
+
+Everything here is the "obviously correct" implementation the kernels and
+the Rust functional collectives are checked against.
+"""
+
+from __future__ import annotations
+
+import jax.numpy as jnp
+
+
+def matmul_ref(x, w):
+    """Reference GEMM with fp32 accumulation (matches the kernel)."""
+    out_dtype = jnp.promote_types(x.dtype, w.dtype)
+    return jnp.dot(
+        x.astype(jnp.float32), w.astype(jnp.float32)
+    ).astype(out_dtype)
+
+
+def sliced_gemm_allreduce_ref(x, w, tp: int):
+    """Tensor-sliced GEMM + all-reduce oracle (Figure 2c).
+
+    Slices the K dimension `tp` ways, computes the per-device partials,
+    and sums them — the result every device holds after the AR. Must equal
+    `x @ w` up to fp reassociation.
+    """
+    m, k = x.shape
+    assert k % tp == 0
+    ks = k // tp
+    parts = [
+        matmul_ref(x[:, d * ks:(d + 1) * ks], w[d * ks:(d + 1) * ks, :])
+        for d in range(tp)
+    ]
+    return jnp.sum(jnp.stack(parts), axis=0)
+
+
+def ring_reduce_scatter_ref(arrays):
+    """Functional ring-RS oracle: device d ends with chunk d of the sum."""
+    n = len(arrays)
+    total = jnp.sum(jnp.stack(arrays), axis=0)
+    flat = total.reshape(-1)
+    base, extra = divmod(flat.shape[0], n)
+    chunks, s = [], 0
+    for i in range(n):
+        sz = base + (1 if i < extra else 0)
+        chunks.append(flat[s:s + sz])
+        s += sz
+    return chunks
+
+
+def ring_all_reduce_ref(arrays):
+    """All-reduce oracle: every device ends with the element-wise sum."""
+    return jnp.sum(jnp.stack(arrays), axis=0)
+
+
+def gelu_ref(x):
+    """tanh-approximation GeLU (what the model uses)."""
+    c = jnp.sqrt(2.0 / jnp.pi).astype(x.dtype)
+    return 0.5 * x * (1.0 + jnp.tanh(c * (x + 0.044715 * x**3)))

@@ -1,0 +1,137 @@
+"""Layer-2: the tensor-parallel model graphs, built on the Pallas kernel.
+
+Two families of entry points, all AOT-lowered by ``aot.py`` and executed
+from Rust through PJRT (Python never runs on the request path):
+
+1. ``sliced_gemm`` — one tensor-sliced producer GEMM (Figure 2c): the
+   device's K-slice partial, to be ring-all-reduced by the Rust
+   coordinator. Used by the quickstart / inference examples.
+
+2. The tensor-parallel MLP block used by the end-to-end training example
+   (``examples/train_e2e.rs``): Megatron-style column-parallel W1 +
+   row-parallel W2, so the forward produces a *partial* output that the
+   coordinator reduces — exactly the serialized "sliced GEMM -> AR"
+   pattern the paper overlaps. The backward is written out explicitly
+   (validated against ``jax.grad`` in the tests) so each device's gradient
+   GEMMs are also expressible as standalone artifacts.
+
+All GEMMs route through the L1 Pallas kernel so the lowered HLO exercises
+the same tiled producer the simulator models.
+"""
+
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .kernels.gemm import matmul
+from .kernels.ref import gelu_ref
+
+# ---------------------------------------------------------------------
+# Fixed artifact shapes (the Rust runtime mirrors these constants).
+# ---------------------------------------------------------------------
+
+#: quickstart sliced GEMM: [M, K_slice] @ [K_slice, N] -> partial [M, N]
+GEMM_M, GEMM_K_SLICE, GEMM_N = 256, 128, 512
+
+#: TP-MLP training block (per device, TP degree TRAIN_TP)
+TRAIN_TP = 4
+TOKENS = 256        # tokens per step (seq*batch)
+HIDDEN = 512        # H
+FFN = 2048          # 4H
+FFN_SLICE = FFN // TRAIN_TP
+
+
+def sliced_gemm(x, w):
+    """Partial GEMM of one device's K-slice (fp32)."""
+    return (matmul(x, w),)
+
+
+def _gelu(x):
+    return gelu_ref(x)
+
+
+def _dgelu(x):
+    """d gelu(x) / dx for the tanh approximation."""
+    c = jnp.sqrt(2.0 / jnp.pi).astype(x.dtype)
+    u = c * (x + 0.044715 * x**3)
+    t = jnp.tanh(u)
+    du = c * (1.0 + 3 * 0.044715 * x**2)
+    return 0.5 * (1.0 + t) + 0.5 * x * (1.0 - t**2) * du
+
+
+def mlp_fwd(x, w1s, w2s):
+    """Per-device forward of the TP MLP block.
+
+    x    : [TOKENS, HIDDEN]     (replicated input)
+    w1s  : [HIDDEN, FFN_SLICE]  (column-parallel slice)
+    w2s  : [FFN_SLICE, HIDDEN]  (row-parallel slice)
+
+    Returns (y_partial, h_pre): the partial output the coordinator
+    all-reduces, and the pre-activation kept for backward.
+    """
+    h_pre = matmul(x, w1s)
+    h = _gelu(h_pre)
+    y_partial = matmul(h, w2s)
+    return y_partial, h_pre
+
+
+def loss_grad(y, target):
+    """Mean-squared-error loss and its gradient w.r.t. y.
+
+    Runs replicated on every device after the all-reduce (standard TP).
+    """
+    diff = y - target
+    n = jnp.asarray(diff.size, dtype=y.dtype)
+    loss = jnp.sum(diff * diff) / n
+    dy = 2.0 * diff / n
+    return loss, dy
+
+
+def mlp_bwd(x, h_pre, w2s, dy):
+    """Per-device backward of the TP MLP block.
+
+    With the standard TP layout no gradient communication is needed for
+    the weight slices (dy is replicated after the AR; x is replicated):
+
+    dW2s = gelu(h_pre)^T @ dy
+    dh   = dy @ W2s^T * gelu'(h_pre)
+    dW1s = x^T @ dh
+    """
+    h = _gelu(h_pre)
+    dw2s = matmul(h.T, dy)
+    dh = matmul(dy, w2s.T) * _dgelu(h_pre)
+    dw1s = matmul(x.T, dh)
+    return dw1s, dw2s
+
+
+def mlp_fwd_entry(x, w1s, w2s):
+    """Tuple-returning jit entry for AOT lowering."""
+    y, h = mlp_fwd(x, w1s, w2s)
+    return (y, h)
+
+
+def loss_grad_entry(y, target):
+    loss, dy = loss_grad(y, target)
+    return (loss, dy)
+
+
+def mlp_bwd_entry(x, h_pre, w2s, dy):
+    dw1s, dw2s = mlp_bwd(x, h_pre, w2s, dy)
+    return (dw1s, dw2s)
+
+
+def reference_loss(x, w1_full, w2_full, target):
+    """Unsliced reference loss for the tests (and tolerance anchor)."""
+    h = _gelu(jnp.dot(x, w1_full))
+    y = jnp.dot(h, w2_full)
+    diff = y - target
+    return jnp.sum(diff * diff) / diff.size
+
+
+def teacher_targets(x, key):
+    """Synthetic regression targets from a fixed random teacher network."""
+    k1, k2 = jax.random.split(key)
+    wt1 = jax.random.normal(k1, (HIDDEN, HIDDEN), jnp.float32) * 0.05
+    wt2 = jax.random.normal(k2, (HIDDEN, HIDDEN), jnp.float32) * 0.05
+    return jnp.tanh(x @ wt1) @ wt2

@@ -1,0 +1,21 @@
+//! Shared bench scaffolding: every figure bench runs its harness
+//! function, prints the rendered table, writes the CSV under `results/`,
+//! and reports the regeneration wall time.
+
+use std::time::Instant;
+
+use t3::harness::Table;
+
+pub fn emit(tables: Vec<Table>, started: Instant) {
+    for t in tables {
+        println!("{}", t.render());
+        match t.write_csv("results") {
+            Ok(p) => println!("  (csv: {})", p.display()),
+            Err(e) => eprintln!("  csv write failed: {e}"),
+        }
+    }
+    println!(
+        "[bench] regenerated in {:.2}s",
+        started.elapsed().as_secs_f64()
+    );
+}

@@ -1,0 +1,12 @@
+//! Figures 13/14: multi-GPU reduce-scatter simulation validation against
+//! the alpha-beta reference over 6-192 MB.
+mod common;
+
+use std::time::Instant;
+use t3::config::SystemConfig;
+
+fn main() {
+    let t0 = Instant::now();
+    let sys = SystemConfig::table1();
+    common::emit(vec![t3::harness::fig14(&sys)], t0);
+}

@@ -1,0 +1,13 @@
+//! Figures 15 & 16: sub-layer runtime distribution and speedups for
+//! Mega-GPT-2 and T-NLG at TP=8/16 under all five configurations.
+mod common;
+
+use std::time::Instant;
+use t3::config::SystemConfig;
+
+fn main() {
+    let t0 = Instant::now();
+    let sys = SystemConfig::table1();
+    let g = t3::harness::fig15_16(&sys);
+    common::emit(vec![g.dist, g.speedups], t0);
+}

@@ -1,0 +1,14 @@
+//! Figure 18 (+ Figure 17 trace): DRAM access breakdown per sub-layer and
+//! the §6.2 data-movement reductions.
+mod common;
+
+use std::time::Instant;
+use t3::config::SystemConfig;
+
+fn main() {
+    let t0 = Instant::now();
+    let sys = SystemConfig::table1();
+    let f17 = t3::harness::fig17(&sys, "results");
+    let f18 = t3::harness::fig18(&sys);
+    common::emit(vec![f17, f18], t0);
+}

@@ -1,0 +1,11 @@
+//! Figure 19: end-to-end training / prompt-phase speedups for all models.
+mod common;
+
+use std::time::Instant;
+use t3::config::SystemConfig;
+
+fn main() {
+    let t0 = Instant::now();
+    let sys = SystemConfig::table1();
+    common::emit(vec![t3::harness::fig19(&sys)], t0);
+}

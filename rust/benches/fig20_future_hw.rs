@@ -1,0 +1,17 @@
+//! Figure 20: T3 on future hardware with 2x compute (CUs doubled, network
+//! unchanged) — plus Table 2 and Table 3 dumps.
+mod common;
+
+use std::time::Instant;
+
+fn main() {
+    let t0 = Instant::now();
+    common::emit(
+        vec![
+            t3::harness::fig20(),
+            t3::harness::table2(),
+            t3::harness::table3(),
+        ],
+        t0,
+    );
+}

@@ -1,0 +1,11 @@
+//! Figure 4: fraction of Transformer time on sliced GEMMs + RS/AG.
+mod common;
+
+use std::time::Instant;
+use t3::config::SystemConfig;
+
+fn main() {
+    let t0 = Instant::now();
+    let sys = SystemConfig::table1();
+    common::emit(vec![t3::harness::fig4(&sys)], t0);
+}

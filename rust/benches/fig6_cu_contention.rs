@@ -1,0 +1,11 @@
+//! Figure 6: compute-unit sharing between GEMM and the AR kernel.
+mod common;
+
+use std::time::Instant;
+use t3::config::SystemConfig;
+
+fn main() {
+    let t0 = Instant::now();
+    let sys = SystemConfig::table1();
+    common::emit(vec![t3::harness::fig6(&sys)], t0);
+}

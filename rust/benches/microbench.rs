@@ -1,0 +1,98 @@
+//! Microbenchmarks of the simulator's hot paths (the §Perf targets):
+//! event-queue throughput, memory-system transaction throughput, and
+//! end-to-end events/second of a representative fused run.
+
+use std::time::Instant;
+
+use t3::config::{ArbPolicy, DType, SystemConfig};
+use t3::engine::fused::{run_fused_gemm_rs, FusedOpts};
+use t3::gemm::{GemmShape, StagePlan, Tiling};
+use t3::hw::hbm::{GroupId, MemEvent, MemorySystem, TrafficClass, Txn, TxnKind};
+use t3::hw::mc::Stream;
+use t3::sim::events::EventQueue;
+use t3::sim::time::SimTime;
+
+struct Ev(MemEvent);
+impl From<MemEvent> for Ev {
+    fn from(m: MemEvent) -> Self {
+        Ev(m)
+    }
+}
+
+fn bench_event_queue() {
+    let n = 2_000_000u64;
+    let mut q: EventQueue<u64> = EventQueue::new();
+    let t0 = Instant::now();
+    // push/pop interleaved with a rolling horizon (calendar-like load)
+    for i in 0..n {
+        q.schedule(SimTime::ps(q.now().as_ps() + (i % 97) + 1), i);
+        if i % 2 == 1 {
+            q.pop();
+        }
+    }
+    while q.pop().is_some() {}
+    let dt = t0.elapsed().as_secs_f64();
+    println!(
+        "event_queue: {:.1} M events/s ({} events in {:.3}s)",
+        n as f64 / dt / 1e6,
+        n,
+        dt
+    );
+}
+
+fn bench_memory_system() {
+    let sys = SystemConfig::table1();
+    let mut m = MemorySystem::new(sys.mem.clone(), ArbPolicy::T3Mca, sys.mca.clone());
+    m.set_intensity_class(1);
+    let mut q: EventQueue<Ev> = EventQueue::new();
+    let bytes = 512u64 << 20;
+    let t0 = Instant::now();
+    let txn = Txn {
+        kind: TxnKind::Read,
+        stream: Stream::Compute,
+        class: TrafficClass::GemmRead,
+        group: GroupId::NONE,
+    };
+    let n = m.submit_bytes(bytes, txn, &mut q);
+    while let Some((_, Ev(ev))) = q.pop() {
+        m.on_event(ev, &mut q);
+    }
+    let dt = t0.elapsed().as_secs_f64();
+    println!(
+        "memory_system: {:.1} M txns/s ({} txns, {:.0} GB simulated, wall {:.3}s)",
+        n as f64 / dt / 1e6,
+        n,
+        bytes as f64 / 1e9,
+        dt
+    );
+}
+
+fn bench_fused_run() {
+    let sys = SystemConfig::table1();
+    let shape = GemmShape::new(8192, 4256, 2128, DType::F16); // T-NLG FC-2 TP=8
+    let plan = StagePlan::new(shape, Tiling::default(), &sys.gpu);
+    let opts = FusedOpts {
+        policy: ArbPolicy::T3Mca,
+        trace_bin: None,
+    };
+    // warmup + measure
+    let _ = run_fused_gemm_rs(&sys, &plan, 8, &opts);
+    let t0 = Instant::now();
+    let reps = 5;
+    for _ in 0..reps {
+        let r = run_fused_gemm_rs(&sys, &plan, 8, &opts);
+        assert!(r.total > SimTime::ZERO);
+    }
+    let dt = t0.elapsed().as_secs_f64() / reps as f64;
+    println!("fused_run (T-NLG FC-2 TP=8): {dt:.3}s per simulation");
+}
+
+fn main() {
+    println!("== t3 microbenchmarks ==");
+    bench_event_queue();
+    bench_memory_system();
+    bench_fused_run();
+    // §6.1.3 ablation: MCA occupancy-threshold sensitivity.
+    let sys = SystemConfig::table1();
+    println!("{}", t3::harness::ablation_mca_thresholds(&sys).render());
+}

@@ -1,0 +1,345 @@
+//! Producer output address-space configuration (Section 4.4, Figures 11-12).
+//!
+//! T3's transparency claim rests here: instead of rewriting GEMM kernels,
+//! the collective library configures the *mapping* of the producer's output
+//! chunks — which chunk is written straight to a remote device
+//! (`remote_map`, fine-grained peer-to-peer stores), which is written
+//! locally and later DMA'd (`dma_map`, with its trigger condition and
+//! store-vs-update semantics), and which stays local. The Tracker and the
+//! DMA command table are pre-programmed from this configuration.
+
+use crate::gemm::ChunkPlan;
+
+/// DMA/store operation semantics at the destination memory.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum MemOp {
+    /// Plain store (all-gather, all-to-all: no reduction).
+    Store,
+    /// Near-memory op-and-store reduction (reduce-scatter / all-reduce).
+    Update,
+}
+
+/// How one output chunk is mapped.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ChunkMap {
+    /// Written only to local memory (the device's own final chunk).
+    Local,
+    /// Producer stores go directly to `dst` over the link (first ring step).
+    Remote { dst: u64, op: MemOp },
+    /// Written locally, then DMA'd to `dst` once `updates_per_element`
+    /// updates (local + incoming) have been observed by the Tracker.
+    Dma {
+        dst: u64,
+        op: MemOp,
+        updates_per_element: u32,
+    },
+}
+
+/// Collective selection for output mapping.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum CollectiveKind {
+    /// Ring reduce-scatter (the paper's running example).
+    RingReduceScatter,
+    /// Ring all-gather (no reductions; stores instead of updates).
+    RingAllGather,
+    /// Direct reduce-scatter on a fully-connected topology (§7.1): every
+    /// stage's output is sliced and remote-mapped; no DMA steps at all.
+    DirectReduceScatter,
+    /// All-to-all (§7.1): remote-mapped slices, stores, nothing local.
+    AllToAll,
+}
+
+/// The full output-space configuration for one device: per processed-chunk
+/// mapping plus which chunks are expected to arrive via DMA/remote writes.
+#[derive(Debug, Clone)]
+pub struct OutputMap {
+    pub kind: CollectiveKind,
+    pub device_id: u64,
+    pub devices: u64,
+    /// Mapping for the chunk processed at position `i` (staggered order).
+    pub by_position: Vec<ChunkMap>,
+    /// positions that receive an incoming transfer for their chunk.
+    pub receives_at: Vec<bool>,
+}
+
+impl OutputMap {
+    /// Build the ring reduce-scatter configuration of Figures 7/11/12.
+    ///
+    /// Device `d` (with upstream `d+1`, downstream `d-1` in the ring used
+    /// throughout the paper's figures) processes chunks in staggered order;
+    /// position 0 is remote-mapped to the downstream neighbor, positions
+    /// `1..N-1` are dma-mapped there, and the final position is the
+    /// device's own fully-reduced chunk (local).
+    pub fn ring_reduce_scatter(plan: &ChunkPlan, device_id: u64) -> Self {
+        let n = plan.devices;
+        let downstream = (device_id + n - 1) % n;
+        let mut by_position = Vec::with_capacity(n as usize);
+        let mut receives_at = Vec::with_capacity(n as usize);
+        for pos in 0..n {
+            if pos == 0 {
+                by_position.push(ChunkMap::Remote {
+                    dst: downstream,
+                    op: MemOp::Update,
+                });
+                receives_at.push(false);
+            } else if pos == n - 1 {
+                by_position.push(ChunkMap::Local);
+                receives_at.push(true);
+            } else {
+                by_position.push(ChunkMap::Dma {
+                    dst: downstream,
+                    op: MemOp::Update,
+                    updates_per_element: 2,
+                });
+                receives_at.push(true);
+            }
+        }
+        OutputMap {
+            kind: CollectiveKind::RingReduceScatter,
+            device_id,
+            devices: n,
+            by_position,
+            receives_at,
+        }
+    }
+
+    /// Ring all-gather: same ring structure, but plain stores and only one
+    /// update (the local write) triggers forwarding (§7.1 "Other types").
+    pub fn ring_all_gather(plan: &ChunkPlan, device_id: u64) -> Self {
+        let mut m = Self::ring_reduce_scatter(plan, device_id);
+        m.kind = CollectiveKind::RingAllGather;
+        for cm in &mut m.by_position {
+            *cm = match *cm {
+                ChunkMap::Remote { dst, .. } => ChunkMap::Remote {
+                    dst,
+                    op: MemOp::Store,
+                },
+                ChunkMap::Dma { dst, .. } => ChunkMap::Dma {
+                    dst,
+                    op: MemOp::Store,
+                    updates_per_element: 1,
+                },
+                ChunkMap::Local => ChunkMap::Local,
+            };
+        }
+        m
+    }
+
+    /// Direct RS over a fully-connected topology: each stage output slice
+    /// is remote-mapped to its owner; the collective is orchestrated
+    /// entirely by GEMM stores (no DMA, no extra memory traffic — §7.1).
+    pub fn direct_reduce_scatter(plan: &ChunkPlan, device_id: u64) -> Self {
+        let n = plan.devices;
+        let by_position = (0..n)
+            .map(|pos| {
+                let chunk = plan.chunk_order[pos as usize];
+                if chunk == device_id {
+                    ChunkMap::Local
+                } else {
+                    ChunkMap::Remote {
+                        dst: chunk,
+                        op: MemOp::Update,
+                    }
+                }
+            })
+            .collect();
+        OutputMap {
+            kind: CollectiveKind::DirectReduceScatter,
+            device_id,
+            devices: n,
+            by_position,
+            receives_at: vec![true; n as usize], // updates arrive throughout
+        }
+    }
+
+    /// All-to-all: slice `s` goes to device `s`; nothing is reduced and the
+    /// remote-mapped output is not written locally.
+    pub fn all_to_all(plan: &ChunkPlan, device_id: u64) -> Self {
+        let mut m = Self::direct_reduce_scatter(plan, device_id);
+        m.kind = CollectiveKind::AllToAll;
+        for cm in &mut m.by_position {
+            if let ChunkMap::Remote { dst, .. } = *cm {
+                *cm = ChunkMap::Remote {
+                    dst,
+                    op: MemOp::Store,
+                };
+            }
+        }
+        m
+    }
+
+    /// Expected Tracker updates per element for the chunk at `pos`
+    /// (§4.2.1: threshold = wf_tile_size * updates-per-element).
+    pub fn updates_per_element(&self, pos: usize) -> u32 {
+        match self.by_position[pos] {
+            ChunkMap::Dma {
+                updates_per_element,
+                ..
+            } => updates_per_element,
+            // Local final chunk in a ring-RS still receives 2 updates
+            // (local + incoming DMA); in an AG just the local store.
+            ChunkMap::Local => {
+                if self.kind == CollectiveKind::RingReduceScatter && self.receives_at[pos] {
+                    2
+                } else {
+                    1
+                }
+            }
+            ChunkMap::Remote { .. } => 1,
+        }
+    }
+}
+
+/// One pre-programmed DMA command-table entry (§4.2.2, Figure 9c).
+#[derive(Debug, Clone, PartialEq)]
+pub struct DmaCommand {
+    pub position: usize,
+    pub dst_device: u64,
+    pub op: MemOp,
+    pub bytes: u64,
+    /// WF tiles covered (granularity >= tracker granularity).
+    pub wf_tiles: u64,
+    pub ready: bool,
+}
+
+/// The DMA command table: built from the `OutputMap` at configure time,
+/// entries flipped ready by the Tracker at run time.
+#[derive(Debug, Clone, Default)]
+pub struct DmaTable {
+    pub entries: Vec<DmaCommand>,
+}
+
+impl DmaTable {
+    pub fn program(map: &OutputMap, plan: &ChunkPlan) -> Self {
+        let mut entries = Vec::new();
+        for (pos, cm) in map.by_position.iter().enumerate() {
+            if let ChunkMap::Dma { dst, op, .. } = *cm {
+                let chunk = plan.chunk_order[pos] as usize;
+                entries.push(DmaCommand {
+                    position: pos,
+                    dst_device: dst,
+                    op,
+                    bytes: plan.chunk_bytes[chunk],
+                    wf_tiles: plan.chunk_wf_tiles[chunk],
+                    ready: false,
+                });
+            }
+        }
+        DmaTable { entries }
+    }
+
+    pub fn mark_ready(&mut self, position: usize) -> Option<&DmaCommand> {
+        let e = self.entries.iter_mut().find(|e| e.position == position)?;
+        e.ready = true;
+        Some(e)
+    }
+
+    pub fn all_fired(&self) -> bool {
+        self.entries.iter().all(|e| e.ready)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{DType, SystemConfig};
+    use crate::gemm::{GemmShape, StagePlan, Tiling};
+
+    fn chunk_plan(n: u64, dev: u64) -> ChunkPlan {
+        let sys = SystemConfig::table1();
+        let p = StagePlan::new(
+            GemmShape::new(4096, 4096, 1024, DType::F16),
+            Tiling::default(),
+            &sys.gpu,
+        );
+        ChunkPlan::new(&p, n, dev)
+    }
+
+    #[test]
+    fn ring_rs_map_structure() {
+        let cp = chunk_plan(4, 0);
+        let m = OutputMap::ring_reduce_scatter(&cp, 0);
+        assert_eq!(m.by_position.len(), 4);
+        assert!(matches!(m.by_position[0], ChunkMap::Remote { dst: 3, op: MemOp::Update }));
+        assert!(matches!(m.by_position[1], ChunkMap::Dma { dst: 3, op: MemOp::Update, updates_per_element: 2 }));
+        assert!(matches!(m.by_position[2], ChunkMap::Dma { .. }));
+        assert_eq!(m.by_position[3], ChunkMap::Local);
+        assert_eq!(m.receives_at, vec![false, true, true, true]);
+        // ring-RS: 2 updates per element on tracked chunks (§4.2.1)
+        assert_eq!(m.updates_per_element(1), 2);
+        assert_eq!(m.updates_per_element(3), 2);
+        assert_eq!(m.updates_per_element(0), 1);
+    }
+
+    #[test]
+    fn ring_ag_uses_stores_and_single_update() {
+        let cp = chunk_plan(4, 1);
+        let m = OutputMap::ring_all_gather(&cp, 1);
+        assert!(matches!(m.by_position[0], ChunkMap::Remote { op: MemOp::Store, .. }));
+        assert!(matches!(m.by_position[1], ChunkMap::Dma { op: MemOp::Store, updates_per_element: 1, .. }));
+        assert_eq!(m.updates_per_element(1), 1);
+    }
+
+    #[test]
+    fn direct_rs_is_all_remote() {
+        let cp = chunk_plan(8, 3);
+        let m = OutputMap::direct_reduce_scatter(&cp, 3);
+        let remotes = m
+            .by_position
+            .iter()
+            .filter(|c| matches!(c, ChunkMap::Remote { .. }))
+            .count();
+        let locals = m
+            .by_position
+            .iter()
+            .filter(|c| matches!(c, ChunkMap::Local))
+            .count();
+        assert_eq!(remotes, 7);
+        assert_eq!(locals, 1);
+        // destination of each remote slice is the chunk's owner
+        for (pos, cm) in m.by_position.iter().enumerate() {
+            if let ChunkMap::Remote { dst, op } = cm {
+                assert_eq!(*dst, cp.chunk_order[pos]);
+                assert_eq!(*op, MemOp::Update);
+            }
+        }
+    }
+
+    #[test]
+    fn all_to_all_stores_not_updates() {
+        let cp = chunk_plan(4, 0);
+        let m = OutputMap::all_to_all(&cp, 0);
+        for cm in &m.by_position {
+            if let ChunkMap::Remote { op, .. } = cm {
+                assert_eq!(*op, MemOp::Store);
+            }
+        }
+    }
+
+    #[test]
+    fn dma_table_covers_middle_positions() {
+        let cp = chunk_plan(8, 2);
+        let m = OutputMap::ring_reduce_scatter(&cp, 2);
+        let mut t = DmaTable::program(&m, &cp);
+        assert_eq!(t.entries.len(), 6); // N-2 dma-mapped chunks
+        assert!(!t.all_fired());
+        for pos in 1..7 {
+            let e = t.mark_ready(pos).expect("entry exists");
+            assert_eq!(e.dst_device, 1); // downstream of device 2
+        }
+        assert!(t.all_fired());
+        assert!(t.mark_ready(0).is_none()); // remote-mapped, no DMA entry
+    }
+
+    #[test]
+    fn dma_bytes_match_chunks() {
+        let cp = chunk_plan(4, 0);
+        let m = OutputMap::ring_reduce_scatter(&cp, 0);
+        let t = DmaTable::program(&m, &cp);
+        for e in &t.entries {
+            let chunk = cp.chunk_order[e.position] as usize;
+            assert_eq!(e.bytes, cp.chunk_bytes[chunk]);
+            assert_eq!(e.wf_tiles, cp.chunk_wf_tiles[chunk]);
+        }
+    }
+}

@@ -1,0 +1,13 @@
+//! Collective-communication implementations at three fidelities:
+//!
+//! * [`analytic`]   — closed-form α-β models of ring/direct collectives,
+//!   the "ground truth" our event simulation is validated against
+//!   (Figure 14's role in the paper);
+//! * timing models  — live in [`crate::engine`] (baseline CU kernels, NMC
+//!   variants, the T3 fused engine);
+//! * [`functional`] — bit-exact real-buffer implementations over the
+//!   coordinator's simulated devices, verified against the JAX oracle and
+//!   used on the numeric path of the examples.
+
+pub mod analytic;
+pub mod functional;

@@ -1,0 +1,352 @@
+//! System configuration: the paper's Table 1 GPU/node parameters plus the
+//! knobs our models add (roofline efficiencies, transaction granularity).
+//!
+//! All timing models read from these structs; presets are provided for the
+//! evaluated system (`SystemConfig::table1`) and the future-hardware study
+//! of §7.5 (`SystemConfig::future_2x_cu`, Figure 20).
+
+use crate::sim::time::SimTime;
+
+/// Datatype of tensors moving through the system.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum DType {
+    F16,
+    F32,
+}
+
+impl DType {
+    #[inline]
+    pub fn bytes(self) -> u64 {
+        match self {
+            DType::F16 => 2,
+            DType::F32 => 4,
+        }
+    }
+    pub fn name(self) -> &'static str {
+        match self {
+            DType::F16 => "fp16",
+            DType::F32 => "fp32",
+        }
+    }
+}
+
+/// Per-GPU compute configuration (Table 1, "Per-GPU Config").
+#[derive(Debug, Clone, PartialEq)]
+pub struct GpuConfig {
+    /// Number of compute units.
+    pub cu_count: u32,
+    /// Core clock in GHz.
+    pub freq_ghz: f64,
+    /// Peak matrix FLOPs per CU per cycle for fp16 (MAC = 2 FLOPs).
+    /// 80 CUs * 1.4 GHz * 1024 ≈ 114.7 TFLOP/s fp16, V100-class.
+    pub matrix_flops_per_cu_cycle_f16: u64,
+    /// Achievable fraction of peak for well-tuned GEMM kernels.
+    pub gemm_efficiency: f64,
+    /// Resident workgroups per CU (occupancy); a GEMM "stage" is
+    /// `cu_count * wgs_per_cu` workgroups (Section 2.5).
+    pub wgs_per_cu: u32,
+    /// Peak DRAM request bandwidth a single CU can source, bytes/cycle.
+    /// Limits how fast a CU-executed collective kernel can move data when
+    /// given few CUs (Figure 6: 8 CUs cannot saturate the link; calibrated
+    /// to the paper's ~41%/~7% AR slowdowns at 8/16 CUs).
+    pub mem_bytes_per_cu_cycle: u64,
+    /// Fraction of head-of-line memory stalls (compute loads queued behind
+    /// communication transactions) that occupancy/latency-hiding cannot
+    /// cover and which therefore extend the producer's critical path
+    /// (§3.2.2). 0 = perfect hiding, 1 = fully exposed.
+    pub stall_unhidden: f64,
+}
+
+impl GpuConfig {
+    /// Peak fp16 matrix throughput, FLOP/s.
+    pub fn peak_flops_f16(&self) -> f64 {
+        self.cu_count as f64 * self.freq_ghz * 1e9 * self.matrix_flops_per_cu_cycle_f16 as f64
+    }
+
+    /// Sustained GEMM throughput (peak * efficiency), FLOP/s, for `dtype`.
+    pub fn sustained_gemm_flops(&self, dtype: DType) -> f64 {
+        let peak = self.peak_flops_f16();
+        let scaled = match dtype {
+            DType::F16 => peak,
+            DType::F32 => peak / 2.0,
+        };
+        scaled * self.gemm_efficiency
+    }
+
+    /// Memory request bandwidth available to a kernel using `cus` CUs, GB/s.
+    pub fn cu_issue_bw_gbps(&self, cus: u32) -> f64 {
+        cus as f64 * self.mem_bytes_per_cu_cycle as f64 * self.freq_ghz
+    }
+}
+
+/// HBM + memory-controller configuration (Table 1, "L2"/"HBM2" rows).
+#[derive(Debug, Clone, PartialEq)]
+pub struct MemConfig {
+    /// Aggregate DRAM bandwidth, GB/s (Table 1: 1 TB/s).
+    pub total_bw_gbps: f64,
+    /// Number of independent (pseudo-)channels.
+    pub channels: u32,
+    /// Per-channel DRAM command-queue depth the MC can fill.
+    pub queue_depth: u32,
+    /// Modeled memory-transaction granularity in bytes. Coarser than a
+    /// cache line to keep event counts tractable; fine enough to preserve
+    /// burstiness and queue dynamics.
+    pub txn_bytes: u64,
+    /// Service-time multiplier for near-memory op-and-store transactions:
+    /// CCDWL = 2 x CCDL applies only to back-to-back ops in the same bank
+    /// group (4 groups, Table 1), so the effective penalty is fractional.
+    pub nmc_service_factor: f64,
+    /// Last-level cache capacity in bytes (Table 1: 16 MB).
+    pub llc_bytes: u64,
+}
+
+impl MemConfig {
+    /// Per-channel bandwidth, GB/s.
+    pub fn channel_bw_gbps(&self) -> f64 {
+        self.total_bw_gbps / self.channels as f64
+    }
+
+    /// Service time of one transaction on one channel.
+    pub fn txn_service(&self, nmc_update: bool) -> SimTime {
+        let base = SimTime::transfer(self.txn_bytes, self.channel_bw_gbps());
+        if nmc_update {
+            base * self.nmc_service_factor
+        } else {
+            base
+        }
+    }
+}
+
+/// Inter-GPU interconnect configuration (Table 1, "System" rows).
+#[derive(Debug, Clone, PartialEq)]
+pub struct LinkConfig {
+    /// Ring-link bandwidth per direction, GB/s. Table 1 lists 150 GB/s
+    /// bi-directional: 75 GB/s each way.
+    pub per_dir_bw_gbps: f64,
+    /// Link latency (Table 1: 500 ns).
+    pub latency: SimTime,
+}
+
+impl LinkConfig {
+    pub fn transfer_time(&self, bytes: u64) -> SimTime {
+        SimTime::transfer(bytes, self.per_dir_bw_gbps)
+    }
+}
+
+/// T3 Tracker hardware budget (Section 4.2.1).
+#[derive(Debug, Clone, PartialEq)]
+pub struct TrackerConfig {
+    /// Number of sets, indexed by wg_id LSBs (paper: 256).
+    pub sets: u32,
+    /// Associativity of each set.
+    pub ways: u32,
+    /// Maximum wavefronts per workgroup (3-bit wf_id => 8).
+    pub max_wfs_per_wg: u32,
+}
+
+impl TrackerConfig {
+    pub fn capacity(&self) -> u32 {
+        self.sets * self.ways
+    }
+    /// Approximate SRAM size in bytes: per entry an 8B starting virtual
+    /// address, 4B counter, and tag/valid bits (paper totals 19 KB).
+    pub fn size_bytes(&self) -> u32 {
+        self.capacity() * (8 + 4 + 2)
+    }
+}
+
+/// MCA (memory-controller arbitration) policy selection (Section 4.5).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ArbPolicy {
+    /// Round-robin between compute and communication streams, falling back
+    /// to the other stream when one is empty (the strawman of §4.5).
+    RoundRobin,
+    /// Always drain compute first; communication only when compute empty.
+    ComputePriority,
+    /// T3-MCA: compute priority + communication admitted only below a
+    /// DRAM-queue occupancy threshold + anti-starvation timer.
+    T3Mca,
+}
+
+/// Occupancy thresholds used by T3-MCA, selected by the memory intensity of
+/// the currently running compute kernel (§6.1.3: 5, 10, 30, or no limit).
+#[derive(Debug, Clone, PartialEq)]
+pub struct McaConfig {
+    /// Thresholds from most to least memory-intensive kernel class.
+    pub occupancy_thresholds: [u32; 4],
+    /// Prioritize the communication stream if it has waited this long.
+    pub starvation_limit: SimTime,
+}
+
+impl Default for McaConfig {
+    fn default() -> Self {
+        McaConfig {
+            occupancy_thresholds: [5, 10, 30, u32::MAX],
+            starvation_limit: SimTime::us(2),
+        }
+    }
+}
+
+/// Complete single-node system description.
+#[derive(Debug, Clone, PartialEq)]
+pub struct SystemConfig {
+    pub name: String,
+    pub gpu: GpuConfig,
+    pub mem: MemConfig,
+    pub link: LinkConfig,
+    pub tracker: TrackerConfig,
+    pub mca: McaConfig,
+    /// Deterministic simulation seed.
+    pub seed: u64,
+}
+
+impl SystemConfig {
+    /// The paper's evaluated configuration (Table 1).
+    pub fn table1() -> Self {
+        SystemConfig {
+            name: "table1".to_string(),
+            gpu: GpuConfig {
+                cu_count: 80,
+                freq_ghz: 1.4,
+                matrix_flops_per_cu_cycle_f16: 1024,
+                gemm_efficiency: 0.65,
+                // 3 resident WGs/CU => 240-WG stages, <= 256 Tracker sets:
+                // every concurrent WG maps to its own set (Section 4.2.1).
+                wgs_per_cu: 3,
+                mem_bytes_per_cu_cycle: 14,
+                stall_unhidden: 0.75,
+            },
+            mem: MemConfig {
+                total_bw_gbps: 1000.0,
+                channels: 32,
+                queue_depth: 64,
+                txn_bytes: 1024,
+                nmc_service_factor: 1.125,
+                llc_bytes: 16 << 20,
+            },
+            link: LinkConfig {
+                per_dir_bw_gbps: 75.0,
+                latency: SimTime::ns(500),
+            },
+            tracker: TrackerConfig {
+                sets: 256,
+                ways: 4,
+                max_wfs_per_wg: 8,
+            },
+            mca: McaConfig::default(),
+            seed: 0xC0FFEE,
+        }
+    }
+
+    /// §7.5 / Figure 20: compute FLOPS scaled 2x (modeled, like the paper,
+    /// by doubling CU count), network unchanged.
+    pub fn future_2x_cu() -> Self {
+        let mut c = Self::table1();
+        c.name = "gpu-2x-cu".to_string();
+        c.gpu.cu_count *= 2;
+        c
+    }
+
+    /// Human-readable dump used by `t3 config --show` (Table 1 analog).
+    pub fn describe(&self) -> String {
+        format!(
+            "system '{}'\n\
+             GPU:  {} CUs @ {:.1} GHz, peak fp16 {:.1} TFLOP/s (eff {:.0}%), {} WGs/CU\n\
+             LLC:  {} MB\n\
+             HBM:  {:.0} GB/s over {} channels (q-depth {}), txn {} B, NMC factor {:.3}\n\
+             Link: ring {:.0} GB/s per direction, latency {}\n\
+             Tracker: {} sets x {} ways = {} entries, {} KB",
+            self.name,
+            self.gpu.cu_count,
+            self.gpu.freq_ghz,
+            self.gpu.peak_flops_f16() / 1e12,
+            self.gpu.gemm_efficiency * 100.0,
+            self.gpu.wgs_per_cu,
+            self.mem.llc_bytes >> 20,
+            self.mem.total_bw_gbps,
+            self.mem.channels,
+            self.mem.queue_depth,
+            self.mem.txn_bytes,
+            self.mem.nmc_service_factor,
+            self.link.per_dir_bw_gbps,
+            self.link.latency,
+            self.tracker.sets,
+            self.tracker.ways,
+            self.tracker.capacity(),
+            self.tracker.size_bytes() / 1024,
+        )
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table1_matches_paper() {
+        let c = SystemConfig::table1();
+        assert_eq!(c.gpu.cu_count, 80);
+        assert_eq!(c.gpu.freq_ghz, 1.4);
+        assert_eq!(c.mem.total_bw_gbps, 1000.0);
+        assert_eq!(c.mem.llc_bytes, 16 << 20);
+        assert_eq!(c.link.latency, SimTime::ns(500));
+        // 150 GB/s bidirectional ring
+        assert_eq!(c.link.per_dir_bw_gbps * 2.0, 150.0);
+        assert_eq!(c.tracker.sets, 256);
+    }
+
+    #[test]
+    fn peak_flops_v100_class() {
+        let c = SystemConfig::table1();
+        let tflops = c.gpu.peak_flops_f16() / 1e12;
+        assert!((100.0..130.0).contains(&tflops), "peak {tflops} TFLOPs");
+        // fp32 sustained is half of fp16 sustained
+        let f16 = c.gpu.sustained_gemm_flops(DType::F16);
+        let f32_ = c.gpu.sustained_gemm_flops(DType::F32);
+        assert!((f16 / f32_ - 2.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn cu_issue_bw_explains_fig6() {
+        let c = SystemConfig::table1();
+        // Ring-RS feeds the link at ~issue_bw/3 (2 loads + 1 store per
+        // element): 8 CUs cannot saturate a 75 GB/s link direction,
+        // 16 CUs roughly can (Figure 6's 41% vs 7% AR slowdowns).
+        assert!(c.gpu.cu_issue_bw_gbps(8) / 3.0 < 75.0);
+        assert!(c.gpu.cu_issue_bw_gbps(16) / 3.0 > 75.0);
+        // all 80 CUs exceed DRAM bandwidth
+        assert!(c.gpu.cu_issue_bw_gbps(80) > 1000.0);
+    }
+
+    #[test]
+    fn mem_txn_service_time() {
+        let c = SystemConfig::table1();
+        let t = c.mem.txn_service(false);
+        // 1024B at 31.25 GB/s ≈ 32.8 ns
+        assert!((t.as_ns_f64() - 32.8).abs() < 0.5, "{t}");
+        assert!(c.mem.txn_service(true) > t);
+    }
+
+    #[test]
+    fn future_config_doubles_cus_only() {
+        let a = SystemConfig::table1();
+        let b = SystemConfig::future_2x_cu();
+        assert_eq!(b.gpu.cu_count, 2 * a.gpu.cu_count);
+        assert_eq!(b.mem, a.mem);
+        assert_eq!(b.link, a.link);
+    }
+
+    #[test]
+    fn tracker_size_near_19kb() {
+        let t = SystemConfig::table1().tracker;
+        let kb = t.size_bytes() / 1024;
+        assert!((10..=20).contains(&kb), "tracker {kb} KB");
+    }
+
+    #[test]
+    fn describe_mentions_key_numbers() {
+        let s = SystemConfig::table1().describe();
+        assert!(s.contains("80 CUs"));
+        assert!(s.contains("16 MB"));
+    }
+}

@@ -1,0 +1,221 @@
+//! Request batcher for the inference-serving example.
+//!
+//! Prompt-phase serving (the phase the paper accelerates, §7.3) is
+//! throughput-oriented: requests are coalesced into token-budget-bounded
+//! batches, each batch executing the TP forward pass (sliced GEMMs + ARs)
+//! once. The batcher implements the standard dynamic policy: fill up to
+//! `max_tokens` or `max_requests`, flush on `max_wait` to bound latency.
+
+use std::collections::VecDeque;
+
+use crate::sim::time::SimTime;
+
+/// One inference request (prompt phase).
+#[derive(Debug, Clone, PartialEq)]
+pub struct Request {
+    pub id: u64,
+    /// Prompt length in tokens.
+    pub tokens: u64,
+    /// Arrival time.
+    pub arrival: SimTime,
+}
+
+/// Batching policy knobs.
+#[derive(Debug, Clone)]
+pub struct BatchPolicy {
+    /// Maximum total tokens per batch (padding/packing budget).
+    pub max_tokens: u64,
+    /// Maximum requests per batch.
+    pub max_requests: usize,
+    /// Flush a non-empty batch after this wait even if not full.
+    pub max_wait: SimTime,
+}
+
+impl Default for BatchPolicy {
+    fn default() -> Self {
+        BatchPolicy {
+            max_tokens: 8192,
+            max_requests: 16,
+            max_wait: SimTime::ms(2),
+        }
+    }
+}
+
+/// A formed batch.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Batch {
+    pub requests: Vec<Request>,
+}
+
+impl Batch {
+    pub fn tokens(&self) -> u64 {
+        self.requests.iter().map(|r| r.tokens).sum()
+    }
+    pub fn oldest_arrival(&self) -> SimTime {
+        self.requests
+            .iter()
+            .map(|r| r.arrival)
+            .min()
+            .unwrap_or(SimTime::ZERO)
+    }
+}
+
+/// FIFO dynamic batcher.
+#[derive(Debug)]
+pub struct Batcher {
+    policy: BatchPolicy,
+    queue: VecDeque<Request>,
+}
+
+impl Batcher {
+    pub fn new(policy: BatchPolicy) -> Self {
+        Batcher {
+            policy,
+            queue: VecDeque::new(),
+        }
+    }
+
+    pub fn push(&mut self, req: Request) {
+        assert!(
+            req.tokens <= self.policy.max_tokens,
+            "request {} exceeds the token budget",
+            req.id
+        );
+        self.queue.push_back(req);
+    }
+
+    pub fn pending(&self) -> usize {
+        self.queue.len()
+    }
+
+    /// Form the next batch at time `now`, or `None` if the policy says
+    /// wait for more requests.
+    pub fn next_batch(&mut self, now: SimTime) -> Option<Batch> {
+        let head = self.queue.front()?;
+        let timed_out = now.saturating_sub(head.arrival) >= self.policy.max_wait;
+
+        // Count what fits.
+        let mut tokens = 0u64;
+        let mut count = 0usize;
+        for r in &self.queue {
+            if count >= self.policy.max_requests || tokens + r.tokens > self.policy.max_tokens {
+                break;
+            }
+            tokens += r.tokens;
+            count += 1;
+        }
+        debug_assert!(count > 0);
+        let full = count >= self.policy.max_requests
+            || self
+                .queue
+                .get(count)
+                .map(|r| tokens + r.tokens > self.policy.max_tokens)
+                .unwrap_or(false);
+        if !full && !timed_out {
+            return None;
+        }
+        let requests: Vec<Request> = self.queue.drain(..count).collect();
+        Some(Batch { requests })
+    }
+
+    /// Flush whatever is queued (end of trace).
+    pub fn flush(&mut self) -> Option<Batch> {
+        if self.queue.is_empty() {
+            return None;
+        }
+        let mut tokens = 0u64;
+        let mut count = 0usize;
+        for r in &self.queue {
+            if count >= self.policy.max_requests || tokens + r.tokens > self.policy.max_tokens {
+                break;
+            }
+            tokens += r.tokens;
+            count += 1;
+        }
+        let requests: Vec<Request> = self.queue.drain(..count).collect();
+        Some(Batch { requests })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn req(id: u64, tokens: u64, at_us: u64) -> Request {
+        Request {
+            id,
+            tokens,
+            arrival: SimTime::us(at_us),
+        }
+    }
+
+    fn policy(max_tokens: u64, max_requests: usize, wait_us: u64) -> BatchPolicy {
+        BatchPolicy {
+            max_tokens,
+            max_requests,
+            max_wait: SimTime::us(wait_us),
+        }
+    }
+
+    #[test]
+    fn batches_on_token_budget() {
+        let mut b = Batcher::new(policy(1000, 100, 10_000));
+        for i in 0..5 {
+            b.push(req(i, 400, 0));
+        }
+        let batch = b.next_batch(SimTime::us(1)).expect("full by tokens");
+        assert_eq!(batch.requests.len(), 2);
+        assert_eq!(batch.tokens(), 800);
+        assert_eq!(b.pending(), 3);
+    }
+
+    #[test]
+    fn batches_on_request_count() {
+        let mut b = Batcher::new(policy(100_000, 3, 10_000));
+        for i in 0..7 {
+            b.push(req(i, 10, 0));
+        }
+        let batch = b.next_batch(SimTime::us(1)).unwrap();
+        assert_eq!(batch.requests.len(), 3);
+        assert_eq!(batch.requests[0].id, 0);
+    }
+
+    #[test]
+    fn waits_when_not_full() {
+        let mut b = Batcher::new(policy(1000, 10, 500));
+        b.push(req(0, 100, 0));
+        assert!(b.next_batch(SimTime::us(100)).is_none());
+        // ...but flushes once the head has waited long enough.
+        let batch = b.next_batch(SimTime::us(600)).unwrap();
+        assert_eq!(batch.requests.len(), 1);
+    }
+
+    #[test]
+    fn fifo_order_preserved() {
+        let mut b = Batcher::new(policy(10_000, 2, 0));
+        for i in 0..4 {
+            b.push(req(i, 1, i));
+        }
+        let ids: Vec<u64> = std::iter::from_fn(|| b.next_batch(SimTime::ms(1)))
+            .flat_map(|batch| batch.requests.into_iter().map(|r| r.id))
+            .collect();
+        assert_eq!(ids, vec![0, 1, 2, 3]);
+    }
+
+    #[test]
+    fn flush_drains_queue() {
+        let mut b = Batcher::new(policy(1000, 100, 1_000_000));
+        b.push(req(0, 10, 0));
+        b.push(req(1, 10, 0));
+        let batch = b.flush().unwrap();
+        assert_eq!(batch.requests.len(), 2);
+        assert!(b.flush().is_none());
+    }
+
+    #[test]
+    #[should_panic]
+    fn oversized_request_rejected() {
+        let mut b = Batcher::new(policy(100, 10, 0));
+        b.push(req(0, 101, 0));
+    }
+}

@@ -1,0 +1,168 @@
+//! The tensor-parallel coordinator: the L3 leader/worker runtime that
+//! executes real numerics through the AOT artifacts.
+//!
+//! Architecture (vLLM-router-like, scaled to this repo):
+//! * the **leader** ([`Coordinator`]) owns the device set, the request
+//!   [`batcher`], and the collective schedule;
+//! * each **worker** is an OS thread owning its *own* PJRT client and
+//!   compiled executables (PJRT handles never cross threads) plus its
+//!   device-resident buffers; commands/results flow over channels;
+//! * between producer executions the leader drives the *functional* ring
+//!   collectives ([`crate::collectives::functional`]) across the workers'
+//!   buffers — the same chunked, staggered dataflow the T3 hardware
+//!   performs, so the examples prove numeric equivalence end-to-end;
+//! * alongside every real execution the leader can consult the timing
+//!   simulator ([`crate::exec`]) to report what the same iteration costs
+//!   under Sequential vs T3-MCA.
+
+pub mod batcher;
+
+use std::sync::mpsc;
+use std::thread::JoinHandle;
+
+use anyhow::{anyhow, Context, Result};
+
+use crate::collectives::functional::{ring_all_gather, ring_reduce_scatter};
+use crate::runtime::{Runtime, TensorF32};
+
+/// A command the leader sends to a worker.
+enum Cmd {
+    /// Execute artifact `name` with inputs; send outputs back.
+    Exec {
+        name: String,
+        inputs: Vec<TensorF32>,
+    },
+    Shutdown,
+}
+
+type ExecResult = Result<Vec<Vec<f32>>>;
+
+struct Worker {
+    tx: mpsc::Sender<Cmd>,
+    rx: mpsc::Receiver<ExecResult>,
+    handle: Option<JoinHandle<()>>,
+}
+
+/// The TP leader.
+pub struct Coordinator {
+    workers: Vec<Worker>,
+}
+
+impl Coordinator {
+    /// Spawn `n` workers, each with its own PJRT client over `artifacts`.
+    pub fn new(n: usize, artifacts: std::path::PathBuf) -> Result<Self> {
+        assert!(n >= 2, "tensor parallelism needs >= 2 devices");
+        let mut workers = Vec::with_capacity(n);
+        for d in 0..n {
+            let (cmd_tx, cmd_rx) = mpsc::channel::<Cmd>();
+            let (res_tx, res_rx) = mpsc::channel::<ExecResult>();
+            let dir = artifacts.clone();
+            let handle = std::thread::Builder::new()
+                .name(format!("t3-worker-{d}"))
+                .spawn(move || {
+                    // The worker owns all PJRT state; it never crosses the
+                    // thread boundary.
+                    let mut rt = match Runtime::new(&dir) {
+                        Ok(rt) => rt,
+                        Err(e) => {
+                            let _ = res_tx.send(Err(e));
+                            return;
+                        }
+                    };
+                    while let Ok(cmd) = cmd_rx.recv() {
+                        match cmd {
+                            Cmd::Exec { name, inputs } => {
+                                let r = rt.exec_f32(&name, &inputs);
+                                if res_tx.send(r).is_err() {
+                                    break;
+                                }
+                            }
+                            Cmd::Shutdown => break,
+                        }
+                    }
+                })
+                .context("spawning worker thread")?;
+            workers.push(Worker {
+                tx: cmd_tx,
+                rx: res_rx,
+                handle: Some(handle),
+            });
+        }
+        Ok(Coordinator { workers })
+    }
+
+    pub fn devices(&self) -> usize {
+        self.workers.len()
+    }
+
+    /// Execute `name` on every worker with per-device inputs, in parallel.
+    pub fn exec_all(
+        &mut self,
+        name: &str,
+        per_device_inputs: Vec<Vec<TensorF32>>,
+    ) -> Result<Vec<Vec<Vec<f32>>>> {
+        assert_eq!(per_device_inputs.len(), self.workers.len());
+        for (w, inputs) in self.workers.iter().zip(per_device_inputs) {
+            w.tx
+                .send(Cmd::Exec {
+                    name: name.to_string(),
+                    inputs,
+                })
+                .map_err(|_| anyhow!("worker died"))?;
+        }
+        let mut out = Vec::with_capacity(self.workers.len());
+        for (d, w) in self.workers.iter().enumerate() {
+            let r = w
+                .rx
+                .recv()
+                .map_err(|_| anyhow!("worker {d} hung up"))?
+                .with_context(|| format!("device {d} executing {name}"))?;
+            out.push(r);
+        }
+        Ok(out)
+    }
+
+    /// All-reduce per-device partials with the functional ring (RS + AG),
+    /// returning the reduced array every device now holds.
+    pub fn all_reduce(&self, mut partials: Vec<Vec<f32>>) -> Vec<f32> {
+        assert_eq!(partials.len(), self.devices());
+        let ranges = ring_reduce_scatter(&mut partials);
+        ring_all_gather(&mut partials, &ranges);
+        partials.swap_remove(0)
+    }
+}
+
+impl Drop for Coordinator {
+    fn drop(&mut self) {
+        for w in &self.workers {
+            let _ = w.tx.send(Cmd::Shutdown);
+        }
+        for w in &mut self.workers {
+            if let Some(h) = w.handle.take() {
+                let _ = h.join();
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    // Coordinator+PJRT integration lives in rust/tests/ (needs
+    // artifacts); the all-reduce path is testable standalone via a
+    // zero-worker shim — construct workers only when artifacts exist.
+
+    #[test]
+    fn all_reduce_matches_sum() {
+        // Use the functional path directly (no PJRT needed).
+        let partials = vec![vec![1.0f32; 64], vec![2.0; 64], vec![3.0; 64], vec![4.0; 64]];
+        // Coordinator::all_reduce is a thin wrapper; emulate it here.
+        let mut bufs = partials.clone();
+        let ranges = ring_reduce_scatter(&mut bufs);
+        ring_all_gather(&mut bufs, &ranges);
+        for b in &bufs {
+            assert!(b.iter().all(|&x| (x - 10.0).abs() < 1e-5));
+        }
+    }
+}

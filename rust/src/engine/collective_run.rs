@@ -1,0 +1,308 @@
+//! Baseline collective kernels (ring reduce-scatter / all-gather), executed
+//! the way modern collective libraries run them: as GPU kernels whose CUs
+//! read, reduce, and store data (Figure 3, Figure 10a).
+//!
+//! The CU count matters (Figure 6): a collective kernel given few CUs
+//! cannot source enough memory requests to saturate the ring link, which is
+//! precisely the compute-sharing penalty T3 avoids. The per-element work of
+//! ring-RS is 2 loads + 1 remote store, so a kernel with aggregate issue
+//! bandwidth `B` feeds the link at ~`B/3` (AG: 1 load + 1 store ⇒ `B/2`).
+//!
+//! `run_rs_nmc` models the same ring with near-memory-compute reductions
+//! and DMA-driven transfers (no CUs): incoming chunks are op-and-store
+//! updates, sends need one read, and the final local reduction disappears —
+//! the Ideal-RS+NMC configuration of §5.3.
+
+use crate::config::{ArbPolicy, SystemConfig};
+use crate::hw::hbm::{GroupId, TrafficClass, Txn, TxnKind};
+use crate::hw::mc::Stream;
+use crate::sim::stats::DramCounters;
+use crate::sim::time::SimTime;
+
+use super::{Ev, GroupTag, Runner, PACE_BATCH};
+
+/// Result of one collective run.
+#[derive(Debug, Clone)]
+pub struct CollectiveRunResult {
+    pub time: SimTime,
+    pub counters: DramCounters,
+    /// Per-step completion times.
+    pub step_ends: Vec<SimTime>,
+}
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+enum Kind {
+    /// CU-executed ring reduce-scatter.
+    RsCu,
+    /// CU-executed ring all-gather.
+    AgCu,
+    /// DMA + near-memory-compute ring reduce-scatter (no CUs).
+    RsNmc,
+}
+
+/// Baseline CU-executed ring reduce-scatter of `bytes` over `devices`
+/// devices using `cus` compute units.
+pub fn run_rs_baseline(sys: &SystemConfig, bytes: u64, devices: u64, cus: u32) -> CollectiveRunResult {
+    run_ring(sys, bytes, devices, cus, Kind::RsCu)
+}
+
+/// Baseline CU-executed ring all-gather.
+pub fn run_ag_baseline(sys: &SystemConfig, bytes: u64, devices: u64, cus: u32) -> CollectiveRunResult {
+    run_ring(sys, bytes, devices, cus, Kind::AgCu)
+}
+
+/// NMC-assisted, DMA-driven ring reduce-scatter (Ideal-RS+NMC).
+pub fn run_rs_nmc(sys: &SystemConfig, bytes: u64, devices: u64) -> CollectiveRunResult {
+    run_ring(sys, bytes, devices, 0, Kind::RsNmc)
+}
+
+struct StepCtx {
+    read_group: GroupId,
+    ingress_group: GroupId,
+}
+
+fn run_ring(sys: &SystemConfig, bytes: u64, devices: u64, cus: u32, kind: Kind) -> CollectiveRunResult {
+    assert!(devices >= 2);
+    let chunk = bytes / devices;
+    assert!(chunk > 0, "chunk must be non-empty");
+    let steps = (devices - 1) as u32;
+
+    // Effective rates. Per ring-RS element the kernel does 2 loads (own
+    // partial + received copy) + 1 remote store, except the first step
+    // which only loads the local copy; AG forwards with 1 load + 1 store.
+    let link_bw = sys.link.per_dir_bw_gbps;
+    let (feed_bw, read_bw, ingress_kind, read_class, write_class) = match kind {
+        Kind::RsCu => {
+            let cu_bw = sys.gpu.cu_issue_bw_gbps(cus);
+            (cu_bw / 3.0, cu_bw * 2.0 / 3.0, TxnKind::Write, TrafficClass::RsRead, TrafficClass::RsWrite)
+        }
+        Kind::AgCu => {
+            let cu_bw = sys.gpu.cu_issue_bw_gbps(cus);
+            (cu_bw / 2.0, cu_bw / 2.0, TxnKind::Write, TrafficClass::AgRead, TrafficClass::AgWrite)
+        }
+        Kind::RsNmc => (
+            f64::INFINITY, // DMA feeds the link at link rate
+            sys.mem.total_bw_gbps,
+            TxnKind::NmcUpdate,
+            TrafficClass::RsRead,
+            TrafficClass::RsWrite,
+        ),
+    };
+    let read_bytes_for = |step: u32| match kind {
+        // First send reads only the local copy; later sends fuse the
+        // reduce of the previous receive (2 reads).
+        Kind::RsCu => {
+            if step == 0 {
+                chunk
+            } else {
+                2 * chunk
+            }
+        }
+        Kind::AgCu => chunk,
+        Kind::RsNmc => chunk, // partial already merged by NMC
+    };
+
+    let mut r = Runner::new(sys, ArbPolicy::ComputePriority);
+    let mut step_ends = Vec::with_capacity(steps as usize + 1);
+    let mut tags: Vec<(GroupTag, SimTime)> = Vec::new();
+
+    // Start a step: paced local reads, egress reservation, mirrored ingress.
+    let mut ctx: Vec<StepCtx> = Vec::with_capacity(steps as usize);
+    macro_rules! start_step {
+        ($r:expr, $step:expr) => {{
+            let now = $r.now();
+            let read_txns = $r.mem.txns_for(read_bytes_for($step));
+            let rg = $r.register_group(read_txns, GroupTag::StepReads($step));
+            $r.schedule_issue($step, read_txns, now, read_bw, PACE_BATCH);
+            let w = $r.link_out.reserve_rate_limited(now, chunk, feed_bw);
+            $r.q.schedule(w.done, Ev::EgressDone { pos: $step });
+            let in_txns = $r.mem.txns_for(chunk);
+            let ig = $r.register_group(in_txns, GroupTag::StepIngress($step));
+            let in_rate = feed_bw.min(link_bw);
+            $r.schedule_ingress($step, in_txns, w.start + $r.sys.link.latency, in_rate, PACE_BATCH);
+            ctx.push(StepCtx {
+                read_group: rg,
+                ingress_group: ig,
+            });
+        }};
+    }
+    start_step!(r, 0);
+
+    // Step completion = reads + ingress + egress (3 conditions).
+    let mut remaining = 3u8;
+    let mut step = 0u32;
+    let mut in_final_reduce = false;
+
+    while let Some((_, ev)) = r.next_event() {
+        r.drain_tags(&mut tags);
+        for (tag, _blocked) in tags.drain(..) {
+            match tag {
+                GroupTag::StepReads(s) if s == step && !in_final_reduce => {
+                    remaining = remaining.saturating_sub(1)
+                }
+                GroupTag::StepIngress(s) if s == step => remaining = remaining.saturating_sub(1),
+                GroupTag::StepReads(s) if in_final_reduce && s == steps => {
+                    // Final-reduce reads done: write the reduced result.
+                    r.submit_tagged(chunk, TxnKind::Write, Stream::Compute, write_class, GroupTag::Drain);
+                }
+                _ => {}
+            }
+        }
+        match ev {
+            Ev::EgressDone { pos } if pos == step && !in_final_reduce => {
+                remaining = remaining.saturating_sub(1)
+            }
+            Ev::Issue { step: s, n } => {
+                let g = ctx[s as usize].read_group;
+                let t = Txn {
+                    kind: TxnKind::Read,
+                    stream: Stream::Compute,
+                    class: read_class,
+                    group: g,
+                };
+                r.mem.submit_burst(n as u64, t, &mut r.q);
+            }
+            Ev::Ingress { pos, n } => {
+                let t = Txn {
+                    kind: ingress_kind,
+                    stream: Stream::Comm,
+                    class: write_class,
+                    group: ctx[pos as usize].ingress_group,
+                };
+                r.mem.submit_burst(n as u64, t, &mut r.q);
+            }
+            _ => {}
+        }
+        if remaining == 0 {
+            step_ends.push(r.now());
+            remaining = u8::MAX;
+            if step + 1 < steps {
+                step += 1;
+                remaining = 3;
+                start_step!(r, step);
+            } else if kind == Kind::RsCu && !in_final_reduce {
+                // Baseline final local reduction: read own + received copy,
+                // write the reduced result. NMC folds this into the last
+                // ingress update (§4.3), AG has no reduction.
+                in_final_reduce = true;
+                let now = r.now();
+                let read_txns = r.mem.txns_for(2 * chunk);
+                let rg = r.register_group(read_txns, GroupTag::StepReads(steps));
+                r.schedule_issue(steps, read_txns, now, read_bw, PACE_BATCH);
+                ctx.push(StepCtx {
+                    read_group: rg,
+                    ingress_group: GroupId::NONE,
+                });
+            }
+        }
+    }
+    debug_assert!(r.mem.idle());
+    let time = r.now();
+    step_ends.push(time);
+
+    CollectiveRunResult {
+        time,
+        counters: r.mem.counters,
+        step_ends,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::SystemConfig;
+
+    const MB: u64 = 1 << 20;
+
+    #[test]
+    fn rs_link_bound_with_all_cus() {
+        let sys = SystemConfig::table1();
+        // 64 MB over 8 GPUs: alpha-beta lower bound (N-1)/N * S / link.
+        let res = run_rs_baseline(&sys, 64 * MB, 8, 80);
+        let lb = (7.0 / 8.0) * (64.0 * MB as f64) / (75.0 * 1e9);
+        let sim = res.time.as_secs_f64();
+        let ratio = sim / lb;
+        assert!((1.0..1.5).contains(&ratio), "sim/alpha-beta = {ratio}");
+    }
+
+    #[test]
+    fn rs_slows_with_few_cus() {
+        // Figure 6: AR with 8 CUs ~40% slower than with all CUs.
+        let sys = SystemConfig::table1();
+        let t80 = run_rs_baseline(&sys, 96 * MB, 8, 80).time;
+        let t8 = run_rs_baseline(&sys, 96 * MB, 8, 8).time;
+        let t16 = run_rs_baseline(&sys, 96 * MB, 8, 16).time;
+        let slow8 = t8.as_ps() as f64 / t80.as_ps() as f64;
+        let slow16 = t16.as_ps() as f64 / t80.as_ps() as f64;
+        assert!((1.25..1.8).contains(&slow8), "8-CU slowdown {slow8}");
+        assert!((1.0..1.25).contains(&slow16), "16-CU slowdown {slow16}");
+    }
+
+    #[test]
+    fn ag_faster_than_rs_same_size() {
+        let sys = SystemConfig::table1();
+        let rs = run_rs_baseline(&sys, 64 * MB, 8, 80).time;
+        let ag = run_ag_baseline(&sys, 64 * MB, 8, 80).time;
+        assert!(ag <= rs, "AG {ag} vs RS {rs}");
+    }
+
+    #[test]
+    fn rs_traffic_accounting() {
+        let sys = SystemConfig::table1();
+        let n = 8u64;
+        let bytes = 64 * MB;
+        let chunk = bytes / n;
+        let res = run_rs_baseline(&sys, bytes, n, 80);
+        // reads: 1 (first send) + 2 per later send + 2 final reduce
+        //      = 2N-1 chunks
+        let expect_reads = (2 * n - 1) * chunk;
+        // writes: N-1 incoming + 1 final reduced result = N chunks
+        let expect_writes = n * chunk;
+        let slack = 64 * sys.mem.txn_bytes * n;
+        assert!(res.counters.rs_reads >= expect_reads && res.counters.rs_reads <= expect_reads + slack,
+            "reads {} vs {}", res.counters.rs_reads, expect_reads);
+        assert!(res.counters.rs_writes >= expect_writes && res.counters.rs_writes <= expect_writes + slack,
+            "writes {} vs {}", res.counters.rs_writes, expect_writes);
+    }
+
+    #[test]
+    fn nmc_rs_faster_and_leaner_than_baseline() {
+        let sys = SystemConfig::table1();
+        let base = run_rs_baseline(&sys, 96 * MB, 8, 80);
+        let nmc = run_rs_nmc(&sys, 96 * MB, 8);
+        assert!(nmc.time < base.time);
+        // §6.1.1: NMC speeds RS by a few percent at TP=8.
+        let gain = base.time.as_ps() as f64 / nmc.time.as_ps() as f64;
+        assert!((1.01..1.25).contains(&gain), "NMC RS gain {gain}");
+        // NMC reads one copy per step, no final-reduce reads.
+        assert!(nmc.counters.rs_reads < base.counters.rs_reads);
+    }
+
+    #[test]
+    fn nmc_benefit_shrinks_with_tp() {
+        let sys = SystemConfig::table1();
+        let gain = |tp: u64| {
+            let b = run_rs_baseline(&sys, 96 * MB, tp, 80).time.as_ps() as f64;
+            let n = run_rs_nmc(&sys, 96 * MB, tp).time.as_ps() as f64;
+            b / n
+        };
+        assert!(gain(8) > gain(16), "NMC gain should shrink as TP grows");
+    }
+
+    #[test]
+    fn rs_scales_linearly_in_size() {
+        let sys = SystemConfig::table1();
+        let t1 = run_rs_baseline(&sys, 24 * MB, 4, 80).time.as_secs_f64();
+        let t2 = run_rs_baseline(&sys, 96 * MB, 4, 80).time.as_secs_f64();
+        let ratio = t2 / t1;
+        assert!((3.3..4.6).contains(&ratio), "scaling ratio {ratio}");
+    }
+
+    #[test]
+    fn step_count_matches_ring() {
+        let sys = SystemConfig::table1();
+        let res = run_ag_baseline(&sys, 32 * MB, 8, 80);
+        // N-1 steps + final timestamp
+        assert_eq!(res.step_ends.len(), 8);
+    }
+}

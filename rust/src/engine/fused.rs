@@ -1,0 +1,528 @@
+//! The T3 fused GEMM + ring reduce-scatter engine (Section 4, Figure 7-8).
+//!
+//! One device's timeline, with neighbor traffic mirrored (homogeneous
+//! devices, staggered WG scheduling):
+//!
+//! * The GEMM executes stage by stage, its WGs reordered chunk-first by the
+//!   staggered `ChunkPlan`. Stage reads flow through the MC *compute*
+//!   stream; stage writes land according to the `OutputMap`:
+//!   - position 0 (remote-mapped): fine-grained stores straight onto the
+//!     egress link (no local DRAM traffic — §6.2's "fusion eliminates local
+//!     writes from GEMM's first stage");
+//!   - other positions: local near-memory op-and-store updates.
+//! * Incoming DMA updates for position `p` mirror our own egress of
+//!   position `p-1` (+ link latency), entering the MC *comm* stream as NMC
+//!   updates.
+//! * When a position's local updates AND incoming updates have all landed
+//!   (the Tracker condition — threshold = 2 updates/element for ring-RS),
+//!   the pre-programmed DMA fires: chunk reads on the comm stream + an
+//!   egress window; its completion triggers the next position's ingress.
+//! * The final position is the device's fully-reduced chunk; the run ends
+//!   when it is reduced and all egress/ingress traffic has drained.
+//!
+//! Contention between the GEMM's reads and the RS's bursty updates/reads is
+//! resolved by the configured `ArbPolicy` — `RoundRobin` reproduces the
+//! paper's T3 configuration, `T3Mca` adds the §4.5 arbitration policy.
+
+use crate::addrspace::{ChunkMap, DmaTable, OutputMap};
+use crate::config::{ArbPolicy, SystemConfig};
+use crate::gemm::traffic::{gemm_bytes_per_flop, gemm_traffic, stage_reads, WriteMode};
+use crate::gemm::{ChunkPlan, StagePlan};
+use crate::hw::hbm::{TrafficClass, Txn, TxnKind};
+use crate::hw::mc::{intensity_class, Stream};
+use crate::sim::stats::DramCounters;
+use crate::sim::time::SimTime;
+
+use super::{Ev, GroupTag, Runner, PACE_BATCH};
+
+/// Result of a fused GEMM-RS run.
+#[derive(Debug, Clone)]
+pub struct FusedResult {
+    /// End-to-end fused time (GEMM + RS fully overlapped + drain).
+    pub total: SimTime,
+    /// When the GEMM's last stage retired (to quantify GEMM slowdown
+    /// under contention, Figure 17).
+    pub gemm_time: SimTime,
+    /// Tracker-completion time per position.
+    pub tracker_done: Vec<SimTime>,
+    pub counters: DramCounters,
+    /// Peak concurrently-live tracker WF-tiles (hardware budget check).
+    pub tracker_peak_tiles: u64,
+    /// Figure-17 traffic trace (when `FusedOpts::trace_bin` is set).
+    pub trace: Option<crate::hw::hbm::TrafficTrace>,
+}
+
+/// Options for a fused run.
+#[derive(Debug, Clone)]
+pub struct FusedOpts {
+    pub policy: ArbPolicy,
+    /// Record a Figure-17 traffic trace with this bin size.
+    pub trace_bin: Option<SimTime>,
+}
+
+impl Default for FusedOpts {
+    fn default() -> Self {
+        FusedOpts {
+            policy: ArbPolicy::T3Mca,
+            trace_bin: None,
+        }
+    }
+}
+
+/// Per-stage write segments: (position, wg count).
+fn stage_segments(plan: &StagePlan, chunks: &ChunkPlan) -> Vec<Vec<(u32, u64)>> {
+    let n = chunks.devices as usize;
+    // WG count processed per position, in processing order.
+    let pos_wgs: Vec<u64> = (0..n)
+        .map(|p| chunks.chunk_wgs[chunks.chunk_order[p] as usize])
+        .collect();
+    let mut segments = vec![Vec::new(); plan.num_stages as usize];
+    let mut pos = 0usize;
+    let mut left_in_pos = pos_wgs[0];
+    for (s, seg) in segments.iter_mut().enumerate() {
+        let mut left_in_stage = plan.wgs_in_stage(s as u64);
+        while left_in_stage > 0 {
+            let take = left_in_stage.min(left_in_pos);
+            seg.push((pos as u32, take));
+            left_in_stage -= take;
+            left_in_pos -= take;
+            if left_in_pos == 0 && pos + 1 < n {
+                pos += 1;
+                left_in_pos = pos_wgs[pos];
+            }
+        }
+    }
+    segments
+}
+
+/// Run the fused GEMM + ring-RS on device 0 of `devices`.
+pub fn run_fused_gemm_rs(
+    sys: &SystemConfig,
+    plan: &StagePlan,
+    devices: u64,
+    opts: &FusedOpts,
+) -> FusedResult {
+    let chunks = ChunkPlan::new(plan, devices, 0);
+    let map = OutputMap::ring_reduce_scatter(&chunks, 0);
+    let mut dma = DmaTable::program(&map, &chunks);
+    let n = devices as usize;
+    let segments = stage_segments(plan, &chunks);
+    let traffic = gemm_traffic(plan, &sys.mem, WriteMode::BypassLlc);
+
+    let mut r = Runner::new(sys, opts.policy);
+    if let Some(bin) = opts.trace_bin {
+        r.mem.trace = Some(crate::hw::hbm::TrafficTrace::new(bin));
+    }
+    // MCA threshold class from the producer's memory intensity (§6.1.3).
+    let machine_balance = sys.mem.total_bw_gbps * 1e9 / sys.gpu.sustained_gemm_flops(plan.shape.dtype);
+    let class = intensity_class(
+        gemm_bytes_per_flop(plan, &sys.mem, WriteMode::BypassLlc),
+        machine_balance,
+    );
+    r.mem.set_intensity_class(class);
+
+    // ---- per-position bookkeeping ----
+    let mut seg_to_come = vec![0u32; n]; // write segments not yet submitted
+    for segs in &segments {
+        for &(p, _) in segs {
+            seg_to_come[p as usize] += 1;
+        }
+    }
+    let mut groups_pending = vec![0u32; n]; // submitted, not yet landed
+    let mut send_conditions = vec![0u8; n]; // egress windows + DMA reads
+    for p in 0..n {
+        send_conditions[p] = match map.by_position[p] {
+            ChunkMap::Remote { .. } => seg_to_come[p] as u8, // one window per segment
+            ChunkMap::Dma { .. } => 2,                       // DMA reads + egress window
+            ChunkMap::Local => 0,
+        };
+    }
+    let mut local_done = vec![false; n];
+    let mut ingress_done = vec![false; n];
+    let mut ingress_scheduled = vec![false; n];
+    let mut ingress_groups = vec![crate::hw::hbm::GroupId::NONE; n];
+    let mut tracker_done = vec![SimTime::MAX; n];
+    let mut sent_done = vec![SimTime::MAX; n];
+
+    let chunk_bytes_at = |p: usize| chunks.chunk_bytes[chunks.chunk_order[p] as usize];
+
+    // ---- GEMM stage machine ----
+    // Read phase drains, then the compute phase retires (see gemm_run.rs:
+    // this coupling is how RS burstiness slows the producer, Fig 17b).
+    let mut stage = 0u64;
+    let mut stage_compute_done = false;
+    let gpu = sys.gpu.clone();
+    let eff = gpu.gemm_efficiency;
+    let start_stage = |r: &mut Runner, s: u64| {
+        let bytes = stage_reads(plan, traffic.dram_reads, s).max(r.sys.mem.txn_bytes);
+        r.submit_tagged(
+            bytes,
+            TxnKind::Read,
+            Stream::Compute,
+            TrafficClass::GemmRead,
+            GroupTag::StageReads(s),
+        );
+    };
+    start_stage(&mut r, 0);
+
+    let mut gemm_time = SimTime::ZERO;
+    let mut tags = Vec::new();
+    // Deferred actions to avoid re-entrancy: positions whose tracker
+    // condition completed this event.
+    let mut newly_tracker_done: Vec<usize> = Vec::new();
+    // Ingress transactions still to mirror per receiving position.
+    let mut ingress_left: Vec<u64> = (0..n)
+        .map(|p| {
+            if map.receives_at[p] {
+                chunk_bytes_at(p).div_ceil(sys.mem.txn_bytes)
+            } else {
+                0
+            }
+        })
+        .collect();
+    let mut pos0_wgs_left = chunks.chunk_wgs[chunks.chunk_order[0] as usize];
+
+    while let Some((t, ev)) = r.next_event() {
+        r.drain_tags(&mut tags);
+        for (tag, blocked) in tags.drain(..) {
+            match tag {
+                GroupTag::StageReads(s) if s == stage => {
+                    let ct = plan.stage_compute_time(s, &gpu, gpu.cu_count, eff);
+                    let stall = blocked * gpu.stall_unhidden;
+                    r.q.schedule_in(ct + stall, Ev::StageCompute(s));
+                }
+                GroupTag::ChunkLocal(p) => {
+                    let p = p as usize;
+                    groups_pending[p] -= 1;
+                    if groups_pending[p] == 0 && seg_to_come[p] == 0 && !local_done[p] {
+                        local_done[p] = true;
+                        if check_tracker(p, &map, &local_done, &ingress_done) {
+                            tracker_done[p] = t;
+                            newly_tracker_done.push(p);
+                        }
+                    }
+                }
+                GroupTag::ChunkIngress(p) => {
+                    let p = p as usize;
+                    ingress_done[p] = true;
+                    if check_tracker(p, &map, &local_done, &ingress_done) && tracker_done[p] == SimTime::MAX {
+                        tracker_done[p] = t;
+                        newly_tracker_done.push(p);
+                    }
+                }
+                GroupTag::DmaReads(p) => {
+                    let p = p as usize;
+                    send_conditions[p] -= 1;
+                    if send_conditions[p] == 0 {
+                        sent_done[p] = t;
+                    }
+                }
+                _ => {}
+            }
+        }
+        match ev {
+            Ev::StageCompute(s) if s == stage => stage_compute_done = true,
+            Ev::EgressDone { pos } => {
+                let p = pos as usize;
+                send_conditions[p] -= 1;
+                if send_conditions[p] == 0 {
+                    sent_done[p] = t;
+                    if matches!(map.by_position[p], ChunkMap::Remote { .. }) {
+                        // Remote-mapped chunk: "local" completion is the
+                        // egress of its fine-grained stores (nothing lands
+                        // in local DRAM).
+                        local_done[p] = true;
+                        tracker_done[p] = t;
+                    }
+                }
+            }
+            Ev::Ingress { pos, n: cnt } => {
+                let p = pos as usize;
+                debug_assert!(ingress_scheduled[p]);
+                let txn = Txn {
+                    kind: TxnKind::NmcUpdate,
+                    stream: Stream::Comm,
+                    class: TrafficClass::RsWrite,
+                    group: ingress_groups[p],
+                };
+                r.mem.submit_burst(cnt as u64, txn, &mut r.q);
+            }
+            _ => {}
+        }
+
+        // Stage retirement.
+        if stage_compute_done {
+            for &(p, wgs) in &segments[stage as usize] {
+                let p = p as usize;
+                let bytes = wgs * plan.wg_out_bytes();
+                match map.by_position[p] {
+                    ChunkMap::Remote { .. } => {
+                        // Fine-grained remote stores: straight to the link.
+                        let w = r.link_out.reserve(t, bytes);
+                        r.q.schedule(w.done, Ev::EgressDone { pos: p as u32 });
+                        seg_to_come[p] -= 1;
+                        // Mirror: the upstream neighbor remote-stores its
+                        // first chunk (= our position p+1's chunk, by the
+                        // stagger) on the same schedule. Pace a
+                        // proportional share of that ingress across this
+                        // segment's window (+ link latency).
+                        let nxt = p + 1;
+                        if nxt < n && map.receives_at[nxt] && ingress_left[nxt] > 0 {
+                            if ingress_groups[nxt] == crate::hw::hbm::GroupId::NONE {
+                                ingress_groups[nxt] = r.register_group(
+                                    ingress_left[nxt],
+                                    GroupTag::ChunkIngress(nxt as u32),
+                                );
+                                ingress_scheduled[nxt] = true;
+                            }
+                            pos0_wgs_left -= wgs;
+                            let part = if pos0_wgs_left == 0 {
+                                ingress_left[nxt]
+                            } else {
+                                (ingress_left[nxt] * wgs
+                                    / (pos0_wgs_left + wgs))
+                                    .min(ingress_left[nxt])
+                            };
+                            if part > 0 {
+                                ingress_left[nxt] -= part;
+                                let lat = r.sys.link.latency;
+                                r.schedule_ingress_window(
+                                    nxt as u32,
+                                    part,
+                                    w.start + lat,
+                                    w.done + lat,
+                                    PACE_BATCH,
+                                );
+                            }
+                        }
+                    }
+                    _ => {
+                        // Local NMC updates through the compute stream.
+                        r.submit_tagged(
+                            bytes,
+                            TxnKind::NmcUpdate,
+                            Stream::Compute,
+                            TrafficClass::GemmWrite,
+                            GroupTag::ChunkLocal(p as u32),
+                        );
+                        groups_pending[p] += 1;
+                        seg_to_come[p] -= 1;
+                    }
+                }
+            }
+            stage += 1;
+            stage_compute_done = false;
+            if stage < plan.num_stages {
+                start_stage(&mut r, stage);
+            } else {
+                gemm_time = t;
+            }
+        }
+
+        // Tracker fired ⇒ mark DMA ready and launch it (positions 1..N-2).
+        // The upstream neighbor triggers its corresponding DMA at the same
+        // (mirrored) moment, so the next position's ingress is paced over
+        // the same window shifted by the link latency — receive of chunk
+        // p+1 overlaps our send of chunk p, as in Figure 7's steady state.
+        for p in newly_tracker_done.drain(..) {
+            if let ChunkMap::Dma { .. } = map.by_position[p] {
+                dma.mark_ready(p).expect("dma entry");
+                let bytes = chunk_bytes_at(p);
+                // DMA reads the (partially reduced) chunk via the comm
+                // stream; egress window in parallel (pipelined).
+                r.submit_tagged(
+                    bytes,
+                    TxnKind::Read,
+                    Stream::Comm,
+                    TrafficClass::RsRead,
+                    GroupTag::DmaReads(p as u32),
+                );
+                let w = r.link_out.reserve(t, bytes);
+                r.q.schedule(w.done, Ev::EgressDone { pos: p as u32 });
+                let nxt = p + 1;
+                if nxt < n && map.receives_at[nxt] && ingress_left[nxt] > 0 {
+                    debug_assert!(!ingress_scheduled[nxt]);
+                    ingress_scheduled[nxt] = true;
+                    let txns = ingress_left[nxt];
+                    ingress_left[nxt] = 0;
+                    ingress_groups[nxt] =
+                        r.register_group(txns, GroupTag::ChunkIngress(nxt as u32));
+                    let lat = r.sys.link.latency;
+                    r.schedule_ingress_window(
+                        nxt as u32,
+                        txns,
+                        w.start + lat,
+                        w.done + lat,
+                        PACE_BATCH,
+                    );
+                }
+            }
+        }
+    }
+
+    debug_assert!(r.mem.idle());
+    debug_assert!(dma.all_fired(), "not all DMA entries fired");
+    debug_assert!(local_done.iter().all(|&d| d));
+    let total = r.now();
+    // Peak tracker footprint: WF tiles of the stages in flight — bounded by
+    // one stage's WFs plus the incoming chunk's tiles.
+    let tracker_peak_tiles = plan.stage_wgs * plan.tiling.wfs_per_wg()
+        + chunks.chunk_wf_tiles.iter().max().copied().unwrap_or(0);
+
+    FusedResult {
+        total,
+        gemm_time,
+        tracker_done,
+        counters: r.mem.counters,
+        tracker_peak_tiles,
+        trace: r.mem.trace.take(),
+    }
+}
+
+fn check_tracker(p: usize, map: &OutputMap, local: &[bool], ingress: &[bool]) -> bool {
+    local[p] && (!map.receives_at[p] || ingress[p])
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{DType, SystemConfig};
+    use crate::engine::collective_run::{run_ag_baseline, run_rs_baseline};
+    use crate::engine::gemm_run::run_gemm;
+    use crate::gemm::{GemmShape, Tiling};
+
+    fn plan(m: u64, n: u64, k: u64) -> StagePlan {
+        StagePlan::new(
+            GemmShape::new(m, n, k, DType::F16),
+            Tiling::default(),
+            &SystemConfig::table1().gpu,
+        )
+    }
+
+    fn opts(policy: ArbPolicy) -> FusedOpts {
+        FusedOpts {
+            policy,
+            trace_bin: None,
+        }
+    }
+
+    #[test]
+    fn stage_segments_cover_all_wgs() {
+        let sys = SystemConfig::table1();
+        let p = plan(8192, 4256, 2128);
+        let c = ChunkPlan::new(&p, 8, 0);
+        let segs = stage_segments(&p, &c);
+        assert_eq!(segs.len(), p.num_stages as usize);
+        let total: u64 = segs.iter().flatten().map(|&(_, w)| w).sum();
+        assert_eq!(total, p.total_wgs);
+        // Per position, totals match the chunk sizes.
+        let mut per_pos = vec![0u64; 8];
+        for &(pos, w) in segs.iter().flatten() {
+            per_pos[pos as usize] += w;
+        }
+        for pos in 0..8usize {
+            assert_eq!(per_pos[pos], c.chunk_wgs[c.chunk_order[pos] as usize]);
+        }
+        let _ = sys;
+    }
+
+    #[test]
+    fn fused_faster_than_sequential() {
+        let sys = SystemConfig::table1();
+        let p = plan(8192, 4256, 2128); // T-NLG FC-2 TP=8
+        let devices = 8;
+        let g = run_gemm(&sys, &p, 80, crate::gemm::traffic::WriteMode::ThroughLlc);
+        let rs = run_rs_baseline(&sys, p.shape.out_bytes(), devices, 80);
+        let sequential = g.time + rs.time;
+        let fused = run_fused_gemm_rs(&sys, &p, devices, &opts(ArbPolicy::T3Mca));
+        assert!(
+            fused.total < sequential,
+            "fused {} !< sequential {}",
+            fused.total,
+            sequential
+        );
+        // ...but not faster than the ideal overlap (max of isolated parts).
+        let ideal = g.time.max(rs.time);
+        assert!(
+            fused.total.as_ps() as f64 >= ideal.as_ps() as f64 * 0.95,
+            "fused {} below ideal {}",
+            fused.total,
+            ideal
+        );
+    }
+
+    #[test]
+    fn mca_beats_roundrobin() {
+        let sys = SystemConfig::table1();
+        let p = plan(8192, 4256, 2128);
+        let rr = run_fused_gemm_rs(&sys, &p, 8, &opts(ArbPolicy::RoundRobin));
+        let mca = run_fused_gemm_rs(&sys, &p, 8, &opts(ArbPolicy::T3Mca));
+        assert!(
+            mca.total <= rr.total,
+            "MCA {} vs RR {}",
+            mca.total,
+            rr.total
+        );
+    }
+
+    #[test]
+    fn tracker_condition_ordering() {
+        let sys = SystemConfig::table1();
+        let p = plan(4096, 4096, 1024);
+        let res = run_fused_gemm_rs(&sys, &p, 4, &opts(ArbPolicy::T3Mca));
+        // All positions completed, in increasing time order (ring chain).
+        for pos in 1..4 {
+            assert!(res.tracker_done[pos] < SimTime::MAX);
+            if pos >= 2 {
+                assert!(
+                    res.tracker_done[pos] > res.tracker_done[pos - 1],
+                    "tracker order violated at {pos}"
+                );
+            }
+        }
+        assert!(res.total >= res.tracker_done[3]);
+        assert!(res.gemm_time > SimTime::ZERO);
+    }
+
+    #[test]
+    fn fused_traffic_less_than_sequential() {
+        // §6.2: fusion + NMC reduce DRAM traffic.
+        let sys = SystemConfig::table1();
+        let p = plan(8192, 4256, 2128);
+        let g = run_gemm(&sys, &p, 80, crate::gemm::traffic::WriteMode::ThroughLlc);
+        let rs = run_rs_baseline(&sys, p.shape.out_bytes(), 8, 80);
+        let seq_total = g.counters.total() + rs.counters.total();
+        let fused = run_fused_gemm_rs(&sys, &p, 8, &opts(ArbPolicy::T3Mca));
+        let fused_ag_free = fused.counters.total();
+        assert!(
+            (fused_ag_free as f64) < seq_total as f64 * 0.9,
+            "fused {} vs sequential {}",
+            fused_ag_free,
+            seq_total
+        );
+        let _ = run_ag_baseline(&sys, p.shape.out_bytes(), 8, 80);
+    }
+
+    #[test]
+    fn rs_reads_reduced_vs_baseline() {
+        // §6.2: RS reads shrink ~2.4x (first step read eliminated by
+        // fusion, partial-copy reads eliminated by NMC).
+        let sys = SystemConfig::table1();
+        let p = plan(8192, 4256, 2128);
+        let rs = run_rs_baseline(&sys, p.shape.out_bytes(), 8, 80);
+        let fused = run_fused_gemm_rs(&sys, &p, 8, &opts(ArbPolicy::T3Mca));
+        let ratio = rs.counters.rs_reads as f64 / fused.counters.rs_reads as f64;
+        assert!((1.8..3.0).contains(&ratio), "RS read reduction {ratio}");
+    }
+
+    #[test]
+    fn works_for_various_device_counts() {
+        let sys = SystemConfig::table1();
+        let p = plan(4096, 2048, 512);
+        for devices in [2u64, 3, 4, 8, 16] {
+            let res = run_fused_gemm_rs(&sys, &p, devices, &opts(ArbPolicy::T3Mca));
+            assert!(res.total > SimTime::ZERO, "devices={devices}");
+            assert_eq!(res.tracker_done.len(), devices as usize);
+        }
+    }
+}

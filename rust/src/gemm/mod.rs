@@ -1,0 +1,382 @@
+//! GEMM shape, tiling, and stage model (Section 2.5, Figure 5).
+//!
+//! Transformer sub-layer GEMMs are tiled: each workgroup (WG) produces a
+//! complete `MT x NT` output tile, each wavefront (WF) a complete sub-tile.
+//! A GPU runs `cu_count * wgs_per_cu` WGs concurrently — one *stage* — so a
+//! GEMM executes as a sequence of stages, each producing a contiguous slab
+//! of output. Tensor-parallel slicing divides K only: the output size, WG
+//! count and stage structure are unchanged (Figure 5), which is what makes
+//! the stage-by-stage overlap with the collective possible.
+//!
+//! This module is the single tiling contract shared by the timing simulator
+//! (`t3::engine`), the Tracker model (`t3::tracker`), and the Pallas kernel
+//! (python/compile/kernels/gemm.py) — the grid/stage/chunk arithmetic here
+//! mirrors the kernel's `BlockSpec` index maps.
+
+pub mod traffic;
+
+use crate::config::{DType, GpuConfig};
+use crate::sim::time::SimTime;
+
+/// A (possibly tensor-sliced) GEMM: `C[M,N] += A[M,K] @ B[K,N]`.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct GemmShape {
+    pub m: u64,
+    pub n: u64,
+    pub k: u64,
+    pub dtype: DType,
+}
+
+impl GemmShape {
+    pub fn new(m: u64, n: u64, k: u64, dtype: DType) -> Self {
+        assert!(m > 0 && n > 0 && k > 0);
+        GemmShape { m, n, k, dtype }
+    }
+
+    /// Multiply-accumulate FLOP count (2 per MAC).
+    pub fn flops(&self) -> u64 {
+        2 * self.m * self.n * self.k
+    }
+    pub fn a_bytes(&self) -> u64 {
+        self.m * self.k * self.dtype.bytes()
+    }
+    pub fn b_bytes(&self) -> u64 {
+        self.k * self.n * self.dtype.bytes()
+    }
+    pub fn out_bytes(&self) -> u64 {
+        self.m * self.n * self.dtype.bytes()
+    }
+
+    /// Slice the dot-product (K) dimension `ways` ways (tensor parallelism).
+    pub fn slice_k(&self, ways: u64) -> GemmShape {
+        assert!(ways > 0 && self.k % ways == 0, "K={} not divisible by {}", self.k, ways);
+        GemmShape {
+            k: self.k / ways,
+            ..*self
+        }
+    }
+
+    /// Arithmetic intensity denominator: DRAM bytes per FLOP assuming
+    /// compulsory traffic only.
+    pub fn bytes_per_flop(&self) -> f64 {
+        (self.a_bytes() + self.b_bytes() + self.out_bytes()) as f64 / self.flops() as f64
+    }
+}
+
+/// Tiling parameters. Defaults mirror the BLAS kernels the paper evaluates
+/// (128x128 WG macro-tile, 4 WFs of 64x64 each).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Tiling {
+    pub mt: u64,
+    pub nt: u64,
+    pub wf_mt: u64,
+    pub wf_nt: u64,
+}
+
+impl Default for Tiling {
+    fn default() -> Self {
+        Tiling {
+            mt: 128,
+            nt: 128,
+            wf_mt: 64,
+            wf_nt: 64,
+        }
+    }
+}
+
+impl Tiling {
+    pub fn wfs_per_wg(&self) -> u64 {
+        (self.mt / self.wf_mt) * (self.nt / self.wf_nt)
+    }
+    pub fn wf_tile_elems(&self) -> u64 {
+        self.wf_mt * self.wf_nt
+    }
+}
+
+/// The stage decomposition of one GEMM on one GPU.
+#[derive(Debug, Clone)]
+pub struct StagePlan {
+    pub shape: GemmShape,
+    pub tiling: Tiling,
+    /// Output tile grid.
+    pub tiles_m: u64,
+    pub tiles_n: u64,
+    /// WGs resident per stage (= cu_count * wgs_per_cu).
+    pub stage_wgs: u64,
+    /// Total WG count (= tiles_m * tiles_n).
+    pub total_wgs: u64,
+    /// Number of stages.
+    pub num_stages: u64,
+}
+
+impl StagePlan {
+    pub fn new(shape: GemmShape, tiling: Tiling, gpu: &GpuConfig) -> Self {
+        let tiles_m = shape.m.div_ceil(tiling.mt);
+        let tiles_n = shape.n.div_ceil(tiling.nt);
+        let total_wgs = tiles_m * tiles_n;
+        let stage_wgs = (gpu.cu_count as u64 * gpu.wgs_per_cu as u64).min(total_wgs);
+        let num_stages = total_wgs.div_ceil(stage_wgs);
+        StagePlan {
+            shape,
+            tiling,
+            tiles_m,
+            tiles_n,
+            stage_wgs,
+            total_wgs,
+            num_stages,
+        }
+    }
+
+    /// Number of WGs in stage `s` (last stage may be partial).
+    pub fn wgs_in_stage(&self, s: u64) -> u64 {
+        debug_assert!(s < self.num_stages);
+        if s + 1 == self.num_stages {
+            self.total_wgs - s * self.stage_wgs
+        } else {
+            self.stage_wgs
+        }
+    }
+
+    /// FLOPs executed by one WG (full K reduction over its tile).
+    pub fn wg_flops(&self) -> u64 {
+        2 * self.tiling.mt * self.tiling.nt * self.shape.k
+    }
+
+    /// Output bytes produced by one WG.
+    pub fn wg_out_bytes(&self) -> u64 {
+        self.tiling.mt * self.tiling.nt * self.shape.dtype.bytes()
+    }
+
+    /// Compute time of stage `s` on `cus` compute units. WGs drain
+    /// asynchronously (following-stage WGs backfill CUs as earlier ones
+    /// retire), so throughput scales smoothly with CU count rather than in
+    /// hard wave quanta.
+    pub fn stage_compute_time(&self, s: u64, gpu: &GpuConfig, cus: u32, eff: f64) -> SimTime {
+        let flops = self.wgs_in_stage(s) * self.wg_flops();
+        let rate = cus as f64
+            * gpu.matrix_flops_per_cu_cycle_f16 as f64
+            * match self.shape.dtype {
+                DType::F16 => 1.0,
+                DType::F32 => 0.5,
+            }
+            * gpu.freq_ghz
+            * 1e9
+            * eff;
+        SimTime::from_secs_f64(flops as f64 / rate)
+    }
+
+    /// Total isolated GEMM compute time (all stages, all CUs).
+    pub fn total_compute_time(&self, gpu: &GpuConfig, cus: u32) -> SimTime {
+        (0..self.num_stages)
+            .map(|s| self.stage_compute_time(s, gpu, cus, gpu.gemm_efficiency))
+            .sum()
+    }
+}
+
+/// Mapping of GEMM output to ring-collective chunks, with the staggered
+/// stage→chunk order of Section 4.4.
+///
+/// The output's `tiles_m` tile-rows are split into `devices` chunks of
+/// contiguous rows. Device `d` processes chunks in ring order starting from
+/// chunk `(d+1) % devices`, so that at ring step `t` every device has just
+/// produced the chunk its downstream neighbor needs (Figure 7's staggered
+/// WG scheduling).
+#[derive(Debug, Clone)]
+pub struct ChunkPlan {
+    pub devices: u64,
+    /// chunk_order[i] = which chunk this device computes i-th.
+    pub chunk_order: Vec<u64>,
+    /// Output bytes per chunk (last chunk may differ).
+    pub chunk_bytes: Vec<u64>,
+    /// WGs per chunk.
+    pub chunk_wgs: Vec<u64>,
+    /// WF tiles (tracker entries worth of work) per chunk.
+    pub chunk_wf_tiles: Vec<u64>,
+}
+
+impl ChunkPlan {
+    pub fn new(plan: &StagePlan, devices: u64, device_id: u64) -> Self {
+        assert!(devices >= 2, "need at least 2 devices for a collective");
+        assert!(device_id < devices);
+        assert!(
+            plan.total_wgs >= devices,
+            "fewer output tiles ({}) than devices ({})",
+            plan.total_wgs,
+            devices
+        );
+        // Split the row-major WG sequence as evenly as possible — WG (not
+        // tile-row) granularity so high TP degrees on short outputs still
+        // get non-empty chunks; chunks remain contiguous memory regions.
+        let base = plan.total_wgs / devices;
+        let extra = plan.total_wgs % devices;
+        let mut chunk_bytes = Vec::with_capacity(devices as usize);
+        let mut chunk_wgs = Vec::with_capacity(devices as usize);
+        let mut chunk_wf_tiles = Vec::with_capacity(devices as usize);
+        for c in 0..devices {
+            let wgs = base + if c < extra { 1 } else { 0 };
+            chunk_wgs.push(wgs);
+            chunk_wf_tiles.push(wgs * plan.tiling.wfs_per_wg());
+            chunk_bytes.push(wgs * plan.wg_out_bytes());
+        }
+        // Staggered processing order: device d computes chunk (d+1+i) mod N
+        // at its i-th position; the first processed chunk is remote-mapped.
+        let chunk_order = (0..devices)
+            .map(|i| (device_id + 1 + i) % devices)
+            .collect();
+        ChunkPlan {
+            devices,
+            chunk_order,
+            chunk_bytes,
+            chunk_wgs,
+            chunk_wf_tiles,
+        }
+    }
+
+    pub fn total_bytes(&self) -> u64 {
+        self.chunk_bytes.iter().sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::SystemConfig;
+
+    fn gpu() -> GpuConfig {
+        SystemConfig::table1().gpu
+    }
+
+    #[test]
+    fn shape_arithmetic() {
+        let g = GemmShape::new(8192, 4256, 2128, DType::F16);
+        assert_eq!(g.flops(), 2 * 8192 * 4256 * 2128);
+        assert_eq!(g.a_bytes(), 8192 * 2128 * 2);
+        assert_eq!(g.out_bytes(), 8192 * 4256 * 2);
+    }
+
+    #[test]
+    fn k_slicing_preserves_output() {
+        let g = GemmShape::new(8192, 4256, 17024, DType::F16);
+        let s = g.slice_k(8);
+        assert_eq!(s.k, 2128);
+        assert_eq!(s.out_bytes(), g.out_bytes());
+        assert_eq!(s.flops() * 8, g.flops());
+    }
+
+    #[test]
+    #[should_panic]
+    fn k_slicing_requires_divisibility() {
+        GemmShape::new(128, 128, 100, DType::F16).slice_k(3);
+    }
+
+    #[test]
+    fn stage_plan_counts() {
+        // T-NLG FC-2 (TP=8): 8192 x 4256, tiles 64 x 34 = 2176 WGs.
+        let g = GemmShape::new(8192, 4256, 2128, DType::F16);
+        let p = StagePlan::new(g, Tiling::default(), &gpu());
+        assert_eq!(p.tiles_m, 64);
+        assert_eq!(p.tiles_n, 34);
+        assert_eq!(p.total_wgs, 2176);
+        assert_eq!(p.stage_wgs, 240); // 80 CUs * 3 WGs
+        assert_eq!(p.num_stages, 10);
+        // Stage WG counts sum to total.
+        let sum: u64 = (0..p.num_stages).map(|s| p.wgs_in_stage(s)).sum();
+        assert_eq!(sum, p.total_wgs);
+        assert_eq!(p.wgs_in_stage(p.num_stages - 1), 2176 - 9 * 240);
+    }
+
+    #[test]
+    fn small_gemm_single_stage() {
+        let g = GemmShape::new(256, 256, 1024, DType::F16);
+        let p = StagePlan::new(g, Tiling::default(), &gpu());
+        assert_eq!(p.total_wgs, 4);
+        assert_eq!(p.num_stages, 1);
+        assert_eq!(p.stage_wgs, 4); // capped at total
+    }
+
+    #[test]
+    fn slicing_k_keeps_stage_structure() {
+        // Figure 5: K-slicing reduces per-WG work but not WG count/stages.
+        let g = GemmShape::new(8192, 4256, 17024, DType::F16);
+        let full = StagePlan::new(g, Tiling::default(), &gpu());
+        let sliced = StagePlan::new(g.slice_k(8), Tiling::default(), &gpu());
+        assert_eq!(full.total_wgs, sliced.total_wgs);
+        assert_eq!(full.num_stages, sliced.num_stages);
+        assert_eq!(sliced.wg_flops() * 8, full.wg_flops());
+    }
+
+    #[test]
+    fn compute_time_scales_with_cus() {
+        let g = GemmShape::new(8192, 4096, 2048, DType::F16);
+        let p = StagePlan::new(g, Tiling::default(), &gpu());
+        let t80 = p.total_compute_time(&gpu(), 80);
+        let t40 = p.total_compute_time(&gpu(), 40);
+        let ratio = t40.as_ps() as f64 / t80.as_ps() as f64;
+        assert!((1.8..2.2).contains(&ratio), "ratio {ratio}");
+    }
+
+    #[test]
+    fn gemm_time_magnitude_sane() {
+        // T-NLG FC-2 TP=8 fwd: ~148 GFLOP at ~75 TFLOP/s sustained ≈ 2 ms.
+        let g = GemmShape::new(8192, 4256, 2128, DType::F16);
+        let p = StagePlan::new(g, Tiling::default(), &gpu());
+        let t = p.total_compute_time(&gpu(), 80).as_ms_f64();
+        assert!((1.0..4.0).contains(&t), "GEMM time {t} ms");
+    }
+
+    #[test]
+    fn chunk_plan_partitions_everything() {
+        let g = GemmShape::new(8192, 4256, 2128, DType::F16);
+        let p = StagePlan::new(g, Tiling::default(), &gpu());
+        for dev in 0..4 {
+            let c = ChunkPlan::new(&p, 4, dev);
+            assert_eq!(c.chunk_wgs.iter().sum::<u64>(), p.total_wgs);
+            assert_eq!(c.total_bytes(), p.total_wgs * p.wg_out_bytes());
+            // chunk_order is a permutation of 0..N
+            let mut order = c.chunk_order.clone();
+            order.sort_unstable();
+            assert_eq!(order, vec![0, 1, 2, 3]);
+            // stagger: first processed chunk differs per device
+            assert_eq!(c.chunk_order[0], (dev + 1) % 4);
+        }
+    }
+
+    #[test]
+    fn stagger_alignment_across_devices() {
+        // At position i, device d computes chunk (d+1+i)%N: so device d's
+        // i-th chunk equals device (d+1)'s (i-1)-th chunk — exactly the
+        // "neighbor finished it one step ago" ring alignment.
+        let g = GemmShape::new(4096, 4096, 1024, DType::F16);
+        let p = StagePlan::new(g, Tiling::default(), &gpu());
+        let n = 8u64;
+        let plans: Vec<_> = (0..n).map(|d| ChunkPlan::new(&p, n, d)).collect();
+        for d in 0..n as usize {
+            let up = (d + 1) % n as usize;
+            for i in 1..n as usize {
+                assert_eq!(plans[d].chunk_order[i], plans[up].chunk_order[i - 1]);
+            }
+        }
+    }
+
+    #[test]
+    fn uneven_chunks_cover_all_wgs() {
+        let g = GemmShape::new(1000, 512, 256, DType::F16); // 8x4 = 32 WGs
+        let p = StagePlan::new(g, Tiling::default(), &gpu());
+        let c = ChunkPlan::new(&p, 3, 0);
+        assert_eq!(c.chunk_wgs.iter().sum::<u64>(), p.total_wgs);
+        // 32 WGs over 3 devices: 11, 11, 10
+        assert_eq!(c.chunk_wgs[0], 11);
+        assert_eq!(c.chunk_wgs[2], 10);
+    }
+
+    #[test]
+    fn more_devices_than_tile_rows_still_works() {
+        // GPT-3 at TP=32: 16 tile rows but 1536 WGs — WG-granularity
+        // chunking keeps every chunk non-empty.
+        let g = GemmShape::new(2048, 12288, 1536, DType::F16);
+        let p = StagePlan::new(g, Tiling::default(), &gpu());
+        let c = ChunkPlan::new(&p, 32, 0);
+        assert!(c.chunk_wgs.iter().all(|&w| w > 0));
+        assert_eq!(c.chunk_wgs.iter().sum::<u64>(), p.total_wgs);
+    }
+}

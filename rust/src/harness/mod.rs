@@ -1,0 +1,718 @@
+//! Figure/table regeneration harness.
+//!
+//! One function per table/figure of the paper's evaluation; each returns a
+//! [`Table`] (rendered as ASCII by the benches/CLI and written as CSV under
+//! `results/`). The benches in `rust/benches/` are thin wrappers over these
+//! so `cargo bench` regenerates the full evaluation.
+
+use std::fmt::Write as _;
+use std::path::Path;
+
+use crate::config::SystemConfig;
+use crate::engine::collective_run::{run_ag_baseline, run_rs_baseline};
+use crate::engine::fused::{run_fused_gemm_rs, FusedOpts};
+use crate::engine::gemm_run::run_gemm;
+use crate::exec::{cached_sublayer, end_to_end, sublayer_speedup, Scenario};
+use crate::gemm::traffic::WriteMode;
+use crate::gemm::{StagePlan, Tiling};
+use crate::models::breakdown::{other_time, Phase};
+use crate::models::{by_name, sublayer_gemm, zoo, ModelCfg, SubLayer};
+use crate::sim::stats::geomean;
+use crate::sim::time::SimTime;
+
+/// A rendered result table.
+#[derive(Debug, Clone)]
+pub struct Table {
+    pub id: String,
+    pub title: String,
+    pub headers: Vec<String>,
+    pub rows: Vec<Vec<String>>,
+    /// Key findings appended below the table.
+    pub notes: Vec<String>,
+}
+
+impl Table {
+    pub fn new(id: &str, title: &str, headers: &[&str]) -> Self {
+        Table {
+            id: id.to_string(),
+            title: title.to_string(),
+            headers: headers.iter().map(|s| s.to_string()).collect(),
+            rows: Vec::new(),
+            notes: Vec::new(),
+        }
+    }
+
+    pub fn row(&mut self, cells: Vec<String>) {
+        debug_assert_eq!(cells.len(), self.headers.len());
+        self.rows.push(cells);
+    }
+
+    pub fn note(&mut self, s: impl Into<String>) {
+        self.notes.push(s.into());
+    }
+
+    /// ASCII render.
+    pub fn render(&self) -> String {
+        let mut widths: Vec<usize> = self.headers.iter().map(|h| h.len()).collect();
+        for row in &self.rows {
+            for (i, c) in row.iter().enumerate() {
+                widths[i] = widths[i].max(c.len());
+            }
+        }
+        let mut out = String::new();
+        let _ = writeln!(out, "== {} — {} ==", self.id, self.title);
+        let line = |out: &mut String, cells: &[String]| {
+            let mut s = String::from("|");
+            for (i, c) in cells.iter().enumerate() {
+                let _ = write!(s, " {:w$} |", c, w = widths[i]);
+            }
+            let _ = writeln!(out, "{s}");
+        };
+        line(&mut out, &self.headers);
+        let _ = writeln!(
+            out,
+            "|{}|",
+            widths
+                .iter()
+                .map(|w| "-".repeat(w + 2))
+                .collect::<Vec<_>>()
+                .join("|")
+        );
+        for row in &self.rows {
+            line(&mut out, row);
+        }
+        for n in &self.notes {
+            let _ = writeln!(out, "  * {n}");
+        }
+        out
+    }
+
+    /// Write as CSV into `dir/<id>.csv`.
+    pub fn write_csv(&self, dir: impl AsRef<Path>) -> std::io::Result<std::path::PathBuf> {
+        std::fs::create_dir_all(dir.as_ref())?;
+        let path = dir.as_ref().join(format!("{}.csv", self.id));
+        let mut s = self.headers.join(",") + "\n";
+        for row in &self.rows {
+            s.push_str(&row.join(","));
+            s.push('\n');
+        }
+        std::fs::write(&path, s)?;
+        Ok(path)
+    }
+}
+
+fn ms(t: SimTime) -> String {
+    format!("{:.3}", t.as_ms_f64())
+}
+
+fn pct(x: f64) -> String {
+    format!("{:.1}%", x * 100.0)
+}
+
+// ---------------------------------------------------------------------
+// Figure 4 — time spent on sliced-GEMM + RS/AG vs other operations.
+// Analytic (roofline + alpha-beta) across the full zoo incl. futuristic.
+// ---------------------------------------------------------------------
+
+pub fn fig4(sys: &SystemConfig) -> Table {
+    use crate::collectives::analytic::{ring_all_gather, ring_reduce_scatter};
+    use crate::config::DType;
+
+    let mut t = Table::new(
+        "fig4",
+        "Transformer time on RS/AG + sliced GEMMs (Sequential baseline)",
+        &["model", "tp", "phase", "sliced GEMM", "RS+AG", "other", "comm %", "sliced+comm %"],
+    );
+    for m in zoo() {
+        for &tp in m.tp_degrees {
+            for phase in [Phase::Training, Phase::Prompt] {
+                let sites: Vec<SubLayer> = SubLayer::ALL
+                    .into_iter()
+                    .filter(|s| phase == Phase::Training || s.in_forward())
+                    .collect();
+                let mut gemm = SimTime::ZERO;
+                let mut comm = SimTime::ZERO;
+                for sub in &sites {
+                    let shape = sublayer_gemm(&m, tp, *sub);
+                    let flops = shape.flops() as f64;
+                    gemm += SimTime::from_secs_f64(
+                        flops / sys.gpu.sustained_gemm_flops(DType::F16),
+                    ) * m.layers;
+                    let ar = shape.out_bytes();
+                    comm += (ring_reduce_scatter(&sys.link, ar, tp)
+                        + ring_all_gather(&sys.link, ar, tp))
+                        * m.layers;
+                }
+                let other = other_time(sys, &m, tp, phase);
+                let total = (gemm + comm + other).as_secs_f64();
+                let phase_name = match phase {
+                    Phase::Training => "train",
+                    Phase::Prompt => "prompt",
+                };
+                t.row(vec![
+                    m.name.to_string(),
+                    tp.to_string(),
+                    phase_name.to_string(),
+                    ms(gemm),
+                    ms(comm),
+                    ms(other),
+                    pct(comm.as_secs_f64() / total),
+                    pct((gemm + comm).as_secs_f64() / total),
+                ]);
+            }
+        }
+    }
+    t.note("paper: comm up to 34% (Mega-GPT-2) / 43% (T-NLG), 46% very large, 44% futuristic");
+    t
+}
+
+// ---------------------------------------------------------------------
+// Figure 6 — CU-split contention study.
+// ---------------------------------------------------------------------
+
+pub fn fig6(sys: &SystemConfig) -> Table {
+    let mut t = Table::new(
+        "fig6",
+        "Overlap potential vs CU sharing (GEMM+RS isolated runs, TP=8)",
+        &["model", "layer", "split", "GEMM ms", "RS ms", "potential speedup"],
+    );
+    let cases = [("Mega-GPT-2", SubLayer::OpFwd, "Attn"), ("Mega-GPT-2", SubLayer::Fc2Fwd, "FC-2"),
+                 ("T-NLG", SubLayer::OpFwd, "Attn"), ("T-NLG", SubLayer::Fc2Fwd, "FC-2")];
+    let mut speedups: Vec<(String, f64)> = Vec::new();
+    for (model, sub, label) in cases {
+        let m = by_name(model).unwrap();
+        let shape = sublayer_gemm(&m, 8, sub);
+        let plan = StagePlan::new(shape, Tiling::default(), &sys.gpu);
+        let ar = shape.out_bytes();
+        let g80 = run_gemm(sys, &plan, 80, WriteMode::ThroughLlc).time;
+        let rs80 = run_rs_baseline(sys, ar, 8, 80).time;
+        let seq = g80 + rs80;
+        for (gc, rc, name) in [(80u32, 80u32, "ideal(80-free)"), (72, 8, "72-8"), (64, 16, "64-16")] {
+            let g = if gc == 80 { g80 } else { run_gemm(sys, &plan, gc, WriteMode::ThroughLlc).time };
+            let rs = if rc == 80 { rs80 } else { run_rs_baseline(sys, ar, 8, rc).time };
+            let overlapped = g.max(rs);
+            let sp = seq.as_ps() as f64 / overlapped.as_ps() as f64;
+            speedups.push((name.to_string(), sp));
+            t.row(vec![
+                model.to_string(),
+                label.to_string(),
+                name.to_string(),
+                ms(g),
+                ms(rs),
+                format!("{sp:.2}x"),
+            ]);
+        }
+    }
+    for split in ["ideal(80-free)", "72-8", "64-16"] {
+        let v: Vec<f64> = speedups
+            .iter()
+            .filter(|(n, _)| n == split)
+            .map(|(_, s)| *s)
+            .collect();
+        t.note(format!("geomean potential speedup {split}: {:.2}x", geomean(&v)));
+    }
+    t.note("paper: ideal 1.67x geomean; 72-8 1.18x; 64-16 1.49x".to_string());
+    t
+}
+
+// ---------------------------------------------------------------------
+// Figure 14 — event-driven RS vs the alpha-beta law, 6-192 MB, 4 GPUs.
+// ---------------------------------------------------------------------
+
+pub fn fig14(sys: &SystemConfig) -> Table {
+    use crate::collectives::analytic::ring_reduce_scatter;
+    let mut t = Table::new(
+        "fig14",
+        "Multi-GPU RS validation: event sim vs alpha-beta reference (4 GPUs)",
+        &["size MB", "sim ms", "alpha-beta ms", "rel err"],
+    );
+    let mut errs = Vec::new();
+    for mb in [6u64, 12, 24, 48, 96, 192] {
+        let bytes = mb << 20;
+        let sim = run_rs_baseline(sys, bytes, 4, sys.gpu.cu_count).time;
+        let model = ring_reduce_scatter(&sys.link, bytes, 4);
+        let err = (sim.as_secs_f64() - model.as_secs_f64()).abs() / model.as_secs_f64();
+        errs.push(1.0 + err);
+        t.row(vec![
+            mb.to_string(),
+            ms(sim),
+            ms(model),
+            pct(err),
+        ]);
+    }
+    t.note(format!(
+        "geomean rel err: {:.1}% (paper validates at 6% vs 4xMI210 hardware)",
+        (geomean(&errs) - 1.0) * 100.0
+    ));
+    t
+}
+
+// ---------------------------------------------------------------------
+// Figures 15 & 16 — sub-layer runtime distribution and speedups.
+// ---------------------------------------------------------------------
+
+pub struct SublayerGrid {
+    pub dist: Table,
+    pub speedups: Table,
+    pub t3_geomean: f64,
+    pub t3mca_geomean: f64,
+    pub ideal_geomean: f64,
+    pub t3mca_max: f64,
+}
+
+pub fn fig15_16(sys: &SystemConfig) -> SublayerGrid {
+    let mut dist = Table::new(
+        "fig15",
+        "Sub-layer runtime distribution (Sequential)",
+        &["model", "tp", "sublayer", "GEMM ms", "RS ms", "AG ms", "GEMM %", "RS %", "AG %"],
+    );
+    let mut sp = Table::new(
+        "fig16",
+        "Sub-layer speedups over Sequential",
+        &["model", "tp", "sublayer", "T3", "T3-MCA", "Ideal-Overlap", "Ideal-RS+NMC"],
+    );
+    let mut t3_all = Vec::new();
+    let mut mca_all = Vec::new();
+    let mut ideal_all = Vec::new();
+    for name in ["Mega-GPT-2", "T-NLG"] {
+        let m = by_name(name).unwrap();
+        for &tp in m.tp_degrees {
+            for sub in SubLayer::ALL {
+                let seq = cached_sublayer(sys, &m, tp, sub, Scenario::Sequential);
+                let tot = seq.total.as_secs_f64();
+                dist.row(vec![
+                    name.to_string(),
+                    tp.to_string(),
+                    sub.name().to_string(),
+                    ms(seq.gemm),
+                    ms(seq.rs),
+                    ms(seq.ag),
+                    pct(seq.gemm.as_secs_f64() / tot),
+                    pct(seq.rs.as_secs_f64() / tot),
+                    pct(seq.ag.as_secs_f64() / tot),
+                ]);
+                let t3 = sublayer_speedup(&seq, &cached_sublayer(sys, &m, tp, sub, Scenario::T3));
+                let mca =
+                    sublayer_speedup(&seq, &cached_sublayer(sys, &m, tp, sub, Scenario::T3Mca));
+                let ideal = sublayer_speedup(
+                    &seq,
+                    &cached_sublayer(sys, &m, tp, sub, Scenario::IdealOverlap),
+                );
+                let nmc = sublayer_speedup(
+                    &seq,
+                    &cached_sublayer(sys, &m, tp, sub, Scenario::IdealRsNmc),
+                );
+                t3_all.push(t3);
+                mca_all.push(mca);
+                ideal_all.push(ideal);
+                sp.row(vec![
+                    name.to_string(),
+                    tp.to_string(),
+                    sub.name().to_string(),
+                    format!("{t3:.2}x"),
+                    format!("{mca:.2}x"),
+                    format!("{ideal:.2}x"),
+                    format!("{nmc:.2}x"),
+                ]);
+            }
+        }
+    }
+    let t3_geomean = geomean(&t3_all);
+    let t3mca_geomean = geomean(&mca_all);
+    let ideal_geomean = geomean(&ideal_all);
+    let t3mca_max = mca_all.iter().cloned().fold(0.0f64, f64::max);
+    sp.note(format!(
+        "geomeans: T3 {t3_geomean:.2}x, T3-MCA {t3mca_geomean:.2}x (max {t3mca_max:.2}x), ideal {ideal_geomean:.2}x"
+    ));
+    sp.note("paper: T3 1.20x geomean (max 1.39x); T3-MCA 1.30x (max 1.47x); ideal 1.35x (max 1.50x)");
+    SublayerGrid {
+        dist,
+        speedups: sp,
+        t3_geomean,
+        t3mca_geomean,
+        ideal_geomean,
+        t3mca_max,
+    }
+}
+
+// ---------------------------------------------------------------------
+// Figure 17 — DRAM traffic time series for T-NLG FC-2 (TP=8, SLB=4K).
+// ---------------------------------------------------------------------
+
+pub fn fig17(sys: &SystemConfig, out_dir: impl AsRef<Path>) -> Table {
+    // SLB = seq*batch = 4K tokens (the paper's Fig 17 workload).
+    let mut m = by_name("T-NLG").unwrap();
+    m.batch = 4;
+    let shape = sublayer_gemm(&m, 8, SubLayer::Fc2Fwd);
+    let plan = StagePlan::new(shape, Tiling::default(), &sys.gpu);
+    let opts = FusedOpts {
+        policy: crate::config::ArbPolicy::RoundRobin,
+        trace_bin: Some(SimTime::us(20)),
+    };
+    let fused = run_fused_gemm_rs(sys, &plan, 8, &opts);
+    let iso = run_gemm(sys, &plan, sys.gpu.cu_count, WriteMode::BypassLlc);
+
+    let mut t = Table::new(
+        "fig17",
+        "DRAM traffic time series (T-NLG FC-2 TP=8 SLB=4K, T3 w/ RR arbitration)",
+        &["metric", "value"],
+    );
+    let slowdown = fused.gemm_time.as_ps() as f64 / iso.time.as_ps() as f64;
+    t.row(vec!["isolated GEMM ms".into(), ms(iso.time)]);
+    t.row(vec!["fused GEMM ms".into(), ms(fused.gemm_time)]);
+    t.row(vec!["GEMM slowdown under overlap".into(), format!("{slowdown:.3}x")]);
+    t.row(vec!["fused total ms".into(), ms(fused.total)]);
+    t.note("time series written to results/fig17_traffic.csv");
+
+    let traced = fused.trace.expect("trace_bin was set");
+    let dir = out_dir.as_ref();
+    let _ = std::fs::create_dir_all(dir);
+    let mut csv = String::from("t_us,gemm_reads,gemm_writes,comm_reads,comm_writes\n");
+    let nbins = traced
+        .gemm_reads
+        .bins
+        .len()
+        .max(traced.gemm_writes.bins.len())
+        .max(traced.comm_reads.bins.len())
+        .max(traced.comm_writes.bins.len());
+    for i in 0..nbins {
+        let g = |ts: &crate::sim::stats::TimeSeries| ts.bins.get(i).copied().unwrap_or(0.0);
+        let _ = writeln!(
+            csv,
+            "{},{},{},{},{}",
+            i as f64 * 20.0,
+            g(&traced.gemm_reads),
+            g(&traced.gemm_writes),
+            g(&traced.comm_reads),
+            g(&traced.comm_writes)
+        );
+    }
+    let _ = std::fs::write(dir.join("fig17_traffic.csv"), csv);
+    t
+}
+
+// ---------------------------------------------------------------------
+// Figure 18 — DRAM access breakdown + §6.2 data-movement reductions.
+// ---------------------------------------------------------------------
+
+pub fn fig18(sys: &SystemConfig) -> Table {
+    let mut t = Table::new(
+        "fig18",
+        "DRAM accesses per sub-layer (GB): Sequential vs T3-MCA",
+        &["model", "tp", "sublayer", "seq GB", "t3 GB", "reduction", "rs-read x", "gemm-read x", "write x"],
+    );
+    let gb = |b: u64| format!("{:.2}", b as f64 / 1e9);
+    let mut reductions = Vec::new();
+    let mut rs_read_ratios = Vec::new();
+    let mut gemm_read_ratios = Vec::new();
+    let mut write_ratios = Vec::new();
+    for name in ["Mega-GPT-2", "T-NLG"] {
+        let m = by_name(name).unwrap();
+        for &tp in m.tp_degrees {
+            for sub in SubLayer::ALL {
+                let seq = cached_sublayer(sys, &m, tp, sub, Scenario::Sequential);
+                let t3 = cached_sublayer(sys, &m, tp, sub, Scenario::T3Mca);
+                let s = seq.counters.total();
+                let f = t3.counters.total();
+                let red = 1.0 - f as f64 / s as f64;
+                reductions.push(s as f64 / f as f64);
+                let rsr = seq.counters.rs_reads as f64 / t3.counters.rs_reads.max(1) as f64;
+                let gr = seq.counters.gemm_reads as f64 / t3.counters.gemm_reads.max(1) as f64;
+                let wr = (seq.counters.gemm_writes + seq.counters.rs_writes) as f64
+                    / (t3.counters.gemm_writes + t3.counters.rs_writes).max(1) as f64;
+                rs_read_ratios.push(rsr);
+                gemm_read_ratios.push(gr);
+                write_ratios.push(wr);
+                t.row(vec![
+                    name.to_string(),
+                    tp.to_string(),
+                    sub.name().to_string(),
+                    gb(s),
+                    gb(f),
+                    pct(red),
+                    format!("{rsr:.2}x"),
+                    format!("{gr:.2}x"),
+                    format!("{wr:.2}x"),
+                ]);
+            }
+        }
+    }
+    let g = geomean(&reductions);
+    t.note(format!(
+        "data movement reduced {:.1}% geomean (max {:.1}%); paper: 22% geomean, max 36%",
+        (1.0 - 1.0 / g) * 100.0,
+        reductions
+            .iter()
+            .map(|r| (1.0 - 1.0 / r) * 100.0)
+            .fold(0.0f64, f64::max)
+    ));
+    t.note(format!(
+        "RS reads -{:.2}x (paper 2.4x); GEMM reads -{:.2}x (paper 1.56x); writes -{:.2}x (paper ~1.11x)",
+        geomean(&rs_read_ratios),
+        geomean(&gemm_read_ratios),
+        geomean(&write_ratios)
+    ));
+    t
+}
+
+// ---------------------------------------------------------------------
+// Figure 19 — end-to-end training/prompt speedups.
+// ---------------------------------------------------------------------
+
+pub fn fig19(sys: &SystemConfig) -> Table {
+    let mut t = Table::new(
+        "fig19",
+        "End-to-end iteration speedups over Sequential",
+        &["model", "tp", "phase", "seq ms", "T3", "T3-MCA"],
+    );
+    let mut train_sp = Vec::new();
+    let mut prompt_sp = Vec::new();
+    for name in ["Mega-GPT-2", "T-NLG", "GPT-3", "PALM", "MT-NLG"] {
+        let m = by_name(name).unwrap();
+        for &tp in m.tp_degrees {
+            for phase in [Phase::Training, Phase::Prompt] {
+                let e = end_to_end(
+                    sys,
+                    &m,
+                    tp,
+                    phase,
+                    &[Scenario::Sequential, Scenario::T3, Scenario::T3Mca],
+                );
+                let sp3 = e.speedup(Scenario::T3);
+                let spm = e.speedup(Scenario::T3Mca);
+                match phase {
+                    Phase::Training => train_sp.push(spm),
+                    Phase::Prompt => prompt_sp.push(spm),
+                }
+                t.row(vec![
+                    name.to_string(),
+                    tp.to_string(),
+                    (if phase == Phase::Training { "train" } else { "prompt" }).to_string(),
+                    ms(e.total(Scenario::Sequential)),
+                    format!("{sp3:.3}x"),
+                    format!("{spm:.3}x"),
+                ]);
+            }
+        }
+    }
+    t.note(format!(
+        "T3-MCA geomean: training {:.1}% (max {:.1}%), prompt {:.1}% (max {:.1}%)",
+        (geomean(&train_sp) - 1.0) * 100.0,
+        (train_sp.iter().cloned().fold(0.0f64, f64::max) - 1.0) * 100.0,
+        (geomean(&prompt_sp) - 1.0) * 100.0,
+        (prompt_sp.iter().cloned().fold(0.0f64, f64::max) - 1.0) * 100.0,
+    ));
+    t.note("paper: training up to 12% (geomean 10%), prompt up to 15% (geomean 12%)");
+    t
+}
+
+// ---------------------------------------------------------------------
+// Figure 20 — future hardware with 2x CUs.
+// ---------------------------------------------------------------------
+
+pub fn fig20() -> Table {
+    let base = SystemConfig::table1();
+    let fut = SystemConfig::future_2x_cu();
+    let mut t = Table::new(
+        "fig20",
+        "T3-MCA speedup on future hardware (2x CUs, same network)",
+        &["model", "tp", "sublayer", "base speedup", "2x-CU speedup"],
+    );
+    let mut fc_deltas = Vec::new();
+    let mut op_deltas = Vec::new();
+    for name in ["Mega-GPT-2", "T-NLG", "GPT-3"] {
+        let m = by_name(name).unwrap();
+        // The paper's Fig 20 regime: the model's deployment TP, where the
+        // large FC layers are compute-dominated (the smallest evaluated
+        // TP degree for each model).
+        let tp = *m.tp_degrees.first().unwrap();
+        for sub in [SubLayer::Fc2Fwd, SubLayer::OpFwd] {
+            let sp = |sys: &SystemConfig| {
+                let seq = cached_sublayer(sys, &m, tp, sub, Scenario::Sequential);
+                let mca = cached_sublayer(sys, &m, tp, sub, Scenario::T3Mca);
+                sublayer_speedup(&seq, &mca)
+            };
+            let b = sp(&base);
+            let f = sp(&fut);
+            if sub == SubLayer::Fc2Fwd {
+                fc_deltas.push(f / b);
+            } else {
+                op_deltas.push(f / b);
+            }
+            t.row(vec![
+                name.to_string(),
+                tp.to_string(),
+                sub.name().to_string(),
+                format!("{b:.2}x"),
+                format!("{f:.2}x"),
+            ]);
+        }
+    }
+    t.note(format!(
+        "FC-2 benefit change on 2x CUs: {:.2}x; OP: {:.2}x (paper: larger layers gain, small OP layers lose)",
+        geomean(&fc_deltas),
+        geomean(&op_deltas)
+    ));
+    t
+}
+
+// ---------------------------------------------------------------------
+// Table 3 — qualitative comparison vs prior approaches.
+// ---------------------------------------------------------------------
+
+pub fn table3() -> Table {
+    let mut t = Table::new(
+        "table3",
+        "Comparison with prior approaches (paper Table 3)",
+        &["approach", "GPU", "transparent", "overlap", "reduce contention", "no extra accel", "topology-indep"],
+    );
+    let rows: [(&str, [&str; 6]); 5] = [
+        ("In-switch", ["yes", "no", "no", "partial", "no", "no"]),
+        ("ACE", ["yes", "no", "no", "yes", "no", "no"]),
+        ("CoCoNet", ["yes", "no", "yes", "no", "yes", "partial"]),
+        ("Google Decomposition", ["no (TPU)", "no", "yes", "no", "yes", "yes"]),
+        ("T3-MCA (this repo)", ["yes", "yes", "yes", "yes", "yes", "partial"]),
+    ];
+    for (name, cells) in rows {
+        let mut row = vec![name.to_string()];
+        row.extend(cells.iter().map(|s| s.to_string()));
+        t.row(row);
+    }
+    t
+}
+
+// ---------------------------------------------------------------------
+// Ablation (§6.1.3): MCA occupancy-threshold sensitivity. The paper picks
+// the threshold (5/10/30/no-limit) by kernel memory intensity; this sweep
+// shows the trade-off directly.
+// ---------------------------------------------------------------------
+
+pub fn ablation_mca_thresholds(sys: &SystemConfig) -> Table {
+    use crate::engine::fused::{run_fused_gemm_rs, FusedOpts};
+    let mut t = Table::new(
+        "ablation_mca",
+        "T3-MCA occupancy-threshold sensitivity (T-NLG FC-2 & OP, TP=8)",
+        &["sublayer", "threshold", "fused ms", "gemm ms", "vs best"],
+    );
+    for sub in [SubLayer::Fc2Fwd, SubLayer::OpFwd] {
+        let m = by_name("T-NLG").unwrap();
+        let shape = sublayer_gemm(&m, 8, sub);
+        let plan = StagePlan::new(shape, Tiling::default(), &sys.gpu);
+        let mut rows = Vec::new();
+        for thr in [2u32, 5, 10, 30, u32::MAX] {
+            let mut s = sys.clone();
+            s.mca.occupancy_thresholds = [thr; 4];
+            let r = run_fused_gemm_rs(
+                &s,
+                &plan,
+                8,
+                &FusedOpts {
+                    policy: crate::config::ArbPolicy::T3Mca,
+                    trace_bin: None,
+                },
+            );
+            rows.push((thr, r.total, r.gemm_time));
+        }
+        let best = rows.iter().map(|(_, t, _)| *t).min().unwrap();
+        for (thr, total, gemm) in rows {
+            let name = if thr == u32::MAX {
+                "no-limit".to_string()
+            } else {
+                thr.to_string()
+            };
+            t.row(vec![
+                sub.name().to_string(),
+                name,
+                ms(total),
+                ms(gemm),
+                format!(
+                    "{:+.2}%",
+                    (total.as_ps() as f64 / best.as_ps() as f64 - 1.0) * 100.0
+                ),
+            ]);
+        }
+    }
+    t.note("paper §6.1.3: threshold chosen per kernel memory intensity (5/10/30/no-limit)");
+    t.note(
+        "note: sensitivity is muted at transaction granularity — comm pressure (~6% of DRAM bw) \
+         rarely fills queues; the paper's cycle-level WG stalls amplify it (EXPERIMENTS.md)",
+    );
+    t
+}
+
+/// Table 1 / Table 2 dumps.
+pub fn table1(sys: &SystemConfig) -> String {
+    sys.describe()
+}
+
+pub fn table2() -> Table {
+    let mut t = Table::new(
+        "table2",
+        "Studied models (paper Table 2)",
+        &["model", "hidden", "layers", "seq", "batch", "tokens", "TP degrees", "params(B)", "AR MB"],
+    );
+    for m in zoo() {
+        t.row(vec![
+            m.name.to_string(),
+            m.hidden.to_string(),
+            m.layers.to_string(),
+            m.seq_len.to_string(),
+            m.batch.to_string(),
+            m.tokens().to_string(),
+            format!("{:?}", m.tp_degrees),
+            format!("{:.0}", m.params_b),
+            format!("{:.0}", m.ar_bytes() as f64 / (1 << 20) as f64),
+        ]);
+    }
+    t
+}
+
+/// Convenience: model zoo entry used widely by benches.
+pub fn model(name: &str) -> ModelCfg {
+    by_name(name).unwrap_or_else(|| panic!("unknown model {name}"))
+}
+
+/// Run the AG used in sub-layer compositions (exposed for microbenches).
+pub fn ag_time(sys: &SystemConfig, bytes: u64, tp: u64) -> SimTime {
+    run_ag_baseline(sys, bytes, tp, sys.gpu.cu_count).time
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table_render_and_csv() {
+        let mut t = Table::new("t", "demo", &["a", "b"]);
+        t.row(vec!["1".into(), "2".into()]);
+        t.note("n");
+        let r = t.render();
+        assert!(r.contains("demo") && r.contains("| 1 | 2 |") && r.contains("* n"));
+        let dir = std::env::temp_dir().join("t3-harness-test");
+        let p = t.write_csv(&dir).unwrap();
+        let s = std::fs::read_to_string(p).unwrap();
+        assert_eq!(s, "a,b\n1,2\n");
+    }
+
+    #[test]
+    fn fig14_error_small() {
+        let sys = SystemConfig::table1();
+        let t = fig14(&sys);
+        assert_eq!(t.rows.len(), 6);
+        // The note carries the geomean error; recompute cheaply for 2 pts.
+        // (Full assertion lives in the integration tests.)
+        assert!(t.notes[0].contains("geomean rel err"));
+    }
+
+    #[test]
+    fn table3_shape() {
+        let t = table3();
+        assert_eq!(t.rows.len(), 5);
+        assert!(t.rows[4][2] == "yes"); // T3 transparent
+    }
+
+    #[test]
+    fn table2_lists_all_models() {
+        assert_eq!(table2().rows.len(), zoo().len());
+    }
+}

@@ -1,0 +1,566 @@
+//! Event-driven HBM + memory-controller model.
+//!
+//! `MemorySystem` models the paper's Table-1 memory hierarchy at
+//! memory-transaction granularity: N independent channels, each with a DRAM
+//! command queue of bounded depth, fed by a per-channel arbiter (`hw::mc`)
+//! from two request streams (compute / communication). Near-memory
+//! op-and-store transactions (Section 4.3) are serviced with the CCDWL
+//! penalty folded into their service time.
+//!
+//! The engine submits transaction bursts tagged with a *traffic class*
+//! (for the Figure-18 counters), an optional *completion group* (so the
+//! engine learns when e.g. a GEMM stage's reads or a chunk's updates have
+//! all reached DRAM — this is what the T3 Tracker observes), and a stream.
+
+use std::collections::VecDeque;
+
+use crate::config::{ArbPolicy, McaConfig, MemConfig};
+use crate::hw::mc::{arbitrate, ArbInputs, ArbState, Stream};
+use crate::sim::events::EventQueue;
+use crate::sim::stats::{DramCounters, TimeSeries};
+use crate::sim::time::SimTime;
+
+/// DRAM transaction type.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum TxnKind {
+    Read,
+    Write,
+    /// Near-memory op-and-store (atomic update at the bank ALUs).
+    NmcUpdate,
+}
+
+/// Traffic class for Figure-18 style accounting.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum TrafficClass {
+    GemmRead,
+    GemmWrite,
+    RsRead,
+    RsWrite,
+    AgRead,
+    AgWrite,
+}
+
+/// Completion-group handle. `GroupId::NONE` means "don't notify".
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct GroupId(pub u32);
+
+impl GroupId {
+    pub const NONE: GroupId = GroupId(u32::MAX);
+}
+
+/// One memory transaction (all transactions are `cfg.txn_bytes` long).
+#[derive(Debug, Clone, Copy)]
+pub struct Txn {
+    pub kind: TxnKind,
+    pub stream: Stream,
+    pub class: TrafficClass,
+    pub group: GroupId,
+}
+
+/// Event type the memory system schedules into the engine's queue.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct MemEvent {
+    pub channel: u32,
+}
+
+struct Channel {
+    comp_q: VecDeque<Txn>,
+    comm_q: VecDeque<Txn>,
+    dram_q: VecDeque<Txn>,
+    /// Communication-stream transactions currently in `dram_q`.
+    comm_in_q: u32,
+    busy: bool,
+    arb: ArbState,
+    busy_ps: u64,
+}
+
+impl Channel {
+    fn new() -> Self {
+        Channel {
+            comp_q: VecDeque::new(),
+            comm_q: VecDeque::new(),
+            dram_q: VecDeque::new(),
+            comm_in_q: 0,
+            busy: false,
+            arb: ArbState::default(),
+            busy_ps: 0,
+        }
+    }
+}
+
+/// Optional per-class traffic time-series (Figure 17).
+#[derive(Debug, Clone)]
+pub struct TrafficTrace {
+    pub gemm_reads: TimeSeries,
+    pub gemm_writes: TimeSeries,
+    pub comm_reads: TimeSeries,
+    pub comm_writes: TimeSeries,
+}
+
+impl TrafficTrace {
+    pub fn new(bin: SimTime) -> Self {
+        TrafficTrace {
+            gemm_reads: TimeSeries::new("gemm_reads", bin),
+            gemm_writes: TimeSeries::new("gemm_writes", bin),
+            comm_reads: TimeSeries::new("comm_reads", bin),
+            comm_writes: TimeSeries::new("comm_writes", bin),
+        }
+    }
+}
+
+/// The banked-HBM + MC model.
+pub struct MemorySystem {
+    cfg: MemConfig,
+    policy: ArbPolicy,
+    mca: McaConfig,
+    /// Current MCA occupancy threshold (kernel-intensity dependent).
+    occ_threshold: u32,
+    /// Pre-computed per-transaction service times (hot path: avoids f64
+    /// rounding on every DRAM service).
+    service_plain: SimTime,
+    service_nmc: SimTime,
+    channels: Vec<Channel>,
+    rr_submit: u32,
+    /// Per group: (outstanding txns, accumulated comm-blocking ps).
+    groups: Vec<(u64, u64)>,
+    free_groups: Vec<u32>,
+    completions: Vec<(GroupId, SimTime)>,
+    pub counters: DramCounters,
+    pub trace: Option<TrafficTrace>,
+}
+
+impl MemorySystem {
+    pub fn new(cfg: MemConfig, policy: ArbPolicy, mca: McaConfig) -> Self {
+        let channels = (0..cfg.channels).map(|_| Channel::new()).collect();
+        let service_plain = cfg.txn_service(false);
+        let service_nmc = cfg.txn_service(true);
+        MemorySystem {
+            cfg,
+            policy,
+            mca,
+            occ_threshold: u32::MAX,
+            service_plain,
+            service_nmc,
+            channels,
+            rr_submit: 0,
+            groups: Vec::new(),
+            free_groups: Vec::new(),
+            completions: Vec::new(),
+            counters: DramCounters::default(),
+            trace: None,
+        }
+    }
+
+    pub fn policy(&self) -> ArbPolicy {
+        self.policy
+    }
+
+    pub fn txn_bytes(&self) -> u64 {
+        self.cfg.txn_bytes
+    }
+
+    /// Number of transactions needed to move `bytes` (ceiling).
+    pub fn txns_for(&self, bytes: u64) -> u64 {
+        bytes.div_ceil(self.cfg.txn_bytes)
+    }
+
+    /// Set the T3-MCA occupancy threshold for the currently running
+    /// compute kernel (index into `McaConfig::occupancy_thresholds`).
+    pub fn set_intensity_class(&mut self, class: usize) {
+        self.occ_threshold = self.mca.occupancy_thresholds
+            [class.min(self.mca.occupancy_thresholds.len() - 1)];
+    }
+
+    /// Register a completion group expecting `count` transactions.
+    pub fn new_group(&mut self, count: u64) -> GroupId {
+        assert!(count > 0, "empty completion group");
+        if let Some(idx) = self.free_groups.pop() {
+            self.groups[idx as usize] = (count, 0);
+            GroupId(idx)
+        } else {
+            self.groups.push((count, 0));
+            GroupId((self.groups.len() - 1) as u32)
+        }
+    }
+
+    /// Submit `count` transactions of the given prototype, spread across
+    /// channels round-robin (address interleaving).
+    pub fn submit_burst<E: From<MemEvent>>(
+        &mut self,
+        count: u64,
+        txn: Txn,
+        q: &mut EventQueue<E>,
+    ) {
+        // Enqueue everything first, then pump each touched channel once —
+        // bursts are the common case and per-transaction pumping dominated
+        // the profile (EXPERIMENTS.md §Perf).
+        let nch = self.cfg.channels as u64;
+        for _ in 0..count {
+            let ch = (self.rr_submit % self.cfg.channels) as usize;
+            self.rr_submit = self.rr_submit.wrapping_add(1);
+            match txn.stream {
+                Stream::Compute => self.channels[ch].comp_q.push_back(txn),
+                Stream::Comm => self.channels[ch].comm_q.push_back(txn),
+            }
+        }
+        let touched = count.min(nch);
+        let start = (self.rr_submit as u64 + nch - touched) % nch;
+        for i in 0..touched {
+            let ch = ((start + i) % nch) as usize;
+            self.pump_channel(ch, q);
+        }
+    }
+
+    /// Submit exactly the transactions needed to move `bytes`.
+    pub fn submit_bytes<E: From<MemEvent>>(
+        &mut self,
+        bytes: u64,
+        txn: Txn,
+        q: &mut EventQueue<E>,
+    ) -> u64 {
+        let n = self.txns_for(bytes);
+        self.submit_burst(n, txn, q);
+        n
+    }
+
+    /// Are any communication-stream transactions still pending anywhere?
+    /// (Used for the drain-at-kernel-boundary rule of §4.5.)
+    pub fn comm_pending(&self) -> bool {
+        self.channels
+            .iter()
+            .any(|c| !c.comm_q.is_empty() || c.dram_q.iter().any(|t| t.stream == Stream::Comm))
+    }
+
+    /// Are any transactions at all in flight?
+    pub fn idle(&self) -> bool {
+        self.channels.iter().all(|c| {
+            c.comp_q.is_empty() && c.comm_q.is_empty() && c.dram_q.is_empty() && !c.busy
+        })
+    }
+
+    /// Total pending compute-stream transactions (diagnostics).
+    pub fn compute_backlog(&self) -> usize {
+        self.channels.iter().map(|c| c.comp_q.len()).sum()
+    }
+
+    /// Drain accumulated group completions with their comm-blocking time:
+    /// the summed queueing delay the group's transactions spent behind
+    /// communication-stream transactions in the DRAM queues (averaged per
+    /// channel). This is the §4.5 head-of-line stall the MCA policy
+    /// exists to prevent — the engine adds the unhidden fraction to the
+    /// producer's critical path.
+    pub fn take_completions(&mut self, out: &mut Vec<(GroupId, SimTime)>) {
+        out.append(&mut self.completions);
+    }
+
+    /// Aggregate DRAM bandwidth utilization over `elapsed`.
+    pub fn utilization(&self, elapsed: SimTime) -> f64 {
+        if elapsed.is_zero() {
+            return 0.0;
+        }
+        let busy: u64 = self.channels.iter().map(|c| c.busy_ps).sum();
+        busy as f64 / (elapsed.as_ps() as f64 * self.channels.len() as f64)
+    }
+
+    /// Handle a service-completion event for `ev.channel`.
+    pub fn on_event<E: From<MemEvent>>(&mut self, ev: MemEvent, q: &mut EventQueue<E>) {
+        let ch = ev.channel as usize;
+        debug_assert!(self.channels[ch].busy);
+        let txn = self.channels[ch]
+            .dram_q
+            .pop_front()
+            .expect("service event with empty DRAM queue");
+        if txn.stream == Stream::Comm {
+            // Head-of-line accounting (§3.2.2/§4.5): this channel just
+            // spent a service slot on communication while compute reads
+            // were waiting behind it — attribute the slot, once, to the
+            // blocked group. The per-group total (averaged over channels
+            // at completion) is the producer's critical-path exposure.
+            let blocked_group = self.channels[ch]
+                .dram_q
+                .iter()
+                .chain(self.channels[ch].comp_q.iter())
+                .find(|t| t.stream == Stream::Compute && t.kind == TxnKind::Read && t.group != GroupId::NONE)
+                .map(|t| t.group);
+            if let Some(g) = blocked_group {
+                let service = if txn.kind == TxnKind::NmcUpdate {
+                    self.service_nmc
+                } else {
+                    self.service_plain
+                };
+                self.groups[g.0 as usize].1 += service.as_ps();
+            }
+            self.channels[ch].comm_in_q -= 1;
+        }
+        self.channels[ch].busy = false;
+        self.account(&txn, q.now());
+        if txn.group != GroupId::NONE {
+            let g = &mut self.groups[txn.group.0 as usize];
+            debug_assert!(g.0 > 0);
+            g.0 -= 1;
+            if g.0 == 0 {
+                let blocked = SimTime::ps(g.1 / self.cfg.channels as u64);
+                self.completions.push((txn.group, blocked));
+                self.free_groups.push(txn.group.0);
+            }
+        }
+        self.pump_channel(ch, q);
+    }
+
+    fn account(&mut self, txn: &Txn, now: SimTime) {
+        let b = self.cfg.txn_bytes;
+        match txn.class {
+            TrafficClass::GemmRead => self.counters.gemm_reads += b,
+            TrafficClass::GemmWrite => self.counters.gemm_writes += b,
+            TrafficClass::RsRead => self.counters.rs_reads += b,
+            TrafficClass::RsWrite => self.counters.rs_writes += b,
+            TrafficClass::AgRead => self.counters.ag_reads += b,
+            TrafficClass::AgWrite => self.counters.ag_writes += b,
+        }
+        if let Some(trace) = &mut self.trace {
+            let bytes = b as f64;
+            match (txn.stream, txn.kind) {
+                (Stream::Compute, TxnKind::Read) => trace.gemm_reads.add(now, bytes),
+                (Stream::Compute, _) => trace.gemm_writes.add(now, bytes),
+                (Stream::Comm, TxnKind::Read) => trace.comm_reads.add(now, bytes),
+                (Stream::Comm, _) => trace.comm_writes.add(now, bytes),
+            }
+        }
+    }
+
+    /// Move eligible stream requests into the DRAM queue and start service
+    /// if the channel is idle.
+    fn pump_channel<E: From<MemEvent>>(&mut self, ch: usize, q: &mut EventQueue<E>) {
+        let now = q.now();
+
+        let queue_depth = self.cfg.queue_depth as usize;
+        let occ_threshold = self.occ_threshold;
+        let starvation_limit = self.mca.starvation_limit;
+        let policy = self.policy;
+
+        {
+            let c = &mut self.channels[ch];
+            loop {
+                if c.dram_q.len() >= queue_depth {
+                    break;
+                }
+                let inp = ArbInputs {
+                    now,
+                    compute_pending: !c.comp_q.is_empty(),
+                    comm_pending: !c.comm_q.is_empty(),
+                    dram_occupancy: c.dram_q.len() as u32,
+                    occ_threshold,
+                    starvation_limit,
+                };
+                match arbitrate(policy, &mut c.arb, inp) {
+                    Some(Stream::Compute) => {
+                        let t = c.comp_q.pop_front().unwrap();
+                        c.dram_q.push_back(t);
+                    }
+                    Some(Stream::Comm) => {
+                        let t = c.comm_q.pop_front().unwrap();
+                        c.comm_in_q += 1;
+                        c.dram_q.push_back(t);
+                    }
+                    None => break,
+                }
+            }
+        }
+        let c = &mut self.channels[ch];
+        if !c.busy {
+            if let Some(head) = c.dram_q.front() {
+                let service = if head.kind == TxnKind::NmcUpdate {
+                    self.service_nmc
+                } else {
+                    self.service_plain
+                };
+                c.busy = true;
+                c.busy_ps += service.as_ps();
+                q.schedule(now + service, E::from(MemEvent { channel: ch as u32 }));
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::SystemConfig;
+
+    #[derive(Debug)]
+    struct Ev(MemEvent);
+    impl From<MemEvent> for Ev {
+        fn from(m: MemEvent) -> Self {
+            Ev(m)
+        }
+    }
+
+    fn mem(policy: ArbPolicy) -> MemorySystem {
+        let c = SystemConfig::table1();
+        MemorySystem::new(c.mem, policy, c.mca)
+    }
+
+    fn run_to_idle(m: &mut MemorySystem, q: &mut EventQueue<Ev>) -> SimTime {
+        while let Some((_, Ev(ev))) = q.pop() {
+            m.on_event(ev, q);
+        }
+        q.now()
+    }
+
+    fn txn(kind: TxnKind, stream: Stream, class: TrafficClass, group: GroupId) -> Txn {
+        Txn {
+            kind,
+            stream,
+            class,
+            group,
+        }
+    }
+
+    #[test]
+    fn burst_drains_at_aggregate_bandwidth() {
+        let mut m = mem(ArbPolicy::ComputePriority);
+        let mut q = EventQueue::new();
+        // 32 MB of reads over 32 channels at 1 TB/s ≈ 33.5 us.
+        let g = m.new_group(m.txns_for(32 << 20));
+        m.submit_bytes(
+            32 << 20,
+            txn(TxnKind::Read, Stream::Compute, TrafficClass::GemmRead, g),
+            &mut q,
+        );
+        let end = run_to_idle(&mut m, &mut q);
+        assert!(m.idle());
+        let us = end.as_us_f64();
+        assert!((30.0..40.0).contains(&us), "drain took {us} us");
+        let mut done = Vec::new();
+        m.take_completions(&mut done);
+        assert_eq!(done.len(), 1);
+        assert_eq!(done[0].0, g);
+        assert_eq!(m.counters.gemm_reads, m.txns_for(32 << 20) * 1024);
+    }
+
+    #[test]
+    fn nmc_updates_slower_than_plain_writes() {
+        let mut t_plain = SimTime::ZERO;
+        let mut t_nmc = SimTime::ZERO;
+        for (kind, out) in [(TxnKind::Write, &mut t_plain), (TxnKind::NmcUpdate, &mut t_nmc)] {
+            let mut m = mem(ArbPolicy::ComputePriority);
+            let mut q = EventQueue::new();
+            m.submit_bytes(
+                8 << 20,
+                txn(kind, Stream::Comm, TrafficClass::RsWrite, GroupId::NONE),
+                &mut q,
+            );
+            *out = run_to_idle(&mut m, &mut q);
+        }
+        assert!(t_nmc > t_plain);
+        let ratio = t_nmc.as_ps() as f64 / t_plain.as_ps() as f64;
+        assert!((1.05..1.2).contains(&ratio), "ratio {ratio}");
+    }
+
+    #[test]
+    fn mca_limits_comm_queue_occupancy() {
+        let mut m = mem(ArbPolicy::T3Mca);
+        m.set_intensity_class(0); // threshold 5
+        let mut q = EventQueue::new();
+        // Flood comm stream only.
+        m.submit_burst(
+            1000,
+            txn(TxnKind::NmcUpdate, Stream::Comm, TrafficClass::RsWrite, GroupId::NONE),
+            &mut q,
+        );
+        // With compute empty, comm is admitted but the DRAM queue should
+        // never exceed the threshold (5) by more than the in-service one.
+        for c in &m.channels {
+            assert!(c.dram_q.len() <= 5, "occupancy {}", c.dram_q.len());
+        }
+        run_to_idle(&mut m, &mut q);
+        assert!(m.idle());
+    }
+
+    #[test]
+    fn compute_priority_vs_roundrobin_compute_latency() {
+        // Same mixed load; compute stream should finish earlier under
+        // ComputePriority than under RoundRobin.
+        let mut finish = Vec::new();
+        for policy in [ArbPolicy::ComputePriority, ArbPolicy::RoundRobin] {
+            let mut m = mem(policy);
+            let mut q = EventQueue::new();
+            let comm = txn(TxnKind::Write, Stream::Comm, TrafficClass::RsWrite, GroupId::NONE);
+            m.submit_bytes(16 << 20, comm, &mut q);
+            let g = m.new_group(m.txns_for(8 << 20));
+            let comp = txn(TxnKind::Read, Stream::Compute, TrafficClass::GemmRead, g);
+            m.submit_bytes(8 << 20, comp, &mut q);
+            let mut comp_done = SimTime::ZERO;
+            let mut done = Vec::new();
+            while let Some((t, Ev(ev))) = q.pop() {
+                m.on_event(ev, &mut q);
+                m.take_completions(&mut done);
+                if done.iter().any(|(x, _)| *x == g) && comp_done.is_zero() {
+                    comp_done = t;
+                }
+            }
+            finish.push(comp_done);
+        }
+        assert!(
+            finish[0] < finish[1],
+            "compute-priority {} vs round-robin {}",
+            finish[0],
+            finish[1]
+        );
+    }
+
+    #[test]
+    fn comm_not_starved_under_mca() {
+        let mut m = mem(ArbPolicy::T3Mca);
+        m.set_intensity_class(0);
+        let mut q = EventQueue::new();
+        let g = m.new_group(10);
+        m.submit_burst(
+            10,
+            txn(TxnKind::NmcUpdate, Stream::Comm, TrafficClass::RsWrite, g),
+            &mut q,
+        );
+        // Continuous compute traffic.
+        m.submit_bytes(
+            64 << 20,
+            txn(TxnKind::Read, Stream::Compute, TrafficClass::GemmRead, GroupId::NONE),
+            &mut q,
+        );
+        run_to_idle(&mut m, &mut q);
+        let mut done = Vec::new();
+        m.take_completions(&mut done);
+        assert!(done.iter().any(|(x, _)| *x == g), "comm group starved");
+        assert!(!m.comm_pending());
+    }
+
+    #[test]
+    fn group_ids_recycled() {
+        let mut m = mem(ArbPolicy::ComputePriority);
+        let mut q: EventQueue<Ev> = EventQueue::new();
+        let g1 = m.new_group(1);
+        m.submit_burst(
+            1,
+            txn(TxnKind::Read, Stream::Compute, TrafficClass::GemmRead, g1),
+            &mut q,
+        );
+        run_to_idle(&mut m, &mut q);
+        let mut done = Vec::new();
+        m.take_completions(&mut done);
+        let g2 = m.new_group(1);
+        assert_eq!(g1, g2, "group slot should be recycled");
+    }
+
+    #[test]
+    fn utilization_bounded() {
+        let mut m = mem(ArbPolicy::ComputePriority);
+        let mut q = EventQueue::new();
+        m.submit_bytes(
+            4 << 20,
+            txn(TxnKind::Read, Stream::Compute, TrafficClass::GemmRead, GroupId::NONE),
+            &mut q,
+        );
+        let end = run_to_idle(&mut m, &mut q);
+        let u = m.utilization(end);
+        assert!(u > 0.5 && u <= 1.0, "utilization {u}");
+    }
+}

@@ -1,0 +1,145 @@
+//! Inter-GPU ring link model.
+//!
+//! Each GPU has one egress and one ingress link per ring direction
+//! (Table 1: 150 GB/s bidirectional = 75 GB/s per direction, 500 ns
+//! latency). The link is a byte-serial resource: transfers reserve
+//! contiguous bandwidth windows. The simulator models a single GPU and
+//! mirrors its egress timeline into its ingress (homogeneous devices,
+//! §5.1.1), so `Link` only needs reservation arithmetic, not queuing.
+
+use crate::config::LinkConfig;
+use crate::sim::time::SimTime;
+
+/// One direction of one ring link.
+#[derive(Debug, Clone)]
+pub struct Link {
+    cfg: LinkConfig,
+    busy_until: SimTime,
+    pub bytes_carried: u64,
+}
+
+/// A granted bandwidth window.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Window {
+    /// When the first byte leaves the sender.
+    pub start: SimTime,
+    /// When the last byte leaves the sender.
+    pub done: SimTime,
+    /// When the first byte reaches the receiver (start + latency).
+    pub arrive_first: SimTime,
+    /// When the last byte reaches the receiver (done + latency).
+    pub arrive_last: SimTime,
+}
+
+impl Link {
+    pub fn new(cfg: LinkConfig) -> Self {
+        Link {
+            cfg,
+            busy_until: SimTime::ZERO,
+            bytes_carried: 0,
+        }
+    }
+
+    pub fn cfg(&self) -> &LinkConfig {
+        &self.cfg
+    }
+
+    /// Earliest time a new transfer could start.
+    pub fn free_at(&self) -> SimTime {
+        self.busy_until
+    }
+
+    /// Reserve the link for `bytes`, starting no earlier than `ready`.
+    pub fn reserve(&mut self, ready: SimTime, bytes: u64) -> Window {
+        let start = ready.max(self.busy_until);
+        let done = start + self.cfg.transfer_time(bytes);
+        self.busy_until = done;
+        self.bytes_carried += bytes;
+        Window {
+            start,
+            done,
+            arrive_first: start + self.cfg.latency,
+            arrive_last: done + self.cfg.latency,
+        }
+    }
+
+    /// Reserve bandwidth for `bytes` but cap the streaming rate at
+    /// `source_gbps` (used when the producer — e.g. a CU-limited collective
+    /// kernel or the GEMM's store stream — cannot saturate the link).
+    pub fn reserve_rate_limited(&mut self, ready: SimTime, bytes: u64, source_gbps: f64) -> Window {
+        let eff = self.cfg.per_dir_bw_gbps.min(source_gbps);
+        let start = ready.max(self.busy_until);
+        let done = start + SimTime::transfer(bytes, eff);
+        self.busy_until = done;
+        self.bytes_carried += bytes;
+        Window {
+            start,
+            done,
+            arrive_first: start + self.cfg.latency,
+            arrive_last: done + self.cfg.latency,
+        }
+    }
+
+    /// Pure helper: time to push `bytes` through the link at full rate.
+    pub fn transfer_time(&self, bytes: u64) -> SimTime {
+        self.cfg.transfer_time(bytes)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::SystemConfig;
+
+    fn link() -> Link {
+        Link::new(SystemConfig::table1().link)
+    }
+
+    #[test]
+    fn transfer_time_at_75gbps() {
+        let l = link();
+        // 75 MB at 75 GB/s = 1 ms
+        assert_eq!(l.transfer_time(75_000_000), SimTime::ms(1));
+    }
+
+    #[test]
+    fn reservations_serialize() {
+        let mut l = link();
+        let w1 = l.reserve(SimTime::ZERO, 75_000_000);
+        let w2 = l.reserve(SimTime::ZERO, 75_000_000);
+        assert_eq!(w1.done, SimTime::ms(1));
+        assert_eq!(w2.start, w1.done);
+        assert_eq!(w2.done, SimTime::ms(2));
+        assert_eq!(l.bytes_carried, 150_000_000);
+    }
+
+    #[test]
+    fn ready_time_respected() {
+        let mut l = link();
+        let w = l.reserve(SimTime::ms(5), 75_000);
+        assert_eq!(w.start, SimTime::ms(5));
+        assert_eq!(w.arrive_first, SimTime::ms(5) + SimTime::ns(500));
+        assert_eq!(w.arrive_last, w.done + SimTime::ns(500));
+    }
+
+    #[test]
+    fn rate_limiting_slows_transfer() {
+        let mut a = link();
+        let mut b = link();
+        let full = a.reserve(SimTime::ZERO, 75_000_000);
+        // Source capped at 37.5 GB/s: takes twice as long.
+        let slow = b.reserve_rate_limited(SimTime::ZERO, 75_000_000, 37.5);
+        assert_eq!(slow.done.as_ps(), 2 * full.done.as_ps());
+        // Cap above link bandwidth has no effect.
+        let mut c = link();
+        let same = c.reserve_rate_limited(SimTime::ZERO, 75_000_000, 1000.0);
+        assert_eq!(same.done, full.done);
+    }
+
+    #[test]
+    fn latency_constant_offset() {
+        let mut l = link();
+        let w = l.reserve(SimTime::ZERO, 1024);
+        assert_eq!(w.arrive_last - w.done, SimTime::ns(500));
+    }
+}

@@ -1,0 +1,248 @@
+//! Memory-controller arbitration (Section 4.5).
+//!
+//! The MC sits between two request streams — the *compute* stream (producer
+//! GEMM, or a CU-executed collective kernel) and the *communication* stream
+//! (incoming DMA/remote updates, outgoing DMA reads) — and the per-channel
+//! DRAM command queues. The arbitration decision is pure logic, factored out
+//! here so every policy corner is unit-testable without the event loop.
+//!
+//! Policies (config::ArbPolicy):
+//! * `RoundRobin`      — alternate streams, fall back to the non-empty one.
+//! * `ComputePriority` — always compute first; comm only when compute empty.
+//! * `T3Mca`           — compute first; comm admitted only while the DRAM
+//!   queue occupancy is below a kernel-intensity-dependent threshold, with
+//!   an anti-starvation override.
+
+use crate::config::ArbPolicy;
+use crate::sim::time::SimTime;
+
+/// Which stream a request belongs to.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Stream {
+    Compute,
+    Comm,
+}
+
+/// Mutable per-channel arbitration state.
+#[derive(Debug, Clone, Default)]
+pub struct ArbState {
+    /// Round-robin toggle: true ⇒ comm's turn next.
+    pub rr_comm_next: bool,
+    /// Last time a comm request was issued on this channel.
+    pub last_comm_issue: SimTime,
+}
+
+/// Inputs to one arbitration decision.
+#[derive(Debug, Clone, Copy)]
+pub struct ArbInputs {
+    pub now: SimTime,
+    pub compute_pending: bool,
+    pub comm_pending: bool,
+    /// Current occupancy of this channel's DRAM command queue.
+    pub dram_occupancy: u32,
+    /// T3-MCA occupancy threshold currently in force (kernel-dependent).
+    pub occ_threshold: u32,
+    /// T3-MCA anti-starvation limit.
+    pub starvation_limit: SimTime,
+}
+
+/// Decide which stream (if any) may issue next into the DRAM queue.
+/// Returns `None` when nothing is eligible (caller must not retry until
+/// state changes). Updates `state` when a comm grant is made.
+pub fn arbitrate(policy: ArbPolicy, st: &mut ArbState, inp: ArbInputs) -> Option<Stream> {
+    if !inp.compute_pending && !inp.comm_pending {
+        return None;
+    }
+    match policy {
+        ArbPolicy::RoundRobin => {
+            let pick = if st.rr_comm_next {
+                if inp.comm_pending {
+                    Stream::Comm
+                } else {
+                    Stream::Compute
+                }
+            } else if inp.compute_pending {
+                Stream::Compute
+            } else {
+                Stream::Comm
+            };
+            st.rr_comm_next = pick == Stream::Compute;
+            if pick == Stream::Comm {
+                st.last_comm_issue = inp.now;
+            }
+            Some(pick)
+        }
+        ArbPolicy::ComputePriority => {
+            if inp.compute_pending {
+                Some(Stream::Compute)
+            } else if inp.comm_pending {
+                st.last_comm_issue = inp.now;
+                Some(Stream::Comm)
+            } else {
+                None
+            }
+        }
+        ArbPolicy::T3Mca => {
+            // Anti-starvation: if comm has waited past the limit, let one
+            // comm request through even when compute is pending.
+            let starved = inp.comm_pending
+                && inp.now.saturating_sub(st.last_comm_issue) > inp.starvation_limit;
+            if starved {
+                st.last_comm_issue = inp.now;
+                return Some(Stream::Comm);
+            }
+            if inp.compute_pending {
+                return Some(Stream::Compute);
+            }
+            // Compute empty: admit comm only below the occupancy threshold,
+            // keeping headroom for compute requests that may arrive next
+            // (the paper's core fix for bursty RS traffic, §4.5).
+            if inp.comm_pending && inp.dram_occupancy < inp.occ_threshold {
+                st.last_comm_issue = inp.now;
+                return Some(Stream::Comm);
+            }
+            None
+        }
+    }
+}
+
+/// Classify a compute kernel's memory intensity into one of the four MCA
+/// threshold classes (§6.1.3: thresholds 5/10/30/no-limit). The paper's MC
+/// "detects the memory intensiveness of a kernel by monitoring occupancy
+/// during its isolated execution"; we classify by the kernel's
+/// bytes-per-FLOP ratio relative to the machine balance, which is what that
+/// occupancy measurement converges to.
+pub fn intensity_class(bytes_per_flop: f64, machine_balance: f64) -> usize {
+    // ratio >= 1: kernel demands more bandwidth per FLOP than the machine
+    // can feed ⇒ most memory-intensive class (tightest comm threshold).
+    let ratio = bytes_per_flop / machine_balance;
+    if ratio >= 1.0 {
+        0
+    } else if ratio >= 0.5 {
+        1
+    } else if ratio >= 0.125 {
+        2
+    } else {
+        3
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn inputs(compute: bool, comm: bool, occ: u32, thr: u32) -> ArbInputs {
+        ArbInputs {
+            now: SimTime::us(10),
+            compute_pending: compute,
+            comm_pending: comm,
+            dram_occupancy: occ,
+            occ_threshold: thr,
+            starvation_limit: SimTime::us(2),
+        }
+    }
+
+    #[test]
+    fn round_robin_alternates() {
+        let mut st = ArbState::default();
+        let i = inputs(true, true, 0, u32::MAX);
+        let a = arbitrate(ArbPolicy::RoundRobin, &mut st, i).unwrap();
+        let b = arbitrate(ArbPolicy::RoundRobin, &mut st, i).unwrap();
+        let c = arbitrate(ArbPolicy::RoundRobin, &mut st, i).unwrap();
+        assert_ne!(a, b);
+        assert_eq!(a, c);
+    }
+
+    #[test]
+    fn round_robin_falls_back_when_stream_empty() {
+        let mut st = ArbState::default();
+        assert_eq!(
+            arbitrate(ArbPolicy::RoundRobin, &mut st, inputs(false, true, 0, 64)),
+            Some(Stream::Comm)
+        );
+        assert_eq!(
+            arbitrate(ArbPolicy::RoundRobin, &mut st, inputs(true, false, 0, 64)),
+            Some(Stream::Compute)
+        );
+        assert_eq!(
+            arbitrate(ArbPolicy::RoundRobin, &mut st, inputs(false, false, 0, 64)),
+            None
+        );
+    }
+
+    #[test]
+    fn compute_priority_starves_comm_when_busy() {
+        let mut st = ArbState::default();
+        for _ in 0..100 {
+            assert_eq!(
+                arbitrate(ArbPolicy::ComputePriority, &mut st, inputs(true, true, 50, 5)),
+                Some(Stream::Compute)
+            );
+        }
+        assert_eq!(
+            arbitrate(ArbPolicy::ComputePriority, &mut st, inputs(false, true, 50, 5)),
+            Some(Stream::Comm)
+        );
+    }
+
+    #[test]
+    fn mca_blocks_comm_above_threshold() {
+        let mut st = ArbState {
+            last_comm_issue: SimTime::us(10),
+            ..Default::default()
+        };
+        // compute empty, comm pending, occupancy 10 >= threshold 5: hold.
+        assert_eq!(
+            arbitrate(ArbPolicy::T3Mca, &mut st, inputs(false, true, 10, 5)),
+            None
+        );
+        // below threshold: admit.
+        assert_eq!(
+            arbitrate(ArbPolicy::T3Mca, &mut st, inputs(false, true, 4, 5)),
+            Some(Stream::Comm)
+        );
+    }
+
+    #[test]
+    fn mca_prefers_compute() {
+        let mut st = ArbState {
+            last_comm_issue: SimTime::us(10),
+            ..Default::default()
+        };
+        assert_eq!(
+            arbitrate(ArbPolicy::T3Mca, &mut st, inputs(true, true, 0, 64)),
+            Some(Stream::Compute)
+        );
+    }
+
+    #[test]
+    fn mca_starvation_override() {
+        let mut st = ArbState::default(); // last_comm_issue = 0
+        let mut i = inputs(true, true, 60, 5);
+        i.now = SimTime::us(10); // waited 10us > 2us limit
+        assert_eq!(arbitrate(ArbPolicy::T3Mca, &mut st, i), Some(Stream::Comm));
+        // Immediately after, compute wins again (timer reset).
+        assert_eq!(arbitrate(ArbPolicy::T3Mca, &mut st, i), Some(Stream::Compute));
+    }
+
+    #[test]
+    fn mca_never_deadlocks_with_unlimited_threshold() {
+        let mut st = ArbState {
+            last_comm_issue: SimTime::us(10),
+            ..Default::default()
+        };
+        assert_eq!(
+            arbitrate(ArbPolicy::T3Mca, &mut st, inputs(false, true, 1000, u32::MAX)),
+            Some(Stream::Comm)
+        );
+    }
+
+    #[test]
+    fn intensity_classes_ordered() {
+        let mb = 0.01; // bytes per flop machine balance
+        assert_eq!(intensity_class(0.02, mb), 0); // streaming kernel
+        assert_eq!(intensity_class(0.006, mb), 1);
+        assert_eq!(intensity_class(0.002, mb), 2);
+        assert_eq!(intensity_class(0.0001, mb), 3); // compute bound
+    }
+}

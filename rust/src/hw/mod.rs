@@ -1,0 +1,6 @@
+//! Hardware component models: memory controller arbitration, banked HBM
+//! with near-memory compute, and ring interconnect links.
+
+pub mod hbm;
+pub mod link;
+pub mod mc;

@@ -1,0 +1,36 @@
+//! # T3: Transparent Tracking & Triggering — full-system reproduction
+//!
+//! A from-scratch reproduction of the T3 paper (Pati et al., ASPLOS'24):
+//! hardware-software co-design for fine-grained overlap of producer GEMMs
+//! with the serialized collectives of tensor-parallel Transformers.
+//!
+//! The crate contains:
+//! * a discrete-event multi-GPU simulator ([`sim`], [`hw`], [`engine`])
+//!   modeling the paper's Table-1 system at memory-transaction granularity;
+//! * the T3 mechanisms: the [`tracker`] at the memory controller, the
+//!   producer output [`addrspace`] configuration, near-memory-compute DRAM
+//!   semantics and the MCA arbitration policy ([`hw::mc`]);
+//! * [`collectives`] — analytic, simulated (baseline + T3-fused), and
+//!   *functional* (real-buffer, bit-exact) implementations;
+//! * a Transformer [`models`] zoo and end-to-end iteration projection
+//!   ([`exec`]) reproducing the paper's Figures 4/15/16/18/19/20;
+//! * a tensor-parallel [`coordinator`] that executes real numerics through
+//!   AOT-compiled JAX/Pallas artifacts via the PJRT [`runtime`];
+//! * the figure/table regeneration [`harness`].
+//!
+//! See DESIGN.md for the architecture and EXPERIMENTS.md for results.
+
+pub mod addrspace;
+pub mod collectives;
+pub mod coordinator;
+pub mod config;
+pub mod gemm;
+pub mod harness;
+pub mod hw;
+pub mod sim;
+pub mod testkit;
+pub mod tracker;
+pub mod engine;
+pub mod exec;
+pub mod models;
+pub mod runtime;

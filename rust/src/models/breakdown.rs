@@ -1,0 +1,267 @@
+//! Operation-level analytic model of a Transformer iteration (§5.1.2).
+//!
+//! The paper derives end-to-end breakdowns by profiling MLPerf BERT on one
+//! GPU and scaling operation times analytically with hyperparameters and
+//! slicing (the AMPeD approach). We do the same arithmetic directly from
+//! the Table-1 roofline: every non-sliced operation of a Megatron-style
+//! Transformer layer is listed with its FLOPs and DRAM bytes, and timed as
+//! `max(flops/sustained, bytes/bandwidth)`.
+//!
+//! The four tensor-sliced "GEMM → AR" sites are *excluded* here — their
+//! times come from the event-driven simulator (`t3::exec`), exactly like
+//! the paper scales its measured breakdown by simulated speedups.
+//!
+//! Like the paper's MLPerf v1.1 baseline (§6.3), attention's non-sliced
+//! operations (softmax, masking, dropout) are *unfused*, making them a
+//! significant fraction of runtime — the paper notes T3's benefits grow
+//! with fused/flash attention.
+
+use crate::config::{DType, SystemConfig};
+use crate::models::ModelCfg;
+use crate::sim::time::SimTime;
+
+/// Execution phase.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Phase {
+    /// Training iteration: forward + backward + optimizer.
+    Training,
+    /// Inference prompt phase: forward only.
+    Prompt,
+}
+
+/// One non-sliced operation with its roofline inputs.
+#[derive(Debug, Clone)]
+pub struct OpCost {
+    pub name: &'static str,
+    pub flops: u64,
+    pub bytes: u64,
+}
+
+/// Elementwise-op efficiency relative to peak DRAM bandwidth.
+const ELEMWISE_EFF: f64 = 0.8;
+
+fn passes(bytes_per_pass: u64, n: u64) -> u64 {
+    bytes_per_pass * n
+}
+
+/// Non-sliced operations of ONE layer's forward pass.
+pub fn layer_fwd_ops(m: &ModelCfg, tp: u64) -> Vec<OpCost> {
+    let h = m.hidden;
+    let t = m.tokens();
+    let f = m.ffn_mult;
+    let e = DType::F16.bytes();
+    let heads = (h / 128).max(1);
+    let act = t * h * e; // one pass over the activation
+    let scores = m.batch * (heads / tp).max(1) * m.seq_len * m.seq_len * e;
+    vec![
+        OpCost {
+            name: "IP(QKV) GEMM",
+            flops: 2 * t * h * (3 * h / tp),
+            bytes: act + 3 * h / tp * h * e + t * (3 * h / tp) * e,
+        },
+        OpCost {
+            name: "attn scores BMM",
+            flops: 2 * m.batch * m.seq_len * m.seq_len * h / tp,
+            bytes: 2 * t * (h / tp) * e + scores,
+        },
+        OpCost {
+            name: "softmax+mask+dropout",
+            flops: 0,
+            bytes: passes(scores, 5),
+        },
+        OpCost {
+            name: "attn context BMM",
+            flops: 2 * m.batch * m.seq_len * m.seq_len * h / tp,
+            bytes: t * (h / tp) * e + scores + t * (h / tp) * e,
+        },
+        OpCost {
+            name: "FC-1 GEMM",
+            flops: 2 * t * h * (f * h / tp),
+            bytes: act + h * (f * h / tp) * e + t * (f * h / tp) * e,
+        },
+        OpCost {
+            name: "GeLU",
+            flops: 0,
+            bytes: passes(t * (f * h / tp) * e, 2),
+        },
+        OpCost {
+            name: "2x LayerNorm",
+            flops: 0,
+            bytes: passes(act, 6),
+        },
+        OpCost {
+            name: "2x residual",
+            flops: 0,
+            bytes: passes(act, 6),
+        },
+        OpCost {
+            name: "2x dropout",
+            flops: 0,
+            bytes: passes(act, 6),
+        },
+    ]
+}
+
+/// Non-sliced operations of ONE layer's backward pass (dX+dW GEMMs except
+/// the two sliced dX sites, elementwise backward, optimizer excluded).
+pub fn layer_bwd_ops(m: &ModelCfg, tp: u64) -> Vec<OpCost> {
+    let h = m.hidden;
+    let t = m.tokens();
+    let f = m.ffn_mult;
+    let e = DType::F16.bytes();
+    let heads = (h / 128).max(1);
+    let act = t * h * e;
+    let scores = m.batch * (heads / tp).max(1) * m.seq_len * m.seq_len * e;
+    vec![
+        OpCost {
+            name: "IP dW GEMM",
+            flops: 2 * t * h * (3 * h / tp),
+            bytes: act + t * (3 * h / tp) * e,
+        },
+        OpCost {
+            name: "attn BMMs bwd",
+            flops: 8 * m.batch * m.seq_len * m.seq_len * h / tp,
+            bytes: 4 * t * (h / tp) * e + 2 * scores,
+        },
+        OpCost {
+            name: "softmax bwd",
+            flops: 0,
+            bytes: passes(scores, 5),
+        },
+        OpCost {
+            name: "OP dX+dW GEMMs",
+            flops: 2 * 2 * t * h * (h / tp),
+            bytes: 2 * act + 2 * t * (h / tp) * e,
+        },
+        OpCost {
+            name: "FC-1 dW GEMM",
+            flops: 2 * t * h * (f * h / tp),
+            bytes: act + t * (f * h / tp) * e,
+        },
+        OpCost {
+            name: "FC-2 dX+dW GEMMs",
+            flops: 2 * 2 * t * h * (f * h / tp),
+            bytes: 2 * act + 2 * t * (f * h / tp) * e,
+        },
+        OpCost {
+            name: "GeLU bwd",
+            flops: 0,
+            bytes: passes(t * (f * h / tp) * e, 3),
+        },
+        OpCost {
+            name: "elementwise bwd",
+            flops: 0,
+            bytes: passes(act, 12),
+        },
+    ]
+}
+
+/// Optimizer step per layer (mixed precision: fp32 master weights, Adam):
+/// read gradient + master weight + 2 moments, write weight + moments.
+pub fn optimizer_op(m: &ModelCfg, tp: u64) -> OpCost {
+    let params = (4 + 2 * m.ffn_mult) * m.hidden * m.hidden / tp;
+    OpCost {
+        name: "Adam update",
+        flops: 0,
+        bytes: params * (2 + 4 + 4 + 4 + 4 + 4 + 4),
+    }
+}
+
+/// Roofline time of one op.
+pub fn op_time(sys: &SystemConfig, op: &OpCost) -> SimTime {
+    let tc = if op.flops > 0 {
+        op.flops as f64 / sys.gpu.sustained_gemm_flops(DType::F16)
+    } else {
+        0.0
+    };
+    let tm = op.bytes as f64 / (sys.mem.total_bw_gbps * 1e9 * ELEMWISE_EFF);
+    SimTime::from_secs_f64(tc.max(tm))
+}
+
+/// Total non-sliced ("other") time of one iteration of `phase`, all layers.
+pub fn other_time(sys: &SystemConfig, m: &ModelCfg, tp: u64, phase: Phase) -> SimTime {
+    let fwd: SimTime = layer_fwd_ops(m, tp).iter().map(|o| op_time(sys, o)).sum();
+    let per_layer = match phase {
+        Phase::Prompt => fwd,
+        Phase::Training => {
+            let bwd: SimTime = layer_bwd_ops(m, tp).iter().map(|o| op_time(sys, o)).sum();
+            fwd + bwd + op_time(sys, &optimizer_op(m, tp))
+        }
+    };
+    per_layer * m.layers
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::models::by_name;
+
+    fn sys() -> SystemConfig {
+        SystemConfig::table1()
+    }
+
+    #[test]
+    fn op_time_roofline_composition() {
+        let s = sys();
+        // Pure compute op.
+        let c = OpCost {
+            name: "c",
+            flops: 1 << 40,
+            bytes: 1,
+        };
+        let expect = (1u64 << 40) as f64 / s.gpu.sustained_gemm_flops(DType::F16);
+        assert!((op_time(&s, &c).as_secs_f64() - expect).abs() / expect < 1e-6);
+        // Pure memory op.
+        let m = OpCost {
+            name: "m",
+            flops: 0,
+            bytes: 800_000_000,
+        };
+        assert!((op_time(&s, &m).as_ms_f64() - 1.0).abs() < 0.01);
+    }
+
+    #[test]
+    fn training_slower_than_prompt() {
+        let s = sys();
+        let m = by_name("T-NLG").unwrap();
+        let train = other_time(&s, &m, 8, Phase::Training);
+        let prompt = other_time(&s, &m, 8, Phase::Prompt);
+        let ratio = train.as_ps() as f64 / prompt.as_ps() as f64;
+        assert!((2.0..4.5).contains(&ratio), "train/prompt = {ratio}");
+    }
+
+    #[test]
+    fn larger_tp_reduces_per_device_time() {
+        let s = sys();
+        let m = by_name("T-NLG").unwrap();
+        let t8 = other_time(&s, &m, 8, Phase::Training);
+        let t16 = other_time(&s, &m, 16, Phase::Training);
+        assert!(t16 < t8);
+    }
+
+    #[test]
+    fn attention_elementwise_is_significant_fraction() {
+        // §6.3: unfused attention ops are a significant share of "other".
+        let s = sys();
+        let m = by_name("Mega-GPT-2").unwrap();
+        let ops = layer_fwd_ops(&m, 8);
+        let total: SimTime = ops.iter().map(|o| op_time(&s, o)).sum();
+        let attn: SimTime = ops
+            .iter()
+            .filter(|o| o.name.contains("softmax") || o.name.contains("attn"))
+            .map(|o| op_time(&s, o))
+            .sum();
+        let frac = attn.as_ps() as f64 / total.as_ps() as f64;
+        assert!((0.1..0.7).contains(&frac), "attention fraction {frac}");
+    }
+
+    #[test]
+    fn fwd_ops_magnitude_sane() {
+        // T-NLG fwd layer at TP=8 should be on the order of a millisecond.
+        let s = sys();
+        let m = by_name("T-NLG").unwrap();
+        let t: SimTime = layer_fwd_ops(&m, 8).iter().map(|o| op_time(&s, o)).sum();
+        let ms = t.as_ms_f64();
+        assert!((0.5..10.0).contains(&ms), "fwd layer {ms} ms");
+    }
+}

@@ -1,0 +1,273 @@
+//! The Transformer model zoo (Table 2) and the tensor-parallel sub-layer
+//! GEMM shapes the paper evaluates (Figures 15/16/18).
+//!
+//! Tensor parallelism à la Megatron-LM slices each layer's weights across
+//! `tp` devices. Column-parallel layers (IP/QKV, FC-1) need no forward
+//! communication; row-parallel layers (OP, FC-2) produce partial sums that
+//! require an all-reduce of the full `[tokens, hidden]` activation. In the
+//! backward pass the roles flip: the input-gradient GEMMs of the
+//! column-parallel layers (FC-1, IP) produce the partial sums. Those four
+//! "sliced GEMM → AR" sites are the paper's unit of evaluation.
+
+pub mod breakdown;
+
+use crate::config::DType;
+use crate::gemm::GemmShape;
+
+/// One Transformer model configuration (paper Table 2).
+#[derive(Debug, Clone, PartialEq)]
+pub struct ModelCfg {
+    pub name: &'static str,
+    /// Hidden dimension H.
+    pub hidden: u64,
+    /// Number of Transformer layers.
+    pub layers: u64,
+    /// Sequence length.
+    pub seq_len: u64,
+    /// Batch size (so tokens = seq_len * batch).
+    pub batch: u64,
+    /// TP degrees the paper evaluates for this model.
+    pub tp_degrees: &'static [u64],
+    /// FFN expansion factor (4 for all evaluated models).
+    pub ffn_mult: u64,
+    /// Approximate parameter count (for display), in billions.
+    pub params_b: f64,
+}
+
+impl ModelCfg {
+    pub fn tokens(&self) -> u64 {
+        self.seq_len * self.batch
+    }
+
+    /// Parameters per layer: attention (4 H^2) + FFN (2 * ffn * H^2).
+    pub fn params(&self) -> u64 {
+        self.layers * (4 + 2 * self.ffn_mult) * self.hidden * self.hidden
+    }
+
+    /// All-reduced activation size in bytes (tokens x hidden, fp16).
+    pub fn ar_bytes(&self) -> u64 {
+        self.tokens() * self.hidden * DType::F16.bytes()
+    }
+}
+
+/// Table 2 models plus the futuristic 1T/10T configurations of Figure 4.
+pub fn zoo() -> Vec<ModelCfg> {
+    vec![
+        ModelCfg {
+            name: "Mega-GPT-2",
+            hidden: 3072,
+            layers: 74,
+            seq_len: 1024,
+            batch: 16,
+            tp_degrees: &[8, 16],
+            ffn_mult: 4,
+            params_b: 8.3,
+        },
+        ModelCfg {
+            name: "T-NLG",
+            hidden: 4256,
+            layers: 78,
+            seq_len: 1024,
+            batch: 8,
+            tp_degrees: &[8, 16],
+            ffn_mult: 4,
+            params_b: 17.0,
+        },
+        ModelCfg {
+            name: "GPT-3",
+            hidden: 12288,
+            layers: 96,
+            seq_len: 1024,
+            batch: 2,
+            tp_degrees: &[32],
+            ffn_mult: 4,
+            params_b: 175.0,
+        },
+        ModelCfg {
+            name: "PALM",
+            hidden: 18432,
+            layers: 118,
+            seq_len: 1024,
+            batch: 2,
+            tp_degrees: &[32],
+            ffn_mult: 4,
+            params_b: 530.0,
+        },
+        ModelCfg {
+            name: "MT-NLG",
+            hidden: 20480,
+            layers: 105,
+            seq_len: 1024,
+            batch: 2,
+            tp_degrees: &[32],
+            ffn_mult: 4,
+            params_b: 540.0,
+        },
+        ModelCfg {
+            name: "1T",
+            hidden: 32768,
+            layers: 128,
+            seq_len: 1024,
+            batch: 2,
+            tp_degrees: &[64],
+            ffn_mult: 4,
+            params_b: 1000.0,
+        },
+        ModelCfg {
+            name: "10T",
+            hidden: 102400,
+            layers: 128,
+            seq_len: 1024,
+            batch: 2,
+            tp_degrees: &[64],
+            ffn_mult: 4,
+            params_b: 10000.0,
+        },
+    ]
+}
+
+pub fn by_name(name: &str) -> Option<ModelCfg> {
+    zoo().into_iter().find(|m| m.name.eq_ignore_ascii_case(name))
+}
+
+/// The four tensor-sliced GEMM→all-reduce sites (Figures 15/16/18).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum SubLayer {
+    /// Attention output projection, forward.
+    OpFwd,
+    /// FC-2 (FFN down-projection), forward.
+    Fc2Fwd,
+    /// FC-1 input-gradient GEMM, backward.
+    Fc1Bwd,
+    /// Input (QKV) projection input-gradient GEMM, backward.
+    IpBwd,
+}
+
+impl SubLayer {
+    pub const ALL: [SubLayer; 4] = [
+        SubLayer::OpFwd,
+        SubLayer::Fc2Fwd,
+        SubLayer::Fc1Bwd,
+        SubLayer::IpBwd,
+    ];
+
+    pub fn name(self) -> &'static str {
+        match self {
+            SubLayer::OpFwd => "OP(fwd)",
+            SubLayer::Fc2Fwd => "FC-2(fwd)",
+            SubLayer::Fc1Bwd => "FC-1(bwd)",
+            SubLayer::IpBwd => "IP(bwd)",
+        }
+    }
+
+    /// K-dimension multiple of `hidden/tp` for this sub-layer's GEMM.
+    fn k_mult(self, ffn_mult: u64) -> u64 {
+        match self {
+            SubLayer::OpFwd => 1,
+            SubLayer::Fc2Fwd | SubLayer::Fc1Bwd => ffn_mult,
+            SubLayer::IpBwd => 3, // fused QKV
+        }
+    }
+
+    /// Occurs in the forward pass (and thus in inference prompt phase)?
+    pub fn in_forward(self) -> bool {
+        matches!(self, SubLayer::OpFwd | SubLayer::Fc2Fwd)
+    }
+}
+
+/// The tensor-sliced GEMM for one sub-layer of `model` at TP degree `tp`.
+/// All four produce the full `[tokens, hidden]` output whose all-reduce is
+/// serialized in the baseline.
+pub fn sublayer_gemm(model: &ModelCfg, tp: u64, sub: SubLayer) -> GemmShape {
+    assert!(model.hidden % tp == 0, "H={} not divisible by TP={}", model.hidden, tp);
+    let k = sub.k_mult(model.ffn_mult) * model.hidden / tp;
+    GemmShape::new(model.tokens(), model.hidden, k, DType::F16)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn zoo_matches_table2() {
+        let z = zoo();
+        let mega = z.iter().find(|m| m.name == "Mega-GPT-2").unwrap();
+        assert_eq!(mega.hidden, 3072);
+        assert_eq!(mega.layers, 74);
+        assert_eq!(mega.tokens(), 16 * 1024);
+        let tnlg = z.iter().find(|m| m.name == "T-NLG").unwrap();
+        assert_eq!(tnlg.hidden, 4256);
+        assert_eq!(tnlg.tokens(), 8 * 1024);
+        assert_eq!(tnlg.tp_degrees, &[8, 16]);
+        let mt = z.iter().find(|m| m.name == "MT-NLG").unwrap();
+        assert_eq!(mt.hidden, 20480);
+        assert_eq!(mt.tp_degrees, &[32]);
+    }
+
+    #[test]
+    fn param_counts_roughly_match_names() {
+        for m in zoo() {
+            let params_b = m.params() as f64 / 1e9;
+            // within 2x of the advertised size (embeddings etc. ignored)
+            assert!(
+                params_b > m.params_b * 0.5 && params_b < m.params_b * 2.0,
+                "{}: computed {params_b}B vs advertised {}B",
+                m.name,
+                m.params_b
+            );
+        }
+    }
+
+    #[test]
+    fn hidden_divisible_by_all_tp_degrees() {
+        for m in zoo() {
+            for &tp in m.tp_degrees {
+                assert_eq!(m.hidden % tp, 0, "{} H={} TP={tp}", m.name, m.hidden);
+                // 3H/tp (QKV) must also be integral
+                assert_eq!(3 * m.hidden % tp, 0);
+            }
+        }
+    }
+
+    #[test]
+    fn sublayer_shapes() {
+        let tnlg = by_name("t-nlg").unwrap();
+        let op = sublayer_gemm(&tnlg, 8, SubLayer::OpFwd);
+        assert_eq!((op.m, op.n, op.k), (8192, 4256, 532));
+        let fc2 = sublayer_gemm(&tnlg, 8, SubLayer::Fc2Fwd);
+        assert_eq!(fc2.k, 2128);
+        let ip = sublayer_gemm(&tnlg, 16, SubLayer::IpBwd);
+        assert_eq!(ip.k, 798);
+        // All sub-layers all-reduce the same activation.
+        assert_eq!(op.out_bytes(), tnlg.ar_bytes());
+        assert_eq!(fc2.out_bytes(), tnlg.ar_bytes());
+    }
+
+    #[test]
+    fn k_slicing_consistency() {
+        // sublayer_gemm(tp) == sublayer_gemm(1).slice_k(tp)
+        let mega = by_name("Mega-GPT-2").unwrap();
+        for sub in SubLayer::ALL {
+            let full = sublayer_gemm(&mega, 1, sub);
+            let sliced = sublayer_gemm(&mega, 8, sub);
+            assert_eq!(full.slice_k(8), sliced, "{:?}", sub);
+        }
+    }
+
+    #[test]
+    fn ar_sizes_in_fig14_range() {
+        // Validation range of Figure 14: 6-192 MB.
+        for m in zoo().iter().take(5) {
+            let mb = m.ar_bytes() as f64 / (1 << 20) as f64;
+            assert!((6.0..=192.0).contains(&mb), "{}: {mb} MB", m.name);
+        }
+    }
+
+    #[test]
+    fn forward_classification() {
+        assert!(SubLayer::OpFwd.in_forward());
+        assert!(SubLayer::Fc2Fwd.in_forward());
+        assert!(!SubLayer::Fc1Bwd.in_forward());
+        assert!(!SubLayer::IpBwd.in_forward());
+    }
+}

@@ -1,0 +1,162 @@
+//! PJRT runtime: load AOT-compiled HLO-text artifacts and execute them.
+//!
+//! Wraps the `xla` crate (PJRT C API, CPU plugin): discover
+//! `artifacts/*.hlo.txt` produced by `make artifacts`
+//! (python/compile/aot.py), compile each once, cache the executable, and
+//! expose a typed f32 execute helper. This is the only place Python-built
+//! bits enter the Rust hot path — as compiled XLA executables, never as a
+//! Python interpreter.
+
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+
+use anyhow::{anyhow, bail, Context, Result};
+
+/// A named f32 tensor argument.
+#[derive(Debug, Clone)]
+pub struct TensorF32 {
+    pub data: Vec<f32>,
+    pub dims: Vec<usize>,
+}
+
+impl TensorF32 {
+    pub fn new(data: Vec<f32>, dims: &[usize]) -> Self {
+        assert_eq!(data.len(), dims.iter().product::<usize>());
+        TensorF32 {
+            data,
+            dims: dims.to_vec(),
+        }
+    }
+
+    pub fn zeros(dims: &[usize]) -> Self {
+        TensorF32 {
+            data: vec![0.0; dims.iter().product()],
+            dims: dims.to_vec(),
+        }
+    }
+}
+
+/// The artifact-backed PJRT runtime.
+pub struct Runtime {
+    client: xla::PjRtClient,
+    dir: PathBuf,
+    cache: HashMap<String, xla::PjRtLoadedExecutable>,
+}
+
+impl Runtime {
+    /// CPU PJRT client rooted at `dir` (usually `artifacts/`).
+    pub fn new(dir: impl AsRef<Path>) -> Result<Self> {
+        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
+        Ok(Runtime {
+            client,
+            dir: dir.as_ref().to_path_buf(),
+            cache: HashMap::new(),
+        })
+    }
+
+    /// Default artifact directory relative to the repo root, honoring
+    /// `T3_ARTIFACTS` for out-of-tree runs.
+    pub fn default_dir() -> PathBuf {
+        std::env::var_os("T3_ARTIFACTS")
+            .map(PathBuf::from)
+            .unwrap_or_else(|| PathBuf::from("artifacts"))
+    }
+
+    pub fn platform(&self) -> String {
+        self.client.platform_name()
+    }
+
+    /// Do the artifacts exist? (Examples/tests skip gracefully if not.)
+    pub fn artifacts_available(dir: impl AsRef<Path>) -> bool {
+        dir.as_ref().join("manifest.txt").exists()
+    }
+
+    /// Names listed in the manifest.
+    pub fn manifest(&self) -> Result<Vec<String>> {
+        let text = std::fs::read_to_string(self.dir.join("manifest.txt"))
+            .context("reading artifacts/manifest.txt — run `make artifacts`")?;
+        Ok(text
+            .lines()
+            .filter(|l| !l.trim().is_empty())
+            .map(|l| l.split_whitespace().next().unwrap_or("").to_string())
+            .collect())
+    }
+
+    /// Load + compile an artifact (cached).
+    pub fn load(&mut self, name: &str) -> Result<()> {
+        if self.cache.contains_key(name) {
+            return Ok(());
+        }
+        let path = self.dir.join(format!("{name}.hlo.txt"));
+        if !path.exists() {
+            bail!(
+                "artifact {:?} not found — run `make artifacts` first",
+                path
+            );
+        }
+        let proto = xla::HloModuleProto::from_text_file(
+            path.to_str().ok_or_else(|| anyhow!("non-utf8 path"))?,
+        )
+        .with_context(|| format!("parsing HLO text {path:?}"))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self
+            .client
+            .compile(&comp)
+            .with_context(|| format!("compiling artifact {name}"))?;
+        self.cache.insert(name.to_string(), exe);
+        Ok(())
+    }
+
+    /// Execute artifact `name` on f32 inputs; returns the flattened f32
+    /// outputs of the (tuple) result, in order.
+    pub fn exec_f32(&mut self, name: &str, inputs: &[TensorF32]) -> Result<Vec<Vec<f32>>> {
+        self.load(name)?;
+        let exe = self.cache.get(name).unwrap();
+        let mut literals = Vec::with_capacity(inputs.len());
+        for t in inputs {
+            let dims: Vec<i64> = t.dims.iter().map(|&d| d as i64).collect();
+            let lit = xla::Literal::vec1(&t.data)
+                .reshape(&dims)
+                .context("reshaping input literal")?;
+            literals.push(lit);
+        }
+        let result = exe
+            .execute::<xla::Literal>(&literals)
+            .with_context(|| format!("executing {name}"))?[0][0]
+            .to_literal_sync()?;
+        // aot.py lowers with return_tuple=True: unpack every element.
+        let tuple = result.to_tuple()?;
+        let mut out = Vec::with_capacity(tuple.len());
+        for lit in tuple {
+            out.push(lit.to_vec::<f32>()?);
+        }
+        Ok(out)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    // Full runtime round-trips live in rust/tests/runtime_integration.rs
+    // (they need `make artifacts`); here we cover the pure parts.
+
+    #[test]
+    fn tensor_shape_checks() {
+        let t = TensorF32::new(vec![1.0; 6], &[2, 3]);
+        assert_eq!(t.dims, vec![2, 3]);
+        let z = TensorF32::zeros(&[4, 4]);
+        assert_eq!(z.data.len(), 16);
+    }
+
+    #[test]
+    #[should_panic]
+    fn tensor_len_mismatch_panics() {
+        TensorF32::new(vec![1.0; 5], &[2, 3]);
+    }
+
+    #[test]
+    fn artifacts_available_is_false_for_missing_dir() {
+        assert!(!Runtime::artifacts_available("/nonexistent/dir"));
+    }
+}

@@ -1,0 +1,7 @@
+//! Discrete-event simulation core: time, calendar queue, deterministic RNG,
+//! and statistics.
+
+pub mod events;
+pub mod rng;
+pub mod stats;
+pub mod time;

@@ -1,0 +1,253 @@
+//! Statistics utilities shared by the simulator, the figure harness, and
+//! the benchmarks: running summaries, geometric means, histograms, and
+//! time-series accumulators (used for the Figure-17 DRAM-traffic traces).
+
+use super::time::SimTime;
+
+/// Geometric mean of strictly positive values. Empty input ⇒ 1.0 (the
+/// multiplicative identity), matching how the paper aggregates speedups.
+pub fn geomean(xs: &[f64]) -> f64 {
+    if xs.is_empty() {
+        return 1.0;
+    }
+    let mut acc = 0.0;
+    for &x in xs {
+        assert!(x > 0.0, "geomean requires positive values, got {x}");
+        acc += x.ln();
+    }
+    (acc / xs.len() as f64).exp()
+}
+
+/// Arithmetic mean. Empty ⇒ 0.
+pub fn mean(xs: &[f64]) -> f64 {
+    if xs.is_empty() {
+        0.0
+    } else {
+        xs.iter().sum::<f64>() / xs.len() as f64
+    }
+}
+
+/// Running min/max/mean/count summary without storing samples.
+#[derive(Debug, Clone, Default)]
+pub struct Summary {
+    pub count: u64,
+    pub sum: f64,
+    pub min: f64,
+    pub max: f64,
+}
+
+impl Summary {
+    pub fn new() -> Self {
+        Summary {
+            count: 0,
+            sum: 0.0,
+            min: f64::INFINITY,
+            max: f64::NEG_INFINITY,
+        }
+    }
+
+    pub fn add(&mut self, x: f64) {
+        self.count += 1;
+        self.sum += x;
+        self.min = self.min.min(x);
+        self.max = self.max.max(x);
+    }
+
+    pub fn mean(&self) -> f64 {
+        if self.count == 0 {
+            0.0
+        } else {
+            self.sum / self.count as f64
+        }
+    }
+}
+
+/// Fixed-bucket histogram over `[0, limit)` with overflow bucket; used for
+/// DRAM queue-occupancy and latency distributions.
+#[derive(Debug, Clone)]
+pub struct Histogram {
+    pub bucket_width: f64,
+    pub buckets: Vec<u64>,
+    pub overflow: u64,
+    pub summary: Summary,
+}
+
+impl Histogram {
+    pub fn new(bucket_width: f64, num_buckets: usize) -> Self {
+        assert!(bucket_width > 0.0 && num_buckets > 0);
+        Histogram {
+            bucket_width,
+            buckets: vec![0; num_buckets],
+            overflow: 0,
+            summary: Summary::new(),
+        }
+    }
+
+    pub fn add(&mut self, x: f64) {
+        self.summary.add(x);
+        let idx = (x / self.bucket_width) as usize;
+        if idx < self.buckets.len() {
+            self.buckets[idx] += 1;
+        } else {
+            self.overflow += 1;
+        }
+    }
+
+    pub fn total(&self) -> u64 {
+        self.summary.count
+    }
+
+    /// Value below which `q` (0..=1) of the samples fall (bucket upper edge).
+    pub fn quantile(&self, q: f64) -> f64 {
+        let target = (q.clamp(0.0, 1.0) * self.total() as f64) as u64;
+        let mut seen = 0;
+        for (i, &c) in self.buckets.iter().enumerate() {
+            seen += c;
+            if seen >= target {
+                return (i as f64 + 1.0) * self.bucket_width;
+            }
+        }
+        self.buckets.len() as f64 * self.bucket_width
+    }
+}
+
+/// Accumulates a quantity (e.g., bytes) into fixed time bins; emitted as the
+/// Figure-17 style traffic time-series CSV.
+#[derive(Debug, Clone)]
+pub struct TimeSeries {
+    pub bin: SimTime,
+    pub bins: Vec<f64>,
+    pub label: String,
+}
+
+impl TimeSeries {
+    pub fn new(label: impl Into<String>, bin: SimTime) -> Self {
+        assert!(!bin.is_zero());
+        TimeSeries {
+            bin,
+            bins: Vec::new(),
+            label: label.into(),
+        }
+    }
+
+    pub fn add(&mut self, t: SimTime, amount: f64) {
+        let idx = (t.as_ps() / self.bin.as_ps()) as usize;
+        if idx >= self.bins.len() {
+            self.bins.resize(idx + 1, 0.0);
+        }
+        self.bins[idx] += amount;
+    }
+
+    pub fn total(&self) -> f64 {
+        self.bins.iter().sum()
+    }
+
+    /// (bin_start_time, value) pairs.
+    pub fn points(&self) -> impl Iterator<Item = (SimTime, f64)> + '_ {
+        self.bins
+            .iter()
+            .enumerate()
+            .map(move |(i, &v)| (SimTime::ps(i as u64 * self.bin.as_ps()), v))
+    }
+}
+
+/// Byte counters for one simulated device, mirroring the categories of the
+/// paper's Figure 18 (DRAM access breakdown per sub-layer).
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
+pub struct DramCounters {
+    pub gemm_reads: u64,
+    pub gemm_writes: u64,
+    pub rs_reads: u64,
+    pub rs_writes: u64,
+    pub ag_reads: u64,
+    pub ag_writes: u64,
+}
+
+impl DramCounters {
+    pub fn total(&self) -> u64 {
+        self.gemm_reads
+            + self.gemm_writes
+            + self.rs_reads
+            + self.rs_writes
+            + self.ag_reads
+            + self.ag_writes
+    }
+
+    pub fn add(&mut self, other: &DramCounters) {
+        self.gemm_reads += other.gemm_reads;
+        self.gemm_writes += other.gemm_writes;
+        self.rs_reads += other.rs_reads;
+        self.rs_writes += other.rs_writes;
+        self.ag_reads += other.ag_reads;
+        self.ag_writes += other.ag_writes;
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn geomean_basics() {
+        assert!((geomean(&[2.0, 8.0]) - 4.0).abs() < 1e-12);
+        assert_eq!(geomean(&[]), 1.0);
+        assert!((geomean(&[3.0]) - 3.0).abs() < 1e-12);
+    }
+
+    #[test]
+    #[should_panic]
+    fn geomean_rejects_nonpositive() {
+        geomean(&[1.0, 0.0]);
+    }
+
+    #[test]
+    fn summary_tracks_extremes() {
+        let mut s = Summary::new();
+        for x in [3.0, 1.0, 2.0] {
+            s.add(x);
+        }
+        assert_eq!(s.count, 3);
+        assert_eq!(s.min, 1.0);
+        assert_eq!(s.max, 3.0);
+        assert!((s.mean() - 2.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn histogram_buckets_and_quantile() {
+        let mut h = Histogram::new(1.0, 10);
+        for x in 0..10 {
+            h.add(x as f64 + 0.5);
+        }
+        assert_eq!(h.total(), 10);
+        assert_eq!(h.overflow, 0);
+        assert!((h.quantile(0.5) - 5.0).abs() < 1e-9);
+        h.add(99.0);
+        assert_eq!(h.overflow, 1);
+    }
+
+    #[test]
+    fn timeseries_bins_accumulate() {
+        let mut ts = TimeSeries::new("reads", SimTime::us(1));
+        ts.add(SimTime::ns(100), 10.0);
+        ts.add(SimTime::ns(900), 5.0);
+        ts.add(SimTime::us(3), 7.0);
+        assert_eq!(ts.bins.len(), 4);
+        assert_eq!(ts.bins[0], 15.0);
+        assert_eq!(ts.bins[3], 7.0);
+        assert_eq!(ts.total(), 22.0);
+    }
+
+    #[test]
+    fn dram_counters_add() {
+        let mut a = DramCounters {
+            gemm_reads: 1,
+            ..Default::default()
+        };
+        let b = DramCounters {
+            rs_writes: 2,
+            ..Default::default()
+        };
+        a.add(&b);
+        assert_eq!(a.total(), 3);
+    }
+}

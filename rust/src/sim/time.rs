@@ -1,0 +1,228 @@
+//! Simulation time: picosecond-resolution, 64-bit.
+//!
+//! All hardware models in `t3::hw` exchange `SimTime` values. Picoseconds
+//! give headroom: `u64::MAX` ps ≈ 213 days of simulated time, far beyond any
+//! kernel we model (microseconds–milliseconds), while still resolving a
+//! single 1.4 GHz GPU cycle (~714 ps) and sub-cycle DRAM timing.
+
+use std::fmt;
+use std::iter::Sum;
+use std::ops::{Add, AddAssign, Div, Mul, Sub, SubAssign};
+
+/// A point in (or duration of) simulated time, in picoseconds.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Hash, Default)]
+pub struct SimTime(pub u64);
+
+pub const PS_PER_NS: u64 = 1_000;
+pub const PS_PER_US: u64 = 1_000_000;
+pub const PS_PER_MS: u64 = 1_000_000_000;
+pub const PS_PER_S: u64 = 1_000_000_000_000;
+
+impl SimTime {
+    pub const ZERO: SimTime = SimTime(0);
+    pub const MAX: SimTime = SimTime(u64::MAX);
+
+    #[inline]
+    pub fn ps(v: u64) -> Self {
+        SimTime(v)
+    }
+    #[inline]
+    pub fn ns(v: u64) -> Self {
+        SimTime(v * PS_PER_NS)
+    }
+    #[inline]
+    pub fn us(v: u64) -> Self {
+        SimTime(v * PS_PER_US)
+    }
+    #[inline]
+    pub fn ms(v: u64) -> Self {
+        SimTime(v * PS_PER_MS)
+    }
+
+    /// Duration of `n` cycles at frequency `ghz`.
+    #[inline]
+    pub fn cycles(n: u64, ghz: f64) -> Self {
+        SimTime((n as f64 * 1000.0 / ghz).round() as u64)
+    }
+
+    /// Time to move `bytes` at `gbps` GB/s (10^9 bytes per second).
+    #[inline]
+    pub fn transfer(bytes: u64, gbps: f64) -> Self {
+        debug_assert!(gbps > 0.0);
+        SimTime((bytes as f64 * 1000.0 / gbps).round() as u64)
+    }
+
+    /// From fractional seconds.
+    #[inline]
+    pub fn from_secs_f64(s: f64) -> Self {
+        debug_assert!(s >= 0.0);
+        SimTime((s * PS_PER_S as f64).round() as u64)
+    }
+
+    #[inline]
+    pub fn as_ps(self) -> u64 {
+        self.0
+    }
+    #[inline]
+    pub fn as_ns_f64(self) -> f64 {
+        self.0 as f64 / PS_PER_NS as f64
+    }
+    #[inline]
+    pub fn as_us_f64(self) -> f64 {
+        self.0 as f64 / PS_PER_US as f64
+    }
+    #[inline]
+    pub fn as_ms_f64(self) -> f64 {
+        self.0 as f64 / PS_PER_MS as f64
+    }
+    #[inline]
+    pub fn as_secs_f64(self) -> f64 {
+        self.0 as f64 / PS_PER_S as f64
+    }
+
+    #[inline]
+    pub fn saturating_sub(self, rhs: SimTime) -> SimTime {
+        SimTime(self.0.saturating_sub(rhs.0))
+    }
+
+    #[inline]
+    pub fn max(self, rhs: SimTime) -> SimTime {
+        SimTime(self.0.max(rhs.0))
+    }
+
+    #[inline]
+    pub fn min(self, rhs: SimTime) -> SimTime {
+        SimTime(self.0.min(rhs.0))
+    }
+
+    #[inline]
+    pub fn is_zero(self) -> bool {
+        self.0 == 0
+    }
+}
+
+impl Add for SimTime {
+    type Output = SimTime;
+    #[inline]
+    fn add(self, rhs: SimTime) -> SimTime {
+        SimTime(self.0 + rhs.0)
+    }
+}
+impl AddAssign for SimTime {
+    #[inline]
+    fn add_assign(&mut self, rhs: SimTime) {
+        self.0 += rhs.0;
+    }
+}
+impl Sub for SimTime {
+    type Output = SimTime;
+    #[inline]
+    fn sub(self, rhs: SimTime) -> SimTime {
+        debug_assert!(self.0 >= rhs.0, "SimTime underflow: {} - {}", self, rhs);
+        SimTime(self.0 - rhs.0)
+    }
+}
+impl SubAssign for SimTime {
+    #[inline]
+    fn sub_assign(&mut self, rhs: SimTime) {
+        debug_assert!(self.0 >= rhs.0);
+        self.0 -= rhs.0;
+    }
+}
+impl Mul<u64> for SimTime {
+    type Output = SimTime;
+    #[inline]
+    fn mul(self, rhs: u64) -> SimTime {
+        SimTime(self.0 * rhs)
+    }
+}
+impl Mul<f64> for SimTime {
+    type Output = SimTime;
+    #[inline]
+    fn mul(self, rhs: f64) -> SimTime {
+        debug_assert!(rhs >= 0.0);
+        SimTime((self.0 as f64 * rhs).round() as u64)
+    }
+}
+impl Div<u64> for SimTime {
+    type Output = SimTime;
+    #[inline]
+    fn div(self, rhs: u64) -> SimTime {
+        SimTime(self.0 / rhs)
+    }
+}
+impl Sum for SimTime {
+    fn sum<I: Iterator<Item = SimTime>>(iter: I) -> SimTime {
+        iter.fold(SimTime::ZERO, |a, b| a + b)
+    }
+}
+
+impl fmt::Display for SimTime {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        let ps = self.0;
+        if ps >= PS_PER_MS {
+            write!(f, "{:.3}ms", self.as_ms_f64())
+        } else if ps >= PS_PER_US {
+            write!(f, "{:.3}us", self.as_us_f64())
+        } else if ps >= PS_PER_NS {
+            write!(f, "{:.3}ns", self.as_ns_f64())
+        } else {
+            write!(f, "{}ps", ps)
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn conversions_round_trip() {
+        assert_eq!(SimTime::ns(1).as_ps(), 1_000);
+        assert_eq!(SimTime::us(1).as_ps(), 1_000_000);
+        assert_eq!(SimTime::ms(2).as_ms_f64(), 2.0);
+        assert_eq!(SimTime::from_secs_f64(1e-6), SimTime::us(1));
+    }
+
+    #[test]
+    fn cycle_math_at_gpu_clock() {
+        // 1 cycle @ 1.4 GHz = 714.28.. ps (rounded)
+        assert_eq!(SimTime::cycles(1, 1.4).as_ps(), 714);
+        assert_eq!(SimTime::cycles(1400, 1.4).as_ps(), 1_000_000); // 1 us
+    }
+
+    #[test]
+    fn transfer_math() {
+        // 150 GB/s, 150 bytes -> 1 ns
+        assert_eq!(SimTime::transfer(150, 150.0), SimTime::ns(1));
+        // 1 TB/s, 1 MB -> 1 us
+        assert_eq!(SimTime::transfer(1 << 20, 1000.0).as_ns_f64().round(), 1049.0);
+    }
+
+    #[test]
+    fn arithmetic_and_ordering() {
+        let a = SimTime::ns(5);
+        let b = SimTime::ns(3);
+        assert_eq!(a + b, SimTime::ns(8));
+        assert_eq!(a - b, SimTime::ns(2));
+        assert_eq!(a * 2, SimTime::ns(10));
+        assert_eq!(a / 5, SimTime::ns(1));
+        assert!(b < a);
+        assert_eq!(b.saturating_sub(a), SimTime::ZERO);
+        assert_eq!(a.max(b), a);
+        assert_eq!(a.min(b), b);
+    }
+
+    #[test]
+    fn display_picks_unit() {
+        assert_eq!(format!("{}", SimTime::ps(5)), "5ps");
+        assert_eq!(format!("{}", SimTime::ns(5)), "5.000ns");
+        assert_eq!(format!("{}", SimTime::ms(1)), "1.000ms");
+    }
+
+    #[test]
+    fn sum_over_iter() {
+        let total: SimTime = (1..=4u64).map(SimTime::ns).sum();
+        assert_eq!(total, SimTime::ns(10));
+    }
+}

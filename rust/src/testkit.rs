@@ -1,0 +1,104 @@
+//! Minimal property-testing helper (proptest substitute — the offline
+//! dependency closure has no proptest, so we roll a deterministic
+//! quickcheck-style loop over [`crate::sim::rng::Rng`]).
+//!
+//! Usage (`no_run`: doctest binaries miss the xla rpath in this image):
+//! ```no_run
+//! use t3::testkit::forall;
+//! forall(64, |rng| {
+//!     let n = rng.range(2, 17);
+//!     // ... generate inputs from rng, assert invariants ...
+//!     assert!(n >= 2);
+//! });
+//! ```
+//!
+//! Failures report the case seed so the exact input can be replayed with
+//! [`replay`]. No shrinking — cases are kept small by construction.
+
+use crate::sim::rng::Rng;
+
+/// Base seed; override with `T3_PROP_SEED` to explore other corners.
+fn base_seed() -> u64 {
+    std::env::var("T3_PROP_SEED")
+        .ok()
+        .and_then(|s| s.parse().ok())
+        .unwrap_or(0x7E57_CA5E)
+}
+
+/// Run `f` against `cases` deterministic random cases. Panics (re-raising
+/// the assertion) with the failing case seed in the message.
+pub fn forall(cases: u32, f: impl Fn(&mut Rng)) {
+    let base = base_seed();
+    for i in 0..cases {
+        let seed = base.wrapping_add(i as u64);
+        let mut rng = Rng::new(seed);
+        let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| f(&mut rng)));
+        if let Err(e) = result {
+            eprintln!(
+                "property failed on case {i} (replay with t3::testkit::replay({seed}, ..) \
+                 or T3_PROP_SEED={seed} with cases=1)"
+            );
+            std::panic::resume_unwind(e);
+        }
+    }
+}
+
+/// Re-run a single failing case by seed.
+pub fn replay(seed: u64, mut f: impl FnMut(&mut Rng)) {
+    let mut rng = Rng::new(seed);
+    f(&mut rng);
+}
+
+/// Generate a sorted, deduplicated vector of `n` values in `[lo, hi)` —
+/// a common shape for sizes/offsets.
+pub fn sorted_unique(rng: &mut Rng, n: usize, lo: u64, hi: u64) -> Vec<u64> {
+    let mut v: Vec<u64> = (0..n).map(|_| rng.range(lo, hi)).collect();
+    v.sort_unstable();
+    v.dedup();
+    v
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn forall_runs_all_cases() {
+        let mut count = 0;
+        // count via side table since f is Fn
+        let cells = std::sync::atomic::AtomicU32::new(0);
+        forall(32, |_rng| {
+            cells.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+        });
+        count += cells.load(std::sync::atomic::Ordering::Relaxed);
+        assert_eq!(count, 32);
+    }
+
+    #[test]
+    #[should_panic]
+    fn forall_propagates_failure() {
+        let calls = std::sync::atomic::AtomicU32::new(0);
+        forall(8, |_rng| {
+            let n = calls.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+            assert!(n < 5, "deterministic failure on the 6th case");
+        });
+    }
+
+    #[test]
+    fn replay_is_deterministic() {
+        let mut a = Vec::new();
+        replay(42, |rng| a.push(rng.next_u64()));
+        let mut b = Vec::new();
+        replay(42, |rng| b.push(rng.next_u64()));
+        assert_eq!(a, b);
+    }
+
+    #[test]
+    fn sorted_unique_invariants() {
+        forall(16, |rng| {
+            let v = sorted_unique(rng, 10, 5, 50);
+            assert!(v.windows(2).all(|w| w[0] < w[1]));
+            assert!(v.iter().all(|&x| (5..50).contains(&x)));
+        });
+    }
+}

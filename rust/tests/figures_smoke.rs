@@ -1,0 +1,160 @@
+//! Figure-harness smoke tests: every regeneration function runs and its
+//! headline numbers land in the paper's qualitative bands (DESIGN.md §5).
+//!
+//! These are the repo's "does the reproduction reproduce?" gate. Absolute
+//! numbers differ from the paper (our substrate is a transaction-level
+//! simulator, not Accel-Sim + MI210 measurements) but the *shape* — who
+//! wins, by roughly what factor, where the crossovers sit — must hold.
+
+use t3::config::SystemConfig;
+use t3::harness;
+
+fn sys() -> SystemConfig {
+    SystemConfig::table1()
+}
+
+#[test]
+fn fig14_rs_sim_tracks_alpha_beta_within_band() {
+    let t = harness::fig14(&sys());
+    // Recompute the per-size errors from the table cells.
+    for row in &t.rows {
+        let err: f64 = row[3].trim_end_matches('%').parse().unwrap();
+        assert!(err < 20.0, "size {} MB err {err}%", row[0]);
+    }
+    assert_eq!(t.rows.len(), 6);
+}
+
+#[test]
+fn fig15_16_speedups_in_paper_band() {
+    let g = harness::fig15_16(&sys());
+    // Paper: T3 1.20x geomean, T3-MCA 1.30x (max 1.47x), ideal 1.35x.
+    assert!(
+        (1.10..=1.45).contains(&g.t3_geomean),
+        "T3 geomean {}",
+        g.t3_geomean
+    );
+    assert!(
+        (1.15..=1.45).contains(&g.t3mca_geomean),
+        "T3-MCA geomean {}",
+        g.t3mca_geomean
+    );
+    assert!(
+        (1.30..=1.60).contains(&g.t3mca_max),
+        "T3-MCA max {}",
+        g.t3mca_max
+    );
+    assert!(
+        (1.15..=1.50).contains(&g.ideal_geomean),
+        "ideal geomean {}",
+        g.ideal_geomean
+    );
+    // MCA must not lose to plain T3 overall.
+    assert!(g.t3mca_geomean + 1e-9 >= g.t3_geomean * 0.99);
+    // 16 sub-layer cases: 2 models x 2 TP x 4 sub-layers.
+    assert_eq!(g.speedups.rows.len(), 16);
+}
+
+#[test]
+fn fig18_data_movement_reduction_in_band() {
+    let t = harness::fig18(&sys());
+    // Note 0 carries "data movement reduced X% geomean (max Y%)".
+    let note = &t.notes[0];
+    let nums: Vec<f64> = note
+        .split(|c: char| !c.is_ascii_digit() && c != '.')
+        .filter(|s| !s.is_empty())
+        .filter_map(|s| s.parse().ok())
+        .collect();
+    let geomean_red = nums[0];
+    // paper: 22% geomean, max 36% — accept a generous band.
+    assert!(
+        (10.0..=40.0).contains(&geomean_red),
+        "geomean reduction {geomean_red}% (note: {note})"
+    );
+}
+
+#[test]
+fn fig6_overlap_potential_ordering() {
+    let t = harness::fig6(&sys());
+    // Extract the three geomean notes: ideal > 64-16 > 72-8 (paper's
+    // ordering: 1.67x > 1.49x > 1.18x).
+    let get = |tag: &str| -> f64 {
+        let note = t.notes.iter().find(|n| n.contains(tag)).unwrap();
+        note.split_whitespace()
+            .last()
+            .unwrap()
+            .trim_end_matches('x')
+            .parse()
+            .unwrap()
+    };
+    let ideal = get("ideal(80-free)");
+    let s72_8 = get("72-8");
+    let s64_16 = get("64-16");
+    assert!(ideal > s64_16, "ideal {ideal} vs 64-16 {s64_16}");
+    assert!(s64_16 > s72_8, "64-16 {s64_16} vs 72-8 {s72_8}");
+    assert!(ideal > 1.3 && ideal < 2.0, "ideal geomean {ideal}");
+}
+
+#[test]
+fn fig19_end_to_end_bands() {
+    let t = harness::fig19(&sys());
+    // Every row's T3-MCA speedup must be >= 1.0 and <= 1.30.
+    for row in &t.rows {
+        let sp: f64 = row[5].trim_end_matches('x').parse().unwrap();
+        assert!(
+            (1.0..=1.30).contains(&sp),
+            "{} tp{} {}: {sp}x",
+            row[0],
+            row[1],
+            row[2]
+        );
+    }
+    // Training rows and prompt rows both present for 5 models.
+    assert_eq!(t.rows.len(), 2 * (2 + 2 + 1 + 1 + 1));
+}
+
+#[test]
+fn fig4_comm_fractions_sane() {
+    let t = harness::fig4(&sys());
+    for row in &t.rows {
+        let comm: f64 = row[6].trim_end_matches('%').parse().unwrap();
+        assert!(
+            (5.0..=60.0).contains(&comm),
+            "{} tp{} {}: comm {comm}%",
+            row[0],
+            row[1],
+            row[2]
+        );
+    }
+    // Futuristic models included (1T, 10T).
+    assert!(t.rows.iter().any(|r| r[0] == "1T"));
+    assert!(t.rows.iter().any(|r| r[0] == "10T"));
+}
+
+#[test]
+fn fig20_future_hw_directions() {
+    let t = harness::fig20();
+    // The FC-2 vs OP note encodes the paper's direction: FC gains, OP loses.
+    let note = &t.notes[0];
+    let nums: Vec<f64> = note
+        .split(|c: char| !c.is_ascii_digit() && c != '.')
+        .filter(|s| !s.is_empty())
+        .filter_map(|s| s.parse().ok())
+        .collect();
+    let (fc, op) = (nums[1], nums[2]);
+    assert!(fc > op, "FC-2 delta {fc} should exceed OP delta {op} ({note})");
+}
+
+#[test]
+fn fig17_gemm_slowdown_present() {
+    let dir = std::env::temp_dir().join("t3-fig17-test");
+    let t = harness::fig17(&sys(), &dir);
+    let slow: f64 = t.rows[2][1].trim_end_matches('x').parse().unwrap();
+    // Overlapped RS must slow the GEMM somewhat, but not catastrophically.
+    assert!(
+        (1.0..1.6).contains(&slow),
+        "GEMM slowdown under overlap: {slow}"
+    );
+    assert!(dir.join("fig17_traffic.csv").exists());
+    let csv = std::fs::read_to_string(dir.join("fig17_traffic.csv")).unwrap();
+    assert!(csv.lines().count() > 10, "trace too short");
+}

@@ -1,0 +1,212 @@
+//! PJRT runtime + coordinator integration (needs `make artifacts`; every
+//! test skips gracefully when artifacts are absent so `cargo test` works
+//! on a fresh checkout).
+
+use t3::coordinator::Coordinator;
+use t3::runtime::{Runtime, TensorF32};
+use t3::sim::rng::Rng;
+
+// python/compile/model.py constants.
+const TOKENS: usize = 256;
+const HIDDEN: usize = 512;
+const FFN_SLICE: usize = 512;
+const TP: usize = 4;
+
+fn artifacts() -> Option<std::path::PathBuf> {
+    let dir = Runtime::default_dir();
+    if Runtime::artifacts_available(&dir) {
+        Some(dir)
+    } else {
+        eprintln!("skipping: artifacts not built (run `make artifacts`)");
+        None
+    }
+}
+
+fn rand_vec(rng: &mut Rng, n: usize, s: f32) -> Vec<f32> {
+    (0..n).map(|_| rng.f32_range(-s, s)).collect()
+}
+
+#[test]
+fn manifest_lists_all_artifacts() {
+    let Some(dir) = artifacts() else { return };
+    let mut rt = Runtime::new(&dir).unwrap();
+    let names = rt.manifest().unwrap();
+    for expect in ["sliced_gemm", "mlp_fwd", "loss_grad", "mlp_bwd"] {
+        assert!(names.iter().any(|n| n == expect), "missing {expect}");
+    }
+    // all artifacts compile
+    for n in &names {
+        rt.load(n).unwrap();
+    }
+}
+
+#[test]
+fn sliced_gemm_matches_host_oracle() {
+    let Some(dir) = artifacts() else { return };
+    let mut rt = Runtime::new(&dir).unwrap();
+    let (m, k, n) = (256usize, 128usize, 512usize);
+    let mut rng = Rng::new(5);
+    let x = rand_vec(&mut rng, m * k, 1.0);
+    let w = rand_vec(&mut rng, k * n, 1.0);
+    let out = rt
+        .exec_f32(
+            "sliced_gemm",
+            &[TensorF32::new(x.clone(), &[m, k]), TensorF32::new(w.clone(), &[k, n])],
+        )
+        .unwrap();
+    assert_eq!(out.len(), 1);
+    assert_eq!(out[0].len(), m * n);
+    let mut max_err = 0.0f64;
+    for r in 0..m {
+        for c in 0..n {
+            let mut acc = 0.0f64;
+            for kk in 0..k {
+                acc += x[r * k + kk] as f64 * w[kk * n + c] as f64;
+            }
+            max_err = max_err.max((acc - out[0][r * n + c] as f64).abs());
+        }
+    }
+    assert!(max_err < 1e-3, "max err {max_err}");
+}
+
+#[test]
+fn mlp_fwd_bwd_shapes_and_grad_direction() {
+    let Some(dir) = artifacts() else { return };
+    let mut rt = Runtime::new(&dir).unwrap();
+    let mut rng = Rng::new(6);
+    let x = rand_vec(&mut rng, TOKENS * HIDDEN, 1.0);
+    let w1 = rand_vec(&mut rng, HIDDEN * FFN_SLICE, 0.05);
+    let w2 = rand_vec(&mut rng, FFN_SLICE * HIDDEN, 0.05);
+    let target = rand_vec(&mut rng, TOKENS * HIDDEN, 0.5);
+
+    let fwd = rt
+        .exec_f32(
+            "mlp_fwd",
+            &[
+                TensorF32::new(x.clone(), &[TOKENS, HIDDEN]),
+                TensorF32::new(w1.clone(), &[HIDDEN, FFN_SLICE]),
+                TensorF32::new(w2.clone(), &[FFN_SLICE, HIDDEN]),
+            ],
+        )
+        .unwrap();
+    assert_eq!(fwd[0].len(), TOKENS * HIDDEN); // y_partial
+    assert_eq!(fwd[1].len(), TOKENS * FFN_SLICE); // h_pre
+
+    let lg = rt
+        .exec_f32(
+            "loss_grad",
+            &[
+                TensorF32::new(fwd[0].clone(), &[TOKENS, HIDDEN]),
+                TensorF32::new(target.clone(), &[TOKENS, HIDDEN]),
+            ],
+        )
+        .unwrap();
+    assert_eq!(lg[0].len(), 1); // scalar loss
+    let loss0 = lg[0][0];
+    assert!(loss0.is_finite() && loss0 > 0.0);
+
+    // NB: mlp_bwd does not take w1s — the backward never reads it.
+    let bwd = rt
+        .exec_f32(
+            "mlp_bwd",
+            &[
+                TensorF32::new(x.clone(), &[TOKENS, HIDDEN]),
+                TensorF32::new(fwd[1].clone(), &[TOKENS, FFN_SLICE]),
+                TensorF32::new(w2.clone(), &[FFN_SLICE, HIDDEN]),
+                TensorF32::new(lg[1].clone(), &[TOKENS, HIDDEN]),
+            ],
+        )
+        .unwrap();
+    assert_eq!(bwd[0].len(), HIDDEN * FFN_SLICE); // dW1
+    assert_eq!(bwd[1].len(), FFN_SLICE * HIDDEN); // dW2
+
+    // One SGD step along the gradients must reduce the loss.
+    let lr = 0.05f32;
+    let w1b: Vec<f32> = w1.iter().zip(&bwd[0]).map(|(w, g)| w - lr * g).collect();
+    let w2b: Vec<f32> = w2.iter().zip(&bwd[1]).map(|(w, g)| w - lr * g).collect();
+    let fwd2 = rt
+        .exec_f32(
+            "mlp_fwd",
+            &[
+                TensorF32::new(x, &[TOKENS, HIDDEN]),
+                TensorF32::new(w1b, &[HIDDEN, FFN_SLICE]),
+                TensorF32::new(w2b, &[FFN_SLICE, HIDDEN]),
+            ],
+        )
+        .unwrap();
+    let lg2 = rt
+        .exec_f32(
+            "loss_grad",
+            &[
+                TensorF32::new(fwd2[0].clone(), &[TOKENS, HIDDEN]),
+                TensorF32::new(target, &[TOKENS, HIDDEN]),
+            ],
+        )
+        .unwrap();
+    assert!(
+        lg2[0][0] < loss0,
+        "gradient step increased loss: {} -> {}",
+        loss0,
+        lg2[0][0]
+    );
+}
+
+#[test]
+fn coordinator_tp_partials_reduce_to_full() {
+    let Some(dir) = artifacts() else { return };
+    let mut coord = Coordinator::new(TP, dir).unwrap();
+    assert_eq!(coord.devices(), TP);
+    let mut rng = Rng::new(8);
+    let x = rand_vec(&mut rng, TOKENS * HIDDEN, 1.0);
+    // Full weights, then slice them per device.
+    let w1_full = rand_vec(&mut rng, HIDDEN * FFN_SLICE * TP, 0.05);
+    let w2_full = rand_vec(&mut rng, FFN_SLICE * TP * HIDDEN, 0.05);
+    let ffn = FFN_SLICE * TP;
+    let mut inputs = Vec::new();
+    for d in 0..TP {
+        // w1 slice: columns d*FFN_SLICE.. of [HIDDEN, ffn]
+        let mut w1s = vec![0.0f32; HIDDEN * FFN_SLICE];
+        for r in 0..HIDDEN {
+            for c in 0..FFN_SLICE {
+                w1s[r * FFN_SLICE + c] = w1_full[r * ffn + d * FFN_SLICE + c];
+            }
+        }
+        // w2 slice: rows d*FFN_SLICE.. of [ffn, HIDDEN]
+        let w2s = w2_full[d * FFN_SLICE * HIDDEN..(d + 1) * FFN_SLICE * HIDDEN].to_vec();
+        inputs.push(vec![
+            TensorF32::new(x.clone(), &[TOKENS, HIDDEN]),
+            TensorF32::new(w1s, &[HIDDEN, FFN_SLICE]),
+            TensorF32::new(w2s, &[FFN_SLICE, HIDDEN]),
+        ]);
+    }
+    let outs = coord.exec_all("mlp_fwd", inputs).unwrap();
+    let partials: Vec<Vec<f32>> = outs.into_iter().map(|mut o| o.swap_remove(0)).collect();
+    let y = coord.all_reduce(partials);
+
+    // Host oracle: full unsliced MLP.
+    let gelu = |v: f32| {
+        let c = (2.0f32 / std::f32::consts::PI).sqrt();
+        0.5 * v * (1.0 + (c * (v + 0.044715 * v * v * v)).tanh())
+    };
+    let mut h = vec![0.0f32; TOKENS * ffn];
+    for r in 0..TOKENS {
+        for c in 0..ffn {
+            let mut acc = 0.0f32;
+            for k in 0..HIDDEN {
+                acc += x[r * HIDDEN + k] * w1_full[k * ffn + c];
+            }
+            h[r * ffn + c] = gelu(acc);
+        }
+    }
+    let mut max_err = 0.0f32;
+    for r in 0..TOKENS {
+        for c in 0..HIDDEN {
+            let mut acc = 0.0f32;
+            for k in 0..ffn {
+                acc += h[r * ffn + k] * w2_full[k * HIDDEN + c];
+            }
+            max_err = max_err.max((acc - y[r * HIDDEN + c]).abs());
+        }
+    }
+    assert!(max_err < 5e-3, "TP forward mismatch: {max_err}");
+}

@@ -1,0 +1,274 @@
+//! Property tests over the simulator and T3 mechanisms (testkit-based:
+//! deterministic randomized cases, replayable by seed).
+
+use t3::addrspace::{ChunkMap, DmaTable, OutputMap};
+use t3::config::{ArbPolicy, DType, SystemConfig};
+use t3::engine::collective_run::{run_ag_baseline, run_rs_baseline, run_rs_nmc};
+use t3::engine::fused::{run_fused_gemm_rs, FusedOpts};
+use t3::engine::gemm_run::run_gemm;
+use t3::gemm::traffic::WriteMode;
+use t3::gemm::{ChunkPlan, GemmShape, StagePlan, Tiling};
+use t3::sim::time::SimTime;
+use t3::testkit::forall;
+use t3::tracker::{Tracker, UpdateOutcome, WfKey};
+
+fn sys() -> SystemConfig {
+    SystemConfig::table1()
+}
+
+fn random_plan(rng: &mut t3::sim::rng::Rng) -> StagePlan {
+    let m = 128 * rng.range(2, 40);
+    let n = 128 * rng.range(2, 24);
+    let k = 64 * rng.range(1, 32);
+    StagePlan::new(GemmShape::new(m, n, k, DType::F16), Tiling::default(), &sys().gpu)
+}
+
+#[test]
+fn prop_chunk_plans_partition_and_stagger() {
+    forall(48, |rng| {
+        let plan = random_plan(rng);
+        let choices: Vec<u64> = [2u64, 3, 4, 8, 16]
+            .into_iter()
+            .filter(|&n| n <= plan.total_wgs)
+            .collect();
+        let n = *rng.choose(&choices);
+        let plans: Vec<ChunkPlan> = (0..n).map(|d| ChunkPlan::new(&plan, n, d)).collect();
+        for (d, cp) in plans.iter().enumerate() {
+            // chunk_order is a permutation ending at the device's own chunk
+            let mut sorted = cp.chunk_order.clone();
+            sorted.sort_unstable();
+            assert_eq!(sorted, (0..n).collect::<Vec<_>>());
+            assert_eq!(*cp.chunk_order.last().unwrap(), d as u64);
+            // full coverage
+            assert_eq!(cp.chunk_wgs.iter().sum::<u64>(), plan.total_wgs);
+        }
+        // ring alignment: device d's position i == upstream's position i-1
+        for d in 0..n as usize {
+            let up = (d + 1) % n as usize;
+            for i in 1..n as usize {
+                assert_eq!(plans[d].chunk_order[i], plans[up].chunk_order[i - 1]);
+            }
+        }
+    });
+}
+
+#[test]
+fn prop_scenario_ordering() {
+    // For random shapes/devices: ideal <= fused(T3-MCA) <= sequential
+    // (with small tolerance for NMC advantages on the fused side).
+    forall(10, |rng| {
+        let plan = random_plan(rng);
+        let devices = *rng.choose(&[2u64, 4, 8]);
+        let s = sys();
+        let g = run_gemm(&s, &plan, s.gpu.cu_count, WriteMode::ThroughLlc);
+        let rs = run_rs_baseline(&s, plan.shape.out_bytes(), devices, s.gpu.cu_count);
+        let seq = g.time + rs.time;
+        let ideal = g.time.max(rs.time);
+        let fused = run_fused_gemm_rs(
+            &s,
+            &plan,
+            devices,
+            &FusedOpts {
+                policy: ArbPolicy::T3Mca,
+                trace_bin: None,
+            },
+        );
+        assert!(
+            fused.total <= seq,
+            "fused {} > sequential {} (m={} n={} k={} dev={})",
+            fused.total,
+            seq,
+            plan.shape.m,
+            plan.shape.n,
+            plan.shape.k,
+            devices
+        );
+        assert!(
+            fused.total.as_ps() as f64 >= ideal.as_ps() as f64 * 0.85,
+            "fused {} beat ideal {} by too much",
+            fused.total,
+            ideal
+        );
+    });
+}
+
+#[test]
+fn prop_tracker_never_early_never_late() {
+    forall(32, |rng| {
+        let s = sys();
+        let mut tr = Tracker::new(s.tracker.clone());
+        let wgs = rng.range(1, 64) as u32;
+        let wfs = rng.range(1, 5) as u8;
+        let thr = (rng.range(1, 65) * 64) as u32;
+        let mut pending: Vec<(WfKey, u32)> = (0..wgs)
+            .flat_map(|wg| (0..wfs).map(move |wf| (WfKey { wg_id: wg, wf_id: wf }, thr)))
+            .collect();
+        let mut completed = 0usize;
+        let total = pending.len();
+        while completed < total {
+            let i = rng.index(pending.len());
+            let (key, left) = pending[i];
+            if left == 0 {
+                pending.swap_remove(i);
+                continue;
+            }
+            let step = (rng.range(1, 512) as u32).min(left);
+            let out = tr.on_update(key, 0, step, thr);
+            let left = left - step;
+            pending[i] = (key, left);
+            match out {
+                UpdateOutcome::WfComplete => {
+                    assert_eq!(left, 0, "tracker fired early");
+                    completed += 1;
+                    pending.swap_remove(i);
+                }
+                UpdateOutcome::Pending => {
+                    assert!(left > 0, "tracker fired late (missed threshold)");
+                }
+            }
+        }
+        assert!(tr.is_empty());
+    });
+}
+
+#[test]
+fn prop_functional_rs_ag_equals_allreduce() {
+    forall(32, |rng| {
+        let n = rng.range(2, 9) as usize;
+        let len = rng.range(8, 600) as usize;
+        let bufs0: Vec<Vec<f32>> = (0..n)
+            .map(|_| (0..len).map(|_| rng.f32_range(-2.0, 2.0)).collect())
+            .collect();
+        let want: Vec<f32> = (0..len).map(|i| bufs0.iter().map(|b| b[i]).sum()).collect();
+        let mut bufs = bufs0.clone();
+        t3::collectives::functional::ring_all_reduce(&mut bufs);
+        for b in &bufs {
+            for (got, want) in b.iter().zip(&want) {
+                assert!((got - want).abs() <= 1e-4 * (1.0 + want.abs()));
+            }
+        }
+        // all devices bitwise identical after AG
+        for b in &bufs[1..] {
+            assert_eq!(b, &bufs[0]);
+        }
+    });
+}
+
+#[test]
+fn prop_collective_times_monotone_in_size() {
+    forall(12, |rng| {
+        let s = sys();
+        let n = *rng.choose(&[4u64, 8]);
+        let a = (rng.range(8, 64) << 20) / n * n;
+        let b = a * 2;
+        for f in [run_rs_baseline, run_ag_baseline] {
+            let ta = f(&s, a, n, 80).time;
+            let tb = f(&s, b, n, 80).time;
+            assert!(tb > ta, "time not monotone in size");
+        }
+        let ta = run_rs_nmc(&s, a, n).time;
+        let tb = run_rs_nmc(&s, b, n).time;
+        assert!(tb > ta);
+    });
+}
+
+#[test]
+fn prop_sim_deterministic() {
+    forall(6, |rng| {
+        let plan = random_plan(rng);
+        let devices = *rng.choose(&[4u64, 8]);
+        let s = sys();
+        let opts = FusedOpts {
+            policy: ArbPolicy::T3Mca,
+            trace_bin: None,
+        };
+        let a = run_fused_gemm_rs(&s, &plan, devices, &opts);
+        let b = run_fused_gemm_rs(&s, &plan, devices, &opts);
+        assert_eq!(a.total, b.total);
+        assert_eq!(a.gemm_time, b.gemm_time);
+        assert_eq!(a.counters, b.counters);
+        assert_eq!(a.tracker_done, b.tracker_done);
+    });
+}
+
+#[test]
+fn prop_output_maps_consistent() {
+    forall(32, |rng| {
+        let plan = random_plan(rng);
+        let n = *rng.choose(&[2u64, 3, 4, 8, 16]);
+        let d = rng.range(0, n);
+        let cp = ChunkPlan::new(&plan, n, d);
+        let rs = OutputMap::ring_reduce_scatter(&cp, d);
+        // exactly one Remote, one Local, n-2 Dma
+        let counts = |m: &OutputMap, f: fn(&ChunkMap) -> bool| {
+            m.by_position.iter().filter(|c| f(c)).count()
+        };
+        assert_eq!(counts(&rs, |c| matches!(c, ChunkMap::Remote { .. })), 1);
+        assert_eq!(counts(&rs, |c| matches!(c, ChunkMap::Local)), 1);
+        assert_eq!(counts(&rs, |c| matches!(c, ChunkMap::Dma { .. })), n as usize - 2);
+        // DMA table bytes conserve the non-first, non-last chunks
+        let table = DmaTable::program(&rs, &cp);
+        let dma_bytes: u64 = table.entries.iter().map(|e| e.bytes).sum();
+        let expect: u64 = (1..n as usize - 1)
+            .map(|p| cp.chunk_bytes[cp.chunk_order[p] as usize])
+            .sum();
+        assert_eq!(dma_bytes, expect);
+        // destinations are always the downstream neighbor
+        for e in &table.entries {
+            assert_eq!(e.dst_device, (d + n - 1) % n);
+        }
+    });
+}
+
+#[test]
+fn prop_gemm_time_monotone_in_work() {
+    forall(10, |rng| {
+        let s = sys();
+        let m = 128 * rng.range(4, 20);
+        let n = 128 * rng.range(4, 20);
+        let k = 64 * rng.range(2, 16);
+        let small = StagePlan::new(GemmShape::new(m, n, k, DType::F16), Tiling::default(), &s.gpu);
+        let big = StagePlan::new(
+            GemmShape::new(m, n, k * 2, DType::F16),
+            Tiling::default(),
+            &s.gpu,
+        );
+        let ts = run_gemm(&s, &small, 80, WriteMode::BypassLlc).time;
+        let tb = run_gemm(&s, &big, 80, WriteMode::BypassLlc).time;
+        assert!(tb > ts);
+    });
+}
+
+#[test]
+fn prop_fused_times_bounded_by_components() {
+    // total >= gemm_time and total >= analytic RS lower bound
+    forall(8, |rng| {
+        let s = sys();
+        let plan = random_plan(rng);
+        let devices = *rng.choose(&[4u64, 8]);
+        let fused = run_fused_gemm_rs(
+            &s,
+            &plan,
+            devices,
+            &FusedOpts {
+                policy: ArbPolicy::T3Mca,
+                trace_bin: None,
+            },
+        );
+        assert!(fused.total >= fused.gemm_time);
+        let rs_lb = t3::collectives::analytic::ring_reduce_scatter(
+            &s.link,
+            plan.shape.out_bytes(),
+            devices,
+        );
+        // steady-state sends can't beat the wire: allow the first chunk
+        // (computed while nothing is sent) as slack.
+        let slack = SimTime::transfer(plan.shape.out_bytes() / devices, s.link.per_dir_bw_gbps);
+        assert!(
+            fused.total + slack >= rs_lb,
+            "fused {} below RS wire bound {}",
+            fused.total,
+            rs_lb
+        );
+    });
+}
