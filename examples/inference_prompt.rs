@@ -26,8 +26,12 @@ const FFN_SLICE: usize = 512;
 const TP: usize = 4;
 const NUM_REQUESTS: u64 = 64;
 
-fn main() -> anyhow::Result<()> {
+fn main() -> t3::error::Result<()> {
     println!("== inference_prompt: batched TP prompt serving ==");
+    if !Runtime::pjrt_enabled() {
+        eprintln!("built without the `pjrt` feature — rebuild with `--features pjrt`");
+        std::process::exit(2);
+    }
     let dir = Runtime::default_dir();
     if !Runtime::artifacts_available(&dir) {
         eprintln!("artifacts missing — run `make artifacts` first");
@@ -132,7 +136,7 @@ fn serve(
     w2: &[f32],
     batch: &t3::coordinator::batcher::Batch,
     exec_wall: &mut std::time::Duration,
-) -> anyhow::Result<()> {
+) -> t3::error::Result<()> {
     // Pack the batch into the fixed [TOKENS, HIDDEN] activation (padding
     // semantics: unused rows are zero).
     let mut x = vec![0.0f32; TOKENS * HIDDEN];
@@ -164,6 +168,6 @@ fn serve(
     let partials: Vec<Vec<f32>> = outs.into_iter().map(|mut o| o.swap_remove(0)).collect();
     let y = coord.all_reduce(partials);
     *exec_wall += t0.elapsed();
-    anyhow::ensure!(y.iter().all(|v| v.is_finite()), "non-finite activation");
+    t3::ensure!(y.iter().all(|v| v.is_finite()), "non-finite activation");
     Ok(())
 }

@@ -17,12 +17,12 @@ use t3::models::{by_name, SubLayer};
 use t3::runtime::{Runtime, TensorF32};
 use t3::sim::rng::Rng;
 
-fn main() -> anyhow::Result<()> {
+fn main() -> t3::error::Result<()> {
     println!("== T3 quickstart ==\n");
 
     // ---------------- numeric path ----------------
     let dir = Runtime::default_dir();
-    if Runtime::artifacts_available(&dir) {
+    if Runtime::pjrt_enabled() && Runtime::artifacts_available(&dir) {
         let tp = 4usize;
         let (m, k, n) = (256usize, 128usize, 512usize);
         let mut coord = Coordinator::new(tp, dir)?;
@@ -69,7 +69,10 @@ fn main() -> anyhow::Result<()> {
         );
         assert!(max_err < 1e-3);
     } else {
-        println!("numeric: skipped (run `make artifacts` to enable the PJRT path)");
+        println!(
+            "numeric: skipped (build with `--features pjrt` and run `make artifacts` \
+             to enable the PJRT path)"
+        );
     }
 
     // ---------------- timing path ----------------

@@ -51,8 +51,12 @@ fn axpy(w: &mut [f32], g: &[f32], lr: f32) {
     }
 }
 
-fn main() -> anyhow::Result<()> {
+fn main() -> t3::error::Result<()> {
     println!("== train_e2e: TP={TP} MLP through Pallas->HLO->PJRT + Rust ring collectives ==");
+    if !Runtime::pjrt_enabled() {
+        eprintln!("built without the `pjrt` feature — rebuild with `--features pjrt`");
+        std::process::exit(2);
+    }
     let dir = Runtime::default_dir();
     if !Runtime::artifacts_available(&dir) {
         eprintln!("artifacts missing — run `make artifacts` first");

@@ -1,0 +1,43 @@
+//! Experiment-executor throughput: the full Figure-15/16 grid (2 models x
+//! paper TPs x 4 sub-layers x 5 scenarios = 80 cells) run single-threaded
+//! vs on the work-stealing pool. The parallel wall-clock is what `t3
+//! figure 15` and the grid figures actually pay.
+mod common;
+
+use std::time::Instant;
+
+use t3::config::SystemConfig;
+use t3::experiment::{executor, paper_scenarios, ExperimentSpec};
+
+fn grid(sys: &SystemConfig, threads: usize) -> (t3::experiment::ResultSet, f64) {
+    let t0 = Instant::now();
+    let rs = ExperimentSpec::new("fig15_16_grid")
+        .system(sys.clone())
+        .models(&["Mega-GPT-2", "T-NLG"])
+        .scenarios(paper_scenarios())
+        .threads(threads)
+        .run();
+    (rs, t0.elapsed().as_secs_f64())
+}
+
+fn main() {
+    let t0 = Instant::now();
+    let sys = SystemConfig::table1();
+    let par_threads = executor::default_threads();
+
+    let (serial, t_serial) = grid(&sys, 1);
+    let (parallel, t_par) = grid(&sys, par_threads);
+    assert_eq!(serial, parallel, "executor must be deterministic");
+
+    println!(
+        "experiment_grid: {} cells | serial {t_serial:.2}s | {par_threads} threads {t_par:.2}s | speedup {:.2}x",
+        serial.cells.len(),
+        t_serial / t_par
+    );
+    let table = parallel.table(
+        "experiment_grid",
+        "Figure-15/16 grid via the experiment API",
+        Some("Sequential"),
+    );
+    common::emit(vec![table], t0);
+}

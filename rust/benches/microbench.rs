@@ -73,7 +73,7 @@ fn bench_fused_run() {
     let plan = StagePlan::new(shape, Tiling::default(), &sys.gpu);
     let opts = FusedOpts {
         policy: ArbPolicy::T3Mca,
-        trace_bin: None,
+        ..FusedOpts::default()
     };
     // warmup + measure
     let _ = run_fused_gemm_rs(&sys, &plan, 8, &opts);

@@ -247,6 +247,20 @@ impl SystemConfig {
         c
     }
 
+    /// Stable digest of every parameter, for caching keyed on *what the
+    /// config says* rather than what it is called: sweeps that mutate a
+    /// field without renaming the config (e.g. the MCA-threshold ablation)
+    /// must not collide with the original.
+    pub fn fingerprint(&self) -> u64 {
+        use std::hash::{Hash, Hasher};
+        let mut h = std::collections::hash_map::DefaultHasher::new();
+        // Debug covers every field (all are Debug, floats included with
+        // full precision); hashing the rendering avoids a hand-written
+        // field list going stale as knobs are added.
+        format!("{self:?}").hash(&mut h);
+        h.finish()
+    }
+
     /// Human-readable dump used by `t3 config --show` (Table 1 analog).
     pub fn describe(&self) -> String {
         format!(
@@ -341,6 +355,20 @@ mod tests {
         let t = SystemConfig::table1().tracker;
         let kb = t.size_bytes() / 1024;
         assert!((10..=20).contains(&kb), "tracker {kb} KB");
+    }
+
+    #[test]
+    fn fingerprint_tracks_parameters_not_name() {
+        let a = SystemConfig::table1();
+        assert_eq!(a.fingerprint(), SystemConfig::table1().fingerprint());
+        // Mutating a knob without renaming must change the fingerprint
+        // (the old name-keyed cache returned stale results here).
+        let mut b = SystemConfig::table1();
+        b.mca.occupancy_thresholds = [2; 4];
+        assert_ne!(a.fingerprint(), b.fingerprint());
+        let mut c = SystemConfig::table1();
+        c.name = "renamed".to_string();
+        assert_ne!(a.fingerprint(), c.fingerprint());
     }
 
     #[test]

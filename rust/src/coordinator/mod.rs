@@ -20,7 +20,7 @@ pub mod batcher;
 use std::sync::mpsc;
 use std::thread::JoinHandle;
 
-use anyhow::{anyhow, Context, Result};
+use crate::error::{Context, Error, Result};
 
 use crate::collectives::functional::{ring_all_gather, ring_reduce_scatter};
 use crate::runtime::{Runtime, TensorF32};
@@ -108,14 +108,14 @@ impl Coordinator {
                     name: name.to_string(),
                     inputs,
                 })
-                .map_err(|_| anyhow!("worker died"))?;
+                .map_err(|_| Error::msg("worker died"))?;
         }
         let mut out = Vec::with_capacity(self.workers.len());
         for (d, w) in self.workers.iter().enumerate() {
             let r = w
                 .rx
                 .recv()
-                .map_err(|_| anyhow!("worker {d} hung up"))?
+                .map_err(|_| Error::msg(format!("worker {d} hung up")))?
                 .with_context(|| format!("device {d} executing {name}"))?;
             out.push(r);
         }

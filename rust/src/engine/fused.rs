@@ -56,6 +56,11 @@ pub struct FusedResult {
 #[derive(Debug, Clone)]
 pub struct FusedOpts {
     pub policy: ArbPolicy,
+    /// Producer write mode for the GEMM's local (non-remote) stores. T3's
+    /// default is the uncached NMC bypass (§4.3); `ThroughLlc` models a
+    /// fused producer whose writes still allocate, isolating the overlap
+    /// benefit from the cache benefit.
+    pub write_mode: WriteMode,
     /// Record a Figure-17 traffic trace with this bin size.
     pub trace_bin: Option<SimTime>,
 }
@@ -64,6 +69,7 @@ impl Default for FusedOpts {
     fn default() -> Self {
         FusedOpts {
             policy: ArbPolicy::T3Mca,
+            write_mode: WriteMode::BypassLlc,
             trace_bin: None,
         }
     }
@@ -107,7 +113,7 @@ pub fn run_fused_gemm_rs(
     let mut dma = DmaTable::program(&map, &chunks);
     let n = devices as usize;
     let segments = stage_segments(plan, &chunks);
-    let traffic = gemm_traffic(plan, &sys.mem, WriteMode::BypassLlc);
+    let traffic = gemm_traffic(plan, &sys.mem, opts.write_mode);
 
     let mut r = Runner::new(sys, opts.policy);
     if let Some(bin) = opts.trace_bin {
@@ -116,7 +122,7 @@ pub fn run_fused_gemm_rs(
     // MCA threshold class from the producer's memory intensity (§6.1.3).
     let machine_balance = sys.mem.total_bw_gbps * 1e9 / sys.gpu.sustained_gemm_flops(plan.shape.dtype);
     let class = intensity_class(
-        gemm_bytes_per_flop(plan, &sys.mem, WriteMode::BypassLlc),
+        gemm_bytes_per_flop(plan, &sys.mem, opts.write_mode),
         machine_balance,
     );
     r.mem.set_intensity_class(class);
@@ -402,7 +408,7 @@ mod tests {
     fn opts(policy: ArbPolicy) -> FusedOpts {
         FusedOpts {
             policy,
-            trace_bin: None,
+            ..FusedOpts::default()
         }
     }
 

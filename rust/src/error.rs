@@ -1,0 +1,132 @@
+//! Minimal std-only error plumbing.
+//!
+//! The offline build keeps the dependency closure empty, so the few
+//! fallible paths (PJRT runtime, coordinator, CLI) use this small
+//! anyhow-like surface: a message-chain [`Error`], a [`Context`] extension
+//! trait, and the [`bail!`]/[`ensure!`] macros.
+
+use std::fmt;
+
+/// A message with an optional source chain.
+#[derive(Debug)]
+pub struct Error {
+    msg: String,
+    source: Option<Box<dyn std::error::Error + Send + Sync + 'static>>,
+}
+
+impl Error {
+    pub fn msg(msg: impl Into<String>) -> Self {
+        Error {
+            msg: msg.into(),
+            source: None,
+        }
+    }
+
+    pub fn wrap(
+        msg: impl Into<String>,
+        source: impl std::error::Error + Send + Sync + 'static,
+    ) -> Self {
+        Error {
+            msg: msg.into(),
+            source: Some(Box::new(source)),
+        }
+    }
+}
+
+impl fmt::Display for Error {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        write!(f, "{}", self.msg)?;
+        let mut src = self.source.as_deref().map(|s| s as &dyn std::error::Error);
+        while let Some(s) = src {
+            write!(f, ": {s}")?;
+            src = s.source();
+        }
+        Ok(())
+    }
+}
+
+impl std::error::Error for Error {}
+
+impl From<std::io::Error> for Error {
+    fn from(e: std::io::Error) -> Self {
+        Error::wrap("io error", e)
+    }
+}
+
+pub type Result<T> = std::result::Result<T, Error>;
+
+/// `anyhow::Context`-style helpers for results and options.
+pub trait Context<T> {
+    fn context(self, msg: impl Into<String>) -> Result<T>;
+    fn with_context<F: FnOnce() -> String>(self, f: F) -> Result<T>;
+}
+
+impl<T, E: std::error::Error + Send + Sync + 'static> Context<T> for std::result::Result<T, E> {
+    fn context(self, msg: impl Into<String>) -> Result<T> {
+        self.map_err(|e| Error::wrap(msg, e))
+    }
+
+    fn with_context<F: FnOnce() -> String>(self, f: F) -> Result<T> {
+        self.map_err(|e| Error::wrap(f(), e))
+    }
+}
+
+impl<T> Context<T> for Option<T> {
+    fn context(self, msg: impl Into<String>) -> Result<T> {
+        self.ok_or_else(|| Error::msg(msg))
+    }
+
+    fn with_context<F: FnOnce() -> String>(self, f: F) -> Result<T> {
+        self.ok_or_else(|| Error::msg(f()))
+    }
+}
+
+/// Return early with an [`Error`] built from a format string.
+#[macro_export]
+macro_rules! bail {
+    ($($arg:tt)*) => {
+        return Err($crate::error::Error::msg(format!($($arg)*)))
+    };
+}
+
+/// Bail unless a condition holds.
+#[macro_export]
+macro_rules! ensure {
+    ($cond:expr, $($arg:tt)*) => {
+        if !$cond {
+            $crate::bail!($($arg)*);
+        }
+    };
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn fails() -> Result<()> {
+        let io: std::io::Result<()> = Err(std::io::Error::new(
+            std::io::ErrorKind::NotFound,
+            "missing",
+        ));
+        io.context("reading manifest")
+    }
+
+    #[test]
+    fn context_chains_into_display() {
+        let e = fails().unwrap_err();
+        let s = e.to_string();
+        assert!(s.contains("reading manifest") && s.contains("missing"), "{s}");
+    }
+
+    #[test]
+    fn option_context_and_macros() {
+        let none: Option<u32> = None;
+        assert!(none.context("empty").is_err());
+        fn check(x: u32) -> Result<u32> {
+            ensure!(x > 2, "x too small: {x}");
+            Ok(x)
+        }
+        assert!(check(1).is_err());
+        assert_eq!(check(3).unwrap(), 3);
+    }
+}

@@ -1,32 +1,31 @@
-//! Experiment configurations and runners (§5.3).
+//! Legacy enum-based runners (§5.3), now thin wrappers over the
+//! [`crate::experiment`] API.
 //!
-//! The five configurations the paper evaluates:
-//! * `Sequential`          — sliced GEMM, then ring-RS kernel, then ring-AG
-//!   (modern systems' behavior);
-//! * `T3`                  — fused GEMM-RS with the *default* (round-robin)
-//!   memory-controller arbitration, then sequential AG;
-//! * `T3Mca`               — T3 plus the §4.5 arbitration policy;
-//! * `IdealOverlap`        — max(GEMM, RS) with no contention or dependency
-//!   constraints (upper bound for overlap);
-//! * `IdealRsNmc`          — max(GEMM, RS+NMC): perfect overlap plus the
-//!   NMC-accelerated reduce-scatter.
+//! The five configurations the paper evaluates map to registry presets of
+//! the experiment subsystem:
+//! * `Sequential`          — [`ScenarioSpec::sequential`]: sliced GEMM,
+//!   then ring-RS kernel, then ring-AG (modern systems' behavior);
+//! * `T3`                  — [`ScenarioSpec::t3`]: fused GEMM-RS with the
+//!   *default* (round-robin) memory-controller arbitration;
+//! * `T3Mca`               — [`ScenarioSpec::t3_mca`]: T3 plus the §4.5
+//!   arbitration policy;
+//! * `IdealOverlap`        — [`ScenarioSpec::ideal_overlap`]: max(GEMM, RS)
+//!   with no contention or dependency constraints;
+//! * `IdealRsNmc`          — [`ScenarioSpec::ideal_rs_nmc`]: perfect
+//!   overlap plus the NMC-accelerated reduce-scatter.
 //!
-//! `run_sublayer` produces the Figure-15/16/18 data for one
-//! (model, TP, sub-layer, scenario); `end_to_end` composes the analytic
-//! non-sliced breakdown with simulated sub-layer times into the Figure-19
-//! iteration speedups.
+//! New configurations should be composed as [`ScenarioSpec`]s and run
+//! through [`crate::experiment::ExperimentSpec`] — this module exists for
+//! callers that want the paper's fixed five by name, plus the Figure-19
+//! end-to-end composition against a process-wide result cache.
 
 use std::collections::HashMap;
 use std::sync::Mutex;
 
-use crate::config::{ArbPolicy, SystemConfig};
-use crate::engine::collective_run::{run_ag_baseline, run_rs_baseline, run_rs_nmc};
-use crate::engine::fused::{run_fused_gemm_rs, FusedOpts};
-use crate::engine::gemm_run::run_gemm;
-use crate::gemm::traffic::WriteMode;
-use crate::gemm::{StagePlan, Tiling};
+use crate::config::SystemConfig;
+use crate::experiment::{Measurement, ScenarioSpec};
 use crate::models::breakdown::{other_time, Phase};
-use crate::models::{sublayer_gemm, ModelCfg, SubLayer};
+use crate::models::{ModelCfg, SubLayer};
 use crate::sim::stats::DramCounters;
 use crate::sim::time::SimTime;
 
@@ -58,6 +57,17 @@ impl Scenario {
             Scenario::IdealRsNmc => "Ideal-RS+NMC",
         }
     }
+
+    /// The registry preset this enum value names.
+    pub fn spec(self) -> ScenarioSpec {
+        match self {
+            Scenario::Sequential => ScenarioSpec::sequential(),
+            Scenario::T3 => ScenarioSpec::t3(),
+            Scenario::T3Mca => ScenarioSpec::t3_mca(),
+            Scenario::IdealOverlap => ScenarioSpec::ideal_overlap(),
+            Scenario::IdealRsNmc => ScenarioSpec::ideal_rs_nmc(),
+        }
+    }
 }
 
 /// Result of one sub-layer under one scenario.
@@ -83,74 +93,14 @@ pub fn run_sublayer(
     sub: SubLayer,
     scenario: Scenario,
 ) -> SublayerResult {
-    let shape = sublayer_gemm(model, tp, sub);
-    let plan = StagePlan::new(shape, Tiling::default(), &sys.gpu);
-    let ar_bytes = shape.out_bytes();
-    let cus = sys.gpu.cu_count;
-
-    let ag = run_ag_baseline(sys, ar_bytes, tp, cus);
-    match scenario {
-        Scenario::Sequential => {
-            let g = run_gemm(sys, &plan, cus, WriteMode::ThroughLlc);
-            let rs = run_rs_baseline(sys, ar_bytes, tp, cus);
-            let mut counters = g.counters;
-            counters.add(&rs.counters);
-            counters.add(&ag.counters);
-            SublayerResult {
-                scenario,
-                gemm: g.time,
-                rs: rs.time,
-                ag: ag.time,
-                total: g.time + rs.time + ag.time,
-                counters,
-            }
-        }
-        Scenario::IdealOverlap | Scenario::IdealRsNmc => {
-            let g = run_gemm(sys, &plan, cus, WriteMode::ThroughLlc);
-            let rs = if scenario == Scenario::IdealOverlap {
-                run_rs_baseline(sys, ar_bytes, tp, cus)
-            } else {
-                run_rs_nmc(sys, ar_bytes, tp)
-            };
-            let overlapped = g.time.max(rs.time);
-            let mut counters = g.counters;
-            counters.add(&rs.counters);
-            counters.add(&ag.counters);
-            SublayerResult {
-                scenario,
-                gemm: g.time,
-                rs: rs.time,
-                ag: ag.time,
-                total: overlapped + ag.time,
-                counters,
-            }
-        }
-        Scenario::T3 | Scenario::T3Mca => {
-            let policy = if scenario == Scenario::T3 {
-                ArbPolicy::RoundRobin
-            } else {
-                ArbPolicy::T3Mca
-            };
-            let fused = run_fused_gemm_rs(
-                sys,
-                &plan,
-                tp,
-                &FusedOpts {
-                    policy,
-                    trace_bin: None,
-                },
-            );
-            let mut counters = fused.counters;
-            counters.add(&ag.counters);
-            SublayerResult {
-                scenario,
-                gemm: fused.gemm_time,
-                rs: fused.total - fused.gemm_time,
-                ag: ag.time,
-                total: fused.total + ag.time,
-                counters,
-            }
-        }
+    let m: Measurement = scenario.spec().run(sys, model, tp, sub);
+    SublayerResult {
+        scenario,
+        gemm: m.gemm,
+        rs: m.rs,
+        ag: m.ag,
+        total: m.total,
+        counters: m.counters,
     }
 }
 
@@ -213,10 +163,14 @@ pub fn end_to_end(
 
 // ---------------------------------------------------------------------
 // Sub-layer result cache: end-to-end sweeps reuse (model, tp, sub, sc)
-// results across phases and figures.
+// results across phases. Keyed on the system's parameter fingerprint —
+// NOT its name — so sweeps that mutate a config in place (e.g. the
+// MCA-threshold ablation) can never observe another config's results.
+// Experiment grids do not use this cache: they own a per-experiment
+// ResultSet instead (see crate::experiment::results).
 // ---------------------------------------------------------------------
 
-type CacheKey = (String, String, u64, &'static str, Scenario);
+type CacheKey = (u64, String, u64, &'static str, Scenario);
 
 fn cache() -> &'static Mutex<HashMap<CacheKey, SublayerResult>> {
     static CACHE: std::sync::OnceLock<Mutex<HashMap<CacheKey, SublayerResult>>> =
@@ -233,7 +187,7 @@ pub fn cached_sublayer(
     scenario: Scenario,
 ) -> SublayerResult {
     let key = (
-        sys.name.clone(),
+        sys.fingerprint(),
         model.name.to_string(),
         tp,
         sub.name(),
@@ -339,5 +293,23 @@ mod tests {
         let b = cached_sublayer(&s, &m, 8, SubLayer::OpFwd, Scenario::Sequential);
         assert_eq!(a.total, b.total);
         assert_eq!(a.counters, b.counters);
+    }
+
+    #[test]
+    fn cache_distinguishes_mutated_configs() {
+        // The old name-keyed cache returned table1 results for a config
+        // whose MCA thresholds had been mutated in place.
+        let base = sys();
+        let m = by_name("T-NLG").unwrap();
+        let a = cached_sublayer(&base, &m, 8, SubLayer::Fc2Fwd, Scenario::Sequential);
+        let mut mutated = base.clone(); // same name, different behavior
+        mutated.mem.total_bw_gbps = base.mem.total_bw_gbps / 2.0;
+        let b = cached_sublayer(&mutated, &m, 8, SubLayer::Fc2Fwd, Scenario::Sequential);
+        let fresh = run_sublayer(&mutated, &m, 8, SubLayer::Fc2Fwd, Scenario::Sequential);
+        assert_eq!(b.total, fresh.total, "cache must track parameters");
+        assert_ne!(
+            a.total, b.total,
+            "half-bandwidth DRAM should not time identically to table1"
+        );
     }
 }

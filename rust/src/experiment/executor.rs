@@ -1,0 +1,126 @@
+//! Std-only work-stealing thread pool for grid execution.
+//!
+//! Jobs are indexed `0..n` and seeded round-robin into per-worker deques;
+//! a worker pops its own queue from the front and, when empty, steals from
+//! the back of its neighbors. Each job writes its result into a dedicated
+//! slot, so the output order — and therefore every downstream [`super::ResultSet`]
+//! query — is identical for any worker count: determinism comes from slot
+//! ordering, not scheduling.
+//!
+//! Simulation cells are coarse (milliseconds of wall time each), so a
+//! mutex-guarded deque per worker costs nothing measurable next to the
+//! event loops it feeds, while letting the unbalanced cells of a grid
+//! (GPT-3 at TP=32 vs Mega-GPT-2 at TP=8) spread across cores.
+
+use std::collections::VecDeque;
+use std::sync::{Mutex, OnceLock};
+
+/// Number of workers to use when the caller does not pin one: the
+/// `T3_THREADS` environment variable if set, otherwise the machine's
+/// available parallelism.
+pub fn default_threads() -> usize {
+    if let Some(n) = std::env::var("T3_THREADS")
+        .ok()
+        .and_then(|s| s.parse::<usize>().ok())
+    {
+        return n.max(1);
+    }
+    std::thread::available_parallelism()
+        .map(|n| n.get())
+        .unwrap_or(1)
+}
+
+/// Run `f(0..n)` on `threads` workers; returns results in index order.
+pub fn run_indexed<T, F>(n: usize, threads: usize, f: F) -> Vec<T>
+where
+    T: Send + Sync,
+    F: Fn(usize) -> T + Sync,
+{
+    let threads = threads.max(1).min(n.max(1));
+    if threads == 1 {
+        return (0..n).map(&f).collect();
+    }
+
+    let queues: Vec<Mutex<VecDeque<usize>>> = (0..threads)
+        .map(|w| Mutex::new((0..n).filter(|i| i % threads == w).collect()))
+        .collect();
+    let slots: Vec<OnceLock<T>> = (0..n).map(|_| OnceLock::new()).collect();
+
+    std::thread::scope(|scope| {
+        for w in 0..threads {
+            let queues = &queues;
+            let slots = &slots;
+            let f = &f;
+            scope.spawn(move || loop {
+                let job = queues[w].lock().unwrap().pop_front().or_else(|| {
+                    // Steal from the back of the first non-empty victim.
+                    (1..threads)
+                        .map(|off| (w + off) % threads)
+                        .find_map(|v| queues[v].lock().unwrap().pop_back())
+                });
+                match job {
+                    Some(i) => {
+                        // A slot is written exactly once: each index is
+                        // popped or stolen by exactly one worker.
+                        let _ = slots[i].set(f(i));
+                    }
+                    None => break,
+                }
+            });
+        }
+    });
+
+    slots
+        .into_iter()
+        .map(|s| s.into_inner().expect("every job ran"))
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::sync::atomic::{AtomicUsize, Ordering};
+
+    #[test]
+    fn all_jobs_run_exactly_once() {
+        let count = AtomicUsize::new(0);
+        let out = run_indexed(100, 4, |i| {
+            count.fetch_add(1, Ordering::Relaxed);
+            i * 2
+        });
+        assert_eq!(count.load(Ordering::Relaxed), 100);
+        assert_eq!(out, (0..100).map(|i| i * 2).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn order_is_index_order_for_any_thread_count() {
+        for threads in [1, 2, 3, 8, 64] {
+            let out = run_indexed(37, threads, |i| i);
+            assert_eq!(out, (0..37).collect::<Vec<_>>(), "threads={threads}");
+        }
+    }
+
+    #[test]
+    fn handles_empty_and_tiny_grids() {
+        let out: Vec<usize> = run_indexed(0, 8, |i| i);
+        assert!(out.is_empty());
+        assert_eq!(run_indexed(1, 8, |i| i + 7), vec![7]);
+    }
+
+    #[test]
+    fn stealing_drains_imbalanced_queues() {
+        // One slow job: the other workers must steal the rest.
+        let out = run_indexed(32, 4, |i| {
+            if i == 0 {
+                std::thread::sleep(std::time::Duration::from_millis(20));
+            }
+            i
+        });
+        assert_eq!(out.len(), 32);
+    }
+
+    #[test]
+    fn default_threads_positive() {
+        assert!(default_threads() >= 1);
+    }
+}

@@ -1,0 +1,204 @@
+//! Declarative experiment grids.
+//!
+//! An [`ExperimentSpec`] names a grid over systems x models x TP degrees x
+//! sub-layers x scenarios. [`ExperimentSpec::run`] expands the grid in a
+//! fixed order (systems, then models, then TPs, then sub-layers, then
+//! scenarios), executes every cell on the work-stealing pool, and returns
+//! a [`ResultSet`] whose cell order matches the expansion order — so two
+//! runs of the same spec produce identical result sets regardless of the
+//! worker count.
+
+use crate::config::SystemConfig;
+use crate::models::{by_name, ModelCfg, SubLayer};
+
+use super::executor;
+use super::results::{Cell, ResultSet};
+use super::ScenarioSpec;
+
+/// A declarative grid of simulation cells.
+#[derive(Debug, Clone)]
+pub struct ExperimentSpec {
+    pub name: String,
+    pub systems: Vec<SystemConfig>,
+    pub models: Vec<ModelCfg>,
+    /// Explicit TP degrees, or `None` to use each model's paper degrees
+    /// (`ModelCfg::tp_degrees`).
+    pub tps: Option<Vec<u64>>,
+    pub sublayers: Vec<SubLayer>,
+    pub scenarios: Vec<ScenarioSpec>,
+    /// Worker threads; `None` uses [`executor::default_threads`].
+    pub threads: Option<usize>,
+}
+
+/// One expanded grid cell, before execution.
+#[derive(Debug, Clone)]
+pub struct CellSpec {
+    pub system: usize,
+    pub model: usize,
+    pub tp: u64,
+    pub sublayer: SubLayer,
+    pub scenario: usize,
+}
+
+impl ExperimentSpec {
+    pub fn new(name: impl Into<String>) -> Self {
+        ExperimentSpec {
+            name: name.into(),
+            systems: Vec::new(),
+            models: Vec::new(),
+            tps: None,
+            sublayers: SubLayer::ALL.to_vec(),
+            scenarios: Vec::new(),
+            threads: None,
+        }
+    }
+
+    // ---- chainable builders ----
+
+    pub fn system(mut self, sys: SystemConfig) -> Self {
+        self.systems.push(sys);
+        self
+    }
+
+    pub fn model(mut self, model: ModelCfg) -> Self {
+        self.models.push(model);
+        self
+    }
+
+    /// Add zoo models by name; panics on an unknown name (callers with
+    /// user input should validate via [`by_name`] first).
+    pub fn models(mut self, names: &[&str]) -> Self {
+        for n in names {
+            self.models
+                .push(by_name(n).unwrap_or_else(|| panic!("unknown model {n}")));
+        }
+        self
+    }
+
+    /// Pin explicit TP degrees instead of each model's paper degrees.
+    pub fn tps(mut self, tps: &[u64]) -> Self {
+        self.tps = Some(tps.to_vec());
+        self
+    }
+
+    pub fn sublayers(mut self, subs: impl IntoIterator<Item = SubLayer>) -> Self {
+        self.sublayers = subs.into_iter().collect();
+        self
+    }
+
+    pub fn scenario(mut self, spec: ScenarioSpec) -> Self {
+        self.scenarios.push(spec);
+        self
+    }
+
+    pub fn scenarios(mut self, specs: impl IntoIterator<Item = ScenarioSpec>) -> Self {
+        self.scenarios.extend(specs);
+        self
+    }
+
+    pub fn threads(mut self, n: usize) -> Self {
+        self.threads = Some(n);
+        self
+    }
+
+    /// TP degrees evaluated for `model` under this spec: the explicit list
+    /// if pinned, else the model's paper degrees. Degrees that do not
+    /// divide the hidden dimension are skipped, as is TP=1 (a ring needs
+    /// at least two devices).
+    pub fn tps_for(&self, model: &ModelCfg) -> Vec<u64> {
+        let candidates: Vec<u64> = match &self.tps {
+            Some(t) => t.clone(),
+            None => model.tp_degrees.to_vec(),
+        };
+        candidates
+            .into_iter()
+            .filter(|&tp| tp >= 2 && model.hidden % tp == 0)
+            .collect()
+    }
+
+    /// Expand the grid in deterministic order.
+    pub fn cells(&self) -> Vec<CellSpec> {
+        let mut out = Vec::new();
+        for (si, _) in self.systems.iter().enumerate() {
+            for (mi, model) in self.models.iter().enumerate() {
+                for tp in self.tps_for(model) {
+                    for &sub in &self.sublayers {
+                        for (ci, _) in self.scenarios.iter().enumerate() {
+                            out.push(CellSpec {
+                                system: si,
+                                model: mi,
+                                tp,
+                                sublayer: sub,
+                                scenario: ci,
+                            });
+                        }
+                    }
+                }
+            }
+        }
+        out
+    }
+
+    /// Execute every cell and collect a [`ResultSet`].
+    pub fn run(&self) -> ResultSet {
+        assert!(!self.systems.is_empty(), "experiment needs >= 1 system");
+        assert!(!self.models.is_empty(), "experiment needs >= 1 model");
+        assert!(!self.scenarios.is_empty(), "experiment needs >= 1 scenario");
+        let specs = self.cells();
+        let threads = self.threads.unwrap_or_else(executor::default_threads);
+        let cells = executor::run_indexed(specs.len(), threads, |i| {
+            let c = &specs[i];
+            let sys = &self.systems[c.system];
+            let model = &self.models[c.model];
+            let scenario = &self.scenarios[c.scenario];
+            let m = scenario.run(sys, model, c.tp, c.sublayer);
+            Cell {
+                system: sys.name.clone(),
+                model: model.name.to_string(),
+                tp: c.tp,
+                sublayer: c.sublayer,
+                scenario: scenario.name.clone(),
+                m,
+            }
+        });
+        ResultSet {
+            experiment: self.name.clone(),
+            cells,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::experiment::ScenarioSpec;
+
+    #[test]
+    fn grid_expansion_order_and_size() {
+        let spec = ExperimentSpec::new("t")
+            .system(SystemConfig::table1())
+            .models(&["Mega-GPT-2", "T-NLG"])
+            .sublayers([SubLayer::OpFwd, SubLayer::Fc2Fwd])
+            .scenarios([ScenarioSpec::sequential(), ScenarioSpec::t3_mca()]);
+        let cells = spec.cells();
+        // 2 models x 2 paper TPs x 2 sublayers x 2 scenarios.
+        assert_eq!(cells.len(), 16);
+        // Scenario varies fastest, then sublayer, then tp.
+        assert_eq!(cells[0].scenario, 0);
+        assert_eq!(cells[1].scenario, 1);
+        assert_eq!(cells[0].sublayer, SubLayer::OpFwd);
+        assert_eq!(cells[2].sublayer, SubLayer::Fc2Fwd);
+        assert_eq!(cells[0].tp, 8);
+        assert_eq!(cells[4].tp, 16);
+    }
+
+    #[test]
+    fn invalid_tp_degrees_are_skipped() {
+        let m = by_name("T-NLG").unwrap(); // hidden 4256 = 2^5 * 7 * 19
+        let spec = ExperimentSpec::new("t").tps(&[7, 8, 1000]);
+        let tps = spec.tps_for(&m);
+        assert_eq!(tps, vec![7, 8]);
+        let default = ExperimentSpec::new("t");
+        assert_eq!(default.tps_for(&m), vec![8, 16]);
+    }
+}

@@ -1,0 +1,491 @@
+//! The declarative experiment API — the crate's public entry point for
+//! running simulations.
+//!
+//! The paper evaluates a fixed five-configuration grid; this module makes
+//! the *configuration* a first-class, composable object instead of a closed
+//! enum:
+//!
+//! * [`ScenarioSpec`] decomposes "a configuration" into orthogonal knobs —
+//!   how GEMM and reduce-scatter overlap ([`OverlapMode`]), the producer's
+//!   write mode, the memory-controller arbitration policy, CU partitioning
+//!   between compute and communication kernels, NMC on/off for the RS, and
+//!   whether the trailing all-gather is serialized or skipped. The five
+//!   paper configurations are presets ([`registry`]); arbitrary new
+//!   combinations (T3 without MCA, partial-CU ideal overlap, RS-only
+//!   bounds) compose without touching the engine.
+//! * [`ExperimentSpec`] declares a grid over systems x models x TP degrees
+//!   x sub-layers x scenarios and executes it on a work-stealing
+//!   thread-pool ([`executor`]), producing a [`ResultSet`] that supports
+//!   filtering, speedup/geomean queries, end-to-end composition, and
+//!   ASCII/CSV rendering.
+//!
+//! The legacy enum API ([`crate::exec::Scenario`]) and the figure harness
+//! ([`crate::harness`]) are thin layers over this module. See DESIGN.md for
+//! the full field/preset/grammar reference.
+
+pub mod executor;
+pub mod grid;
+pub mod results;
+
+pub use grid::ExperimentSpec;
+pub use results::{Cell, EndToEnd, ResultSet};
+
+use crate::config::{ArbPolicy, SystemConfig};
+use crate::engine::collective_run::{run_ag_baseline, run_rs_baseline, run_rs_nmc};
+use crate::engine::fused::{run_fused_gemm_rs, FusedOpts};
+use crate::engine::gemm_run::run_gemm;
+use crate::gemm::traffic::WriteMode;
+use crate::gemm::{StagePlan, Tiling};
+use crate::models::{sublayer_gemm, ModelCfg, SubLayer};
+use crate::sim::stats::DramCounters;
+use crate::sim::time::SimTime;
+
+/// How the producer GEMM and the reduce-scatter are composed in time.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum OverlapMode {
+    /// GEMM, then RS, fully serialized (the baseline of modern systems).
+    Serialized,
+    /// `max(GEMM, RS)`: perfect overlap with no contention or dependency
+    /// constraints — the paper's upper bounds (§5.3).
+    Ideal,
+    /// The T3 fused engine: tracker-triggered RS chunks overlap the GEMM
+    /// through the memory controller (Section 4).
+    Fused,
+}
+
+/// CU allocation for a kernel.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum CuAlloc {
+    /// Every CU of the configured GPU.
+    All,
+    /// An explicit CU count (the Figure-6 partitioning study).
+    Count(u32),
+}
+
+impl CuAlloc {
+    pub fn resolve(self, sys: &SystemConfig) -> u32 {
+        match self {
+            CuAlloc::All => sys.gpu.cu_count,
+            CuAlloc::Count(n) => n,
+        }
+    }
+}
+
+/// Trailing all-gather treatment.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum AgMode {
+    /// Serialized ring all-gather on CU kernels (every paper scenario).
+    RingCu,
+    /// No all-gather: RS-only sub-layer bounds / fused-AG assumptions.
+    Skip,
+}
+
+/// One composable simulation configuration.
+///
+/// Build with the preset constructors ([`ScenarioSpec::sequential`],
+/// [`ScenarioSpec::t3_mca`], ...) or from scratch with
+/// [`ScenarioSpec::new`] plus the chainable setters.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ScenarioSpec {
+    /// Display / registry name.
+    pub name: String,
+    pub overlap: OverlapMode,
+    /// Producer GEMM write mode. Non-fused paths default to the baseline
+    /// write-allocate ([`WriteMode::ThroughLlc`]); the fused engine
+    /// defaults to T3's uncached NMC stores ([`WriteMode::BypassLlc`]).
+    pub write_mode: WriteMode,
+    /// Memory-controller arbitration between compute and communication
+    /// streams (fused paths only).
+    pub policy: ArbPolicy,
+    /// CUs granted to the producer GEMM. Serialized/Ideal paths only: the
+    /// fused engine always runs the producer on the full GPU (T3 needs no
+    /// CU partitioning — that is the point of the paper).
+    pub gemm_cus: CuAlloc,
+    /// CUs granted to CU-executed collective kernels. Applies to the RS
+    /// kernel of Serialized/Ideal paths and to the trailing all-gather of
+    /// every path; the fused RS is DMA/NMC-driven and uses no CUs.
+    pub comm_cus: CuAlloc,
+    /// Run the reduce-scatter on near-memory compute + DMA (no CUs)
+    /// instead of a CU kernel. Ignored by the fused engine, which always
+    /// reduces in-DRAM.
+    pub rs_nmc: bool,
+    pub ag: AgMode,
+    /// Record a Figure-17-style DRAM traffic trace with this bin size
+    /// (fused paths only).
+    pub trace_bin: Option<SimTime>,
+}
+
+impl ScenarioSpec {
+    /// A serialized baseline skeleton named `name`; customize with the
+    /// chainable setters.
+    pub fn new(name: impl Into<String>) -> Self {
+        ScenarioSpec {
+            name: name.into(),
+            overlap: OverlapMode::Serialized,
+            write_mode: WriteMode::ThroughLlc,
+            policy: ArbPolicy::RoundRobin,
+            gemm_cus: CuAlloc::All,
+            comm_cus: CuAlloc::All,
+            rs_nmc: false,
+            ag: AgMode::RingCu,
+            trace_bin: None,
+        }
+    }
+
+    // ---- paper presets (§5.3) ----
+
+    /// Sliced GEMM, then ring-RS kernel, then ring-AG.
+    pub fn sequential() -> Self {
+        Self::new("Sequential")
+    }
+
+    /// Fused GEMM-RS with round-robin memory-controller arbitration.
+    pub fn t3() -> Self {
+        Self::new("T3")
+            .overlap(OverlapMode::Fused)
+            .write_mode(WriteMode::BypassLlc)
+            .policy(ArbPolicy::RoundRobin)
+    }
+
+    /// T3 plus the §4.5 arbitration policy.
+    pub fn t3_mca() -> Self {
+        Self::new("T3-MCA")
+            .overlap(OverlapMode::Fused)
+            .write_mode(WriteMode::BypassLlc)
+            .policy(ArbPolicy::T3Mca)
+    }
+
+    /// `max(GEMM, RS)` with no contention (upper bound for overlap).
+    pub fn ideal_overlap() -> Self {
+        Self::new("Ideal-GEMM-RS-Overlap").overlap(OverlapMode::Ideal)
+    }
+
+    /// `max(GEMM, RS+NMC)`: perfect overlap plus NMC-accelerated RS.
+    pub fn ideal_rs_nmc() -> Self {
+        Self::new("Ideal-RS+NMC").overlap(OverlapMode::Ideal).nmc(true)
+    }
+
+    // ---- chainable setters ----
+
+    pub fn named(mut self, name: impl Into<String>) -> Self {
+        self.name = name.into();
+        self
+    }
+
+    pub fn overlap(mut self, mode: OverlapMode) -> Self {
+        self.overlap = mode;
+        self
+    }
+
+    pub fn write_mode(mut self, mode: WriteMode) -> Self {
+        self.write_mode = mode;
+        self
+    }
+
+    pub fn policy(mut self, policy: ArbPolicy) -> Self {
+        self.policy = policy;
+        self
+    }
+
+    pub fn gemm_cus(mut self, cus: u32) -> Self {
+        self.gemm_cus = CuAlloc::Count(cus);
+        self
+    }
+
+    pub fn comm_cus(mut self, cus: u32) -> Self {
+        self.comm_cus = CuAlloc::Count(cus);
+        self
+    }
+
+    pub fn nmc(mut self, on: bool) -> Self {
+        self.rs_nmc = on;
+        self
+    }
+
+    pub fn skip_ag(mut self) -> Self {
+        self.ag = AgMode::Skip;
+        self
+    }
+
+    pub fn trace_bin(mut self, bin: SimTime) -> Self {
+        self.trace_bin = Some(bin);
+        self
+    }
+
+    /// One-line knob summary for `t3 scenarios`.
+    pub fn describe(&self) -> String {
+        let overlap = match self.overlap {
+            OverlapMode::Serialized => "serialized",
+            OverlapMode::Ideal => "ideal",
+            OverlapMode::Fused => "fused",
+        };
+        let policy = match (self.overlap, self.policy) {
+            (OverlapMode::Fused, ArbPolicy::RoundRobin) => "rr",
+            (OverlapMode::Fused, ArbPolicy::ComputePriority) => "comp-pri",
+            (OverlapMode::Fused, ArbPolicy::T3Mca) => "mca",
+            _ => "-",
+        };
+        let cus = match (self.gemm_cus, self.comm_cus) {
+            (CuAlloc::All, CuAlloc::All) => "all".to_string(),
+            (g, c) => {
+                let show = |a: CuAlloc| match a {
+                    CuAlloc::All => "all".to_string(),
+                    CuAlloc::Count(n) => n.to_string(),
+                };
+                format!("{}/{}", show(g), show(c))
+            }
+        };
+        format!(
+            "overlap={overlap} arb={policy} cus={cus} rs={} ag={} writes={}",
+            if self.rs_nmc { "nmc" } else { "cu" },
+            match self.ag {
+                AgMode::RingCu => "ring",
+                AgMode::Skip => "none",
+            },
+            match self.write_mode {
+                WriteMode::ThroughLlc => "llc",
+                WriteMode::BypassLlc => "bypass",
+            },
+        )
+    }
+
+    /// Simulate one (system, model, tp, sub-layer) under this scenario.
+    pub fn run(
+        &self,
+        sys: &SystemConfig,
+        model: &ModelCfg,
+        tp: u64,
+        sub: SubLayer,
+    ) -> Measurement {
+        let shape = sublayer_gemm(model, tp, sub);
+        let plan = StagePlan::new(shape, Tiling::default(), &sys.gpu);
+        let ar_bytes = shape.out_bytes();
+        let gemm_cus = self.gemm_cus.resolve(sys);
+        let comm_cus = self.comm_cus.resolve(sys);
+
+        let ag = match self.ag {
+            AgMode::RingCu => Some(run_ag_baseline(sys, ar_bytes, tp, comm_cus)),
+            AgMode::Skip => None,
+        };
+        let (ag_time, ag_counters) = match &ag {
+            Some(r) => (r.time, r.counters),
+            None => (SimTime::ZERO, DramCounters::default()),
+        };
+
+        let run_rs = |cus: u32| {
+            if self.rs_nmc {
+                run_rs_nmc(sys, ar_bytes, tp)
+            } else {
+                run_rs_baseline(sys, ar_bytes, tp, cus)
+            }
+        };
+
+        match self.overlap {
+            OverlapMode::Serialized => {
+                let g = run_gemm(sys, &plan, gemm_cus, self.write_mode);
+                let rs = run_rs(comm_cus);
+                let mut counters = g.counters;
+                counters.add(&rs.counters);
+                counters.add(&ag_counters);
+                Measurement {
+                    gemm: g.time,
+                    rs: rs.time,
+                    ag: ag_time,
+                    total: g.time + rs.time + ag_time,
+                    counters,
+                }
+            }
+            OverlapMode::Ideal => {
+                let g = run_gemm(sys, &plan, gemm_cus, self.write_mode);
+                let rs = run_rs(comm_cus);
+                let mut counters = g.counters;
+                counters.add(&rs.counters);
+                counters.add(&ag_counters);
+                Measurement {
+                    gemm: g.time,
+                    rs: rs.time,
+                    ag: ag_time,
+                    total: g.time.max(rs.time) + ag_time,
+                    counters,
+                }
+            }
+            OverlapMode::Fused => {
+                let fused = run_fused_gemm_rs(
+                    sys,
+                    &plan,
+                    tp,
+                    &FusedOpts {
+                        policy: self.policy,
+                        write_mode: self.write_mode,
+                        trace_bin: self.trace_bin,
+                    },
+                );
+                let mut counters = fused.counters;
+                counters.add(&ag_counters);
+                Measurement {
+                    gemm: fused.gemm_time,
+                    rs: fused.total - fused.gemm_time,
+                    ag: ag_time,
+                    total: fused.total + ag_time,
+                    counters,
+                }
+            }
+        }
+    }
+}
+
+/// Timing and traffic of one simulated sub-layer cell.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Measurement {
+    /// Isolated (or fused-effective) GEMM time.
+    pub gemm: SimTime,
+    /// RS portion (exposed time for fused scenarios).
+    pub rs: SimTime,
+    /// Trailing all-gather time (zero when skipped).
+    pub ag: SimTime,
+    /// Total sub-layer time.
+    pub total: SimTime,
+    pub counters: DramCounters,
+}
+
+/// Speedup of `other` relative to `baseline` (both totals).
+pub fn speedup(baseline: &Measurement, other: &Measurement) -> f64 {
+    baseline.total.as_ps() as f64 / other.total.as_ps() as f64
+}
+
+// ---------------------------------------------------------------------
+// Registry
+// ---------------------------------------------------------------------
+
+/// The five configurations the paper evaluates (§5.3), in figure order.
+pub fn paper_scenarios() -> Vec<ScenarioSpec> {
+    vec![
+        ScenarioSpec::sequential(),
+        ScenarioSpec::t3(),
+        ScenarioSpec::t3_mca(),
+        ScenarioSpec::ideal_overlap(),
+        ScenarioSpec::ideal_rs_nmc(),
+    ]
+}
+
+/// All named scenarios: the five paper presets plus composed examples
+/// that the old closed enum could not express.
+pub fn registry() -> Vec<ScenarioSpec> {
+    let mut all = paper_scenarios();
+    all.extend([
+        // -- composed scenarios (new with the experiment API) --
+        // Fused engine with strict compute-priority arbitration: the §4.5
+        // strawman between RR and MCA.
+        ScenarioSpec::t3()
+            .named("T3-CompPrio")
+            .policy(ArbPolicy::ComputePriority),
+        // Partial-CU ideal overlap: the Figure-6 sharing study as a
+        // first-class scenario (GEMM on 72/64 CUs, RS kernel on 8/16).
+        ScenarioSpec::ideal_overlap()
+            .named("Ideal-Split-72-8")
+            .gemm_cus(72)
+            .comm_cus(8),
+        ScenarioSpec::ideal_overlap()
+            .named("Ideal-Split-64-16")
+            .gemm_cus(64)
+            .comm_cus(16),
+        // Baseline with T3's LLC-bypassing output writes but no fusion:
+        // isolates the §6.2 cache effect from the overlap effect.
+        ScenarioSpec::sequential()
+            .named("Sequential-BypassLLC")
+            .write_mode(WriteMode::BypassLlc),
+        // Sequential with the NMC reduce-scatter but no overlap: isolates
+        // the NMC benefit from the fusion benefit.
+        ScenarioSpec::sequential().named("Sequential-RS+NMC").nmc(true),
+        // Fused GEMM-RS without the trailing all-gather: lower bound for a
+        // hypothetical fused-AG epilogue.
+        ScenarioSpec::t3_mca().named("T3-MCA-FusedAG-Bound").skip_ag(),
+    ]);
+    all
+}
+
+/// Look up a registry scenario by name (case-insensitive) or short alias.
+pub fn preset(name: &str) -> Option<ScenarioSpec> {
+    let canon = match name.to_ascii_lowercase().as_str() {
+        "sequential" | "seq" => "Sequential",
+        "t3" => "T3",
+        "t3-mca" | "mca" => "T3-MCA",
+        "ideal" | "ideal-overlap" => "Ideal-GEMM-RS-Overlap",
+        "ideal-nmc" | "ideal-rs-nmc" => "Ideal-RS+NMC",
+        "comppri" => "T3-CompPrio",
+        "ideal-72-8" => "Ideal-Split-72-8",
+        "ideal-64-16" => "Ideal-Split-64-16",
+        other => other,
+    }
+    .to_string();
+    registry()
+        .into_iter()
+        .find(|s| s.name.eq_ignore_ascii_case(&canon))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::models::by_name;
+
+    #[test]
+    fn presets_cover_paper_scenarios() {
+        let names: Vec<String> = registry().into_iter().map(|s| s.name).collect();
+        for want in [
+            "Sequential",
+            "T3",
+            "T3-MCA",
+            "Ideal-GEMM-RS-Overlap",
+            "Ideal-RS+NMC",
+        ] {
+            assert!(names.iter().any(|n| n == want), "missing preset {want}");
+        }
+        // And at least two composed scenarios beyond the enum.
+        assert!(names.len() >= 7, "registry too small: {names:?}");
+    }
+
+    #[test]
+    fn preset_aliases_resolve() {
+        assert_eq!(preset("seq").unwrap().name, "Sequential");
+        assert_eq!(preset("MCA").unwrap().name, "T3-MCA");
+        assert_eq!(preset("ideal").unwrap().name, "Ideal-GEMM-RS-Overlap");
+        assert_eq!(preset("ideal-nmc").unwrap().name, "Ideal-RS+NMC");
+        assert_eq!(preset("t3-compprio").unwrap().name, "T3-CompPrio");
+        assert!(preset("no-such-scenario").is_none());
+    }
+
+    #[test]
+    fn builder_composes_knobs() {
+        let s = ScenarioSpec::new("x")
+            .overlap(OverlapMode::Ideal)
+            .gemm_cus(72)
+            .comm_cus(8)
+            .nmc(true)
+            .skip_ag();
+        assert_eq!(s.overlap, OverlapMode::Ideal);
+        assert_eq!(s.gemm_cus, CuAlloc::Count(72));
+        assert_eq!(s.comm_cus, CuAlloc::Count(8));
+        assert!(s.rs_nmc);
+        assert_eq!(s.ag, AgMode::Skip);
+        assert!(s.describe().contains("72/8"));
+    }
+
+    #[test]
+    fn cu_alloc_resolves_against_system() {
+        let sys = SystemConfig::table1();
+        assert_eq!(CuAlloc::All.resolve(&sys), sys.gpu.cu_count);
+        assert_eq!(CuAlloc::Count(8).resolve(&sys), 8);
+    }
+
+    #[test]
+    fn partial_cu_ideal_cannot_beat_free_ideal() {
+        let sys = SystemConfig::table1();
+        let m = by_name("T-NLG").unwrap();
+        let free = ScenarioSpec::ideal_overlap().run(&sys, &m, 8, SubLayer::Fc2Fwd);
+        let split = ScenarioSpec::ideal_overlap()
+            .gemm_cus(64)
+            .comm_cus(16)
+            .run(&sys, &m, 8, SubLayer::Fc2Fwd);
+        assert!(split.total >= free.total);
+    }
+}

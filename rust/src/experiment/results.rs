@@ -1,0 +1,302 @@
+//! Per-experiment result sets: the queryable replacement for the old
+//! global sub-layer cache.
+//!
+//! A [`ResultSet`] owns every simulated cell of one experiment, in grid
+//! order. Queries never re-simulate: filtering, speedups, geomeans, and
+//! end-to-end composition are pure views. Rendering goes through the
+//! [`Table`] type shared with the figure harness (ASCII + CSV).
+
+use crate::harness::Table;
+use crate::models::breakdown::{other_time, Phase};
+use crate::models::{ModelCfg, SubLayer};
+use crate::sim::stats::geomean;
+use crate::sim::time::SimTime;
+
+use super::Measurement;
+use crate::config::SystemConfig;
+
+/// One simulated (system, model, tp, sub-layer, scenario) cell.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Cell {
+    pub system: String,
+    pub model: String,
+    pub tp: u64,
+    pub sublayer: SubLayer,
+    pub scenario: String,
+    pub m: Measurement,
+}
+
+/// The results of one experiment, in deterministic grid order.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ResultSet {
+    pub experiment: String,
+    pub cells: Vec<Cell>,
+}
+
+impl ResultSet {
+    /// Cells matching a predicate, as a new set (same experiment name).
+    pub fn filter(&self, pred: impl Fn(&Cell) -> bool) -> ResultSet {
+        ResultSet {
+            experiment: self.experiment.clone(),
+            cells: self.cells.iter().filter(|c| pred(c)).cloned().collect(),
+        }
+    }
+
+    /// First cell matching (model, tp, sub-layer, scenario) in any system.
+    pub fn get(&self, model: &str, tp: u64, sub: SubLayer, scenario: &str) -> Option<&Cell> {
+        self.cells.iter().find(|c| {
+            c.model == model && c.tp == tp && c.sublayer == sub && c.scenario == scenario
+        })
+    }
+
+    /// Cell matching (system, model, tp, sub-layer, scenario).
+    pub fn get_in(
+        &self,
+        system: &str,
+        model: &str,
+        tp: u64,
+        sub: SubLayer,
+        scenario: &str,
+    ) -> Option<&Cell> {
+        self.cells
+            .iter()
+            .find(|c| c.system == system && c.model == model && c.tp == tp && c.sublayer == sub && c.scenario == scenario)
+    }
+
+    /// Distinct scenario names, in first-seen (grid) order.
+    pub fn scenario_names(&self) -> Vec<String> {
+        let mut out: Vec<String> = Vec::new();
+        for c in &self.cells {
+            if !out.contains(&c.scenario) {
+                out.push(c.scenario.clone());
+            }
+        }
+        out
+    }
+
+    /// Distinct (system, model, tp, sublayer) keys, in grid order.
+    fn row_keys(&self) -> Vec<(String, String, u64, SubLayer)> {
+        let mut out: Vec<(String, String, u64, SubLayer)> = Vec::new();
+        for c in &self.cells {
+            let key = (c.system.clone(), c.model.clone(), c.tp, c.sublayer);
+            if !out.contains(&key) {
+                out.push(key);
+            }
+        }
+        out
+    }
+
+    /// Per-cell speedups of `scenario` over `baseline`, matched on
+    /// (system, model, tp, sub-layer), in grid order.
+    pub fn speedups_over(&self, baseline: &str, scenario: &str) -> Vec<f64> {
+        let mut out = Vec::new();
+        for (sys, model, tp, sub) in self.row_keys() {
+            let b = self.get_in(&sys, &model, tp, sub, baseline);
+            let s = self.get_in(&sys, &model, tp, sub, scenario);
+            if let (Some(b), Some(s)) = (b, s) {
+                out.push(b.m.total.as_ps() as f64 / s.m.total.as_ps() as f64);
+            }
+        }
+        out
+    }
+
+    /// Geometric-mean speedup of `scenario` over `baseline` across the set.
+    pub fn geomean_speedup(&self, baseline: &str, scenario: &str) -> f64 {
+        geomean(&self.speedups_over(baseline, scenario))
+    }
+
+    /// Render the set as one table: a row per (system, model, tp,
+    /// sub-layer), a total-ms column per scenario, plus speedup columns
+    /// against `baseline` when given.
+    pub fn table(&self, id: &str, title: &str, baseline: Option<&str>) -> Table {
+        let scenarios = self.scenario_names();
+        let multi_system = self
+            .cells
+            .iter()
+            .any(|c| c.system != self.cells[0].system);
+        let mut headers: Vec<String> = Vec::new();
+        if multi_system {
+            headers.push("system".into());
+        }
+        headers.extend(["model".to_string(), "tp".into(), "sublayer".into()]);
+        for s in &scenarios {
+            headers.push(format!("{s} ms"));
+        }
+        if let Some(b) = baseline {
+            for s in scenarios.iter().filter(|s| s.as_str() != b) {
+                headers.push(format!("{s} vs {b}"));
+            }
+        }
+        let hdr_refs: Vec<&str> = headers.iter().map(String::as_str).collect();
+        let mut t = Table::new(id, title, &hdr_refs);
+
+        for (sys, model, tp, sub) in self.row_keys() {
+            let mut row = Vec::new();
+            if multi_system {
+                row.push(sys.clone());
+            }
+            row.extend([model.clone(), tp.to_string(), sub.name().to_string()]);
+            for s in &scenarios {
+                row.push(match self.get_in(&sys, &model, tp, sub, s) {
+                    Some(c) => format!("{:.3}", c.m.total.as_ms_f64()),
+                    None => "-".to_string(),
+                });
+            }
+            if let Some(b) = baseline {
+                let base = self.get_in(&sys, &model, tp, sub, b);
+                for s in scenarios.iter().filter(|s| s.as_str() != b) {
+                    let cell = self.get_in(&sys, &model, tp, sub, s);
+                    row.push(match (base, cell) {
+                        (Some(b), Some(c)) => format!(
+                            "{:.3}x",
+                            b.m.total.as_ps() as f64 / c.m.total.as_ps() as f64
+                        ),
+                        _ => "-".to_string(),
+                    });
+                }
+            }
+            t.row(row);
+        }
+        if let Some(b) = baseline {
+            for s in scenarios.iter().filter(|s| s.as_str() != b) {
+                let sp = self.speedups_over(b, s);
+                if !sp.is_empty() {
+                    t.note(format!("{s} vs {b}: geomean {:.3}x", geomean(&sp)));
+                }
+            }
+        }
+        t
+    }
+
+    /// Compose the analytic non-sliced breakdown with this set's simulated
+    /// sub-layer times into one end-to-end iteration (the paper's §5.1.2
+    /// scaling methodology, Figure 19). Returns `None` if any required
+    /// (model, tp, sub-layer, scenario) cell is missing from the set.
+    pub fn end_to_end(
+        &self,
+        sys: &SystemConfig,
+        model: &ModelCfg,
+        tp: u64,
+        phase: Phase,
+        scenarios: &[&str],
+    ) -> Option<EndToEnd> {
+        let other = other_time(sys, model, tp, phase);
+        let sites: Vec<SubLayer> = match phase {
+            Phase::Prompt => SubLayer::ALL
+                .iter()
+                .copied()
+                .filter(|s| s.in_forward())
+                .collect(),
+            Phase::Training => SubLayer::ALL.to_vec(),
+        };
+        let mut totals = Vec::new();
+        for &sc in scenarios {
+            let mut sliced = SimTime::ZERO;
+            for &sub in &sites {
+                sliced += self.get_in(&sys.name, model.name, tp, sub, sc)?.m.total;
+            }
+            totals.push((sc.to_string(), other + sliced * model.layers));
+        }
+        Some(EndToEnd {
+            model: model.name.to_string(),
+            tp,
+            phase,
+            other,
+            totals,
+        })
+    }
+
+    /// Write the default table rendering as CSV under `dir`.
+    pub fn write_csv(&self, dir: impl AsRef<std::path::Path>) -> std::io::Result<std::path::PathBuf> {
+        self.table(&self.experiment, &self.experiment, None).write_csv(dir)
+    }
+}
+
+/// End-to-end iteration totals composed from a [`ResultSet`].
+#[derive(Debug, Clone)]
+pub struct EndToEnd {
+    pub model: String,
+    pub tp: u64,
+    pub phase: Phase,
+    /// Non-sliced ("other") time per iteration.
+    pub other: SimTime,
+    /// Per-scenario iteration totals.
+    pub totals: Vec<(String, SimTime)>,
+}
+
+impl EndToEnd {
+    pub fn total(&self, scenario: &str) -> SimTime {
+        self.totals
+            .iter()
+            .find(|(s, _)| s == scenario)
+            .unwrap_or_else(|| panic!("scenario {scenario} not in end-to-end set"))
+            .1
+    }
+
+    /// Speedup of `scenario` over `baseline`.
+    pub fn speedup(&self, baseline: &str, scenario: &str) -> f64 {
+        self.total(baseline).as_ps() as f64 / self.total(scenario).as_ps() as f64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sim::stats::DramCounters;
+
+    fn cell(model: &str, tp: u64, sub: SubLayer, sc: &str, total_us: u64) -> Cell {
+        Cell {
+            system: "table1".into(),
+            model: model.into(),
+            tp,
+            sublayer: sub,
+            scenario: sc.into(),
+            m: Measurement {
+                gemm: SimTime::us(total_us / 2),
+                rs: SimTime::us(total_us / 4),
+                ag: SimTime::us(total_us / 4),
+                total: SimTime::us(total_us),
+                counters: DramCounters::default(),
+            },
+        }
+    }
+
+    fn set() -> ResultSet {
+        ResultSet {
+            experiment: "t".into(),
+            cells: vec![
+                cell("A", 8, SubLayer::OpFwd, "Sequential", 100),
+                cell("A", 8, SubLayer::OpFwd, "T3-MCA", 50),
+                cell("A", 8, SubLayer::Fc2Fwd, "Sequential", 200),
+                cell("A", 8, SubLayer::Fc2Fwd, "T3-MCA", 100),
+            ],
+        }
+    }
+
+    #[test]
+    fn speedups_and_geomean() {
+        let rs = set();
+        let sp = rs.speedups_over("Sequential", "T3-MCA");
+        assert_eq!(sp, vec![2.0, 2.0]);
+        assert!((rs.geomean_speedup("Sequential", "T3-MCA") - 2.0).abs() < 1e-12);
+    }
+
+    #[test]
+    fn filter_and_get() {
+        let rs = set();
+        let only_op = rs.filter(|c| c.sublayer == SubLayer::OpFwd);
+        assert_eq!(only_op.cells.len(), 2);
+        assert!(rs.get("A", 8, SubLayer::Fc2Fwd, "T3-MCA").is_some());
+        assert!(rs.get("A", 16, SubLayer::Fc2Fwd, "T3-MCA").is_none());
+    }
+
+    #[test]
+    fn table_has_scenario_columns_and_geomean_note() {
+        let rs = set();
+        let t = rs.table("x", "demo", Some("Sequential"));
+        assert_eq!(t.rows.len(), 2);
+        assert!(t.headers.iter().any(|h| h == "T3-MCA ms"));
+        assert!(t.headers.iter().any(|h| h == "T3-MCA vs Sequential"));
+        assert!(t.notes[0].contains("geomean 2.000x"), "{}", t.notes[0]);
+    }
+}

@@ -1,9 +1,12 @@
-//! Figure/table regeneration harness.
+//! Figure/table regeneration harness: the *view layer* over the
+//! [`crate::experiment`] API.
 //!
-//! One function per table/figure of the paper's evaluation; each returns a
-//! [`Table`] (rendered as ASCII by the benches/CLI and written as CSV under
-//! `results/`). The benches in `rust/benches/` are thin wrappers over these
-//! so `cargo bench` regenerates the full evaluation.
+//! One function per table/figure of the paper's evaluation. Each grid
+//! figure builds a small declarative [`ExperimentSpec`], runs it on the
+//! parallel executor, and renders a [`Table`] view over the returned
+//! [`crate::experiment::ResultSet`] (ASCII for the benches/CLI, CSV under
+//! `results/`). The analytic figures (4, 14) and the single-run trace
+//! figure (17) drive the models/engine directly.
 
 use std::fmt::Write as _;
 use std::path::Path;
@@ -12,7 +15,7 @@ use crate::config::SystemConfig;
 use crate::engine::collective_run::{run_ag_baseline, run_rs_baseline};
 use crate::engine::fused::{run_fused_gemm_rs, FusedOpts};
 use crate::engine::gemm_run::run_gemm;
-use crate::exec::{cached_sublayer, end_to_end, sublayer_speedup, Scenario};
+use crate::experiment::{paper_scenarios, ExperimentSpec, ResultSet, ScenarioSpec};
 use crate::gemm::traffic::WriteMode;
 use crate::gemm::{StagePlan, Tiling};
 use crate::models::breakdown::{other_time, Phase};
@@ -31,6 +34,26 @@ pub struct Table {
     pub notes: Vec<String>,
 }
 
+/// A row whose cell count does not match the table's header count.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct ArityError {
+    pub table: String,
+    pub expected: usize,
+    pub got: usize,
+}
+
+impl std::fmt::Display for ArityError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "table '{}': row has {} cells, headers have {}",
+            self.table, self.got, self.expected
+        )
+    }
+}
+
+impl std::error::Error for ArityError {}
+
 impl Table {
     pub fn new(id: &str, title: &str, headers: &[&str]) -> Self {
         Table {
@@ -42,9 +65,25 @@ impl Table {
         }
     }
 
-    pub fn row(&mut self, cells: Vec<String>) {
-        debug_assert_eq!(cells.len(), self.headers.len());
+    /// Append a row, checking column arity.
+    pub fn try_row(&mut self, cells: Vec<String>) -> Result<&mut Self, ArityError> {
+        if cells.len() != self.headers.len() {
+            return Err(ArityError {
+                table: self.id.clone(),
+                expected: self.headers.len(),
+                got: cells.len(),
+            });
+        }
         self.rows.push(cells);
+        Ok(self)
+    }
+
+    /// Append a row; panics (in every build profile) on column-arity
+    /// mismatch so malformed tables fail loudly in release benches too.
+    pub fn row(&mut self, cells: Vec<String>) {
+        if let Err(e) = self.try_row(cells) {
+            panic!("{e}");
+        }
     }
 
     pub fn note(&mut self, s: impl Into<String>) {
@@ -167,10 +206,32 @@ pub fn fig4(sys: &SystemConfig) -> Table {
 }
 
 // ---------------------------------------------------------------------
-// Figure 6 — CU-split contention study.
+// Figure 6 — CU-split contention study, expressed as composed scenarios
+// (partial-CU ideal overlap) that the old closed enum could not state.
 // ---------------------------------------------------------------------
 
 pub fn fig6(sys: &SystemConfig) -> Table {
+    let rs = ExperimentSpec::new("fig6")
+        .system(sys.clone())
+        .models(&["Mega-GPT-2", "T-NLG"])
+        .tps(&[8])
+        .sublayers([SubLayer::OpFwd, SubLayer::Fc2Fwd])
+        .scenarios([
+            ScenarioSpec::sequential().named("seq-noag").skip_ag(),
+            ScenarioSpec::ideal_overlap().named("ideal(80-free)").skip_ag(),
+            ScenarioSpec::ideal_overlap()
+                .named("72-8")
+                .gemm_cus(72)
+                .comm_cus(8)
+                .skip_ag(),
+            ScenarioSpec::ideal_overlap()
+                .named("64-16")
+                .gemm_cus(64)
+                .comm_cus(16)
+                .skip_ag(),
+        ])
+        .run();
+
     let mut t = Table::new(
         "fig6",
         "Overlap potential vs CU sharing (GEMM+RS isolated runs, TP=8)",
@@ -180,25 +241,17 @@ pub fn fig6(sys: &SystemConfig) -> Table {
                  ("T-NLG", SubLayer::OpFwd, "Attn"), ("T-NLG", SubLayer::Fc2Fwd, "FC-2")];
     let mut speedups: Vec<(String, f64)> = Vec::new();
     for (model, sub, label) in cases {
-        let m = by_name(model).unwrap();
-        let shape = sublayer_gemm(&m, 8, sub);
-        let plan = StagePlan::new(shape, Tiling::default(), &sys.gpu);
-        let ar = shape.out_bytes();
-        let g80 = run_gemm(sys, &plan, 80, WriteMode::ThroughLlc).time;
-        let rs80 = run_rs_baseline(sys, ar, 8, 80).time;
-        let seq = g80 + rs80;
-        for (gc, rc, name) in [(80u32, 80u32, "ideal(80-free)"), (72, 8, "72-8"), (64, 16, "64-16")] {
-            let g = if gc == 80 { g80 } else { run_gemm(sys, &plan, gc, WriteMode::ThroughLlc).time };
-            let rs = if rc == 80 { rs80 } else { run_rs_baseline(sys, ar, 8, rc).time };
-            let overlapped = g.max(rs);
-            let sp = seq.as_ps() as f64 / overlapped.as_ps() as f64;
+        let seq = rs.get(model, 8, sub, "seq-noag").expect("seq cell").m.total;
+        for name in ["ideal(80-free)", "72-8", "64-16"] {
+            let c = rs.get(model, 8, sub, name).expect("split cell");
+            let sp = seq.as_ps() as f64 / c.m.total.as_ps() as f64;
             speedups.push((name.to_string(), sp));
             t.row(vec![
                 model.to_string(),
                 label.to_string(),
                 name.to_string(),
-                ms(g),
-                ms(rs),
+                ms(c.m.gemm),
+                ms(c.m.rs),
                 format!("{sp:.2}x"),
             ]);
         }
@@ -260,7 +313,18 @@ pub struct SublayerGrid {
     pub t3mca_max: f64,
 }
 
+/// The Figure-15/16 grid as a reusable [`ResultSet`] (2 models x paper TPs
+/// x 4 sub-layers x 5 scenarios, executed in parallel).
+pub fn fig15_16_results(sys: &SystemConfig) -> ResultSet {
+    ExperimentSpec::new("fig15_16")
+        .system(sys.clone())
+        .models(&["Mega-GPT-2", "T-NLG"])
+        .scenarios(paper_scenarios())
+        .run()
+}
+
 pub fn fig15_16(sys: &SystemConfig) -> SublayerGrid {
+    let rs = fig15_16_results(sys);
     let mut dist = Table::new(
         "fig15",
         "Sub-layer runtime distribution (Sequential)",
@@ -278,7 +342,7 @@ pub fn fig15_16(sys: &SystemConfig) -> SublayerGrid {
         let m = by_name(name).unwrap();
         for &tp in m.tp_degrees {
             for sub in SubLayer::ALL {
-                let seq = cached_sublayer(sys, &m, tp, sub, Scenario::Sequential);
+                let seq = &rs.get(name, tp, sub, "Sequential").expect("seq cell").m;
                 let tot = seq.total.as_secs_f64();
                 dist.row(vec![
                     name.to_string(),
@@ -291,17 +355,14 @@ pub fn fig15_16(sys: &SystemConfig) -> SublayerGrid {
                     pct(seq.rs.as_secs_f64() / tot),
                     pct(seq.ag.as_secs_f64() / tot),
                 ]);
-                let t3 = sublayer_speedup(&seq, &cached_sublayer(sys, &m, tp, sub, Scenario::T3));
-                let mca =
-                    sublayer_speedup(&seq, &cached_sublayer(sys, &m, tp, sub, Scenario::T3Mca));
-                let ideal = sublayer_speedup(
-                    &seq,
-                    &cached_sublayer(sys, &m, tp, sub, Scenario::IdealOverlap),
-                );
-                let nmc = sublayer_speedup(
-                    &seq,
-                    &cached_sublayer(sys, &m, tp, sub, Scenario::IdealRsNmc),
-                );
+                let sp_of = |sc: &str| {
+                    let c = rs.get(name, tp, sub, sc).expect("scenario cell");
+                    seq.total.as_ps() as f64 / c.m.total.as_ps() as f64
+                };
+                let t3 = sp_of("T3");
+                let mca = sp_of("T3-MCA");
+                let ideal = sp_of("Ideal-GEMM-RS-Overlap");
+                let nmc = sp_of("Ideal-RS+NMC");
                 t3_all.push(t3);
                 mca_all.push(mca);
                 ideal_all.push(ideal);
@@ -348,6 +409,7 @@ pub fn fig17(sys: &SystemConfig, out_dir: impl AsRef<Path>) -> Table {
     let opts = FusedOpts {
         policy: crate::config::ArbPolicy::RoundRobin,
         trace_bin: Some(SimTime::us(20)),
+        ..FusedOpts::default()
     };
     let fused = run_fused_gemm_rs(sys, &plan, 8, &opts);
     let iso = run_gemm(sys, &plan, sys.gpu.cu_count, WriteMode::BypassLlc);
@@ -396,6 +458,12 @@ pub fn fig17(sys: &SystemConfig, out_dir: impl AsRef<Path>) -> Table {
 // ---------------------------------------------------------------------
 
 pub fn fig18(sys: &SystemConfig) -> Table {
+    let rs = ExperimentSpec::new("fig18")
+        .system(sys.clone())
+        .models(&["Mega-GPT-2", "T-NLG"])
+        .scenarios([ScenarioSpec::sequential(), ScenarioSpec::t3_mca()])
+        .run();
+
     let mut t = Table::new(
         "fig18",
         "DRAM accesses per sub-layer (GB): Sequential vs T3-MCA",
@@ -410,16 +478,18 @@ pub fn fig18(sys: &SystemConfig) -> Table {
         let m = by_name(name).unwrap();
         for &tp in m.tp_degrees {
             for sub in SubLayer::ALL {
-                let seq = cached_sublayer(sys, &m, tp, sub, Scenario::Sequential);
-                let t3 = cached_sublayer(sys, &m, tp, sub, Scenario::T3Mca);
-                let s = seq.counters.total();
-                let f = t3.counters.total();
+                let seq = rs.get(name, tp, sub, "Sequential").expect("seq cell");
+                let t3 = rs.get(name, tp, sub, "T3-MCA").expect("t3 cell");
+                let s = seq.m.counters.total();
+                let f = t3.m.counters.total();
                 let red = 1.0 - f as f64 / s as f64;
                 reductions.push(s as f64 / f as f64);
-                let rsr = seq.counters.rs_reads as f64 / t3.counters.rs_reads.max(1) as f64;
-                let gr = seq.counters.gemm_reads as f64 / t3.counters.gemm_reads.max(1) as f64;
-                let wr = (seq.counters.gemm_writes + seq.counters.rs_writes) as f64
-                    / (t3.counters.gemm_writes + t3.counters.rs_writes).max(1) as f64;
+                let rsr =
+                    seq.m.counters.rs_reads as f64 / t3.m.counters.rs_reads.max(1) as f64;
+                let gr =
+                    seq.m.counters.gemm_reads as f64 / t3.m.counters.gemm_reads.max(1) as f64;
+                let wr = (seq.m.counters.gemm_writes + seq.m.counters.rs_writes) as f64
+                    / (t3.m.counters.gemm_writes + t3.m.counters.rs_writes).max(1) as f64;
                 rs_read_ratios.push(rsr);
                 gemm_read_ratios.push(gr);
                 write_ratios.push(wr);
@@ -460,6 +530,17 @@ pub fn fig18(sys: &SystemConfig) -> Table {
 // ---------------------------------------------------------------------
 
 pub fn fig19(sys: &SystemConfig) -> Table {
+    let models = ["Mega-GPT-2", "T-NLG", "GPT-3", "PALM", "MT-NLG"];
+    let rs = ExperimentSpec::new("fig19")
+        .system(sys.clone())
+        .models(&models)
+        .scenarios([
+            ScenarioSpec::sequential(),
+            ScenarioSpec::t3(),
+            ScenarioSpec::t3_mca(),
+        ])
+        .run();
+
     let mut t = Table::new(
         "fig19",
         "End-to-end iteration speedups over Sequential",
@@ -467,19 +548,15 @@ pub fn fig19(sys: &SystemConfig) -> Table {
     );
     let mut train_sp = Vec::new();
     let mut prompt_sp = Vec::new();
-    for name in ["Mega-GPT-2", "T-NLG", "GPT-3", "PALM", "MT-NLG"] {
+    for name in models {
         let m = by_name(name).unwrap();
         for &tp in m.tp_degrees {
             for phase in [Phase::Training, Phase::Prompt] {
-                let e = end_to_end(
-                    sys,
-                    &m,
-                    tp,
-                    phase,
-                    &[Scenario::Sequential, Scenario::T3, Scenario::T3Mca],
-                );
-                let sp3 = e.speedup(Scenario::T3);
-                let spm = e.speedup(Scenario::T3Mca);
+                let e = rs
+                    .end_to_end(sys, &m, tp, phase, &["Sequential", "T3", "T3-MCA"])
+                    .expect("complete grid");
+                let sp3 = e.speedup("Sequential", "T3");
+                let spm = e.speedup("Sequential", "T3-MCA");
                 match phase {
                     Phase::Training => train_sp.push(spm),
                     Phase::Prompt => prompt_sp.push(spm),
@@ -488,7 +565,7 @@ pub fn fig19(sys: &SystemConfig) -> Table {
                     name.to_string(),
                     tp.to_string(),
                     (if phase == Phase::Training { "train" } else { "prompt" }).to_string(),
-                    ms(e.total(Scenario::Sequential)),
+                    ms(e.total("Sequential")),
                     format!("{sp3:.3}x"),
                     format!("{spm:.3}x"),
                 ]);
@@ -507,12 +584,33 @@ pub fn fig19(sys: &SystemConfig) -> Table {
 }
 
 // ---------------------------------------------------------------------
-// Figure 20 — future hardware with 2x CUs.
+// Figure 20 — future hardware with 2x CUs (a two-system experiment grid).
 // ---------------------------------------------------------------------
 
 pub fn fig20() -> Table {
     let base = SystemConfig::table1();
     let fut = SystemConfig::future_2x_cu();
+    // The paper's Fig 20 regime: each model's deployment TP (the smallest
+    // evaluated degree), where the large FC layers are compute-dominated.
+    let mut cells = Vec::new();
+    for name in ["Mega-GPT-2", "T-NLG", "GPT-3"] {
+        let m = by_name(name).unwrap();
+        let tp = *m.tp_degrees.first().unwrap();
+        let rs = ExperimentSpec::new("fig20")
+            .system(base.clone())
+            .system(fut.clone())
+            .model(m)
+            .tps(&[tp])
+            .sublayers([SubLayer::Fc2Fwd, SubLayer::OpFwd])
+            .scenarios([ScenarioSpec::sequential(), ScenarioSpec::t3_mca()])
+            .run();
+        cells.extend(rs.cells);
+    }
+    let rs = ResultSet {
+        experiment: "fig20".to_string(),
+        cells,
+    };
+
     let mut t = Table::new(
         "fig20",
         "T3-MCA speedup on future hardware (2x CUs, same network)",
@@ -522,15 +620,16 @@ pub fn fig20() -> Table {
     let mut op_deltas = Vec::new();
     for name in ["Mega-GPT-2", "T-NLG", "GPT-3"] {
         let m = by_name(name).unwrap();
-        // The paper's Fig 20 regime: the model's deployment TP, where the
-        // large FC layers are compute-dominated (the smallest evaluated
-        // TP degree for each model).
         let tp = *m.tp_degrees.first().unwrap();
         for sub in [SubLayer::Fc2Fwd, SubLayer::OpFwd] {
             let sp = |sys: &SystemConfig| {
-                let seq = cached_sublayer(sys, &m, tp, sub, Scenario::Sequential);
-                let mca = cached_sublayer(sys, &m, tp, sub, Scenario::T3Mca);
-                sublayer_speedup(&seq, &mca)
+                let seq = rs
+                    .get_in(&sys.name, name, tp, sub, "Sequential")
+                    .expect("seq cell");
+                let mca = rs
+                    .get_in(&sys.name, name, tp, sub, "T3-MCA")
+                    .expect("mca cell");
+                seq.m.total.as_ps() as f64 / mca.m.total.as_ps() as f64
             };
             let b = sp(&base);
             let f = sp(&fut);
@@ -588,7 +687,6 @@ pub fn table3() -> Table {
 // ---------------------------------------------------------------------
 
 pub fn ablation_mca_thresholds(sys: &SystemConfig) -> Table {
-    use crate::engine::fused::{run_fused_gemm_rs, FusedOpts};
     let mut t = Table::new(
         "ablation_mca",
         "T3-MCA occupancy-threshold sensitivity (T-NLG FC-2 & OP, TP=8)",
@@ -608,7 +706,7 @@ pub fn ablation_mca_thresholds(sys: &SystemConfig) -> Table {
                 8,
                 &FusedOpts {
                     policy: crate::config::ArbPolicy::T3Mca,
-                    trace_bin: None,
+                    ..FusedOpts::default()
                 },
             );
             rows.push((thr, r.total, r.gemm_time));
@@ -692,6 +790,23 @@ mod tests {
         let p = t.write_csv(&dir).unwrap();
         let s = std::fs::read_to_string(p).unwrap();
         assert_eq!(s, "a,b\n1,2\n");
+    }
+
+    #[test]
+    fn malformed_row_is_an_error_in_every_profile() {
+        let mut t = Table::new("t", "demo", &["a", "b"]);
+        let err = t.try_row(vec!["only-one".into()]).unwrap_err();
+        assert_eq!(err.expected, 2);
+        assert_eq!(err.got, 1);
+        assert!(err.to_string().contains("table 't'"));
+        assert!(t.rows.is_empty());
+    }
+
+    #[test]
+    #[should_panic(expected = "row has 3 cells")]
+    fn row_panics_on_arity_mismatch() {
+        let mut t = Table::new("t", "demo", &["a", "b"]);
+        t.row(vec!["1".into(), "2".into(), "3".into()]);
     }
 
     #[test]

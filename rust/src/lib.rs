@@ -12,11 +12,18 @@
 //!   semantics and the MCA arbitration policy ([`hw::mc`]);
 //! * [`collectives`] — analytic, simulated (baseline + T3-fused), and
 //!   *functional* (real-buffer, bit-exact) implementations;
+//! * the declarative [`experiment`] API — the public entry point for
+//!   running simulations: composable [`experiment::ScenarioSpec`]s, a
+//!   named scenario registry, declarative [`experiment::ExperimentSpec`]
+//!   grids executed on a work-stealing thread pool, and queryable
+//!   [`experiment::ResultSet`]s;
 //! * a Transformer [`models`] zoo and end-to-end iteration projection
 //!   ([`exec`]) reproducing the paper's Figures 4/15/16/18/19/20;
 //! * a tensor-parallel [`coordinator`] that executes real numerics through
-//!   AOT-compiled JAX/Pallas artifacts via the PJRT [`runtime`];
-//! * the figure/table regeneration [`harness`].
+//!   AOT-compiled JAX/Pallas artifacts via the PJRT [`runtime`] (build
+//!   with `--features pjrt`);
+//! * the figure/table regeneration [`harness`], a thin view layer over
+//!   [`experiment`].
 //!
 //! See DESIGN.md for the architecture and EXPERIMENTS.md for results.
 
@@ -24,6 +31,8 @@ pub mod addrspace;
 pub mod collectives;
 pub mod coordinator;
 pub mod config;
+pub mod error;
+pub mod experiment;
 pub mod gemm;
 pub mod harness;
 pub mod hw;

@@ -1,19 +1,26 @@
 //! `t3` — CLI front-end of the T3 reproduction.
 //!
 //! Subcommands (hand-rolled parser; clap is not in the offline closure):
-//!   t3 config   [--future]
-//!   t3 models   --list
-//!   t3 simulate --model <name> --tp <n> --sublayer <op|fc2|fc1|ip> [--scenario <s>]
-//!   t3 figure   <4|6|14|15|16|17|18|19|20|table2|table3> [--csv <dir>]
-//!   t3 sweep    --model <name> [--tps 4,8,16,32]
-//!   t3 validate            (tracker/functional-collective cross-checks)
-//!   t3 run      [--artifacts <dir>]   (PJRT numeric smoke)
+//!   t3 config     [--future]
+//!   t3 models     --list
+//!   t3 scenarios            (named scenario registry + knobs)
+//!   t3 simulate   --model <name> --tp <n> --sublayer <op|fc2|fc1|ip> [--scenario <s>]
+//!   t3 experiment [--models a,b] [--tps 8,16] [--sublayers op,fc2] \
+//!                 [--scenarios s1,s2] [--future] [--threads n] [--csv dir]
+//!   t3 figure     <4|6|14|15|16|17|18|19|20|table2|table3> [--csv <dir>]
+//!   t3 sweep      --model <name> [--tps 4,8,16,32]
+//!   t3 validate             (tracker/functional-collective cross-checks)
+//!   t3 run        [--artifacts <dir>]   (PJRT numeric smoke; needs --features pjrt)
+//!
+//! `simulate`, `sweep`, and every grid figure are thin layers over the
+//! declarative experiment API (`t3::experiment`).
 
 use std::collections::HashMap;
 use std::process::ExitCode;
 
 use t3::config::SystemConfig;
-use t3::exec::{run_sublayer, sublayer_speedup, Scenario};
+use t3::error::Result;
+use t3::experiment::{self, ExperimentSpec, ScenarioSpec};
 use t3::harness;
 use t3::models::{by_name, zoo, SubLayer};
 
@@ -49,21 +56,33 @@ fn sublayer_from(s: &str) -> Option<SubLayer> {
     }
 }
 
-fn scenario_from(s: &str) -> Option<Scenario> {
-    match s.to_ascii_lowercase().as_str() {
-        "sequential" | "seq" => Some(Scenario::Sequential),
-        "t3" => Some(Scenario::T3),
-        "t3-mca" | "mca" => Some(Scenario::T3Mca),
-        "ideal" => Some(Scenario::IdealOverlap),
-        "ideal-nmc" => Some(Scenario::IdealRsNmc),
-        _ => None,
+/// Resolve a comma-separated scenario list against the registry.
+fn scenarios_from(s: &str) -> std::result::Result<Vec<ScenarioSpec>, String> {
+    let mut out = Vec::new();
+    for name in s.split(',').filter(|x| !x.is_empty()) {
+        match experiment::preset(name) {
+            Some(spec) => out.push(spec),
+            None => {
+                let known: Vec<String> =
+                    experiment::registry().into_iter().map(|s| s.name).collect();
+                return Err(format!(
+                    "unknown scenario '{name}'; registry: {}",
+                    known.join(", ")
+                ));
+            }
+        }
     }
+    Ok(out)
 }
 
-const USAGE: &str = "t3 <config|models|simulate|figure|sweep|validate|run> [flags]
+const USAGE: &str = "t3 <config|models|scenarios|simulate|experiment|figure|sweep|validate|run> [flags]
   t3 config [--future]
   t3 models --list
+  t3 scenarios
   t3 simulate --model T-NLG --tp 8 --sublayer fc2 [--scenario t3-mca]
+  t3 experiment [--models Mega-GPT-2,T-NLG] [--tps 8,16] [--sublayers op,fc2,fc1,ip]
+                [--scenarios sequential,t3-mca,ideal-72-8] [--future] [--threads N]
+                [--baseline Sequential] [--csv results]
   t3 figure <4|6|14|15|16|17|18|19|20|table2|table3|ablation> [--csv results]
   t3 sweep --model T-NLG [--tps 4,8,16]
   t3 validate
@@ -90,6 +109,19 @@ fn main() -> ExitCode {
             println!("{}", harness::table2().render());
             ExitCode::SUCCESS
         }
+        "scenarios" => {
+            let mut t = harness::Table::new(
+                "scenarios",
+                "Named scenario registry (t3::experiment)",
+                &["name", "knobs"],
+            );
+            for s in experiment::registry() {
+                t.row(vec![s.name.clone(), s.describe()]);
+            }
+            t.note("compose new ones in code: ScenarioSpec::new(..).overlap(..).gemm_cus(..)...");
+            println!("{}", t.render());
+            ExitCode::SUCCESS
+        }
         "simulate" => {
             let model = flags.get("model").map(String::as_str).unwrap_or("T-NLG");
             let tp: u64 = flags.get("tp").and_then(|s| s.parse().ok()).unwrap_or(8);
@@ -103,37 +135,151 @@ fn main() -> ExitCode {
                 eprintln!("unknown sublayer (op|fc2|fc1|ip)");
                 return ExitCode::FAILURE;
             };
-            let sys = SystemConfig::table1();
-            let scenarios: Vec<Scenario> = match flags.get("scenario") {
-                Some(s) => match scenario_from(s) {
-                    Some(sc) => vec![Scenario::Sequential, sc],
-                    None => {
-                        eprintln!("unknown scenario");
+            let scenarios = match flags.get("scenario") {
+                Some(s) => match scenarios_from(&format!("sequential,{s}")) {
+                    Ok(sc) => sc,
+                    Err(e) => {
+                        eprintln!("{e}");
                         return ExitCode::FAILURE;
                     }
                 },
-                None => Scenario::ALL.to_vec(),
+                None => experiment::paper_scenarios(),
             };
-            let seq = run_sublayer(&sys, &m, tp, sub, Scenario::Sequential);
+            let rs = ExperimentSpec::new("simulate")
+                .system(SystemConfig::table1())
+                .model(m.clone())
+                .tps(&[tp])
+                .sublayers([sub])
+                .scenarios(scenarios)
+                .run();
+            let Some(seq) = rs.get(m.name, tp, sub, "Sequential") else {
+                eprintln!(
+                    "TP={tp} is not valid for {} (needs TP >= 2 dividing H={})",
+                    m.name, m.hidden
+                );
+                return ExitCode::FAILURE;
+            };
             println!(
                 "{} TP={} {}: sequential GEMM {:.3}ms RS {:.3}ms AG {:.3}ms total {:.3}ms",
                 m.name,
                 tp,
                 sub.name(),
-                seq.gemm.as_ms_f64(),
-                seq.rs.as_ms_f64(),
-                seq.ag.as_ms_f64(),
-                seq.total.as_ms_f64()
+                seq.m.gemm.as_ms_f64(),
+                seq.m.rs.as_ms_f64(),
+                seq.m.ag.as_ms_f64(),
+                seq.m.total.as_ms_f64()
             );
-            for sc in scenarios.iter().filter(|s| **s != Scenario::Sequential) {
-                let r = run_sublayer(&sys, &m, tp, sub, *sc);
+            let seq_total = seq.m.total;
+            for c in rs.cells.iter().filter(|c| c.scenario != "Sequential") {
                 println!(
                     "  {:22} total {:.3}ms  speedup {:.3}x  dram {:.2} GB",
-                    sc.name(),
-                    r.total.as_ms_f64(),
-                    sublayer_speedup(&seq, &r),
-                    r.counters.total() as f64 / 1e9
+                    c.scenario,
+                    c.m.total.as_ms_f64(),
+                    seq_total.as_ps() as f64 / c.m.total.as_ps() as f64,
+                    c.m.counters.total() as f64 / 1e9
                 );
+            }
+            ExitCode::SUCCESS
+        }
+        "experiment" => {
+            let model_names: Vec<String> = flags
+                .get("models")
+                .map(|s| s.split(',').map(str::to_string).collect())
+                .unwrap_or_else(|| vec!["Mega-GPT-2".into(), "T-NLG".into()]);
+            let mut spec = ExperimentSpec::new(
+                flags.get("name").cloned().unwrap_or_else(|| "experiment".into()),
+            )
+            .system(SystemConfig::table1());
+            if flags.contains_key("future") {
+                spec = spec.system(SystemConfig::future_2x_cu());
+            }
+            for name in &model_names {
+                let Some(m) = by_name(name) else {
+                    eprintln!("unknown model {name}; try `t3 models --list`");
+                    return ExitCode::FAILURE;
+                };
+                spec = spec.model(m);
+            }
+            if let Some(tps) = flags.get("tps") {
+                let mut parsed = Vec::new();
+                for x in tps.split(',') {
+                    let Ok(tp) = x.parse::<u64>() else {
+                        eprintln!("bad --tps value '{x}' (expected e.g. 8,16)");
+                        return ExitCode::FAILURE;
+                    };
+                    parsed.push(tp);
+                }
+                spec = spec.tps(&parsed);
+            }
+            if let Some(subs) = flags.get("sublayers") {
+                let mut parsed = Vec::new();
+                for s in subs.split(',') {
+                    let Some(sub) = sublayer_from(s) else {
+                        eprintln!("unknown sublayer {s} (op|fc2|fc1|ip)");
+                        return ExitCode::FAILURE;
+                    };
+                    parsed.push(sub);
+                }
+                spec = spec.sublayers(parsed);
+            }
+            let scenario_list = flags
+                .get("scenarios")
+                .map(String::as_str)
+                .unwrap_or("sequential,t3,t3-mca");
+            match scenarios_from(scenario_list) {
+                Ok(sc) => spec = spec.scenarios(sc),
+                Err(e) => {
+                    eprintln!("{e}");
+                    return ExitCode::FAILURE;
+                }
+            }
+            if let Some(n) = flags.get("threads").and_then(|s| s.parse().ok()) {
+                spec = spec.threads(n);
+            }
+            if spec.scenarios.is_empty() {
+                eprintln!("no scenarios selected");
+                return ExitCode::FAILURE;
+            }
+            // Resolve the baseline through the registry (accepting the
+            // same aliases as --scenarios) and require it to be in the
+            // grid, so a typo errors instead of silently emptying every
+            // speedup column.
+            let baseline = match flags.get("baseline") {
+                Some(b) => match experiment::preset(b) {
+                    Some(spec_b) => spec_b.name,
+                    None => b.clone(),
+                },
+                None => spec.scenarios[0].name.clone(),
+            };
+            if !spec.scenarios.iter().any(|s| s.name == baseline) {
+                eprintln!(
+                    "baseline '{baseline}' is not among the selected scenarios ({})",
+                    spec.scenarios
+                        .iter()
+                        .map(|s| s.name.as_str())
+                        .collect::<Vec<_>>()
+                        .join(", ")
+                );
+                return ExitCode::FAILURE;
+            }
+            let started = std::time::Instant::now();
+            let rs = spec.run();
+            let t = rs.table(
+                &rs.experiment,
+                &format!("{} ({} cells)", rs.experiment, rs.cells.len()),
+                Some(&baseline),
+            );
+            println!("{}", t.render());
+            println!(
+                "[experiment] {} cells in {:.2}s",
+                rs.cells.len(),
+                started.elapsed().as_secs_f64()
+            );
+            if let Some(dir) = flags.get("csv") {
+                match t.write_csv(dir) {
+                    Ok(p) => println!("  (csv: {})", p.display()),
+                    Err(e) => eprintln!("  csv write failed: {e}"),
+                }
             }
             ExitCode::SUCCESS
         }
@@ -183,20 +329,27 @@ fn main() -> ExitCode {
                 .get("tps")
                 .map(|s| s.split(',').filter_map(|x| x.parse().ok()).collect())
                 .unwrap_or_else(|| vec![4, 8, 16]);
-            let sys = SystemConfig::table1();
+            let spec = ExperimentSpec::new("sweep")
+                .system(SystemConfig::table1())
+                .model(m.clone())
+                .tps(&tps)
+                .sublayers([SubLayer::Fc2Fwd])
+                .scenarios([ScenarioSpec::sequential(), ScenarioSpec::t3_mca()]);
+            let valid = spec.tps_for(&m);
+            let rs = spec.run();
             println!("TP sweep for {} (FC-2 fwd):", m.name);
             for tp in tps {
-                if m.hidden % tp != 0 {
-                    println!("  TP={tp}: skipped (H % TP != 0)");
+                if !valid.contains(&tp) {
+                    println!("  TP={tp}: skipped (needs TP >= 2 dividing H={})", m.hidden);
                     continue;
                 }
-                let seq = run_sublayer(&sys, &m, tp, SubLayer::Fc2Fwd, Scenario::Sequential);
-                let mca = run_sublayer(&sys, &m, tp, SubLayer::Fc2Fwd, Scenario::T3Mca);
+                let seq = rs.get(m.name, tp, SubLayer::Fc2Fwd, "Sequential").unwrap();
+                let mca = rs.get(m.name, tp, SubLayer::Fc2Fwd, "T3-MCA").unwrap();
                 println!(
                     "  TP={tp}: seq {:.3}ms -> T3-MCA {:.3}ms ({:.3}x)",
-                    seq.total.as_ms_f64(),
-                    mca.total.as_ms_f64(),
-                    sublayer_speedup(&seq, &mca)
+                    seq.m.total.as_ms_f64(),
+                    mca.m.total.as_ms_f64(),
+                    seq.m.total.as_ps() as f64 / mca.m.total.as_ps() as f64
                 );
             }
             ExitCode::SUCCESS
@@ -250,6 +403,10 @@ fn main() -> ExitCode {
             ExitCode::SUCCESS
         }
         "run" => {
+            if !t3::runtime::Runtime::pjrt_enabled() {
+                eprintln!("built without the `pjrt` feature; rebuild with `--features pjrt`");
+                return ExitCode::FAILURE;
+            }
             let dir = flags
                 .get("artifacts")
                 .map(std::path::PathBuf::from)
@@ -261,7 +418,7 @@ fn main() -> ExitCode {
             match smoke_run(&dir) {
                 Ok(()) => ExitCode::SUCCESS,
                 Err(e) => {
-                    eprintln!("run failed: {e:#}");
+                    eprintln!("run failed: {e}");
                     ExitCode::FAILURE
                 }
             }
@@ -274,7 +431,7 @@ fn main() -> ExitCode {
 }
 
 /// PJRT numeric smoke: sliced GEMM partials all-reduced == oracle.
-fn smoke_run(dir: &std::path::Path) -> anyhow::Result<()> {
+fn smoke_run(dir: &std::path::Path) -> Result<()> {
     use t3::runtime::{Runtime, TensorF32};
     let mut rt = Runtime::new(dir)?;
     println!("PJRT platform: {}", rt.platform());
@@ -322,7 +479,7 @@ fn smoke_run(dir: &std::path::Path) -> anyhow::Result<()> {
         .map(|(a, b)| (*a as f64 - b).abs())
         .fold(0.0f64, f64::max);
     println!("sliced GEMM + ring-AR vs oracle: max abs err {max_err:.3e}");
-    anyhow::ensure!(max_err < 1e-2, "numeric mismatch");
+    t3::ensure!(max_err < 1e-2, "numeric mismatch");
     println!("run OK — {} models in zoo, PJRT path verified", zoo().len());
     Ok(())
 }

@@ -6,11 +6,15 @@
 //! expose a typed f32 execute helper. This is the only place Python-built
 //! bits enter the Rust hot path — as compiled XLA executables, never as a
 //! Python interpreter.
+//!
+//! The `xla` crate is not part of the offline dependency closure, so the
+//! real implementation is gated behind the `pjrt` cargo feature (see
+//! Cargo.toml for how to enable it). The default build ships a stub
+//! [`Runtime`] with the same API whose constructor returns an error;
+//! callers gate on [`Runtime::pjrt_enabled`] /
+//! [`Runtime::artifacts_available`] and skip gracefully.
 
-use std::collections::HashMap;
 use std::path::{Path, PathBuf};
-
-use anyhow::{anyhow, bail, Context, Result};
 
 /// A named f32 tensor argument.
 #[derive(Debug, Clone)]
@@ -36,110 +40,189 @@ impl TensorF32 {
     }
 }
 
-/// The artifact-backed PJRT runtime.
-pub struct Runtime {
-    client: xla::PjRtClient,
-    dir: PathBuf,
-    cache: HashMap<String, xla::PjRtLoadedExecutable>,
+/// Default artifact directory relative to the repo root, honoring
+/// `T3_ARTIFACTS` for out-of-tree runs.
+fn default_artifact_dir() -> PathBuf {
+    std::env::var_os("T3_ARTIFACTS")
+        .map(PathBuf::from)
+        .unwrap_or_else(|| PathBuf::from("artifacts"))
 }
 
-impl Runtime {
-    /// CPU PJRT client rooted at `dir` (usually `artifacts/`).
-    pub fn new(dir: impl AsRef<Path>) -> Result<Self> {
-        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
-        Ok(Runtime {
-            client,
-            dir: dir.as_ref().to_path_buf(),
-            cache: HashMap::new(),
-        })
+/// Do the artifacts exist? (Examples/tests skip gracefully if not.)
+fn artifacts_present(dir: &Path) -> bool {
+    dir.join("manifest.txt").exists()
+}
+
+#[cfg(feature = "pjrt")]
+mod imp {
+    use std::collections::HashMap;
+    use std::path::{Path, PathBuf};
+
+    use crate::error::{Context, Error, Result};
+
+    use super::TensorF32;
+
+    /// The artifact-backed PJRT runtime.
+    pub struct Runtime {
+        client: xla::PjRtClient,
+        dir: PathBuf,
+        cache: HashMap<String, xla::PjRtLoadedExecutable>,
     }
 
-    /// Default artifact directory relative to the repo root, honoring
-    /// `T3_ARTIFACTS` for out-of-tree runs.
-    pub fn default_dir() -> PathBuf {
-        std::env::var_os("T3_ARTIFACTS")
-            .map(PathBuf::from)
-            .unwrap_or_else(|| PathBuf::from("artifacts"))
-    }
-
-    pub fn platform(&self) -> String {
-        self.client.platform_name()
-    }
-
-    /// Do the artifacts exist? (Examples/tests skip gracefully if not.)
-    pub fn artifacts_available(dir: impl AsRef<Path>) -> bool {
-        dir.as_ref().join("manifest.txt").exists()
-    }
-
-    /// Names listed in the manifest.
-    pub fn manifest(&self) -> Result<Vec<String>> {
-        let text = std::fs::read_to_string(self.dir.join("manifest.txt"))
-            .context("reading artifacts/manifest.txt — run `make artifacts`")?;
-        Ok(text
-            .lines()
-            .filter(|l| !l.trim().is_empty())
-            .map(|l| l.split_whitespace().next().unwrap_or("").to_string())
-            .collect())
-    }
-
-    /// Load + compile an artifact (cached).
-    pub fn load(&mut self, name: &str) -> Result<()> {
-        if self.cache.contains_key(name) {
-            return Ok(());
+    impl Runtime {
+        /// CPU PJRT client rooted at `dir` (usually `artifacts/`).
+        pub fn new(dir: impl AsRef<Path>) -> Result<Self> {
+            let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
+            Ok(Runtime {
+                client,
+                dir: dir.as_ref().to_path_buf(),
+                cache: HashMap::new(),
+            })
         }
-        let path = self.dir.join(format!("{name}.hlo.txt"));
-        if !path.exists() {
-            bail!(
-                "artifact {:?} not found — run `make artifacts` first",
-                path
-            );
-        }
-        let proto = xla::HloModuleProto::from_text_file(
-            path.to_str().ok_or_else(|| anyhow!("non-utf8 path"))?,
-        )
-        .with_context(|| format!("parsing HLO text {path:?}"))?;
-        let comp = xla::XlaComputation::from_proto(&proto);
-        let exe = self
-            .client
-            .compile(&comp)
-            .with_context(|| format!("compiling artifact {name}"))?;
-        self.cache.insert(name.to_string(), exe);
-        Ok(())
-    }
 
-    /// Execute artifact `name` on f32 inputs; returns the flattened f32
-    /// outputs of the (tuple) result, in order.
-    pub fn exec_f32(&mut self, name: &str, inputs: &[TensorF32]) -> Result<Vec<Vec<f32>>> {
-        self.load(name)?;
-        let exe = self.cache.get(name).unwrap();
-        let mut literals = Vec::with_capacity(inputs.len());
-        for t in inputs {
-            let dims: Vec<i64> = t.dims.iter().map(|&d| d as i64).collect();
-            let lit = xla::Literal::vec1(&t.data)
-                .reshape(&dims)
-                .context("reshaping input literal")?;
-            literals.push(lit);
+        pub fn default_dir() -> PathBuf {
+            super::default_artifact_dir()
         }
-        let result = exe
-            .execute::<xla::Literal>(&literals)
-            .with_context(|| format!("executing {name}"))?[0][0]
-            .to_literal_sync()?;
-        // aot.py lowers with return_tuple=True: unpack every element.
-        let tuple = result.to_tuple()?;
-        let mut out = Vec::with_capacity(tuple.len());
-        for lit in tuple {
-            out.push(lit.to_vec::<f32>()?);
+
+        pub fn platform(&self) -> String {
+            self.client.platform_name()
         }
-        Ok(out)
+
+        /// Compiled against the real PJRT backend?
+        pub fn pjrt_enabled() -> bool {
+            true
+        }
+
+        pub fn artifacts_available(dir: impl AsRef<Path>) -> bool {
+            super::artifacts_present(dir.as_ref())
+        }
+
+        /// Names listed in the manifest.
+        pub fn manifest(&self) -> Result<Vec<String>> {
+            let text = std::fs::read_to_string(self.dir.join("manifest.txt"))
+                .context("reading artifacts/manifest.txt — run `make artifacts`")?;
+            Ok(text
+                .lines()
+                .filter(|l| !l.trim().is_empty())
+                .map(|l| l.split_whitespace().next().unwrap_or("").to_string())
+                .collect())
+        }
+
+        /// Load + compile an artifact (cached).
+        pub fn load(&mut self, name: &str) -> Result<()> {
+            if self.cache.contains_key(name) {
+                return Ok(());
+            }
+            let path = self.dir.join(format!("{name}.hlo.txt"));
+            if !path.exists() {
+                return Err(Error::msg(format!(
+                    "artifact {path:?} not found — run `make artifacts` first"
+                )));
+            }
+            let proto = xla::HloModuleProto::from_text_file(
+                path.to_str().ok_or_else(|| Error::msg("non-utf8 path"))?,
+            )
+            .with_context(|| format!("parsing HLO text {path:?}"))?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            let exe = self
+                .client
+                .compile(&comp)
+                .with_context(|| format!("compiling artifact {name}"))?;
+            self.cache.insert(name.to_string(), exe);
+            Ok(())
+        }
+
+        /// Execute artifact `name` on f32 inputs; returns the flattened f32
+        /// outputs of the (tuple) result, in order.
+        pub fn exec_f32(&mut self, name: &str, inputs: &[TensorF32]) -> Result<Vec<Vec<f32>>> {
+            self.load(name)?;
+            let exe = self.cache.get(name).unwrap();
+            let mut literals = Vec::with_capacity(inputs.len());
+            for t in inputs {
+                let dims: Vec<i64> = t.dims.iter().map(|&d| d as i64).collect();
+                let lit = xla::Literal::vec1(&t.data)
+                    .reshape(&dims)
+                    .context("reshaping input literal")?;
+                literals.push(lit);
+            }
+            let result = exe
+                .execute::<xla::Literal>(&literals)
+                .with_context(|| format!("executing {name}"))?[0][0]
+                .to_literal_sync()
+                .context("syncing result literal")?;
+            // aot.py lowers with return_tuple=True: unpack every element.
+            let tuple = result.to_tuple().context("unpacking result tuple")?;
+            let mut out = Vec::with_capacity(tuple.len());
+            for lit in tuple {
+                out.push(lit.to_vec::<f32>().context("reading f32 output")?);
+            }
+            Ok(out)
+        }
     }
 }
+
+#[cfg(not(feature = "pjrt"))]
+mod imp {
+    use std::path::{Path, PathBuf};
+
+    use crate::error::{Error, Result};
+
+    use super::TensorF32;
+
+    /// Stub runtime for builds without the `pjrt` feature: same API, the
+    /// constructor reports how to enable the real one.
+    pub struct Runtime {
+        _dir: PathBuf,
+    }
+
+    const DISABLED: &str =
+        "PJRT runtime disabled: rebuild with `--features pjrt` (see Cargo.toml)";
+
+    impl Runtime {
+        pub fn new(_dir: impl AsRef<Path>) -> Result<Self> {
+            Err(Error::msg(DISABLED))
+        }
+
+        pub fn default_dir() -> PathBuf {
+            super::default_artifact_dir()
+        }
+
+        pub fn platform(&self) -> String {
+            "pjrt-disabled".to_string()
+        }
+
+        /// Compiled against the real PJRT backend?
+        pub fn pjrt_enabled() -> bool {
+            false
+        }
+
+        pub fn artifacts_available(dir: impl AsRef<Path>) -> bool {
+            super::artifacts_present(dir.as_ref())
+        }
+
+        pub fn manifest(&self) -> Result<Vec<String>> {
+            Err(Error::msg(DISABLED))
+        }
+
+        pub fn load(&mut self, _name: &str) -> Result<()> {
+            Err(Error::msg(DISABLED))
+        }
+
+        pub fn exec_f32(&mut self, _name: &str, _inputs: &[TensorF32]) -> Result<Vec<Vec<f32>>> {
+            Err(Error::msg(DISABLED))
+        }
+    }
+}
+
+pub use imp::Runtime;
 
 #[cfg(test)]
 mod tests {
     use super::*;
 
     // Full runtime round-trips live in rust/tests/runtime_integration.rs
-    // (they need `make artifacts`); here we cover the pure parts.
+    // (they need `make artifacts` and `--features pjrt`); here we cover
+    // the pure parts.
 
     #[test]
     fn tensor_shape_checks() {
@@ -158,5 +241,13 @@ mod tests {
     #[test]
     fn artifacts_available_is_false_for_missing_dir() {
         assert!(!Runtime::artifacts_available("/nonexistent/dir"));
+    }
+
+    #[cfg(not(feature = "pjrt"))]
+    #[test]
+    fn stub_constructor_explains_feature() {
+        assert!(!Runtime::pjrt_enabled());
+        let err = Runtime::new("artifacts").err().unwrap().to_string();
+        assert!(err.contains("pjrt"), "{err}");
     }
 }

@@ -1,0 +1,232 @@
+//! Experiment-API contract tests:
+//!
+//! * the registry presets bit-match the pre-refactor enum paths (a frozen
+//!   copy of the old `exec::run_sublayer` dispatch lives here as the
+//!   reference);
+//! * the parallel grid executor is deterministic — the same `ResultSet`
+//!   for any worker count;
+//! * composed scenarios (not expressible with the old enum) run end to
+//!   end through `ExperimentSpec`;
+//! * golden renderings for `Table::render` / `Table::write_csv`.
+
+use t3::config::{ArbPolicy, SystemConfig};
+use t3::engine::collective_run::{run_ag_baseline, run_rs_baseline, run_rs_nmc};
+use t3::engine::fused::{run_fused_gemm_rs, FusedOpts};
+use t3::engine::gemm_run::run_gemm;
+use t3::exec::{run_sublayer, Scenario};
+use t3::experiment::{ExperimentSpec, ScenarioSpec};
+use t3::gemm::traffic::WriteMode;
+use t3::gemm::{StagePlan, Tiling};
+use t3::harness::Table;
+use t3::models::{by_name, sublayer_gemm, ModelCfg, SubLayer};
+use t3::sim::stats::DramCounters;
+use t3::sim::time::SimTime;
+
+fn sys() -> SystemConfig {
+    SystemConfig::table1()
+}
+
+/// Frozen copy of the pre-refactor `exec::run_sublayer` match (the closed
+/// five-scenario dispatch), kept as the parity reference for the registry
+/// presets. Returns (gemm, rs, ag, total, counters).
+fn legacy_run_sublayer(
+    sys: &SystemConfig,
+    model: &ModelCfg,
+    tp: u64,
+    sub: SubLayer,
+    scenario: Scenario,
+) -> (SimTime, SimTime, SimTime, SimTime, DramCounters) {
+    let shape = sublayer_gemm(model, tp, sub);
+    let plan = StagePlan::new(shape, Tiling::default(), &sys.gpu);
+    let ar_bytes = shape.out_bytes();
+    let cus = sys.gpu.cu_count;
+
+    let ag = run_ag_baseline(sys, ar_bytes, tp, cus);
+    match scenario {
+        Scenario::Sequential => {
+            let g = run_gemm(sys, &plan, cus, WriteMode::ThroughLlc);
+            let rs = run_rs_baseline(sys, ar_bytes, tp, cus);
+            let mut counters = g.counters;
+            counters.add(&rs.counters);
+            counters.add(&ag.counters);
+            (g.time, rs.time, ag.time, g.time + rs.time + ag.time, counters)
+        }
+        Scenario::IdealOverlap | Scenario::IdealRsNmc => {
+            let g = run_gemm(sys, &plan, cus, WriteMode::ThroughLlc);
+            let rs = if scenario == Scenario::IdealOverlap {
+                run_rs_baseline(sys, ar_bytes, tp, cus)
+            } else {
+                run_rs_nmc(sys, ar_bytes, tp)
+            };
+            let overlapped = g.time.max(rs.time);
+            let mut counters = g.counters;
+            counters.add(&rs.counters);
+            counters.add(&ag.counters);
+            (g.time, rs.time, ag.time, overlapped + ag.time, counters)
+        }
+        Scenario::T3 | Scenario::T3Mca => {
+            let policy = if scenario == Scenario::T3 {
+                ArbPolicy::RoundRobin
+            } else {
+                ArbPolicy::T3Mca
+            };
+            let fused = run_fused_gemm_rs(
+                sys,
+                &plan,
+                tp,
+                &FusedOpts {
+                    policy,
+                    ..FusedOpts::default()
+                },
+            );
+            let mut counters = fused.counters;
+            counters.add(&ag.counters);
+            (
+                fused.gemm_time,
+                fused.total - fused.gemm_time,
+                ag.time,
+                fused.total + ag.time,
+                counters,
+            )
+        }
+    }
+}
+
+#[test]
+fn registry_presets_bit_match_legacy_enum_paths() {
+    let s = sys();
+    let m = by_name("T-NLG").unwrap();
+    for sub in [SubLayer::OpFwd, SubLayer::Fc2Fwd] {
+        for sc in Scenario::ALL {
+            let (gemm, rs, ag, total, counters) = legacy_run_sublayer(&s, &m, 8, sub, sc);
+            // The enum wrapper...
+            let via_enum = run_sublayer(&s, &m, 8, sub, sc);
+            assert_eq!(via_enum.gemm, gemm, "{sc:?} {sub:?} gemm");
+            assert_eq!(via_enum.rs, rs, "{sc:?} {sub:?} rs");
+            assert_eq!(via_enum.ag, ag, "{sc:?} {sub:?} ag");
+            assert_eq!(via_enum.total, total, "{sc:?} {sub:?} total");
+            assert_eq!(via_enum.counters, counters, "{sc:?} {sub:?} counters");
+            // ...and the registry preset it names.
+            let via_spec = sc.spec().run(&s, &m, 8, sub);
+            assert_eq!(via_spec.total, total, "{sc:?} {sub:?} spec total");
+            assert_eq!(via_spec.counters, counters, "{sc:?} {sub:?} spec counters");
+        }
+    }
+}
+
+#[test]
+fn parallel_executor_is_deterministic_across_thread_counts() {
+    let grid = |threads: usize| {
+        ExperimentSpec::new("det")
+            .system(sys())
+            .models(&["T-NLG"])
+            .tps(&[8])
+            .sublayers([SubLayer::OpFwd, SubLayer::Fc2Fwd])
+            .scenarios([
+                ScenarioSpec::sequential(),
+                ScenarioSpec::t3_mca(),
+                ScenarioSpec::ideal_overlap(),
+            ])
+            .threads(threads)
+            .run()
+    };
+    let serial = grid(1);
+    let parallel = grid(4);
+    assert_eq!(serial.cells.len(), 6);
+    assert_eq!(serial, parallel, "ResultSet must not depend on thread count");
+}
+
+#[test]
+fn composed_scenarios_run_end_to_end() {
+    // Two scenarios the old enum could not express: partial-CU ideal
+    // overlap, and the fused engine under compute-priority arbitration.
+    let rs = ExperimentSpec::new("composed")
+        .system(sys())
+        .models(&["T-NLG"])
+        .tps(&[8])
+        .sublayers([SubLayer::Fc2Fwd])
+        .scenarios([
+            ScenarioSpec::ideal_overlap(),
+            ScenarioSpec::ideal_overlap()
+                .named("Ideal-Split-64-16")
+                .gemm_cus(64)
+                .comm_cus(16),
+            ScenarioSpec::t3()
+                .named("T3-CompPrio")
+                .policy(ArbPolicy::ComputePriority),
+        ])
+        .run();
+    assert_eq!(rs.cells.len(), 3);
+    let free = rs.get("T-NLG", 8, SubLayer::Fc2Fwd, "Ideal-GEMM-RS-Overlap").unwrap();
+    let split = rs.get("T-NLG", 8, SubLayer::Fc2Fwd, "Ideal-Split-64-16").unwrap();
+    let comppri = rs.get("T-NLG", 8, SubLayer::Fc2Fwd, "T3-CompPrio").unwrap();
+    assert!(split.m.total >= free.m.total, "fewer CUs cannot beat free overlap");
+    assert!(comppri.m.total > SimTime::ZERO);
+    assert!(comppri.m.gemm > SimTime::ZERO);
+    // Compute-priority still overlaps: cheaper than GEMM + isolated RS.
+    let seq = ScenarioSpec::sequential().run(&sys(), &by_name("T-NLG").unwrap(), 8, SubLayer::Fc2Fwd);
+    assert!(comppri.m.total < seq.total);
+}
+
+#[test]
+fn experiment_geomean_queries_match_manual_math() {
+    let rs = ExperimentSpec::new("q")
+        .system(sys())
+        .models(&["T-NLG"])
+        .tps(&[8])
+        .sublayers([SubLayer::OpFwd, SubLayer::Fc2Fwd])
+        .scenarios([ScenarioSpec::sequential(), ScenarioSpec::t3_mca()])
+        .run();
+    let sp = rs.speedups_over("Sequential", "T3-MCA");
+    assert_eq!(sp.len(), 2);
+    let manual = (sp[0] * sp[1]).sqrt();
+    let queried = rs.geomean_speedup("Sequential", "T3-MCA");
+    assert!((queried - manual).abs() < 1e-9, "{queried} vs {manual}");
+    // Both sub-layers must speed up under T3-MCA.
+    assert!(sp.iter().all(|&x| x > 1.0), "{sp:?}");
+}
+
+#[test]
+fn golden_table_render() {
+    let mut t = Table::new("g1", "golden", &["name", "v"]);
+    t.row(vec!["alpha".into(), "1.50x".into()]);
+    t.row(vec!["b".into(), "2".into()]);
+    t.note("a note");
+    let want = "\
+== g1 — golden ==
+| name  | v     |
+|-------|-------|
+| alpha | 1.50x |
+| b     | 2     |
+  * a note
+";
+    assert_eq!(t.render(), want);
+}
+
+#[test]
+fn golden_table_csv() {
+    let mut t = Table::new("g2", "golden csv", &["a", "b,c"]);
+    t.row(vec!["1".into(), "2".into()]);
+    t.row(vec!["x".into(), "y".into()]);
+    let dir = std::env::temp_dir().join("t3-experiment-api-test");
+    let p = t.write_csv(&dir).unwrap();
+    assert!(p.ends_with("g2.csv"));
+    assert_eq!(std::fs::read_to_string(p).unwrap(), "a,b,c\n1,2\nx,y\n");
+}
+
+#[test]
+fn result_set_table_view_renders_grid() {
+    let rs = ExperimentSpec::new("view")
+        .system(sys())
+        .models(&["T-NLG"])
+        .tps(&[8])
+        .sublayers([SubLayer::OpFwd])
+        .scenarios([ScenarioSpec::sequential(), ScenarioSpec::ideal_rs_nmc()])
+        .run();
+    let t = rs.table("view", "view", Some("Sequential"));
+    assert_eq!(t.rows.len(), 1);
+    assert!(t.headers.iter().any(|h| h == "Ideal-RS+NMC ms"));
+    let rendered = t.render();
+    assert!(rendered.contains("T-NLG"), "{rendered}");
+    assert!(t.notes[0].contains("geomean"), "{:?}", t.notes);
+}

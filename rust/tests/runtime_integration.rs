@@ -13,6 +13,10 @@ const FFN_SLICE: usize = 512;
 const TP: usize = 4;
 
 fn artifacts() -> Option<std::path::PathBuf> {
+    if !Runtime::pjrt_enabled() {
+        eprintln!("skipping: built without the `pjrt` feature");
+        return None;
+    }
     let dir = Runtime::default_dir();
     if Runtime::artifacts_available(&dir) {
         Some(dir)

@@ -70,7 +70,7 @@ fn prop_scenario_ordering() {
             devices,
             &FusedOpts {
                 policy: ArbPolicy::T3Mca,
-                trace_bin: None,
+                ..FusedOpts::default()
             },
         );
         assert!(
@@ -180,7 +180,7 @@ fn prop_sim_deterministic() {
         let s = sys();
         let opts = FusedOpts {
             policy: ArbPolicy::T3Mca,
-            trace_bin: None,
+            ..FusedOpts::default()
         };
         let a = run_fused_gemm_rs(&s, &plan, devices, &opts);
         let b = run_fused_gemm_rs(&s, &plan, devices, &opts);
@@ -252,7 +252,7 @@ fn prop_fused_times_bounded_by_components() {
             devices,
             &FusedOpts {
                 policy: ArbPolicy::T3Mca,
-                trace_bin: None,
+                ..FusedOpts::default()
             },
         );
         assert!(fused.total >= fused.gemm_time);
