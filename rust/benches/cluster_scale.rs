@@ -1,0 +1,79 @@
+//! Wall-clock scaling of the multi-rank cluster engine vs TP degree:
+//! every rank is a full event-driven node, so simulator cost grows with
+//! the rank count. Reports, per TP in {4, 8, 16}: the uniform cluster's
+//! wall time, the loopback mirror's wall time (the single-rank engine the
+//! uniform cluster must bit-match), and a straggler run's simulated
+//! slowdown — the measurement only the multi-rank engine can make.
+
+mod common;
+
+use std::time::Instant;
+
+use t3::cluster::{run_fused_cluster, ClusterModel, Interleave};
+use t3::config::SystemConfig;
+use t3::engine::fused::{run_fused_gemm_rs, FusedOpts};
+use t3::gemm::{StagePlan, Tiling};
+use t3::harness::Table;
+use t3::models::{by_name, sublayer_gemm, SubLayer};
+
+fn main() {
+    let t0 = Instant::now();
+    let sys = SystemConfig::table1();
+    let m = by_name("T-NLG").unwrap();
+    let opts = FusedOpts::default();
+
+    let mut t = Table::new(
+        "cluster_scale",
+        "Cluster engine wall-clock vs TP degree (T-NLG FC-2 fwd, T3-MCA)",
+        &[
+            "tp",
+            "mirror wall s",
+            "cluster wall s",
+            "wall ratio",
+            "sim total ms",
+            "straggler sim ms",
+            "straggler cost",
+        ],
+    );
+    for tp in [4u64, 8, 16] {
+        let shape = sublayer_gemm(&m, tp, SubLayer::Fc2Fwd);
+        let plan = StagePlan::new(shape, Tiling::default(), &sys.gpu);
+
+        let w0 = Instant::now();
+        let mirror = run_fused_gemm_rs(&sys, &plan, tp, &opts);
+        let mirror_wall = w0.elapsed().as_secs_f64();
+
+        let w1 = Instant::now();
+        let uniform =
+            run_fused_cluster(&sys, &plan, tp, &opts, &ClusterModel::uniform(), Interleave::Ascending);
+        let cluster_wall = w1.elapsed().as_secs_f64();
+        assert_eq!(
+            uniform.per_rank[0].total, mirror.total,
+            "uniform cluster must bit-match the mirror (tp={tp})"
+        );
+
+        let straggler = run_fused_cluster(
+            &sys,
+            &plan,
+            tp,
+            &opts,
+            &ClusterModel::straggler(1, 1.25),
+            Interleave::Ascending,
+        );
+
+        t.row(vec![
+            tp.to_string(),
+            format!("{mirror_wall:.3}"),
+            format!("{cluster_wall:.3}"),
+            format!("{:.1}x", cluster_wall / mirror_wall.max(1e-9)),
+            format!("{:.3}", uniform.total().as_ms_f64()),
+            format!("{:.3}", straggler.total().as_ms_f64()),
+            format!(
+                "{:+.1}%",
+                (straggler.total().as_ps() as f64 / uniform.total().as_ps() as f64 - 1.0) * 100.0
+            ),
+        ]);
+    }
+    t.note("cluster simulates every rank in full: wall ratio ~ TP (vs the single-rank mirror)");
+    common::emit(vec![t], t0);
+}

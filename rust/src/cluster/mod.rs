@@ -1,0 +1,41 @@
+//! Multi-rank cluster engine: every TP rank simulated as a communicating
+//! event-driven node.
+//!
+//! The single-rank engine ([`crate::engine`]) models one GPU and mirrors
+//! its egress into its ingress — exact for the paper's homogeneous node
+//! (§5.1.1), but blind to the effects that dominate tail latency at
+//! cluster scale: rank skew, stragglers, and hierarchical interconnects.
+//! This module instantiates `tp` per-rank nodes — each with its own
+//! event calendar, GEMM wavefront timeline, tracker/DMA trigger state, and
+//! HBM/MC contention model — connected by explicit per-edge links, so ring
+//! collective steps become hop-by-hop transfers between neighbor ranks: a
+//! slow rank or congested link delays exactly the chunks that transit it.
+//!
+//! Pieces:
+//! * [`ClusterModel`] / [`SkewModel`] / [`TopologySpec`] — the declarative
+//!   cluster description: per-rank compute skew (deterministic via
+//!   [`crate::sim::rng`]) and single- vs two-tier link topology;
+//! * [`drive`] — the canonical global event loop over per-rank calendars
+//!   (see [`engine`] for the delivery rule and its determinism /
+//!   interleaving-independence argument);
+//! * [`run_fused_cluster`] — the T3 fused GEMM-RS on every rank;
+//! * [`run_ring_cluster`] / [`run_gemm_cluster`] — hop-by-hop baseline
+//!   collectives (with per-rank start offsets) and skewed per-rank GEMMs,
+//!   the building blocks of serialized/ideal cluster scenarios.
+//!
+//! **The old path is a special case:** with [`ClusterModel::uniform`]
+//! every rank runs an identical timeline and the cluster reproduces the
+//! loopback mirror bit-for-bit (pinned by `tests/cluster.rs` across the
+//! five paper presets). Scenario integration lives in
+//! [`crate::experiment`]: `ScenarioSpec::cluster` adds the cluster as an
+//! orthogonal scenario axis, and the registry ships straggler and
+//! two-tier presets; `t3 cluster` is the CLI view.
+
+pub mod engine;
+pub mod topology;
+
+pub use engine::{
+    drive, run_fused_cluster, run_gemm_cluster, run_ring_cluster, ClusterFusedRun,
+    ClusterRingRun, Interleave, RankNode, RingClusterSpec,
+};
+pub use topology::{ClusterModel, SkewModel, TopologySpec};

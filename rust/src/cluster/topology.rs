@@ -1,0 +1,281 @@
+//! Cluster shape: per-rank skew models and link topologies.
+//!
+//! A [`ClusterModel`] is the declarative description of how the `tp` ranks
+//! of a tensor-parallel group differ from the paper's idealized homogeneous
+//! node: *when* each rank computes (skew, stragglers) and *what* each ring
+//! hop looks like (single-tier vs two-tier links). The model is pure data —
+//! the multi-rank engine ([`super::engine`]) instantiates it, and the
+//! experiment registry exposes named scenarios built from it.
+
+use crate::config::LinkConfig;
+use crate::sim::rng::Rng;
+use crate::sim::time::SimTime;
+
+/// Seed salt so cluster skew draws are decoupled from any other
+/// `sim::rng` consumer of the system seed.
+const SKEW_SALT: u64 = 0x5CED_C1A5_7E12_0001;
+
+/// Per-rank compute-speed skew. Factors are multiplicative slowdowns
+/// (1.0 = nominal); they stretch a rank's GEMM stage times and slow its
+/// CU-executed collective kernels' issue rate.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum SkewModel {
+    /// All ranks nominal (the paper's homogeneity assumption).
+    None,
+    /// One designated rank is `slowdown`x slower than the rest — the
+    /// classic straggler.
+    Straggler { rank: u64, slowdown: f64 },
+    /// Every rank draws a slowdown uniformly from `[1, 1 + amplitude)`,
+    /// deterministically from the system seed (`sim::rng`).
+    Jitter { amplitude: f64 },
+}
+
+impl SkewModel {
+    /// The per-rank slowdown factors for a `tp`-rank group.
+    pub fn factors(&self, tp: u64, seed: u64) -> Vec<f64> {
+        match *self {
+            SkewModel::None => vec![1.0; tp as usize],
+            SkewModel::Straggler { rank, slowdown } => {
+                assert!(rank < tp, "straggler rank {rank} out of range (tp={tp})");
+                assert!(slowdown >= 1.0, "slowdown must be >= 1.0");
+                let mut f = vec![1.0; tp as usize];
+                f[rank as usize] = slowdown;
+                f
+            }
+            SkewModel::Jitter { amplitude } => {
+                assert!(amplitude >= 0.0);
+                let mut rng = Rng::new(seed ^ SKEW_SALT);
+                (0..tp).map(|_| 1.0 + amplitude * rng.f64()).collect()
+            }
+        }
+    }
+
+    pub fn is_none(&self) -> bool {
+        matches!(self, SkewModel::None)
+    }
+}
+
+/// Ring-link topology of the group.
+#[derive(Debug, Clone, PartialEq)]
+pub enum TopologySpec {
+    /// Every hop uses the system's base link (the paper's Table-1 node).
+    SingleTier,
+    /// Ranks are packed into nodes of `node_size`; hops that stay inside a
+    /// node use the base link, hops that cross a node boundary use a
+    /// degraded link (`inter_bw_frac` of the base bandwidth,
+    /// `inter_latency` instead of the base latency) — the fast-NVLink /
+    /// slow-interconnect split of real clusters.
+    TwoTier {
+        node_size: u64,
+        inter_bw_frac: f64,
+        inter_latency: SimTime,
+    },
+}
+
+impl TopologySpec {
+    /// The node index a rank belongs to.
+    pub fn node_of(&self, rank: u64) -> u64 {
+        match *self {
+            TopologySpec::SingleTier => 0,
+            TopologySpec::TwoTier { node_size, .. } => rank / node_size,
+        }
+    }
+
+    /// The egress edge of `rank` — the link it sends on, toward its
+    /// downstream ring neighbor `(rank + tp - 1) % tp`.
+    pub fn egress_link(&self, base: &LinkConfig, rank: u64, tp: u64) -> LinkConfig {
+        match *self {
+            TopologySpec::SingleTier => base.clone(),
+            TopologySpec::TwoTier {
+                node_size,
+                inter_bw_frac,
+                inter_latency,
+            } => {
+                let down = (rank + tp - 1) % tp;
+                if rank / node_size == down / node_size {
+                    base.clone()
+                } else {
+                    LinkConfig {
+                        per_dir_bw_gbps: base.per_dir_bw_gbps * inter_bw_frac,
+                        latency: inter_latency,
+                    }
+                }
+            }
+        }
+    }
+
+    /// Does every hop of a `tp`-rank ring use the base link?
+    pub fn is_uniform_for(&self, tp: u64) -> bool {
+        match *self {
+            TopologySpec::SingleTier => true,
+            // A two-tier spec whose nodes hold the whole group degenerates
+            // to a single tier.
+            TopologySpec::TwoTier { node_size, .. } => node_size >= tp,
+        }
+    }
+}
+
+/// The complete cluster description: skew + topology.
+#[derive(Debug, Clone, PartialEq)]
+pub struct ClusterModel {
+    pub skew: SkewModel,
+    pub topology: TopologySpec,
+}
+
+impl ClusterModel {
+    /// No skew, single tier — the configuration that reproduces the
+    /// loopback-mirror engine bit-for-bit.
+    pub fn uniform() -> Self {
+        ClusterModel {
+            skew: SkewModel::None,
+            topology: TopologySpec::SingleTier,
+        }
+    }
+
+    /// Single-tier topology with one straggler rank.
+    pub fn straggler(rank: u64, slowdown: f64) -> Self {
+        ClusterModel {
+            skew: SkewModel::Straggler { rank, slowdown },
+            topology: TopologySpec::SingleTier,
+        }
+    }
+
+    /// Single-tier topology with per-rank jitter in `[1, 1 + amplitude)`.
+    pub fn jitter(amplitude: f64) -> Self {
+        ClusterModel {
+            skew: SkewModel::Jitter { amplitude },
+            topology: TopologySpec::SingleTier,
+        }
+    }
+
+    /// No skew, two-tier links.
+    pub fn two_tier(node_size: u64, inter_bw_frac: f64, inter_latency: SimTime) -> Self {
+        assert!(node_size > 0);
+        assert!(inter_bw_frac > 0.0 && inter_bw_frac <= 1.0);
+        ClusterModel {
+            skew: SkewModel::None,
+            topology: TopologySpec::TwoTier {
+                node_size,
+                inter_bw_frac,
+                inter_latency,
+            },
+        }
+    }
+
+    /// Replace the skew model (chainable).
+    pub fn with_skew(mut self, skew: SkewModel) -> Self {
+        self.skew = skew;
+        self
+    }
+
+    /// Replace the topology (chainable).
+    pub fn with_topology(mut self, topology: TopologySpec) -> Self {
+        self.topology = topology;
+        self
+    }
+
+    /// Per-rank compute slowdown factors.
+    pub fn factors(&self, tp: u64, seed: u64) -> Vec<f64> {
+        self.skew.factors(tp, seed)
+    }
+
+    /// Per-rank egress edges.
+    pub fn links(&self, base: &LinkConfig, tp: u64) -> Vec<LinkConfig> {
+        (0..tp)
+            .map(|r| self.topology.egress_link(base, r, tp))
+            .collect()
+    }
+
+    /// Is this exactly the homogeneous configuration the loopback mirror
+    /// models (for a `tp`-rank group)?
+    pub fn is_uniform_for(&self, tp: u64) -> bool {
+        self.skew.is_none() && self.topology.is_uniform_for(tp)
+    }
+
+    /// One-line knob summary for `t3 scenarios` / `t3 cluster`.
+    pub fn describe(&self) -> String {
+        let skew = match self.skew {
+            SkewModel::None => "none".to_string(),
+            SkewModel::Straggler { rank, slowdown } => {
+                format!("straggler(r{rank} x{slowdown:.2})")
+            }
+            SkewModel::Jitter { amplitude } => format!("jitter({amplitude:.2})"),
+        };
+        let topo = match self.topology {
+            TopologySpec::SingleTier => "single-tier".to_string(),
+            TopologySpec::TwoTier {
+                node_size,
+                inter_bw_frac,
+                inter_latency,
+            } => format!(
+                "two-tier(node={node_size} inter-bw={:.0}% lat={inter_latency})",
+                inter_bw_frac * 100.0
+            ),
+        };
+        format!("skew={skew} topo={topo}")
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::SystemConfig;
+
+    #[test]
+    fn uniform_factors_are_all_one() {
+        let f = ClusterModel::uniform().factors(8, 7);
+        assert_eq!(f, vec![1.0; 8]);
+        assert!(ClusterModel::uniform().is_uniform_for(8));
+    }
+
+    #[test]
+    fn straggler_slows_exactly_one_rank() {
+        let f = ClusterModel::straggler(3, 1.4).factors(8, 7);
+        assert_eq!(f.iter().filter(|&&x| x == 1.0).count(), 7);
+        assert_eq!(f[3], 1.4);
+    }
+
+    #[test]
+    fn jitter_is_deterministic_in_seed_and_bounded() {
+        let a = ClusterModel::jitter(0.1).factors(16, 42);
+        let b = ClusterModel::jitter(0.1).factors(16, 42);
+        assert_eq!(a, b);
+        assert!(a.iter().all(|&x| (1.0..1.1).contains(&x)), "{a:?}");
+        let c = ClusterModel::jitter(0.1).factors(16, 43);
+        assert_ne!(a, c, "different seeds must draw different skews");
+    }
+
+    #[test]
+    fn two_tier_degrades_boundary_hops_only() {
+        let sys = SystemConfig::table1();
+        let m = ClusterModel::two_tier(4, 0.25, SimTime::us(2));
+        let links = m.links(&sys.link, 8);
+        // Rank r sends to r-1: boundary hops are rank 4 -> 3 and the
+        // wraparound 0 -> 7.
+        for (r, l) in links.iter().enumerate() {
+            let inter = r == 4 || r == 0;
+            if inter {
+                assert_eq!(l.per_dir_bw_gbps, sys.link.per_dir_bw_gbps * 0.25, "rank {r}");
+                assert_eq!(l.latency, SimTime::us(2));
+            } else {
+                assert_eq!(l, &sys.link, "rank {r}");
+            }
+        }
+        assert!(!m.is_uniform_for(8));
+        // A node that holds the whole group is single-tier in disguise.
+        assert!(ClusterModel::two_tier(8, 0.25, SimTime::us(2)).is_uniform_for(8));
+    }
+
+    #[test]
+    fn describe_mentions_the_knobs() {
+        let s = ClusterModel::straggler(1, 1.25)
+            .with_topology(TopologySpec::TwoTier {
+                node_size: 4,
+                inter_bw_frac: 1.0 / 3.0,
+                inter_latency: SimTime::us(2),
+            })
+            .describe();
+        assert!(s.contains("straggler(r1"), "{s}");
+        assert!(s.contains("two-tier"), "{s}");
+    }
+}

@@ -8,12 +8,20 @@
 //! ring-RS is 2 loads + 1 remote store, so a kernel with aggregate issue
 //! bandwidth `B` feeds the link at ~`B/3` (AG: 1 load + 1 store ⇒ `B/2`).
 //!
-//! `run_rs_nmc` models the same ring with near-memory-compute reductions
-//! and DMA-driven transfers (no CUs): incoming chunks are op-and-store
-//! updates, sends need one read, and the final local reduction disappears —
-//! the Ideal-RS+NMC configuration of §5.3.
+//! [`RingKind::RsNmc`] models the same ring with near-memory-compute
+//! reductions and DMA-driven transfers (no CUs): incoming chunks are
+//! op-and-store updates, sends need one read, and the final local reduction
+//! disappears — the Ideal-RS+NMC configuration of §5.3.
+//!
+//! Like the fused engine, the ring is factored as a per-rank machine
+//! ([`RingRank`]): each ring step reserves an egress window on the rank's
+//! downstream link and emits a [`RingMsg`] telling the receiver when and at
+//! what rate the hop's bytes arrive. The entry points below are loopback
+//! drivers (homogeneous mirror, §5.1.1); [`crate::cluster`] drives `tp`
+//! interacting ranks with per-rank start offsets (a straggler's late
+//! kernel delays exactly the chunks that transit it) and per-edge links.
 
-use crate::config::{ArbPolicy, SystemConfig};
+use crate::config::{ArbPolicy, LinkConfig, SystemConfig};
 use crate::hw::hbm::{GroupId, TrafficClass, Txn, TxnKind};
 use crate::hw::mc::Stream;
 use crate::sim::stats::DramCounters;
@@ -21,8 +29,10 @@ use crate::sim::time::SimTime;
 
 use super::{Ev, GroupTag, Runner, PACE_BATCH};
 
-/// Result of one collective run.
-#[derive(Debug, Clone)]
+/// Result of one collective run. `time` is the absolute completion time of
+/// the rank's calendar — for a rank started at an offset it includes that
+/// offset.
+#[derive(Debug, Clone, PartialEq)]
 pub struct CollectiveRunResult {
     pub time: SimTime,
     pub counters: DramCounters,
@@ -30,8 +40,9 @@ pub struct CollectiveRunResult {
     pub step_ends: Vec<SimTime>,
 }
 
+/// Which ring collective a [`RingRank`] executes.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
-enum Kind {
+pub enum RingKind {
     /// CU-executed ring reduce-scatter.
     RsCu,
     /// CU-executed ring all-gather.
@@ -40,171 +51,313 @@ enum Kind {
     RsNmc,
 }
 
+/// A cross-rank ring message: one hop's bytes arrive at the receiver from
+/// `start` (sender's egress start + hop latency), paced at `rate_gbps`.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct RingMsg {
+    /// Ring step the transfer belongs to.
+    pub step: u32,
+    /// First-byte arrival time at the receiver.
+    pub start: SimTime,
+    /// Arrival rate (sender's feed rate capped by the hop's bandwidth).
+    pub rate_gbps: f64,
+}
+
 /// Baseline CU-executed ring reduce-scatter of `bytes` over `devices`
 /// devices using `cus` compute units.
 pub fn run_rs_baseline(sys: &SystemConfig, bytes: u64, devices: u64, cus: u32) -> CollectiveRunResult {
-    run_ring(sys, bytes, devices, cus, Kind::RsCu)
+    run_ring(sys, bytes, devices, cus, RingKind::RsCu)
 }
 
 /// Baseline CU-executed ring all-gather.
 pub fn run_ag_baseline(sys: &SystemConfig, bytes: u64, devices: u64, cus: u32) -> CollectiveRunResult {
-    run_ring(sys, bytes, devices, cus, Kind::AgCu)
+    run_ring(sys, bytes, devices, cus, RingKind::AgCu)
 }
 
 /// NMC-assisted, DMA-driven ring reduce-scatter (Ideal-RS+NMC).
 pub fn run_rs_nmc(sys: &SystemConfig, bytes: u64, devices: u64) -> CollectiveRunResult {
-    run_ring(sys, bytes, devices, 0, Kind::RsNmc)
+    run_ring(sys, bytes, devices, 0, RingKind::RsNmc)
 }
 
-struct StepCtx {
-    read_group: GroupId,
-    ingress_group: GroupId,
+/// Construction parameters of one [`RingRank`].
+#[derive(Debug, Clone)]
+pub struct RingRankSpec {
+    /// Total collective payload (all chunks).
+    pub bytes: u64,
+    pub devices: u64,
+    /// CUs granted to the kernel (ignored by [`RingKind::RsNmc`]).
+    pub cus: u32,
+    pub kind: RingKind,
+    /// When this rank's kernel launches (offset composition: e.g. after
+    /// the rank's — possibly skewed — producer GEMM).
+    pub start: SimTime,
+    /// This rank's egress edge (to its downstream ring neighbor).
+    pub link: LinkConfig,
+    /// CU issue-rate slowdown factor (skew model; 1.0 = nominal). The
+    /// NMC/DMA path is not CU-bound and ignores it.
+    pub issue_scale: f64,
 }
 
-fn run_ring(sys: &SystemConfig, bytes: u64, devices: u64, cus: u32, kind: Kind) -> CollectiveRunResult {
-    assert!(devices >= 2);
-    let chunk = bytes / devices;
-    assert!(chunk > 0, "chunk must be non-empty");
-    let steps = (devices - 1) as u32;
+/// One rank of a baseline ring collective: an event-driven step machine
+/// over its own [`Runner`]. Drive with [`RingRank::step`] /
+/// [`RingRank::deliver`] like [`crate::engine::fused::FusedRank`].
+pub struct RingRank {
+    r: Runner,
+    kind: RingKind,
+    chunk: u64,
+    steps: u32,
+    feed_bw: f64,
+    read_bw: f64,
+    ingress_kind: TxnKind,
+    read_class: TrafficClass,
+    write_class: TrafficClass,
+    started: bool,
+    /// Current ring step; `steps` once all hops completed.
+    step: u32,
+    in_final_reduce: bool,
+    reads_done: Vec<bool>,
+    ingress_done: Vec<bool>,
+    egress_done: Vec<bool>,
+    /// Per-step local-read groups; index `steps` is the final reduce.
+    read_groups: Vec<GroupId>,
+    ingress_groups: Vec<GroupId>,
+    step_ends: Vec<SimTime>,
+    tags: Vec<(GroupTag, SimTime)>,
+}
 
-    // Effective rates. Per ring-RS element the kernel does 2 loads (own
-    // partial + received copy) + 1 remote store, except the first step
-    // which only loads the local copy; AG forwards with 1 load + 1 store.
-    let link_bw = sys.link.per_dir_bw_gbps;
-    let (feed_bw, read_bw, ingress_kind, read_class, write_class) = match kind {
-        Kind::RsCu => {
-            let cu_bw = sys.gpu.cu_issue_bw_gbps(cus);
-            (cu_bw / 3.0, cu_bw * 2.0 / 3.0, TxnKind::Write, TrafficClass::RsRead, TrafficClass::RsWrite)
-        }
-        Kind::AgCu => {
-            let cu_bw = sys.gpu.cu_issue_bw_gbps(cus);
-            (cu_bw / 2.0, cu_bw / 2.0, TxnKind::Write, TrafficClass::AgRead, TrafficClass::AgWrite)
-        }
-        Kind::RsNmc => (
-            f64::INFINITY, // DMA feeds the link at link rate
-            sys.mem.total_bw_gbps,
-            TxnKind::NmcUpdate,
-            TrafficClass::RsRead,
-            TrafficClass::RsWrite,
-        ),
-    };
-    let read_bytes_for = |step: u32| match kind {
-        // First send reads only the local copy; later sends fuse the
-        // reduce of the previous receive (2 reads).
-        Kind::RsCu => {
-            if step == 0 {
-                chunk
-            } else {
-                2 * chunk
+impl RingRank {
+    pub fn new(sys: &SystemConfig, spec: &RingRankSpec) -> Self {
+        assert!(spec.devices >= 2);
+        let chunk = spec.bytes / spec.devices;
+        assert!(chunk > 0, "chunk must be non-empty");
+        let steps = (spec.devices - 1) as u32;
+        debug_assert!(spec.issue_scale >= 1.0);
+
+        // Effective rates. Per ring-RS element the kernel does 2 loads (own
+        // partial + received copy) + 1 remote store, except the first step
+        // which only loads the local copy; AG forwards with 1 load + 1 store.
+        let (feed_bw, read_bw, ingress_kind, read_class, write_class) = match spec.kind {
+            RingKind::RsCu => {
+                let cu_bw = sys.gpu.cu_issue_bw_gbps(spec.cus) / spec.issue_scale;
+                (
+                    cu_bw / 3.0,
+                    cu_bw * 2.0 / 3.0,
+                    TxnKind::Write,
+                    TrafficClass::RsRead,
+                    TrafficClass::RsWrite,
+                )
             }
+            RingKind::AgCu => {
+                let cu_bw = sys.gpu.cu_issue_bw_gbps(spec.cus) / spec.issue_scale;
+                (
+                    cu_bw / 2.0,
+                    cu_bw / 2.0,
+                    TxnKind::Write,
+                    TrafficClass::AgRead,
+                    TrafficClass::AgWrite,
+                )
+            }
+            RingKind::RsNmc => (
+                f64::INFINITY, // DMA feeds the link at link rate
+                sys.mem.total_bw_gbps,
+                TxnKind::NmcUpdate,
+                TrafficClass::RsRead,
+                TrafficClass::RsWrite,
+            ),
+        };
+
+        let mut r = Runner::with_link(sys, ArbPolicy::ComputePriority, spec.link.clone());
+        // The rank's kernel launches at `spec.start`.
+        r.q.schedule(spec.start, Ev::Marker { step: 0, what: 0 });
+
+        RingRank {
+            r,
+            kind: spec.kind,
+            chunk,
+            steps,
+            feed_bw,
+            read_bw,
+            ingress_kind,
+            read_class,
+            write_class,
+            started: false,
+            step: 0,
+            in_final_reduce: false,
+            reads_done: vec![false; steps as usize],
+            ingress_done: vec![false; steps as usize],
+            egress_done: vec![false; steps as usize],
+            read_groups: vec![GroupId::NONE; steps as usize + 1],
+            ingress_groups: vec![GroupId::NONE; steps as usize],
+            step_ends: Vec::with_capacity(steps as usize + 1),
+            tags: Vec::new(),
         }
-        Kind::AgCu => chunk,
-        Kind::RsNmc => chunk, // partial already merged by NMC
-    };
-
-    let mut r = Runner::new(sys, ArbPolicy::ComputePriority);
-    let mut step_ends = Vec::with_capacity(steps as usize + 1);
-    let mut tags: Vec<(GroupTag, SimTime)> = Vec::new();
-
-    // Start a step: paced local reads, egress reservation, mirrored ingress.
-    let mut ctx: Vec<StepCtx> = Vec::with_capacity(steps as usize);
-    macro_rules! start_step {
-        ($r:expr, $step:expr) => {{
-            let now = $r.now();
-            let read_txns = $r.mem.txns_for(read_bytes_for($step));
-            let rg = $r.register_group(read_txns, GroupTag::StepReads($step));
-            $r.schedule_issue($step, read_txns, now, read_bw, PACE_BATCH);
-            let w = $r.link_out.reserve_rate_limited(now, chunk, feed_bw);
-            $r.q.schedule(w.done, Ev::EgressDone { pos: $step });
-            let in_txns = $r.mem.txns_for(chunk);
-            let ig = $r.register_group(in_txns, GroupTag::StepIngress($step));
-            let in_rate = feed_bw.min(link_bw);
-            $r.schedule_ingress($step, in_txns, w.start + $r.sys.link.latency, in_rate, PACE_BATCH);
-            ctx.push(StepCtx {
-                read_group: rg,
-                ingress_group: ig,
-            });
-        }};
     }
-    start_step!(r, 0);
 
-    // Step completion = reads + ingress + egress (3 conditions).
-    let mut remaining = 3u8;
-    let mut step = 0u32;
-    let mut in_final_reduce = false;
+    fn read_bytes_for(&self, step: u32) -> u64 {
+        match self.kind {
+            // First send reads only the local copy; later sends fuse the
+            // reduce of the previous receive (2 reads).
+            RingKind::RsCu => {
+                if step == 0 {
+                    self.chunk
+                } else {
+                    2 * self.chunk
+                }
+            }
+            RingKind::AgCu => self.chunk,
+            RingKind::RsNmc => self.chunk, // partial already merged by NMC
+        }
+    }
 
-    while let Some((_, ev)) = r.next_event() {
-        r.drain_tags(&mut tags);
+    /// Start ring step `s`: paced local reads, an egress reservation on the
+    /// downstream edge, and a [`RingMsg`] telling the receiver the hop's
+    /// arrival window.
+    fn start_step(&mut self, s: u32, out: &mut Vec<RingMsg>) {
+        let now = self.r.now();
+        let read_txns = self.r.mem.txns_for(self.read_bytes_for(s));
+        self.read_groups[s as usize] = self.r.register_group(read_txns, GroupTag::StepReads(s));
+        self.r.schedule_issue(s, read_txns, now, self.read_bw, PACE_BATCH);
+        let w = self.r.link_out.reserve_rate_limited(now, self.chunk, self.feed_bw);
+        self.r.q.schedule(w.done, Ev::EgressDone { pos: s });
+        let lat = self.r.link_out.cfg().latency;
+        let link_bw = self.r.link_out.cfg().per_dir_bw_gbps;
+        out.push(RingMsg {
+            step: s,
+            start: w.start + lat,
+            rate_gbps: self.feed_bw.min(link_bw),
+        });
+    }
+
+    /// Time of this rank's next pending event.
+    pub fn next_time(&self) -> Option<SimTime> {
+        self.r.q.peek_time()
+    }
+
+    /// Apply the upstream neighbor's hop-arrival message: pace the chunk's
+    /// ingress into local memory from `msg.start` at `msg.rate_gbps`.
+    /// Arrivals are accepted even before this rank reaches the step (a
+    /// faster upstream under skew) — the network does not wait.
+    pub fn deliver(&mut self, msg: &RingMsg) {
+        let s = msg.step as usize;
+        debug_assert!(self.ingress_groups[s] == GroupId::NONE, "duplicate hop for step {s}");
+        let in_txns = self.r.mem.txns_for(self.chunk);
+        self.ingress_groups[s] = self.r.register_group(in_txns, GroupTag::StepIngress(msg.step));
+        self.r
+            .schedule_ingress(msg.step, in_txns, msg.start, msg.rate_gbps, PACE_BATCH);
+    }
+
+    /// Process one event; hop messages for the downstream neighbor are
+    /// appended to `out`. Returns `false` when the calendar is empty.
+    pub fn step(&mut self, out: &mut Vec<RingMsg>) -> bool {
+        let Some((_, ev)) = self.r.next_event() else {
+            return false;
+        };
+        let mut tags = std::mem::take(&mut self.tags);
+        self.r.drain_tags(&mut tags);
         for (tag, _blocked) in tags.drain(..) {
             match tag {
-                GroupTag::StepReads(s) if s == step && !in_final_reduce => {
-                    remaining = remaining.saturating_sub(1)
-                }
-                GroupTag::StepIngress(s) if s == step => remaining = remaining.saturating_sub(1),
-                GroupTag::StepReads(s) if in_final_reduce && s == steps => {
+                GroupTag::StepReads(s) if self.in_final_reduce && s == self.steps => {
                     // Final-reduce reads done: write the reduced result.
-                    r.submit_tagged(chunk, TxnKind::Write, Stream::Compute, write_class, GroupTag::Drain);
+                    self.r.submit_tagged(
+                        self.chunk,
+                        TxnKind::Write,
+                        Stream::Compute,
+                        self.write_class,
+                        GroupTag::Drain,
+                    );
                 }
+                GroupTag::StepReads(s) => self.reads_done[s as usize] = true,
+                GroupTag::StepIngress(s) => self.ingress_done[s as usize] = true,
                 _ => {}
             }
         }
+        self.tags = tags;
+
         match ev {
-            Ev::EgressDone { pos } if pos == step && !in_final_reduce => {
-                remaining = remaining.saturating_sub(1)
+            Ev::Marker { step: 0, .. } if !self.started => {
+                self.started = true;
+                self.start_step(0, out);
             }
+            Ev::EgressDone { pos } => self.egress_done[pos as usize] = true,
             Ev::Issue { step: s, n } => {
-                let g = ctx[s as usize].read_group;
                 let t = Txn {
                     kind: TxnKind::Read,
                     stream: Stream::Compute,
-                    class: read_class,
-                    group: g,
+                    class: self.read_class,
+                    group: self.read_groups[s as usize],
                 };
-                r.mem.submit_burst(n as u64, t, &mut r.q);
+                self.r.mem.submit_burst(n as u64, t, &mut self.r.q);
             }
             Ev::Ingress { pos, n } => {
                 let t = Txn {
-                    kind: ingress_kind,
+                    kind: self.ingress_kind,
                     stream: Stream::Comm,
-                    class: write_class,
-                    group: ctx[pos as usize].ingress_group,
+                    class: self.write_class,
+                    group: self.ingress_groups[pos as usize],
                 };
-                r.mem.submit_burst(n as u64, t, &mut r.q);
+                self.r.mem.submit_burst(n as u64, t, &mut self.r.q);
             }
             _ => {}
         }
-        if remaining == 0 {
-            step_ends.push(r.now());
-            remaining = u8::MAX;
-            if step + 1 < steps {
-                step += 1;
-                remaining = 3;
-                start_step!(r, step);
-            } else if kind == Kind::RsCu && !in_final_reduce {
-                // Baseline final local reduction: read own + received copy,
-                // write the reduced result. NMC folds this into the last
-                // ingress update (§4.3), AG has no reduction.
-                in_final_reduce = true;
-                let now = r.now();
-                let read_txns = r.mem.txns_for(2 * chunk);
-                let rg = r.register_group(read_txns, GroupTag::StepReads(steps));
-                r.schedule_issue(steps, read_txns, now, read_bw, PACE_BATCH);
-                ctx.push(StepCtx {
-                    read_group: rg,
-                    ingress_group: GroupId::NONE,
-                });
+
+        // Step completion = reads + ingress + egress (3 conditions).
+        if self.started && self.step < self.steps {
+            let s = self.step as usize;
+            if self.reads_done[s] && self.ingress_done[s] && self.egress_done[s] {
+                self.step_ends.push(self.r.now());
+                self.step += 1;
+                if self.step < self.steps {
+                    self.start_step(self.step, out);
+                } else if self.kind == RingKind::RsCu {
+                    // Baseline final local reduction: read own + received
+                    // copy, write the reduced result. NMC folds this into
+                    // the last ingress update (§4.3), AG has no reduction.
+                    self.in_final_reduce = true;
+                    let now = self.r.now();
+                    let read_txns = self.r.mem.txns_for(2 * self.chunk);
+                    self.read_groups[self.steps as usize] =
+                        self.r.register_group(read_txns, GroupTag::StepReads(self.steps));
+                    self.r
+                        .schedule_issue(self.steps, read_txns, now, self.read_bw, PACE_BATCH);
+                }
             }
         }
+        true
     }
-    debug_assert!(r.mem.idle());
-    let time = r.now();
-    step_ends.push(time);
 
-    CollectiveRunResult {
-        time,
-        counters: r.mem.counters,
-        step_ends,
+    /// Consume the drained rank into its result.
+    pub fn into_result(mut self) -> CollectiveRunResult {
+        debug_assert!(self.r.mem.idle());
+        let time = self.r.now();
+        self.step_ends.push(time);
+        CollectiveRunResult {
+            time,
+            counters: self.r.mem.counters,
+            step_ends: self.step_ends,
+        }
     }
+}
+
+/// Loopback driver: one rank, its hop messages mirrored back to itself
+/// (homogeneous devices, §5.1.1).
+fn run_ring(sys: &SystemConfig, bytes: u64, devices: u64, cus: u32, kind: RingKind) -> CollectiveRunResult {
+    let spec = RingRankSpec {
+        bytes,
+        devices,
+        cus,
+        kind,
+        start: SimTime::ZERO,
+        link: sys.link.clone(),
+        issue_scale: 1.0,
+    };
+    let mut rank = RingRank::new(sys, &spec);
+    let mut msgs = Vec::new();
+    while rank.step(&mut msgs) {
+        for m in msgs.drain(..) {
+            rank.deliver(&m);
+        }
+    }
+    rank.into_result()
 }
 
 #[cfg(test)]
@@ -304,5 +457,66 @@ mod tests {
         let res = run_ag_baseline(&sys, 32 * MB, 8, 80);
         // N-1 steps + final timestamp
         assert_eq!(res.step_ends.len(), 8);
+    }
+
+    #[test]
+    fn start_offset_shifts_the_whole_run() {
+        // The rank machine is shift-invariant: starting the kernel at T
+        // ends exactly T later than starting at zero (the property the
+        // cluster engine's offset composition relies on).
+        let sys = SystemConfig::table1();
+        let base = run_rs_baseline(&sys, 32 * MB, 4, 80);
+        let t0 = SimTime::us(137);
+        let spec = RingRankSpec {
+            bytes: 32 * MB,
+            devices: 4,
+            cus: 80,
+            kind: RingKind::RsCu,
+            start: t0,
+            link: sys.link.clone(),
+            issue_scale: 1.0,
+        };
+        let mut rank = RingRank::new(&sys, &spec);
+        let mut msgs = Vec::new();
+        while rank.step(&mut msgs) {
+            for m in msgs.drain(..) {
+                rank.deliver(&m);
+            }
+        }
+        let shifted = rank.into_result();
+        assert_eq!(shifted.time, base.time + t0);
+        assert_eq!(shifted.counters, base.counters);
+        for (a, b) in shifted.step_ends.iter().zip(&base.step_ends) {
+            assert_eq!(*a, *b + t0);
+        }
+    }
+
+    #[test]
+    fn issue_scale_slows_cu_kernels() {
+        let sys = SystemConfig::table1();
+        let spec = |scale: f64| RingRankSpec {
+            bytes: 32 * MB,
+            devices: 4,
+            cus: 16,
+            kind: RingKind::RsCu,
+            start: SimTime::ZERO,
+            link: sys.link.clone(),
+            issue_scale: scale,
+        };
+        let run = |s: RingRankSpec| {
+            let mut rank = RingRank::new(&sys, &s);
+            let mut msgs = Vec::new();
+            while rank.step(&mut msgs) {
+                for m in msgs.drain(..) {
+                    rank.deliver(&m);
+                }
+            }
+            rank.into_result()
+        };
+        let nominal = run(spec(1.0));
+        let slow = run(spec(1.5));
+        assert!(slow.time > nominal.time);
+        // Scale 1.0 is bit-identical to the plain entry point.
+        assert_eq!(nominal, run_rs_baseline(&sys, 32 * MB, 4, 16));
     }
 }

@@ -1,7 +1,23 @@
 //! The T3 fused GEMM + ring reduce-scatter engine (Section 4, Figure 7-8).
 //!
-//! One device's timeline, with neighbor traffic mirrored (homogeneous
-//! devices, staggered WG scheduling):
+//! The engine is factored as a *per-rank state machine* ([`FusedRank`]):
+//! one device's GEMM wavefront timeline, tracker/DMA trigger state, and
+//! HBM/MC contention model, which communicates with its ring neighbors
+//! only through explicit [`FusedMsg`] ingress-window messages. Two drivers
+//! exist:
+//!
+//! * [`run_fused_gemm_rs`] — the paper's §5.1.1 methodology: model *one*
+//!   GPU in detail and mirror its egress timeline into its ingress
+//!   (homogeneous devices, staggered WG scheduling). Implemented as a
+//!   single `FusedRank` whose outbound messages are looped back to itself.
+//! * [`crate::cluster`] — the multi-rank engine: `tp` interacting
+//!   `FusedRank`s whose messages travel to the actual downstream neighbor
+//!   over per-edge links. With no skew and a single-tier topology every
+//!   rank behaves identically, so the loopback mirror *is* the cluster's
+//!   special case; with skew/stragglers/two-tier links, a slow rank or
+//!   congested hop delays exactly the chunks that transit it.
+//!
+//! One rank's timeline:
 //!
 //! * The GEMM executes stage by stage, its WGs reordered chunk-first by the
 //!   staggered `ChunkPlan`. Stage reads flow through the MC *compute*
@@ -10,13 +26,14 @@
 //!     egress link (no local DRAM traffic — §6.2's "fusion eliminates local
 //!     writes from GEMM's first stage");
 //!   - other positions: local near-memory op-and-store updates.
-//! * Incoming DMA updates for position `p` mirror our own egress of
-//!   position `p-1` (+ link latency), entering the MC *comm* stream as NMC
-//!   updates.
+//! * Incoming DMA updates for position `p` arrive on the upstream
+//!   neighbor's egress window for *its* position `p-1` (the same chunk, by
+//!   the stagger) plus the hop latency, entering the MC *comm* stream as
+//!   NMC updates.
 //! * When a position's local updates AND incoming updates have all landed
 //!   (the Tracker condition — threshold = 2 updates/element for ring-RS),
 //!   the pre-programmed DMA fires: chunk reads on the comm stream + an
-//!   egress window; its completion triggers the next position's ingress.
+//!   egress window; the downstream neighbor paces the matching ingress.
 //! * The final position is the device's fully-reduced chunk; the run ends
 //!   when it is reduced and all egress/ingress traffic has drained.
 //!
@@ -25,17 +42,17 @@
 //! paper's T3 configuration, `T3Mca` adds the §4.5 arbitration policy.
 
 use crate::addrspace::{ChunkMap, DmaTable, OutputMap};
-use crate::config::{ArbPolicy, SystemConfig};
+use crate::config::{ArbPolicy, GpuConfig, LinkConfig, SystemConfig};
 use crate::gemm::traffic::{gemm_bytes_per_flop, gemm_traffic, stage_reads, WriteMode};
 use crate::gemm::{ChunkPlan, StagePlan};
-use crate::hw::hbm::{TrafficClass, Txn, TxnKind};
+use crate::hw::hbm::{GroupId, TrafficClass, Txn, TxnKind};
 use crate::hw::mc::{intensity_class, Stream};
 use crate::sim::stats::DramCounters;
 use crate::sim::time::SimTime;
 
 use super::{Ev, GroupTag, Runner, PACE_BATCH};
 
-/// Result of a fused GEMM-RS run.
+/// Result of a fused GEMM-RS run (one rank).
 #[derive(Debug, Clone)]
 pub struct FusedResult {
     /// End-to-end fused time (GEMM + RS fully overlapped + drain).
@@ -45,6 +62,10 @@ pub struct FusedResult {
     pub gemm_time: SimTime,
     /// Tracker-completion time per position.
     pub tracker_done: Vec<SimTime>,
+    /// When each position's outbound transfer fully left the rank
+    /// (egress window + DMA reads complete); `SimTime::MAX` for the local
+    /// final chunk, which is never sent.
+    pub sent_done: Vec<SimTime>,
     pub counters: DramCounters,
     /// Peak concurrently-live tracker WF-tiles (hardware budget check).
     pub tracker_peak_tiles: u64,
@@ -75,6 +96,39 @@ impl Default for FusedOpts {
     }
 }
 
+/// A cross-rank ring message of the fused engine: the sender reserved an
+/// egress window on its downstream link; the receiver paces the matching
+/// ingress (as NMC updates through its MC comm stream) across the same
+/// window. `pos` is the *receiver's* local chunk position — by the ring
+/// stagger, the sender's position `p` chunk is the receiver's `p+1`.
+/// `start`/`end` already include the hop latency of the edge the transfer
+/// crossed (the sender knows its egress link).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum FusedMsg {
+    /// One stage-segment of fine-grained remote stores (the sender's
+    /// remote-mapped position 0): `wgs` workgroups of a chunk totalling
+    /// `of_total` workgroups, so the receiver can pace a proportional
+    /// share of the chunk's ingress across this segment's window.
+    Segment {
+        pos: u32,
+        wgs: u64,
+        of_total: u64,
+        start: SimTime,
+        end: SimTime,
+    },
+    /// A tracker-triggered DMA of a full (partially reduced) chunk.
+    Dma { pos: u32, start: SimTime, end: SimTime },
+}
+
+impl FusedMsg {
+    /// Receiver-local chunk position this message feeds.
+    pub fn pos(&self) -> u32 {
+        match *self {
+            FusedMsg::Segment { pos, .. } | FusedMsg::Dma { pos, .. } => pos,
+        }
+    }
+}
+
 /// Per-stage write segments: (position, wg count).
 fn stage_segments(plan: &StagePlan, chunks: &ChunkPlan) -> Vec<Vec<(u32, u64)>> {
     let n = chunks.devices as usize;
@@ -101,288 +155,437 @@ fn stage_segments(plan: &StagePlan, chunks: &ChunkPlan) -> Vec<Vec<(u32, u64)>> 
     segments
 }
 
-/// Run the fused GEMM + ring-RS on device 0 of `devices`.
-pub fn run_fused_gemm_rs(
-    sys: &SystemConfig,
-    plan: &StagePlan,
-    devices: u64,
-    opts: &FusedOpts,
-) -> FusedResult {
-    let chunks = ChunkPlan::new(plan, devices, 0);
-    let map = OutputMap::ring_reduce_scatter(&chunks, 0);
-    let mut dma = DmaTable::program(&map, &chunks);
-    let n = devices as usize;
-    let segments = stage_segments(plan, &chunks);
-    let traffic = gemm_traffic(plan, &sys.mem, opts.write_mode);
-
-    let mut r = Runner::new(sys, opts.policy);
-    if let Some(bin) = opts.trace_bin {
-        r.mem.trace = Some(crate::hw::hbm::TrafficTrace::new(bin));
-    }
-    // MCA threshold class from the producer's memory intensity (§6.1.3).
-    let machine_balance = sys.mem.total_bw_gbps * 1e9 / sys.gpu.sustained_gemm_flops(plan.shape.dtype);
-    let class = intensity_class(
-        gemm_bytes_per_flop(plan, &sys.mem, opts.write_mode),
-        machine_balance,
-    );
-    r.mem.set_intensity_class(class);
+/// One rank of the fused GEMM + ring-RS engine: an event-driven state
+/// machine over its own [`Runner`] (memory system + calendar + egress
+/// link). Drive it by alternating [`FusedRank::step`] (process one event,
+/// collect outbound messages for the downstream neighbor) and
+/// [`FusedRank::deliver`] (apply an upstream neighbor's message).
+pub struct FusedRank {
+    r: Runner,
+    plan: StagePlan,
+    chunks: ChunkPlan,
+    map: OutputMap,
+    dma: DmaTable,
+    n: usize,
+    gpu: GpuConfig,
+    eff: f64,
+    /// Per-rank compute slowdown (1.0 = nominal; the cluster skew model).
+    compute_scale: f64,
+    dram_reads: u64,
 
     // ---- per-position bookkeeping ----
-    let mut seg_to_come = vec![0u32; n]; // write segments not yet submitted
-    for segs in &segments {
-        for &(p, _) in segs {
-            seg_to_come[p as usize] += 1;
-        }
-    }
-    let mut groups_pending = vec![0u32; n]; // submitted, not yet landed
-    let mut send_conditions = vec![0u8; n]; // egress windows + DMA reads
-    for p in 0..n {
-        send_conditions[p] = match map.by_position[p] {
-            ChunkMap::Remote { .. } => seg_to_come[p] as u8, // one window per segment
-            ChunkMap::Dma { .. } => 2,                       // DMA reads + egress window
-            ChunkMap::Local => 0,
-        };
-    }
-    let mut local_done = vec![false; n];
-    let mut ingress_done = vec![false; n];
-    let mut ingress_scheduled = vec![false; n];
-    let mut ingress_groups = vec![crate::hw::hbm::GroupId::NONE; n];
-    let mut tracker_done = vec![SimTime::MAX; n];
-    let mut sent_done = vec![SimTime::MAX; n];
-
-    let chunk_bytes_at = |p: usize| chunks.chunk_bytes[chunks.chunk_order[p] as usize];
+    seg_to_come: Vec<u32>,
+    groups_pending: Vec<u32>,
+    send_conditions: Vec<u8>,
+    local_done: Vec<bool>,
+    ingress_done: Vec<bool>,
+    ingress_scheduled: Vec<bool>,
+    ingress_groups: Vec<GroupId>,
+    tracker_done: Vec<SimTime>,
+    sent_done: Vec<SimTime>,
+    /// Ingress transactions still to pace per receiving position.
+    ingress_left: Vec<u64>,
+    /// Remaining WGs of the upstream sender's remote-mapped chunk
+    /// (established by the first `Segment` message's `of_total`).
+    sender_wgs_left: Option<u64>,
 
     // ---- GEMM stage machine ----
-    // Read phase drains, then the compute phase retires (see gemm_run.rs:
-    // this coupling is how RS burstiness slows the producer, Fig 17b).
-    let mut stage = 0u64;
-    let mut stage_compute_done = false;
-    let gpu = sys.gpu.clone();
-    let eff = gpu.gemm_efficiency;
-    let start_stage = |r: &mut Runner, s: u64| {
-        let bytes = stage_reads(plan, traffic.dram_reads, s).max(r.sys.mem.txn_bytes);
-        r.submit_tagged(
+    stage: u64,
+    stage_compute_done: bool,
+    gemm_time: SimTime,
+
+    // scratch (reused across events to keep the hot loop allocation-free)
+    tags: Vec<(GroupTag, SimTime)>,
+    newly_tracker_done: Vec<usize>,
+}
+
+impl FusedRank {
+    /// Build rank `rank` of `devices` and submit its stage-0 reads.
+    /// `link` is the rank's egress edge (to its downstream neighbor);
+    /// `compute_scale >= 1.0` slows its GEMM stages (skew model).
+    pub fn new(
+        sys: &SystemConfig,
+        plan: &StagePlan,
+        devices: u64,
+        rank: u64,
+        opts: &FusedOpts,
+        compute_scale: f64,
+        link: LinkConfig,
+    ) -> Self {
+        let chunks = ChunkPlan::new(plan, devices, rank);
+        let map = OutputMap::ring_reduce_scatter(&chunks, rank);
+        let dma = DmaTable::program(&map, &chunks);
+        let n = devices as usize;
+        let traffic = gemm_traffic(plan, &sys.mem, opts.write_mode);
+
+        let mut r = Runner::with_link(sys, opts.policy, link);
+        if let Some(bin) = opts.trace_bin {
+            r.mem.trace = Some(crate::hw::hbm::TrafficTrace::new(bin));
+        }
+        // MCA threshold class from the producer's memory intensity (§6.1.3).
+        let machine_balance =
+            sys.mem.total_bw_gbps * 1e9 / sys.gpu.sustained_gemm_flops(plan.shape.dtype);
+        let class = intensity_class(
+            gemm_bytes_per_flop(plan, &sys.mem, opts.write_mode),
+            machine_balance,
+        );
+        r.mem.set_intensity_class(class);
+
+        let segments = stage_segments(plan, &chunks);
+        let mut seg_to_come = vec![0u32; n];
+        for segs in &segments {
+            for &(p, _) in segs {
+                seg_to_come[p as usize] += 1;
+            }
+        }
+        let mut send_conditions = vec![0u8; n];
+        for p in 0..n {
+            send_conditions[p] = match map.by_position[p] {
+                ChunkMap::Remote { .. } => seg_to_come[p] as u8, // one window per segment
+                ChunkMap::Dma { .. } => 2,                       // DMA reads + egress window
+                ChunkMap::Local => 0,
+            };
+        }
+        let ingress_left: Vec<u64> = (0..n)
+            .map(|p| {
+                if map.receives_at[p] {
+                    chunks.chunk_bytes[chunks.chunk_order[p] as usize]
+                        .div_ceil(sys.mem.txn_bytes)
+                } else {
+                    0
+                }
+            })
+            .collect();
+
+        let gpu = sys.gpu.clone();
+        let eff = gpu.gemm_efficiency;
+        let mut rank = FusedRank {
+            r,
+            plan: plan.clone(),
+            chunks,
+            map,
+            dma,
+            n,
+            gpu,
+            eff,
+            compute_scale,
+            dram_reads: traffic.dram_reads,
+            seg_to_come,
+            groups_pending: vec![0u32; n],
+            send_conditions,
+            local_done: vec![false; n],
+            ingress_done: vec![false; n],
+            ingress_scheduled: vec![false; n],
+            ingress_groups: vec![GroupId::NONE; n],
+            tracker_done: vec![SimTime::MAX; n],
+            sent_done: vec![SimTime::MAX; n],
+            ingress_left,
+            sender_wgs_left: None,
+            stage: 0,
+            stage_compute_done: false,
+            gemm_time: SimTime::ZERO,
+            tags: Vec::new(),
+            newly_tracker_done: Vec::new(),
+        };
+        rank.start_stage(0);
+        rank
+    }
+
+    fn chunk_bytes_at(&self, p: usize) -> u64 {
+        self.chunks.chunk_bytes[self.chunks.chunk_order[p] as usize]
+    }
+
+    /// The per-stage plan segments this rank writes (for diagnostics).
+    pub fn segments(&self) -> Vec<Vec<(u32, u64)>> {
+        stage_segments(&self.plan, &self.chunks)
+    }
+
+    fn start_stage(&mut self, s: u64) {
+        let bytes = stage_reads(&self.plan, self.dram_reads, s).max(self.r.sys.mem.txn_bytes);
+        self.r.submit_tagged(
             bytes,
             TxnKind::Read,
             Stream::Compute,
             TrafficClass::GemmRead,
             GroupTag::StageReads(s),
         );
-    };
-    start_stage(&mut r, 0);
+    }
 
-    let mut gemm_time = SimTime::ZERO;
-    let mut tags = Vec::new();
-    // Deferred actions to avoid re-entrancy: positions whose tracker
-    // condition completed this event.
-    let mut newly_tracker_done: Vec<usize> = Vec::new();
-    // Ingress transactions still to mirror per receiving position.
-    let mut ingress_left: Vec<u64> = (0..n)
-        .map(|p| {
-            if map.receives_at[p] {
-                chunk_bytes_at(p).div_ceil(sys.mem.txn_bytes)
-            } else {
-                0
-            }
-        })
-        .collect();
-    let mut pos0_wgs_left = chunks.chunk_wgs[chunks.chunk_order[0] as usize];
+    /// Time of this rank's next pending event.
+    pub fn next_time(&self) -> Option<SimTime> {
+        self.r.q.peek_time()
+    }
 
-    while let Some((t, ev)) = r.next_event() {
-        r.drain_tags(&mut tags);
+    /// Process one event; outbound messages for the downstream neighbor
+    /// are appended to `out`. Returns `false` when the calendar is empty.
+    pub fn step(&mut self, out: &mut Vec<FusedMsg>) -> bool {
+        let Some((t, ev)) = self.r.next_event() else {
+            return false;
+        };
+        let mut tags = std::mem::take(&mut self.tags);
+        self.r.drain_tags(&mut tags);
         for (tag, blocked) in tags.drain(..) {
             match tag {
-                GroupTag::StageReads(s) if s == stage => {
-                    let ct = plan.stage_compute_time(s, &gpu, gpu.cu_count, eff);
-                    let stall = blocked * gpu.stall_unhidden;
-                    r.q.schedule_in(ct + stall, Ev::StageCompute(s));
+                GroupTag::StageReads(s) if s == self.stage => {
+                    let ct = self
+                        .plan
+                        .stage_compute_time(s, &self.gpu, self.gpu.cu_count, self.eff);
+                    let ct = if self.compute_scale != 1.0 {
+                        ct * self.compute_scale
+                    } else {
+                        ct
+                    };
+                    let stall = blocked * self.gpu.stall_unhidden;
+                    self.r.q.schedule_in(ct + stall, Ev::StageCompute(s));
                 }
                 GroupTag::ChunkLocal(p) => {
                     let p = p as usize;
-                    groups_pending[p] -= 1;
-                    if groups_pending[p] == 0 && seg_to_come[p] == 0 && !local_done[p] {
-                        local_done[p] = true;
-                        if check_tracker(p, &map, &local_done, &ingress_done) {
-                            tracker_done[p] = t;
-                            newly_tracker_done.push(p);
+                    self.groups_pending[p] -= 1;
+                    if self.groups_pending[p] == 0
+                        && self.seg_to_come[p] == 0
+                        && !self.local_done[p]
+                    {
+                        self.local_done[p] = true;
+                        if check_tracker(p, &self.map, &self.local_done, &self.ingress_done) {
+                            self.tracker_done[p] = t;
+                            self.newly_tracker_done.push(p);
                         }
                     }
                 }
                 GroupTag::ChunkIngress(p) => {
                     let p = p as usize;
-                    ingress_done[p] = true;
-                    if check_tracker(p, &map, &local_done, &ingress_done) && tracker_done[p] == SimTime::MAX {
-                        tracker_done[p] = t;
-                        newly_tracker_done.push(p);
+                    self.ingress_done[p] = true;
+                    if check_tracker(p, &self.map, &self.local_done, &self.ingress_done)
+                        && self.tracker_done[p] == SimTime::MAX
+                    {
+                        self.tracker_done[p] = t;
+                        self.newly_tracker_done.push(p);
                     }
                 }
                 GroupTag::DmaReads(p) => {
                     let p = p as usize;
-                    send_conditions[p] -= 1;
-                    if send_conditions[p] == 0 {
-                        sent_done[p] = t;
+                    self.send_conditions[p] -= 1;
+                    if self.send_conditions[p] == 0 {
+                        self.sent_done[p] = t;
                     }
                 }
                 _ => {}
             }
         }
+        self.tags = tags;
+
         match ev {
-            Ev::StageCompute(s) if s == stage => stage_compute_done = true,
+            Ev::StageCompute(s) if s == self.stage => self.stage_compute_done = true,
             Ev::EgressDone { pos } => {
                 let p = pos as usize;
-                send_conditions[p] -= 1;
-                if send_conditions[p] == 0 {
-                    sent_done[p] = t;
-                    if matches!(map.by_position[p], ChunkMap::Remote { .. }) {
+                self.send_conditions[p] -= 1;
+                if self.send_conditions[p] == 0 {
+                    self.sent_done[p] = t;
+                    if matches!(self.map.by_position[p], ChunkMap::Remote { .. }) {
                         // Remote-mapped chunk: "local" completion is the
                         // egress of its fine-grained stores (nothing lands
                         // in local DRAM).
-                        local_done[p] = true;
-                        tracker_done[p] = t;
+                        self.local_done[p] = true;
+                        self.tracker_done[p] = t;
                     }
                 }
             }
             Ev::Ingress { pos, n: cnt } => {
                 let p = pos as usize;
-                debug_assert!(ingress_scheduled[p]);
+                debug_assert!(self.ingress_scheduled[p]);
                 let txn = Txn {
                     kind: TxnKind::NmcUpdate,
                     stream: Stream::Comm,
                     class: TrafficClass::RsWrite,
-                    group: ingress_groups[p],
+                    group: self.ingress_groups[p],
                 };
-                r.mem.submit_burst(cnt as u64, txn, &mut r.q);
+                self.r.mem.submit_burst(cnt as u64, txn, &mut self.r.q);
             }
             _ => {}
         }
 
         // Stage retirement.
-        if stage_compute_done {
-            for &(p, wgs) in &segments[stage as usize] {
+        if self.stage_compute_done {
+            let segs = self.segments_of(self.stage);
+            for &(p, wgs) in &segs {
                 let p = p as usize;
-                let bytes = wgs * plan.wg_out_bytes();
-                match map.by_position[p] {
+                let bytes = wgs * self.plan.wg_out_bytes();
+                match self.map.by_position[p] {
                     ChunkMap::Remote { .. } => {
                         // Fine-grained remote stores: straight to the link.
-                        let w = r.link_out.reserve(t, bytes);
-                        r.q.schedule(w.done, Ev::EgressDone { pos: p as u32 });
-                        seg_to_come[p] -= 1;
-                        // Mirror: the upstream neighbor remote-stores its
-                        // first chunk (= our position p+1's chunk, by the
-                        // stagger) on the same schedule. Pace a
-                        // proportional share of that ingress across this
-                        // segment's window (+ link latency).
+                        let w = self.r.link_out.reserve(t, bytes);
+                        self.r.q.schedule(w.done, Ev::EgressDone { pos: p as u32 });
+                        self.seg_to_come[p] -= 1;
+                        // The downstream neighbor paces the matching
+                        // ingress across this segment's window (+ hop
+                        // latency). In the loopback mirror that neighbor
+                        // is ourselves.
                         let nxt = p + 1;
-                        if nxt < n && map.receives_at[nxt] && ingress_left[nxt] > 0 {
-                            if ingress_groups[nxt] == crate::hw::hbm::GroupId::NONE {
-                                ingress_groups[nxt] = r.register_group(
-                                    ingress_left[nxt],
-                                    GroupTag::ChunkIngress(nxt as u32),
-                                );
-                                ingress_scheduled[nxt] = true;
-                            }
-                            pos0_wgs_left -= wgs;
-                            let part = if pos0_wgs_left == 0 {
-                                ingress_left[nxt]
-                            } else {
-                                (ingress_left[nxt] * wgs
-                                    / (pos0_wgs_left + wgs))
-                                    .min(ingress_left[nxt])
-                            };
-                            if part > 0 {
-                                ingress_left[nxt] -= part;
-                                let lat = r.sys.link.latency;
-                                r.schedule_ingress_window(
-                                    nxt as u32,
-                                    part,
-                                    w.start + lat,
-                                    w.done + lat,
-                                    PACE_BATCH,
-                                );
-                            }
+                        if nxt < self.n {
+                            let lat = self.r.link_out.cfg().latency;
+                            out.push(FusedMsg::Segment {
+                                pos: nxt as u32,
+                                wgs,
+                                of_total: self.chunks.chunk_wgs
+                                    [self.chunks.chunk_order[0] as usize],
+                                start: w.start + lat,
+                                end: w.done + lat,
+                            });
                         }
                     }
                     _ => {
                         // Local NMC updates through the compute stream.
-                        r.submit_tagged(
+                        self.r.submit_tagged(
                             bytes,
                             TxnKind::NmcUpdate,
                             Stream::Compute,
                             TrafficClass::GemmWrite,
                             GroupTag::ChunkLocal(p as u32),
                         );
-                        groups_pending[p] += 1;
-                        seg_to_come[p] -= 1;
+                        self.groups_pending[p] += 1;
+                        self.seg_to_come[p] -= 1;
                     }
                 }
             }
-            stage += 1;
-            stage_compute_done = false;
-            if stage < plan.num_stages {
-                start_stage(&mut r, stage);
+            self.stage += 1;
+            self.stage_compute_done = false;
+            if self.stage < self.plan.num_stages {
+                self.start_stage(self.stage);
             } else {
-                gemm_time = t;
+                self.gemm_time = t;
             }
         }
 
         // Tracker fired ⇒ mark DMA ready and launch it (positions 1..N-2).
-        // The upstream neighbor triggers its corresponding DMA at the same
-        // (mirrored) moment, so the next position's ingress is paced over
-        // the same window shifted by the link latency — receive of chunk
-        // p+1 overlaps our send of chunk p, as in Figure 7's steady state.
-        for p in newly_tracker_done.drain(..) {
-            if let ChunkMap::Dma { .. } = map.by_position[p] {
-                dma.mark_ready(p).expect("dma entry");
-                let bytes = chunk_bytes_at(p);
+        // The downstream neighbor receives the chunk across the egress
+        // window shifted by the hop latency — receive of chunk p+1 overlaps
+        // our send of chunk p, as in Figure 7's steady state.
+        let mut fired = std::mem::take(&mut self.newly_tracker_done);
+        for p in fired.drain(..) {
+            if let ChunkMap::Dma { .. } = self.map.by_position[p] {
+                self.dma.mark_ready(p).expect("dma entry");
+                let bytes = self.chunk_bytes_at(p);
                 // DMA reads the (partially reduced) chunk via the comm
                 // stream; egress window in parallel (pipelined).
-                r.submit_tagged(
+                self.r.submit_tagged(
                     bytes,
                     TxnKind::Read,
                     Stream::Comm,
                     TrafficClass::RsRead,
                     GroupTag::DmaReads(p as u32),
                 );
-                let w = r.link_out.reserve(t, bytes);
-                r.q.schedule(w.done, Ev::EgressDone { pos: p as u32 });
+                let w = self.r.link_out.reserve(t, bytes);
+                self.r.q.schedule(w.done, Ev::EgressDone { pos: p as u32 });
                 let nxt = p + 1;
-                if nxt < n && map.receives_at[nxt] && ingress_left[nxt] > 0 {
-                    debug_assert!(!ingress_scheduled[nxt]);
-                    ingress_scheduled[nxt] = true;
-                    let txns = ingress_left[nxt];
-                    ingress_left[nxt] = 0;
-                    ingress_groups[nxt] =
-                        r.register_group(txns, GroupTag::ChunkIngress(nxt as u32));
-                    let lat = r.sys.link.latency;
-                    r.schedule_ingress_window(
-                        nxt as u32,
-                        txns,
-                        w.start + lat,
-                        w.done + lat,
-                        PACE_BATCH,
-                    );
+                if nxt < self.n {
+                    let lat = self.r.link_out.cfg().latency;
+                    out.push(FusedMsg::Dma {
+                        pos: nxt as u32,
+                        start: w.start + lat,
+                        end: w.done + lat,
+                    });
                 }
+            }
+        }
+        self.newly_tracker_done = fired;
+        true
+    }
+
+    fn segments_of(&self, stage: u64) -> Vec<(u32, u64)> {
+        // Recomputing one stage's segments is cheap (few entries) and keeps
+        // the struct free of a borrowed-while-mutated segments field.
+        stage_segments(&self.plan, &self.chunks)[stage as usize].clone()
+    }
+
+    /// Apply an upstream neighbor's ingress-window message.
+    pub fn deliver(&mut self, msg: &FusedMsg) {
+        let p = msg.pos() as usize;
+        if p >= self.n || !self.map.receives_at[p] || self.ingress_left[p] == 0 {
+            return;
+        }
+        match *msg {
+            FusedMsg::Segment {
+                pos,
+                wgs,
+                of_total,
+                start,
+                end,
+            } => {
+                if self.ingress_groups[p] == GroupId::NONE {
+                    self.ingress_groups[p] = self
+                        .r
+                        .register_group(self.ingress_left[p], GroupTag::ChunkIngress(pos));
+                    self.ingress_scheduled[p] = true;
+                }
+                let left = self.sender_wgs_left.get_or_insert(of_total);
+                *left -= wgs;
+                // Pace a proportional share of the chunk's ingress across
+                // this segment's window; the final segment flushes the
+                // remainder.
+                let part = if *left == 0 {
+                    self.ingress_left[p]
+                } else {
+                    (self.ingress_left[p] * wgs / (*left + wgs)).min(self.ingress_left[p])
+                };
+                if part > 0 {
+                    self.ingress_left[p] -= part;
+                    self.r.schedule_ingress_window(pos, part, start, end, PACE_BATCH);
+                }
+            }
+            FusedMsg::Dma { pos, start, end } => {
+                debug_assert!(!self.ingress_scheduled[p]);
+                self.ingress_scheduled[p] = true;
+                let txns = self.ingress_left[p];
+                self.ingress_left[p] = 0;
+                self.ingress_groups[p] =
+                    self.r.register_group(txns, GroupTag::ChunkIngress(pos));
+                self.r.schedule_ingress_window(pos, txns, start, end, PACE_BATCH);
             }
         }
     }
 
-    debug_assert!(r.mem.idle());
-    debug_assert!(dma.all_fired(), "not all DMA entries fired");
-    debug_assert!(local_done.iter().all(|&d| d));
-    let total = r.now();
-    // Peak tracker footprint: WF tiles of the stages in flight — bounded by
-    // one stage's WFs plus the incoming chunk's tiles.
-    let tracker_peak_tiles = plan.stage_wgs * plan.tiling.wfs_per_wg()
-        + chunks.chunk_wf_tiles.iter().max().copied().unwrap_or(0);
-
-    FusedResult {
-        total,
-        gemm_time,
-        tracker_done,
-        counters: r.mem.counters,
-        tracker_peak_tiles,
-        trace: r.mem.trace.take(),
+    /// Consume the drained rank into its result.
+    pub fn into_result(self) -> FusedResult {
+        debug_assert!(self.r.mem.idle());
+        debug_assert!(self.dma.all_fired(), "not all DMA entries fired");
+        debug_assert!(self.local_done.iter().all(|&d| d));
+        let total = self.r.now();
+        // Peak tracker footprint: WF tiles of the stages in flight — bounded
+        // by one stage's WFs plus the incoming chunk's tiles.
+        let tracker_peak_tiles = self.plan.stage_wgs * self.plan.tiling.wfs_per_wg()
+            + self.chunks.chunk_wf_tiles.iter().max().copied().unwrap_or(0);
+        let mut mem = self.r.mem;
+        FusedResult {
+            total,
+            gemm_time: self.gemm_time,
+            tracker_done: self.tracker_done,
+            sent_done: self.sent_done,
+            counters: mem.counters,
+            tracker_peak_tiles,
+            trace: mem.trace.take(),
+        }
     }
+}
+
+/// Run the fused GEMM + ring-RS on device 0 of `devices`, mirroring the
+/// homogeneous neighbors (§5.1.1): the rank's outbound ring messages are
+/// delivered back to itself. The multi-rank cluster engine
+/// ([`crate::cluster`]) reproduces this bit-for-bit in its uniform
+/// configuration.
+pub fn run_fused_gemm_rs(
+    sys: &SystemConfig,
+    plan: &StagePlan,
+    devices: u64,
+    opts: &FusedOpts,
+) -> FusedResult {
+    let mut rank = FusedRank::new(sys, plan, devices, 0, opts, 1.0, sys.link.clone());
+    let mut msgs = Vec::new();
+    while rank.step(&mut msgs) {
+        for m in msgs.drain(..) {
+            rank.deliver(&m);
+        }
+    }
+    rank.into_result()
 }
 
 fn check_tracker(p: usize, map: &OutputMap, local: &[bool], ingress: &[bool]) -> bool {
@@ -530,5 +733,50 @@ mod tests {
             assert!(res.total > SimTime::ZERO, "devices={devices}");
             assert_eq!(res.tracker_done.len(), devices as usize);
         }
+    }
+
+    #[test]
+    fn rank_machine_runs_for_any_rank_id() {
+        // Every rank's loopback mirror drains cleanly (per-rank chunk
+        // orders differ, the machine must not assume rank 0).
+        let sys = SystemConfig::table1();
+        let p = plan(4096, 2048, 512);
+        for rank in 0..4u64 {
+            let mut r =
+                FusedRank::new(&sys, &p, 4, rank, &opts(ArbPolicy::T3Mca), 1.0, sys.link.clone());
+            let mut msgs = Vec::new();
+            while r.step(&mut msgs) {
+                for m in msgs.drain(..) {
+                    r.deliver(&m);
+                }
+            }
+            let res = r.into_result();
+            assert!(res.total > SimTime::ZERO, "rank={rank}");
+        }
+    }
+
+    #[test]
+    fn compute_scale_slows_the_gemm() {
+        let sys = SystemConfig::table1();
+        let p = plan(4096, 2048, 512);
+        let run = |scale: f64| {
+            let mut r =
+                FusedRank::new(&sys, &p, 4, 0, &opts(ArbPolicy::T3Mca), scale, sys.link.clone());
+            let mut msgs = Vec::new();
+            while r.step(&mut msgs) {
+                for m in msgs.drain(..) {
+                    r.deliver(&m);
+                }
+            }
+            r.into_result()
+        };
+        let nominal = run(1.0);
+        let slow = run(1.5);
+        assert!(slow.gemm_time > nominal.gemm_time);
+        assert!(slow.total > nominal.total);
+        // The plain entry point is exactly the scale-1.0 loopback.
+        let plain = run_fused_gemm_rs(&sys, &p, 4, &opts(ArbPolicy::T3Mca));
+        assert_eq!(plain.total, nominal.total);
+        assert_eq!(plain.tracker_done, nominal.tracker_done);
     }
 }

@@ -34,8 +34,20 @@ pub fn run_gemm(
     cus: u32,
     mode: WriteMode,
 ) -> GemmRunResult {
+    run_gemm_scaled(sys, plan, cus, mode, 1.0)
+}
+
+/// [`run_gemm`] with a per-rank compute slowdown factor (`1.0` = nominal;
+/// the cluster skew model stretches a straggler's stage compute times).
+pub fn run_gemm_scaled(
+    sys: &SystemConfig,
+    plan: &StagePlan,
+    cus: u32,
+    mode: WriteMode,
+    compute_scale: f64,
+) -> GemmRunResult {
     let mut r = Runner::new(sys, ArbPolicy::ComputePriority);
-    run_gemm_on(&mut r, plan, cus, mode)
+    run_gemm_on_scaled(&mut r, plan, cus, mode, compute_scale)
 }
 
 /// Run a GEMM on an existing runner (lets callers pre-load background
@@ -46,6 +58,17 @@ pub fn run_gemm_on(
     cus: u32,
     mode: WriteMode,
 ) -> GemmRunResult {
+    run_gemm_on_scaled(r, plan, cus, mode, 1.0)
+}
+
+fn run_gemm_on_scaled(
+    r: &mut Runner,
+    plan: &StagePlan,
+    cus: u32,
+    mode: WriteMode,
+    compute_scale: f64,
+) -> GemmRunResult {
+    debug_assert!(compute_scale >= 1.0);
     let traffic = gemm_traffic(plan, &r.sys.mem, mode);
     let write_kind = match mode {
         WriteMode::ThroughLlc => TxnKind::Write,
@@ -87,6 +110,11 @@ pub fn run_gemm_on(
                 // extended by the unhidden fraction of the head-of-line
                 // stalls its loads suffered behind comm traffic.
                 let ct = plan.stage_compute_time(s, &gpu, cus, eff);
+                let ct = if compute_scale != 1.0 {
+                    ct * compute_scale
+                } else {
+                    ct
+                };
                 let stall = blocked * gpu.stall_unhidden;
                 r.q.schedule_in(ct + stall, Ev::StageCompute(s));
             }
@@ -189,6 +217,19 @@ mod tests {
         assert!(res.counters.gemm_writes >= res.traffic.dram_writes);
         assert!(res.counters.gemm_writes <= res.traffic.dram_writes + slack);
         assert_eq!(res.counters.rs_reads, 0);
+    }
+
+    #[test]
+    fn compute_scale_stretches_the_run() {
+        let sys = SystemConfig::table1();
+        let p = plan(4096, 4096, 1024);
+        let nominal = run_gemm_scaled(&sys, &p, 80, WriteMode::BypassLlc, 1.0);
+        let slow = run_gemm_scaled(&sys, &p, 80, WriteMode::BypassLlc, 1.5);
+        assert!(slow.time > nominal.time);
+        // Scale 1.0 is the plain path, bit-for-bit.
+        let plain = run_gemm(&sys, &p, 80, WriteMode::BypassLlc);
+        assert_eq!(plain.time, nominal.time);
+        assert_eq!(plain.stage_ends, nominal.stage_ends);
     }
 
     #[test]

@@ -1,20 +1,33 @@
-//! The single-device discrete-event engine.
+//! The per-device discrete-event engine.
 //!
-//! Like the paper's methodology (§5.1.1), we exploit the homogeneity of
-//! tensor-parallel execution: every GPU runs the same kernels on the same
-//! schedule, so both the baseline and T3 are evaluated by modeling *one*
-//! GPU in detail and mirroring its egress timeline into its ingress (plus
-//! link latency/bandwidth) to synthesize the neighbor traffic. The paper
-//! validates this approach at 6% geomean error against a 4-GPU node; we
-//! validate our event model against the closed-form α-β ring law
-//! (`collectives::analytic`, Figure 14 bench).
+//! Every runner in this module is a *per-rank state machine*: one device's
+//! kernels, memory system, and egress link, communicating with its ring
+//! neighbors only through explicit ingress-window messages. Two driver
+//! styles exist over the same machines:
+//!
+//! * **Loopback mirror** (the paper's §5.1.1 methodology): every GPU runs
+//!   the same kernels on the same schedule, so one rank is modeled in
+//!   detail and its outbound messages are delivered back to itself —
+//!   mirroring its egress timeline into its ingress (plus link
+//!   latency/bandwidth). The paper validates this approach at 6% geomean
+//!   error against a 4-GPU node; we validate our event model against the
+//!   closed-form α-β ring law (`collectives::analytic`, Figure 14 bench).
+//!   [`fused::run_fused_gemm_rs`] and the `collective_run` entry points
+//!   are loopback drivers.
+//! * **Multi-rank cluster** ([`crate::cluster`]): `tp` interacting rank
+//!   machines whose messages travel to the actual neighbor over per-edge
+//!   links — rank skew, stragglers, and two-tier topologies become
+//!   expressible. Its uniform configuration reproduces the loopback
+//!   mirror bit-for-bit.
 //!
 //! Submodules:
 //! * [`gemm_run`]       — isolated producer GEMM (any CU count/write mode);
 //! * [`collective_run`] — CU-executed baseline ring RS/AG and the
-//!   NMC-assisted RS used by the Ideal-RS+NMC configuration;
+//!   NMC-assisted RS used by the Ideal-RS+NMC configuration
+//!   ([`collective_run::RingRank`] is the rank machine);
 //! * [`fused`]          — the T3 fused GEMM-RS engine (track & trigger,
-//!   staggered chunks, NMC updates, MCA).
+//!   staggered chunks, NMC updates, MCA; [`fused::FusedRank`] is the rank
+//!   machine).
 
 pub mod collective_run;
 pub mod fused;
@@ -74,8 +87,8 @@ pub enum GroupTag {
 
 /// A self-rescheduling paced emitter: instead of pushing every batch event
 /// into the calendar up front (which ballooned the heap to tens of
-/// thousands of entries — see EXPERIMENTS.md §Perf), only the next batch
-/// is scheduled; popping it schedules the following one.
+/// thousands of entries), only the next batch is scheduled; popping it
+/// schedules the following one.
 #[derive(Debug, Clone, Copy)]
 struct Pacer {
     remaining: u64,
@@ -99,11 +112,22 @@ pub struct Runner {
 
 impl Runner {
     pub fn new(sys: &SystemConfig, policy: crate::config::ArbPolicy) -> Self {
+        Self::with_link(sys, policy, sys.link.clone())
+    }
+
+    /// A runner whose egress link differs from the system default — the
+    /// cluster engine's per-edge links (e.g. a slow inter-node hop in a
+    /// two-tier topology).
+    pub fn with_link(
+        sys: &SystemConfig,
+        policy: crate::config::ArbPolicy,
+        link: crate::config::LinkConfig,
+    ) -> Self {
         Runner {
             sys: sys.clone(),
             mem: MemorySystem::new(sys.mem.clone(), policy, sys.mca.clone()),
             q: EventQueue::new(),
-            link_out: Link::new(sys.link.clone()),
+            link_out: Link::new(link),
             tags: HashMap::new(),
             completions: Vec::new(),
             ingress_pacers: HashMap::new(),

@@ -12,7 +12,12 @@
 //!   whether the trailing all-gather is serialized or skipped. The five
 //!   paper configurations are presets ([`registry`]); arbitrary new
 //!   combinations (T3 without MCA, partial-CU ideal overlap, RS-only
-//!   bounds) compose without touching the engine.
+//!   bounds) compose without touching the engine. The cluster axis
+//!   (`ScenarioSpec::cluster`) swaps the single-rank homogeneous mirror
+//!   for the multi-rank [`crate::cluster`] engine, adding per-rank
+//!   skew/straggler and two-tier topology knobs — `Some(uniform)` and
+//!   `None` are bit-identical, so the legacy path is the cluster's
+//!   special case.
 //! * [`ExperimentSpec`] declares a grid over systems x models x TP degrees
 //!   x sub-layers x scenarios and executes it on a work-stealing
 //!   thread-pool ([`executor`]), producing a [`ResultSet`] that supports
@@ -30,8 +35,9 @@ pub mod results;
 pub use grid::ExperimentSpec;
 pub use results::{Cell, EndToEnd, ResultSet};
 
+use crate::cluster::{self, ClusterModel, Interleave, RingClusterSpec};
 use crate::config::{ArbPolicy, SystemConfig};
-use crate::engine::collective_run::{run_ag_baseline, run_rs_baseline, run_rs_nmc};
+use crate::engine::collective_run::{run_ag_baseline, run_rs_baseline, run_rs_nmc, RingKind};
 use crate::engine::fused::{run_fused_gemm_rs, FusedOpts};
 use crate::engine::gemm_run::run_gemm;
 use crate::gemm::traffic::WriteMode;
@@ -113,6 +119,12 @@ pub struct ScenarioSpec {
     /// Record a Figure-17-style DRAM traffic trace with this bin size
     /// (fused paths only).
     pub trace_bin: Option<SimTime>,
+    /// Simulate every TP rank as a communicating node of a
+    /// [`crate::cluster`] with this skew/topology model, instead of the
+    /// single-rank homogeneous mirror. `None` (the default) is the legacy
+    /// path; `Some(ClusterModel::uniform())` reproduces it bit-for-bit
+    /// through the multi-rank engine.
+    pub cluster: Option<ClusterModel>,
 }
 
 impl ScenarioSpec {
@@ -129,6 +141,7 @@ impl ScenarioSpec {
             rs_nmc: false,
             ag: AgMode::RingCu,
             trace_bin: None,
+            cluster: None,
         }
     }
 
@@ -212,6 +225,12 @@ impl ScenarioSpec {
         self
     }
 
+    /// Run on the multi-rank cluster engine with the given skew/topology.
+    pub fn cluster(mut self, model: ClusterModel) -> Self {
+        self.cluster = Some(model);
+        self
+    }
+
     /// One-line knob summary for `t3 scenarios`.
     pub fn describe(&self) -> String {
         let overlap = match self.overlap {
@@ -235,7 +254,7 @@ impl ScenarioSpec {
                 format!("{}/{}", show(g), show(c))
             }
         };
-        format!(
+        let mut s = format!(
             "overlap={overlap} arb={policy} cus={cus} rs={} ag={} writes={}",
             if self.rs_nmc { "nmc" } else { "cu" },
             match self.ag {
@@ -246,7 +265,12 @@ impl ScenarioSpec {
                 WriteMode::ThroughLlc => "llc",
                 WriteMode::BypassLlc => "bypass",
             },
-        )
+        );
+        if let Some(cm) = &self.cluster {
+            s.push(' ');
+            s.push_str(&cm.describe());
+        }
+        s
     }
 
     /// Simulate one (system, model, tp, sub-layer) under this scenario.
@@ -257,6 +281,9 @@ impl ScenarioSpec {
         tp: u64,
         sub: SubLayer,
     ) -> Measurement {
+        if let Some(cm) = &self.cluster {
+            return self.run_cluster(sys, model, tp, sub, cm);
+        }
         let shape = sublayer_gemm(model, tp, sub);
         let plan = StagePlan::new(shape, Tiling::default(), &sys.gpu);
         let ar_bytes = shape.out_bytes();
@@ -332,6 +359,144 @@ impl ScenarioSpec {
             }
         }
     }
+
+    /// The multi-rank path of [`ScenarioSpec::run`]: every TP rank is a
+    /// communicating node of `cm`; ring collectives run hop-by-hop with
+    /// per-rank start offsets, so skew and slow links surface in the
+    /// measurement. Reported counters are rank 0's (uniform ranks are
+    /// identical; per-rank detail is available through [`crate::cluster`]
+    /// directly). The timing fields aggregate the worst rank, matching the
+    /// single-rank semantics when `cm` is uniform — bit-for-bit.
+    fn run_cluster(
+        &self,
+        sys: &SystemConfig,
+        model: &ModelCfg,
+        tp: u64,
+        sub: SubLayer,
+        cm: &ClusterModel,
+    ) -> Measurement {
+        let shape = sublayer_gemm(model, tp, sub);
+        let plan = StagePlan::new(shape, Tiling::default(), &sys.gpu);
+        let ar_bytes = shape.out_bytes();
+        let gemm_cus = self.gemm_cus.resolve(sys);
+        let comm_cus = self.comm_cus.resolve(sys);
+        let order = Interleave::Ascending;
+        let rs_kind = if self.rs_nmc { RingKind::RsNmc } else { RingKind::RsCu };
+
+        let ring = |kind: RingKind, starts: Vec<SimTime>| {
+            cluster::run_ring_cluster(
+                sys,
+                &RingClusterSpec {
+                    bytes: ar_bytes,
+                    tp,
+                    cus: comm_cus,
+                    kind,
+                    starts,
+                },
+                cm,
+                order,
+            )
+        };
+
+        match self.overlap {
+            OverlapMode::Serialized => {
+                let gemms =
+                    cluster::run_gemm_cluster(sys, &plan, gemm_cus, self.write_mode, tp, cm);
+                let gemm_end = gemms.iter().map(|g| g.time).max().unwrap();
+                let rs = ring(rs_kind, gemms.iter().map(|g| g.time).collect());
+                let rs_end = rs.end();
+                let (ag_time, total, ag_counters) = match self.ag {
+                    AgMode::RingCu => {
+                        let ag = ring(
+                            RingKind::AgCu,
+                            rs.per_rank.iter().map(|r| r.time).collect(),
+                        );
+                        let end = ag.end();
+                        (end - rs_end, end, ag.per_rank[0].counters)
+                    }
+                    AgMode::Skip => (SimTime::ZERO, rs_end, DramCounters::default()),
+                };
+                let mut counters = gemms[0].counters;
+                counters.add(&rs.per_rank[0].counters);
+                counters.add(&ag_counters);
+                Measurement {
+                    gemm: gemm_end,
+                    rs: rs_end - gemm_end,
+                    ag: ag_time,
+                    total,
+                    counters,
+                }
+            }
+            OverlapMode::Ideal => {
+                let gemms =
+                    cluster::run_gemm_cluster(sys, &plan, gemm_cus, self.write_mode, tp, cm);
+                let gemm_end = gemms.iter().map(|g| g.time).max().unwrap();
+                // Ideal overlap: the collective runs unconstrained from t=0.
+                let rs = ring(rs_kind, vec![SimTime::ZERO; tp as usize]);
+                let rs_iso = rs.per_rank.iter().map(|r| r.time).max().unwrap();
+                let ideal_ends: Vec<SimTime> = gemms
+                    .iter()
+                    .zip(&rs.per_rank)
+                    .map(|(g, r)| g.time.max(r.time))
+                    .collect();
+                let ideal_end = ideal_ends.iter().copied().max().unwrap();
+                let (ag_time, total, ag_counters) = match self.ag {
+                    AgMode::RingCu => {
+                        let ag = ring(RingKind::AgCu, ideal_ends);
+                        let end = ag.end();
+                        (end - ideal_end, end, ag.per_rank[0].counters)
+                    }
+                    AgMode::Skip => (SimTime::ZERO, ideal_end, DramCounters::default()),
+                };
+                let mut counters = gemms[0].counters;
+                counters.add(&rs.per_rank[0].counters);
+                counters.add(&ag_counters);
+                Measurement {
+                    gemm: gemm_end,
+                    rs: rs_iso,
+                    ag: ag_time,
+                    total,
+                    counters,
+                }
+            }
+            OverlapMode::Fused => {
+                let fused = cluster::run_fused_cluster(
+                    sys,
+                    &plan,
+                    tp,
+                    &FusedOpts {
+                        policy: self.policy,
+                        write_mode: self.write_mode,
+                        trace_bin: self.trace_bin,
+                    },
+                    cm,
+                    order,
+                );
+                let fused_end = fused.total();
+                let gemm_end = fused.gemm_time();
+                let (ag_time, total, ag_counters) = match self.ag {
+                    AgMode::RingCu => {
+                        let ag = ring(
+                            RingKind::AgCu,
+                            fused.per_rank.iter().map(|r| r.total).collect(),
+                        );
+                        let end = ag.end();
+                        (end - fused_end, end, ag.per_rank[0].counters)
+                    }
+                    AgMode::Skip => (SimTime::ZERO, fused_end, DramCounters::default()),
+                };
+                let mut counters = fused.per_rank[0].counters;
+                counters.add(&ag_counters);
+                Measurement {
+                    gemm: gemm_end,
+                    rs: fused_end - gemm_end,
+                    ag: ag_time,
+                    total,
+                    counters,
+                }
+            }
+        }
+    }
 }
 
 /// Timing and traffic of one simulated sub-layer cell.
@@ -400,6 +565,22 @@ pub fn registry() -> Vec<ScenarioSpec> {
         // Fused GEMM-RS without the trailing all-gather: lower bound for a
         // hypothetical fused-AG epilogue.
         ScenarioSpec::t3_mca().named("T3-MCA-FusedAG-Bound").skip_ag(),
+        // -- cluster scenarios (multi-rank engine, t3::cluster) --
+        // One rank 25% slower: how far does track-and-trigger localize the
+        // damage? (Only chunks transiting the straggler are delayed.)
+        ScenarioSpec::t3_mca()
+            .named("T3-MCA-Straggler")
+            .cluster(ClusterModel::straggler(1, 1.25)),
+        // Two-tier topology: 4-rank nodes with fast intra-node links, the
+        // node-crossing hops at a third of the bandwidth and 2 us latency.
+        ScenarioSpec::t3_mca()
+            .named("T3-MCA-TwoTier")
+            .cluster(ClusterModel::two_tier(4, 1.0 / 3.0, SimTime::us(2))),
+        // The same straggler under the serialized baseline, for contrast:
+        // every rank waits for the full skewed GEMM + ring.
+        ScenarioSpec::sequential()
+            .named("Sequential-Straggler")
+            .cluster(ClusterModel::straggler(1, 1.25)),
     ]);
     all
 }
@@ -415,6 +596,9 @@ pub fn preset(name: &str) -> Option<ScenarioSpec> {
         "comppri" => "T3-CompPrio",
         "ideal-72-8" => "Ideal-Split-72-8",
         "ideal-64-16" => "Ideal-Split-64-16",
+        "straggler" => "T3-MCA-Straggler",
+        "two-tier" | "twotier" => "T3-MCA-TwoTier",
+        "seq-straggler" => "Sequential-Straggler",
         other => other,
     }
     .to_string();
@@ -451,7 +635,23 @@ mod tests {
         assert_eq!(preset("ideal").unwrap().name, "Ideal-GEMM-RS-Overlap");
         assert_eq!(preset("ideal-nmc").unwrap().name, "Ideal-RS+NMC");
         assert_eq!(preset("t3-compprio").unwrap().name, "T3-CompPrio");
+        assert_eq!(preset("straggler").unwrap().name, "T3-MCA-Straggler");
+        assert_eq!(preset("two-tier").unwrap().name, "T3-MCA-TwoTier");
         assert!(preset("no-such-scenario").is_none());
+    }
+
+    #[test]
+    fn cluster_axis_composes_and_describes() {
+        let s = ScenarioSpec::t3_mca().cluster(ClusterModel::straggler(3, 1.5));
+        assert!(s.cluster.is_some());
+        assert!(s.describe().contains("straggler(r3"), "{}", s.describe());
+        // Registry cluster presets carry their models.
+        let st = preset("straggler").unwrap();
+        assert_eq!(st.cluster, Some(ClusterModel::straggler(1, 1.25)));
+        let tt = preset("two-tier").unwrap();
+        assert!(tt.cluster.is_some());
+        // Non-cluster presets stay on the legacy path.
+        assert_eq!(preset("mca").unwrap().cluster, None);
     }
 
     #[test]

@@ -6,11 +6,13 @@
 //! parallel executor, and renders a [`Table`] view over the returned
 //! [`crate::experiment::ResultSet`] (ASCII for the benches/CLI, CSV under
 //! `results/`). The analytic figures (4, 14) and the single-run trace
-//! figure (17) drive the models/engine directly.
+//! figure (17) drive the models/engine directly; [`cluster_report`] is the
+//! per-rank view over the multi-rank cluster engine (`t3 cluster`).
 
 use std::fmt::Write as _;
 use std::path::Path;
 
+use crate::cluster::{run_fused_cluster, ClusterModel, Interleave};
 use crate::config::SystemConfig;
 use crate::engine::collective_run::{run_ag_baseline, run_rs_baseline};
 use crate::engine::fused::{run_fused_gemm_rs, FusedOpts};
@@ -733,8 +735,77 @@ pub fn ablation_mca_thresholds(sys: &SystemConfig) -> Table {
     t.note("paper §6.1.3: threshold chosen per kernel memory intensity (5/10/30/no-limit)");
     t.note(
         "note: sensitivity is muted at transaction granularity — comm pressure (~6% of DRAM bw) \
-         rarely fills queues; the paper's cycle-level WG stalls amplify it (EXPERIMENTS.md)",
+         rarely fills queues; the paper's cycle-level WG stalls amplify it",
     );
+    t
+}
+
+// ---------------------------------------------------------------------
+// Cluster view — per-rank timelines of the multi-rank engine (t3 cluster).
+// ---------------------------------------------------------------------
+
+/// Per-rank report of a fused GEMM-RS run on the multi-rank cluster
+/// engine ([`crate::cluster`]): each rank's skew factor, GEMM retirement,
+/// exposed RS tail, and total, plus critical-path notes comparing against
+/// the uniform cluster. The view always drives the fused engine (that is
+/// where per-rank structure is richest); `scenario` supplies the
+/// arbitration policy and write mode.
+pub fn cluster_report(
+    sys: &SystemConfig,
+    model: &ModelCfg,
+    tp: u64,
+    sub: SubLayer,
+    scenario: &ScenarioSpec,
+    cm: &ClusterModel,
+) -> Table {
+    let shape = sublayer_gemm(model, tp, sub);
+    let plan = StagePlan::new(shape, Tiling::default(), &sys.gpu);
+    let opts = FusedOpts {
+        policy: scenario.policy,
+        write_mode: scenario.write_mode,
+        trace_bin: None,
+    };
+    let run = run_fused_cluster(sys, &plan, tp, &opts, cm, Interleave::Ascending);
+    // The uniform reference run is skipped when `cm` is already uniform
+    // (it would be the identical simulation a second time).
+    let uniform_total = if cm.is_uniform_for(tp) {
+        run.total()
+    } else {
+        run_fused_cluster(sys, &plan, tp, &opts, &ClusterModel::uniform(), Interleave::Ascending)
+            .total()
+    };
+    let mut t = Table::new(
+        "cluster",
+        &format!(
+            "{} TP={tp} {} — per-rank fused GEMM-RS ({})",
+            model.name,
+            sub.name(),
+            cm.describe()
+        ),
+        &["rank", "node", "skew", "gemm ms", "rs tail ms", "total ms", "last tracker ms"],
+    );
+    for (r, res) in run.per_rank.iter().enumerate() {
+        t.row(vec![
+            r.to_string(),
+            cm.topology.node_of(r as u64).to_string(),
+            format!("{:.3}", run.factors[r]),
+            ms(res.gemm_time),
+            ms(res.total - res.gemm_time),
+            ms(res.total),
+            ms(*res.tracker_done.last().expect("ring has positions")),
+        ]);
+    }
+    let slow = run.slowest_rank();
+    t.note(format!(
+        "critical path: rank {slow} ({} ms)",
+        ms(run.per_rank[slow].total)
+    ));
+    t.note(format!(
+        "uniform cluster total {} ms -> this cluster {} ms ({:+.1}%)",
+        ms(uniform_total),
+        ms(run.total()),
+        (run.total().as_ps() as f64 / uniform_total.as_ps() as f64 - 1.0) * 100.0
+    ));
     t
 }
 
@@ -829,5 +900,23 @@ mod tests {
     #[test]
     fn table2_lists_all_models() {
         assert_eq!(table2().rows.len(), zoo().len());
+    }
+
+    #[test]
+    fn cluster_report_renders_per_rank_rows() {
+        let sys = SystemConfig::table1();
+        let m = by_name("T-NLG").unwrap();
+        let t = cluster_report(
+            &sys,
+            &m,
+            2,
+            SubLayer::OpFwd,
+            &ScenarioSpec::t3_mca(),
+            &ClusterModel::straggler(1, 1.5),
+        );
+        assert_eq!(t.rows.len(), 2);
+        // The straggler's skew factor is rendered on its row.
+        assert_eq!(t.rows[1][2], "1.500");
+        assert!(t.notes.iter().any(|n| n.contains("critical path")));
     }
 }

@@ -193,7 +193,7 @@ impl MemorySystem {
     ) {
         // Enqueue everything first, then pump each touched channel once —
         // bursts are the common case and per-transaction pumping dominated
-        // the profile (EXPERIMENTS.md §Perf).
+        // the profile.
         let nch = self.cfg.channels as u64;
         for _ in 0..count {
             let ch = (self.rr_submit % self.cfg.channels) as usize;

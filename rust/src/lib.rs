@@ -7,6 +7,10 @@
 //! The crate contains:
 //! * a discrete-event multi-GPU simulator ([`sim`], [`hw`], [`engine`])
 //!   modeling the paper's Table-1 system at memory-transaction granularity;
+//! * the multi-rank [`cluster`] engine — every TP rank as a communicating
+//!   event-driven node with per-edge links, supporting rank skew,
+//!   stragglers, and two-tier topologies; its uniform configuration
+//!   reproduces the single-rank mirror engine bit-for-bit;
 //! * the T3 mechanisms: the [`tracker`] at the memory controller, the
 //!   producer output [`addrspace`] configuration, near-memory-compute DRAM
 //!   semantics and the MCA arbitration policy ([`hw::mc`]);
@@ -25,9 +29,11 @@
 //! * the figure/table regeneration [`harness`], a thin view layer over
 //!   [`experiment`].
 //!
-//! See DESIGN.md for the architecture and EXPERIMENTS.md for results.
+//! See DESIGN.md for the architecture (including the paper-section →
+//! source-file map) and README.md for the quickstart and CLI tour.
 
 pub mod addrspace;
+pub mod cluster;
 pub mod collectives;
 pub mod coordinator;
 pub mod config;

@@ -1,19 +1,25 @@
 //! `t3` — CLI front-end of the T3 reproduction.
 //!
 //! Subcommands (hand-rolled parser; clap is not in the offline closure):
-//!   t3 config     [--future]
-//!   t3 models     --list
-//!   t3 scenarios            (named scenario registry + knobs)
-//!   t3 simulate   --model <name> --tp <n> --sublayer <op|fc2|fc1|ip> [--scenario <s>]
-//!   t3 experiment [--models a,b] [--tps 8,16] [--sublayers op,fc2] \
-//!                 [--scenarios s1,s2] [--future] [--threads n] [--csv dir]
-//!   t3 figure     <4|6|14|15|16|17|18|19|20|table2|table3> [--csv <dir>]
-//!   t3 sweep      --model <name> [--tps 4,8,16,32]
-//!   t3 validate             (tracker/functional-collective cross-checks)
-//!   t3 run        [--artifacts <dir>]   (PJRT numeric smoke; needs --features pjrt)
+//!
+//! ```text
+//! t3 config     [--future]
+//! t3 models     --list
+//! t3 scenarios            (named scenario registry + knobs)
+//! t3 simulate   --model <name> --tp <n> --sublayer <op|fc2|fc1|ip> [--scenario <s>]
+//! t3 experiment [--models a,b] [--tps 8,16] [--sublayers op,fc2] \
+//!               [--scenarios s1,s2] [--future] [--threads n] [--csv dir]
+//! t3 cluster    [--model <name>] [--tp <n>] [--sublayer <s>] [--scenario <s>]
+//!               [--skew straggler:R:F|jitter:A] [--nodes g] [--inter-bw f] [--inter-lat-ns n]
+//! t3 figure     <4|6|14|15|16|17|18|19|20|table2|table3> [--csv <dir>]
+//! t3 sweep      --model <name> [--tps 4,8,16,32]
+//! t3 validate             (tracker/functional-collective cross-checks)
+//! t3 run        [--artifacts <dir>]   (PJRT numeric smoke; needs --features pjrt)
+//! ```
 //!
 //! `simulate`, `sweep`, and every grid figure are thin layers over the
-//! declarative experiment API (`t3::experiment`).
+//! declarative experiment API (`t3::experiment`); `cluster` is the
+//! per-rank view over the multi-rank engine (`t3::cluster`).
 
 use std::collections::HashMap;
 use std::process::ExitCode;
@@ -75,18 +81,50 @@ fn scenarios_from(s: &str) -> std::result::Result<Vec<ScenarioSpec>, String> {
     Ok(out)
 }
 
-const USAGE: &str = "t3 <config|models|scenarios|simulate|experiment|figure|sweep|validate|run> [flags]
+const USAGE: &str = "t3 <config|models|scenarios|simulate|experiment|cluster|figure|sweep|validate|run> [flags]
   t3 config [--future]
   t3 models --list
   t3 scenarios
   t3 simulate --model T-NLG --tp 8 --sublayer fc2 [--scenario t3-mca]
   t3 experiment [--models Mega-GPT-2,T-NLG] [--tps 8,16] [--sublayers op,fc2,fc1,ip]
-                [--scenarios sequential,t3-mca,ideal-72-8] [--future] [--threads N]
+                [--scenarios sequential,t3-mca,ideal-72-8,straggler] [--future] [--threads N]
                 [--baseline Sequential] [--csv results]
+  t3 cluster [--model T-NLG] [--tp 8] [--sublayer fc2] [--scenario t3-mca]
+             [--skew none|straggler:RANK:FACTOR|jitter:AMPLITUDE]
+             [--nodes G] [--inter-bw FRAC] [--inter-lat-ns NS]
   t3 figure <4|6|14|15|16|17|18|19|20|table2|table3|ablation> [--csv results]
   t3 sweep --model T-NLG [--tps 4,8,16]
   t3 validate
   t3 run [--artifacts artifacts]";
+
+/// Parse a `--skew` specification: `none`, `straggler:RANK:FACTOR`, or
+/// `jitter:AMPLITUDE`.
+fn skew_from(s: &str) -> std::result::Result<t3::cluster::SkewModel, String> {
+    use t3::cluster::SkewModel;
+    let parts: Vec<&str> = s.split(':').collect();
+    let bad = || format!("bad --skew '{s}' (none | straggler:RANK:FACTOR | jitter:AMPLITUDE)");
+    match parts.as_slice() {
+        ["none"] => Ok(SkewModel::None),
+        ["straggler", rank, slow] => {
+            let rank = rank.parse::<u64>().map_err(|_| bad())?;
+            let slowdown = slow.parse::<f64>().map_err(|_| bad())?;
+            // Finiteness first: `NaN < 1.0` is false, so a plain `<` check
+            // alone would wave NaN through to a library assert.
+            if !slowdown.is_finite() || slowdown < 1.0 {
+                return Err("straggler FACTOR must be a finite number >= 1.0".to_string());
+            }
+            Ok(SkewModel::Straggler { rank, slowdown })
+        }
+        ["jitter", amp] => {
+            let amplitude = amp.parse::<f64>().map_err(|_| bad())?;
+            if !amplitude.is_finite() || amplitude < 0.0 {
+                return Err("jitter AMPLITUDE must be a finite number >= 0".to_string());
+            }
+            Ok(SkewModel::Jitter { amplitude })
+        }
+        _ => Err(bad()),
+    }
+}
 
 fn main() -> ExitCode {
     let args: Vec<String> = std::env::args().skip(1).collect();
@@ -281,6 +319,98 @@ fn main() -> ExitCode {
                     Err(e) => eprintln!("  csv write failed: {e}"),
                 }
             }
+            ExitCode::SUCCESS
+        }
+        "cluster" => {
+            use t3::cluster::{ClusterModel, SkewModel, TopologySpec};
+            use t3::sim::time::SimTime;
+            let model = flags.get("model").map(String::as_str).unwrap_or("T-NLG");
+            let Some(m) = by_name(model) else {
+                eprintln!("unknown model {model}; try `t3 models --list`");
+                return ExitCode::FAILURE;
+            };
+            let tp: u64 = flags.get("tp").and_then(|s| s.parse().ok()).unwrap_or(8);
+            if tp < 2 || m.hidden % tp != 0 {
+                eprintln!(
+                    "TP={tp} is not valid for {} (needs TP >= 2 dividing H={})",
+                    m.name, m.hidden
+                );
+                return ExitCode::FAILURE;
+            }
+            let Some(sub) =
+                sublayer_from(flags.get("sublayer").map(String::as_str).unwrap_or("fc2"))
+            else {
+                eprintln!("unknown sublayer (op|fc2|fc1|ip)");
+                return ExitCode::FAILURE;
+            };
+            let scenario = match flags.get("scenario") {
+                Some(s) => match experiment::preset(s) {
+                    Some(sc) => sc,
+                    None => {
+                        eprintln!("unknown scenario '{s}'; see `t3 scenarios`");
+                        return ExitCode::FAILURE;
+                    }
+                },
+                None => ScenarioSpec::t3_mca(),
+            };
+            // Start from the scenario's own cluster model (registry cluster
+            // presets carry one), then apply flag overrides.
+            let mut cm = scenario.cluster.clone().unwrap_or_else(ClusterModel::uniform);
+            if let Some(spec) = flags.get("skew") {
+                match skew_from(spec) {
+                    Ok(s) => cm.skew = s,
+                    Err(e) => {
+                        eprintln!("{e}");
+                        return ExitCode::FAILURE;
+                    }
+                }
+            }
+            if let SkewModel::Straggler { rank, .. } = cm.skew {
+                if rank >= tp {
+                    eprintln!("straggler rank {rank} out of range (tp={tp})");
+                    return ExitCode::FAILURE;
+                }
+            }
+            if let Some(nodes) = flags.get("nodes") {
+                let Ok(node_size) = nodes.parse::<u64>() else {
+                    eprintln!("bad --nodes '{nodes}'");
+                    return ExitCode::FAILURE;
+                };
+                if node_size == 0 {
+                    eprintln!("--nodes must be >= 1");
+                    return ExitCode::FAILURE;
+                }
+                let frac = match flags.get("inter-bw") {
+                    Some(v) => match v.parse::<f64>() {
+                        Ok(f) if f.is_finite() && f > 0.0 && f <= 1.0 => f,
+                        _ => {
+                            eprintln!("bad --inter-bw '{v}' (expected a fraction in (0, 1])");
+                            return ExitCode::FAILURE;
+                        }
+                    },
+                    None => 1.0 / 3.0,
+                };
+                let lat_ns = match flags.get("inter-lat-ns") {
+                    Some(v) => match v.parse::<u64>() {
+                        Ok(ns) => ns,
+                        Err(_) => {
+                            eprintln!("bad --inter-lat-ns '{v}' (expected nanoseconds)");
+                            return ExitCode::FAILURE;
+                        }
+                    },
+                    None => 2_000,
+                };
+                cm.topology = TopologySpec::TwoTier {
+                    node_size,
+                    inter_bw_frac: frac,
+                    inter_latency: SimTime::ns(lat_ns),
+                };
+            } else if flags.contains_key("inter-bw") || flags.contains_key("inter-lat-ns") {
+                eprintln!("--inter-bw/--inter-lat-ns require --nodes (two-tier topology)");
+                return ExitCode::FAILURE;
+            }
+            let sys = SystemConfig::table1();
+            println!("{}", harness::cluster_report(&sys, &m, tp, sub, &scenario, &cm).render());
             ExitCode::SUCCESS
         }
         "figure" => {

@@ -1,5 +1,20 @@
-//! Discrete-event simulation core: time, calendar queue, deterministic RNG,
-//! and statistics.
+//! Discrete-event simulation core.
+//!
+//! Everything the hardware models and engines build on:
+//! * [`time`] — picosecond-resolution 64-bit [`time::SimTime`], the only
+//!   clock in the system (resolves a single GPU cycle and sub-cycle DRAM
+//!   timing with ~213 days of headroom);
+//! * [`events`] — the deterministic calendar queue ([`events::EventQueue`],
+//!   (time, insertion-order) pop order). Every rank of the simulator owns
+//!   one; the multi-rank cluster engine ([`crate::cluster`]) advances many
+//!   of them in global time order;
+//! * [`rng`] — self-contained xoshiro256++ ([`rng::Rng`]) seeded via
+//!   SplitMix64, so every stochastic model (testkit property loops, the
+//!   cluster's per-rank skew draws) is bit-reproducible from
+//!   `SystemConfig::seed`; plus [`rng::TraceHash`] for fingerprinting
+//!   event traces in determinism tests;
+//! * [`stats`] — geomeans, summaries, histograms, time series, and the
+//!   Figure-18 DRAM byte counters shared by engines and the harness.
 
 pub mod events;
 pub mod rng;

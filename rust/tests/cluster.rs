@@ -1,0 +1,206 @@
+//! Multi-rank cluster engine contract tests:
+//!
+//! * **Parity** — the uniform (no-skew, single-tier) cluster reproduces
+//!   the legacy single-rank mirror engine bit-for-bit across all five
+//!   paper preset scenarios (`SimTime`s *and* DRAM counters);
+//! * **Determinism** — identical `ResultSet`s for any executor worker
+//!   count, identical per-rank results for any rank-event interleaving,
+//!   and a stable fingerprint for the skew scenarios (golden, blessable
+//!   via `T3_BLESS=1` into `tests/golden/`);
+//! * **End-to-end** — the straggler and two-tier registry scenarios run
+//!   through `ExperimentSpec` and behave (slower than the uniform run,
+//!   straggler on the critical path).
+//!
+//! Note on parity scope: the mirror approximates neighbor chunk sizes by
+//! its own, so bit-parity is exact when the output divides evenly into
+//! chunks — true for every paper preset workload used here (and the
+//! cluster is the more faithful model when chunks are uneven).
+
+use t3::cluster::{run_fused_cluster, ClusterModel, Interleave};
+use t3::config::{ArbPolicy, SystemConfig};
+use t3::engine::fused::FusedOpts;
+use t3::experiment::{paper_scenarios, preset, ExperimentSpec, ScenarioSpec};
+use t3::gemm::{StagePlan, Tiling};
+use t3::models::{by_name, sublayer_gemm, SubLayer};
+use t3::sim::rng::TraceHash;
+use t3::sim::time::SimTime;
+
+fn sys() -> SystemConfig {
+    SystemConfig::table1()
+}
+
+#[test]
+fn uniform_cluster_bit_matches_legacy_engine_on_all_paper_presets() {
+    let s = sys();
+    let m = by_name("T-NLG").unwrap();
+    // 2176 output WGs divide evenly by 4: even chunks, exact parity.
+    for scenario in paper_scenarios() {
+        let legacy = scenario.run(&s, &m, 4, SubLayer::OpFwd);
+        let clustered = scenario
+            .clone()
+            .cluster(ClusterModel::uniform())
+            .run(&s, &m, 4, SubLayer::OpFwd);
+        assert_eq!(legacy.gemm, clustered.gemm, "{} gemm", scenario.name);
+        assert_eq!(legacy.rs, clustered.rs, "{} rs", scenario.name);
+        assert_eq!(legacy.ag, clustered.ag, "{} ag", scenario.name);
+        assert_eq!(legacy.total, clustered.total, "{} total", scenario.name);
+        assert_eq!(legacy.counters, clustered.counters, "{} counters", scenario.name);
+    }
+}
+
+#[test]
+fn uniform_cluster_parity_holds_at_tp8() {
+    // Spot-check the fused path at the paper's main TP degree (2176 WGs /
+    // 8 = 272: even chunks).
+    let s = sys();
+    let m = by_name("T-NLG").unwrap();
+    let scenario = ScenarioSpec::t3_mca();
+    let legacy = scenario.run(&s, &m, 8, SubLayer::Fc2Fwd);
+    let clustered = scenario
+        .clone()
+        .cluster(ClusterModel::uniform())
+        .run(&s, &m, 8, SubLayer::Fc2Fwd);
+    assert_eq!(legacy, clustered);
+}
+
+#[test]
+fn experiment_grid_with_cluster_scenarios_is_thread_count_invariant() {
+    let grid = |threads: usize| {
+        ExperimentSpec::new("cluster-det")
+            .system(sys())
+            .models(&["T-NLG"])
+            .tps(&[4])
+            .sublayers([SubLayer::OpFwd])
+            .scenarios([
+                ScenarioSpec::t3_mca().cluster(ClusterModel::uniform()),
+                ScenarioSpec::t3_mca()
+                    .named("straggler")
+                    .cluster(ClusterModel::straggler(1, 1.25)),
+                ScenarioSpec::t3_mca()
+                    .named("two-tier")
+                    .cluster(ClusterModel::two_tier(2, 0.5, SimTime::us(2))),
+            ])
+            .threads(threads)
+            .run()
+    };
+    let serial = grid(1);
+    let parallel = grid(3);
+    assert_eq!(serial.cells.len(), 3);
+    assert_eq!(serial, parallel, "cluster cells must not depend on thread count");
+}
+
+/// Fingerprint a cluster run: every per-rank total, GEMM retirement,
+/// tracker completion, and traffic counter.
+fn fingerprint(run: &t3::cluster::ClusterFusedRun) -> u64 {
+    let mut h = TraceHash::new();
+    for r in &run.per_rank {
+        h.mix(r.total.as_ps());
+        h.mix(r.gemm_time.as_ps());
+        for &t in &r.tracker_done {
+            h.mix(t.as_ps());
+        }
+        h.mix(r.counters.total());
+    }
+    h.finish()
+}
+
+#[test]
+fn skew_scenarios_have_stable_golden_fingerprints() {
+    let s = sys();
+    let m = by_name("T-NLG").unwrap();
+    let shape = sublayer_gemm(&m, 4, SubLayer::OpFwd);
+    let plan = StagePlan::new(shape, Tiling::default(), &s.gpu);
+    let opts = FusedOpts {
+        policy: ArbPolicy::T3Mca,
+        ..FusedOpts::default()
+    };
+    let mut lines = Vec::new();
+    for (name, model) in [
+        ("straggler", ClusterModel::straggler(1, 1.25)),
+        ("jitter", ClusterModel::jitter(0.1)),
+        ("two-tier", ClusterModel::two_tier(2, 0.5, SimTime::us(2))),
+    ] {
+        let a = run_fused_cluster(&s, &plan, 4, &opts, &model, Interleave::Ascending);
+        let b = run_fused_cluster(&s, &plan, 4, &opts, &model, Interleave::Descending);
+        // Deterministic and interleaving-independent, bit-for-bit.
+        assert_eq!(fingerprint(&a), fingerprint(&b), "{name}");
+        lines.push(format!("{name} {:#018x} total_ps {}", fingerprint(&a), a.total().as_ps()));
+    }
+    let golden = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("tests/golden/cluster_skew.golden");
+    let rendered = lines.join("\n") + "\n";
+    if std::env::var("T3_BLESS").is_ok() {
+        std::fs::create_dir_all(golden.parent().unwrap()).unwrap();
+        std::fs::write(&golden, &rendered).unwrap();
+    } else if let Ok(want) = std::fs::read_to_string(&golden) {
+        assert_eq!(rendered, want, "golden mismatch; re-bless with T3_BLESS=1 if intended");
+    }
+    // Without a blessed file the determinism assertions above still gate.
+}
+
+#[test]
+fn straggler_registry_scenario_behaves_end_to_end() {
+    let s = sys();
+    let m = by_name("T-NLG").unwrap();
+    let straggler = preset("straggler").expect("registry has T3-MCA-Straggler");
+    let uniform = ScenarioSpec::t3_mca().cluster(ClusterModel::uniform());
+    let skewed = straggler.run(&s, &m, 8, SubLayer::OpFwd);
+    let base = uniform.run(&s, &m, 8, SubLayer::OpFwd);
+    // A 25% straggler must cost something, but track-and-trigger keeps the
+    // damage below a global 25% stretch (only transiting chunks wait).
+    assert!(skewed.total > base.total, "straggler must slow the group");
+    let ratio = skewed.total.as_ps() as f64 / base.total.as_ps() as f64;
+    assert!(ratio < 1.25, "straggler damage should be localized, got {ratio:.3}x");
+}
+
+#[test]
+fn two_tier_registry_scenario_behaves_end_to_end() {
+    let s = sys();
+    let m = by_name("T-NLG").unwrap();
+    let two_tier = preset("two-tier").expect("registry has T3-MCA-TwoTier");
+    assert!(two_tier.cluster.is_some());
+    let uniform = ScenarioSpec::t3_mca().cluster(ClusterModel::uniform());
+    // TP=8 with node size 4: two inter-node hops at a third the bandwidth.
+    let tiered = two_tier.run(&s, &m, 8, SubLayer::OpFwd);
+    let base = uniform.run(&s, &m, 8, SubLayer::OpFwd);
+    assert!(tiered.total > base.total, "slow inter-node hops must surface");
+}
+
+#[test]
+fn straggler_extra_time_tracks_the_gemm_stretch() {
+    // In the serialized baseline the 25% straggler's GEMM stretch lands
+    // (almost) fully on the critical path: the ring propagates the delay
+    // one hop per step until every rank is gated by it. In the fused
+    // engine the extra time is bounded by the stretched producer as well —
+    // the ring never globalizes it beyond that.
+    let s = sys();
+    let m = by_name("T-NLG").unwrap();
+    let extra = |scenario: ScenarioSpec| {
+        let base = scenario
+            .clone()
+            .cluster(ClusterModel::uniform())
+            .run(&s, &m, 4, SubLayer::OpFwd);
+        let skew = scenario
+            .cluster(ClusterModel::straggler(1, 1.25))
+            .run(&s, &m, 4, SubLayer::OpFwd);
+        (skew.total - base.total, base)
+    };
+    let (seq_extra, seq_base) = extra(ScenarioSpec::sequential());
+    let stretch = seq_base.gemm.as_ps() as f64 * 0.25;
+    let seq_ratio = seq_extra.as_ps() as f64 / stretch;
+    assert!(
+        (0.6..1.6).contains(&seq_ratio),
+        "serialized straggler extra {} vs GEMM stretch {:.0}ps (ratio {seq_ratio:.3})",
+        seq_extra,
+        stretch
+    );
+    let (mca_extra, mca_base) = extra(ScenarioSpec::t3_mca());
+    assert!(mca_extra > SimTime::ZERO);
+    // Bounded by the stretched fused producer (with headroom for the
+    // contention the stretch itself shifts around).
+    let bound = mca_base.gemm.as_ps() as f64 * 0.25 * 1.6;
+    assert!(
+        (mca_extra.as_ps() as f64) < bound,
+        "fused straggler extra {} exceeds bound {bound:.0}ps",
+        mca_extra
+    );
+}
