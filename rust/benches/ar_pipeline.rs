@@ -1,0 +1,71 @@
+//! Fused all-reduce pipeline: serialized-AR vs fused-AR wall-clock across
+//! TP degrees.
+//!
+//! For T-NLG FC-2 fwd at TP 4/8/16, compares the full sub-layer time
+//! (GEMM + RS + AG) under three AG treatments of the same fused GEMM-RS:
+//! the serialized CU ring all-gather (`T3-MCA`), the tracker-triggered
+//! cut-through all-gather (`T3-AR-Fused`), and the consumer-overlapped
+//! variant (`T3-AR-Consumer`), plus the alpha-beta all-reduce reference.
+//! Asserts the tentpole claim: fused-AR is strictly faster than
+//! serialized-AR at every TP.
+
+mod common;
+
+use std::time::Instant;
+
+use t3::collectives::analytic::ring_all_reduce;
+use t3::config::SystemConfig;
+use t3::experiment::{preset, ScenarioSpec};
+use t3::harness::Table;
+use t3::models::{by_name, sublayer_gemm, SubLayer};
+
+fn main() {
+    let t0 = Instant::now();
+    let sys = SystemConfig::table1();
+    let m = by_name("T-NLG").unwrap();
+
+    let mut t = Table::new(
+        "ar_pipeline",
+        "Fused all-reduce vs serialized (T-NLG FC-2 fwd, T3-MCA RS)",
+        &[
+            "tp",
+            "serialized-AR ms",
+            "fused-AR ms",
+            "consumer-AR ms",
+            "AG: ring ms",
+            "AG: fused ms",
+            "analytic AR ms",
+            "fused-AR speedup",
+        ],
+    );
+    let ar_fused = preset("ar-fused").expect("registry preset");
+    let ar_consumer = preset("ar-consumer").expect("registry preset");
+    for tp in [4u64, 8, 16] {
+        let serialized = ScenarioSpec::t3_mca().run(&sys, &m, tp, SubLayer::Fc2Fwd);
+        let fused = ar_fused.run(&sys, &m, tp, SubLayer::Fc2Fwd);
+        let consumer = ar_consumer.run(&sys, &m, tp, SubLayer::Fc2Fwd);
+        assert!(
+            fused.total < serialized.total,
+            "tp={tp}: fused-AR {} must beat serialized-AR {}",
+            fused.total,
+            serialized.total
+        );
+        let ar_bytes = sublayer_gemm(&m, tp, SubLayer::Fc2Fwd).out_bytes();
+        t.row(vec![
+            tp.to_string(),
+            format!("{:.3}", serialized.total.as_ms_f64()),
+            format!("{:.3}", fused.total.as_ms_f64()),
+            format!("{:.3}", consumer.total.as_ms_f64()),
+            format!("{:.3}", serialized.ag.as_ms_f64()),
+            format!("{:.3}", fused.ag.as_ms_f64()),
+            format!("{:.3}", ring_all_reduce(&sys.link, ar_bytes, tp).as_ms_f64()),
+            format!(
+                "{:.3}x",
+                serialized.total.as_ps() as f64 / fused.total.as_ps() as f64
+            ),
+        ]);
+    }
+    t.note("fused AG: triggered at the final tracker completion, cut-through forwarded (1 ring-fill latency, own chunk read only)");
+    t.note("consumer AG: same, contending with the next sub-layer's GEMM through the MC arbitration");
+    common::emit(vec![t], t0);
+}

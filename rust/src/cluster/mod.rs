@@ -19,6 +19,9 @@
 //!   (see [`engine`] for the delivery rule and its determinism /
 //!   interleaving-independence argument);
 //! * [`run_fused_cluster`] — the T3 fused GEMM-RS on every rank;
+//! * [`run_ag_cluster`] — the T3-fused ring all-gather on every rank
+//!   (per-rank trigger times, cut-through forwarding, optional
+//!   consumer-GEMM overlap — the AG half of a fused all-reduce);
 //! * [`run_ring_cluster`] / [`run_gemm_cluster`] — hop-by-hop baseline
 //!   collectives (with per-rank start offsets) and skewed per-rank GEMMs,
 //!   the building blocks of serialized/ideal cluster scenarios.
@@ -35,7 +38,8 @@ pub mod engine;
 pub mod topology;
 
 pub use engine::{
-    drive, run_fused_cluster, run_gemm_cluster, run_ring_cluster, ClusterFusedRun,
-    ClusterRingRun, Interleave, RankNode, RingClusterSpec,
+    drive, run_ag_cluster, run_fused_cluster, run_gemm_cluster, run_ring_cluster,
+    AgClusterSpec, ClusterAgRun, ClusterFusedRun, ClusterRingRun, Interleave, RankNode,
+    RingClusterSpec,
 };
 pub use topology::{ClusterModel, SkewModel, TopologySpec};

@@ -1,0 +1,602 @@
+//! The T3-fused ring all-gather engine (§7.1 "Other collectives").
+//!
+//! The paper's track-and-trigger mechanism fuses the reduce-scatter half
+//! of an all-reduce into the producer GEMM; the all-gather half can
+//! likewise be overlapped with its neighbors instead of running as a
+//! serialized CU kernel. This module models that AG as a *per-rank
+//! state machine* ([`AllGatherRank`]), mirroring
+//! [`super::fused::FusedRank`] / [`super::collective_run::RingRank`]:
+//!
+//! * **Trigger**: the rank's first send is its own fully-reduced chunk,
+//!   launched the moment the fused RS's tracker completes it and the
+//!   egress port drains the RS's remaining windows
+//!   ([`AgRankSpec::start`], computed by
+//!   [`super::fused::FusedResult::ag_trigger`]) — no kernel launch, no
+//!   wait for the full calendar drain (whose tail past the trigger is
+//!   ingress-side only).
+//! * **Cut-through forwarding**: a baseline CU all-gather kernel
+//!   store-and-forwards — step `s+1` reads back from DRAM what step `s`
+//!   wrote, so every hop pays the full link latency plus a memory
+//!   round-trip. The pre-programmed DMA of the fused AG instead forwards
+//!   an arriving chunk directly from the ingress path while writing it to
+//!   local memory in parallel: the forward's egress window opens at the
+//!   incoming window's first-byte arrival, rate-capped by the incoming
+//!   feed (a slow upstream hop throttles the forward — the transfer
+//!   stays causal per byte). Only the rank's *own* chunk is ever read
+//!   from DRAM, which both pipelines the ring (one latency term instead
+//!   of `N-1`) and removes `N-2` chunk reads of DRAM traffic.
+//! * **Consumer overlap** ([`ConsumerSpec`]): optionally, the next
+//!   sub-layer's GEMM runs inside the same rank machine while the AG
+//!   drains. The GEMM's stage reads travel the MC *compute* stream, the
+//!   AG's ingress stores the *comm* stream, and the configured
+//!   [`crate::config::ArbPolicy`] (`hw::mc`) arbitrates between them —
+//!   the producer/consumer-fused kernels of Triton-distributed, expressed
+//!   through T3's memory-controller machinery. Stage `s` of `S` is gated
+//!   on the proportional prefix of gathered chunks having arrived
+//!   (fine-grained consumption, not a barrier on the full gather).
+//!
+//! Two drivers exist, exactly as for the other rank machines:
+//! [`run_fused_ag`] is the §5.1.1 loopback mirror (one rank, messages
+//! delivered back to itself); [`crate::cluster::run_ag_cluster`] drives
+//! `tp` interacting ranks with per-rank trigger times and per-edge links,
+//! reproducing the mirror bit-for-bit in its uniform configuration.
+
+use crate::config::{ArbPolicy, GpuConfig, LinkConfig, SystemConfig};
+use crate::gemm::traffic::{gemm_bytes_per_flop, gemm_traffic, stage_reads, WriteMode};
+use crate::gemm::StagePlan;
+use crate::hw::hbm::{GroupId, TrafficClass, Txn, TxnKind};
+use crate::hw::mc::{intensity_class, Stream};
+use crate::sim::stats::DramCounters;
+use crate::sim::time::SimTime;
+
+use super::{Ev, GroupTag, Runner, PACE_BATCH};
+
+/// A cross-rank message of the fused all-gather: one hop's chunk arrives
+/// at the receiver across `[start, end]` (the sender's egress window
+/// shifted by the hop latency). `step` is the ring step the chunk belongs
+/// to — identical on both ends (ring steps are globally aligned).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct AgMsg {
+    pub step: u32,
+    /// First-byte arrival time at the receiver.
+    pub start: SimTime,
+    /// Last-byte arrival time at the receiver.
+    pub end: SimTime,
+}
+
+/// The next sub-layer's GEMM, run inside the AG rank machine so the two
+/// contend through the memory-controller arbitration (consumer overlap).
+#[derive(Debug, Clone)]
+pub struct ConsumerSpec {
+    pub plan: StagePlan,
+    pub write_mode: WriteMode,
+    /// Per-rank compute slowdown (1.0 = nominal; the cluster skew model).
+    pub compute_scale: f64,
+}
+
+/// Construction parameters of one [`AllGatherRank`].
+#[derive(Debug, Clone)]
+pub struct AgRankSpec {
+    /// Total collective payload (all chunks).
+    pub bytes: u64,
+    pub devices: u64,
+    /// When this rank may launch its own chunk's send — its chunk fully
+    /// reduced and its egress link free
+    /// ([`crate::engine::fused::FusedResult::ag_trigger`]), or the RS
+    /// end for serialized compositions.
+    pub start: SimTime,
+    /// This rank's egress edge (to its downstream ring neighbor).
+    pub link: LinkConfig,
+    /// MC arbitration policy (matters when a consumer GEMM is present).
+    pub policy: ArbPolicy,
+    pub consumer: Option<ConsumerSpec>,
+}
+
+/// Result of one fused-AG rank.
+#[derive(Debug, Clone, PartialEq)]
+pub struct AllGatherResult {
+    /// Absolute calendar drain time (AG + consumer GEMM, if any).
+    pub total: SimTime,
+    /// When the all-gather itself finished on this rank: every send's
+    /// egress window closed, every received chunk's stores landed, and
+    /// the own-chunk DMA read drained.
+    pub ag_done: SimTime,
+    /// Per receive-step completion times (stores landed), step order.
+    pub step_ends: Vec<SimTime>,
+    /// Consumer GEMM retirement (last stage), when a consumer ran.
+    pub consumer_done: Option<SimTime>,
+    pub counters: DramCounters,
+}
+
+/// Consumer-GEMM stage machine state (mirrors the producer stage machine
+/// of [`super::fused::FusedRank`] / [`super::gemm_run`]).
+struct Consumer {
+    plan: StagePlan,
+    gpu: GpuConfig,
+    eff: f64,
+    scale: f64,
+    write_kind: TxnKind,
+    dram_reads: u64,
+    stage: u64,
+    stage_compute_done: bool,
+    /// The current stage is waiting on gathered-chunk arrivals.
+    gated: bool,
+    done: SimTime,
+}
+
+impl Consumer {
+    /// Chunks that must be locally available before stage `s` may issue
+    /// its reads: the proportional prefix of the gathered activation.
+    fn chunks_needed(&self, n: u64, s: u64) -> u64 {
+        ((s + 1) * n).div_ceil(self.plan.num_stages).min(n)
+    }
+}
+
+/// One rank of the fused ring all-gather: an event-driven machine over its
+/// own [`Runner`]. Drive with [`AllGatherRank::step`] /
+/// [`AllGatherRank::deliver`] like the other rank machines.
+pub struct AllGatherRank {
+    r: Runner,
+    chunk: u64,
+    n: u64,
+    steps: u32,
+    started: bool,
+    /// Own-chunk DMA read group drained.
+    read_done: bool,
+    /// Per send-step egress window closed.
+    egress_done: Vec<bool>,
+    /// Per receive-step ingress stores landed.
+    ingress_done: Vec<bool>,
+    ingress_groups: Vec<GroupId>,
+    /// Incoming window per receive step (feeds the cut-through forward's
+    /// rate cap).
+    in_windows: Vec<(SimTime, SimTime)>,
+    step_ends: Vec<SimTime>,
+    ag_done: SimTime,
+    /// Chunks locally available (own chunk + landed receives); gates the
+    /// consumer GEMM's stages.
+    arrived: u64,
+    consumer: Option<Consumer>,
+    tags: Vec<(GroupTag, SimTime)>,
+}
+
+impl AllGatherRank {
+    pub fn new(sys: &SystemConfig, spec: &AgRankSpec) -> Self {
+        assert!(spec.devices >= 2, "a ring needs at least two ranks");
+        let chunk = spec.bytes / spec.devices;
+        assert!(chunk > 0, "chunk must be non-empty");
+        let steps = (spec.devices - 1) as u32;
+
+        let mut r = Runner::with_link(sys, spec.policy, spec.link.clone());
+        let consumer = spec.consumer.as_ref().map(|c| {
+            debug_assert!(c.compute_scale >= 1.0);
+            let traffic = gemm_traffic(&c.plan, &sys.mem, c.write_mode);
+            // MCA threshold class from the consumer's memory intensity
+            // (§6.1.3), exactly as the fused producer engine does.
+            let machine_balance =
+                sys.mem.total_bw_gbps * 1e9 / sys.gpu.sustained_gemm_flops(c.plan.shape.dtype);
+            let class = intensity_class(
+                gemm_bytes_per_flop(&c.plan, &sys.mem, c.write_mode),
+                machine_balance,
+            );
+            r.mem.set_intensity_class(class);
+            Consumer {
+                plan: c.plan.clone(),
+                gpu: sys.gpu.clone(),
+                eff: sys.gpu.gemm_efficiency,
+                scale: c.compute_scale,
+                write_kind: match c.write_mode {
+                    WriteMode::ThroughLlc => TxnKind::Write,
+                    WriteMode::BypassLlc => TxnKind::NmcUpdate,
+                },
+                dram_reads: traffic.dram_reads,
+                stage: 0,
+                stage_compute_done: false,
+                gated: false,
+                done: SimTime::MAX,
+            }
+        });
+        // The rank wakes when its reduced chunk is ready.
+        r.q.schedule(spec.start, Ev::Marker { step: 0, what: 0 });
+
+        AllGatherRank {
+            r,
+            chunk,
+            n: spec.devices,
+            steps,
+            started: false,
+            read_done: false,
+            egress_done: vec![false; steps as usize],
+            ingress_done: vec![false; steps as usize],
+            ingress_groups: vec![GroupId::NONE; steps as usize],
+            in_windows: vec![(SimTime::ZERO, SimTime::ZERO); steps as usize],
+            step_ends: vec![SimTime::MAX; steps as usize],
+            ag_done: SimTime::MAX,
+            arrived: 0,
+            consumer,
+            tags: Vec::new(),
+        }
+    }
+
+    /// Time of this rank's next pending event.
+    pub fn next_time(&self) -> Option<SimTime> {
+        self.r.q.peek_time()
+    }
+
+    fn ag_finished(&self) -> bool {
+        self.read_done
+            && self.egress_done.iter().all(|&d| d)
+            && self.ingress_done.iter().all(|&d| d)
+    }
+
+    /// Issue stage `s`'s reads if its gathered prefix has arrived; flag
+    /// the consumer as gated otherwise.
+    fn try_start_stage(r: &mut Runner, c: &mut Consumer, n: u64, arrived: u64) {
+        if arrived < c.chunks_needed(n, c.stage) {
+            c.gated = true;
+            return;
+        }
+        c.gated = false;
+        let bytes = stage_reads(&c.plan, c.dram_reads, c.stage).max(r.sys.mem.txn_bytes);
+        r.submit_tagged(
+            bytes,
+            TxnKind::Read,
+            Stream::Compute,
+            TrafficClass::GemmRead,
+            GroupTag::StageReads(c.stage),
+        );
+    }
+
+    /// Reserve the cut-through forward window for send step `fs`: opens at
+    /// the incoming window's first-byte arrival, rate-capped by the
+    /// incoming feed so no byte is forwarded before it arrived.
+    fn forward(&mut self, fs: u32, t: SimTime, out: &mut Vec<AgMsg>) {
+        let (in_start, in_end) = self.in_windows[fs as usize - 1];
+        let dur = in_end - in_start;
+        let w = if dur.is_zero() {
+            self.r.link_out.reserve(t, self.chunk)
+        } else {
+            let feed_gbps = self.chunk as f64 / dur.as_secs_f64() / 1e9;
+            self.r.link_out.reserve_rate_limited(t, self.chunk, feed_gbps)
+        };
+        self.r.q.schedule(w.done, Ev::EgressDone { pos: fs });
+        let lat = self.r.link_out.cfg().latency;
+        out.push(AgMsg {
+            step: fs,
+            start: w.start + lat,
+            end: w.done + lat,
+        });
+    }
+
+    /// Process one event; outbound hop messages for the downstream
+    /// neighbor are appended to `out`. Returns `false` when the calendar
+    /// is empty.
+    pub fn step(&mut self, out: &mut Vec<AgMsg>) -> bool {
+        let Some((t, ev)) = self.r.next_event() else {
+            return false;
+        };
+        let mut tags = std::mem::take(&mut self.tags);
+        self.r.drain_tags(&mut tags);
+        for (tag, blocked) in tags.drain(..) {
+            match tag {
+                GroupTag::DmaReads(0) => self.read_done = true,
+                GroupTag::StepIngress(s) => {
+                    let si = s as usize;
+                    self.ingress_done[si] = true;
+                    self.step_ends[si] = t;
+                    self.arrived += 1;
+                    if let Some(c) = &mut self.consumer {
+                        if c.gated {
+                            Self::try_start_stage(&mut self.r, c, self.n, self.arrived);
+                        }
+                    }
+                }
+                GroupTag::StageReads(s) => {
+                    if let Some(c) = &mut self.consumer {
+                        if s == c.stage {
+                            let ct = c.plan.stage_compute_time(s, &c.gpu, c.gpu.cu_count, c.eff);
+                            let ct = if c.scale != 1.0 { ct * c.scale } else { ct };
+                            let stall = blocked * c.gpu.stall_unhidden;
+                            self.r.q.schedule_in(ct + stall, Ev::StageCompute(s));
+                        }
+                    }
+                }
+                _ => {}
+            }
+        }
+        self.tags = tags;
+
+        match ev {
+            Ev::Marker { step: 0, what: 0 } if !self.started => {
+                self.started = true;
+                // The rank's own reduced chunk joins whatever receives
+                // already landed (a late-triggered rank's faster upstream
+                // neighbors deliver before its start marker).
+                self.arrived += 1;
+                // Send the own chunk: DMA reads via the comm stream, the
+                // egress window in parallel (pipelined, as in the fused RS).
+                self.r.submit_tagged(
+                    self.chunk,
+                    TxnKind::Read,
+                    Stream::Comm,
+                    TrafficClass::AgRead,
+                    GroupTag::DmaReads(0),
+                );
+                let w = self.r.link_out.reserve(t, self.chunk);
+                self.r.q.schedule(w.done, Ev::EgressDone { pos: 0 });
+                let lat = self.r.link_out.cfg().latency;
+                out.push(AgMsg {
+                    step: 0,
+                    start: w.start + lat,
+                    end: w.done + lat,
+                });
+                if let Some(c) = &mut self.consumer {
+                    Self::try_start_stage(&mut self.r, c, self.n, self.arrived);
+                }
+            }
+            Ev::Marker { step: fs, what: 1 } => self.forward(fs, t, out),
+            Ev::EgressDone { pos } => self.egress_done[pos as usize] = true,
+            Ev::Ingress { pos, n: cnt } => {
+                let txn = Txn {
+                    kind: TxnKind::Write,
+                    stream: Stream::Comm,
+                    class: TrafficClass::AgWrite,
+                    group: self.ingress_groups[pos as usize],
+                };
+                self.r.mem.submit_burst(cnt as u64, txn, &mut self.r.q);
+            }
+            Ev::StageCompute(s) => {
+                if let Some(c) = &mut self.consumer {
+                    if s == c.stage {
+                        c.stage_compute_done = true;
+                    }
+                }
+            }
+            _ => {}
+        }
+
+        // Consumer stage retirement (mirrors gemm_run's state machine).
+        if let Some(c) = &mut self.consumer {
+            if c.stage_compute_done {
+                let bytes = c.plan.wgs_in_stage(c.stage) * c.plan.wg_out_bytes();
+                self.r
+                    .submit_untagged(bytes, c.write_kind, Stream::Compute, TrafficClass::GemmWrite);
+                c.stage += 1;
+                c.stage_compute_done = false;
+                if c.stage < c.plan.num_stages {
+                    Self::try_start_stage(&mut self.r, c, self.n, self.arrived);
+                } else {
+                    c.done = t;
+                }
+            }
+        }
+
+        if self.ag_done == SimTime::MAX && self.ag_finished() {
+            self.ag_done = t;
+        }
+        true
+    }
+
+    /// Apply the upstream neighbor's hop-arrival message: pace the chunk's
+    /// stores across the window and, when the chunk must travel further,
+    /// open the cut-through forward at its first-byte arrival.
+    pub fn deliver(&mut self, msg: &AgMsg) {
+        let s = msg.step as usize;
+        if s >= self.steps as usize || self.ingress_groups[s] != GroupId::NONE {
+            return;
+        }
+        let txns = self.r.mem.txns_for(self.chunk);
+        self.ingress_groups[s] = self.r.register_group(txns, GroupTag::StepIngress(msg.step));
+        self.in_windows[s] = (msg.start, msg.end);
+        self.r
+            .schedule_ingress_window(msg.step, txns, msg.start, msg.end, PACE_BATCH);
+        if msg.step + 1 < self.steps {
+            self.r.q.schedule(
+                msg.start,
+                Ev::Marker {
+                    step: msg.step + 1,
+                    what: 1,
+                },
+            );
+        }
+    }
+
+    /// Consume the drained rank into its result.
+    pub fn into_result(self) -> AllGatherResult {
+        debug_assert!(self.r.mem.idle());
+        debug_assert!(self.ag_done != SimTime::MAX, "all-gather did not finish");
+        AllGatherResult {
+            total: self.r.now(),
+            ag_done: self.ag_done,
+            step_ends: self.step_ends,
+            consumer_done: self.consumer.as_ref().map(|c| c.done),
+            counters: self.r.mem.counters,
+        }
+    }
+}
+
+/// Loopback driver (§5.1.1 mirror): one rank whose hop messages are
+/// delivered back to itself. The multi-rank cluster engine
+/// ([`crate::cluster::run_ag_cluster`]) reproduces this bit-for-bit in its
+/// uniform configuration.
+pub fn run_fused_ag(
+    sys: &SystemConfig,
+    bytes: u64,
+    devices: u64,
+    start: SimTime,
+    policy: ArbPolicy,
+    consumer: Option<ConsumerSpec>,
+) -> AllGatherResult {
+    let spec = AgRankSpec {
+        bytes,
+        devices,
+        start,
+        link: sys.link.clone(),
+        policy,
+        consumer,
+    };
+    let mut rank = AllGatherRank::new(sys, &spec);
+    let mut msgs = Vec::new();
+    while rank.step(&mut msgs) {
+        for m in msgs.drain(..) {
+            rank.deliver(&m);
+        }
+    }
+    rank.into_result()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::{DType, SystemConfig};
+    use crate::engine::collective_run::run_ag_baseline;
+    use crate::gemm::{GemmShape, Tiling};
+
+    const MB: u64 = 1 << 20;
+
+    fn sys() -> SystemConfig {
+        SystemConfig::table1()
+    }
+
+    fn run(bytes: u64, devices: u64, start: SimTime) -> AllGatherResult {
+        run_fused_ag(&sys(), bytes, devices, start, ArbPolicy::T3Mca, None)
+    }
+
+    #[test]
+    fn fused_ag_beats_cu_baseline() {
+        let s = sys();
+        for devices in [4u64, 8, 16] {
+            let base = run_ag_baseline(&s, 64 * MB, devices, 80);
+            let fused = run(64 * MB, devices, SimTime::ZERO);
+            assert!(
+                fused.ag_done < base.time,
+                "devices={devices}: fused {} !< baseline {}",
+                fused.ag_done,
+                base.time
+            );
+        }
+    }
+
+    #[test]
+    fn fused_ag_not_below_link_transfer_bound() {
+        // The egress link still carries N-1 chunks serially.
+        let s = sys();
+        let n = 8u64;
+        let fused = run(64 * MB, n, SimTime::ZERO);
+        let bound = SimTime::transfer((n - 1) * (64 * MB / n), s.link.per_dir_bw_gbps);
+        assert!(
+            fused.ag_done >= bound,
+            "fused {} below link bound {bound}",
+            fused.ag_done
+        );
+    }
+
+    #[test]
+    fn cut_through_reads_only_the_own_chunk() {
+        let s = sys();
+        let n = 8u64;
+        let chunk = 64 * MB / n;
+        let fused = run(64 * MB, n, SimTime::ZERO);
+        let slack = 64 * s.mem.txn_bytes;
+        assert!(fused.counters.ag_reads >= chunk && fused.counters.ag_reads <= chunk + slack,
+            "ag reads {} vs chunk {chunk}", fused.counters.ag_reads);
+        // Stores: one chunk per receive step.
+        let expect_writes = (n - 1) * chunk;
+        assert!(fused.counters.ag_writes >= expect_writes
+            && fused.counters.ag_writes <= expect_writes + slack * n,
+            "ag writes {} vs {expect_writes}", fused.counters.ag_writes);
+        let base = run_ag_baseline(&s, 64 * MB, n, 80);
+        assert!(fused.counters.ag_reads < base.counters.ag_reads);
+    }
+
+    #[test]
+    fn start_offset_shifts_the_whole_run() {
+        let base = run(32 * MB, 4, SimTime::ZERO);
+        let t0 = SimTime::us(91);
+        let shifted = run(32 * MB, 4, t0);
+        assert_eq!(shifted.ag_done, base.ag_done + t0);
+        assert_eq!(shifted.total, base.total + t0);
+        assert_eq!(shifted.counters, base.counters);
+        for (a, b) in shifted.step_ends.iter().zip(&base.step_ends) {
+            assert_eq!(*a, *b + t0);
+        }
+    }
+
+    #[test]
+    fn step_ends_monotone() {
+        let res = run(64 * MB, 8, SimTime::ZERO);
+        assert_eq!(res.step_ends.len(), 7);
+        for w in res.step_ends.windows(2) {
+            assert!(w[1] >= w[0], "step ends must not rewind");
+        }
+        assert!(res.ag_done >= *res.step_ends.last().unwrap());
+    }
+
+    #[test]
+    fn works_for_two_ranks() {
+        let res = run(16 * MB, 2, SimTime::ZERO);
+        assert_eq!(res.step_ends.len(), 1);
+        assert!(res.ag_done > SimTime::ZERO);
+        assert!(res.consumer_done.is_none());
+    }
+
+    #[test]
+    fn consumer_gemm_overlaps_and_contends() {
+        let s = sys();
+        let plan = StagePlan::new(
+            GemmShape::new(4096, 2048, 512, DType::F16),
+            Tiling::default(),
+            &s.gpu,
+        );
+        let free = run(64 * MB, 8, SimTime::ZERO);
+        let with = run_fused_ag(
+            &s,
+            64 * MB,
+            8,
+            SimTime::ZERO,
+            ArbPolicy::T3Mca,
+            Some(ConsumerSpec {
+                plan: plan.clone(),
+                write_mode: WriteMode::BypassLlc,
+                compute_scale: 1.0,
+            }),
+        );
+        let done = with.consumer_done.expect("consumer ran");
+        assert!(done > SimTime::ZERO && done != SimTime::MAX);
+        // Contention can only slow the AG, never speed it up.
+        assert!(with.ag_done >= free.ag_done);
+        // The consumer is gated on arrivals: it cannot retire before the
+        // last chunk it needs has landed.
+        assert!(done >= *with.step_ends.last().unwrap());
+        // GEMM traffic is accounted on the compute classes.
+        assert!(with.counters.gemm_reads > 0);
+        assert_eq!(free.counters.gemm_reads, 0);
+    }
+
+    #[test]
+    fn consumer_scale_stretches_consumer_not_ag_order() {
+        let s = sys();
+        let plan = StagePlan::new(
+            GemmShape::new(2048, 1024, 256, DType::F16),
+            Tiling::default(),
+            &s.gpu,
+        );
+        let consumer = |scale: f64| {
+            run_fused_ag(
+                &s,
+                32 * MB,
+                4,
+                SimTime::ZERO,
+                ArbPolicy::T3Mca,
+                Some(ConsumerSpec {
+                    plan: plan.clone(),
+                    write_mode: WriteMode::BypassLlc,
+                    compute_scale: scale,
+                }),
+            )
+        };
+        let nominal = consumer(1.0);
+        let slow = consumer(1.5);
+        assert!(slow.consumer_done.unwrap() > nominal.consumer_done.unwrap());
+    }
+}

@@ -73,6 +73,25 @@ pub struct FusedResult {
     pub trace: Option<crate::hw::hbm::TrafficTrace>,
 }
 
+impl FusedResult {
+    /// When this rank can launch a fused all-gather
+    /// ([`crate::engine::allgather`]): its own chunk is fully reduced
+    /// (final tracker completion) *and* its egress port has drained the
+    /// RS's remaining windows — the AG shares the physical link, so an
+    /// earlier launch would double-book its bandwidth.
+    pub fn ag_trigger(&self) -> SimTime {
+        let reduced = *self.tracker_done.last().expect("ring has positions");
+        let egress_free = self
+            .sent_done
+            .iter()
+            .copied()
+            .filter(|&t| t != SimTime::MAX)
+            .max()
+            .unwrap_or(SimTime::ZERO);
+        reduced.max(egress_free)
+    }
+}
+
 /// Options for a fused run.
 #[derive(Debug, Clone)]
 pub struct FusedOpts {

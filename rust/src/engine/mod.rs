@@ -27,8 +27,13 @@
 //!   ([`collective_run::RingRank`] is the rank machine);
 //! * [`fused`]          — the T3 fused GEMM-RS engine (track & trigger,
 //!   staggered chunks, NMC updates, MCA; [`fused::FusedRank`] is the rank
+//!   machine);
+//! * [`allgather`]      — the T3-fused ring all-gather (§7.1): triggered
+//!   by the fused RS's tracker, cut-through forwarding, optional
+//!   consumer-GEMM overlap ([`allgather::AllGatherRank`] is the rank
 //!   machine).
 
+pub mod allgather;
 pub mod collective_run;
 pub mod fused;
 pub mod gemm_run;

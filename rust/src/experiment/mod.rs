@@ -35,8 +35,9 @@ pub mod results;
 pub use grid::ExperimentSpec;
 pub use results::{Cell, EndToEnd, ResultSet};
 
-use crate::cluster::{self, ClusterModel, Interleave, RingClusterSpec};
+use crate::cluster::{self, AgClusterSpec, ClusterModel, Interleave, RingClusterSpec};
 use crate::config::{ArbPolicy, SystemConfig};
+use crate::engine::allgather::{run_fused_ag, ConsumerSpec};
 use crate::engine::collective_run::{run_ag_baseline, run_rs_baseline, run_rs_nmc, RingKind};
 use crate::engine::fused::{run_fused_gemm_rs, FusedOpts};
 use crate::engine::gemm_run::run_gemm;
@@ -82,8 +83,25 @@ impl CuAlloc {
 pub enum AgMode {
     /// Serialized ring all-gather on CU kernels (every paper scenario).
     RingCu,
-    /// No all-gather: RS-only sub-layer bounds / fused-AG assumptions.
+    /// No all-gather: RS-only sub-layer bounds.
     Skip,
+    /// T3-fused all-gather (§7.1): triggered the moment the rank's
+    /// reduced chunk completes and its egress port drains (the fused
+    /// RS's tracker plus link handoff — see
+    /// [`crate::engine::fused::FusedResult::ag_trigger`] — or the RS end
+    /// for serialized compositions), DMA-driven with cut-through
+    /// forwarding —
+    /// no CU kernel, one ring-fill latency instead of `N-1`, and only the
+    /// own chunk read from DRAM
+    /// ([`crate::engine::allgather::AllGatherRank`]).
+    FusedTrigger,
+    /// [`AgMode::FusedTrigger`] plus consumer overlap: the *next*
+    /// sub-layer's GEMM runs inside the same rank machine while the AG
+    /// drains, the two contending through the memory-controller
+    /// arbitration (`hw::mc`). The consumer's own runtime is charged to
+    /// the next sub-layer; only its contention effect on the AG lands in
+    /// this measurement.
+    OverlapConsumer,
 }
 
 /// One composable simulation configuration.
@@ -220,6 +238,19 @@ impl ScenarioSpec {
         self
     }
 
+    /// Fuse the trailing all-gather ([`AgMode::FusedTrigger`]).
+    pub fn fused_ag(mut self) -> Self {
+        self.ag = AgMode::FusedTrigger;
+        self
+    }
+
+    /// Fused all-gather overlapped with the next sub-layer's GEMM
+    /// ([`AgMode::OverlapConsumer`]).
+    pub fn consumer_ag(mut self) -> Self {
+        self.ag = AgMode::OverlapConsumer;
+        self
+    }
+
     pub fn trace_bin(mut self, bin: SimTime) -> Self {
         self.trace_bin = Some(bin);
         self
@@ -260,6 +291,8 @@ impl ScenarioSpec {
             match self.ag {
                 AgMode::RingCu => "ring",
                 AgMode::Skip => "none",
+                AgMode::FusedTrigger => "fused",
+                AgMode::OverlapConsumer => "consumer",
             },
             match self.write_mode {
                 WriteMode::ThroughLlc => "llc",
@@ -290,15 +323,6 @@ impl ScenarioSpec {
         let gemm_cus = self.gemm_cus.resolve(sys);
         let comm_cus = self.comm_cus.resolve(sys);
 
-        let ag = match self.ag {
-            AgMode::RingCu => Some(run_ag_baseline(sys, ar_bytes, tp, comm_cus)),
-            AgMode::Skip => None,
-        };
-        let (ag_time, ag_counters) = match &ag {
-            Some(r) => (r.time, r.counters),
-            None => (SimTime::ZERO, DramCounters::default()),
-        };
-
         let run_rs = |cus: u32| {
             if self.rs_nmc {
                 run_rs_nmc(sys, ar_bytes, tp)
@@ -311,6 +335,9 @@ impl ScenarioSpec {
             OverlapMode::Serialized => {
                 let g = run_gemm(sys, &plan, gemm_cus, self.write_mode);
                 let rs = run_rs(comm_cus);
+                let pre = g.time + rs.time;
+                let (ag_time, total, ag_counters) =
+                    self.compose_ag(sys, &plan, ar_bytes, tp, comm_cus, pre, pre);
                 let mut counters = g.counters;
                 counters.add(&rs.counters);
                 counters.add(&ag_counters);
@@ -318,13 +345,16 @@ impl ScenarioSpec {
                     gemm: g.time,
                     rs: rs.time,
                     ag: ag_time,
-                    total: g.time + rs.time + ag_time,
+                    total,
                     counters,
                 }
             }
             OverlapMode::Ideal => {
                 let g = run_gemm(sys, &plan, gemm_cus, self.write_mode);
                 let rs = run_rs(comm_cus);
+                let pre = g.time.max(rs.time);
+                let (ag_time, total, ag_counters) =
+                    self.compose_ag(sys, &plan, ar_bytes, tp, comm_cus, pre, pre);
                 let mut counters = g.counters;
                 counters.add(&rs.counters);
                 counters.add(&ag_counters);
@@ -332,7 +362,7 @@ impl ScenarioSpec {
                     gemm: g.time,
                     rs: rs.time,
                     ag: ag_time,
-                    total: g.time.max(rs.time) + ag_time,
+                    total,
                     counters,
                 }
             }
@@ -347,15 +377,68 @@ impl ScenarioSpec {
                         trace_bin: self.trace_bin,
                     },
                 );
+                // The fused-AG trigger: the rank's own chunk is fully
+                // reduced and its egress port has drained the RS's
+                // remaining windows (the calendar-drain tail past the
+                // trigger is ingress-side only, so nothing is
+                // double-booked).
+                let trigger = fused.ag_trigger();
+                let (ag_time, total, ag_counters) =
+                    self.compose_ag(sys, &plan, ar_bytes, tp, comm_cus, fused.total, trigger);
                 let mut counters = fused.counters;
                 counters.add(&ag_counters);
                 Measurement {
                     gemm: fused.gemm_time,
                     rs: fused.total - fused.gemm_time,
                     ag: ag_time,
-                    total: fused.total + ag_time,
+                    total,
                     counters,
                 }
+            }
+        }
+    }
+
+    /// The consumer-GEMM spec of this scenario's AG treatment: the next
+    /// sub-layer's GEMM (same plan as a stand-in) for
+    /// [`AgMode::OverlapConsumer`], nothing otherwise. Shared by the
+    /// measurement compositions and [`crate::harness::cluster_report`] so
+    /// the report cannot drift from what the measurement simulates.
+    pub fn ag_consumer_spec(&self, plan: &StagePlan) -> Option<ConsumerSpec> {
+        (self.ag == AgMode::OverlapConsumer).then(|| ConsumerSpec {
+            plan: plan.clone(),
+            write_mode: self.write_mode,
+            compute_scale: 1.0,
+        })
+    }
+
+    /// Compose the trailing all-gather onto a finished GEMM(+RS) phase on
+    /// the single-rank (loopback mirror) path. `pre_total` is when the
+    /// pre-AG phase fully drains; `trigger` is when the rank's own
+    /// reduced chunk becomes available (== `pre_total` except for the
+    /// fused engine, whose tracker fires before the drain). Returns
+    /// `(ag_time, total, ag_counters)`.
+    #[allow(clippy::too_many_arguments)]
+    fn compose_ag(
+        &self,
+        sys: &SystemConfig,
+        plan: &StagePlan,
+        ar_bytes: u64,
+        tp: u64,
+        comm_cus: u32,
+        pre_total: SimTime,
+        trigger: SimTime,
+    ) -> (SimTime, SimTime, DramCounters) {
+        match self.ag {
+            AgMode::RingCu => {
+                let ag = run_ag_baseline(sys, ar_bytes, tp, comm_cus);
+                (ag.time, pre_total + ag.time, ag.counters)
+            }
+            AgMode::Skip => (SimTime::ZERO, pre_total, DramCounters::default()),
+            AgMode::FusedTrigger | AgMode::OverlapConsumer => {
+                let consumer = self.ag_consumer_spec(plan);
+                let ag = run_fused_ag(sys, ar_bytes, tp, trigger, self.policy, consumer);
+                let total = pre_total.max(ag.ag_done);
+                (total - pre_total, total, uncharge_consumer(ag.counters))
             }
         }
     }
@@ -405,17 +488,12 @@ impl ScenarioSpec {
                 let gemm_end = gemms.iter().map(|g| g.time).max().unwrap();
                 let rs = ring(rs_kind, gemms.iter().map(|g| g.time).collect());
                 let rs_end = rs.end();
-                let (ag_time, total, ag_counters) = match self.ag {
-                    AgMode::RingCu => {
-                        let ag = ring(
-                            RingKind::AgCu,
-                            rs.per_rank.iter().map(|r| r.time).collect(),
-                        );
-                        let end = ag.end();
-                        (end - rs_end, end, ag.per_rank[0].counters)
-                    }
-                    AgMode::Skip => (SimTime::ZERO, rs_end, DramCounters::default()),
-                };
+                // Each rank's AG (kernel or fused trigger) starts at its
+                // own RS end.
+                let rs_ends: Vec<SimTime> = rs.per_rank.iter().map(|r| r.time).collect();
+                let (ag_time, total, ag_counters) = self.compose_ag_cluster(
+                    sys, &plan, ar_bytes, tp, comm_cus, cm, order, rs_end, rs_ends,
+                );
                 let mut counters = gemms[0].counters;
                 counters.add(&rs.per_rank[0].counters);
                 counters.add(&ag_counters);
@@ -440,14 +518,9 @@ impl ScenarioSpec {
                     .map(|(g, r)| g.time.max(r.time))
                     .collect();
                 let ideal_end = ideal_ends.iter().copied().max().unwrap();
-                let (ag_time, total, ag_counters) = match self.ag {
-                    AgMode::RingCu => {
-                        let ag = ring(RingKind::AgCu, ideal_ends);
-                        let end = ag.end();
-                        (end - ideal_end, end, ag.per_rank[0].counters)
-                    }
-                    AgMode::Skip => (SimTime::ZERO, ideal_end, DramCounters::default()),
-                };
+                let (ag_time, total, ag_counters) = self.compose_ag_cluster(
+                    sys, &plan, ar_bytes, tp, comm_cus, cm, order, ideal_end, ideal_ends,
+                );
                 let mut counters = gemms[0].counters;
                 counters.add(&rs.per_rank[0].counters);
                 counters.add(&ag_counters);
@@ -474,17 +547,18 @@ impl ScenarioSpec {
                 );
                 let fused_end = fused.total();
                 let gemm_end = fused.gemm_time();
-                let (ag_time, total, ag_counters) = match self.ag {
-                    AgMode::RingCu => {
-                        let ag = ring(
-                            RingKind::AgCu,
-                            fused.per_rank.iter().map(|r| r.total).collect(),
-                        );
-                        let end = ag.end();
-                        (end - fused_end, end, ag.per_rank[0].counters)
+                // Per-rank AG starts: the CU kernel launches after the
+                // rank's full drain; the fused AG triggers at its final
+                // tracker completion.
+                let starts: Vec<SimTime> = match self.ag {
+                    AgMode::FusedTrigger | AgMode::OverlapConsumer => fused.ag_triggers(),
+                    AgMode::RingCu | AgMode::Skip => {
+                        fused.per_rank.iter().map(|r| r.total).collect()
                     }
-                    AgMode::Skip => (SimTime::ZERO, fused_end, DramCounters::default()),
                 };
+                let (ag_time, total, ag_counters) = self.compose_ag_cluster(
+                    sys, &plan, ar_bytes, tp, comm_cus, cm, order, fused_end, starts,
+                );
                 let mut counters = fused.per_rank[0].counters;
                 counters.add(&ag_counters);
                 Measurement {
@@ -497,6 +571,72 @@ impl ScenarioSpec {
             }
         }
     }
+
+    /// The multi-rank analogue of [`ScenarioSpec::compose_ag`]: `starts`
+    /// are the per-rank AG launch times — kernel launches for
+    /// [`AgMode::RingCu`], fused-AG trigger times (each rank's reduced
+    /// chunk becoming available) for the fused modes; unused by
+    /// [`AgMode::Skip`]. Returns `(ag_time, total, ag_counters)`;
+    /// counters are rank 0's, matching the cluster measurement
+    /// convention.
+    #[allow(clippy::too_many_arguments)]
+    fn compose_ag_cluster(
+        &self,
+        sys: &SystemConfig,
+        plan: &StagePlan,
+        ar_bytes: u64,
+        tp: u64,
+        comm_cus: u32,
+        cm: &ClusterModel,
+        order: Interleave,
+        pre_total: SimTime,
+        starts: Vec<SimTime>,
+    ) -> (SimTime, SimTime, DramCounters) {
+        match self.ag {
+            AgMode::RingCu => {
+                let ag = cluster::run_ring_cluster(
+                    sys,
+                    &RingClusterSpec {
+                        bytes: ar_bytes,
+                        tp,
+                        cus: comm_cus,
+                        kind: RingKind::AgCu,
+                        starts,
+                    },
+                    cm,
+                    order,
+                );
+                let end = ag.end();
+                (end - pre_total, end, ag.per_rank[0].counters)
+            }
+            AgMode::Skip => (SimTime::ZERO, pre_total, DramCounters::default()),
+            AgMode::FusedTrigger | AgMode::OverlapConsumer => {
+                let ag = cluster::run_ag_cluster(
+                    sys,
+                    &AgClusterSpec {
+                        bytes: ar_bytes,
+                        tp,
+                        starts,
+                        policy: self.policy,
+                        consumer: self.ag_consumer_spec(plan),
+                    },
+                    cm,
+                    order,
+                );
+                let end = pre_total.max(ag.end());
+                (end - pre_total, end, uncharge_consumer(ag.per_rank[0].counters))
+            }
+        }
+    }
+}
+
+/// Strip the consumer GEMM's traffic from a fused-AG run's counters: the
+/// consumer stands in for the *next* sub-layer and is not charged to the
+/// one being measured.
+fn uncharge_consumer(mut c: DramCounters) -> DramCounters {
+    c.gemm_reads = 0;
+    c.gemm_writes = 0;
+    c
 }
 
 /// Timing and traffic of one simulated sub-layer cell.
@@ -565,6 +705,13 @@ pub fn registry() -> Vec<ScenarioSpec> {
         // Fused GEMM-RS without the trailing all-gather: lower bound for a
         // hypothetical fused-AG epilogue.
         ScenarioSpec::t3_mca().named("T3-MCA-FusedAG-Bound").skip_ag(),
+        // -- fused all-reduce (RS + AG both overlapped, §7.1) --
+        // The full T3 all-reduce: fused GEMM-RS plus the tracker-triggered
+        // cut-through all-gather (no CU kernel, one ring-fill latency).
+        ScenarioSpec::t3_mca().named("T3-AR-Fused").fused_ag(),
+        // ...plus consumer overlap: the next sub-layer's GEMM contends
+        // with the AG through the MC arbitration.
+        ScenarioSpec::t3_mca().named("T3-AR-Consumer").consumer_ag(),
         // -- cluster scenarios (multi-rank engine, t3::cluster) --
         // One rank 25% slower: how far does track-and-trigger localize the
         // damage? (Only chunks transiting the straggler are delayed.)
@@ -581,6 +728,19 @@ pub fn registry() -> Vec<ScenarioSpec> {
         ScenarioSpec::sequential()
             .named("Sequential-Straggler")
             .cluster(ClusterModel::straggler(1, 1.25)),
+        // -- fused all-reduce on the cluster engine --
+        // Per-rank AG triggers under a straggler: only the chunks that
+        // transit the slow rank arrive late.
+        ScenarioSpec::t3_mca()
+            .named("T3-AR-Fused-Straggler")
+            .fused_ag()
+            .cluster(ClusterModel::straggler(1, 1.25)),
+        // The fused AR across a two-tier topology: the AG's cut-through
+        // forwards are rate-capped by the slow inter-node hops they cross.
+        ScenarioSpec::t3_mca()
+            .named("T3-AR-Fused-TwoTier")
+            .fused_ag()
+            .cluster(ClusterModel::two_tier(4, 1.0 / 3.0, SimTime::us(2))),
     ]);
     all
 }
@@ -599,6 +759,10 @@ pub fn preset(name: &str) -> Option<ScenarioSpec> {
         "straggler" => "T3-MCA-Straggler",
         "two-tier" | "twotier" => "T3-MCA-TwoTier",
         "seq-straggler" => "Sequential-Straggler",
+        "ar-fused" | "fused-ar" => "T3-AR-Fused",
+        "ar-consumer" | "consumer-ar" => "T3-AR-Consumer",
+        "ar-straggler" => "T3-AR-Fused-Straggler",
+        "ar-two-tier" | "ar-twotier" => "T3-AR-Fused-TwoTier",
         other => other,
     }
     .to_string();
@@ -668,6 +832,73 @@ mod tests {
         assert!(s.rs_nmc);
         assert_eq!(s.ag, AgMode::Skip);
         assert!(s.describe().contains("72/8"));
+    }
+
+    #[test]
+    fn ar_presets_resolve_and_describe() {
+        let f = preset("ar-fused").unwrap();
+        assert_eq!(f.name, "T3-AR-Fused");
+        assert_eq!(f.ag, AgMode::FusedTrigger);
+        assert!(f.describe().contains("ag=fused"), "{}", f.describe());
+        let c = preset("ar-consumer").unwrap();
+        assert_eq!(c.ag, AgMode::OverlapConsumer);
+        assert!(c.describe().contains("ag=consumer"), "{}", c.describe());
+        let st = preset("ar-straggler").unwrap();
+        assert_eq!(st.ag, AgMode::FusedTrigger);
+        assert!(st.cluster.is_some());
+        let tt = preset("ar-two-tier").unwrap();
+        assert!(tt.cluster.is_some());
+    }
+
+    #[test]
+    fn fused_ar_faster_than_serialized_ag_composition() {
+        let sys = SystemConfig::table1();
+        let m = by_name("T-NLG").unwrap();
+        let serialized = ScenarioSpec::t3_mca().run(&sys, &m, 8, SubLayer::OpFwd);
+        let fused = preset("ar-fused").unwrap().run(&sys, &m, 8, SubLayer::OpFwd);
+        assert!(
+            fused.total < serialized.total,
+            "fused AR {} !< serialized AR {}",
+            fused.total,
+            serialized.total
+        );
+        // Same GEMM and RS phases; only the AG treatment differs.
+        assert_eq!(fused.gemm, serialized.gemm);
+        assert_eq!(fused.rs, serialized.rs);
+        assert!(fused.ag < serialized.ag);
+        // The fused AG reads only the own chunk from DRAM.
+        assert!(fused.counters.ag_reads < serialized.counters.ag_reads);
+    }
+
+    #[test]
+    fn consumer_ag_contention_never_beats_free_fused_ag() {
+        let sys = SystemConfig::table1();
+        let m = by_name("T-NLG").unwrap();
+        let free = preset("ar-fused").unwrap().run(&sys, &m, 8, SubLayer::OpFwd);
+        let consumer = preset("ar-consumer").unwrap().run(&sys, &m, 8, SubLayer::OpFwd);
+        assert!(consumer.total >= free.total);
+        // The consumer GEMM's traffic is charged to the next sub-layer.
+        assert_eq!(consumer.counters.gemm_reads, free.counters.gemm_reads);
+        assert_eq!(consumer.counters.gemm_writes, free.counters.gemm_writes);
+    }
+
+    #[test]
+    fn fused_ag_composes_with_serialized_and_ideal_overlap() {
+        // The AG axis is orthogonal: a serialized GEMM+RS can still hand
+        // its output to the DMA all-gather (triggered at the RS end).
+        let sys = SystemConfig::table1();
+        let m = by_name("T-NLG").unwrap();
+        let ring = ScenarioSpec::sequential().run(&sys, &m, 8, SubLayer::OpFwd);
+        let fused_ag = ScenarioSpec::sequential()
+            .fused_ag()
+            .run(&sys, &m, 8, SubLayer::OpFwd);
+        assert_eq!(ring.gemm, fused_ag.gemm);
+        assert_eq!(ring.rs, fused_ag.rs);
+        assert!(fused_ag.total < ring.total);
+        let ideal = ScenarioSpec::ideal_overlap()
+            .fused_ag()
+            .run(&sys, &m, 8, SubLayer::OpFwd);
+        assert!(ideal.total < fused_ag.total);
     }
 
     #[test]

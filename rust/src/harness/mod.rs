@@ -12,7 +12,7 @@
 use std::fmt::Write as _;
 use std::path::Path;
 
-use crate::cluster::{run_fused_cluster, ClusterModel, Interleave};
+use crate::cluster::{run_ag_cluster, run_fused_cluster, AgClusterSpec, ClusterModel, Interleave};
 use crate::config::SystemConfig;
 use crate::engine::collective_run::{run_ag_baseline, run_rs_baseline};
 use crate::engine::fused::{run_fused_gemm_rs, FusedOpts};
@@ -749,7 +749,12 @@ pub fn ablation_mca_thresholds(sys: &SystemConfig) -> Table {
 /// exposed RS tail, and total, plus critical-path notes comparing against
 /// the uniform cluster. The view always drives the fused engine (that is
 /// where per-rank structure is richest); `scenario` supplies the
-/// arbitration policy and write mode.
+/// arbitration policy, write mode, and all-gather treatment — with a
+/// fused-AG scenario (`AgMode::FusedTrigger` / `OverlapConsumer`) the
+/// trailing all-gather runs across the cluster too, triggered per rank by
+/// its fused-AG trigger (chunk reduced + egress drained,
+/// [`crate::engine::fused::FusedResult::ag_trigger`]), and an `ag done`
+/// column appears.
 pub fn cluster_report(
     sys: &SystemConfig,
     model: &ModelCfg,
@@ -758,6 +763,8 @@ pub fn cluster_report(
     scenario: &ScenarioSpec,
     cm: &ClusterModel,
 ) -> Table {
+    use crate::experiment::AgMode;
+
     let shape = sublayer_gemm(model, tp, sub);
     let plan = StagePlan::new(shape, Tiling::default(), &sys.gpu);
     let opts = FusedOpts {
@@ -774,6 +781,21 @@ pub fn cluster_report(
         run_fused_cluster(sys, &plan, tp, &opts, &ClusterModel::uniform(), Interleave::Ascending)
             .total()
     };
+    let ag = match scenario.ag {
+        AgMode::FusedTrigger | AgMode::OverlapConsumer => Some(run_ag_cluster(
+            sys,
+            &AgClusterSpec {
+                bytes: shape.out_bytes(),
+                tp,
+                starts: run.ag_triggers(),
+                policy: scenario.policy,
+                consumer: scenario.ag_consumer_spec(&plan),
+            },
+            cm,
+            Interleave::Ascending,
+        )),
+        AgMode::RingCu | AgMode::Skip => None,
+    };
     let mut t = Table::new(
         "cluster",
         &format!(
@@ -782,7 +804,7 @@ pub fn cluster_report(
             sub.name(),
             cm.describe()
         ),
-        &["rank", "node", "skew", "gemm ms", "rs tail ms", "total ms", "last tracker ms"],
+        &["rank", "node", "skew", "gemm ms", "rs tail ms", "total ms", "last tracker ms", "ag done ms"],
     );
     for (r, res) in run.per_rank.iter().enumerate() {
         t.row(vec![
@@ -793,6 +815,10 @@ pub fn cluster_report(
             ms(res.total - res.gemm_time),
             ms(res.total),
             ms(*res.tracker_done.last().expect("ring has positions")),
+            match &ag {
+                Some(a) => ms(a.per_rank[r].ag_done),
+                None => "-".to_string(),
+            },
         ]);
     }
     let slow = run.slowest_rank();
@@ -806,6 +832,12 @@ pub fn cluster_report(
         ms(run.total()),
         (run.total().as_ps() as f64 / uniform_total.as_ps() as f64 - 1.0) * 100.0
     ));
+    if let Some(a) = &ag {
+        t.note(format!(
+            "fused all-reduce end (RS drain + triggered AG): {} ms",
+            ms(run.total().max(a.end()))
+        ));
+    }
     t
 }
 
@@ -918,5 +950,18 @@ mod tests {
         // The straggler's skew factor is rendered on its row.
         assert_eq!(t.rows[1][2], "1.500");
         assert!(t.notes.iter().any(|n| n.contains("critical path")));
+        // Non-fused-AG scenarios leave the ag column empty.
+        assert!(t.rows.iter().all(|r| r[7] == "-"));
+    }
+
+    #[test]
+    fn cluster_report_shows_ag_column_for_fused_ar() {
+        let sys = SystemConfig::table1();
+        let m = by_name("T-NLG").unwrap();
+        let ar = crate::experiment::preset("ar-fused").expect("registry has T3-AR-Fused");
+        let t = cluster_report(&sys, &m, 2, SubLayer::OpFwd, &ar, &ClusterModel::uniform());
+        assert_eq!(t.rows.len(), 2);
+        assert!(t.rows.iter().all(|r| r[7] != "-"), "{:?}", t.rows);
+        assert!(t.notes.iter().any(|n| n.contains("all-reduce end")));
     }
 }

@@ -11,6 +11,7 @@
 //!               [--scenarios s1,s2] [--future] [--threads n] [--csv dir]
 //! t3 cluster    [--model <name>] [--tp <n>] [--sublayer <s>] [--scenario <s>]
 //!               [--skew straggler:R:F|jitter:A] [--nodes g] [--inter-bw f] [--inter-lat-ns n]
+//!               [--ag ring|skip|fused|consumer]
 //! t3 figure     <4|6|14|15|16|17|18|19|20|table2|table3> [--csv <dir>]
 //! t3 sweep      --model <name> [--tps 4,8,16,32]
 //! t3 validate             (tracker/functional-collective cross-checks)
@@ -92,6 +93,7 @@ const USAGE: &str = "t3 <config|models|scenarios|simulate|experiment|cluster|fig
   t3 cluster [--model T-NLG] [--tp 8] [--sublayer fc2] [--scenario t3-mca]
              [--skew none|straggler:RANK:FACTOR|jitter:AMPLITUDE]
              [--nodes G] [--inter-bw FRAC] [--inter-lat-ns NS]
+             [--ag ring|skip|fused|consumer]
   t3 figure <4|6|14|15|16|17|18|19|20|table2|table3|ablation> [--csv results]
   t3 sweep --model T-NLG [--tps 4,8,16]
   t3 validate
@@ -343,7 +345,7 @@ fn main() -> ExitCode {
                 eprintln!("unknown sublayer (op|fc2|fc1|ip)");
                 return ExitCode::FAILURE;
             };
-            let scenario = match flags.get("scenario") {
+            let mut scenario = match flags.get("scenario") {
                 Some(s) => match experiment::preset(s) {
                     Some(sc) => sc,
                     None => {
@@ -353,6 +355,19 @@ fn main() -> ExitCode {
                 },
                 None => ScenarioSpec::t3_mca(),
             };
+            if let Some(ag) = flags.get("ag") {
+                use t3::experiment::AgMode;
+                scenario.ag = match ag.to_ascii_lowercase().as_str() {
+                    "ring" => AgMode::RingCu,
+                    "skip" | "none" => AgMode::Skip,
+                    "fused" => AgMode::FusedTrigger,
+                    "consumer" => AgMode::OverlapConsumer,
+                    other => {
+                        eprintln!("bad --ag '{other}' (ring | skip | fused | consumer)");
+                        return ExitCode::FAILURE;
+                    }
+                };
+            }
             // Start from the scenario's own cluster model (registry cluster
             // presets carry one), then apply flag overrides.
             let mut cm = scenario.cluster.clone().unwrap_or_else(ClusterModel::uniform);

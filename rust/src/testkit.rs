@@ -14,6 +14,12 @@
 //!
 //! Failures report the case seed so the exact input can be replayed with
 //! [`replay`]. No shrinking — cases are kept small by construction.
+//!
+//! Environment knobs:
+//! * `T3_PROP_SEED` — base seed (explore other corners);
+//! * `T3_PROPTEST_CASES` — override every [`forall`]'s case count (crank
+//!   up for a soak run, or set to `1` with `T3_PROP_SEED` to replay a
+//!   single failing case).
 
 use crate::sim::rng::Rng;
 
@@ -25,9 +31,20 @@ fn base_seed() -> u64 {
         .unwrap_or(0x7E57_CA5E)
 }
 
-/// Run `f` against `cases` deterministic random cases. Panics (re-raising
-/// the assertion) with the failing case seed in the message.
+/// The effective case count: the `T3_PROPTEST_CASES` value when it parses
+/// to a positive number, else the test's requested count.
+fn resolve_cases(requested: u32, env: Option<&str>) -> u32 {
+    match env.and_then(|s| s.parse::<u32>().ok()) {
+        Some(n) if n > 0 => n,
+        _ => requested,
+    }
+}
+
+/// Run `f` against `cases` deterministic random cases (overridable via
+/// `T3_PROPTEST_CASES`). Panics (re-raising the assertion) after printing
+/// the failing seed and a ready-to-paste replay snippet.
 pub fn forall(cases: u32, f: impl Fn(&mut Rng)) {
+    let cases = resolve_cases(cases, std::env::var("T3_PROPTEST_CASES").ok().as_deref());
     let base = base_seed();
     for i in 0..cases {
         let seed = base.wrapping_add(i as u64);
@@ -35,8 +52,9 @@ pub fn forall(cases: u32, f: impl Fn(&mut Rng)) {
         let result = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| f(&mut rng)));
         if let Err(e) = result {
             eprintln!(
-                "property failed on case {i} (replay with t3::testkit::replay({seed}, ..) \
-                 or T3_PROP_SEED={seed} with cases=1)"
+                "property failed on case {i}/{cases} (seed {seed})\n\
+                   replay in code:  t3::testkit::replay({seed}, |rng| {{ /* case body */ }});\n\
+                   replay via env:  T3_PROP_SEED={seed} T3_PROPTEST_CASES=1 cargo test <test-name>"
             );
             std::panic::resume_unwind(e);
         }
@@ -64,14 +82,26 @@ mod tests {
 
     #[test]
     fn forall_runs_all_cases() {
-        let mut count = 0;
-        // count via side table since f is Fn
+        // The env override (if any) applies to every forall in the
+        // process, so compute the expected count through the same logic.
+        let expected =
+            resolve_cases(32, std::env::var("T3_PROPTEST_CASES").ok().as_deref());
         let cells = std::sync::atomic::AtomicU32::new(0);
         forall(32, |_rng| {
             cells.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
         });
-        count += cells.load(std::sync::atomic::Ordering::Relaxed);
-        assert_eq!(count, 32);
+        assert_eq!(cells.load(std::sync::atomic::Ordering::Relaxed), expected);
+    }
+
+    #[test]
+    fn case_count_override_resolution() {
+        assert_eq!(resolve_cases(64, None), 64);
+        assert_eq!(resolve_cases(64, Some("128")), 128);
+        assert_eq!(resolve_cases(64, Some("1")), 1);
+        // Garbage and zero fall back to the requested count.
+        assert_eq!(resolve_cases(64, Some("bogus")), 64);
+        assert_eq!(resolve_cases(64, Some("0")), 64);
+        assert_eq!(resolve_cases(64, Some("")), 64);
     }
 
     #[test]

@@ -138,6 +138,178 @@ fn skew_scenarios_have_stable_golden_fingerprints() {
 }
 
 #[test]
+fn uniform_cluster_bit_matches_legacy_engine_on_ar_presets() {
+    // The fused-AG axis must keep the mirror-vs-cluster contract: the
+    // uniform cluster reproduces the loopback composition bit-for-bit.
+    let s = sys();
+    let m = by_name("T-NLG").unwrap();
+    for name in ["ar-fused", "ar-consumer"] {
+        let scenario = preset(name).expect("registry has the AR preset");
+        assert!(scenario.cluster.is_none(), "base AR presets are single-rank");
+        let legacy = scenario.run(&s, &m, 4, SubLayer::OpFwd);
+        let clustered = scenario
+            .clone()
+            .cluster(ClusterModel::uniform())
+            .run(&s, &m, 4, SubLayer::OpFwd);
+        assert_eq!(legacy, clustered, "{name}");
+    }
+}
+
+/// Fingerprint a cluster AG run: per-rank completion, step ends, counters.
+fn ag_fingerprint(run: &t3::cluster::ClusterAgRun) -> u64 {
+    let mut h = TraceHash::new();
+    for r in &run.per_rank {
+        h.mix(r.ag_done.as_ps());
+        h.mix(r.total.as_ps());
+        for &t in &r.step_ends {
+            h.mix(t.as_ps());
+        }
+        h.mix(r.counters.total());
+    }
+    h.finish()
+}
+
+#[test]
+fn ar_preset_goldens_are_stable_and_interleave_invariant() {
+    use t3::cluster::{run_ag_cluster, AgClusterSpec};
+    use t3::engine::allgather::ConsumerSpec;
+    use t3::gemm::traffic::WriteMode;
+
+    let s = sys();
+    let m = by_name("T-NLG").unwrap();
+    let shape = sublayer_gemm(&m, 4, SubLayer::OpFwd);
+    let plan = StagePlan::new(shape, Tiling::default(), &s.gpu);
+    let opts = FusedOpts {
+        policy: ArbPolicy::T3Mca,
+        ..FusedOpts::default()
+    };
+    let mut lines = Vec::new();
+    for (name, model, consumer) in [
+        ("ar-fused-straggler", ClusterModel::straggler(1, 1.25), false),
+        (
+            "ar-fused-two-tier",
+            ClusterModel::two_tier(2, 0.5, SimTime::us(2)),
+            false,
+        ),
+        ("ar-consumer-jitter", ClusterModel::jitter(0.1), true),
+    ] {
+        let fused = run_fused_cluster(&s, &plan, 4, &opts, &model, Interleave::Ascending);
+        let spec = AgClusterSpec {
+            bytes: shape.out_bytes(),
+            tp: 4,
+            starts: fused.ag_triggers(),
+            policy: ArbPolicy::T3Mca,
+            consumer: consumer.then(|| ConsumerSpec {
+                plan: plan.clone(),
+                write_mode: WriteMode::BypassLlc,
+                compute_scale: 1.0,
+            }),
+        };
+        let a = run_ag_cluster(&s, &spec, &model, Interleave::Ascending);
+        let b = run_ag_cluster(&s, &spec, &model, Interleave::Descending);
+        assert_eq!(ag_fingerprint(&a), ag_fingerprint(&b), "{name}");
+        lines.push(format!(
+            "{name} {:#018x} ag_end_ps {}",
+            ag_fingerprint(&a),
+            a.end().as_ps()
+        ));
+    }
+    let golden =
+        std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("tests/golden/cluster_ar.golden");
+    let rendered = lines.join("\n") + "\n";
+    if std::env::var("T3_BLESS").is_ok() {
+        std::fs::create_dir_all(golden.parent().unwrap()).unwrap();
+        std::fs::write(&golden, &rendered).unwrap();
+    } else if let Ok(want) = std::fs::read_to_string(&golden) {
+        assert_eq!(rendered, want, "golden mismatch; re-bless with T3_BLESS=1 if intended");
+    }
+    // Without a blessed file the determinism assertions above still gate.
+}
+
+#[test]
+fn fused_ar_bounded_by_analytic_overlap_and_serialized_sum() {
+    use t3::collectives::analytic::ring_all_reduce;
+    use t3::engine::gemm_run::run_gemm;
+    use t3::gemm::traffic::WriteMode;
+
+    let s = sys();
+    let m = by_name("T-NLG").unwrap();
+    let ar_fused = preset("ar-fused").unwrap();
+    for tp in [4u64, 8] {
+        let shape = sublayer_gemm(&m, tp, SubLayer::OpFwd);
+        let plan = StagePlan::new(shape, Tiling::default(), &s.gpu);
+        let fused = ar_fused.run(&s, &m, tp, SubLayer::OpFwd);
+        // Lower bound: no overlap scheme beats perfect overlap of the
+        // isolated GEMM with the alpha-beta ring all-reduce law (2%
+        // numerical slack for the analytic reference's idealizations).
+        let gemm_iso = run_gemm(&s, &plan, s.gpu.cu_count, WriteMode::BypassLlc).time;
+        let ar_analytic = ring_all_reduce(&s.link, shape.out_bytes(), tp);
+        let lower = gemm_iso.max(ar_analytic);
+        assert!(
+            fused.total.as_ps() as f64 >= lower.as_ps() as f64 * 0.98,
+            "tp={tp}: fused AR {} below max(GEMM {gemm_iso}, analytic AR {ar_analytic})",
+            fused.total
+        );
+        // Upper bound: strictly better than the fully serialized sum.
+        let seq = ScenarioSpec::sequential().run(&s, &m, tp, SubLayer::OpFwd);
+        assert!(
+            fused.total < seq.total,
+            "tp={tp}: fused AR {} !< serialized sum {}",
+            fused.total,
+            seq.total
+        );
+    }
+}
+
+#[test]
+fn fused_ar_strictly_beats_serialized_ar_and_cuts_ag_traffic() {
+    let s = sys();
+    let m = by_name("T-NLG").unwrap();
+    for tp in [4u64, 8] {
+        let serialized = ScenarioSpec::t3_mca().run(&s, &m, tp, SubLayer::OpFwd);
+        let fused = preset("ar-fused").unwrap().run(&s, &m, tp, SubLayer::OpFwd);
+        let consumer = preset("ar-consumer").unwrap().run(&s, &m, tp, SubLayer::OpFwd);
+        assert!(
+            fused.total < serialized.total,
+            "tp={tp}: fused AR {} !< serialized AR {}",
+            fused.total,
+            serialized.total
+        );
+        // Consumer contention can only cost the AG, never help it, and
+        // the GEMM and RS phases are untouched by the AG treatment.
+        assert!(consumer.total >= fused.total, "tp={tp}");
+        assert_eq!(consumer.gemm, fused.gemm, "tp={tp}");
+        assert_eq!(consumer.rs, fused.rs, "tp={tp}");
+        // The consumer variant moves the same AG bytes as the free one.
+        assert_eq!(consumer.counters.ag_reads, fused.counters.ag_reads, "tp={tp}");
+        assert_eq!(consumer.counters.ag_writes, fused.counters.ag_writes, "tp={tp}");
+        // Cut-through forwarding: only the own chunk is read for the AG.
+        assert!(
+            fused.counters.ag_reads < serialized.counters.ag_reads,
+            "tp={tp}: fused AG reads {} !< baseline {}",
+            fused.counters.ag_reads,
+            serialized.counters.ag_reads
+        );
+    }
+}
+
+#[test]
+fn ar_straggler_cluster_preset_localizes_the_damage() {
+    let s = sys();
+    let m = by_name("T-NLG").unwrap();
+    let straggler = preset("ar-straggler").expect("registry has T3-AR-Fused-Straggler");
+    let uniform = preset("ar-fused").unwrap().cluster(ClusterModel::uniform());
+    let skewed = straggler.run(&s, &m, 8, SubLayer::OpFwd);
+    let base = uniform.run(&s, &m, 8, SubLayer::OpFwd);
+    assert!(skewed.total > base.total, "straggler must slow the fused AR");
+    let ratio = skewed.total.as_ps() as f64 / base.total.as_ps() as f64;
+    assert!(
+        ratio < 1.25,
+        "fused-AR straggler damage should stay localized, got {ratio:.3}x"
+    );
+}
+
+#[test]
 fn straggler_registry_scenario_behaves_end_to_end() {
     let s = sys();
     let m = by_name("T-NLG").unwrap();

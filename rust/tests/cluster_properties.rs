@@ -1,0 +1,341 @@
+//! Property-test pass over the per-rank machines and the cluster
+//! delivery rule (`t3::testkit::forall` — case counts overridable via
+//! `T3_PROPTEST_CASES`, failing seeds replayable via `T3_PROP_SEED`).
+//!
+//! Fuzzed axes: TP degree, payload size, CU grants, per-rank start/trigger
+//! offsets, and the full `ClusterModel` space (skew none/straggler/jitter
+//! x single-tier/two-tier topologies). Invariants, for every rank-machine
+//! kind (`RingRank` in all three ring flavors, `FusedRank`,
+//! `AllGatherRank`):
+//!
+//! * **byte conservation** — DRAM traffic counters match the collective's
+//!   algebra (chunks moved per ring step), and timing perturbations
+//!   (skew, topology) never create or destroy traffic;
+//! * **per-rank time monotonicity** — calendars never rewind: step/
+//!   tracker completions are ordered, results respect start offsets;
+//! * **interleave invariance** — ascending and descending slot orders in
+//!   `cluster::drive` produce bit-identical per-rank results;
+//! * **executor thread-count invariance** — the same fuzzed cases produce
+//!   identical fingerprints on 1 and 4 worker threads.
+
+use t3::cluster::{
+    run_ag_cluster, run_fused_cluster, run_ring_cluster, AgClusterSpec, ClusterModel,
+    Interleave, RingClusterSpec, SkewModel, TopologySpec,
+};
+use t3::config::{ArbPolicy, DType, SystemConfig};
+use t3::engine::allgather::ConsumerSpec;
+use t3::engine::collective_run::RingKind;
+use t3::engine::fused::FusedOpts;
+use t3::experiment::executor::run_indexed;
+use t3::gemm::traffic::WriteMode;
+use t3::gemm::{GemmShape, StagePlan, Tiling};
+use t3::sim::rng::{Rng, TraceHash};
+use t3::sim::time::SimTime;
+use t3::testkit::forall;
+
+const MB: u64 = 1 << 20;
+
+fn sys() -> SystemConfig {
+    SystemConfig::table1()
+}
+
+/// Draw a cluster model covering the whole skew x topology space.
+fn fuzz_model(rng: &mut Rng, tp: u64) -> ClusterModel {
+    let skew = match rng.index(3) {
+        0 => SkewModel::None,
+        1 => SkewModel::Straggler {
+            rank: rng.range(0, tp),
+            slowdown: 1.0 + rng.f64() * 0.5,
+        },
+        _ => SkewModel::Jitter {
+            amplitude: rng.f64() * 0.3,
+        },
+    };
+    let topology = if rng.chance(0.5) {
+        TopologySpec::SingleTier
+    } else {
+        TopologySpec::TwoTier {
+            node_size: rng.range(1, tp + 1),
+            inter_bw_frac: 0.25 + rng.f64() * 0.75,
+            inter_latency: SimTime::ns(rng.range(100, 3000)),
+        }
+    };
+    ClusterModel { skew, topology }
+}
+
+fn fuzz_starts(rng: &mut Rng, tp: u64) -> Vec<SimTime> {
+    if rng.chance(0.5) {
+        vec![SimTime::ZERO; tp as usize]
+    } else {
+        (0..tp).map(|_| SimTime::us(rng.range(0, 300))).collect()
+    }
+}
+
+#[test]
+fn ring_cluster_conserves_bytes_and_time_is_monotone() {
+    let s = sys();
+    forall(128, |rng| {
+        let tp = rng.range(2, 6);
+        let chunk = rng.range(1, 3) * MB;
+        let bytes = chunk * tp;
+        let cus = *rng.choose(&[8u32, 16, 80]);
+        let kind = *rng.choose(&[RingKind::RsCu, RingKind::AgCu, RingKind::RsNmc]);
+        let model = fuzz_model(rng, tp);
+        let starts = fuzz_starts(rng, tp);
+        let spec = RingClusterSpec {
+            bytes,
+            tp,
+            cus,
+            kind,
+            starts: starts.clone(),
+        };
+        let run = run_ring_cluster(&s, &spec, &model, Interleave::Ascending);
+
+        let slack = 64 * s.mem.txn_bytes * tp;
+        for (r, res) in run.per_rank.iter().enumerate() {
+            // Time monotonicity: the calendar never rewinds, and a rank
+            // cannot finish before its kernel launched.
+            assert!(res.time >= starts[r], "rank {r} ended before its start");
+            for w in res.step_ends.windows(2) {
+                assert!(w[1] >= w[0], "rank {r} step ends rewound");
+            }
+            // Byte conservation: each ring step moves exactly one chunk
+            // through the rank (reads to send, writes to land).
+            let (reads, writes, exp_reads, exp_writes) = match kind {
+                // 1 read (first send) + 2 per later send + 2 final reduce;
+                // N-1 ingress chunks + 1 reduced result.
+                RingKind::RsCu => (
+                    res.counters.rs_reads,
+                    res.counters.rs_writes,
+                    (2 * tp - 1) * chunk,
+                    tp * chunk,
+                ),
+                // Forward chunk per step; N-1 ingress chunks, no reduce.
+                RingKind::AgCu => (
+                    res.counters.ag_reads,
+                    res.counters.ag_writes,
+                    (tp - 1) * chunk,
+                    (tp - 1) * chunk,
+                ),
+                // NMC merges on ingress: one read per send, no reduce.
+                RingKind::RsNmc => (
+                    res.counters.rs_reads,
+                    res.counters.rs_writes,
+                    (tp - 1) * chunk,
+                    (tp - 1) * chunk,
+                ),
+            };
+            assert!(
+                reads >= exp_reads && reads <= exp_reads + slack,
+                "rank {r} {kind:?} reads {reads} vs {exp_reads}"
+            );
+            assert!(
+                writes >= exp_writes && writes <= exp_writes + slack,
+                "rank {r} {kind:?} writes {writes} vs {exp_writes}"
+            );
+        }
+
+        // Interleave invariance: slot order is unobservable.
+        let desc = run_ring_cluster(&s, &spec, &model, Interleave::Descending);
+        assert_eq!(run.per_rank, desc.per_rank, "interleave changed a ring run");
+    });
+}
+
+#[test]
+fn fused_cluster_tracker_monotone_and_traffic_skew_invariant() {
+    let s = sys();
+    let opts = FusedOpts {
+        policy: ArbPolicy::T3Mca,
+        ..FusedOpts::default()
+    };
+    forall(128, |rng| {
+        let tp = rng.range(2, 5);
+        let m = *rng.choose(&[1024u64, 2048]);
+        let n = *rng.choose(&[512u64, 1024]);
+        let k = *rng.choose(&[256u64, 512]);
+        let plan = StagePlan::new(GemmShape::new(m, n, k, DType::F16), Tiling::default(), &s.gpu);
+        let model = fuzz_model(rng, tp);
+
+        let base_model = ClusterModel::uniform();
+        let uniform = run_fused_cluster(&s, &plan, tp, &opts, &base_model, Interleave::Ascending);
+        let asc = run_fused_cluster(&s, &plan, tp, &opts, &model, Interleave::Ascending);
+        let desc = run_fused_cluster(&s, &plan, tp, &opts, &model, Interleave::Descending);
+
+        for (r, res) in asc.per_rank.iter().enumerate() {
+            // Interleave invariance, field by field.
+            let d = &desc.per_rank[r];
+            assert_eq!(res.total, d.total, "rank {r} total");
+            assert_eq!(res.tracker_done, d.tracker_done, "rank {r} trackers");
+            assert_eq!(res.counters, d.counters, "rank {r} counters");
+            // Tracker monotonicity: ring positions complete in order
+            // (position 0 is the remote-mapped special case).
+            for p in 2..tp as usize {
+                assert!(
+                    res.tracker_done[p] >= res.tracker_done[p - 1],
+                    "rank {r} tracker order violated at {p}"
+                );
+            }
+            assert!(res.total >= *res.tracker_done.last().unwrap());
+            // Byte conservation: skew and topology shift time, never
+            // traffic — every rank moves the same bytes as its uniform
+            // twin.
+            assert_eq!(
+                res.counters, uniform.per_rank[r].counters,
+                "rank {r}: skew/topology changed DRAM traffic"
+            );
+        }
+    });
+}
+
+#[test]
+fn ag_cluster_conserves_bytes_and_is_interleave_invariant() {
+    let s = sys();
+    let consumer_plan = StagePlan::new(
+        GemmShape::new(1024, 512, 256, DType::F16),
+        Tiling::default(),
+        &s.gpu,
+    );
+    forall(128, |rng| {
+        let tp = rng.range(2, 6);
+        let chunk = rng.range(1, 3) * MB;
+        let starts = fuzz_starts(rng, tp);
+        let uniform_starts = starts.iter().all(|&t| t == SimTime::ZERO);
+        let model = fuzz_model(rng, tp);
+        let consumer = rng.chance(0.25).then(|| ConsumerSpec {
+            plan: consumer_plan.clone(),
+            write_mode: WriteMode::BypassLlc,
+            compute_scale: 1.0,
+        });
+        let spec = AgClusterSpec {
+            bytes: chunk * tp,
+            tp,
+            starts: starts.clone(),
+            policy: ArbPolicy::T3Mca,
+            consumer,
+        };
+        let run = run_ag_cluster(&s, &spec, &model, Interleave::Ascending);
+
+        let slack = 64 * s.mem.txn_bytes * tp;
+        for (r, res) in run.per_rank.iter().enumerate() {
+            // Byte conservation: cut-through forwarding reads only the
+            // rank's own chunk from DRAM; every received chunk lands once.
+            assert!(
+                res.counters.ag_reads >= chunk && res.counters.ag_reads <= chunk + slack,
+                "rank {r} ag reads {} vs own chunk {chunk}",
+                res.counters.ag_reads
+            );
+            let exp_writes = (tp - 1) * chunk;
+            assert!(
+                res.counters.ag_writes >= exp_writes
+                    && res.counters.ag_writes <= exp_writes + slack,
+                "rank {r} ag writes {} vs {exp_writes}",
+                res.counters.ag_writes
+            );
+            // Time monotonicity: every receive lands, none after the
+            // rank's AG completion, none before its trigger-independent
+            // lower bound (zero); with uniform triggers the ring's steps
+            // complete in order.
+            for (step, &t) in res.step_ends.iter().enumerate() {
+                assert!(t != SimTime::MAX, "rank {r} step {step} never landed");
+                assert!(res.ag_done >= t, "rank {r} ag_done before step {step}");
+            }
+            assert!(res.ag_done >= starts[r]);
+            assert!(res.total >= res.ag_done);
+            if uniform_starts {
+                for w in res.step_ends.windows(2) {
+                    assert!(w[1] >= w[0], "rank {r} step ends rewound");
+                }
+            }
+            if spec.consumer.is_some() {
+                let done = res.consumer_done.expect("consumer ran");
+                assert!(done != SimTime::MAX && res.total >= done);
+                assert!(res.counters.gemm_reads > 0);
+            } else {
+                assert_eq!(res.counters.gemm_reads, 0);
+            }
+        }
+
+        let desc = run_ag_cluster(&s, &spec, &model, Interleave::Descending);
+        assert_eq!(run.per_rank, desc.per_rank, "interleave changed an AG run");
+    });
+}
+
+#[test]
+fn fuzzed_cluster_runs_are_thread_count_invariant() {
+    // 128 fuzzed cases, each a full cluster simulation, executed on the
+    // experiment executor at two worker counts: the fingerprints must be
+    // identical slot for slot (the property the parallel grid relies on).
+    let s = sys();
+    let mut rng = Rng::new(0xA11_6A73);
+    #[derive(Clone)]
+    struct Case {
+        tp: u64,
+        chunk: u64,
+        kind: Option<RingKind>, // None = fused AG machine
+        starts: Vec<SimTime>,
+        model: ClusterModel,
+    }
+    let cases: Vec<Case> = (0..128)
+        .map(|_| {
+            let tp = rng.range(2, 6);
+            Case {
+                tp,
+                chunk: rng.range(1, 3) * MB,
+                kind: if rng.chance(0.5) {
+                    Some(*rng.choose(&[RingKind::RsCu, RingKind::AgCu, RingKind::RsNmc]))
+                } else {
+                    None
+                },
+                starts: fuzz_starts(&mut rng, tp),
+                model: fuzz_model(&mut rng, tp),
+            }
+        })
+        .collect();
+
+    let fingerprint = |c: &Case| -> u64 {
+        let mut h = TraceHash::new();
+        match c.kind {
+            Some(kind) => {
+                let run = run_ring_cluster(
+                    &s,
+                    &RingClusterSpec {
+                        bytes: c.chunk * c.tp,
+                        tp: c.tp,
+                        cus: 80,
+                        kind,
+                        starts: c.starts.clone(),
+                    },
+                    &c.model,
+                    Interleave::Ascending,
+                );
+                for r in &run.per_rank {
+                    h.mix(r.time.as_ps());
+                    h.mix(r.counters.total());
+                }
+            }
+            None => {
+                let run = run_ag_cluster(
+                    &s,
+                    &AgClusterSpec {
+                        bytes: c.chunk * c.tp,
+                        tp: c.tp,
+                        starts: c.starts.clone(),
+                        policy: ArbPolicy::T3Mca,
+                        consumer: None,
+                    },
+                    &c.model,
+                    Interleave::Ascending,
+                );
+                for r in &run.per_rank {
+                    h.mix(r.ag_done.as_ps());
+                    h.mix(r.counters.total());
+                }
+            }
+        }
+        h.finish()
+    };
+
+    let serial = run_indexed(cases.len(), 1, |i| fingerprint(&cases[i]));
+    let parallel = run_indexed(cases.len(), 4, |i| fingerprint(&cases[i]));
+    assert_eq!(serial, parallel, "worker count changed a simulation result");
+}

@@ -144,6 +144,91 @@ fn fig20_future_hw_directions() {
     assert!(fc > op, "FC-2 delta {fc} should exceed OP delta {op} ({note})");
 }
 
+// ---------------------------------------------------------------------
+// CLI end-to-end: drive the built `t3` binary through the cluster and
+// fused-AR paths — tables render with real rows, bad flags error out.
+// ---------------------------------------------------------------------
+
+fn t3_cmd(args: &[&str]) -> std::process::Output {
+    std::process::Command::new(env!("CARGO_BIN_EXE_t3"))
+        .args(args)
+        .output()
+        .expect("spawn t3 binary")
+}
+
+#[test]
+fn cli_cluster_renders_per_rank_table_with_fused_ag() {
+    let out = t3_cmd(&[
+        "cluster", "--model", "T-NLG", "--tp", "4", "--sublayer", "op",
+        "--scenario", "ar-fused",
+    ]);
+    assert!(out.status.success(), "stderr: {}", String::from_utf8_lossy(&out.stderr));
+    let stdout = String::from_utf8_lossy(&out.stdout);
+    assert!(stdout.contains("per-rank fused GEMM-RS"), "{stdout}");
+    assert!(stdout.contains("ag done ms"), "{stdout}");
+    assert!(stdout.contains("fused all-reduce end"), "{stdout}");
+    // One data row per rank (rows start with "| <rank> |").
+    for rank in 0..4 {
+        assert!(stdout.contains(&format!("| {rank} ")), "missing rank {rank}: {stdout}");
+    }
+}
+
+#[test]
+fn cli_cluster_ag_flag_overrides_the_scenario() {
+    let out = t3_cmd(&[
+        "cluster", "--model", "T-NLG", "--tp", "4", "--sublayer", "op", "--ag", "consumer",
+    ]);
+    assert!(out.status.success(), "stderr: {}", String::from_utf8_lossy(&out.stderr));
+    let stdout = String::from_utf8_lossy(&out.stdout);
+    assert!(stdout.contains("ag done ms"), "{stdout}");
+    // The override switched the default T3-MCA scenario onto the fused-AG
+    // path, so the all-reduce summary note appears.
+    assert!(stdout.contains("fused all-reduce end"), "{stdout}");
+}
+
+#[test]
+fn cli_cluster_rejects_bad_flags() {
+    let bad_ag = t3_cmd(&["cluster", "--tp", "4", "--ag", "bogus"]);
+    assert!(!bad_ag.status.success());
+    assert!(String::from_utf8_lossy(&bad_ag.stderr).contains("bad --ag"));
+
+    let bad_skew = t3_cmd(&["cluster", "--tp", "4", "--skew", "straggler:0:nan"]);
+    assert!(!bad_skew.status.success());
+    assert!(String::from_utf8_lossy(&bad_skew.stderr).contains("FACTOR"));
+
+    let orphan_inter = t3_cmd(&["cluster", "--tp", "4", "--inter-bw", "0.5"]);
+    assert!(!orphan_inter.status.success());
+    assert!(String::from_utf8_lossy(&orphan_inter.stderr).contains("--nodes"));
+
+    let bad_scenario = t3_cmd(&["cluster", "--scenario", "no-such"]);
+    assert!(!bad_scenario.status.success());
+    assert!(String::from_utf8_lossy(&bad_scenario.stderr).contains("unknown scenario"));
+}
+
+#[test]
+fn cli_scenarios_lists_the_ar_axis() {
+    let out = t3_cmd(&["scenarios"]);
+    assert!(out.status.success());
+    let stdout = String::from_utf8_lossy(&out.stdout);
+    for name in ["T3-AR-Fused", "T3-AR-Consumer", "T3-AR-Fused-Straggler", "T3-AR-Fused-TwoTier"] {
+        assert!(stdout.contains(name), "registry listing misses {name}: {stdout}");
+    }
+    assert!(stdout.contains("ag=fused"), "{stdout}");
+    assert!(stdout.contains("ag=consumer"), "{stdout}");
+}
+
+#[test]
+fn cli_simulate_runs_an_ar_preset() {
+    let out = t3_cmd(&[
+        "simulate", "--model", "T-NLG", "--tp", "4", "--sublayer", "op",
+        "--scenario", "ar-fused",
+    ]);
+    assert!(out.status.success(), "stderr: {}", String::from_utf8_lossy(&out.stderr));
+    let stdout = String::from_utf8_lossy(&out.stdout);
+    assert!(stdout.contains("T3-AR-Fused"), "{stdout}");
+    assert!(stdout.contains("speedup"), "{stdout}");
+}
+
 #[test]
 fn fig17_gemm_slowdown_present() {
     let dir = std::env::temp_dir().join("t3-fig17-test");
