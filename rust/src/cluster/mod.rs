@@ -38,7 +38,8 @@ pub mod engine;
 pub mod topology;
 
 pub use engine::{
-    drive, run_ag_cluster, run_fused_cluster, run_gemm_cluster, run_ring_cluster,
+    drive, run_ag_cluster, run_ag_cluster_traced, run_fused_cluster, run_fused_cluster_traced,
+    run_gemm_cluster, run_gemm_cluster_traced, run_ring_cluster, run_ring_cluster_traced,
     AgClusterSpec, ClusterAgRun, ClusterFusedRun, ClusterRingRun, Interleave, RankNode,
     RingClusterSpec,
 };

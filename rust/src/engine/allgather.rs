@@ -48,6 +48,7 @@ use crate::hw::hbm::{GroupId, TrafficClass, Txn, TxnKind};
 use crate::hw::mc::{intensity_class, Stream};
 use crate::sim::stats::DramCounters;
 use crate::sim::time::SimTime;
+use crate::trace::{InstantKind, Lane, RankTrace, SpanLabel};
 
 use super::{Ev, GroupTag, Runner, PACE_BATCH};
 
@@ -106,6 +107,10 @@ pub struct AllGatherResult {
     /// Consumer GEMM retirement (last stage), when a consumer ran.
     pub consumer_done: Option<SimTime>,
     pub counters: DramCounters,
+    /// Timeline trace (when [`AllGatherRank::enable_trace`] was called).
+    pub timeline: Option<RankTrace>,
+    /// Total bytes the egress link carried (trace reconciliation).
+    pub link_bytes: u64,
 }
 
 /// Consumer-GEMM stage machine state (mirrors the producer stage machine
@@ -218,6 +223,13 @@ impl AllGatherRank {
         }
     }
 
+    /// Record this rank's timeline (`t3::trace`): the AG trigger instant,
+    /// link egress/ingress windows, consumer-GEMM stage compute, and DRAM
+    /// service lanes. Purely observational.
+    pub fn enable_trace(&mut self, rank: u64) {
+        self.r.enable_trace(rank);
+    }
+
     /// Time of this rank's next pending event.
     pub fn next_time(&self) -> Option<SimTime> {
         self.r.q.peek_time()
@@ -259,6 +271,7 @@ impl AllGatherRank {
             let feed_gbps = self.chunk as f64 / dur.as_secs_f64() / 1e9;
             self.r.link_out.reserve_rate_limited(t, self.chunk, feed_gbps)
         };
+        self.r.sink.span(Lane::LinkEgress, w.start, w.done, self.chunk, SpanLabel::Chunk(fs));
         self.r.q.schedule(w.done, Ev::EgressDone { pos: fs });
         let lat = self.r.link_out.cfg().latency;
         out.push(AgMsg {
@@ -297,6 +310,8 @@ impl AllGatherRank {
                             let ct = c.plan.stage_compute_time(s, &c.gpu, c.gpu.cu_count, c.eff);
                             let ct = if c.scale != 1.0 { ct * c.scale } else { ct };
                             let stall = blocked * c.gpu.stall_unhidden;
+                            let lbl = SpanLabel::Stage(s);
+                            self.r.sink.span(Lane::CuConsumer, t, t + ct + stall, 0, lbl);
                             self.r.q.schedule_in(ct + stall, Ev::StageCompute(s));
                         }
                     }
@@ -309,6 +324,7 @@ impl AllGatherRank {
         match ev {
             Ev::Marker { step: 0, what: 0 } if !self.started => {
                 self.started = true;
+                self.r.sink.instant(Lane::Tracker, t, InstantKind::AgTrigger);
                 // The rank's own reduced chunk joins whatever receives
                 // already landed (a late-triggered rank's faster upstream
                 // neighbors deliver before its start marker).
@@ -323,6 +339,9 @@ impl AllGatherRank {
                     GroupTag::DmaReads(0),
                 );
                 let w = self.r.link_out.reserve(t, self.chunk);
+                self.r
+                    .sink
+                    .span(Lane::LinkEgress, w.start, w.done, self.chunk, SpanLabel::Chunk(0));
                 self.r.q.schedule(w.done, Ev::EgressDone { pos: 0 });
                 let lat = self.r.link_out.cfg().latency;
                 out.push(AgMsg {
@@ -389,6 +408,9 @@ impl AllGatherRank {
         self.ingress_groups[s] = self.r.register_group(txns, GroupTag::StepIngress(msg.step));
         self.in_windows[s] = (msg.start, msg.end);
         self.r
+            .sink
+            .span(Lane::LinkIngress, msg.start, msg.end, self.chunk, SpanLabel::Chunk(msg.step));
+        self.r
             .schedule_ingress_window(msg.step, txns, msg.start, msg.end, PACE_BATCH);
         if msg.step + 1 < self.steps {
             self.r.q.schedule(
@@ -402,15 +424,24 @@ impl AllGatherRank {
     }
 
     /// Consume the drained rank into its result.
-    pub fn into_result(self) -> AllGatherResult {
+    pub fn into_result(mut self) -> AllGatherResult {
         debug_assert!(self.r.mem.idle());
         debug_assert!(self.ag_done != SimTime::MAX, "all-gather did not finish");
+        let total = self.r.now();
+        // Accounted timeline end: the all-gather's completion — the
+        // quantity scenario compositions charge to this phase. A consumer
+        // GEMM (charged to the *next* sub-layer) may drain later; with one
+        // present the stamp is the full drain so its spans stay covered.
+        let stamp = if self.consumer.is_some() { total } else { self.ag_done };
+        let timeline = self.r.take_timeline(stamp);
         AllGatherResult {
-            total: self.r.now(),
+            total,
             ag_done: self.ag_done,
             step_ends: self.step_ends,
             consumer_done: self.consumer.as_ref().map(|c| c.done),
             counters: self.r.mem.counters,
+            timeline,
+            link_bytes: self.r.link_out.bytes_carried,
         }
     }
 }
@@ -427,6 +458,34 @@ pub fn run_fused_ag(
     policy: ArbPolicy,
     consumer: Option<ConsumerSpec>,
 ) -> AllGatherResult {
+    run_fused_ag_opt(sys, bytes, devices, start, policy, consumer, false)
+}
+
+/// [`run_fused_ag`] with timeline tracing enabled; the result's `timeline`
+/// carries the rank-0 trace (absolute times — the trigger offset is part
+/// of the timeline). Every simulated quantity is bit-identical to the
+/// untraced run.
+pub fn run_fused_ag_traced(
+    sys: &SystemConfig,
+    bytes: u64,
+    devices: u64,
+    start: SimTime,
+    policy: ArbPolicy,
+    consumer: Option<ConsumerSpec>,
+) -> AllGatherResult {
+    run_fused_ag_opt(sys, bytes, devices, start, policy, consumer, true)
+}
+
+#[allow(clippy::too_many_arguments)]
+fn run_fused_ag_opt(
+    sys: &SystemConfig,
+    bytes: u64,
+    devices: u64,
+    start: SimTime,
+    policy: ArbPolicy,
+    consumer: Option<ConsumerSpec>,
+    traced: bool,
+) -> AllGatherResult {
     let spec = AgRankSpec {
         bytes,
         devices,
@@ -436,6 +495,9 @@ pub fn run_fused_ag(
         consumer,
     };
     let mut rank = AllGatherRank::new(sys, &spec);
+    if traced {
+        rank.enable_trace(0);
+    }
     let mut msgs = Vec::new();
     while rank.step(&mut msgs) {
         for m in msgs.drain(..) {

@@ -26,6 +26,7 @@ use crate::hw::hbm::{GroupId, TrafficClass, Txn, TxnKind};
 use crate::hw::mc::Stream;
 use crate::sim::stats::DramCounters;
 use crate::sim::time::SimTime;
+use crate::trace::{Lane, RankTrace, SpanLabel};
 
 use super::{Ev, GroupTag, Runner, PACE_BATCH};
 
@@ -38,6 +39,10 @@ pub struct CollectiveRunResult {
     pub counters: DramCounters,
     /// Per-step completion times.
     pub step_ends: Vec<SimTime>,
+    /// Timeline trace (when [`RingRank::enable_trace`] was called).
+    pub timeline: Option<RankTrace>,
+    /// Total bytes the egress link carried (trace reconciliation).
+    pub link_bytes: u64,
 }
 
 /// Which ring collective a [`RingRank`] executes.
@@ -209,6 +214,12 @@ impl RingRank {
         }
     }
 
+    /// Record this rank's timeline (`t3::trace`): link egress/ingress
+    /// windows and DRAM service lanes. Purely observational.
+    pub fn enable_trace(&mut self, rank: u64) {
+        self.r.enable_trace(rank);
+    }
+
     /// Start ring step `s`: paced local reads, an egress reservation on the
     /// downstream edge, and a [`RingMsg`] telling the receiver the hop's
     /// arrival window.
@@ -218,6 +229,7 @@ impl RingRank {
         self.read_groups[s as usize] = self.r.register_group(read_txns, GroupTag::StepReads(s));
         self.r.schedule_issue(s, read_txns, now, self.read_bw, PACE_BATCH);
         let w = self.r.link_out.reserve_rate_limited(now, self.chunk, self.feed_bw);
+        self.r.sink.span(Lane::LinkEgress, w.start, w.done, self.chunk, SpanLabel::Chunk(s));
         self.r.q.schedule(w.done, Ev::EgressDone { pos: s });
         let lat = self.r.link_out.cfg().latency;
         let link_bw = self.r.link_out.cfg().per_dir_bw_gbps;
@@ -242,6 +254,14 @@ impl RingRank {
         debug_assert!(self.ingress_groups[s] == GroupId::NONE, "duplicate hop for step {s}");
         let in_txns = self.r.mem.txns_for(self.chunk);
         self.ingress_groups[s] = self.r.register_group(in_txns, GroupTag::StepIngress(msg.step));
+        if self.r.sink.enabled() {
+            // The arrival window mirrors the sender's egress window: same
+            // duration (chunk at the capped rate), shifted by the hop.
+            let end = msg.start + SimTime::transfer(self.chunk, msg.rate_gbps);
+            self.r
+                .sink
+                .span(Lane::LinkIngress, msg.start, end, self.chunk, SpanLabel::Chunk(msg.step));
+        }
         self.r
             .schedule_ingress(msg.step, in_txns, msg.start, msg.rate_gbps, PACE_BATCH);
     }
@@ -330,10 +350,13 @@ impl RingRank {
         debug_assert!(self.r.mem.idle());
         let time = self.r.now();
         self.step_ends.push(time);
+        let timeline = self.r.take_timeline(time);
         CollectiveRunResult {
             time,
             counters: self.r.mem.counters,
             step_ends: self.step_ends,
+            timeline,
+            link_bytes: self.r.link_out.bytes_carried,
         }
     }
 }
@@ -341,6 +364,31 @@ impl RingRank {
 /// Loopback driver: one rank, its hop messages mirrored back to itself
 /// (homogeneous devices, §5.1.1).
 fn run_ring(sys: &SystemConfig, bytes: u64, devices: u64, cus: u32, kind: RingKind) -> CollectiveRunResult {
+    run_ring_opt(sys, bytes, devices, cus, kind, false)
+}
+
+/// Loopback ring driver with timeline tracing enabled ([`RingKind`]
+/// selects the collective; `cus` is ignored by [`RingKind::RsNmc`],
+/// exactly as in the untraced entry points). Every simulated quantity is
+/// bit-identical to the untraced run.
+pub fn run_ring_traced(
+    sys: &SystemConfig,
+    bytes: u64,
+    devices: u64,
+    cus: u32,
+    kind: RingKind,
+) -> CollectiveRunResult {
+    run_ring_opt(sys, bytes, devices, cus, kind, true)
+}
+
+fn run_ring_opt(
+    sys: &SystemConfig,
+    bytes: u64,
+    devices: u64,
+    cus: u32,
+    kind: RingKind,
+    traced: bool,
+) -> CollectiveRunResult {
     let spec = RingRankSpec {
         bytes,
         devices,
@@ -351,6 +399,9 @@ fn run_ring(sys: &SystemConfig, bytes: u64, devices: u64, cus: u32, kind: RingKi
         issue_scale: 1.0,
     };
     let mut rank = RingRank::new(sys, &spec);
+    if traced {
+        rank.enable_trace(0);
+    }
     let mut msgs = Vec::new();
     while rank.step(&mut msgs) {
         for m in msgs.drain(..) {

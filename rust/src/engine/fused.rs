@@ -49,6 +49,7 @@ use crate::hw::hbm::{GroupId, TrafficClass, Txn, TxnKind};
 use crate::hw::mc::{intensity_class, Stream};
 use crate::sim::stats::DramCounters;
 use crate::sim::time::SimTime;
+use crate::trace::{InstantKind, Lane, RankTrace, SpanLabel};
 
 use super::{Ev, GroupTag, Runner, PACE_BATCH};
 
@@ -71,6 +72,10 @@ pub struct FusedResult {
     pub tracker_peak_tiles: u64,
     /// Figure-17 traffic trace (when `FusedOpts::trace_bin` is set).
     pub trace: Option<crate::hw::hbm::TrafficTrace>,
+    /// Timeline trace (when [`FusedRank::enable_trace`] was called).
+    pub timeline: Option<RankTrace>,
+    /// Total bytes the egress link carried (trace reconciliation).
+    pub link_bytes: u64,
 }
 
 impl FusedResult {
@@ -319,6 +324,14 @@ impl FusedRank {
         stage_segments(&self.plan, &self.chunks)
     }
 
+    /// Record this rank's timeline (`t3::trace`): CU stage compute, DRAM
+    /// service lanes, link egress/ingress windows, tracker completions and
+    /// trigger firings. Purely observational — traced runs are
+    /// bit-identical to untraced ones.
+    pub fn enable_trace(&mut self, rank: u64) {
+        self.r.enable_trace(rank);
+    }
+
     fn start_stage(&mut self, s: u64) {
         let bytes = stage_reads(&self.plan, self.dram_reads, s).max(self.r.sys.mem.txn_bytes);
         self.r.submit_tagged(
@@ -355,6 +368,7 @@ impl FusedRank {
                         ct
                     };
                     let stall = blocked * self.gpu.stall_unhidden;
+                    self.r.sink.span(Lane::CuCompute, t, t + ct + stall, 0, SpanLabel::Stage(s));
                     self.r.q.schedule_in(ct + stall, Ev::StageCompute(s));
                 }
                 GroupTag::ChunkLocal(p) => {
@@ -367,6 +381,9 @@ impl FusedRank {
                         self.local_done[p] = true;
                         if check_tracker(p, &self.map, &self.local_done, &self.ingress_done) {
                             self.tracker_done[p] = t;
+                            self.r
+                                .sink
+                                .instant(Lane::Tracker, t, InstantKind::TrackerDone(p as u32));
                             self.newly_tracker_done.push(p);
                         }
                     }
@@ -378,6 +395,7 @@ impl FusedRank {
                         && self.tracker_done[p] == SimTime::MAX
                     {
                         self.tracker_done[p] = t;
+                        self.r.sink.instant(Lane::Tracker, t, InstantKind::TrackerDone(p as u32));
                         self.newly_tracker_done.push(p);
                     }
                 }
@@ -406,6 +424,7 @@ impl FusedRank {
                         // in local DRAM).
                         self.local_done[p] = true;
                         self.tracker_done[p] = t;
+                        self.r.sink.instant(Lane::Tracker, t, InstantKind::TrackerDone(p as u32));
                     }
                 }
             }
@@ -433,6 +452,8 @@ impl FusedRank {
                     ChunkMap::Remote { .. } => {
                         // Fine-grained remote stores: straight to the link.
                         let w = self.r.link_out.reserve(t, bytes);
+                        let lbl = SpanLabel::Chunk(p as u32);
+                        self.r.sink.span(Lane::LinkEgress, w.start, w.done, bytes, lbl);
                         self.r.q.schedule(w.done, Ev::EgressDone { pos: p as u32 });
                         self.seg_to_come[p] -= 1;
                         // The downstream neighbor paces the matching
@@ -483,6 +504,7 @@ impl FusedRank {
         for p in fired.drain(..) {
             if let ChunkMap::Dma { .. } = self.map.by_position[p] {
                 self.dma.mark_ready(p).expect("dma entry");
+                self.r.sink.instant(Lane::Tracker, t, InstantKind::Trigger(p as u32));
                 let bytes = self.chunk_bytes_at(p);
                 // DMA reads the (partially reduced) chunk via the comm
                 // stream; egress window in parallel (pipelined).
@@ -494,6 +516,8 @@ impl FusedRank {
                     GroupTag::DmaReads(p as u32),
                 );
                 let w = self.r.link_out.reserve(t, bytes);
+                let lbl = SpanLabel::Chunk(p as u32);
+                self.r.sink.span(Lane::LinkEgress, w.start, w.done, bytes, lbl);
                 self.r.q.schedule(w.done, Ev::EgressDone { pos: p as u32 });
                 let nxt = p + 1;
                 if nxt < self.n {
@@ -548,6 +572,8 @@ impl FusedRank {
                 };
                 if part > 0 {
                     self.ingress_left[p] -= part;
+                    let bytes = part * self.r.mem.txn_bytes();
+                    self.r.sink.span(Lane::LinkIngress, start, end, bytes, SpanLabel::Chunk(pos));
                     self.r.schedule_ingress_window(pos, part, start, end, PACE_BATCH);
                 }
             }
@@ -558,13 +584,15 @@ impl FusedRank {
                 self.ingress_left[p] = 0;
                 self.ingress_groups[p] =
                     self.r.register_group(txns, GroupTag::ChunkIngress(pos));
+                let bytes = txns * self.r.mem.txn_bytes();
+                self.r.sink.span(Lane::LinkIngress, start, end, bytes, SpanLabel::Chunk(pos));
                 self.r.schedule_ingress_window(pos, txns, start, end, PACE_BATCH);
             }
         }
     }
 
     /// Consume the drained rank into its result.
-    pub fn into_result(self) -> FusedResult {
+    pub fn into_result(mut self) -> FusedResult {
         debug_assert!(self.r.mem.idle());
         debug_assert!(self.dma.all_fired(), "not all DMA entries fired");
         debug_assert!(self.local_done.iter().all(|&d| d));
@@ -573,6 +601,8 @@ impl FusedRank {
         // by one stage's WFs plus the incoming chunk's tiles.
         let tracker_peak_tiles = self.plan.stage_wgs * self.plan.tiling.wfs_per_wg()
             + self.chunks.chunk_wf_tiles.iter().max().copied().unwrap_or(0);
+        let timeline = self.r.take_timeline(total);
+        let link_bytes = self.r.link_out.bytes_carried;
         let mut mem = self.r.mem;
         FusedResult {
             total,
@@ -582,6 +612,8 @@ impl FusedRank {
             counters: mem.counters,
             tracker_peak_tiles,
             trace: mem.trace.take(),
+            timeline,
+            link_bytes,
         }
     }
 }
@@ -597,7 +629,32 @@ pub fn run_fused_gemm_rs(
     devices: u64,
     opts: &FusedOpts,
 ) -> FusedResult {
+    run_fused_gemm_rs_opt(sys, plan, devices, opts, false)
+}
+
+/// [`run_fused_gemm_rs`] with timeline tracing enabled; the result's
+/// `timeline` carries the rank-0 trace. Every simulated quantity is
+/// bit-identical to the untraced run.
+pub fn run_fused_gemm_rs_traced(
+    sys: &SystemConfig,
+    plan: &StagePlan,
+    devices: u64,
+    opts: &FusedOpts,
+) -> FusedResult {
+    run_fused_gemm_rs_opt(sys, plan, devices, opts, true)
+}
+
+fn run_fused_gemm_rs_opt(
+    sys: &SystemConfig,
+    plan: &StagePlan,
+    devices: u64,
+    opts: &FusedOpts,
+    traced: bool,
+) -> FusedResult {
     let mut rank = FusedRank::new(sys, plan, devices, 0, opts, 1.0, sys.link.clone());
+    if traced {
+        rank.enable_trace(0);
+    }
     let mut msgs = Vec::new();
     while rank.step(&mut msgs) {
         for m in msgs.drain(..) {

@@ -14,6 +14,7 @@ use crate::hw::hbm::{TrafficClass, TxnKind};
 use crate::hw::mc::Stream;
 use crate::sim::stats::DramCounters;
 use crate::sim::time::SimTime;
+use crate::trace::{Lane, RankTrace, SpanLabel};
 
 use super::{Ev, GroupTag, Runner};
 
@@ -25,6 +26,10 @@ pub struct GemmRunResult {
     pub traffic: GemmTraffic,
     /// Per-stage end times (diagnostics / fused-engine validation).
     pub stage_ends: Vec<SimTime>,
+    /// Timeline trace (when the runner had tracing enabled). The stamped
+    /// end is the kernel's retirement (`time`), not the write-drain tail —
+    /// matching the result's composition semantics.
+    pub timeline: Option<RankTrace>,
 }
 
 /// Run one GEMM in isolation on `cus` compute units.
@@ -47,6 +52,32 @@ pub fn run_gemm_scaled(
     compute_scale: f64,
 ) -> GemmRunResult {
     let mut r = Runner::new(sys, ArbPolicy::ComputePriority);
+    run_gemm_on_scaled(&mut r, plan, cus, mode, compute_scale)
+}
+
+/// [`run_gemm`] with timeline tracing enabled (rank 0). Bit-identical to
+/// the untraced run in every simulated quantity.
+pub fn run_gemm_traced(
+    sys: &SystemConfig,
+    plan: &StagePlan,
+    cus: u32,
+    mode: WriteMode,
+) -> GemmRunResult {
+    run_gemm_scaled_traced(sys, plan, cus, mode, 1.0, 0)
+}
+
+/// [`run_gemm_scaled`] with timeline tracing enabled as rank `rank` (the
+/// cluster's per-rank skewed GEMMs).
+pub fn run_gemm_scaled_traced(
+    sys: &SystemConfig,
+    plan: &StagePlan,
+    cus: u32,
+    mode: WriteMode,
+    compute_scale: f64,
+    rank: u64,
+) -> GemmRunResult {
+    let mut r = Runner::new(sys, ArbPolicy::ComputePriority);
+    r.enable_trace(rank);
     run_gemm_on_scaled(&mut r, plan, cus, mode, compute_scale)
 }
 
@@ -116,6 +147,7 @@ fn run_gemm_on_scaled(
                     ct
                 };
                 let stall = blocked * gpu.stall_unhidden;
+                r.sink.span(Lane::CuCompute, t, t + ct + stall, 0, SpanLabel::Stage(s));
                 r.q.schedule_in(ct + stall, Ev::StageCompute(s));
             }
         }
@@ -140,6 +172,7 @@ fn run_gemm_on_scaled(
     debug_assert!(r.mem.idle());
     debug_assert_eq!(stage, plan.num_stages);
 
+    let timeline = r.take_timeline(last_stage_end);
     GemmRunResult {
         // The kernel completes when its last stage retires; the write
         // drain tail overlaps whatever follows.
@@ -147,6 +180,7 @@ fn run_gemm_on_scaled(
         counters: r.mem.counters,
         traffic,
         stage_ends,
+        timeline,
     }
 }
 

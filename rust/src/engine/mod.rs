@@ -46,6 +46,7 @@ use crate::hw::link::Link;
 use crate::hw::mc::Stream;
 use crate::sim::events::EventQueue;
 use crate::sim::time::SimTime;
+use crate::trace::TraceSink;
 
 /// Engine event type, shared by all run loops.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -109,6 +110,9 @@ pub struct Runner {
     pub mem: MemorySystem,
     pub q: EventQueue<Ev>,
     pub link_out: Link,
+    /// Timeline recorder (`t3::trace`); off by default — recording is
+    /// purely observational, so traced and untraced runs are bit-identical.
+    pub sink: TraceSink,
     tags: HashMap<GroupId, GroupTag>,
     completions: Vec<(GroupId, SimTime)>,
     ingress_pacers: HashMap<u32, Pacer>,
@@ -133,6 +137,7 @@ impl Runner {
             mem: MemorySystem::new(sys.mem.clone(), policy, sys.mca.clone()),
             q: EventQueue::new(),
             link_out: Link::new(link),
+            sink: TraceSink::off(),
             tags: HashMap::new(),
             completions: Vec::new(),
             ingress_pacers: HashMap::new(),
@@ -142,6 +147,24 @@ impl Runner {
 
     pub fn now(&self) -> SimTime {
         self.q.now()
+    }
+
+    /// Enable timeline tracing on this runner as rank `rank`: engine-side
+    /// spans go through [`Runner::sink`], DRAM service through the memory
+    /// system's coalescing lanes.
+    pub fn enable_trace(&mut self, rank: u64) {
+        self.sink = TraceSink::on(rank);
+        self.mem.enable_lane_trace();
+    }
+
+    /// Drain the recorded timeline (if tracing was enabled), folding in the
+    /// DRAM lane spans and stamping the phase's accounted `end`.
+    pub fn take_timeline(&mut self, end: SimTime) -> Option<crate::trace::RankTrace> {
+        let lanes = self.mem.take_lane_spans();
+        self.sink.finish(end).map(|mut t| {
+            t.spans.extend(lanes);
+            t
+        })
     }
 
     /// Submit `bytes` as a tagged burst; returns the number of txns.

@@ -37,15 +37,18 @@ pub use results::{Cell, EndToEnd, ResultSet};
 
 use crate::cluster::{self, AgClusterSpec, ClusterModel, Interleave, RingClusterSpec};
 use crate::config::{ArbPolicy, SystemConfig};
-use crate::engine::allgather::{run_fused_ag, ConsumerSpec};
-use crate::engine::collective_run::{run_ag_baseline, run_rs_baseline, run_rs_nmc, RingKind};
-use crate::engine::fused::{run_fused_gemm_rs, FusedOpts};
-use crate::engine::gemm_run::run_gemm;
+use crate::engine::allgather::{run_fused_ag, run_fused_ag_traced, ConsumerSpec};
+use crate::engine::collective_run::{
+    run_ag_baseline, run_ring_traced, run_rs_baseline, run_rs_nmc, RingKind,
+};
+use crate::engine::fused::{run_fused_gemm_rs, run_fused_gemm_rs_traced, FusedOpts};
+use crate::engine::gemm_run::{run_gemm, run_gemm_traced};
 use crate::gemm::traffic::WriteMode;
 use crate::gemm::{StagePlan, Tiling};
 use crate::models::{sublayer_gemm, ModelCfg, SubLayer};
 use crate::sim::stats::DramCounters;
 use crate::sim::time::SimTime;
+use crate::trace::{RankTrace, Trace};
 
 /// How the producer GEMM and the reduce-scatter are composed in time.
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
@@ -314,8 +317,38 @@ impl ScenarioSpec {
         tp: u64,
         sub: SubLayer,
     ) -> Measurement {
+        self.run_full(sys, model, tp, sub, false).0
+    }
+
+    /// [`ScenarioSpec::run`] with timeline capture (`t3::trace`): returns
+    /// the measurement — bit-identical to the untraced run, recording is
+    /// purely observational — plus the composed [`Trace`]: one rank for
+    /// the single-rank mirror path, `tp` ranks on the cluster path. Phase
+    /// traces compose exactly as the measurement arithmetic does:
+    /// serialized phases are shifted to their start, overlapped phases
+    /// merge in place, and triggered/cluster phases are already absolute,
+    /// so trace-derived totals equal the measurement's to the bit.
+    pub fn run_traced(
+        &self,
+        sys: &SystemConfig,
+        model: &ModelCfg,
+        tp: u64,
+        sub: SubLayer,
+    ) -> (Measurement, Trace) {
+        let (m, t) = self.run_full(sys, model, tp, sub, true);
+        (m, t.expect("run_full(traced=true) produces a trace"))
+    }
+
+    fn run_full(
+        &self,
+        sys: &SystemConfig,
+        model: &ModelCfg,
+        tp: u64,
+        sub: SubLayer,
+        traced: bool,
+    ) -> (Measurement, Option<Trace>) {
         if let Some(cm) = &self.cluster {
-            return self.run_cluster(sys, model, tp, sub, cm);
+            return self.run_cluster_full(sys, model, tp, sub, cm, traced);
         }
         let shape = sublayer_gemm(model, tp, sub);
         let plan = StagePlan::new(shape, Tiling::default(), &sys.gpu);
@@ -323,8 +356,18 @@ impl ScenarioSpec {
         let gemm_cus = self.gemm_cus.resolve(sys);
         let comm_cus = self.comm_cus.resolve(sys);
 
+        let run_g = |cus: u32| {
+            if traced {
+                run_gemm_traced(sys, &plan, cus, self.write_mode)
+            } else {
+                run_gemm(sys, &plan, cus, self.write_mode)
+            }
+        };
         let run_rs = |cus: u32| {
-            if self.rs_nmc {
+            if traced {
+                let kind = if self.rs_nmc { RingKind::RsNmc } else { RingKind::RsCu };
+                run_ring_traced(sys, ar_bytes, tp, cus, kind)
+            } else if self.rs_nmc {
                 run_rs_nmc(sys, ar_bytes, tp)
             } else {
                 run_rs_baseline(sys, ar_bytes, tp, cus)
@@ -333,67 +376,102 @@ impl ScenarioSpec {
 
         match self.overlap {
             OverlapMode::Serialized => {
-                let g = run_gemm(sys, &plan, gemm_cus, self.write_mode);
-                let rs = run_rs(comm_cus);
+                let mut g = run_g(gemm_cus);
+                let mut rs = run_rs(comm_cus);
                 let pre = g.time + rs.time;
-                let (ag_time, total, ag_counters) =
-                    self.compose_ag(sys, &plan, ar_bytes, tp, comm_cus, pre, pre);
+                let (ag_time, total, ag_counters, ag_tl) =
+                    self.compose_ag(sys, &plan, ar_bytes, tp, comm_cus, pre, pre, traced);
                 let mut counters = g.counters;
                 counters.add(&rs.counters);
                 counters.add(&ag_counters);
-                Measurement {
+                let m = Measurement {
                     gemm: g.time,
                     rs: rs.time,
                     ag: ag_time,
                     total,
                     counters,
-                }
+                };
+                let g_time = g.time;
+                let trace = traced.then(|| {
+                    let mut t0 = g.timeline.take().unwrap_or_else(|| RankTrace::new(0));
+                    // The RS runs after the GEMM: its trace shifts to the
+                    // GEMM's retirement, exactly as the total adds.
+                    if let Some(x) = rs.timeline.take() {
+                        t0.merge(x.shift(g_time));
+                    }
+                    if let Some(x) = ag_tl {
+                        t0.merge(x);
+                    }
+                    Trace::single(self.name.clone(), t0)
+                });
+                (m, trace)
             }
             OverlapMode::Ideal => {
-                let g = run_gemm(sys, &plan, gemm_cus, self.write_mode);
-                let rs = run_rs(comm_cus);
+                let mut g = run_g(gemm_cus);
+                let mut rs = run_rs(comm_cus);
                 let pre = g.time.max(rs.time);
-                let (ag_time, total, ag_counters) =
-                    self.compose_ag(sys, &plan, ar_bytes, tp, comm_cus, pre, pre);
+                let (ag_time, total, ag_counters, ag_tl) =
+                    self.compose_ag(sys, &plan, ar_bytes, tp, comm_cus, pre, pre, traced);
                 let mut counters = g.counters;
                 counters.add(&rs.counters);
                 counters.add(&ag_counters);
-                Measurement {
+                let m = Measurement {
                     gemm: g.time,
                     rs: rs.time,
                     ag: ag_time,
                     total,
                     counters,
-                }
+                };
+                let trace = traced.then(|| {
+                    let mut t0 = g.timeline.take().unwrap_or_else(|| RankTrace::new(0));
+                    // Ideal overlap: GEMM and RS run side by side from t=0.
+                    if let Some(x) = rs.timeline.take() {
+                        t0.merge(x);
+                    }
+                    if let Some(x) = ag_tl {
+                        t0.merge(x);
+                    }
+                    Trace::single(self.name.clone(), t0)
+                });
+                (m, trace)
             }
             OverlapMode::Fused => {
-                let fused = run_fused_gemm_rs(
-                    sys,
-                    &plan,
-                    tp,
-                    &FusedOpts {
-                        policy: self.policy,
-                        write_mode: self.write_mode,
-                        trace_bin: self.trace_bin,
-                    },
-                );
+                let opts = FusedOpts {
+                    policy: self.policy,
+                    write_mode: self.write_mode,
+                    trace_bin: self.trace_bin,
+                };
+                let mut fused = if traced {
+                    run_fused_gemm_rs_traced(sys, &plan, tp, &opts)
+                } else {
+                    run_fused_gemm_rs(sys, &plan, tp, &opts)
+                };
                 // The fused-AG trigger: the rank's own chunk is fully
                 // reduced and its egress port has drained the RS's
                 // remaining windows (the calendar-drain tail past the
                 // trigger is ingress-side only, so nothing is
                 // double-booked).
                 let trigger = fused.ag_trigger();
-                let (ag_time, total, ag_counters) =
-                    self.compose_ag(sys, &plan, ar_bytes, tp, comm_cus, fused.total, trigger);
+                let (ag_time, total, ag_counters, ag_tl) =
+                    self.compose_ag(sys, &plan, ar_bytes, tp, comm_cus, fused.total, trigger, traced);
                 let mut counters = fused.counters;
                 counters.add(&ag_counters);
-                Measurement {
+                let m = Measurement {
                     gemm: fused.gemm_time,
                     rs: fused.total - fused.gemm_time,
                     ag: ag_time,
                     total,
                     counters,
-                }
+                };
+                let trace = traced.then(|| {
+                    let mut t0 = fused.timeline.take().unwrap_or_else(|| RankTrace::new(0));
+                    // Triggered phases carry absolute times; merge in place.
+                    if let Some(x) = ag_tl {
+                        t0.merge(x);
+                    }
+                    Trace::single(self.name.clone(), t0)
+                });
+                (m, trace)
             }
         }
     }
@@ -416,7 +494,9 @@ impl ScenarioSpec {
     /// pre-AG phase fully drains; `trigger` is when the rank's own
     /// reduced chunk becomes available (== `pre_total` except for the
     /// fused engine, whose tracker fires before the drain). Returns
-    /// `(ag_time, total, ag_counters)`.
+    /// `(ag_time, total, ag_counters, ag_timeline)` — the timeline is
+    /// `Some` only when `traced`, shifted/absolute so it merges into the
+    /// scenario trace without further adjustment.
     #[allow(clippy::too_many_arguments)]
     fn compose_ag(
         &self,
@@ -427,18 +507,31 @@ impl ScenarioSpec {
         comm_cus: u32,
         pre_total: SimTime,
         trigger: SimTime,
-    ) -> (SimTime, SimTime, DramCounters) {
+        traced: bool,
+    ) -> (SimTime, SimTime, DramCounters, Option<RankTrace>) {
         match self.ag {
             AgMode::RingCu => {
-                let ag = run_ag_baseline(sys, ar_bytes, tp, comm_cus);
-                (ag.time, pre_total + ag.time, ag.counters)
+                let mut ag = if traced {
+                    run_ring_traced(sys, ar_bytes, tp, comm_cus, RingKind::AgCu)
+                } else {
+                    run_ag_baseline(sys, ar_bytes, tp, comm_cus)
+                };
+                // The serialized AG kernel launches at the pre-phase drain.
+                let tl = ag.timeline.take().map(|t| t.shift(pre_total));
+                (ag.time, pre_total + ag.time, ag.counters, tl)
             }
-            AgMode::Skip => (SimTime::ZERO, pre_total, DramCounters::default()),
+            AgMode::Skip => (SimTime::ZERO, pre_total, DramCounters::default(), None),
             AgMode::FusedTrigger | AgMode::OverlapConsumer => {
                 let consumer = self.ag_consumer_spec(plan);
-                let ag = run_fused_ag(sys, ar_bytes, tp, trigger, self.policy, consumer);
+                let mut ag = if traced {
+                    run_fused_ag_traced(sys, ar_bytes, tp, trigger, self.policy, consumer)
+                } else {
+                    run_fused_ag(sys, ar_bytes, tp, trigger, self.policy, consumer)
+                };
+                // The triggered AG already runs at absolute time.
+                let tl = ag.timeline.take();
                 let total = pre_total.max(ag.ag_done);
-                (total - pre_total, total, uncharge_consumer(ag.counters))
+                (total - pre_total, total, uncharge_consumer(ag.counters), tl)
             }
         }
     }
@@ -449,15 +542,18 @@ impl ScenarioSpec {
     /// measurement. Reported counters are rank 0's (uniform ranks are
     /// identical; per-rank detail is available through [`crate::cluster`]
     /// directly). The timing fields aggregate the worst rank, matching the
-    /// single-rank semantics when `cm` is uniform — bit-for-bit.
-    fn run_cluster(
+    /// single-rank semantics when `cm` is uniform — bit-for-bit. When
+    /// `traced`, per-rank phase traces merge without shifts: every cluster
+    /// rank machine carries its own absolute start offset.
+    fn run_cluster_full(
         &self,
         sys: &SystemConfig,
         model: &ModelCfg,
         tp: u64,
         sub: SubLayer,
         cm: &ClusterModel,
-    ) -> Measurement {
+        traced: bool,
+    ) -> (Measurement, Option<Trace>) {
         let shape = sublayer_gemm(model, tp, sub);
         let plan = StagePlan::new(shape, Tiling::default(), &sys.gpu);
         let ar_bytes = shape.out_bytes();
@@ -467,50 +563,79 @@ impl ScenarioSpec {
         let rs_kind = if self.rs_nmc { RingKind::RsNmc } else { RingKind::RsCu };
 
         let ring = |kind: RingKind, starts: Vec<SimTime>| {
-            cluster::run_ring_cluster(
-                sys,
-                &RingClusterSpec {
-                    bytes: ar_bytes,
-                    tp,
-                    cus: comm_cus,
-                    kind,
-                    starts,
-                },
-                cm,
-                order,
-            )
+            let spec = RingClusterSpec {
+                bytes: ar_bytes,
+                tp,
+                cus: comm_cus,
+                kind,
+                starts,
+            };
+            if traced {
+                cluster::run_ring_cluster_traced(sys, &spec, cm, order)
+            } else {
+                cluster::run_ring_cluster(sys, &spec, cm, order)
+            }
+        };
+        let gemm_cluster = || {
+            if traced {
+                cluster::run_gemm_cluster_traced(sys, &plan, gemm_cus, self.write_mode, tp, cm)
+            } else {
+                cluster::run_gemm_cluster(sys, &plan, gemm_cus, self.write_mode, tp, cm)
+            }
         };
 
         match self.overlap {
             OverlapMode::Serialized => {
-                let gemms =
-                    cluster::run_gemm_cluster(sys, &plan, gemm_cus, self.write_mode, tp, cm);
+                let mut gemms = gemm_cluster();
                 let gemm_end = gemms.iter().map(|g| g.time).max().unwrap();
-                let rs = ring(rs_kind, gemms.iter().map(|g| g.time).collect());
+                let mut rs = ring(rs_kind, gemms.iter().map(|g| g.time).collect());
                 let rs_end = rs.end();
                 // Each rank's AG (kernel or fused trigger) starts at its
                 // own RS end.
                 let rs_ends: Vec<SimTime> = rs.per_rank.iter().map(|r| r.time).collect();
-                let (ag_time, total, ag_counters) = self.compose_ag_cluster(
-                    sys, &plan, ar_bytes, tp, comm_cus, cm, order, rs_end, rs_ends,
+                let (ag_time, total, ag_counters, ag_tls) = self.compose_ag_cluster(
+                    sys, &plan, ar_bytes, tp, comm_cus, cm, order, rs_end, rs_ends, traced,
                 );
                 let mut counters = gemms[0].counters;
                 counters.add(&rs.per_rank[0].counters);
                 counters.add(&ag_counters);
-                Measurement {
+                let m = Measurement {
                     gemm: gemm_end,
                     rs: rs_end - gemm_end,
                     ag: ag_time,
                     total,
                     counters,
-                }
+                };
+                let trace = traced.then(|| {
+                    let mut ranks: Vec<RankTrace> = (0..tp as usize)
+                        .map(|r| {
+                            let mut t0 = gemms[r]
+                                .timeline
+                                .take()
+                                .unwrap_or_else(|| RankTrace::new(r as u64));
+                            if let Some(x) = rs.per_rank[r].timeline.take() {
+                                t0.merge(x);
+                            }
+                            t0
+                        })
+                        .collect();
+                    if let Some(tls) = ag_tls {
+                        for (r, x) in tls.into_iter().enumerate() {
+                            ranks[r].merge(x);
+                        }
+                    }
+                    Trace {
+                        name: self.name.clone(),
+                        ranks,
+                    }
+                });
+                (m, trace)
             }
             OverlapMode::Ideal => {
-                let gemms =
-                    cluster::run_gemm_cluster(sys, &plan, gemm_cus, self.write_mode, tp, cm);
+                let mut gemms = gemm_cluster();
                 let gemm_end = gemms.iter().map(|g| g.time).max().unwrap();
                 // Ideal overlap: the collective runs unconstrained from t=0.
-                let rs = ring(rs_kind, vec![SimTime::ZERO; tp as usize]);
+                let mut rs = ring(rs_kind, vec![SimTime::ZERO; tp as usize]);
                 let rs_iso = rs.per_rank.iter().map(|r| r.time).max().unwrap();
                 let ideal_ends: Vec<SimTime> = gemms
                     .iter()
@@ -518,33 +643,55 @@ impl ScenarioSpec {
                     .map(|(g, r)| g.time.max(r.time))
                     .collect();
                 let ideal_end = ideal_ends.iter().copied().max().unwrap();
-                let (ag_time, total, ag_counters) = self.compose_ag_cluster(
-                    sys, &plan, ar_bytes, tp, comm_cus, cm, order, ideal_end, ideal_ends,
+                let (ag_time, total, ag_counters, ag_tls) = self.compose_ag_cluster(
+                    sys, &plan, ar_bytes, tp, comm_cus, cm, order, ideal_end, ideal_ends, traced,
                 );
                 let mut counters = gemms[0].counters;
                 counters.add(&rs.per_rank[0].counters);
                 counters.add(&ag_counters);
-                Measurement {
+                let m = Measurement {
                     gemm: gemm_end,
                     rs: rs_iso,
                     ag: ag_time,
                     total,
                     counters,
-                }
+                };
+                let trace = traced.then(|| {
+                    let mut ranks: Vec<RankTrace> = (0..tp as usize)
+                        .map(|r| {
+                            let mut t0 = gemms[r]
+                                .timeline
+                                .take()
+                                .unwrap_or_else(|| RankTrace::new(r as u64));
+                            if let Some(x) = rs.per_rank[r].timeline.take() {
+                                t0.merge(x);
+                            }
+                            t0
+                        })
+                        .collect();
+                    if let Some(tls) = ag_tls {
+                        for (r, x) in tls.into_iter().enumerate() {
+                            ranks[r].merge(x);
+                        }
+                    }
+                    Trace {
+                        name: self.name.clone(),
+                        ranks,
+                    }
+                });
+                (m, trace)
             }
             OverlapMode::Fused => {
-                let fused = cluster::run_fused_cluster(
-                    sys,
-                    &plan,
-                    tp,
-                    &FusedOpts {
-                        policy: self.policy,
-                        write_mode: self.write_mode,
-                        trace_bin: self.trace_bin,
-                    },
-                    cm,
-                    order,
-                );
+                let opts = FusedOpts {
+                    policy: self.policy,
+                    write_mode: self.write_mode,
+                    trace_bin: self.trace_bin,
+                };
+                let mut fused = if traced {
+                    cluster::run_fused_cluster_traced(sys, &plan, tp, &opts, cm, order)
+                } else {
+                    cluster::run_fused_cluster(sys, &plan, tp, &opts, cm, order)
+                };
                 let fused_end = fused.total();
                 let gemm_end = fused.gemm_time();
                 // Per-rank AG starts: the CU kernel launches after the
@@ -556,18 +703,38 @@ impl ScenarioSpec {
                         fused.per_rank.iter().map(|r| r.total).collect()
                     }
                 };
-                let (ag_time, total, ag_counters) = self.compose_ag_cluster(
-                    sys, &plan, ar_bytes, tp, comm_cus, cm, order, fused_end, starts,
+                let (ag_time, total, ag_counters, ag_tls) = self.compose_ag_cluster(
+                    sys, &plan, ar_bytes, tp, comm_cus, cm, order, fused_end, starts, traced,
                 );
                 let mut counters = fused.per_rank[0].counters;
                 counters.add(&ag_counters);
-                Measurement {
+                let m = Measurement {
                     gemm: gemm_end,
                     rs: fused_end - gemm_end,
                     ag: ag_time,
                     total,
                     counters,
-                }
+                };
+                let trace = traced.then(|| {
+                    let mut ranks: Vec<RankTrace> = (0..tp as usize)
+                        .map(|r| {
+                            fused.per_rank[r]
+                                .timeline
+                                .take()
+                                .unwrap_or_else(|| RankTrace::new(r as u64))
+                        })
+                        .collect();
+                    if let Some(tls) = ag_tls {
+                        for (r, x) in tls.into_iter().enumerate() {
+                            ranks[r].merge(x);
+                        }
+                    }
+                    Trace {
+                        name: self.name.clone(),
+                        ranks,
+                    }
+                });
+                (m, trace)
             }
         }
     }
@@ -576,9 +743,10 @@ impl ScenarioSpec {
     /// are the per-rank AG launch times — kernel launches for
     /// [`AgMode::RingCu`], fused-AG trigger times (each rank's reduced
     /// chunk becoming available) for the fused modes; unused by
-    /// [`AgMode::Skip`]. Returns `(ag_time, total, ag_counters)`;
-    /// counters are rank 0's, matching the cluster measurement
-    /// convention.
+    /// [`AgMode::Skip`]. Returns `(ag_time, total, ag_counters,
+    /// ag_timelines)` — timelines (one per rank, `Some` only when
+    /// `traced`) carry absolute times and merge without shifts; counters
+    /// are rank 0's, matching the cluster measurement convention.
     #[allow(clippy::too_many_arguments)]
     fn compose_ag_cluster(
         &self,
@@ -591,40 +759,59 @@ impl ScenarioSpec {
         order: Interleave,
         pre_total: SimTime,
         starts: Vec<SimTime>,
-    ) -> (SimTime, SimTime, DramCounters) {
+        traced: bool,
+    ) -> (SimTime, SimTime, DramCounters, Option<Vec<RankTrace>>) {
         match self.ag {
             AgMode::RingCu => {
-                let ag = cluster::run_ring_cluster(
-                    sys,
-                    &RingClusterSpec {
-                        bytes: ar_bytes,
-                        tp,
-                        cus: comm_cus,
-                        kind: RingKind::AgCu,
-                        starts,
-                    },
-                    cm,
-                    order,
-                );
+                let spec = RingClusterSpec {
+                    bytes: ar_bytes,
+                    tp,
+                    cus: comm_cus,
+                    kind: RingKind::AgCu,
+                    starts,
+                };
+                let mut ag = if traced {
+                    cluster::run_ring_cluster_traced(sys, &spec, cm, order)
+                } else {
+                    cluster::run_ring_cluster(sys, &spec, cm, order)
+                };
                 let end = ag.end();
-                (end - pre_total, end, ag.per_rank[0].counters)
+                let tls = traced.then(|| {
+                    ag.per_rank
+                        .iter_mut()
+                        .enumerate()
+                        .map(|(r, x)| {
+                            x.timeline.take().unwrap_or_else(|| RankTrace::new(r as u64))
+                        })
+                        .collect::<Vec<RankTrace>>()
+                });
+                (end - pre_total, end, ag.per_rank[0].counters, tls)
             }
-            AgMode::Skip => (SimTime::ZERO, pre_total, DramCounters::default()),
+            AgMode::Skip => (SimTime::ZERO, pre_total, DramCounters::default(), None),
             AgMode::FusedTrigger | AgMode::OverlapConsumer => {
-                let ag = cluster::run_ag_cluster(
-                    sys,
-                    &AgClusterSpec {
-                        bytes: ar_bytes,
-                        tp,
-                        starts,
-                        policy: self.policy,
-                        consumer: self.ag_consumer_spec(plan),
-                    },
-                    cm,
-                    order,
-                );
+                let spec = AgClusterSpec {
+                    bytes: ar_bytes,
+                    tp,
+                    starts,
+                    policy: self.policy,
+                    consumer: self.ag_consumer_spec(plan),
+                };
+                let mut ag = if traced {
+                    cluster::run_ag_cluster_traced(sys, &spec, cm, order)
+                } else {
+                    cluster::run_ag_cluster(sys, &spec, cm, order)
+                };
                 let end = pre_total.max(ag.end());
-                (end - pre_total, end, uncharge_consumer(ag.per_rank[0].counters))
+                let tls = traced.then(|| {
+                    ag.per_rank
+                        .iter_mut()
+                        .enumerate()
+                        .map(|(r, x)| {
+                            x.timeline.take().unwrap_or_else(|| RankTrace::new(r as u64))
+                        })
+                        .collect::<Vec<RankTrace>>()
+                });
+                (end - pre_total, end, uncharge_consumer(ag.per_rank[0].counters), tls)
             }
         }
     }

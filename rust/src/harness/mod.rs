@@ -128,6 +128,36 @@ impl Table {
         out
     }
 
+    /// Machine-readable rendering: the table as a JSON object (shares the
+    /// hand-rolled writer with the Perfetto trace exporter — std-only).
+    pub fn to_json(&self) -> String {
+        let mut w = crate::trace::json::JsonWriter::new();
+        w.begin_obj();
+        w.key("id").str_val(&self.id);
+        w.key("title").str_val(&self.title);
+        w.key("headers").begin_arr();
+        for h in &self.headers {
+            w.str_val(h);
+        }
+        w.end_arr();
+        w.key("rows").begin_arr();
+        for row in &self.rows {
+            w.begin_arr();
+            for c in row {
+                w.str_val(c);
+            }
+            w.end_arr();
+        }
+        w.end_arr();
+        w.key("notes").begin_arr();
+        for n in &self.notes {
+            w.str_val(n);
+        }
+        w.end_arr();
+        w.end_obj();
+        w.finish()
+    }
+
     /// Write as CSV into `dir/<id>.csv`.
     pub fn write_csv(&self, dir: impl AsRef<Path>) -> std::io::Result<std::path::PathBuf> {
         std::fs::create_dir_all(dir.as_ref())?;
@@ -841,6 +871,96 @@ pub fn cluster_report(
     t
 }
 
+// ---------------------------------------------------------------------
+// Trace views — summaries over `t3::trace` timelines (t3 trace).
+// ---------------------------------------------------------------------
+
+/// Per-rank summary of a captured timeline: trace-derived overlap,
+/// exposed-communication tail, lane occupancy, and the critical-path
+/// classification (the `t3 trace` report).
+pub fn trace_report(trace: &crate::trace::Trace) -> Table {
+    use crate::trace::Lane;
+    let m = trace.metrics();
+    let mut t = Table::new(
+        "trace",
+        &format!("{} — trace-derived overlap metrics", trace.name),
+        &[
+            "rank",
+            "end ms",
+            "gemm end ms",
+            "exposed ms",
+            "overlap %",
+            "egress busy ms",
+            "ingress busy ms",
+            "dram busy ms",
+            "dram GB",
+            "critical path",
+        ],
+    );
+    for r in &m.per_rank {
+        let dram_busy = r.lane(Lane::DramCompute).busy + r.lane(Lane::DramComm).busy;
+        let dram_gb =
+            (r.lane(Lane::DramCompute).bytes + r.lane(Lane::DramComm).bytes) as f64 / 1e9;
+        t.row(vec![
+            r.rank.to_string(),
+            ms(r.end),
+            ms(r.gemm_end),
+            ms(r.exposed_comm),
+            format!("{:.1}", r.overlap_fraction * 100.0),
+            ms(r.lane(Lane::LinkEgress).busy),
+            ms(r.lane(Lane::LinkIngress).busy),
+            ms(dram_busy),
+            format!("{dram_gb:.2}"),
+            r.critical.kind.name().to_string(),
+        ]);
+    }
+    t.note(format!(
+        "group overlap fraction {:.1}% — |(cu-compute ∪ cu-consumer) ∩ link-egress| / |link-egress| summed over ranks",
+        m.overlap_fraction * 100.0
+    ));
+    t.note(format!(
+        "exposed communication {} ms = trace end {} ms − gemm envelope {} ms (exact SimTime arithmetic)",
+        ms(m.exposed_comm),
+        ms(m.end),
+        ms(m.gemm_end)
+    ));
+    t.note(format!(
+        "{} spans, {} instants across {} rank(s); export with `t3 trace <preset> --out trace.json` and open in ui.perfetto.dev",
+        trace.span_count(),
+        trace.instant_count(),
+        trace.ranks.len()
+    ));
+    t
+}
+
+/// Structural diff of two traces (`t3 trace <preset> --diff <other>`).
+pub fn trace_diff_report(d: &crate::trace::TraceDiff) -> Table {
+    let mut t = Table::new(
+        "trace_diff",
+        &format!("trace diff: {} vs {}", d.a, d.b),
+        &["metric", &format!("{} (a)", d.a), &format!("{} (b)", d.b), "delta"],
+    );
+    for row in &d.rows {
+        let fmt = |v: f64| {
+            if row.unit.is_empty() {
+                format!("{v:.0}")
+            } else {
+                format!("{v:.3} {}", row.unit)
+            }
+        };
+        t.row(vec![
+            row.metric.clone(),
+            fmt(row.a),
+            fmt(row.b),
+            match row.delta_pct() {
+                Some(p) => format!("{p:+.1}%"),
+                None => "-".to_string(),
+            },
+        ]);
+    }
+    t
+}
+
 /// Table 1 / Table 2 dumps.
 pub fn table1(sys: &SystemConfig) -> String {
     sys.describe()
@@ -893,6 +1013,18 @@ mod tests {
         let p = t.write_csv(&dir).unwrap();
         let s = std::fs::read_to_string(p).unwrap();
         assert_eq!(s, "a,b\n1,2\n");
+    }
+
+    #[test]
+    fn table_to_json_escapes_and_structures() {
+        let mut t = Table::new("j", "quote \" test", &["a", "b"]);
+        t.row(vec!["1".into(), "x\ny".into()]);
+        t.note("n1");
+        let j = t.to_json();
+        assert_eq!(
+            j,
+            r#"{"id":"j","title":"quote \" test","headers":["a","b"],"rows":[["1","x\ny"]],"notes":["n1"]}"#
+        );
     }
 
     #[test]

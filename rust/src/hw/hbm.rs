@@ -127,6 +127,9 @@ pub struct MemorySystem {
     completions: Vec<(GroupId, SimTime)>,
     pub counters: DramCounters,
     pub trace: Option<TrafficTrace>,
+    /// Coalesced DRAM-service timeline lanes (`t3::trace`); `None` (the
+    /// default) costs one branch per serviced transaction.
+    pub lanes: Option<Box<crate::trace::DramLanes>>,
 }
 
 impl MemorySystem {
@@ -148,7 +151,22 @@ impl MemorySystem {
             completions: Vec::new(),
             counters: DramCounters::default(),
             trace: None,
+            lanes: None,
         }
+    }
+
+    /// Record coalesced DRAM-service spans per stream (the `t3::trace`
+    /// timeline lanes). The merge gap is a few tens of service slots: fine
+    /// enough to preserve macro structure, coarse enough that a
+    /// multi-million-transaction run stays a few hundred spans.
+    pub fn enable_lane_trace(&mut self) {
+        self.lanes = Some(Box::new(crate::trace::DramLanes::new(self.service_plain * 32)));
+    }
+
+    /// Drain the recorded DRAM lane spans (empty when lane tracing was
+    /// never enabled).
+    pub fn take_lane_spans(&mut self) -> Vec<crate::trace::Span> {
+        self.lanes.take().map(|l| l.into_spans()).unwrap_or_default()
     }
 
     pub fn policy(&self) -> ArbPolicy {
@@ -325,6 +343,14 @@ impl MemorySystem {
                 (Stream::Comm, TxnKind::Read) => trace.comm_reads.add(now, bytes),
                 (Stream::Comm, _) => trace.comm_writes.add(now, bytes),
             }
+        }
+        if let Some(lanes) = &mut self.lanes {
+            let service = if txn.kind == TxnKind::NmcUpdate {
+                self.service_nmc
+            } else {
+                self.service_plain
+            };
+            lanes.on_service(txn.stream, now, service, b);
         }
     }
 

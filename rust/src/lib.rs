@@ -11,6 +11,11 @@
 //!   event-driven node with per-edge links, supporting rank skew,
 //!   stragglers, and two-tier topologies; its uniform configuration
 //!   reproduces the single-rank mirror engine bit-for-bit;
+//! * the [`trace`] subsystem — deterministic, zero-cost-when-off timeline
+//!   capture on per-rank resource lanes, threaded through every engine:
+//!   Chrome/Perfetto export, trace-derived overlap / exposed-communication
+//!   / critical-path metrics, structural trace diffs, and the invariant
+//!   checkers behind the property tests;
 //! * the T3 mechanisms: the [`tracker`] at the memory controller, the
 //!   producer output [`addrspace`] configuration, near-memory-compute DRAM
 //!   semantics and the MCA arbitration policy ([`hw::mc`]);
@@ -44,6 +49,7 @@ pub mod harness;
 pub mod hw;
 pub mod sim;
 pub mod testkit;
+pub mod trace;
 pub mod tracker;
 pub mod engine;
 pub mod exec;

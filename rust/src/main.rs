@@ -11,7 +11,9 @@
 //!               [--scenarios s1,s2] [--future] [--threads n] [--csv dir]
 //! t3 cluster    [--model <name>] [--tp <n>] [--sublayer <s>] [--scenario <s>]
 //!               [--skew straggler:R:F|jitter:A] [--nodes g] [--inter-bw f] [--inter-lat-ns n]
-//!               [--ag ring|skip|fused|consumer]
+//!               [--ag ring|skip|fused|consumer] [--json] [--trace] [--out file.json]
+//! t3 trace      <preset> [--model <name>] [--tp <n>] [--sublayer <s>]
+//!               [--out file.json] [--diff other-preset] [--json]
 //! t3 figure     <4|6|14|15|16|17|18|19|20|table2|table3> [--csv <dir>]
 //! t3 sweep      --model <name> [--tps 4,8,16,32]
 //! t3 validate             (tracker/functional-collective cross-checks)
@@ -82,22 +84,51 @@ fn scenarios_from(s: &str) -> std::result::Result<Vec<ScenarioSpec>, String> {
     Ok(out)
 }
 
-const USAGE: &str = "t3 <config|models|scenarios|simulate|experiment|cluster|figure|sweep|validate|run> [flags]
+const USAGE: &str = "t3 <config|models|scenarios|simulate|experiment|cluster|trace|figure|sweep|validate|run> [flags]
   t3 config [--future]
   t3 models --list
   t3 scenarios
-  t3 simulate --model T-NLG --tp 8 --sublayer fc2 [--scenario t3-mca]
+  t3 simulate --model T-NLG --tp 8 --sublayer fc2 [--scenario t3-mca] [--trace] [--out trace.json]
   t3 experiment [--models Mega-GPT-2,T-NLG] [--tps 8,16] [--sublayers op,fc2,fc1,ip]
                 [--scenarios sequential,t3-mca,ideal-72-8,straggler] [--future] [--threads N]
-                [--baseline Sequential] [--csv results]
+                [--baseline Sequential] [--csv results] [--json]
   t3 cluster [--model T-NLG] [--tp 8] [--sublayer fc2] [--scenario t3-mca]
              [--skew none|straggler:RANK:FACTOR|jitter:AMPLITUDE]
              [--nodes G] [--inter-bw FRAC] [--inter-lat-ns NS]
-             [--ag ring|skip|fused|consumer]
+             [--ag ring|skip|fused|consumer] [--json] [--trace] [--out trace.json]
+  t3 trace <preset> [--model T-NLG] [--tp 8] [--sublayer fc2]
+           [--out trace.json] [--diff other-preset] [--json]
   t3 figure <4|6|14|15|16|17|18|19|20|table2|table3|ablation> [--csv results]
   t3 sweep --model T-NLG [--tps 4,8,16]
   t3 validate
   t3 run [--artifacts artifacts]";
+
+/// Export a Perfetto trace to `path`. No parent directories are created:
+/// an unwritable destination is a user error surfaced as `Err`. Status
+/// goes to stderr so `--json` stdout stays machine-readable.
+fn write_trace(trace: &t3::trace::Trace, path: &str) -> std::result::Result<(), String> {
+    let json = t3::trace::perfetto::export(trace);
+    std::fs::write(path, &json).map_err(|e| format!("failed to write trace to {path}: {e}"))?;
+    eprintln!(
+        "perfetto trace written to {path} ({} spans, {} instants, {} bytes) — open in ui.perfetto.dev",
+        trace.span_count(),
+        trace.instant_count(),
+        json.len()
+    );
+    Ok(())
+}
+
+/// One top-level JSON object from named report parts (every `--json`
+/// surface emits exactly one JSON document on stdout).
+fn json_bundle(parts: &[(&str, &harness::Table)]) -> String {
+    let mut w = t3::trace::json::JsonWriter::new();
+    w.begin_obj();
+    for (key, table) in parts {
+        w.key(key).raw_val(&table.to_json());
+    }
+    w.end_obj();
+    w.finish()
+}
 
 /// Parse a `--skew` specification: `none`, `straggler:RANK:FACTOR`, or
 /// `jitter:AMPLITUDE`.
@@ -219,6 +250,30 @@ fn main() -> ExitCode {
                     c.m.counters.total() as f64 / 1e9
                 );
             }
+            // Timeline capture: re-run the requested scenario (T3-MCA when
+            // none was named) traced, print the span-derived report, and
+            // optionally export a Perfetto JSON.
+            if flags.contains_key("trace") || flags.contains_key("out") {
+                let sc = match flags.get("scenario") {
+                    // `--scenario` accepts a comma-separated list (each
+                    // entry validated above); trace the last one named.
+                    Some(s) => s
+                        .split(',')
+                        .filter(|x| !x.is_empty())
+                        .next_back()
+                        .and_then(experiment::preset)
+                        .expect("scenario list validated above"),
+                    None => ScenarioSpec::t3_mca(),
+                };
+                let (_tm, trace) = sc.run_traced(&SystemConfig::table1(), &m, tp, sub);
+                println!("{}", harness::trace_report(&trace).render());
+                if let Some(path) = flags.get("out") {
+                    if let Err(e) = write_trace(&trace, path) {
+                        eprintln!("{e}");
+                        return ExitCode::FAILURE;
+                    }
+                }
+            }
             ExitCode::SUCCESS
         }
         "experiment" => {
@@ -309,14 +364,28 @@ fn main() -> ExitCode {
                 &format!("{} ({} cells)", rs.experiment, rs.cells.len()),
                 Some(&baseline),
             );
-            println!("{}", t.render());
-            println!(
-                "[experiment] {} cells in {:.2}s",
-                rs.cells.len(),
-                started.elapsed().as_secs_f64()
-            );
+            if flags.contains_key("json") {
+                // Machine-readable: JSON on stdout, timing on stderr.
+                println!("{}", t.to_json());
+                eprintln!(
+                    "[experiment] {} cells in {:.2}s",
+                    rs.cells.len(),
+                    started.elapsed().as_secs_f64()
+                );
+            } else {
+                println!("{}", t.render());
+                println!(
+                    "[experiment] {} cells in {:.2}s",
+                    rs.cells.len(),
+                    started.elapsed().as_secs_f64()
+                );
+            }
             if let Some(dir) = flags.get("csv") {
                 match t.write_csv(dir) {
+                    // Status to stderr under --json: stdout is one document.
+                    Ok(p) if flags.contains_key("json") => {
+                        eprintln!("  (csv: {})", p.display())
+                    }
                     Ok(p) => println!("  (csv: {})", p.display()),
                     Err(e) => eprintln!("  csv write failed: {e}"),
                 }
@@ -425,7 +494,109 @@ fn main() -> ExitCode {
                 return ExitCode::FAILURE;
             }
             let sys = SystemConfig::table1();
-            println!("{}", harness::cluster_report(&sys, &m, tp, sub, &scenario, &cm).render());
+            let report = harness::cluster_report(&sys, &m, tp, sub, &scenario, &cm);
+            // Timeline capture over the same cluster: per-rank trace report
+            // plus optional Perfetto export.
+            let traced = (flags.contains_key("trace") || flags.contains_key("out")).then(|| {
+                let traced_scenario = scenario.clone().cluster(cm.clone());
+                traced_scenario.run_traced(&sys, &m, tp, sub).1
+            });
+            let json = flags.contains_key("json");
+            match &traced {
+                Some(trace) => {
+                    let tr = harness::trace_report(trace);
+                    if json {
+                        // One JSON document even when both parts are shown.
+                        println!("{}", json_bundle(&[("report", &report), ("trace", &tr)]));
+                    } else {
+                        println!("{}", report.render());
+                        println!("{}", tr.render());
+                    }
+                }
+                None if json => println!("{}", report.to_json()),
+                None => println!("{}", report.render()),
+            }
+            if let Some(trace) = &traced {
+                if let Some(path) = flags.get("out") {
+                    if let Err(e) = write_trace(trace, path) {
+                        eprintln!("{e}");
+                        return ExitCode::FAILURE;
+                    }
+                }
+            }
+            ExitCode::SUCCESS
+        }
+        "trace" => {
+            let Some(which) = pos.first() else {
+                eprintln!("which preset? see `t3 scenarios`\n{USAGE}");
+                return ExitCode::FAILURE;
+            };
+            let Some(scenario) = experiment::preset(which) else {
+                eprintln!("unknown scenario '{which}'; see `t3 scenarios`");
+                return ExitCode::FAILURE;
+            };
+            let model = flags.get("model").map(String::as_str).unwrap_or("T-NLG");
+            let Some(m) = by_name(model) else {
+                eprintln!("unknown model {model}; try `t3 models --list`");
+                return ExitCode::FAILURE;
+            };
+            let tp: u64 = flags.get("tp").and_then(|s| s.parse().ok()).unwrap_or(8);
+            if tp < 2 || m.hidden % tp != 0 {
+                eprintln!(
+                    "TP={tp} is not valid for {} (needs TP >= 2 dividing H={})",
+                    m.name, m.hidden
+                );
+                return ExitCode::FAILURE;
+            }
+            let Some(sub) =
+                sublayer_from(flags.get("sublayer").map(String::as_str).unwrap_or("fc2"))
+            else {
+                eprintln!("unknown sublayer (op|fc2|fc1|ip)");
+                return ExitCode::FAILURE;
+            };
+            let sys = SystemConfig::table1();
+            let (meas, trace) = scenario.run_traced(&sys, &m, tp, sub);
+            let report = harness::trace_report(&trace);
+            let diff_table = match flags.get("diff") {
+                Some(other) => {
+                    let Some(other_sc) = experiment::preset(other) else {
+                        eprintln!("unknown --diff scenario '{other}'; see `t3 scenarios`");
+                        return ExitCode::FAILURE;
+                    };
+                    let (_m2, other_trace) = other_sc.run_traced(&sys, &m, tp, sub);
+                    let d = t3::trace::diff(&trace, &other_trace);
+                    Some(harness::trace_diff_report(&d))
+                }
+                None => None,
+            };
+            if flags.contains_key("json") {
+                // One JSON document regardless of the flag combination.
+                match &diff_table {
+                    Some(dt) => println!("{}", json_bundle(&[("report", &report), ("diff", dt)])),
+                    None => println!("{}", report.to_json()),
+                }
+            } else {
+                println!("{}", report.render());
+                println!(
+                    "[trace] {} on {} TP={tp} {}: total {:.3}ms (gemm {:.3}ms, rs {:.3}ms, ag {:.3}ms)",
+                    scenario.name,
+                    m.name,
+                    sub.name(),
+                    meas.total.as_ms_f64(),
+                    meas.gemm.as_ms_f64(),
+                    meas.rs.as_ms_f64(),
+                    meas.ag.as_ms_f64()
+                );
+                if let Some(dt) = &diff_table {
+                    println!("{}", dt.render());
+                }
+            }
+            if let Some(path) = flags.get("out") {
+                if let Err(e) = write_trace(&trace, path) {
+                    eprintln!("{e}");
+                    return ExitCode::FAILURE;
+                }
+            }
             ExitCode::SUCCESS
         }
         "figure" => {

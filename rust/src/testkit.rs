@@ -23,6 +23,14 @@
 
 use crate::sim::rng::Rng;
 
+// Trace-derived invariant checkers (see `crate::trace::check`): structural
+// assertions over recorded timelines, re-exported here so property tests
+// pull everything from one place.
+pub use crate::trace::check::{
+    check_dram_bytes_reconcile, check_egress_bytes, check_lane_spans_disjoint,
+    check_triggers_after_tracker, EXCLUSIVE_LANES, LINK_LANES,
+};
+
 /// Base seed; override with `T3_PROP_SEED` to explore other corners.
 fn base_seed() -> u64 {
     std::env::var("T3_PROP_SEED")
@@ -65,6 +73,39 @@ pub fn forall(cases: u32, f: impl Fn(&mut Rng)) {
 pub fn replay(seed: u64, mut f: impl FnMut(&mut Rng)) {
     let mut rng = Rng::new(seed);
     f(&mut rng);
+}
+
+/// Structural JSON validity scan: balanced braces/brackets outside string
+/// literals, nothing left open. The cheap stand-in for a full parse (no
+/// serde in the offline dependency closure) shared by the trace exporter
+/// tests and the CLI smoke tests; CI additionally validates exported
+/// traces with a real JSON parser.
+pub fn json_balanced(s: &str) -> bool {
+    let (mut depth, mut in_str, mut esc) = (0i64, false, false);
+    for c in s.chars() {
+        if in_str {
+            if esc {
+                esc = false;
+            } else if c == '\\' {
+                esc = true;
+            } else if c == '"' {
+                in_str = false;
+            }
+            continue;
+        }
+        match c {
+            '"' => in_str = true,
+            '{' | '[' => depth += 1,
+            '}' | ']' => {
+                depth -= 1;
+                if depth < 0 {
+                    return false;
+                }
+            }
+            _ => {}
+        }
+    }
+    depth == 0 && !in_str
 }
 
 /// Generate a sorted, deduplicated vector of `n` values in `[lo, hi)` —

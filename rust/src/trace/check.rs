@@ -1,0 +1,193 @@
+//! Trace-derived invariant checkers, re-exported through
+//! [`crate::testkit`] for the property-test pass.
+//!
+//! These turn claims previously asserted indirectly (wall-clock
+//! inequalities, counter bounds) into direct structural checks over the
+//! recorded timeline:
+//!
+//! * [`check_lane_spans_disjoint`] — a physical resource services one
+//!   thing at a time: no lane's spans may self-overlap. Applies in full to
+//!   engine-produced (single-machine) traces; composed scenario traces
+//!   check the *link* lanes ([`LINK_LANES`]), where disjointness is a real
+//!   physical claim across phases — the PR-3 RS→AG handoff contract (the
+//!   fused AG never double-books the link the RS is still draining) checked
+//!   directly on the merged timeline.
+//! * [`check_dram_bytes_reconcile`] / [`check_egress_bytes`] — the trace
+//!   tells the truth about traffic: per-lane byte sums equal the DRAM
+//!   counters and the link's carried-byte total exactly.
+//! * [`check_triggers_after_tracker`] — causality of track-and-trigger:
+//!   no DMA trigger instant precedes its position's tracker completion.
+
+use super::{InstantKind, Lane, RankTrace};
+use crate::sim::stats::DramCounters;
+
+/// Lanes whose spans represent exclusive resource occupancy in a single
+/// engine run (everything but the instant-only tracker lane).
+pub const EXCLUSIVE_LANES: [Lane; 6] = [
+    Lane::CuCompute,
+    Lane::CuConsumer,
+    Lane::DramCompute,
+    Lane::DramComm,
+    Lane::LinkEgress,
+    Lane::LinkIngress,
+];
+
+/// The physical link lanes: disjointness must survive phase composition
+/// (fused RS + triggered AG share the same physical edge).
+pub const LINK_LANES: [Lane; 2] = [Lane::LinkEgress, Lane::LinkIngress];
+
+/// No span on any of `lanes` overlaps another span of the same lane.
+pub fn check_lane_spans_disjoint(t: &RankTrace, lanes: &[Lane]) -> Result<(), String> {
+    for &lane in lanes {
+        let mut spans: Vec<(u64, u64)> = t
+            .lane_spans(lane)
+            .map(|s| (s.start.as_ps(), s.end.as_ps()))
+            .collect();
+        spans.sort_unstable();
+        for w in spans.windows(2) {
+            if w[1].0 < w[0].1 {
+                return Err(format!(
+                    "rank {}: lane {} double-booked: [{}, {}) overlaps [{}, {}) (ps)",
+                    t.rank,
+                    lane.name(),
+                    w[0].0,
+                    w[0].1,
+                    w[1].0,
+                    w[1].1
+                ));
+            }
+        }
+    }
+    Ok(())
+}
+
+/// The DRAM lanes' byte sums equal the run's [`DramCounters`] total
+/// exactly (same per-transaction accounting hook, so any divergence is a
+/// recording bug).
+pub fn check_dram_bytes_reconcile(t: &RankTrace, counters: &DramCounters) -> Result<(), String> {
+    let got = t.lane_bytes(Lane::DramCompute) + t.lane_bytes(Lane::DramComm);
+    let want = counters.total();
+    if got != want {
+        return Err(format!(
+            "rank {}: DRAM lane bytes {got} != counters total {want}",
+            t.rank
+        ));
+    }
+    Ok(())
+}
+
+/// The egress lane's byte sum equals the link's carried-byte total.
+pub fn check_egress_bytes(t: &RankTrace, link_bytes: u64) -> Result<(), String> {
+    let got = t.lane_bytes(Lane::LinkEgress);
+    if got != link_bytes {
+        return Err(format!(
+            "rank {}: egress lane bytes {got} != link bytes_carried {link_bytes}",
+            t.rank
+        ));
+    }
+    Ok(())
+}
+
+/// Every DMA trigger instant for position `p` has a tracker completion for
+/// `p` at or before it.
+pub fn check_triggers_after_tracker(t: &RankTrace) -> Result<(), String> {
+    for i in &t.instants {
+        if let InstantKind::Trigger(p) = i.kind {
+            let done = t
+                .instants
+                .iter()
+                .filter(|x| x.kind == InstantKind::TrackerDone(p))
+                .map(|x| x.at)
+                .min();
+            match done {
+                Some(at) if at <= i.at => {}
+                Some(at) => {
+                    return Err(format!(
+                        "rank {}: trigger for p{p} at {} precedes tracker completion at {}",
+                        t.rank, i.at, at
+                    ));
+                }
+                None => {
+                    return Err(format!(
+                        "rank {}: trigger for p{p} without a tracker completion",
+                        t.rank
+                    ));
+                }
+            }
+        }
+    }
+    Ok(())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sim::time::SimTime;
+    use crate::trace::{Instant, Span, SpanLabel};
+
+    fn span(lane: Lane, s: u64, e: u64, bytes: u64) -> Span {
+        Span {
+            lane,
+            start: SimTime::ps(s),
+            end: SimTime::ps(e),
+            bytes,
+            label: SpanLabel::Chunk(0),
+        }
+    }
+
+    #[test]
+    fn disjoint_passes_and_overlap_fails() {
+        let mut t = RankTrace::new(0);
+        t.spans.push(span(Lane::LinkEgress, 0, 10, 1));
+        t.spans.push(span(Lane::LinkEgress, 10, 20, 1)); // touching is fine
+        assert!(check_lane_spans_disjoint(&t, &LINK_LANES).is_ok());
+        t.spans.push(span(Lane::LinkEgress, 15, 25, 1));
+        let err = check_lane_spans_disjoint(&t, &LINK_LANES).unwrap_err();
+        assert!(err.contains("link-egress"), "{err}");
+        // The overlap is on egress only; ingress alone still passes.
+        assert!(check_lane_spans_disjoint(&t, &[Lane::LinkIngress]).is_ok());
+    }
+
+    #[test]
+    fn byte_reconciliation() {
+        let mut t = RankTrace::new(0);
+        t.spans.push(span(Lane::DramCompute, 0, 10, 100));
+        t.spans.push(span(Lane::DramComm, 5, 15, 50));
+        let c = DramCounters {
+            gemm_reads: 100,
+            rs_writes: 50,
+            ..Default::default()
+        };
+        assert!(check_dram_bytes_reconcile(&t, &c).is_ok());
+        let short = DramCounters {
+            gemm_reads: 100,
+            ..Default::default()
+        };
+        assert!(check_dram_bytes_reconcile(&t, &short).is_err());
+        t.spans.push(span(Lane::LinkEgress, 0, 4, 64));
+        assert!(check_egress_bytes(&t, 64).is_ok());
+        assert!(check_egress_bytes(&t, 65).is_err());
+    }
+
+    #[test]
+    fn trigger_ordering() {
+        let mut t = RankTrace::new(0);
+        t.instants.push(Instant {
+            lane: Lane::Tracker,
+            at: SimTime::ps(10),
+            kind: InstantKind::TrackerDone(2),
+        });
+        t.instants.push(Instant {
+            lane: Lane::Tracker,
+            at: SimTime::ps(10),
+            kind: InstantKind::Trigger(2),
+        });
+        assert!(check_triggers_after_tracker(&t).is_ok());
+        t.instants.push(Instant {
+            lane: Lane::Tracker,
+            at: SimTime::ps(5),
+            kind: InstantKind::Trigger(3),
+        });
+        assert!(check_triggers_after_tracker(&t).is_err());
+    }
+}

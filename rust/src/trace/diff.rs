@@ -1,0 +1,159 @@
+//! Structural diffing of two traces: the same scenario under Sequential
+//! vs T3, or uniform vs straggler, compared metric by metric — how much
+//! communication moved from exposed to overlapped, where the critical
+//! path went, how lane occupancy shifted. Rendered by
+//! [`crate::harness::trace_diff_report`] (`t3 trace <preset> --diff
+//! <other>`).
+
+use super::{Lane, Trace};
+
+/// One compared metric. Times are milliseconds, fractions are percent,
+/// bytes are gigabytes — `unit` says which.
+#[derive(Debug, Clone, PartialEq)]
+pub struct DiffRow {
+    pub metric: String,
+    pub unit: &'static str,
+    pub a: f64,
+    pub b: f64,
+}
+
+impl DiffRow {
+    /// Relative change of `b` vs `a` in percent (None when `a` is 0).
+    pub fn delta_pct(&self) -> Option<f64> {
+        if self.a == 0.0 {
+            None
+        } else {
+            Some((self.b / self.a - 1.0) * 100.0)
+        }
+    }
+}
+
+/// A metric-by-metric comparison of two traces.
+#[derive(Debug, Clone, PartialEq)]
+pub struct TraceDiff {
+    pub a: String,
+    pub b: String,
+    pub rows: Vec<DiffRow>,
+}
+
+/// Compare two traces structurally (aggregated over ranks).
+pub fn diff(a: &Trace, b: &Trace) -> TraceDiff {
+    let (ma, mb) = (a.metrics(), b.metrics());
+    let ms = |t: crate::sim::time::SimTime| t.as_ms_f64();
+    let lane_busy = |m: &super::TraceMetrics, lane: Lane| -> f64 {
+        m.per_rank
+            .iter()
+            .map(|r| r.lane(lane).busy.as_ms_f64())
+            .sum()
+    };
+    let lane_gb = |t: &Trace, lane: Lane| -> f64 {
+        t.ranks.iter().map(|r| r.lane_bytes(lane)).sum::<u64>() as f64 / 1e9
+    };
+    let rows = vec![
+        DiffRow {
+            metric: "end".into(),
+            unit: "ms",
+            a: ms(ma.end),
+            b: ms(mb.end),
+        },
+        DiffRow {
+            metric: "gemm envelope end".into(),
+            unit: "ms",
+            a: ms(ma.gemm_end),
+            b: ms(mb.gemm_end),
+        },
+        DiffRow {
+            metric: "exposed comm".into(),
+            unit: "ms",
+            a: ms(ma.exposed_comm),
+            b: ms(mb.exposed_comm),
+        },
+        DiffRow {
+            metric: "overlap".into(),
+            unit: "ms",
+            a: ms(ma.overlap),
+            b: ms(mb.overlap),
+        },
+        DiffRow {
+            metric: "overlap fraction".into(),
+            unit: "%",
+            a: ma.overlap_fraction * 100.0,
+            b: mb.overlap_fraction * 100.0,
+        },
+        DiffRow {
+            metric: "egress busy".into(),
+            unit: "ms",
+            a: lane_busy(&ma, Lane::LinkEgress),
+            b: lane_busy(&mb, Lane::LinkEgress),
+        },
+        DiffRow {
+            metric: "ingress busy".into(),
+            unit: "ms",
+            a: lane_busy(&ma, Lane::LinkIngress),
+            b: lane_busy(&mb, Lane::LinkIngress),
+        },
+        DiffRow {
+            metric: "dram bytes".into(),
+            unit: "GB",
+            a: lane_gb(a, Lane::DramCompute) + lane_gb(a, Lane::DramComm),
+            b: lane_gb(b, Lane::DramCompute) + lane_gb(b, Lane::DramComm),
+        },
+        DiffRow {
+            metric: "spans".into(),
+            unit: "",
+            a: a.span_count() as f64,
+            b: b.span_count() as f64,
+        },
+    ];
+    TraceDiff {
+        a: a.name.clone(),
+        b: b.name.clone(),
+        rows,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sim::time::SimTime;
+    use crate::trace::{RankTrace, Span, SpanLabel};
+
+    fn trace(name: &str, comp_end: u64, end: u64) -> Trace {
+        let mut r = RankTrace::new(0);
+        r.end = SimTime::ps(end);
+        r.spans.push(Span {
+            lane: Lane::CuCompute,
+            start: SimTime::ZERO,
+            end: SimTime::ps(comp_end),
+            bytes: 0,
+            label: SpanLabel::Stage(0),
+        });
+        Trace::single(name, r)
+    }
+
+    #[test]
+    fn diff_rows_carry_both_sides() {
+        let a = trace("A", 40, 100);
+        let b = trace("B", 40, 80);
+        let d = diff(&a, &b);
+        assert_eq!(d.a, "A");
+        assert_eq!(d.b, "B");
+        let end = d.rows.iter().find(|r| r.metric == "end").unwrap();
+        assert!(end.a > end.b);
+        let delta = end.delta_pct().unwrap();
+        assert!((delta + 20.0).abs() < 1e-9, "delta {delta}");
+        let exposed = d.rows.iter().find(|r| r.metric == "exposed comm").unwrap();
+        assert!(exposed.b < exposed.a);
+    }
+
+    #[test]
+    fn delta_of_zero_baseline_is_none() {
+        let r = DiffRow {
+            metric: "x".into(),
+            unit: "ms",
+            a: 0.0,
+            b: 1.0,
+        };
+        assert!(r.delta_pct().is_none());
+    }
+}

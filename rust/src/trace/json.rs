@@ -1,0 +1,193 @@
+//! Minimal hand-rolled JSON writer (std-only, no serde in the offline
+//! dependency closure). One serializer backs both the Perfetto
+//! `trace_events` exporter ([`super::perfetto`]) and the `--json`
+//! machine-readable report output of `t3 cluster` / `t3 experiment`
+//! ([`crate::harness::Table::to_json`]).
+
+use std::fmt::Write as _;
+
+/// Streaming JSON writer with automatic comma placement. Values emitted at
+/// the top level or inside arrays are comma-separated; `key` introduces an
+/// object member whose following value is not comma-prefixed.
+#[derive(Debug)]
+pub struct JsonWriter {
+    out: String,
+    /// Per-nesting-level "a value was already emitted" flag.
+    comma: Vec<bool>,
+    /// A key was just written; the next value belongs to it.
+    pending_key: bool,
+}
+
+impl Default for JsonWriter {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl JsonWriter {
+    pub fn new() -> Self {
+        JsonWriter {
+            out: String::new(),
+            comma: vec![false],
+            pending_key: false,
+        }
+    }
+
+    fn pre(&mut self) {
+        if self.pending_key {
+            self.pending_key = false;
+            return;
+        }
+        let top = self.comma.last_mut().expect("writer stack never empty");
+        if *top {
+            self.out.push(',');
+        } else {
+            *top = true;
+        }
+    }
+
+    pub fn begin_obj(&mut self) -> &mut Self {
+        self.pre();
+        self.out.push('{');
+        self.comma.push(false);
+        self
+    }
+
+    pub fn end_obj(&mut self) -> &mut Self {
+        self.comma.pop();
+        self.out.push('}');
+        self
+    }
+
+    pub fn begin_arr(&mut self) -> &mut Self {
+        self.pre();
+        self.out.push('[');
+        self.comma.push(false);
+        self
+    }
+
+    pub fn end_arr(&mut self) -> &mut Self {
+        self.comma.pop();
+        self.out.push(']');
+        self
+    }
+
+    pub fn key(&mut self, k: &str) -> &mut Self {
+        self.pre();
+        self.push_escaped(k);
+        self.out.push(':');
+        self.pending_key = true;
+        self
+    }
+
+    pub fn str_val(&mut self, s: &str) -> &mut Self {
+        self.pre();
+        self.push_escaped(s);
+        self
+    }
+
+    pub fn u64_val(&mut self, v: u64) -> &mut Self {
+        self.pre();
+        let _ = write!(self.out, "{v}");
+        self
+    }
+
+    /// Finite floats render via Rust's shortest round-trip formatting
+    /// (valid JSON numbers); non-finite values degrade to `null`.
+    pub fn f64_val(&mut self, v: f64) -> &mut Self {
+        self.pre();
+        if v.is_finite() {
+            let _ = write!(self.out, "{v}");
+        } else {
+            self.out.push_str("null");
+        }
+        self
+    }
+
+    /// Splice a pre-serialized JSON value (e.g. a rendered sub-document).
+    /// The caller vouches for its validity.
+    pub fn raw_val(&mut self, json: &str) -> &mut Self {
+        self.pre();
+        self.out.push_str(json);
+        self
+    }
+
+    fn push_escaped(&mut self, s: &str) {
+        self.out.push('"');
+        for c in s.chars() {
+            match c {
+                '"' => self.out.push_str("\\\""),
+                '\\' => self.out.push_str("\\\\"),
+                '\n' => self.out.push_str("\\n"),
+                '\r' => self.out.push_str("\\r"),
+                '\t' => self.out.push_str("\\t"),
+                c if (c as u32) < 0x20 => {
+                    let _ = write!(self.out, "\\u{:04x}", c as u32);
+                }
+                c => self.out.push(c),
+            }
+        }
+        self.out.push('"');
+    }
+
+    pub fn finish(self) -> String {
+        self.out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn nested_object_renders_valid_json() {
+        let mut w = JsonWriter::new();
+        w.begin_obj();
+        w.key("name").str_val("t3");
+        w.key("n").u64_val(7);
+        w.key("f").f64_val(1.5);
+        w.key("rows").begin_arr();
+        w.begin_arr().str_val("a").str_val("b").end_arr();
+        w.begin_arr().u64_val(1).u64_val(2).end_arr();
+        w.end_arr();
+        w.key("empty").begin_obj().end_obj();
+        w.end_obj();
+        assert_eq!(
+            w.finish(),
+            r#"{"name":"t3","n":7,"f":1.5,"rows":[["a","b"],[1,2]],"empty":{}}"#
+        );
+    }
+
+    #[test]
+    fn strings_are_escaped() {
+        let mut w = JsonWriter::new();
+        w.str_val("a\"b\\c\nd\te\u{1}");
+        assert_eq!(w.finish(), "\"a\\\"b\\\\c\\nd\\te\\u0001\"");
+    }
+
+    #[test]
+    fn non_finite_floats_become_null() {
+        let mut w = JsonWriter::new();
+        w.begin_arr();
+        w.f64_val(f64::NAN).f64_val(f64::INFINITY).f64_val(0.25);
+        w.end_arr();
+        assert_eq!(w.finish(), "[null,null,0.25]");
+    }
+
+    #[test]
+    fn raw_val_splices_subdocuments() {
+        let mut w = JsonWriter::new();
+        w.begin_obj();
+        w.key("a").raw_val(r#"{"x":1}"#);
+        w.key("b").raw_val("[2,3]");
+        w.end_obj();
+        assert_eq!(w.finish(), r#"{"a":{"x":1},"b":[2,3]}"#);
+    }
+
+    #[test]
+    fn top_level_values_comma_separate() {
+        let mut w = JsonWriter::new();
+        w.u64_val(1).u64_val(2);
+        assert_eq!(w.finish(), "1,2");
+    }
+}

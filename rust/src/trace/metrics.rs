@@ -1,0 +1,444 @@
+//! Metrics derived *from the spans* of a trace: per-lane busy time and
+//! bytes, compute/communication overlap, exposed-communication time, and a
+//! critical-path decomposition — the CommFuse-style diagnosis (overlapped
+//! vs exposed communication) computed from first-class timeline data
+//! instead of wall-clock inequalities.
+//!
+//! Definitions (see DESIGN.md "Observability & traces"):
+//!
+//! * **overlap** — `|(cu-compute ∪ cu-consumer) ∩ link-egress|`: the time
+//!   the rank's egress link was busy while its CUs were simultaneously
+//!   executing kernel stages. The **overlap fraction** divides by the
+//!   egress busy time. Serialized compositions are 0 by construction
+//!   (every kernel's sends start at its own retirement); the fused engine
+//!   is strictly positive (tracker-triggered chunks leave during the
+//!   GEMM's steady state).
+//! * **exposed communication** — `end − gemm_end` where `gemm_end` is the
+//!   producer CU-compute envelope end and `end` the accounted trace end:
+//!   the tail during which communication alone holds the critical path.
+//!   Both quantities are carried exactly, so for every composed scenario
+//!   `exposed == total − gemm` in exact `SimTime` arithmetic.
+//! * **critical path** — the exposed window classified by which resource
+//!   dominates it: link busy vs DRAM-comm busy inside `[gemm_end, end]`
+//!   (GEMM-bound when the window is empty).
+
+use super::{Lane, RankTrace, Span, Trace};
+use crate::sim::time::SimTime;
+
+/// A sorted, merged set of half-open intervals in picoseconds.
+#[derive(Debug, Clone, Default, PartialEq, Eq)]
+pub struct Intervals(Vec<(u64, u64)>);
+
+impl Intervals {
+    pub fn from_spans<'a>(spans: impl Iterator<Item = &'a Span>) -> Self {
+        Self::from_pairs(spans.map(|s| (s.start.as_ps(), s.end.as_ps())))
+    }
+
+    pub fn from_pairs(pairs: impl Iterator<Item = (u64, u64)>) -> Self {
+        let mut v: Vec<(u64, u64)> = pairs.filter(|&(a, b)| b > a).collect();
+        v.sort_unstable();
+        let mut out: Vec<(u64, u64)> = Vec::with_capacity(v.len());
+        for (s, e) in v {
+            if let Some(last) = out.last_mut() {
+                if s <= last.1 {
+                    last.1 = last.1.max(e);
+                    continue;
+                }
+            }
+            out.push((s, e));
+        }
+        Intervals(out)
+    }
+
+    /// Total covered time.
+    pub fn total(&self) -> SimTime {
+        SimTime::ps(self.0.iter().map(|&(s, e)| e - s).sum())
+    }
+
+    /// End of the last interval (ZERO when empty).
+    pub fn end(&self) -> SimTime {
+        SimTime::ps(self.0.last().map(|&(_, e)| e).unwrap_or(0))
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.0.is_empty()
+    }
+
+    /// Intersection with another set (two-pointer sweep).
+    pub fn intersect(&self, other: &Intervals) -> Intervals {
+        let (a, b) = (&self.0, &other.0);
+        let mut out = Vec::new();
+        let (mut i, mut j) = (0usize, 0usize);
+        while i < a.len() && j < b.len() {
+            let lo = a[i].0.max(b[j].0);
+            let hi = a[i].1.min(b[j].1);
+            if hi > lo {
+                out.push((lo, hi));
+            }
+            if a[i].1 <= b[j].1 {
+                i += 1;
+            } else {
+                j += 1;
+            }
+        }
+        Intervals(out)
+    }
+
+    /// The part of this set inside `[lo, hi)`.
+    pub fn clip(&self, lo: SimTime, hi: SimTime) -> Intervals {
+        self.intersect(&Intervals(if hi > lo {
+            vec![(lo.as_ps(), hi.as_ps())]
+        } else {
+            Vec::new()
+        }))
+    }
+
+    /// Union with another set.
+    pub fn union(&self, other: &Intervals) -> Intervals {
+        Self::from_pairs(self.0.iter().chain(other.0.iter()).copied())
+    }
+}
+
+/// Busy/byte summary of one lane.
+#[derive(Debug, Clone, PartialEq)]
+pub struct LaneStats {
+    pub lane: Lane,
+    /// Union busy time of the lane's spans.
+    pub busy: SimTime,
+    /// Total payload bytes recorded on the lane.
+    pub bytes: u64,
+    pub spans: usize,
+}
+
+/// Which resource holds the exposed tail.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum CriticalKind {
+    /// No exposed tail: the producer GEMM's envelope reaches the end.
+    GemmBound,
+    /// Link busy time dominates the exposed window.
+    LinkBound,
+    /// DRAM comm-stream busy time dominates the exposed window.
+    DramBound,
+}
+
+impl CriticalKind {
+    pub fn name(self) -> &'static str {
+        match self {
+            CriticalKind::GemmBound => "gemm-bound",
+            CriticalKind::LinkBound => "link-bound",
+            CriticalKind::DramBound => "dram-bound",
+        }
+    }
+}
+
+/// Critical-path decomposition of the exposed window `[gemm_end, end)`.
+#[derive(Debug, Clone, PartialEq)]
+pub struct CriticalPath {
+    pub kind: CriticalKind,
+    /// Length of the exposed window.
+    pub window: SimTime,
+    /// Link (egress ∪ ingress) busy time inside the window.
+    pub link_busy: SimTime,
+    /// DRAM comm-stream busy time inside the window.
+    pub dram_busy: SimTime,
+}
+
+/// Span-derived metrics of one rank's timeline.
+#[derive(Debug, Clone, PartialEq)]
+pub struct RankMetrics {
+    pub rank: u64,
+    /// Accounted end of the timeline.
+    pub end: SimTime,
+    /// End of the producer CU-compute envelope (ZERO when no GEMM ran).
+    pub gemm_end: SimTime,
+    /// Union busy time of producer CU compute.
+    pub compute_busy: SimTime,
+    /// Union busy time of the egress link.
+    pub comm_busy: SimTime,
+    /// `|(cu-compute ∪ cu-consumer) ∩ link-egress|`.
+    pub overlap: SimTime,
+    /// `overlap / comm_busy` (0 when the link never carried anything).
+    pub overlap_fraction: f64,
+    /// `end − gemm_end`.
+    pub exposed_comm: SimTime,
+    pub critical: CriticalPath,
+    /// Per-lane stats in [`Lane::ALL`] order.
+    pub lanes: Vec<LaneStats>,
+}
+
+impl RankMetrics {
+    pub fn lane(&self, lane: Lane) -> &LaneStats {
+        self.lanes
+            .iter()
+            .find(|l| l.lane == lane)
+            .expect("lanes cover Lane::ALL")
+    }
+}
+
+impl RankTrace {
+    /// Derive this rank's metrics from its spans.
+    pub fn metrics(&self) -> RankMetrics {
+        let cu = Intervals::from_spans(self.lane_spans(Lane::CuCompute));
+        let consumer = Intervals::from_spans(self.lane_spans(Lane::CuConsumer));
+        let egress = Intervals::from_spans(self.lane_spans(Lane::LinkEgress));
+        let ingress = Intervals::from_spans(self.lane_spans(Lane::LinkIngress));
+        let dram_comm = Intervals::from_spans(self.lane_spans(Lane::DramComm));
+
+        let compute_all = cu.union(&consumer);
+        let overlap = compute_all.intersect(&egress).total();
+        let comm_busy = egress.total();
+        let overlap_fraction = if comm_busy.is_zero() {
+            0.0
+        } else {
+            overlap.as_ps() as f64 / comm_busy.as_ps() as f64
+        };
+        let gemm_end = cu.end();
+        let end = self.end;
+        let exposed_comm = end.saturating_sub(gemm_end);
+
+        let critical = if exposed_comm.is_zero() {
+            CriticalPath {
+                kind: CriticalKind::GemmBound,
+                window: SimTime::ZERO,
+                link_busy: SimTime::ZERO,
+                dram_busy: SimTime::ZERO,
+            }
+        } else {
+            let link_busy = egress.union(&ingress).clip(gemm_end, end).total();
+            let dram_busy = dram_comm.clip(gemm_end, end).total();
+            CriticalPath {
+                kind: if link_busy >= dram_busy {
+                    CriticalKind::LinkBound
+                } else {
+                    CriticalKind::DramBound
+                },
+                window: exposed_comm,
+                link_busy,
+                dram_busy,
+            }
+        };
+
+        let lanes = Lane::ALL
+            .iter()
+            .map(|&lane| LaneStats {
+                lane,
+                busy: Intervals::from_spans(self.lane_spans(lane)).total(),
+                bytes: self.lane_bytes(lane),
+                spans: self.lane_spans(lane).count(),
+            })
+            .collect();
+
+        RankMetrics {
+            rank: self.rank,
+            end,
+            gemm_end,
+            compute_busy: cu.total(),
+            comm_busy,
+            overlap,
+            overlap_fraction,
+            exposed_comm,
+            critical,
+            lanes,
+        }
+    }
+}
+
+/// Trace-level aggregation: per-rank metrics plus the group view (the
+/// composition rules mirror how [`crate::experiment::Measurement`]
+/// aggregates the worst rank, so the identities hold exactly).
+#[derive(Debug, Clone, PartialEq)]
+pub struct TraceMetrics {
+    /// Max accounted end across ranks (== the scenario's simulated total).
+    pub end: SimTime,
+    /// Max producer CU-compute envelope end across ranks.
+    pub gemm_end: SimTime,
+    /// `end − gemm_end`.
+    pub exposed_comm: SimTime,
+    /// Summed overlap across ranks.
+    pub overlap: SimTime,
+    /// Summed egress busy time across ranks.
+    pub comm_busy: SimTime,
+    /// `overlap / comm_busy` (0 when no link traffic anywhere).
+    pub overlap_fraction: f64,
+    pub per_rank: Vec<RankMetrics>,
+}
+
+impl Trace {
+    pub fn metrics(&self) -> TraceMetrics {
+        let per_rank: Vec<RankMetrics> = self.ranks.iter().map(RankTrace::metrics).collect();
+        let end = per_rank.iter().map(|r| r.end).max().unwrap_or(SimTime::ZERO);
+        let gemm_end = per_rank
+            .iter()
+            .map(|r| r.gemm_end)
+            .max()
+            .unwrap_or(SimTime::ZERO);
+        let overlap: SimTime = per_rank.iter().map(|r| r.overlap).sum();
+        let comm_busy: SimTime = per_rank.iter().map(|r| r.comm_busy).sum();
+        let overlap_fraction = if comm_busy.is_zero() {
+            0.0
+        } else {
+            overlap.as_ps() as f64 / comm_busy.as_ps() as f64
+        };
+        TraceMetrics {
+            end,
+            gemm_end,
+            exposed_comm: end.saturating_sub(gemm_end),
+            overlap,
+            comm_busy,
+            overlap_fraction,
+            per_rank,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::trace::{Span, SpanLabel};
+
+    fn iv(pairs: &[(u64, u64)]) -> Intervals {
+        Intervals::from_pairs(pairs.iter().copied())
+    }
+
+    #[test]
+    fn intervals_merge_sort_and_total() {
+        let a = iv(&[(10, 20), (5, 12), (30, 40), (40, 45)]);
+        // (5,20), (30,45): touching intervals merge, zero-length dropped.
+        assert_eq!(a.total(), SimTime::ps(15 + 15));
+        assert_eq!(a.end(), SimTime::ps(45));
+        let empty = iv(&[(7, 7)]);
+        assert!(empty.is_empty());
+        assert_eq!(empty.total(), SimTime::ZERO);
+    }
+
+    #[test]
+    fn intervals_intersect_and_clip() {
+        let a = iv(&[(0, 10), (20, 30)]);
+        let b = iv(&[(5, 25)]);
+        let x = a.intersect(&b);
+        assert_eq!(x.total(), SimTime::ps(5 + 5));
+        // Touching at a point intersects to nothing.
+        let c = iv(&[(10, 20)]);
+        assert!(a.intersect(&c).is_empty());
+        assert_eq!(a.clip(SimTime::ps(8), SimTime::ps(22)).total(), SimTime::ps(2 + 2));
+        assert!(a.clip(SimTime::ps(22), SimTime::ps(22)).is_empty());
+    }
+
+    #[test]
+    fn intervals_union() {
+        let a = iv(&[(0, 10)]);
+        let b = iv(&[(5, 15), (20, 25)]);
+        let u = a.union(&b);
+        assert_eq!(u.total(), SimTime::ps(15 + 5));
+    }
+
+    fn span(lane: Lane, s: u64, e: u64, bytes: u64) -> Span {
+        Span {
+            lane,
+            start: SimTime::ps(s),
+            end: SimTime::ps(e),
+            bytes,
+            label: SpanLabel::Chunk(0),
+        }
+    }
+
+    #[test]
+    fn rank_metrics_overlap_and_exposure() {
+        let mut t = RankTrace::new(0);
+        t.end = SimTime::ps(100);
+        // GEMM computes in [0, 40) and [50, 60).
+        t.spans.push(Span {
+            label: SpanLabel::Stage(0),
+            ..span(Lane::CuCompute, 0, 40, 0)
+        });
+        t.spans.push(Span {
+            label: SpanLabel::Stage(1),
+            ..span(Lane::CuCompute, 50, 60, 0)
+        });
+        // Egress busy [30, 70): overlaps compute for 10 + 10 = 20.
+        t.spans.push(span(Lane::LinkEgress, 30, 70, 4096));
+        let m = t.metrics();
+        assert_eq!(m.gemm_end, SimTime::ps(60));
+        assert_eq!(m.compute_busy, SimTime::ps(50));
+        assert_eq!(m.comm_busy, SimTime::ps(40));
+        assert_eq!(m.overlap, SimTime::ps(20));
+        assert!((m.overlap_fraction - 0.5).abs() < 1e-12);
+        assert_eq!(m.exposed_comm, SimTime::ps(40));
+        assert_eq!(m.critical.kind, CriticalKind::LinkBound);
+        assert_eq!(m.critical.window, SimTime::ps(40));
+        assert_eq!(m.critical.link_busy, SimTime::ps(10)); // [60, 70)
+        assert_eq!(m.lane(Lane::LinkEgress).bytes, 4096);
+    }
+
+    #[test]
+    fn serialized_timeline_has_zero_overlap() {
+        let mut t = RankTrace::new(0);
+        t.end = SimTime::ps(100);
+        t.spans.push(Span {
+            label: SpanLabel::Stage(0),
+            ..span(Lane::CuCompute, 0, 50, 0)
+        });
+        t.spans.push(span(Lane::LinkEgress, 50, 90, 1024));
+        let m = t.metrics();
+        assert_eq!(m.overlap, SimTime::ZERO);
+        assert_eq!(m.overlap_fraction, 0.0);
+        assert_eq!(m.exposed_comm, SimTime::ps(50));
+    }
+
+    #[test]
+    fn gemm_bound_when_no_tail() {
+        let mut t = RankTrace::new(0);
+        t.end = SimTime::ps(50);
+        t.spans.push(Span {
+            label: SpanLabel::Stage(0),
+            ..span(Lane::CuCompute, 0, 50, 0)
+        });
+        let m = t.metrics();
+        assert_eq!(m.exposed_comm, SimTime::ZERO);
+        assert_eq!(m.critical.kind, CriticalKind::GemmBound);
+    }
+
+    #[test]
+    fn dram_bound_tail_detected() {
+        let mut t = RankTrace::new(0);
+        t.end = SimTime::ps(100);
+        t.spans.push(Span {
+            label: SpanLabel::Stage(0),
+            ..span(Lane::CuCompute, 0, 40, 0)
+        });
+        t.spans.push(Span {
+            label: SpanLabel::Service,
+            ..span(Lane::DramComm, 40, 95, 8192)
+        });
+        t.spans.push(span(Lane::LinkEgress, 40, 50, 64));
+        let m = t.metrics();
+        assert_eq!(m.critical.kind, CriticalKind::DramBound);
+        assert_eq!(m.critical.dram_busy, SimTime::ps(55));
+    }
+
+    #[test]
+    fn trace_metrics_aggregate_worst_rank() {
+        let mut a = RankTrace::new(0);
+        a.end = SimTime::ps(80);
+        a.spans.push(Span {
+            label: SpanLabel::Stage(0),
+            ..span(Lane::CuCompute, 0, 30, 0)
+        });
+        let mut b = RankTrace::new(1);
+        b.end = SimTime::ps(100);
+        b.spans.push(Span {
+            label: SpanLabel::Stage(0),
+            ..span(Lane::CuCompute, 0, 60, 0)
+        });
+        let tr = Trace {
+            name: "t".into(),
+            ranks: vec![a, b],
+        };
+        let m = tr.metrics();
+        assert_eq!(m.end, SimTime::ps(100));
+        assert_eq!(m.gemm_end, SimTime::ps(60));
+        assert_eq!(m.exposed_comm, SimTime::ps(40));
+        assert_eq!(m.overlap_fraction, 0.0);
+        assert_eq!(m.per_rank.len(), 2);
+    }
+}

@@ -1,0 +1,488 @@
+//! Deterministic timeline capture: per-rank resource lanes, typed spans,
+//! and instants — the observability layer over every engine.
+//!
+//! T3's core claims are *temporal* (Figs. 5/9/11 argue with timelines that
+//! the track-and-trigger mechanism overlaps the GEMM's steady state with
+//! the RS/AG), yet the simulators' results only carry end-times and
+//! aggregate DRAM counters. This module turns every run into an
+//! inspectable artifact:
+//!
+//! * **Lanes** ([`Lane`]) — one resource timeline per rank: CU compute
+//!   (producer GEMM stages), consumer-GEMM compute, DRAM/MC service per
+//!   stream (compute vs comm), the rank's link egress and ingress edges,
+//!   and a tracker lane carrying instants (tracker completions, DMA
+//!   trigger firings, the fused-AG trigger).
+//! * **Capture** ([`TraceSink`]) — a zero-cost-when-off recorder owned by
+//!   every [`crate::engine::Runner`]. Disabled (the default) it is a
+//!   `None` branch; recording is purely observational, so traced and
+//!   untraced runs are bit-identical in every simulated quantity.
+//!   DRAM service is recorded inside [`crate::hw::hbm::MemorySystem`] by a
+//!   coalescing accumulator ([`DramLanes`]) so a multi-million-transaction
+//!   run stays a few hundred spans, with **exact** byte accounting (the
+//!   same per-transaction hook that feeds `DramCounters`).
+//! * **Artifacts** ([`Trace`]) — per-rank traces compose across phases
+//!   ([`RankTrace::shift`]/[`RankTrace::merge`] mirror the scenario
+//!   composition arithmetic of [`crate::experiment`]), export to
+//!   Chrome/Perfetto `trace_events` JSON ([`perfetto`]), derive overlap /
+//!   exposed-communication / critical-path metrics from the spans
+//!   ([`metrics`]), diff structurally ([`diff`]), and back invariant
+//!   checkers ([`check`]) used by the property tests.
+//!
+//! See DESIGN.md "Observability & traces" for the lane model, the event
+//! taxonomy, and the overlap-fraction definition.
+
+pub mod check;
+pub mod diff;
+pub mod json;
+pub mod metrics;
+pub mod perfetto;
+
+pub use diff::{diff, DiffRow, TraceDiff};
+pub use metrics::{CriticalKind, CriticalPath, LaneStats, RankMetrics, TraceMetrics};
+
+use crate::hw::mc::Stream;
+use crate::sim::time::SimTime;
+
+/// One resource timeline of one rank. Each rank of a ring has exactly one
+/// egress edge and one ingress edge, so the link lanes are per-edge lanes.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Lane {
+    /// Producer-GEMM stage compute on the CUs.
+    CuCompute,
+    /// Consumer-GEMM stage compute (the next sub-layer's GEMM overlapped
+    /// with the fused all-gather).
+    CuConsumer,
+    /// DRAM/MC service, compute stream (coalesced busy spans).
+    DramCompute,
+    /// DRAM/MC service, communication stream (coalesced busy spans).
+    DramComm,
+    /// Egress-link bandwidth windows (the rank's downstream edge).
+    LinkEgress,
+    /// Ingress arrival windows (the rank's upstream edge).
+    LinkIngress,
+    /// Tracker activity: instants only (completions, trigger firings).
+    Tracker,
+}
+
+impl Lane {
+    pub const ALL: [Lane; 7] = [
+        Lane::CuCompute,
+        Lane::CuConsumer,
+        Lane::DramCompute,
+        Lane::DramComm,
+        Lane::LinkEgress,
+        Lane::LinkIngress,
+        Lane::Tracker,
+    ];
+
+    pub fn name(self) -> &'static str {
+        match self {
+            Lane::CuCompute => "cu-compute",
+            Lane::CuConsumer => "cu-consumer",
+            Lane::DramCompute => "dram-compute",
+            Lane::DramComm => "dram-comm",
+            Lane::LinkEgress => "link-egress",
+            Lane::LinkIngress => "link-ingress",
+            Lane::Tracker => "tracker",
+        }
+    }
+
+    /// Stable Perfetto thread id for the lane.
+    pub fn tid(self) -> u32 {
+        match self {
+            Lane::CuCompute => 1,
+            Lane::CuConsumer => 2,
+            Lane::DramCompute => 3,
+            Lane::DramComm => 4,
+            Lane::LinkEgress => 5,
+            Lane::LinkIngress => 6,
+            Lane::Tracker => 7,
+        }
+    }
+}
+
+/// What a span represents (display label + structural identity).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum SpanLabel {
+    /// GEMM stage `s` compute.
+    Stage(u64),
+    /// Chunk position / ring step `p` (link windows).
+    Chunk(u32),
+    /// Coalesced DRAM service.
+    Service,
+}
+
+impl SpanLabel {
+    pub fn describe(self) -> String {
+        match self {
+            SpanLabel::Stage(s) => format!("stage {s}"),
+            SpanLabel::Chunk(p) => format!("chunk {p}"),
+            SpanLabel::Service => "dram".to_string(),
+        }
+    }
+}
+
+/// A typed busy interval on a lane. `bytes` is the payload the span moved
+/// (0 for pure-compute spans); the invariant checkers reconcile lane byte
+/// sums against `DramCounters` and link byte totals exactly.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Span {
+    pub lane: Lane,
+    pub start: SimTime,
+    pub end: SimTime,
+    pub bytes: u64,
+    pub label: SpanLabel,
+}
+
+/// A point event on a lane.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum InstantKind {
+    /// The tracker completed chunk position `p` (local + incoming updates
+    /// all landed).
+    TrackerDone(u32),
+    /// The pre-programmed DMA for position `p` fired.
+    Trigger(u32),
+    /// The fused all-gather's first send fired (chunk reduced + egress
+    /// drained).
+    AgTrigger,
+}
+
+impl InstantKind {
+    pub fn describe(self) -> String {
+        match self {
+            InstantKind::TrackerDone(p) => format!("tracker-done p{p}"),
+            InstantKind::Trigger(p) => format!("dma-trigger p{p}"),
+            InstantKind::AgTrigger => "ag-trigger".to_string(),
+        }
+    }
+}
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Instant {
+    pub lane: Lane,
+    pub at: SimTime,
+    pub kind: InstantKind,
+}
+
+/// One rank's timeline. `end` is the phase's accounted end (stamped by the
+/// engine at drain, carried exactly through shifts and merges), so
+/// trace-derived totals equal engine-reported totals to the bit.
+#[derive(Debug, Clone, PartialEq)]
+pub struct RankTrace {
+    pub rank: u64,
+    pub end: SimTime,
+    pub spans: Vec<Span>,
+    pub instants: Vec<Instant>,
+}
+
+impl RankTrace {
+    pub fn new(rank: u64) -> Self {
+        RankTrace {
+            rank,
+            end: SimTime::ZERO,
+            spans: Vec::new(),
+            instants: Vec::new(),
+        }
+    }
+
+    /// Shift the whole timeline by `by` (scenario-phase composition: e.g.
+    /// a serialized RS trace starts where the GEMM trace ended).
+    pub fn shift(mut self, by: SimTime) -> Self {
+        for s in &mut self.spans {
+            s.start += by;
+            s.end += by;
+        }
+        for i in &mut self.instants {
+            i.at += by;
+        }
+        self.end += by;
+        self
+    }
+
+    /// Fold another phase of the same rank into this timeline. The
+    /// accounted end becomes the max of the two (the composition rule the
+    /// scenario measurements use).
+    pub fn merge(&mut self, other: RankTrace) {
+        self.end = self.end.max(other.end);
+        self.spans.extend(other.spans);
+        self.instants.extend(other.instants);
+    }
+
+    pub fn lane_spans(&self, lane: Lane) -> impl Iterator<Item = &Span> {
+        self.spans.iter().filter(move |s| s.lane == lane)
+    }
+
+    /// Total payload bytes recorded on a lane.
+    pub fn lane_bytes(&self, lane: Lane) -> u64 {
+        self.lane_spans(lane).map(|s| s.bytes).sum()
+    }
+}
+
+/// A named collection of per-rank timelines (one per TP rank; a single
+/// entry for the loopback-mirror engines).
+#[derive(Debug, Clone, PartialEq)]
+pub struct Trace {
+    pub name: String,
+    pub ranks: Vec<RankTrace>,
+}
+
+impl Trace {
+    pub fn single(name: impl Into<String>, rank: RankTrace) -> Self {
+        Trace {
+            name: name.into(),
+            ranks: vec![rank],
+        }
+    }
+
+    pub fn span_count(&self) -> usize {
+        self.ranks.iter().map(|r| r.spans.len()).sum()
+    }
+
+    pub fn instant_count(&self) -> usize {
+        self.ranks.iter().map(|r| r.instants.len()).sum()
+    }
+}
+
+/// The recording half: a cheap enabled-check recorder owned by every
+/// engine [`crate::engine::Runner`]. Off by default — one `Option` branch
+/// per record call, nothing allocated, and the simulation itself never
+/// reads it back, so disabled runs are bit-identical and benchmark-neutral
+/// (`benches/trace_overhead.rs` pins the overhead).
+#[derive(Debug, Default)]
+pub struct TraceSink(Option<Box<RankTrace>>);
+
+impl TraceSink {
+    /// The no-op sink.
+    pub fn off() -> Self {
+        TraceSink(None)
+    }
+
+    /// A recording sink for rank `rank`.
+    pub fn on(rank: u64) -> Self {
+        TraceSink(Some(Box::new(RankTrace::new(rank))))
+    }
+
+    #[inline]
+    pub fn enabled(&self) -> bool {
+        self.0.is_some()
+    }
+
+    #[inline]
+    pub fn span(&mut self, lane: Lane, start: SimTime, end: SimTime, bytes: u64, label: SpanLabel) {
+        if let Some(t) = &mut self.0 {
+            debug_assert!(end >= start, "span rewinds: {start} > {end}");
+            t.spans.push(Span {
+                lane,
+                start,
+                end,
+                bytes,
+                label,
+            });
+        }
+    }
+
+    #[inline]
+    pub fn instant(&mut self, lane: Lane, at: SimTime, kind: InstantKind) {
+        if let Some(t) = &mut self.0 {
+            t.instants.push(Instant { lane, at, kind });
+        }
+    }
+
+    /// Drain the recorded timeline (if any), stamping the phase end.
+    pub fn finish(&mut self, end: SimTime) -> Option<RankTrace> {
+        self.0.take().map(|mut t| {
+            t.end = t.end.max(end);
+            *t
+        })
+    }
+}
+
+/// Coalescing accumulator for one DRAM lane: extends the current busy span
+/// while services arrive within `gap` of its end, so transaction-level
+/// service collapses into a few spans per phase. Spans never self-overlap
+/// by construction (event time is monotone and spans only extend forward),
+/// and byte sums are exact (one update per serviced transaction, the same
+/// hook that feeds [`crate::sim::stats::DramCounters`]).
+#[derive(Debug)]
+struct LaneCoalescer {
+    lane: Lane,
+    gap: SimTime,
+    cur: Option<(SimTime, SimTime, u64)>,
+    spans: Vec<Span>,
+}
+
+impl LaneCoalescer {
+    fn new(lane: Lane, gap: SimTime) -> Self {
+        LaneCoalescer {
+            lane,
+            gap,
+            cur: None,
+            spans: Vec::new(),
+        }
+    }
+
+    #[inline]
+    fn on_service(&mut self, end: SimTime, service: SimTime, bytes: u64) {
+        let start = end.saturating_sub(service);
+        match &mut self.cur {
+            Some((_, cur_end, cur_bytes)) if start <= *cur_end + self.gap => {
+                *cur_end = (*cur_end).max(end);
+                *cur_bytes += bytes;
+            }
+            _ => {
+                self.flush();
+                self.cur = Some((start, end, bytes));
+            }
+        }
+    }
+
+    fn flush(&mut self) {
+        if let Some((start, end, bytes)) = self.cur.take() {
+            self.spans.push(Span {
+                lane: self.lane,
+                start,
+                end,
+                bytes,
+                label: SpanLabel::Service,
+            });
+        }
+    }
+
+    fn into_spans(mut self) -> Vec<Span> {
+        self.flush();
+        self.spans
+    }
+}
+
+/// The two DRAM service lanes (compute / comm stream) of one memory
+/// system. Owned by [`crate::hw::hbm::MemorySystem`] when lane tracing is
+/// enabled.
+#[derive(Debug)]
+pub struct DramLanes {
+    comp: LaneCoalescer,
+    comm: LaneCoalescer,
+}
+
+impl DramLanes {
+    pub fn new(gap: SimTime) -> Self {
+        DramLanes {
+            comp: LaneCoalescer::new(Lane::DramCompute, gap),
+            comm: LaneCoalescer::new(Lane::DramComm, gap),
+        }
+    }
+
+    /// Record one serviced transaction: `end` is the service-completion
+    /// time, `service` its service duration, `bytes` its payload.
+    #[inline]
+    pub fn on_service(&mut self, stream: Stream, end: SimTime, service: SimTime, bytes: u64) {
+        match stream {
+            Stream::Compute => self.comp.on_service(end, service, bytes),
+            Stream::Comm => self.comm.on_service(end, service, bytes),
+        }
+    }
+
+    pub fn into_spans(self) -> Vec<Span> {
+        let mut out = self.comp.into_spans();
+        out.extend(self.comm.into_spans());
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn sink_off_records_nothing() {
+        let mut s = TraceSink::off();
+        assert!(!s.enabled());
+        s.span(Lane::CuCompute, SimTime::ZERO, SimTime::ns(5), 0, SpanLabel::Stage(0));
+        s.instant(Lane::Tracker, SimTime::ns(1), InstantKind::AgTrigger);
+        assert!(s.finish(SimTime::ns(10)).is_none());
+    }
+
+    #[test]
+    fn sink_on_records_and_stamps_end() {
+        let mut s = TraceSink::on(3);
+        s.span(Lane::LinkEgress, SimTime::ns(1), SimTime::ns(4), 128, SpanLabel::Chunk(2));
+        s.instant(Lane::Tracker, SimTime::ns(2), InstantKind::TrackerDone(1));
+        let t = s.finish(SimTime::ns(9)).unwrap();
+        assert_eq!(t.rank, 3);
+        assert_eq!(t.end, SimTime::ns(9));
+        assert_eq!(t.spans.len(), 1);
+        assert_eq!(t.instants.len(), 1);
+        assert_eq!(t.lane_bytes(Lane::LinkEgress), 128);
+        // Finishing twice yields nothing the second time.
+        assert!(s.finish(SimTime::ns(10)).is_none());
+    }
+
+    #[test]
+    fn shift_and_merge_compose_exactly() {
+        let mut a = RankTrace::new(0);
+        a.end = SimTime::us(10);
+        a.spans.push(Span {
+            lane: Lane::CuCompute,
+            start: SimTime::us(1),
+            end: SimTime::us(2),
+            bytes: 0,
+            label: SpanLabel::Stage(0),
+        });
+        let mut b = RankTrace::new(0);
+        b.end = SimTime::us(5);
+        b.spans.push(Span {
+            lane: Lane::LinkEgress,
+            start: SimTime::ZERO,
+            end: SimTime::us(5),
+            bytes: 7,
+            label: SpanLabel::Chunk(0),
+        });
+        b.instants.push(Instant {
+            lane: Lane::Tracker,
+            at: SimTime::us(3),
+            kind: InstantKind::AgTrigger,
+        });
+        let b = b.shift(SimTime::us(10));
+        assert_eq!(b.end, SimTime::us(15));
+        assert_eq!(b.spans[0].start, SimTime::us(10));
+        assert_eq!(b.instants[0].at, SimTime::us(13));
+        a.merge(b);
+        assert_eq!(a.end, SimTime::us(15));
+        assert_eq!(a.spans.len(), 2);
+        assert_eq!(a.lane_bytes(Lane::LinkEgress), 7);
+    }
+
+    #[test]
+    fn dram_lanes_coalesce_and_keep_exact_bytes() {
+        let mut l = DramLanes::new(SimTime::ns(100));
+        // Three back-to-back services coalesce into one span.
+        for i in 1..=3u64 {
+            l.on_service(Stream::Compute, SimTime::ns(10 * i), SimTime::ns(10), 64);
+        }
+        // A service far away opens a second span.
+        l.on_service(Stream::Compute, SimTime::us(5), SimTime::ns(10), 64);
+        // Comm stream is a separate lane.
+        l.on_service(Stream::Comm, SimTime::ns(15), SimTime::ns(10), 32);
+        let spans = l.into_spans();
+        let comp: Vec<_> = spans.iter().filter(|s| s.lane == Lane::DramCompute).collect();
+        let comm: Vec<_> = spans.iter().filter(|s| s.lane == Lane::DramComm).collect();
+        assert_eq!(comp.len(), 2);
+        assert_eq!(comm.len(), 1);
+        assert_eq!(comp[0].bytes, 3 * 64);
+        assert_eq!(comp[1].bytes, 64);
+        assert_eq!(comm[0].bytes, 32);
+        // Spans never self-overlap.
+        assert!(comp[0].end < comp[1].start);
+    }
+
+    #[test]
+    fn lane_names_and_tids_are_unique() {
+        let mut names: Vec<&str> = Lane::ALL.iter().map(|l| l.name()).collect();
+        names.sort_unstable();
+        names.dedup();
+        assert_eq!(names.len(), Lane::ALL.len());
+        let mut tids: Vec<u32> = Lane::ALL.iter().map(|l| l.tid()).collect();
+        tids.sort_unstable();
+        tids.dedup();
+        assert_eq!(tids.len(), Lane::ALL.len());
+    }
+}

@@ -19,8 +19,9 @@
 //!   identical fingerprints on 1 and 4 worker threads.
 
 use t3::cluster::{
-    run_ag_cluster, run_fused_cluster, run_ring_cluster, AgClusterSpec, ClusterModel,
-    Interleave, RingClusterSpec, SkewModel, TopologySpec,
+    run_ag_cluster, run_ag_cluster_traced, run_fused_cluster, run_fused_cluster_traced,
+    run_ring_cluster, run_ring_cluster_traced, AgClusterSpec, ClusterModel, Interleave,
+    RingClusterSpec, SkewModel, TopologySpec,
 };
 use t3::config::{ArbPolicy, DType, SystemConfig};
 use t3::engine::allgather::ConsumerSpec;
@@ -31,7 +32,10 @@ use t3::gemm::traffic::WriteMode;
 use t3::gemm::{GemmShape, StagePlan, Tiling};
 use t3::sim::rng::{Rng, TraceHash};
 use t3::sim::time::SimTime;
-use t3::testkit::forall;
+use t3::testkit::{
+    check_dram_bytes_reconcile, check_egress_bytes, check_lane_spans_disjoint,
+    check_triggers_after_tracker, forall, EXCLUSIVE_LANES, LINK_LANES,
+};
 
 const MB: u64 = 1 << 20;
 
@@ -257,6 +261,130 @@ fn ag_cluster_conserves_bytes_and_is_interleave_invariant() {
 
         let desc = run_ag_cluster(&s, &spec, &model, Interleave::Descending);
         assert_eq!(run.per_rank, desc.per_rank, "interleave changed an AG run");
+    });
+}
+
+#[test]
+fn traced_rank_machines_satisfy_lane_invariants() {
+    // Trace-based invariants, fuzzed across skew/topology/TP for all
+    // three rank-machine kinds: no per-lane span self-overlap, DRAM lane
+    // bytes reconcile exactly with `DramCounters`, egress lane bytes
+    // reconcile exactly with the link's carried total, and DMA triggers
+    // never precede their tracker completion.
+    let s = sys();
+    let opts = FusedOpts {
+        policy: ArbPolicy::T3Mca,
+        ..FusedOpts::default()
+    };
+    let consumer_plan = StagePlan::new(
+        GemmShape::new(1024, 512, 256, DType::F16),
+        Tiling::default(),
+        &s.gpu,
+    );
+    forall(48, |rng| {
+        let tp = rng.range(2, 5);
+        let model = fuzz_model(rng, tp);
+        match rng.index(3) {
+            0 => {
+                // The fused GEMM-RS machine.
+                let m = *rng.choose(&[1024u64, 2048]);
+                let k = *rng.choose(&[256u64, 512]);
+                let plan = StagePlan::new(
+                    GemmShape::new(m, 512, k, DType::F16),
+                    Tiling::default(),
+                    &s.gpu,
+                );
+                let run =
+                    run_fused_cluster_traced(&s, &plan, tp, &opts, &model, Interleave::Ascending);
+                for res in &run.per_rank {
+                    let t = res.timeline.as_ref().expect("traced run records a timeline");
+                    check_lane_spans_disjoint(t, &EXCLUSIVE_LANES).unwrap();
+                    check_dram_bytes_reconcile(t, &res.counters).unwrap();
+                    check_egress_bytes(t, res.link_bytes).unwrap();
+                    check_triggers_after_tracker(t).unwrap();
+                }
+            }
+            1 => {
+                // The baseline ring machine, all three flavors.
+                let kind = *rng.choose(&[RingKind::RsCu, RingKind::AgCu, RingKind::RsNmc]);
+                let chunk = rng.range(1, 3) * MB;
+                let spec = RingClusterSpec {
+                    bytes: chunk * tp,
+                    tp,
+                    cus: *rng.choose(&[8u32, 16, 80]),
+                    kind,
+                    starts: fuzz_starts(rng, tp),
+                };
+                let run = run_ring_cluster_traced(&s, &spec, &model, Interleave::Ascending);
+                for res in &run.per_rank {
+                    let t = res.timeline.as_ref().expect("traced run records a timeline");
+                    check_lane_spans_disjoint(t, &EXCLUSIVE_LANES).unwrap();
+                    check_dram_bytes_reconcile(t, &res.counters).unwrap();
+                    check_egress_bytes(t, res.link_bytes).unwrap();
+                }
+            }
+            _ => {
+                // The fused all-gather machine (sometimes with a consumer
+                // GEMM contending through the MC).
+                let chunk = rng.range(1, 3) * MB;
+                let spec = AgClusterSpec {
+                    bytes: chunk * tp,
+                    tp,
+                    starts: fuzz_starts(rng, tp),
+                    policy: ArbPolicy::T3Mca,
+                    consumer: rng.chance(0.25).then(|| ConsumerSpec {
+                        plan: consumer_plan.clone(),
+                        write_mode: WriteMode::BypassLlc,
+                        compute_scale: 1.0,
+                    }),
+                };
+                let run = run_ag_cluster_traced(&s, &spec, &model, Interleave::Ascending);
+                for res in &run.per_rank {
+                    let t = res.timeline.as_ref().expect("traced run records a timeline");
+                    check_lane_spans_disjoint(t, &EXCLUSIVE_LANES).unwrap();
+                    check_dram_bytes_reconcile(t, &res.counters).unwrap();
+                    check_egress_bytes(t, res.link_bytes).unwrap();
+                }
+            }
+        }
+    });
+}
+
+#[test]
+fn fused_ar_handoff_never_double_books_the_link() {
+    // The PR-3 claim checked directly on the merged timeline: a rank's
+    // fused-AG egress windows never overlap its RS egress windows (the AG
+    // trigger waits for the chunk's reduction AND the egress drain), and
+    // its AG ingress never overlaps its RS ingress (the upstream rank
+    // serializes both phases on the shared edge).
+    let s = sys();
+    let opts = FusedOpts {
+        policy: ArbPolicy::T3Mca,
+        ..FusedOpts::default()
+    };
+    forall(24, |rng| {
+        let tp = rng.range(2, 5);
+        let model = fuzz_model(rng, tp);
+        let plan = StagePlan::new(
+            GemmShape::new(1024, 512, 256, DType::F16),
+            Tiling::default(),
+            &s.gpu,
+        );
+        let fused = run_fused_cluster_traced(&s, &plan, tp, &opts, &model, Interleave::Ascending);
+        let spec = AgClusterSpec {
+            bytes: plan.shape.out_bytes(),
+            tp,
+            starts: fused.ag_triggers(),
+            policy: ArbPolicy::T3Mca,
+            consumer: None,
+        };
+        let ag = run_ag_cluster_traced(&s, &spec, &model, Interleave::Ascending);
+        for (r, (f, a)) in fused.per_rank.iter().zip(&ag.per_rank).enumerate() {
+            let mut merged = f.timeline.clone().expect("traced");
+            merged.merge(a.timeline.clone().expect("traced"));
+            check_lane_spans_disjoint(&merged, &LINK_LANES)
+                .unwrap_or_else(|e| panic!("rank {r}: {e}"));
+        }
     });
 }
 

@@ -229,6 +229,150 @@ fn cli_simulate_runs_an_ar_preset() {
     assert!(stdout.contains("speedup"), "{stdout}");
 }
 
+// ---------------------------------------------------------------------
+// CLI: the trace surface — `t3 trace`, `--trace`/`--out` on cluster and
+// simulate, `--json` machine-readable reports, and the error paths.
+// ---------------------------------------------------------------------
+
+use t3::testkit::json_balanced;
+
+fn tmp_dir(tag: &str) -> std::path::PathBuf {
+    let d = std::env::temp_dir().join(format!("t3-trace-cli-{tag}"));
+    std::fs::create_dir_all(&d).unwrap();
+    d
+}
+
+#[test]
+fn cli_trace_writes_perfetto_json() {
+    let out = tmp_dir("export").join("trace.json");
+    let out_s = out.to_str().unwrap();
+    let res = t3_cmd(&[
+        "trace", "T3-AR-Fused", "--tp", "4", "--sublayer", "op", "--out", out_s,
+    ]);
+    assert!(res.status.success(), "stderr: {}", String::from_utf8_lossy(&res.stderr));
+    let stdout = String::from_utf8_lossy(&res.stdout);
+    assert!(stdout.contains("trace-derived overlap metrics"), "{stdout}");
+    // The export status goes to stderr (stdout stays machine-readable
+    // under --json).
+    let stderr = String::from_utf8_lossy(&res.stderr);
+    assert!(stderr.contains("perfetto trace written"), "{stderr}");
+    let json = std::fs::read_to_string(&out).unwrap();
+    assert!(json_balanced(&json), "invalid JSON");
+    assert!(json.contains("\"traceEvents\""));
+    for lane in ["cu-compute", "dram-compute", "dram-comm", "link-egress", "link-ingress", "tracker"] {
+        assert!(json.contains(lane), "missing lane {lane}");
+    }
+    // The fused AR's tracker activity is on the timeline.
+    assert!(json.contains("dma-trigger"), "missing trigger instants");
+    assert!(json.contains("ag-trigger"), "missing AG trigger instant");
+}
+
+#[test]
+fn cli_trace_out_unwritable_directory_errors() {
+    let missing = std::env::temp_dir()
+        .join("t3-no-such-dir-xyzzy")
+        .join("deeper")
+        .join("trace.json");
+    let res = t3_cmd(&[
+        "trace", "sequential", "--tp", "2", "--sublayer", "op",
+        "--out", missing.to_str().unwrap(),
+    ]);
+    assert!(!res.status.success(), "writing into a missing directory must fail");
+    let stderr = String::from_utf8_lossy(&res.stderr);
+    assert!(stderr.contains("failed to write trace"), "{stderr}");
+}
+
+#[test]
+fn cli_trace_rejects_unknown_preset_and_bad_flags() {
+    let bad = t3_cmd(&["trace", "no-such-preset"]);
+    assert!(!bad.status.success());
+    assert!(String::from_utf8_lossy(&bad.stderr).contains("unknown scenario"));
+
+    let none = t3_cmd(&["trace"]);
+    assert!(!none.status.success());
+    assert!(String::from_utf8_lossy(&none.stderr).contains("which preset"));
+
+    let bad_tp = t3_cmd(&["trace", "t3-mca", "--tp", "3"]);
+    assert!(!bad_tp.status.success());
+    assert!(String::from_utf8_lossy(&bad_tp.stderr).contains("not valid"));
+
+    let bad_diff = t3_cmd(&["trace", "t3-mca", "--tp", "2", "--sublayer", "op", "--diff", "nope"]);
+    assert!(!bad_diff.status.success());
+    assert!(String::from_utf8_lossy(&bad_diff.stderr).contains("unknown --diff scenario"));
+}
+
+#[test]
+fn cli_trace_diff_renders() {
+    let res = t3_cmd(&[
+        "trace", "T3-AR-Fused", "--tp", "4", "--sublayer", "op", "--diff", "sequential",
+    ]);
+    assert!(res.status.success(), "stderr: {}", String::from_utf8_lossy(&res.stderr));
+    let stdout = String::from_utf8_lossy(&res.stdout);
+    assert!(stdout.contains("trace diff: T3-AR-Fused vs Sequential"), "{stdout}");
+    assert!(stdout.contains("overlap fraction"), "{stdout}");
+}
+
+#[test]
+fn cli_cluster_json_and_trace_flags() {
+    let json_out = t3_cmd(&[
+        "cluster", "--model", "T-NLG", "--tp", "2", "--sublayer", "op", "--json",
+    ]);
+    assert!(json_out.status.success());
+    let stdout = String::from_utf8_lossy(&json_out.stdout);
+    assert!(stdout.trim_start().starts_with('{'), "{stdout}");
+    assert!(stdout.contains("\"headers\""), "{stdout}");
+    assert!(json_balanced(stdout.trim()), "{stdout}");
+
+    let out = tmp_dir("cluster").join("cluster-trace.json");
+    let traced = t3_cmd(&[
+        "cluster", "--model", "T-NLG", "--tp", "2", "--sublayer", "op",
+        "--scenario", "ar-fused", "--trace", "--out", out.to_str().unwrap(),
+    ]);
+    assert!(traced.status.success(), "stderr: {}", String::from_utf8_lossy(&traced.stderr));
+    let stdout = String::from_utf8_lossy(&traced.stdout);
+    assert!(stdout.contains("trace-derived overlap metrics"), "{stdout}");
+    let json = std::fs::read_to_string(&out).unwrap();
+    // Cluster traces carry one Perfetto process per rank.
+    assert!(json.contains("\"rank 0\"") && json.contains("\"rank 1\""), "per-rank processes");
+
+    // --json combined with --trace still emits exactly one JSON document.
+    let both = t3_cmd(&[
+        "cluster", "--model", "T-NLG", "--tp", "2", "--sublayer", "op", "--json", "--trace",
+    ]);
+    assert!(both.status.success());
+    let stdout = String::from_utf8_lossy(&both.stdout);
+    let doc = stdout.trim();
+    assert!(doc.starts_with('{') && doc.ends_with('}'), "{doc}");
+    assert!(json_balanced(doc), "{doc}");
+    assert!(doc.contains("\"report\"") && doc.contains("\"trace\""), "{doc}");
+}
+
+#[test]
+fn cli_simulate_trace_flag_reports_overlap() {
+    let res = t3_cmd(&[
+        "simulate", "--model", "T-NLG", "--tp", "4", "--sublayer", "op",
+        "--scenario", "ar-fused", "--trace",
+    ]);
+    assert!(res.status.success(), "stderr: {}", String::from_utf8_lossy(&res.stderr));
+    let stdout = String::from_utf8_lossy(&res.stdout);
+    assert!(stdout.contains("trace-derived overlap metrics"), "{stdout}");
+}
+
+#[test]
+fn cli_experiment_json_output() {
+    let res = t3_cmd(&[
+        "experiment", "--models", "T-NLG", "--tps", "4", "--sublayers", "op",
+        "--scenarios", "sequential,t3-mca", "--json",
+    ]);
+    assert!(res.status.success(), "stderr: {}", String::from_utf8_lossy(&res.stderr));
+    let stdout = String::from_utf8_lossy(&res.stdout);
+    assert!(stdout.trim_start().starts_with('{'), "{stdout}");
+    assert!(stdout.contains("\"headers\"") && stdout.contains("\"rows\""), "{stdout}");
+    assert!(json_balanced(stdout.trim()), "{stdout}");
+    // The timing line goes to stderr so stdout stays machine-readable.
+    assert!(String::from_utf8_lossy(&res.stderr).contains("[experiment]"));
+}
+
 #[test]
 fn fig17_gemm_slowdown_present() {
     let dir = std::env::temp_dir().join("t3-fig17-test");
