@@ -5,6 +5,10 @@
 //! uniform cluster must bit-match), and a straggler run's simulated
 //! slowdown — the measurement only the multi-rank engine can make.
 
+// The legacy cluster entry points are deprecated shims over the
+// Collective trait; this bench keeps exercising them as written.
+#![allow(deprecated)]
+
 mod common;
 
 use std::time::Instant;

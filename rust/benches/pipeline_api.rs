@@ -1,0 +1,100 @@
+//! Trait-object pipeline overhead: the unified `cluster::execute` path
+//! (boxed `Collective` phases, one dynamic dispatch per phase) vs the
+//! legacy direct engine calls, on the same simulations.
+//!
+//! The redesign's cost claim: the abstraction is free. All simulation
+//! work happens inside the rank machines; the pipeline adds one box, one
+//! vtable call, and a few vector allocations *per phase* — nanoseconds
+//! against multi-millisecond event loops. This bench asserts the results
+//! are bit-identical and wall-clock stays within noise (a generous 1.5x
+//! bound so CI machines with jitter cannot flake).
+
+mod common;
+
+use std::time::Instant;
+
+use t3::cluster::{
+    execute, ExecOpts, ExecTarget, FusedGemmRsCollective, Interleave, PhaseRole, Program,
+    StartRule,
+};
+use t3::config::SystemConfig;
+use t3::engine::fused::{run_fused_gemm_rs, FusedOpts};
+use t3::gemm::{StagePlan, Tiling};
+use t3::harness::Table;
+use t3::models::{by_name, sublayer_gemm, SubLayer};
+
+fn main() {
+    let t0 = Instant::now();
+    let sys = SystemConfig::table1();
+    let m = by_name("T-NLG").unwrap();
+    const ITERS: u32 = 3;
+
+    let mut t = Table::new(
+        "pipeline_api",
+        "Trait-object pipeline vs direct engine calls (T-NLG FC-2 fwd, fused GEMM-RS)",
+        &["tp", "direct ms/run", "pipeline ms/run", "ratio", "totals match"],
+    );
+
+    for tp in [4u64, 8] {
+        let shape = sublayer_gemm(&m, tp, SubLayer::Fc2Fwd);
+        let plan = StagePlan::new(shape, Tiling::default(), &sys.gpu);
+        let opts = FusedOpts::default();
+
+        let program = || {
+            Program::new("pipeline_api", tp).phase(
+                PhaseRole::FusedGemmRs,
+                StartRule::AtZero,
+                FusedGemmRsCollective {
+                    plan: plan.clone(),
+                    opts: opts.clone(),
+                },
+            )
+        };
+        let exec_opts = ExecOpts {
+            target: ExecTarget::Mirror,
+            trace: false,
+            interleave: Interleave::Ascending,
+        };
+
+        // Warm both paths once (page-in, allocator steady state).
+        let warm_direct = run_fused_gemm_rs(&sys, &plan, tp, &opts);
+        let warm_pipeline = execute(&sys, &program(), &exec_opts);
+        assert_eq!(
+            warm_direct.total, warm_pipeline.total,
+            "tp={tp}: the pipeline must reproduce the direct path bit-for-bit"
+        );
+
+        let direct_t = Instant::now();
+        let mut direct_total = warm_direct.total;
+        for _ in 0..ITERS {
+            direct_total = run_fused_gemm_rs(&sys, &plan, tp, &opts).total;
+        }
+        let direct_ms = direct_t.elapsed().as_secs_f64() * 1e3 / ITERS as f64;
+
+        let pipe_t = Instant::now();
+        let mut pipe_total = warm_pipeline.total;
+        for _ in 0..ITERS {
+            pipe_total = execute(&sys, &program(), &exec_opts).total;
+        }
+        let pipe_ms = pipe_t.elapsed().as_secs_f64() * 1e3 / ITERS as f64;
+
+        assert_eq!(direct_total, pipe_total, "tp={tp}");
+        let ratio = pipe_ms / direct_ms;
+        assert!(
+            ratio < 1.5,
+            "tp={tp}: trait-object path {pipe_ms:.2} ms/run vs direct {direct_ms:.2} ms/run \
+             ({ratio:.2}x) — the abstraction must stay free"
+        );
+        t.row(vec![
+            tp.to_string(),
+            format!("{direct_ms:.2}"),
+            format!("{pipe_ms:.2}"),
+            format!("{ratio:.2}x"),
+            "yes".to_string(),
+        ]);
+    }
+
+    t.note("pipeline = Program compile + cluster::execute; direct = run_fused_gemm_rs");
+    t.note("all simulated quantities asserted bit-identical between the two paths");
+    common::emit(vec![t], t0);
+}

@@ -1,0 +1,504 @@
+//! The pluggable collective abstraction: one trait, two drivers.
+//!
+//! T3's track-and-trigger mechanism is collective-agnostic (§7.1 applies it
+//! to reduce-scatter, all-gather, and all-to-all alike), but the codebase
+//! used to hard-code each collective as a separate family of free functions
+//! (`run_*_cluster{,_traced}` pairs plus per-collective spec/result
+//! structs). This module factors what all of them shared into a single
+//! [`Collective`] trait:
+//!
+//! * **per-rank machine construction** — [`Collective::build`] turns a
+//!   [`RankCtx`] (rank id, start/trigger time, skew factor, egress edge)
+//!   into one rank machine implementing [`super::engine::RankNode`];
+//! * **result extraction** — [`Collective::finish`] consumes the drained
+//!   machine into its typed result, and [`Collective::outcome`] projects
+//!   the phase-composition view ([`RankOutcome`]: accounted end, trigger
+//!   time for the next fused phase, producer-GEMM retirement, DRAM
+//!   counters, timeline);
+//! * **trigger composition** — the `trigger` a collective exposes (e.g.
+//!   [`crate::engine::fused::FusedResult::ag_trigger`]) is what a
+//!   downstream [`super::program::StartRule::AtPrevTriggers`] phase starts
+//!   from, so "fuse the next collective onto this one" is a property of
+//!   the pipeline, not a bespoke entry point.
+//!
+//! [`run_collective`] is the one driver over any implementation, in either
+//! execution style ([`ExecTarget`]): the §5.1.1 **loopback mirror** (one
+//! rank, messages delivered back to itself) or the **multi-rank cluster**
+//! (`tp` interacting ranks over a [`ClusterModel`]'s skew factors and
+//! per-edge links, advanced by [`super::engine::drive`]). Adding a
+//! collective is now one file: a rank machine + a `Collective` impl — see
+//! [`crate::engine::alltoall`] for the worked example, added without
+//! touching `cluster::drive` or `engine::Runner`.
+
+use crate::config::{ArbPolicy, LinkConfig, SystemConfig};
+use crate::engine::allgather::{AgRankSpec, AllGatherRank, AllGatherResult, ConsumerSpec};
+use crate::engine::collective_run::{CollectiveRunResult, RingKind, RingRank, RingRankSpec};
+use crate::engine::fused::{FusedOpts, FusedRank, FusedResult};
+use crate::engine::gemm_run::{GemmRank, GemmRankSpec, GemmRunResult};
+use crate::gemm::traffic::WriteMode;
+use crate::gemm::StagePlan;
+use crate::sim::stats::DramCounters;
+use crate::sim::time::SimTime;
+use crate::trace::RankTrace;
+
+use super::engine::{drive, Interleave, RankNode};
+use super::topology::ClusterModel;
+
+/// Everything a collective needs to build one rank's machine.
+#[derive(Debug, Clone)]
+pub struct RankCtx<'a> {
+    pub sys: &'a SystemConfig,
+    /// Ring rank id (0 on the loopback mirror).
+    pub rank: u64,
+    /// Ring size — the TP degree.
+    pub tp: u64,
+    /// This rank's phase start / trigger time (absolute). Collectives that
+    /// always launch at t=0 (the fused GEMM-RS) ignore it.
+    pub start: SimTime,
+    /// Per-rank compute slowdown (1.0 = nominal; the cluster skew model).
+    pub compute_scale: f64,
+    /// This rank's egress edge (to its downstream ring neighbor).
+    pub link: LinkConfig,
+}
+
+/// The phase-composition view of one rank's finished collective: what the
+/// [`super::program`] pipeline needs to chain phases, independent of the
+/// collective's typed result.
+#[derive(Debug)]
+pub struct RankOutcome {
+    /// Accounted end of the phase on this rank (absolute).
+    pub end: SimTime,
+    /// When a *fused* downstream phase may start on this rank
+    /// ([`super::program::StartRule::AtPrevTriggers`]); equals `end` for
+    /// collectives without an early trigger.
+    pub trigger: SimTime,
+    /// Producer-GEMM retirement inside the phase (`SimTime::ZERO` when the
+    /// phase runs no producer GEMM).
+    pub gemm_end: SimTime,
+    /// DRAM traffic charged to the measured sub-layer by this phase.
+    pub counters: DramCounters,
+    /// Timeline (absolute times), `Some` iff the run was traced.
+    pub timeline: Option<RankTrace>,
+}
+
+/// A pluggable collective: chunking/schedule and machine construction on
+/// one side, result/trigger extraction on the other. Implementations are
+/// plain data (the knobs) — all simulation state lives in the rank machine.
+pub trait Collective {
+    /// The per-rank machine (drives through [`super::engine::drive`]).
+    type Node: RankNode;
+    /// The typed per-rank result.
+    type Out;
+
+    /// Short stable name (progress/debug surfaces).
+    fn label(&self) -> &'static str;
+    /// Build rank `ctx.rank`'s machine.
+    fn build(&self, ctx: &RankCtx) -> Self::Node;
+    /// Consume a drained machine into its result.
+    fn finish(&self, node: Self::Node) -> Self::Out;
+    /// Project the phase-composition view, taking the timeline out of the
+    /// result (the caller owns trace assembly).
+    fn outcome(&self, out: &mut Self::Out) -> RankOutcome;
+}
+
+/// Where a collective executes.
+#[derive(Debug, Clone, PartialEq)]
+pub enum ExecTarget {
+    /// The paper's §5.1.1 methodology: one rank modeled in detail, its
+    /// outbound ring messages delivered back to itself (homogeneous
+    /// devices). The legacy single-rank engines are exactly this.
+    Mirror,
+    /// Every TP rank simulated as a communicating node under the given
+    /// skew/topology model. `ClusterModel::uniform()` reproduces the
+    /// mirror bit-for-bit (when chunks divide evenly).
+    Cluster(ClusterModel),
+}
+
+impl ExecTarget {
+    /// Ranks the target materializes for a `tp`-degree run.
+    pub fn ranks(&self, tp: u64) -> usize {
+        match self {
+            ExecTarget::Mirror => 1,
+            ExecTarget::Cluster(_) => tp as usize,
+        }
+    }
+}
+
+/// Run one collective to completion and return its typed per-rank results
+/// (one entry on the mirror, `tp` on the cluster). `starts` carries the
+/// per-rank start/trigger times: one entry on the mirror path, `tp` on the
+/// cluster path.
+pub fn run_collective<C: Collective>(
+    sys: &SystemConfig,
+    coll: &C,
+    tp: u64,
+    starts: &[SimTime],
+    target: &ExecTarget,
+    traced: bool,
+    order: Interleave,
+) -> Vec<C::Out> {
+    match target {
+        ExecTarget::Mirror => {
+            let ctx = RankCtx {
+                sys,
+                rank: 0,
+                tp,
+                start: starts.first().copied().unwrap_or(SimTime::ZERO),
+                compute_scale: 1.0,
+                link: sys.link.clone(),
+            };
+            let mut node = coll.build(&ctx);
+            if traced {
+                node.enable_trace(0);
+            }
+            let mut msgs = Vec::new();
+            while node.step(&mut msgs) {
+                for m in msgs.drain(..) {
+                    node.deliver(&m);
+                }
+            }
+            vec![coll.finish(node)]
+        }
+        ExecTarget::Cluster(model) => {
+            assert_eq!(starts.len(), tp as usize, "one start time per rank");
+            let factors = model.factors(tp, sys.seed);
+            let links = model.links(&sys.link, tp);
+            let mut nodes: Vec<C::Node> = (0..tp)
+                .map(|d| {
+                    let ctx = RankCtx {
+                        sys,
+                        rank: d,
+                        tp,
+                        start: starts[d as usize],
+                        compute_scale: factors[d as usize],
+                        link: links[d as usize].clone(),
+                    };
+                    let mut n = coll.build(&ctx);
+                    if traced {
+                        n.enable_trace(d);
+                    }
+                    n
+                })
+                .collect();
+            drive(&mut nodes, order);
+            nodes.into_iter().map(|n| coll.finish(n)).collect()
+        }
+    }
+}
+
+// ---------------------------------------------------------------------
+// Implementations over the existing rank machines.
+// ---------------------------------------------------------------------
+
+/// The T3 fused GEMM + ring reduce-scatter (Section 4) as a pluggable
+/// collective. Always launches at t=0 (`ctx.start` is ignored — the fused
+/// engine *is* the producer phase); exposes the fused-AG trigger
+/// ([`FusedResult::ag_trigger`]) for downstream triggered phases.
+#[derive(Debug, Clone)]
+pub struct FusedGemmRsCollective {
+    pub plan: StagePlan,
+    pub opts: FusedOpts,
+}
+
+impl Collective for FusedGemmRsCollective {
+    type Node = FusedRank;
+    type Out = FusedResult;
+
+    fn label(&self) -> &'static str {
+        "fused-gemm-rs"
+    }
+
+    fn build(&self, ctx: &RankCtx) -> FusedRank {
+        let mut o = self.opts.clone();
+        if ctx.rank != 0 {
+            // The Figure-17 traffic trace (if requested) records rank 0.
+            o.trace_bin = None;
+        }
+        FusedRank::new(ctx.sys, &self.plan, ctx.tp, ctx.rank, &o, ctx.compute_scale, ctx.link.clone())
+    }
+
+    fn finish(&self, node: FusedRank) -> FusedResult {
+        node.into_result()
+    }
+
+    fn outcome(&self, out: &mut FusedResult) -> RankOutcome {
+        RankOutcome {
+            end: out.total,
+            trigger: out.ag_trigger(),
+            gemm_end: out.gemm_time,
+            counters: out.counters,
+            timeline: out.timeline.take(),
+        }
+    }
+}
+
+/// A baseline CU/NMC ring collective ([`RingKind`] selects RS-on-CUs,
+/// AG-on-CUs, or the NMC/DMA reduce-scatter). The rank's kernel launches
+/// at `ctx.start`; skew slows its CU issue rate.
+#[derive(Debug, Clone)]
+pub struct RingCollective {
+    /// Total collective payload (all chunks).
+    pub bytes: u64,
+    /// CUs granted to the kernel (ignored by [`RingKind::RsNmc`]).
+    pub cus: u32,
+    pub kind: RingKind,
+}
+
+impl Collective for RingCollective {
+    type Node = RingRank;
+    type Out = CollectiveRunResult;
+
+    fn label(&self) -> &'static str {
+        match self.kind {
+            RingKind::RsCu => "ring-rs",
+            RingKind::AgCu => "ring-ag",
+            RingKind::RsNmc => "ring-rs-nmc",
+        }
+    }
+
+    fn build(&self, ctx: &RankCtx) -> RingRank {
+        RingRank::new(
+            ctx.sys,
+            &RingRankSpec {
+                bytes: self.bytes,
+                devices: ctx.tp,
+                cus: self.cus,
+                kind: self.kind,
+                start: ctx.start,
+                link: ctx.link.clone(),
+                issue_scale: ctx.compute_scale,
+            },
+        )
+    }
+
+    fn finish(&self, node: RingRank) -> CollectiveRunResult {
+        node.into_result()
+    }
+
+    fn outcome(&self, out: &mut CollectiveRunResult) -> RankOutcome {
+        RankOutcome {
+            end: out.time,
+            trigger: out.time,
+            gemm_end: SimTime::ZERO,
+            counters: out.counters,
+            timeline: out.timeline.take(),
+        }
+    }
+}
+
+/// The T3-fused ring all-gather (§7.1): triggered per rank at `ctx.start`
+/// (normally the upstream phase's trigger), DMA-driven with cut-through
+/// forwarding, optionally overlapping the next sub-layer's GEMM. The
+/// outcome's counters are *uncharged* of the consumer GEMM's traffic — the
+/// consumer stands in for the next sub-layer and is not charged to the one
+/// being measured (the typed [`AllGatherResult`] keeps the raw counters).
+#[derive(Debug, Clone)]
+pub struct FusedAgCollective {
+    /// Total collective payload (all chunks).
+    pub bytes: u64,
+    pub policy: ArbPolicy,
+    pub consumer: Option<ConsumerSpec>,
+}
+
+impl Collective for FusedAgCollective {
+    type Node = AllGatherRank;
+    type Out = AllGatherResult;
+
+    fn label(&self) -> &'static str {
+        "fused-ag"
+    }
+
+    fn build(&self, ctx: &RankCtx) -> AllGatherRank {
+        let consumer = self.consumer.clone().map(|mut c| {
+            c.compute_scale *= ctx.compute_scale;
+            c
+        });
+        AllGatherRank::new(
+            ctx.sys,
+            &AgRankSpec {
+                bytes: self.bytes,
+                devices: ctx.tp,
+                start: ctx.start,
+                link: ctx.link.clone(),
+                policy: self.policy,
+                consumer,
+            },
+        )
+    }
+
+    fn finish(&self, node: AllGatherRank) -> AllGatherResult {
+        node.into_result()
+    }
+
+    fn outcome(&self, out: &mut AllGatherResult) -> RankOutcome {
+        let mut counters = out.counters;
+        // Consumer traffic belongs to the next sub-layer.
+        counters.gemm_reads = 0;
+        counters.gemm_writes = 0;
+        RankOutcome {
+            end: out.ag_done,
+            trigger: out.ag_done,
+            gemm_end: SimTime::ZERO,
+            counters,
+            timeline: out.timeline.take(),
+        }
+    }
+}
+
+/// The isolated producer GEMM as a (degenerate) collective: `tp`
+/// independent skewed kernels, no ring traffic. Launches at `ctx.start`.
+#[derive(Debug, Clone)]
+pub struct GemmCollective {
+    pub plan: StagePlan,
+    pub cus: u32,
+    pub write_mode: WriteMode,
+}
+
+impl Collective for GemmCollective {
+    type Node = GemmRank;
+    type Out = GemmRunResult;
+
+    fn label(&self) -> &'static str {
+        "gemm"
+    }
+
+    fn build(&self, ctx: &RankCtx) -> GemmRank {
+        GemmRank::new(
+            ctx.sys,
+            &GemmRankSpec {
+                plan: self.plan.clone(),
+                cus: self.cus,
+                mode: self.write_mode,
+                compute_scale: ctx.compute_scale,
+                start: ctx.start,
+            },
+        )
+    }
+
+    fn finish(&self, node: GemmRank) -> GemmRunResult {
+        node.into_result()
+    }
+
+    fn outcome(&self, out: &mut GemmRunResult) -> RankOutcome {
+        RankOutcome {
+            end: out.time,
+            trigger: out.time,
+            gemm_end: out.time,
+            counters: out.counters,
+            timeline: out.timeline.take(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::SystemConfig;
+    use crate::engine::collective_run::run_rs_baseline;
+    use crate::engine::fused::run_fused_gemm_rs;
+    use crate::config::DType;
+    use crate::gemm::{GemmShape, Tiling};
+
+    fn sys() -> SystemConfig {
+        SystemConfig::table1()
+    }
+
+    fn plan() -> StagePlan {
+        StagePlan::new(
+            GemmShape::new(4096, 2048, 512, DType::F16),
+            Tiling::default(),
+            &sys().gpu,
+        )
+    }
+
+    #[test]
+    fn mirror_driver_reproduces_legacy_loopback_entry_points() {
+        let s = sys();
+        let p = plan();
+        let coll = FusedGemmRsCollective {
+            plan: p.clone(),
+            opts: FusedOpts::default(),
+        };
+        let legacy = run_fused_gemm_rs(&s, &p, 4, &FusedOpts::default());
+        let via_trait = run_collective(
+            &s,
+            &coll,
+            4,
+            &[SimTime::ZERO],
+            &ExecTarget::Mirror,
+            false,
+            Interleave::Ascending,
+        );
+        assert_eq!(via_trait.len(), 1);
+        assert_eq!(via_trait[0].total, legacy.total);
+        assert_eq!(via_trait[0].gemm_time, legacy.gemm_time);
+        assert_eq!(via_trait[0].tracker_done, legacy.tracker_done);
+        assert_eq!(via_trait[0].counters, legacy.counters);
+
+        let ring = RingCollective {
+            bytes: 32 << 20,
+            cus: 80,
+            kind: RingKind::RsCu,
+        };
+        let legacy_rs = run_rs_baseline(&s, 32 << 20, 4, 80);
+        let via = run_collective(
+            &s,
+            &ring,
+            4,
+            &[SimTime::ZERO],
+            &ExecTarget::Mirror,
+            false,
+            Interleave::Ascending,
+        );
+        assert_eq!(via[0], legacy_rs);
+    }
+
+    #[test]
+    fn cluster_driver_scales_and_skews_per_rank() {
+        let s = sys();
+        let coll = GemmCollective {
+            plan: plan(),
+            cus: 80,
+            write_mode: WriteMode::BypassLlc,
+        };
+        let model = ClusterModel::straggler(2, 1.5);
+        let starts = vec![SimTime::ZERO; 4];
+        let outs = run_collective(
+            &s,
+            &coll,
+            4,
+            &starts,
+            &ExecTarget::Cluster(model),
+            false,
+            Interleave::Ascending,
+        );
+        assert_eq!(outs.len(), 4);
+        assert!(outs[2].time > outs[0].time, "straggler must stretch");
+        assert_eq!(outs[0].time, outs[1].time);
+        assert_eq!(outs[0].time, outs[3].time);
+    }
+
+    #[test]
+    fn traced_run_always_carries_a_timeline() {
+        // Satellite: the trace state is explicit — traced => Some timeline
+        // on every rank, untraced => None, no silent ambiguity.
+        let s = sys();
+        let coll = RingCollective {
+            bytes: 8 << 20,
+            cus: 80,
+            kind: RingKind::AgCu,
+        };
+        let starts = vec![SimTime::ZERO; 2];
+        let target = ExecTarget::Cluster(ClusterModel::uniform());
+        let mut traced =
+            run_collective(&s, &coll, 2, &starts, &target, true, Interleave::Ascending);
+        assert!(traced.iter().all(|o| o.timeline.is_some()));
+        let plain = run_collective(&s, &coll, 2, &starts, &target, false, Interleave::Ascending);
+        assert!(plain.iter().all(|o| o.timeline.is_none()));
+        // And tracing is observational.
+        for (t, p) in traced.iter_mut().zip(&plain) {
+            t.timeline = None;
+            assert_eq!(&*t, p);
+        }
+    }
+}

@@ -1,5 +1,5 @@
 //! Multi-rank cluster engine: every TP rank simulated as a communicating
-//! event-driven node.
+//! event-driven node, behind one pluggable execution API.
 //!
 //! The single-rank engine ([`crate::engine`]) models one GPU and mirrors
 //! its egress into its ingress — exact for the paper's homogeneous node
@@ -12,35 +12,55 @@
 //! slow rank or congested link delays exactly the chunks that transit it.
 //!
 //! Pieces:
-//! * [`ClusterModel`] / [`SkewModel`] / [`TopologySpec`] — the declarative
-//!   cluster description: per-rank compute skew (deterministic via
-//!   [`crate::sim::rng`]) and single- vs two-tier link topology;
-//! * [`drive`] — the canonical global event loop over per-rank calendars
-//!   (see [`engine`] for the delivery rule and its determinism /
-//!   interleaving-independence argument);
-//! * [`run_fused_cluster`] — the T3 fused GEMM-RS on every rank;
-//! * [`run_ag_cluster`] — the T3-fused ring all-gather on every rank
-//!   (per-rank trigger times, cut-through forwarding, optional
-//!   consumer-GEMM overlap — the AG half of a fused all-reduce);
-//! * [`run_ring_cluster`] / [`run_gemm_cluster`] — hop-by-hop baseline
-//!   collectives (with per-rank start offsets) and skewed per-rank GEMMs,
-//!   the building blocks of serialized/ideal cluster scenarios.
+//! * [`Collective`] ([`collective`]) — the pluggable collective trait:
+//!   per-rank machine construction, result extraction, and trigger
+//!   composition. Implemented by the fused GEMM-RS, baseline rings, the
+//!   fused all-gather, the isolated GEMM, and (as the worked one-file
+//!   example) the expert-parallel all-to-all
+//!   ([`crate::engine::alltoall`]). [`run_collective`] drives any impl on
+//!   either target ([`ExecTarget`]): the §5.1.1 loopback mirror or the
+//!   multi-rank cluster.
+//! * [`Program`] / [`Phase`] / [`execute`] ([`program`]) — the declarative
+//!   pipeline `ScenarioSpec::compile` produces: phases of collectives
+//!   chained by [`StartRule`]s (serialized, overlapped, or
+//!   tracker-triggered), executed by the one entry point [`execute`] into
+//!   a [`RunReport`]. Trace capture is an [`ExecOpts`] field — no
+//!   `_traced` twin entry points.
+//! * [`ClusterModel`] / [`SkewModel`] / [`TopologySpec`] ([`topology`]) —
+//!   the declarative cluster description: per-rank compute skew
+//!   (deterministic via [`crate::sim::rng`]) and single- vs two-tier link
+//!   topology;
+//! * [`drive`] ([`engine`]) — the canonical global event loop over
+//!   per-rank calendars (see [`engine`] for the delivery rule and its
+//!   determinism / interleaving-independence argument).
 //!
 //! **The old path is a special case:** with [`ClusterModel::uniform`]
 //! every rank runs an identical timeline and the cluster reproduces the
 //! loopback mirror bit-for-bit (pinned by `tests/cluster.rs` across the
-//! five paper presets). Scenario integration lives in
-//! [`crate::experiment`]: `ScenarioSpec::cluster` adds the cluster as an
-//! orthogonal scenario axis, and the registry ships straggler and
-//! two-tier presets; `t3 cluster` is the CLI view.
+//! five paper presets). The pre-trait entry points
+//! (`run_{fused,ring,ag,gemm}_cluster{,_traced}`) remain as deprecated
+//! shims over [`run_collective`], kept for bit-parity tests — see
+//! `tests/cluster_properties.rs`. Scenario integration lives in
+//! [`crate::experiment`]; `t3 cluster` is the CLI view.
 
+pub mod collective;
 pub mod engine;
+pub mod program;
 pub mod topology;
 
+#[allow(deprecated)]
 pub use engine::{
-    drive, run_ag_cluster, run_ag_cluster_traced, run_fused_cluster, run_fused_cluster_traced,
+    run_ag_cluster, run_ag_cluster_traced, run_fused_cluster, run_fused_cluster_traced,
     run_gemm_cluster, run_gemm_cluster_traced, run_ring_cluster, run_ring_cluster_traced,
-    AgClusterSpec, ClusterAgRun, ClusterFusedRun, ClusterRingRun, Interleave, RankNode,
+};
+pub use engine::{
+    drive, AgClusterSpec, ClusterAgRun, ClusterFusedRun, ClusterRingRun, Interleave, RankNode,
     RingClusterSpec,
 };
+
+pub use collective::{
+    run_collective, Collective, ExecTarget, FusedAgCollective, FusedGemmRsCollective,
+    GemmCollective, RankCtx, RankOutcome, RingCollective,
+};
+pub use program::{execute, ExecOpts, Phase, PhaseReport, PhaseRole, Program, RunReport, StartRule};
 pub use topology::{ClusterModel, SkewModel, TopologySpec};

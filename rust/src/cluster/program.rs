@@ -1,0 +1,444 @@
+//! The composable execution pipeline: a [`Program`] of [`Phase`]s over
+//! pluggable [`Collective`]s, run by the single entry point [`execute`].
+//!
+//! A scenario used to be a hand-written composition: call one `run_*`
+//! function per phase, thread start offsets and trigger times by hand,
+//! shift and merge timelines, and duplicate the whole dance for the traced
+//! twin and again for the cluster path (eight entry points per collective
+//! family). A `Program` states the same thing declaratively:
+//!
+//! * each [`Phase`] names a collective (any [`Collective`] impl, boxed
+//!   behind an object-safe shim) and a [`StartRule`] — how its per-rank
+//!   start times derive from the phases before it (serialized after the
+//!   previous phase, overlapped from t=0, gated on the elementwise max of
+//!   everything so far, or *triggered* by the previous collective's early
+//!   trigger — T3's track-and-trigger fusion as a pipeline property);
+//! * [`execute`] runs the phases in order on either [`ExecTarget`]
+//!   (loopback mirror or multi-rank cluster), accumulates rank-0 DRAM
+//!   counters, merges per-rank timelines (phases run at absolute offsets,
+//!   so no shifting), and returns one [`RunReport`].
+//!
+//! Trace capture is an [`ExecOpts`] field, not a separate entry point:
+//! `RunReport::trace` is `Some` **iff** `ExecOpts::trace` was set — a
+//! traced run that recorded nothing still yields an (empty) timeline per
+//! rank, so "tracing off" and "empty trace" are distinguishable states.
+//! [`crate::experiment::ScenarioSpec::compile`] produces these programs;
+//! the legacy `run_*_cluster{,_traced}` functions are deprecated shims.
+
+use crate::config::SystemConfig;
+use crate::sim::stats::DramCounters;
+use crate::sim::time::SimTime;
+use crate::trace::{RankTrace, Trace};
+
+use super::collective::{run_collective, Collective, ExecTarget, RankOutcome};
+use super::engine::Interleave;
+
+/// How a phase's per-rank start times derive from the phases before it.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum StartRule {
+    /// Start at t=0 on every rank (first phases; ideal-overlap phases).
+    AtZero,
+    /// Each rank starts at its own end of the immediately preceding phase
+    /// (serialized composition). On the first phase this is t=0.
+    AfterPrev,
+    /// Each rank starts at the elementwise max of *all* previous phase
+    /// ends (a barrier over overlapped phases — the ideal-overlap AG).
+    AfterAllPrev,
+    /// Each rank starts at the preceding phase's trigger time (e.g. the
+    /// fused RS's AG trigger: chunk reduced + egress drained) — the
+    /// track-and-trigger handoff.
+    AtPrevTriggers,
+}
+
+/// What a phase contributes to the sub-layer measurement (the view layer
+/// slices a [`RunReport`] by role; execution itself is role-agnostic).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum PhaseRole {
+    /// Isolated producer GEMM.
+    Gemm,
+    /// The T3 fused GEMM + reduce-scatter.
+    FusedGemmRs,
+    /// Reduce-scatter collective.
+    ReduceScatter,
+    /// Trailing all-gather collective.
+    AllGather,
+    /// Expert-parallel all-to-all dispatch (GEMM + sliced A2A).
+    AllToAll,
+}
+
+/// Object-safe erasure of [`Collective`] for pipeline storage. Blanket-
+/// implemented for every `Collective`, so user code never sees it.
+trait DynCollective: Send + Sync {
+    fn run_phase(
+        &self,
+        sys: &SystemConfig,
+        tp: u64,
+        starts: &[SimTime],
+        target: &ExecTarget,
+        traced: bool,
+        order: Interleave,
+    ) -> Vec<RankOutcome>;
+}
+
+impl<C> DynCollective for C
+where
+    C: Collective + Send + Sync,
+{
+    fn run_phase(
+        &self,
+        sys: &SystemConfig,
+        tp: u64,
+        starts: &[SimTime],
+        target: &ExecTarget,
+        traced: bool,
+        order: Interleave,
+    ) -> Vec<RankOutcome> {
+        let mut outs = run_collective(sys, self, tp, starts, target, traced, order);
+        outs.iter_mut().map(|o| self.outcome(o)).collect()
+    }
+}
+
+/// One pipeline stage: a collective plus its composition rule.
+pub struct Phase {
+    pub role: PhaseRole,
+    pub rule: StartRule,
+    coll: Box<dyn DynCollective>,
+}
+
+impl Phase {
+    pub fn new<C>(role: PhaseRole, rule: StartRule, coll: C) -> Self
+    where
+        C: Collective + Send + Sync + 'static,
+    {
+        Phase {
+            role,
+            rule,
+            coll: Box::new(coll),
+        }
+    }
+}
+
+impl std::fmt::Debug for Phase {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.debug_struct("Phase")
+            .field("role", &self.role)
+            .field("rule", &self.rule)
+            .finish()
+    }
+}
+
+/// An ordered pipeline of phases over a `tp`-rank ring.
+#[derive(Debug)]
+pub struct Program {
+    pub name: String,
+    pub tp: u64,
+    pub phases: Vec<Phase>,
+}
+
+impl Program {
+    pub fn new(name: impl Into<String>, tp: u64) -> Self {
+        Program {
+            name: name.into(),
+            tp,
+            phases: Vec::new(),
+        }
+    }
+
+    /// Append a phase (chainable).
+    pub fn phase<C>(mut self, role: PhaseRole, rule: StartRule, coll: C) -> Self
+    where
+        C: Collective + Send + Sync + 'static,
+    {
+        self.phases.push(Phase::new(role, rule, coll));
+        self
+    }
+}
+
+/// Execution options of [`execute`]. Trace capture lives here — one knob
+/// instead of a `_traced` twin per entry point.
+#[derive(Debug, Clone)]
+pub struct ExecOpts {
+    pub target: ExecTarget,
+    /// Record per-rank timelines. Purely observational: traced runs are
+    /// bit-identical to untraced ones in every simulated quantity.
+    pub trace: bool,
+    /// Slot order of the cluster event loop (results are invariant; the
+    /// knob exists so tests can prove it).
+    pub interleave: Interleave,
+}
+
+impl ExecOpts {
+    /// The §5.1.1 loopback mirror, untraced.
+    pub fn mirror() -> Self {
+        ExecOpts {
+            target: ExecTarget::Mirror,
+            trace: false,
+            interleave: Interleave::Ascending,
+        }
+    }
+
+    /// A multi-rank cluster run, untraced.
+    pub fn cluster(model: super::topology::ClusterModel) -> Self {
+        ExecOpts {
+            target: ExecTarget::Cluster(model),
+            trace: false,
+            interleave: Interleave::Ascending,
+        }
+    }
+
+    /// Toggle timeline capture (chainable).
+    pub fn traced(mut self, on: bool) -> Self {
+        self.trace = on;
+        self
+    }
+}
+
+/// Per-phase slice of a [`RunReport`].
+#[derive(Debug, Clone)]
+pub struct PhaseReport {
+    pub role: PhaseRole,
+    /// Latest per-rank start of the phase.
+    pub start: SimTime,
+    /// Latest per-rank accounted end (absolute).
+    pub end: SimTime,
+    /// Per-rank accounted ends, rank order.
+    pub ends: Vec<SimTime>,
+    /// Per-rank trigger times (== ends for collectives without an early
+    /// trigger), rank order.
+    pub triggers: Vec<SimTime>,
+    /// Latest producer-GEMM retirement inside the phase (`SimTime::ZERO`
+    /// if the phase runs no producer GEMM).
+    pub gemm_end: SimTime,
+    /// Rank-0 DRAM counters of the phase (uniform ranks are identical;
+    /// per-rank detail is available through [`run_collective`] directly).
+    pub counters: DramCounters,
+}
+
+/// The result of one [`execute`] run.
+#[derive(Debug, Clone)]
+pub struct RunReport {
+    pub name: String,
+    pub tp: u64,
+    /// Group completion: the max accounted end over all phases and ranks.
+    pub total: SimTime,
+    pub phases: Vec<PhaseReport>,
+    /// Rank-0 DRAM counters summed over phases (consumer-GEMM traffic of a
+    /// fused AG is already uncharged — it belongs to the next sub-layer).
+    pub counters: DramCounters,
+    /// Per-rank merged timelines; `Some` **iff** [`ExecOpts::trace`] was
+    /// set (an empty trace is still `Some` — the state is explicit).
+    pub trace: Option<Trace>,
+}
+
+impl RunReport {
+    /// First phase with the given role, if any.
+    pub fn phase(&self, role: PhaseRole) -> Option<&PhaseReport> {
+        self.phases.iter().find(|p| p.role == role)
+    }
+
+    /// Latest end over every phase except trailing all-gathers — the
+    /// "pre-AG" boundary measurements slice against.
+    pub fn pre_ag_end(&self) -> SimTime {
+        self.phases
+            .iter()
+            .filter(|p| p.role != PhaseRole::AllGather)
+            .map(|p| p.end)
+            .max()
+            .unwrap_or(SimTime::ZERO)
+    }
+}
+
+/// Run a [`Program`] to completion: the one execution entry point behind
+/// `ScenarioSpec::run`, `t3 cluster`, and `t3 trace`.
+pub fn execute(sys: &SystemConfig, prog: &Program, opts: &ExecOpts) -> RunReport {
+    assert!(prog.tp >= 2, "a ring needs at least two ranks");
+    assert!(!prog.phases.is_empty(), "program has no phases");
+    let nranks = opts.target.ranks(prog.tp);
+
+    let mut all_ends: Vec<Vec<SimTime>> = Vec::new();
+    let mut prev_ends: Vec<SimTime> = vec![SimTime::ZERO; nranks];
+    let mut prev_triggers: Vec<SimTime> = vec![SimTime::ZERO; nranks];
+    let mut timelines: Vec<RankTrace> = (0..nranks).map(|r| RankTrace::new(r as u64)).collect();
+    let mut counters = DramCounters::default();
+    let mut phases = Vec::with_capacity(prog.phases.len());
+    let mut total = SimTime::ZERO;
+
+    for ph in &prog.phases {
+        let starts: Vec<SimTime> = match ph.rule {
+            StartRule::AtZero => vec![SimTime::ZERO; nranks],
+            StartRule::AfterPrev => prev_ends.clone(),
+            StartRule::AtPrevTriggers => prev_triggers.clone(),
+            StartRule::AfterAllPrev => (0..nranks)
+                .map(|r| {
+                    all_ends
+                        .iter()
+                        .map(|ends| ends[r])
+                        .max()
+                        .unwrap_or(SimTime::ZERO)
+                })
+                .collect(),
+        };
+        let mut outcomes = ph.coll.run_phase(
+            sys,
+            prog.tp,
+            &starts,
+            &opts.target,
+            opts.trace,
+            opts.interleave,
+        );
+        debug_assert_eq!(outcomes.len(), nranks);
+        counters.add(&outcomes[0].counters);
+        let ends: Vec<SimTime> = outcomes.iter().map(|o| o.end).collect();
+        let triggers: Vec<SimTime> = outcomes.iter().map(|o| o.trigger).collect();
+        let end = ends.iter().copied().max().expect("at least one rank");
+        let gemm_end = outcomes
+            .iter()
+            .map(|o| o.gemm_end)
+            .max()
+            .expect("at least one rank");
+        if opts.trace {
+            for (r, o) in outcomes.iter_mut().enumerate() {
+                // Explicit trace state: a traced phase that recorded no
+                // spans still contributes an (empty) timeline.
+                let tl = o.timeline.take().unwrap_or_else(|| RankTrace::new(r as u64));
+                timelines[r].merge(tl);
+            }
+        }
+        total = total.max(end);
+        phases.push(PhaseReport {
+            role: ph.role,
+            start: starts.iter().copied().max().expect("at least one rank"),
+            end,
+            ends: ends.clone(),
+            triggers: triggers.clone(),
+            gemm_end,
+            counters: outcomes[0].counters,
+        });
+        prev_ends = ends;
+        prev_triggers = triggers;
+        all_ends.push(prev_ends.clone());
+    }
+
+    RunReport {
+        name: prog.name.clone(),
+        tp: prog.tp,
+        total,
+        phases,
+        counters,
+        trace: opts.trace.then(|| Trace {
+            name: prog.name.clone(),
+            ranks: timelines,
+        }),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::collective::{GemmCollective, RingCollective};
+    use crate::config::{DType, SystemConfig};
+    use crate::engine::collective_run::RingKind;
+    use crate::gemm::traffic::WriteMode;
+    use crate::gemm::{GemmShape, StagePlan, Tiling};
+
+    fn sys() -> SystemConfig {
+        SystemConfig::table1()
+    }
+
+    fn plan() -> StagePlan {
+        StagePlan::new(
+            GemmShape::new(2048, 1024, 256, DType::F16),
+            Tiling::default(),
+            &sys().gpu,
+        )
+    }
+
+    fn gemm_then_rs(name: &str) -> Program {
+        Program::new(name, 4)
+            .phase(
+                PhaseRole::Gemm,
+                StartRule::AtZero,
+                GemmCollective {
+                    plan: plan(),
+                    cus: 80,
+                    write_mode: WriteMode::ThroughLlc,
+                },
+            )
+            .phase(
+                PhaseRole::ReduceScatter,
+                StartRule::AfterPrev,
+                RingCollective {
+                    bytes: 8 << 20,
+                    cus: 80,
+                    kind: RingKind::RsCu,
+                },
+            )
+    }
+
+    #[test]
+    fn serialized_phases_chain_their_ends() {
+        let s = sys();
+        let report = execute(&s, &gemm_then_rs("serial"), &ExecOpts::mirror());
+        assert_eq!(report.phases.len(), 2);
+        let g = &report.phases[0];
+        let rs = &report.phases[1];
+        assert_eq!(rs.start, g.end, "RS must launch at the GEMM's end");
+        assert!(rs.end > g.end);
+        assert_eq!(report.total, rs.end);
+        assert!(report.trace.is_none(), "untraced run must report no trace");
+    }
+
+    #[test]
+    fn trace_state_is_explicit() {
+        // Satellite regression: `trace: true` always yields `Some`, even
+        // for phases that record nothing; `trace: false` always `None` —
+        // the old take_timeline ambiguity cannot recur through this path.
+        let s = sys();
+        let report = execute(&s, &gemm_then_rs("traced"), &ExecOpts::mirror().traced(true));
+        let trace = report.trace.expect("traced run must carry a trace");
+        assert_eq!(trace.ranks.len(), 1);
+        // The merged timeline's stamped end equals the report total.
+        assert_eq!(trace.ranks[0].end, report.total);
+        assert!(!trace.ranks[0].spans.is_empty());
+    }
+
+    #[test]
+    fn after_all_prev_is_an_elementwise_barrier() {
+        let s = sys();
+        let prog = Program::new("barrier", 4)
+            .phase(
+                PhaseRole::Gemm,
+                StartRule::AtZero,
+                GemmCollective {
+                    plan: plan(),
+                    cus: 80,
+                    write_mode: WriteMode::ThroughLlc,
+                },
+            )
+            .phase(
+                PhaseRole::ReduceScatter,
+                StartRule::AtZero,
+                RingCollective {
+                    bytes: 8 << 20,
+                    cus: 80,
+                    kind: RingKind::RsCu,
+                },
+            )
+            .phase(
+                PhaseRole::AllGather,
+                StartRule::AfterAllPrev,
+                RingCollective {
+                    bytes: 8 << 20,
+                    cus: 80,
+                    kind: RingKind::AgCu,
+                },
+            );
+        let report = execute(&s, &prog, &ExecOpts::mirror());
+        let g = report.phase(PhaseRole::Gemm).unwrap().end;
+        let rs = report.phase(PhaseRole::ReduceScatter).unwrap().end;
+        let ag = report.phase(PhaseRole::AllGather).unwrap();
+        assert_eq!(ag.start, g.max(rs));
+        assert_eq!(report.pre_ag_end(), g.max(rs));
+        assert_eq!(report.total, ag.end);
+    }
+}

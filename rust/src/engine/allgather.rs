@@ -465,6 +465,11 @@ pub fn run_fused_ag(
 /// carries the rank-0 trace (absolute times — the trigger offset is part
 /// of the timeline). Every simulated quantity is bit-identical to the
 /// untraced run.
+#[deprecated(
+    since = "0.2.0",
+    note = "trace capture is an ExecOpts field now: run a FusedAg phase \
+            through cluster::execute, or run_collective(traced = true)"
+)]
 pub fn run_fused_ag_traced(
     sys: &SystemConfig,
     bytes: u64,

@@ -371,6 +371,11 @@ fn run_ring(sys: &SystemConfig, bytes: u64, devices: u64, cus: u32, kind: RingKi
 /// selects the collective; `cus` is ignored by [`RingKind::RsNmc`],
 /// exactly as in the untraced entry points). Every simulated quantity is
 /// bit-identical to the untraced run.
+#[deprecated(
+    since = "0.2.0",
+    note = "trace capture is an ExecOpts field now: run a Ring phase through \
+            cluster::execute, or run_collective(traced = true)"
+)]
 pub fn run_ring_traced(
     sys: &SystemConfig,
     bytes: u64,

@@ -635,6 +635,11 @@ pub fn run_fused_gemm_rs(
 /// [`run_fused_gemm_rs`] with timeline tracing enabled; the result's
 /// `timeline` carries the rank-0 trace. Every simulated quantity is
 /// bit-identical to the untraced run.
+#[deprecated(
+    since = "0.2.0",
+    note = "trace capture is an ExecOpts field now: run a FusedGemmRs phase \
+            through cluster::execute, or run_collective(traced = true)"
+)]
 pub fn run_fused_gemm_rs_traced(
     sys: &SystemConfig,
     plan: &StagePlan,

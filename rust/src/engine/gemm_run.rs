@@ -6,8 +6,18 @@
 //! * the Sequential baseline's GEMM portion;
 //! * the CU-split contention study (Figure 6) via `cus`;
 //! * the Ideal-GEMM-RS-Overlap composition (max of isolated times).
+//!
+//! Like the collective engines, the GEMM is factored as a *per-rank state
+//! machine* ([`GemmRank`]): an event-driven stage machine over its own
+//! [`Runner`] that implements the same `step`/`deliver` protocol as
+//! [`super::fused::FusedRank`] — it just never sends messages (an isolated
+//! GEMM has no ring traffic). That makes the producer GEMM a first-class
+//! [`crate::cluster::Collective`] phase: the cluster driver advances `tp`
+//! independent skewed GEMMs through the same global event loop as every
+//! other collective, and the loopback entry points below are one-rank
+//! drivers over the identical machine.
 
-use crate::config::{ArbPolicy, SystemConfig};
+use crate::config::{ArbPolicy, GpuConfig, SystemConfig};
 use crate::gemm::traffic::{gemm_traffic, stage_reads, GemmTraffic, WriteMode};
 use crate::gemm::StagePlan;
 use crate::hw::hbm::{TrafficClass, TxnKind};
@@ -32,6 +42,193 @@ pub struct GemmRunResult {
     pub timeline: Option<RankTrace>,
 }
 
+/// Construction parameters of one [`GemmRank`].
+#[derive(Debug, Clone)]
+pub struct GemmRankSpec {
+    pub plan: StagePlan,
+    /// CUs granted to the kernel.
+    pub cus: u32,
+    pub mode: WriteMode,
+    /// Per-rank compute slowdown (1.0 = nominal; the cluster skew model).
+    pub compute_scale: f64,
+    /// Kernel launch time (offset composition; `SimTime::ZERO` submits the
+    /// stage-0 reads immediately, exactly as the legacy entry points did).
+    pub start: SimTime,
+}
+
+/// Messages of an isolated GEMM rank: there are none. The empty enum lets
+/// [`GemmRank`] share the rank-machine driver protocol with the
+/// communicating machines.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum GemmMsg {}
+
+/// One rank's isolated producer GEMM as an event-driven stage machine over
+/// its own [`Runner`]. Drive with [`GemmRank::step`] like the other rank
+/// machines; [`GemmRank::deliver`] is a no-op (no ring traffic).
+pub struct GemmRank {
+    r: Runner,
+    plan: StagePlan,
+    gpu: GpuConfig,
+    eff: f64,
+    cus: u32,
+    scale: f64,
+    write_kind: TxnKind,
+    traffic: GemmTraffic,
+    started: bool,
+    stage: u64,
+    compute_done: bool,
+    stage_ends: Vec<SimTime>,
+    last_stage_end: SimTime,
+    tags: Vec<(GroupTag, SimTime)>,
+}
+
+impl GemmRank {
+    pub fn new(sys: &SystemConfig, spec: &GemmRankSpec) -> Self {
+        Self::from_runner(Runner::new(sys, ArbPolicy::ComputePriority), spec)
+    }
+
+    /// Build the machine over an existing runner (lets callers pre-load
+    /// background traffic or reuse MCA settings).
+    pub fn from_runner(mut r: Runner, spec: &GemmRankSpec) -> Self {
+        debug_assert!(spec.compute_scale >= 1.0);
+        let traffic = gemm_traffic(&spec.plan, &r.sys.mem, spec.mode);
+        let write_kind = match spec.mode {
+            WriteMode::ThroughLlc => TxnKind::Write,
+            WriteMode::BypassLlc => TxnKind::NmcUpdate,
+        };
+        let gpu = r.sys.gpu.clone();
+        let eff = gpu.gemm_efficiency;
+        let started = spec.start.is_zero();
+        if started {
+            // Immediate submission: bit-identical to the legacy closed loop.
+            Self::submit_stage(&mut r, &spec.plan, traffic.dram_reads, 0);
+        } else {
+            r.q.schedule(spec.start, Ev::Marker { step: 0, what: 0 });
+        }
+        GemmRank {
+            r,
+            plan: spec.plan.clone(),
+            gpu,
+            eff,
+            cus: spec.cus,
+            scale: spec.compute_scale,
+            write_kind,
+            traffic,
+            started,
+            stage: 0,
+            compute_done: false,
+            stage_ends: Vec::new(),
+            last_stage_end: SimTime::ZERO,
+            tags: Vec::new(),
+        }
+    }
+
+    fn submit_stage(r: &mut Runner, plan: &StagePlan, dram_reads: u64, s: u64) {
+        let bytes = stage_reads(plan, dram_reads, s).max(r.sys.mem.txn_bytes);
+        r.submit_tagged(
+            bytes,
+            TxnKind::Read,
+            Stream::Compute,
+            TrafficClass::GemmRead,
+            GroupTag::StageReads(s),
+        );
+    }
+
+    /// Record this rank's timeline (`t3::trace`): CU stage compute and the
+    /// DRAM service lanes. Purely observational.
+    pub fn enable_trace(&mut self, rank: u64) {
+        self.r.enable_trace(rank);
+    }
+
+    /// Time of this rank's next pending event.
+    pub fn next_time(&self) -> Option<SimTime> {
+        self.r.q.peek_time()
+    }
+
+    /// A GEMM rank receives nothing; present for driver uniformity.
+    pub fn deliver(&mut self, msg: &GemmMsg) {
+        match *msg {}
+    }
+
+    /// Process one event. Returns `false` when the calendar is empty.
+    pub fn step(&mut self, _out: &mut Vec<GemmMsg>) -> bool {
+        let Some((t, ev)) = self.r.next_event() else {
+            return false;
+        };
+        let mut tags = std::mem::take(&mut self.tags);
+        self.r.drain_tags(&mut tags);
+        for (tag, blocked) in tags.drain(..) {
+            if let GroupTag::StageReads(s) = tag {
+                debug_assert_eq!(s, self.stage);
+                // Reads drained: the compute phase runs to completion,
+                // extended by the unhidden fraction of the head-of-line
+                // stalls its loads suffered behind comm traffic.
+                let ct = self.plan.stage_compute_time(s, &self.gpu, self.cus, self.eff);
+                let ct = if self.scale != 1.0 { ct * self.scale } else { ct };
+                let stall = blocked * self.gpu.stall_unhidden;
+                self.r.sink.span(Lane::CuCompute, t, t + ct + stall, 0, SpanLabel::Stage(s));
+                self.r.q.schedule_in(ct + stall, Ev::StageCompute(s));
+            }
+        }
+        self.tags = tags;
+
+        match ev {
+            Ev::Marker { step: 0, what: 0 } if !self.started => {
+                self.started = true;
+                Self::submit_stage(&mut self.r, &self.plan, self.traffic.dram_reads, 0);
+            }
+            Ev::StageCompute(s) => {
+                debug_assert_eq!(s, self.stage);
+                self.compute_done = true;
+            }
+            _ => {}
+        }
+
+        if self.compute_done {
+            // Stage end: bursty write phase, then next stage begins.
+            let wgs = self.plan.wgs_in_stage(self.stage);
+            let bytes = wgs * self.plan.wg_out_bytes();
+            self.r
+                .submit_untagged(bytes, self.write_kind, Stream::Compute, TrafficClass::GemmWrite);
+            self.stage_ends.push(t);
+            self.last_stage_end = t;
+            self.stage += 1;
+            self.compute_done = false;
+            if self.stage < self.plan.num_stages {
+                Self::submit_stage(&mut self.r, &self.plan, self.traffic.dram_reads, self.stage);
+            }
+        }
+        true
+    }
+
+    /// Consume the drained rank into its result.
+    pub fn into_result(self) -> GemmRunResult {
+        let (res, _r) = self.into_result_with_runner();
+        res
+    }
+
+    fn into_result_with_runner(mut self) -> (GemmRunResult, Runner) {
+        debug_assert!(self.r.mem.idle());
+        debug_assert_eq!(self.stage, self.plan.num_stages);
+        let timeline = self.r.take_timeline(self.last_stage_end);
+        let res = GemmRunResult {
+            // The kernel completes when its last stage retires; the write
+            // drain tail overlaps whatever follows.
+            time: self.last_stage_end,
+            counters: self.r.mem.counters,
+            traffic: self.traffic,
+            stage_ends: self.stage_ends,
+            timeline,
+        };
+        (res, self.r)
+    }
+
+    fn run_to_completion(&mut self) {
+        let mut msgs = Vec::new();
+        while self.step(&mut msgs) {}
+    }
+}
+
 /// Run one GEMM in isolation on `cus` compute units.
 pub fn run_gemm(
     sys: &SystemConfig,
@@ -51,23 +248,43 @@ pub fn run_gemm_scaled(
     mode: WriteMode,
     compute_scale: f64,
 ) -> GemmRunResult {
-    let mut r = Runner::new(sys, ArbPolicy::ComputePriority);
-    run_gemm_on_scaled(&mut r, plan, cus, mode, compute_scale)
+    let mut rank = GemmRank::new(
+        sys,
+        &GemmRankSpec {
+            plan: plan.clone(),
+            cus,
+            mode,
+            compute_scale,
+            start: SimTime::ZERO,
+        },
+    );
+    rank.run_to_completion();
+    rank.into_result()
 }
 
 /// [`run_gemm`] with timeline tracing enabled (rank 0). Bit-identical to
 /// the untraced run in every simulated quantity.
+#[deprecated(
+    since = "0.2.0",
+    note = "trace capture is an ExecOpts field now: run a Gemm phase through \
+            cluster::execute, or enable_trace on a GemmRank directly"
+)]
 pub fn run_gemm_traced(
     sys: &SystemConfig,
     plan: &StagePlan,
     cus: u32,
     mode: WriteMode,
 ) -> GemmRunResult {
-    run_gemm_scaled_traced(sys, plan, cus, mode, 1.0, 0)
+    run_gemm_traced_impl(sys, plan, cus, mode, 1.0, 0)
 }
 
 /// [`run_gemm_scaled`] with timeline tracing enabled as rank `rank` (the
 /// cluster's per-rank skewed GEMMs).
+#[deprecated(
+    since = "0.2.0",
+    note = "trace capture is an ExecOpts field now: run a Gemm phase through \
+            cluster::execute, or enable_trace on a GemmRank directly"
+)]
 pub fn run_gemm_scaled_traced(
     sys: &SystemConfig,
     plan: &StagePlan,
@@ -76,9 +293,30 @@ pub fn run_gemm_scaled_traced(
     compute_scale: f64,
     rank: u64,
 ) -> GemmRunResult {
-    let mut r = Runner::new(sys, ArbPolicy::ComputePriority);
+    run_gemm_traced_impl(sys, plan, cus, mode, compute_scale, rank)
+}
+
+fn run_gemm_traced_impl(
+    sys: &SystemConfig,
+    plan: &StagePlan,
+    cus: u32,
+    mode: WriteMode,
+    compute_scale: f64,
+    rank: u64,
+) -> GemmRunResult {
+    let mut r = GemmRank::new(
+        sys,
+        &GemmRankSpec {
+            plan: plan.clone(),
+            cus,
+            mode,
+            compute_scale,
+            start: SimTime::ZERO,
+        },
+    );
     r.enable_trace(rank);
-    run_gemm_on_scaled(&mut r, plan, cus, mode, compute_scale)
+    r.run_to_completion();
+    r.into_result()
 }
 
 /// Run a GEMM on an existing runner (lets callers pre-load background
@@ -99,89 +337,25 @@ fn run_gemm_on_scaled(
     mode: WriteMode,
     compute_scale: f64,
 ) -> GemmRunResult {
-    debug_assert!(compute_scale >= 1.0);
-    let traffic = gemm_traffic(plan, &r.sys.mem, mode);
-    let write_kind = match mode {
-        WriteMode::ThroughLlc => TxnKind::Write,
-        WriteMode::BypassLlc => TxnKind::NmcUpdate,
-    };
-    let gpu = r.sys.gpu.clone();
-    let eff = gpu.gemm_efficiency;
-
-    let mut stage_ends = Vec::with_capacity(plan.num_stages as usize);
-    let mut tags = Vec::new();
-
-    // Stage state machine: a stage's read phase must drain before its
-    // compute phase can retire — GPU WGs stall until their tiles arrive,
-    // and there is limited latency hiding across a stage boundary. This is
-    // the coupling through which bursty RS traffic slows the producer
-    // (Figure 17b).
-    let mut stage = 0u64;
-    let mut compute_done = false;
-
-    let start_stage = |r: &mut Runner, s: u64| {
-        let bytes = stage_reads(plan, traffic.dram_reads, s).max(r.sys.mem.txn_bytes);
-        r.submit_tagged(
-            bytes,
-            TxnKind::Read,
-            Stream::Compute,
-            TrafficClass::GemmRead,
-            GroupTag::StageReads(s),
-        );
-    };
-    start_stage(r, 0);
-
-    let mut last_stage_end = SimTime::ZERO;
-    while let Some((t, ev)) = r.next_event() {
-        r.drain_tags(&mut tags);
-        for (tag, blocked) in tags.drain(..) {
-            if let GroupTag::StageReads(s) = tag {
-                debug_assert_eq!(s, stage);
-                // Reads drained: the compute phase runs to completion,
-                // extended by the unhidden fraction of the head-of-line
-                // stalls its loads suffered behind comm traffic.
-                let ct = plan.stage_compute_time(s, &gpu, cus, eff);
-                let ct = if compute_scale != 1.0 {
-                    ct * compute_scale
-                } else {
-                    ct
-                };
-                let stall = blocked * gpu.stall_unhidden;
-                r.sink.span(Lane::CuCompute, t, t + ct + stall, 0, SpanLabel::Stage(s));
-                r.q.schedule_in(ct + stall, Ev::StageCompute(s));
-            }
-        }
-        if let Ev::StageCompute(s) = ev {
-            debug_assert_eq!(s, stage);
-            compute_done = true;
-        }
-        if compute_done {
-            // Stage end: bursty write phase, then next stage begins.
-            let wgs = plan.wgs_in_stage(stage);
-            let bytes = wgs * plan.wg_out_bytes();
-            r.submit_untagged(bytes, write_kind, Stream::Compute, TrafficClass::GemmWrite);
-            stage_ends.push(t);
-            last_stage_end = t;
-            stage += 1;
-            compute_done = false;
-            if stage < plan.num_stages {
-                start_stage(r, stage);
-            }
-        }
-    }
-    debug_assert!(r.mem.idle());
-    debug_assert_eq!(stage, plan.num_stages);
-
-    let timeline = r.take_timeline(last_stage_end);
-    GemmRunResult {
-        // The kernel completes when its last stage retires; the write
-        // drain tail overlaps whatever follows.
-        time: last_stage_end,
-        counters: r.mem.counters,
-        traffic,
-        stage_ends,
-        timeline,
-    }
+    // Move the caller's runner into the rank machine and hand it back after
+    // the drain, so pre-loaded state survives the run.
+    let policy = r.mem.policy();
+    let sys = r.sys.clone();
+    let owned = std::mem::replace(r, Runner::new(&sys, policy));
+    let mut rank = GemmRank::from_runner(
+        owned,
+        &GemmRankSpec {
+            plan: plan.clone(),
+            cus,
+            mode,
+            compute_scale,
+            start: SimTime::ZERO,
+        },
+    );
+    rank.run_to_completion();
+    let (res, runner) = rank.into_result_with_runner();
+    *r = runner;
+    res
 }
 
 #[cfg(test)]
@@ -276,5 +450,55 @@ mod tests {
             assert!(w[1] > w[0]);
         }
         assert_eq!(*res.stage_ends.last().unwrap(), res.time);
+    }
+
+    #[test]
+    fn start_offset_shifts_the_whole_run() {
+        // The rank machine is shift-invariant: launching at T ends exactly
+        // T later (the property phase-offset composition relies on).
+        let sys = SystemConfig::table1();
+        let p = plan(4096, 2048, 512);
+        let base = run_gemm(&sys, &p, 80, WriteMode::BypassLlc);
+        let t0 = SimTime::us(73);
+        let mut rank = GemmRank::new(
+            &sys,
+            &GemmRankSpec {
+                plan: p.clone(),
+                cus: 80,
+                mode: WriteMode::BypassLlc,
+                compute_scale: 1.0,
+                start: t0,
+            },
+        );
+        rank.run_to_completion();
+        let shifted = rank.into_result();
+        assert_eq!(shifted.time, base.time + t0);
+        assert_eq!(shifted.counters, base.counters);
+        for (a, b) in shifted.stage_ends.iter().zip(&base.stage_ends) {
+            assert_eq!(*a, *b + t0);
+        }
+    }
+
+    #[test]
+    fn rank_machine_matches_legacy_entry_point() {
+        // The event-driven machine is the legacy closed loop, bit-for-bit.
+        let sys = SystemConfig::table1();
+        let p = plan(8192, 4256, 2128);
+        let legacy = run_gemm(&sys, &p, 80, WriteMode::ThroughLlc);
+        let mut rank = GemmRank::new(
+            &sys,
+            &GemmRankSpec {
+                plan: p.clone(),
+                cus: 80,
+                mode: WriteMode::ThroughLlc,
+                compute_scale: 1.0,
+                start: SimTime::ZERO,
+            },
+        );
+        rank.run_to_completion();
+        let machine = rank.into_result();
+        assert_eq!(machine.time, legacy.time);
+        assert_eq!(machine.stage_ends, legacy.stage_ends);
+        assert_eq!(machine.counters, legacy.counters);
     }
 }

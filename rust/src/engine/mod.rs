@@ -31,9 +31,19 @@
 //! * [`allgather`]      — the T3-fused ring all-gather (§7.1): triggered
 //!   by the fused RS's tracker, cut-through forwarding, optional
 //!   consumer-GEMM overlap ([`allgather::AllGatherRank`] is the rank
-//!   machine).
+//!   machine);
+//! * [`alltoall`]       — the T3-fused ring all-to-all (§7.1): sliced
+//!   expert-parallel dispatch with per-slice track-and-trigger sends and
+//!   cut-through forwarding ([`alltoall::AllToAllRank`] is the rank
+//!   machine — added purely as a [`crate::cluster::Collective`] impl, the
+//!   worked example of the pluggable-collective API).
+//!
+//! Every machine plugs into the [`crate::cluster::Collective`] trait; the
+//! composition of machines into scenarios is a [`crate::cluster::Program`]
+//! executed by [`crate::cluster::execute`].
 
 pub mod allgather;
+pub mod alltoall;
 pub mod collective_run;
 pub mod fused;
 pub mod gemm_run;
@@ -155,6 +165,16 @@ impl Runner {
     pub fn enable_trace(&mut self, rank: u64) {
         self.sink = TraceSink::on(rank);
         self.mem.enable_lane_trace();
+    }
+
+    /// Whether timeline recording is currently enabled. Makes the trace
+    /// state explicit: [`Runner::take_timeline`] returns `Some` (possibly
+    /// with zero spans) exactly when this is `true` — so "tracing off" and
+    /// "traced but empty" are distinguishable without guessing. Note that
+    /// `take_timeline` drains the sink, after which this reports `false`
+    /// again.
+    pub fn trace_enabled(&self) -> bool {
+        self.sink.enabled()
     }
 
     /// Drain the recorded timeline (if tracing was enabled), folding in the
@@ -433,6 +453,26 @@ mod tests {
         assert_eq!(total, txns);
         let spread = (last - first.unwrap()).as_us_f64();
         assert!((10.0..16.0).contains(&spread), "spread {spread} us");
+    }
+
+    #[test]
+    fn trace_state_is_explicit_on_the_runner() {
+        // Satellite regression: `take_timeline` on a never-enabled runner
+        // is `None` ("tracing off"), while an enabled runner that recorded
+        // nothing still yields `Some` (an empty timeline with the end
+        // stamped) — the two states are distinguishable via
+        // `trace_enabled`.
+        let sys = SystemConfig::table1();
+        let mut r = Runner::new(&sys, ArbPolicy::ComputePriority);
+        assert!(!r.trace_enabled());
+        assert!(r.take_timeline(SimTime::us(1)).is_none());
+        r.enable_trace(3);
+        assert!(r.trace_enabled());
+        let t = r.take_timeline(SimTime::us(2)).expect("enabled => Some");
+        assert_eq!(t.rank, 3);
+        assert_eq!(t.end, SimTime::us(2));
+        assert!(t.spans.is_empty());
+        assert!(!r.trace_enabled(), "take_timeline drains the sink");
     }
 
     #[test]

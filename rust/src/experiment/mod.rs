@@ -6,18 +6,26 @@
 //! enum:
 //!
 //! * [`ScenarioSpec`] decomposes "a configuration" into orthogonal knobs —
-//!   how GEMM and reduce-scatter overlap ([`OverlapMode`]), the producer's
-//!   write mode, the memory-controller arbitration policy, CU partitioning
-//!   between compute and communication kernels, NMC on/off for the RS, and
-//!   whether the trailing all-gather is serialized or skipped. The five
-//!   paper configurations are presets ([`registry`]); arbitrary new
-//!   combinations (T3 without MCA, partial-CU ideal overlap, RS-only
-//!   bounds) compose without touching the engine. The cluster axis
-//!   (`ScenarioSpec::cluster`) swaps the single-rank homogeneous mirror
-//!   for the multi-rank [`crate::cluster`] engine, adding per-rank
-//!   skew/straggler and two-tier topology knobs — `Some(uniform)` and
-//!   `None` are bit-identical, so the legacy path is the cluster's
-//!   special case.
+//!   which collective family the sub-layer runs ([`CollectiveKind`]: the
+//!   tensor-parallel all-reduce decomposition or the expert-parallel
+//!   all-to-all), how GEMM and reduce-scatter overlap ([`OverlapMode`]),
+//!   the producer's write mode, the memory-controller arbitration policy,
+//!   CU partitioning between compute and communication kernels, NMC on/off
+//!   for the RS, and whether the trailing all-gather is serialized, fused,
+//!   or skipped. The five paper configurations are presets ([`registry`]);
+//!   arbitrary new combinations compose without touching the engine. The
+//!   cluster axis (`ScenarioSpec::cluster`) swaps the single-rank
+//!   homogeneous mirror for the multi-rank [`crate::cluster`] engine —
+//!   `Some(uniform)` and `None` are bit-identical, so the legacy path is
+//!   the cluster's special case.
+//! * **Compilation, not dispatch**: [`ScenarioSpec::compile`] lowers a
+//!   spec into a [`crate::cluster::Program`] — phases of pluggable
+//!   [`crate::cluster::Collective`]s chained by
+//!   [`crate::cluster::StartRule`]s — and [`ScenarioSpec::run`] executes
+//!   it through the single entry point [`crate::cluster::execute`].
+//!   Trace capture is an [`crate::cluster::ExecOpts`] field, so
+//!   [`ScenarioSpec::run_traced`] is a thin wrapper, not a parallel code
+//!   path.
 //! * [`ExperimentSpec`] declares a grid over systems x models x TP degrees
 //!   x sub-layers x scenarios and executes it on a work-stealing
 //!   thread-pool ([`executor`]), producing a [`ResultSet`] that supports
@@ -25,8 +33,8 @@
 //!   ASCII/CSV rendering.
 //!
 //! The legacy enum API ([`crate::exec::Scenario`]) and the figure harness
-//! ([`crate::harness`]) are thin layers over this module. See DESIGN.md for
-//! the full field/preset/grammar reference.
+//! ([`crate::harness`]) are thin layers over this module. See DESIGN.md
+//! ("Execution API") for the full trait/pipeline/preset reference.
 
 pub mod executor;
 pub mod grid;
@@ -35,20 +43,35 @@ pub mod results;
 pub use grid::ExperimentSpec;
 pub use results::{Cell, EndToEnd, ResultSet};
 
-use crate::cluster::{self, AgClusterSpec, ClusterModel, Interleave, RingClusterSpec};
-use crate::config::{ArbPolicy, SystemConfig};
-use crate::engine::allgather::{run_fused_ag, run_fused_ag_traced, ConsumerSpec};
-use crate::engine::collective_run::{
-    run_ag_baseline, run_ring_traced, run_rs_baseline, run_rs_nmc, RingKind,
+use crate::cluster::{
+    execute, ClusterModel, ExecOpts, ExecTarget, FusedAgCollective, FusedGemmRsCollective,
+    GemmCollective, Interleave, PhaseRole, Program, RingCollective, RunReport, StartRule,
 };
-use crate::engine::fused::{run_fused_gemm_rs, run_fused_gemm_rs_traced, FusedOpts};
-use crate::engine::gemm_run::{run_gemm, run_gemm_traced};
+use crate::config::{ArbPolicy, SystemConfig};
+use crate::engine::allgather::ConsumerSpec;
+use crate::engine::alltoall::{A2aMode, AllToAllCollective};
+use crate::engine::collective_run::RingKind;
+use crate::engine::fused::FusedOpts;
 use crate::gemm::traffic::WriteMode;
 use crate::gemm::{StagePlan, Tiling};
 use crate::models::{sublayer_gemm, ModelCfg, SubLayer};
 use crate::sim::stats::DramCounters;
 use crate::sim::time::SimTime;
-use crate::trace::{RankTrace, Trace};
+use crate::trace::Trace;
+
+/// Which collective family the sub-layer runs.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum CollectiveKind {
+    /// Sliced GEMM + ring reduce-scatter + trailing all-gather — the
+    /// tensor-parallel all-reduce decomposition every paper scenario uses.
+    AllReduce,
+    /// Sliced expert-parallel dispatch: the producer GEMM's output is
+    /// scattered to every peer through a ring-routed all-to-all
+    /// ([`crate::engine::alltoall`]). [`OverlapMode::Fused`] selects T3
+    /// track-and-trigger per-slice sends; anything else serializes the
+    /// dispatch after the GEMM.
+    AllToAll,
+}
 
 /// How the producer GEMM and the reduce-scatter are composed in time.
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
@@ -116,6 +139,8 @@ pub enum AgMode {
 pub struct ScenarioSpec {
     /// Display / registry name.
     pub name: String,
+    /// Which collective family the sub-layer runs.
+    pub collective: CollectiveKind,
     pub overlap: OverlapMode,
     /// Producer GEMM write mode. Non-fused paths default to the baseline
     /// write-allocate ([`WriteMode::ThroughLlc`]); the fused engine
@@ -154,6 +179,7 @@ impl ScenarioSpec {
     pub fn new(name: impl Into<String>) -> Self {
         ScenarioSpec {
             name: name.into(),
+            collective: CollectiveKind::AllReduce,
             overlap: OverlapMode::Serialized,
             write_mode: WriteMode::ThroughLlc,
             policy: ArbPolicy::RoundRobin,
@@ -254,6 +280,15 @@ impl ScenarioSpec {
         self
     }
 
+    /// Run the sub-layer as an expert-parallel all-to-all dispatch
+    /// ([`CollectiveKind::AllToAll`]) instead of the all-reduce
+    /// decomposition. The AG axis does not apply and is cleared.
+    pub fn all_to_all(mut self) -> Self {
+        self.collective = CollectiveKind::AllToAll;
+        self.ag = AgMode::Skip;
+        self
+    }
+
     pub fn trace_bin(mut self, bin: SimTime) -> Self {
         self.trace_bin = Some(bin);
         self
@@ -302,11 +337,170 @@ impl ScenarioSpec {
                 WriteMode::BypassLlc => "bypass",
             },
         );
+        if self.collective == CollectiveKind::AllToAll {
+            s.push_str(" coll=a2a");
+        }
         if let Some(cm) = &self.cluster {
             s.push(' ');
             s.push_str(&cm.describe());
         }
         s
+    }
+
+    /// The consumer-GEMM spec of this scenario's AG treatment: the next
+    /// sub-layer's GEMM (same plan as a stand-in) for
+    /// [`AgMode::OverlapConsumer`], nothing otherwise. Shared by the
+    /// program compiler and [`crate::harness::cluster_report`] so the
+    /// report cannot drift from what the measurement simulates.
+    pub fn ag_consumer_spec(&self, plan: &StagePlan) -> Option<ConsumerSpec> {
+        (self.ag == AgMode::OverlapConsumer).then(|| ConsumerSpec {
+            plan: plan.clone(),
+            write_mode: self.write_mode,
+            compute_scale: 1.0,
+        })
+    }
+
+    /// Lower this scenario into an executable [`Program`]: one phase per
+    /// collective, chained by the start rules that encode the overlap
+    /// mode. Adding a collective means adding a `Collective` impl and a
+    /// compile arm — not new entry points.
+    pub fn compile(
+        &self,
+        sys: &SystemConfig,
+        model: &ModelCfg,
+        tp: u64,
+        sub: SubLayer,
+    ) -> Program {
+        let shape = sublayer_gemm(model, tp, sub);
+        let plan = StagePlan::new(shape, Tiling::default(), &sys.gpu);
+        let ar_bytes = shape.out_bytes();
+        let gemm_cus = self.gemm_cus.resolve(sys);
+        let comm_cus = self.comm_cus.resolve(sys);
+        let mut prog = Program::new(self.name.clone(), tp);
+
+        if self.collective == CollectiveKind::AllToAll {
+            let mode = if self.overlap == OverlapMode::Fused {
+                A2aMode::Fused
+            } else {
+                A2aMode::Sequential
+            };
+            return prog.phase(
+                PhaseRole::AllToAll,
+                StartRule::AtZero,
+                AllToAllCollective {
+                    plan,
+                    write_mode: self.write_mode,
+                    bytes: ar_bytes,
+                    policy: self.policy,
+                    mode,
+                },
+            );
+        }
+
+        let rs_kind = if self.rs_nmc { RingKind::RsNmc } else { RingKind::RsCu };
+        prog = match self.overlap {
+            OverlapMode::Serialized => prog
+                .phase(
+                    PhaseRole::Gemm,
+                    StartRule::AtZero,
+                    GemmCollective {
+                        plan: plan.clone(),
+                        cus: gemm_cus,
+                        write_mode: self.write_mode,
+                    },
+                )
+                .phase(
+                    PhaseRole::ReduceScatter,
+                    StartRule::AfterPrev,
+                    RingCollective {
+                        bytes: ar_bytes,
+                        cus: comm_cus,
+                        kind: rs_kind,
+                    },
+                ),
+            OverlapMode::Ideal => prog
+                .phase(
+                    PhaseRole::Gemm,
+                    StartRule::AtZero,
+                    GemmCollective {
+                        plan: plan.clone(),
+                        cus: gemm_cus,
+                        write_mode: self.write_mode,
+                    },
+                )
+                .phase(
+                    PhaseRole::ReduceScatter,
+                    StartRule::AtZero,
+                    RingCollective {
+                        bytes: ar_bytes,
+                        cus: comm_cus,
+                        kind: rs_kind,
+                    },
+                ),
+            OverlapMode::Fused => prog.phase(
+                PhaseRole::FusedGemmRs,
+                StartRule::AtZero,
+                FusedGemmRsCollective {
+                    plan: plan.clone(),
+                    opts: FusedOpts {
+                        policy: self.policy,
+                        write_mode: self.write_mode,
+                        trace_bin: self.trace_bin,
+                    },
+                },
+            ),
+        };
+
+        // The trailing all-gather. Serialized compositions launch it at
+        // each rank's previous-phase end; ideal overlap gates it on the
+        // elementwise max of the overlapped phases; the fused engine hands
+        // it its per-rank AG trigger (chunk reduced + egress drained).
+        let ag_rule = match self.overlap {
+            OverlapMode::Serialized => StartRule::AfterPrev,
+            OverlapMode::Ideal => StartRule::AfterAllPrev,
+            OverlapMode::Fused => StartRule::AtPrevTriggers,
+        };
+        match self.ag {
+            AgMode::Skip => prog,
+            AgMode::RingCu => {
+                // The CU kernel always waits for the rank's full drain.
+                let rule = if self.overlap == OverlapMode::Fused {
+                    StartRule::AfterPrev
+                } else {
+                    ag_rule
+                };
+                prog.phase(
+                    PhaseRole::AllGather,
+                    rule,
+                    RingCollective {
+                        bytes: ar_bytes,
+                        cus: comm_cus,
+                        kind: RingKind::AgCu,
+                    },
+                )
+            }
+            AgMode::FusedTrigger | AgMode::OverlapConsumer => prog.phase(
+                PhaseRole::AllGather,
+                ag_rule,
+                FusedAgCollective {
+                    bytes: ar_bytes,
+                    policy: self.policy,
+                    consumer: self.ag_consumer_spec(&plan),
+                },
+            ),
+        }
+    }
+
+    /// The [`crate::cluster::ExecOpts`] this scenario runs under.
+    fn exec_opts(&self, traced: bool) -> ExecOpts {
+        ExecOpts {
+            target: match &self.cluster {
+                Some(cm) => ExecTarget::Cluster(cm.clone()),
+                None => ExecTarget::Mirror,
+            },
+            trace: traced,
+            interleave: Interleave::Ascending,
+        }
     }
 
     /// Simulate one (system, model, tp, sub-layer) under this scenario.
@@ -317,17 +511,18 @@ impl ScenarioSpec {
         tp: u64,
         sub: SubLayer,
     ) -> Measurement {
-        self.run_full(sys, model, tp, sub, false).0
+        let prog = self.compile(sys, model, tp, sub);
+        let report = execute(sys, &prog, &self.exec_opts(false));
+        self.measure(&report)
     }
 
     /// [`ScenarioSpec::run`] with timeline capture (`t3::trace`): returns
     /// the measurement — bit-identical to the untraced run, recording is
     /// purely observational — plus the composed [`Trace`]: one rank for
-    /// the single-rank mirror path, `tp` ranks on the cluster path. Phase
-    /// traces compose exactly as the measurement arithmetic does:
-    /// serialized phases are shifted to their start, overlapped phases
-    /// merge in place, and triggered/cluster phases are already absolute,
-    /// so trace-derived totals equal the measurement's to the bit.
+    /// the single-rank mirror path, `tp` ranks on the cluster path. Every
+    /// phase runs at its absolute start offset, so per-rank phase
+    /// timelines merge without shifting and trace-derived totals equal the
+    /// measurement's to the bit.
     pub fn run_traced(
         &self,
         sys: &SystemConfig,
@@ -335,495 +530,59 @@ impl ScenarioSpec {
         tp: u64,
         sub: SubLayer,
     ) -> (Measurement, Trace) {
-        let (m, t) = self.run_full(sys, model, tp, sub, true);
-        (m, t.expect("run_full(traced=true) produces a trace"))
+        let prog = self.compile(sys, model, tp, sub);
+        let mut report = execute(sys, &prog, &self.exec_opts(true));
+        let m = self.measure(&report);
+        let trace = report.trace.take().expect("ExecOpts{trace:true} yields a trace");
+        (m, trace)
     }
 
-    fn run_full(
-        &self,
-        sys: &SystemConfig,
-        model: &ModelCfg,
-        tp: u64,
-        sub: SubLayer,
-        traced: bool,
-    ) -> (Measurement, Option<Trace>) {
-        if let Some(cm) = &self.cluster {
-            return self.run_cluster_full(sys, model, tp, sub, cm, traced);
-        }
-        let shape = sublayer_gemm(model, tp, sub);
-        let plan = StagePlan::new(shape, Tiling::default(), &sys.gpu);
-        let ar_bytes = shape.out_bytes();
-        let gemm_cus = self.gemm_cus.resolve(sys);
-        let comm_cus = self.comm_cus.resolve(sys);
-
-        let run_g = |cus: u32| {
-            if traced {
-                run_gemm_traced(sys, &plan, cus, self.write_mode)
-            } else {
-                run_gemm(sys, &plan, cus, self.write_mode)
-            }
-        };
-        let run_rs = |cus: u32| {
-            if traced {
-                let kind = if self.rs_nmc { RingKind::RsNmc } else { RingKind::RsCu };
-                run_ring_traced(sys, ar_bytes, tp, cus, kind)
-            } else if self.rs_nmc {
-                run_rs_nmc(sys, ar_bytes, tp)
-            } else {
-                run_rs_baseline(sys, ar_bytes, tp, cus)
-            }
-        };
-
-        match self.overlap {
-            OverlapMode::Serialized => {
-                let mut g = run_g(gemm_cus);
-                let mut rs = run_rs(comm_cus);
-                let pre = g.time + rs.time;
-                let (ag_time, total, ag_counters, ag_tl) =
-                    self.compose_ag(sys, &plan, ar_bytes, tp, comm_cus, pre, pre, traced);
-                let mut counters = g.counters;
-                counters.add(&rs.counters);
-                counters.add(&ag_counters);
-                let m = Measurement {
-                    gemm: g.time,
-                    rs: rs.time,
-                    ag: ag_time,
-                    total,
-                    counters,
-                };
-                let g_time = g.time;
-                let trace = traced.then(|| {
-                    let mut t0 = g.timeline.take().unwrap_or_else(|| RankTrace::new(0));
-                    // The RS runs after the GEMM: its trace shifts to the
-                    // GEMM's retirement, exactly as the total adds.
-                    if let Some(x) = rs.timeline.take() {
-                        t0.merge(x.shift(g_time));
-                    }
-                    if let Some(x) = ag_tl {
-                        t0.merge(x);
-                    }
-                    Trace::single(self.name.clone(), t0)
-                });
-                (m, trace)
-            }
-            OverlapMode::Ideal => {
-                let mut g = run_g(gemm_cus);
-                let mut rs = run_rs(comm_cus);
-                let pre = g.time.max(rs.time);
-                let (ag_time, total, ag_counters, ag_tl) =
-                    self.compose_ag(sys, &plan, ar_bytes, tp, comm_cus, pre, pre, traced);
-                let mut counters = g.counters;
-                counters.add(&rs.counters);
-                counters.add(&ag_counters);
-                let m = Measurement {
-                    gemm: g.time,
-                    rs: rs.time,
-                    ag: ag_time,
-                    total,
-                    counters,
-                };
-                let trace = traced.then(|| {
-                    let mut t0 = g.timeline.take().unwrap_or_else(|| RankTrace::new(0));
-                    // Ideal overlap: GEMM and RS run side by side from t=0.
-                    if let Some(x) = rs.timeline.take() {
-                        t0.merge(x);
-                    }
-                    if let Some(x) = ag_tl {
-                        t0.merge(x);
-                    }
-                    Trace::single(self.name.clone(), t0)
-                });
-                (m, trace)
-            }
-            OverlapMode::Fused => {
-                let opts = FusedOpts {
-                    policy: self.policy,
-                    write_mode: self.write_mode,
-                    trace_bin: self.trace_bin,
-                };
-                let mut fused = if traced {
-                    run_fused_gemm_rs_traced(sys, &plan, tp, &opts)
-                } else {
-                    run_fused_gemm_rs(sys, &plan, tp, &opts)
-                };
-                // The fused-AG trigger: the rank's own chunk is fully
-                // reduced and its egress port has drained the RS's
-                // remaining windows (the calendar-drain tail past the
-                // trigger is ingress-side only, so nothing is
-                // double-booked).
-                let trigger = fused.ag_trigger();
-                let (ag_time, total, ag_counters, ag_tl) =
-                    self.compose_ag(sys, &plan, ar_bytes, tp, comm_cus, fused.total, trigger, traced);
-                let mut counters = fused.counters;
-                counters.add(&ag_counters);
-                let m = Measurement {
-                    gemm: fused.gemm_time,
-                    rs: fused.total - fused.gemm_time,
-                    ag: ag_time,
-                    total,
-                    counters,
-                };
-                let trace = traced.then(|| {
-                    let mut t0 = fused.timeline.take().unwrap_or_else(|| RankTrace::new(0));
-                    // Triggered phases carry absolute times; merge in place.
-                    if let Some(x) = ag_tl {
-                        t0.merge(x);
-                    }
-                    Trace::single(self.name.clone(), t0)
-                });
-                (m, trace)
-            }
-        }
-    }
-
-    /// The consumer-GEMM spec of this scenario's AG treatment: the next
-    /// sub-layer's GEMM (same plan as a stand-in) for
-    /// [`AgMode::OverlapConsumer`], nothing otherwise. Shared by the
-    /// measurement compositions and [`crate::harness::cluster_report`] so
-    /// the report cannot drift from what the measurement simulates.
-    pub fn ag_consumer_spec(&self, plan: &StagePlan) -> Option<ConsumerSpec> {
-        (self.ag == AgMode::OverlapConsumer).then(|| ConsumerSpec {
-            plan: plan.clone(),
-            write_mode: self.write_mode,
-            compute_scale: 1.0,
-        })
-    }
-
-    /// Compose the trailing all-gather onto a finished GEMM(+RS) phase on
-    /// the single-rank (loopback mirror) path. `pre_total` is when the
-    /// pre-AG phase fully drains; `trigger` is when the rank's own
-    /// reduced chunk becomes available (== `pre_total` except for the
-    /// fused engine, whose tracker fires before the drain). Returns
-    /// `(ag_time, total, ag_counters, ag_timeline)` — the timeline is
-    /// `Some` only when `traced`, shifted/absolute so it merges into the
-    /// scenario trace without further adjustment.
-    #[allow(clippy::too_many_arguments)]
-    fn compose_ag(
-        &self,
-        sys: &SystemConfig,
-        plan: &StagePlan,
-        ar_bytes: u64,
-        tp: u64,
-        comm_cus: u32,
-        pre_total: SimTime,
-        trigger: SimTime,
-        traced: bool,
-    ) -> (SimTime, SimTime, DramCounters, Option<RankTrace>) {
-        match self.ag {
-            AgMode::RingCu => {
-                let mut ag = if traced {
-                    run_ring_traced(sys, ar_bytes, tp, comm_cus, RingKind::AgCu)
-                } else {
-                    run_ag_baseline(sys, ar_bytes, tp, comm_cus)
-                };
-                // The serialized AG kernel launches at the pre-phase drain.
-                let tl = ag.timeline.take().map(|t| t.shift(pre_total));
-                (ag.time, pre_total + ag.time, ag.counters, tl)
-            }
-            AgMode::Skip => (SimTime::ZERO, pre_total, DramCounters::default(), None),
-            AgMode::FusedTrigger | AgMode::OverlapConsumer => {
-                let consumer = self.ag_consumer_spec(plan);
-                let mut ag = if traced {
-                    run_fused_ag_traced(sys, ar_bytes, tp, trigger, self.policy, consumer)
-                } else {
-                    run_fused_ag(sys, ar_bytes, tp, trigger, self.policy, consumer)
-                };
-                // The triggered AG already runs at absolute time.
-                let tl = ag.timeline.take();
-                let total = pre_total.max(ag.ag_done);
-                (total - pre_total, total, uncharge_consumer(ag.counters), tl)
-            }
-        }
-    }
-
-    /// The multi-rank path of [`ScenarioSpec::run`]: every TP rank is a
-    /// communicating node of `cm`; ring collectives run hop-by-hop with
-    /// per-rank start offsets, so skew and slow links surface in the
-    /// measurement. Reported counters are rank 0's (uniform ranks are
-    /// identical; per-rank detail is available through [`crate::cluster`]
-    /// directly). The timing fields aggregate the worst rank, matching the
-    /// single-rank semantics when `cm` is uniform — bit-for-bit. When
-    /// `traced`, per-rank phase traces merge without shifts: every cluster
-    /// rank machine carries its own absolute start offset.
-    fn run_cluster_full(
-        &self,
-        sys: &SystemConfig,
-        model: &ModelCfg,
-        tp: u64,
-        sub: SubLayer,
-        cm: &ClusterModel,
-        traced: bool,
-    ) -> (Measurement, Option<Trace>) {
-        let shape = sublayer_gemm(model, tp, sub);
-        let plan = StagePlan::new(shape, Tiling::default(), &sys.gpu);
-        let ar_bytes = shape.out_bytes();
-        let gemm_cus = self.gemm_cus.resolve(sys);
-        let comm_cus = self.comm_cus.resolve(sys);
-        let order = Interleave::Ascending;
-        let rs_kind = if self.rs_nmc { RingKind::RsNmc } else { RingKind::RsCu };
-
-        let ring = |kind: RingKind, starts: Vec<SimTime>| {
-            let spec = RingClusterSpec {
-                bytes: ar_bytes,
-                tp,
-                cus: comm_cus,
-                kind,
-                starts,
+    /// Slice a [`RunReport`] into the sub-layer measurement. The report's
+    /// counters already follow the measurement convention (rank 0, fused-AG
+    /// consumer traffic uncharged).
+    fn measure(&self, r: &RunReport) -> Measurement {
+        if self.collective == CollectiveKind::AllToAll {
+            let ph = r.phase(PhaseRole::AllToAll).expect("a2a program has its phase");
+            return Measurement {
+                gemm: ph.gemm_end,
+                rs: r.total - ph.gemm_end,
+                ag: SimTime::ZERO,
+                total: r.total,
+                counters: r.counters,
             };
-            if traced {
-                cluster::run_ring_cluster_traced(sys, &spec, cm, order)
-            } else {
-                cluster::run_ring_cluster(sys, &spec, cm, order)
-            }
-        };
-        let gemm_cluster = || {
-            if traced {
-                cluster::run_gemm_cluster_traced(sys, &plan, gemm_cus, self.write_mode, tp, cm)
-            } else {
-                cluster::run_gemm_cluster(sys, &plan, gemm_cus, self.write_mode, tp, cm)
-            }
-        };
-
-        match self.overlap {
+        }
+        let pre = r.pre_ag_end();
+        let (gemm, rs) = match self.overlap {
             OverlapMode::Serialized => {
-                let mut gemms = gemm_cluster();
-                let gemm_end = gemms.iter().map(|g| g.time).max().unwrap();
-                let mut rs = ring(rs_kind, gemms.iter().map(|g| g.time).collect());
-                let rs_end = rs.end();
-                // Each rank's AG (kernel or fused trigger) starts at its
-                // own RS end.
-                let rs_ends: Vec<SimTime> = rs.per_rank.iter().map(|r| r.time).collect();
-                let (ag_time, total, ag_counters, ag_tls) = self.compose_ag_cluster(
-                    sys, &plan, ar_bytes, tp, comm_cus, cm, order, rs_end, rs_ends, traced,
-                );
-                let mut counters = gemms[0].counters;
-                counters.add(&rs.per_rank[0].counters);
-                counters.add(&ag_counters);
-                let m = Measurement {
-                    gemm: gemm_end,
-                    rs: rs_end - gemm_end,
-                    ag: ag_time,
-                    total,
-                    counters,
-                };
-                let trace = traced.then(|| {
-                    let mut ranks: Vec<RankTrace> = (0..tp as usize)
-                        .map(|r| {
-                            let mut t0 = gemms[r]
-                                .timeline
-                                .take()
-                                .unwrap_or_else(|| RankTrace::new(r as u64));
-                            if let Some(x) = rs.per_rank[r].timeline.take() {
-                                t0.merge(x);
-                            }
-                            t0
-                        })
-                        .collect();
-                    if let Some(tls) = ag_tls {
-                        for (r, x) in tls.into_iter().enumerate() {
-                            ranks[r].merge(x);
-                        }
-                    }
-                    Trace {
-                        name: self.name.clone(),
-                        ranks,
-                    }
-                });
-                (m, trace)
+                let g = r.phase(PhaseRole::Gemm).expect("serialized has a GEMM phase").end;
+                let rs = r
+                    .phase(PhaseRole::ReduceScatter)
+                    .expect("serialized has an RS phase")
+                    .end;
+                (g, rs - g)
             }
             OverlapMode::Ideal => {
-                let mut gemms = gemm_cluster();
-                let gemm_end = gemms.iter().map(|g| g.time).max().unwrap();
-                // Ideal overlap: the collective runs unconstrained from t=0.
-                let mut rs = ring(rs_kind, vec![SimTime::ZERO; tp as usize]);
-                let rs_iso = rs.per_rank.iter().map(|r| r.time).max().unwrap();
-                let ideal_ends: Vec<SimTime> = gemms
-                    .iter()
-                    .zip(&rs.per_rank)
-                    .map(|(g, r)| g.time.max(r.time))
-                    .collect();
-                let ideal_end = ideal_ends.iter().copied().max().unwrap();
-                let (ag_time, total, ag_counters, ag_tls) = self.compose_ag_cluster(
-                    sys, &plan, ar_bytes, tp, comm_cus, cm, order, ideal_end, ideal_ends, traced,
-                );
-                let mut counters = gemms[0].counters;
-                counters.add(&rs.per_rank[0].counters);
-                counters.add(&ag_counters);
-                let m = Measurement {
-                    gemm: gemm_end,
-                    rs: rs_iso,
-                    ag: ag_time,
-                    total,
-                    counters,
-                };
-                let trace = traced.then(|| {
-                    let mut ranks: Vec<RankTrace> = (0..tp as usize)
-                        .map(|r| {
-                            let mut t0 = gemms[r]
-                                .timeline
-                                .take()
-                                .unwrap_or_else(|| RankTrace::new(r as u64));
-                            if let Some(x) = rs.per_rank[r].timeline.take() {
-                                t0.merge(x);
-                            }
-                            t0
-                        })
-                        .collect();
-                    if let Some(tls) = ag_tls {
-                        for (r, x) in tls.into_iter().enumerate() {
-                            ranks[r].merge(x);
-                        }
-                    }
-                    Trace {
-                        name: self.name.clone(),
-                        ranks,
-                    }
-                });
-                (m, trace)
+                // Both phases run from t=0: their ends are isolated times.
+                let g = r.phase(PhaseRole::Gemm).expect("ideal has a GEMM phase").end;
+                let rs = r
+                    .phase(PhaseRole::ReduceScatter)
+                    .expect("ideal has an RS phase")
+                    .end;
+                (g, rs)
             }
             OverlapMode::Fused => {
-                let opts = FusedOpts {
-                    policy: self.policy,
-                    write_mode: self.write_mode,
-                    trace_bin: self.trace_bin,
-                };
-                let mut fused = if traced {
-                    cluster::run_fused_cluster_traced(sys, &plan, tp, &opts, cm, order)
-                } else {
-                    cluster::run_fused_cluster(sys, &plan, tp, &opts, cm, order)
-                };
-                let fused_end = fused.total();
-                let gemm_end = fused.gemm_time();
-                // Per-rank AG starts: the CU kernel launches after the
-                // rank's full drain; the fused AG triggers at its final
-                // tracker completion.
-                let starts: Vec<SimTime> = match self.ag {
-                    AgMode::FusedTrigger | AgMode::OverlapConsumer => fused.ag_triggers(),
-                    AgMode::RingCu | AgMode::Skip => {
-                        fused.per_rank.iter().map(|r| r.total).collect()
-                    }
-                };
-                let (ag_time, total, ag_counters, ag_tls) = self.compose_ag_cluster(
-                    sys, &plan, ar_bytes, tp, comm_cus, cm, order, fused_end, starts, traced,
-                );
-                let mut counters = fused.per_rank[0].counters;
-                counters.add(&ag_counters);
-                let m = Measurement {
-                    gemm: gemm_end,
-                    rs: fused_end - gemm_end,
-                    ag: ag_time,
-                    total,
-                    counters,
-                };
-                let trace = traced.then(|| {
-                    let mut ranks: Vec<RankTrace> = (0..tp as usize)
-                        .map(|r| {
-                            fused.per_rank[r]
-                                .timeline
-                                .take()
-                                .unwrap_or_else(|| RankTrace::new(r as u64))
-                        })
-                        .collect();
-                    if let Some(tls) = ag_tls {
-                        for (r, x) in tls.into_iter().enumerate() {
-                            ranks[r].merge(x);
-                        }
-                    }
-                    Trace {
-                        name: self.name.clone(),
-                        ranks,
-                    }
-                });
-                (m, trace)
+                let f = r.phase(PhaseRole::FusedGemmRs).expect("fused has its phase");
+                (f.gemm_end, f.end - f.gemm_end)
             }
+        };
+        Measurement {
+            gemm,
+            rs,
+            ag: r.total - pre,
+            total: r.total,
+            counters: r.counters,
         }
     }
-
-    /// The multi-rank analogue of [`ScenarioSpec::compose_ag`]: `starts`
-    /// are the per-rank AG launch times — kernel launches for
-    /// [`AgMode::RingCu`], fused-AG trigger times (each rank's reduced
-    /// chunk becoming available) for the fused modes; unused by
-    /// [`AgMode::Skip`]. Returns `(ag_time, total, ag_counters,
-    /// ag_timelines)` — timelines (one per rank, `Some` only when
-    /// `traced`) carry absolute times and merge without shifts; counters
-    /// are rank 0's, matching the cluster measurement convention.
-    #[allow(clippy::too_many_arguments)]
-    fn compose_ag_cluster(
-        &self,
-        sys: &SystemConfig,
-        plan: &StagePlan,
-        ar_bytes: u64,
-        tp: u64,
-        comm_cus: u32,
-        cm: &ClusterModel,
-        order: Interleave,
-        pre_total: SimTime,
-        starts: Vec<SimTime>,
-        traced: bool,
-    ) -> (SimTime, SimTime, DramCounters, Option<Vec<RankTrace>>) {
-        match self.ag {
-            AgMode::RingCu => {
-                let spec = RingClusterSpec {
-                    bytes: ar_bytes,
-                    tp,
-                    cus: comm_cus,
-                    kind: RingKind::AgCu,
-                    starts,
-                };
-                let mut ag = if traced {
-                    cluster::run_ring_cluster_traced(sys, &spec, cm, order)
-                } else {
-                    cluster::run_ring_cluster(sys, &spec, cm, order)
-                };
-                let end = ag.end();
-                let tls = traced.then(|| {
-                    ag.per_rank
-                        .iter_mut()
-                        .enumerate()
-                        .map(|(r, x)| {
-                            x.timeline.take().unwrap_or_else(|| RankTrace::new(r as u64))
-                        })
-                        .collect::<Vec<RankTrace>>()
-                });
-                (end - pre_total, end, ag.per_rank[0].counters, tls)
-            }
-            AgMode::Skip => (SimTime::ZERO, pre_total, DramCounters::default(), None),
-            AgMode::FusedTrigger | AgMode::OverlapConsumer => {
-                let spec = AgClusterSpec {
-                    bytes: ar_bytes,
-                    tp,
-                    starts,
-                    policy: self.policy,
-                    consumer: self.ag_consumer_spec(plan),
-                };
-                let mut ag = if traced {
-                    cluster::run_ag_cluster_traced(sys, &spec, cm, order)
-                } else {
-                    cluster::run_ag_cluster(sys, &spec, cm, order)
-                };
-                let end = pre_total.max(ag.end());
-                let tls = traced.then(|| {
-                    ag.per_rank
-                        .iter_mut()
-                        .enumerate()
-                        .map(|(r, x)| {
-                            x.timeline.take().unwrap_or_else(|| RankTrace::new(r as u64))
-                        })
-                        .collect::<Vec<RankTrace>>()
-                });
-                (end - pre_total, end, uncharge_consumer(ag.per_rank[0].counters), tls)
-            }
-        }
-    }
-}
-
-/// Strip the consumer GEMM's traffic from a fused-AG run's counters: the
-/// consumer stands in for the *next* sub-layer and is not charged to the
-/// one being measured.
-fn uncharge_consumer(mut c: DramCounters) -> DramCounters {
-    c.gemm_reads = 0;
-    c.gemm_writes = 0;
-    c
 }
 
 /// Timing and traffic of one simulated sub-layer cell.
@@ -831,7 +590,8 @@ fn uncharge_consumer(mut c: DramCounters) -> DramCounters {
 pub struct Measurement {
     /// Isolated (or fused-effective) GEMM time.
     pub gemm: SimTime,
-    /// RS portion (exposed time for fused scenarios).
+    /// RS portion (exposed time for fused scenarios), or the exposed
+    /// dispatch tail for all-to-all scenarios.
     pub rs: SimTime,
     /// Trailing all-gather time (zero when skipped).
     pub ag: SimTime,
@@ -899,6 +659,13 @@ pub fn registry() -> Vec<ScenarioSpec> {
         // ...plus consumer overlap: the next sub-layer's GEMM contends
         // with the AG through the MC arbitration.
         ScenarioSpec::t3_mca().named("T3-AR-Consumer").consumer_ag(),
+        // -- expert-parallel all-to-all (§7.1, the Collective-trait proof
+        //    point: a whole collective family added as one trait impl) --
+        // Serialized dispatch: GEMM, then the ring-routed all-to-all.
+        ScenarioSpec::sequential().named("Sequential-A2A").all_to_all(),
+        // T3 track-and-trigger dispatch: each output slice launches the
+        // moment its prefix of the GEMM retires.
+        ScenarioSpec::t3_mca().named("T3-A2A-Fused").all_to_all(),
         // -- cluster scenarios (multi-rank engine, t3::cluster) --
         // One rank 25% slower: how far does track-and-trigger localize the
         // damage? (Only chunks transiting the straggler are delayed.)
@@ -950,6 +717,8 @@ pub fn preset(name: &str) -> Option<ScenarioSpec> {
         "ar-consumer" | "consumer-ar" => "T3-AR-Consumer",
         "ar-straggler" => "T3-AR-Fused-Straggler",
         "ar-two-tier" | "ar-twotier" => "T3-AR-Fused-TwoTier",
+        "a2a" | "a2a-fused" | "fused-a2a" | "alltoall" => "T3-A2A-Fused",
+        "seq-a2a" | "a2a-seq" => "Sequential-A2A",
         other => other,
     }
     .to_string();
@@ -988,6 +757,8 @@ mod tests {
         assert_eq!(preset("t3-compprio").unwrap().name, "T3-CompPrio");
         assert_eq!(preset("straggler").unwrap().name, "T3-MCA-Straggler");
         assert_eq!(preset("two-tier").unwrap().name, "T3-MCA-TwoTier");
+        assert_eq!(preset("a2a").unwrap().name, "T3-A2A-Fused");
+        assert_eq!(preset("seq-a2a").unwrap().name, "Sequential-A2A");
         assert!(preset("no-such-scenario").is_none());
     }
 
@@ -1035,6 +806,51 @@ mod tests {
         assert!(st.cluster.is_some());
         let tt = preset("ar-two-tier").unwrap();
         assert!(tt.cluster.is_some());
+    }
+
+    #[test]
+    fn a2a_presets_resolve_and_describe() {
+        let f = preset("a2a").unwrap();
+        assert_eq!(f.name, "T3-A2A-Fused");
+        assert_eq!(f.collective, CollectiveKind::AllToAll);
+        assert_eq!(f.overlap, OverlapMode::Fused);
+        assert!(f.describe().contains("coll=a2a"), "{}", f.describe());
+        let s = preset("seq-a2a").unwrap();
+        assert_eq!(s.collective, CollectiveKind::AllToAll);
+        assert_eq!(s.overlap, OverlapMode::Serialized);
+        // The default family stays all-reduce.
+        assert_eq!(preset("mca").unwrap().collective, CollectiveKind::AllReduce);
+    }
+
+    #[test]
+    fn compile_lowers_scenarios_into_the_expected_phase_chains() {
+        let sys = SystemConfig::table1();
+        let m = by_name("T-NLG").unwrap();
+        let roles = |s: &ScenarioSpec| -> Vec<PhaseRole> {
+            s.compile(&sys, &m, 4, SubLayer::OpFwd)
+                .phases
+                .iter()
+                .map(|p| p.role)
+                .collect()
+        };
+        assert_eq!(
+            roles(&ScenarioSpec::sequential()),
+            vec![PhaseRole::Gemm, PhaseRole::ReduceScatter, PhaseRole::AllGather]
+        );
+        assert_eq!(
+            roles(&ScenarioSpec::t3_mca()),
+            vec![PhaseRole::FusedGemmRs, PhaseRole::AllGather]
+        );
+        assert_eq!(
+            roles(&ScenarioSpec::t3_mca().skip_ag()),
+            vec![PhaseRole::FusedGemmRs]
+        );
+        assert_eq!(roles(&preset("a2a").unwrap()), vec![PhaseRole::AllToAll]);
+        // The fused AR hands the AG its triggers; the serialized AG waits.
+        let fused_ar = preset("ar-fused").unwrap().compile(&sys, &m, 4, SubLayer::OpFwd);
+        assert_eq!(fused_ar.phases[1].rule, StartRule::AtPrevTriggers);
+        let seq = ScenarioSpec::sequential().compile(&sys, &m, 4, SubLayer::OpFwd);
+        assert_eq!(seq.phases[2].rule, StartRule::AfterPrev);
     }
 
     #[test]

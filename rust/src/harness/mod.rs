@@ -12,8 +12,12 @@
 use std::fmt::Write as _;
 use std::path::Path;
 
-use crate::cluster::{run_ag_cluster, run_fused_cluster, AgClusterSpec, ClusterModel, Interleave};
+use crate::cluster::{
+    run_collective, ClusterAgRun, ClusterFusedRun, ClusterModel, ExecTarget, FusedAgCollective,
+    FusedGemmRsCollective, Interleave,
+};
 use crate::config::SystemConfig;
+use crate::engine::alltoall::{A2aMode, AllToAllCollective, AllToAllResult};
 use crate::engine::collective_run::{run_ag_baseline, run_rs_baseline};
 use crate::engine::fused::{run_fused_gemm_rs, FusedOpts};
 use crate::engine::gemm_run::run_gemm;
@@ -793,37 +797,58 @@ pub fn cluster_report(
     scenario: &ScenarioSpec,
     cm: &ClusterModel,
 ) -> Table {
-    use crate::experiment::AgMode;
+    use crate::experiment::{AgMode, CollectiveKind};
 
     let shape = sublayer_gemm(model, tp, sub);
     let plan = StagePlan::new(shape, Tiling::default(), &sys.gpu);
-    let opts = FusedOpts {
-        policy: scenario.policy,
-        write_mode: scenario.write_mode,
-        trace_bin: None,
+    if scenario.collective == CollectiveKind::AllToAll {
+        return a2a_cluster_report(sys, model, tp, sub, scenario, cm, plan, shape.out_bytes());
+    }
+    let coll = FusedGemmRsCollective {
+        plan: plan.clone(),
+        opts: FusedOpts {
+            policy: scenario.policy,
+            write_mode: scenario.write_mode,
+            trace_bin: None,
+        },
     };
-    let run = run_fused_cluster(sys, &plan, tp, &opts, cm, Interleave::Ascending);
+    let target = ExecTarget::Cluster(cm.clone());
+    let zeros = vec![SimTime::ZERO; tp as usize];
+    let run = ClusterFusedRun {
+        per_rank: run_collective(sys, &coll, tp, &zeros, &target, false, Interleave::Ascending),
+        factors: cm.factors(tp, sys.seed),
+    };
     // The uniform reference run is skipped when `cm` is already uniform
     // (it would be the identical simulation a second time).
     let uniform_total = if cm.is_uniform_for(tp) {
         run.total()
     } else {
-        run_fused_cluster(sys, &plan, tp, &opts, &ClusterModel::uniform(), Interleave::Ascending)
-            .total()
+        let uniform = ExecTarget::Cluster(ClusterModel::uniform());
+        ClusterFusedRun {
+            per_rank: run_collective(sys, &coll, tp, &zeros, &uniform, false, Interleave::Ascending),
+            factors: vec![1.0; tp as usize],
+        }
+        .total()
     };
     let ag = match scenario.ag {
-        AgMode::FusedTrigger | AgMode::OverlapConsumer => Some(run_ag_cluster(
-            sys,
-            &AgClusterSpec {
+        AgMode::FusedTrigger | AgMode::OverlapConsumer => {
+            let agc = FusedAgCollective {
                 bytes: shape.out_bytes(),
-                tp,
-                starts: run.ag_triggers(),
                 policy: scenario.policy,
                 consumer: scenario.ag_consumer_spec(&plan),
-            },
-            cm,
-            Interleave::Ascending,
-        )),
+            };
+            Some(ClusterAgRun {
+                per_rank: run_collective(
+                    sys,
+                    &agc,
+                    tp,
+                    &run.ag_triggers(),
+                    &target,
+                    false,
+                    Interleave::Ascending,
+                ),
+            })
+        }
         AgMode::RingCu | AgMode::Skip => None,
     };
     let mut t = Table::new(
@@ -868,6 +893,73 @@ pub fn cluster_report(
             ms(run.total().max(a.end()))
         ));
     }
+    t
+}
+
+/// The all-to-all flavor of [`cluster_report`]: per-rank GEMM retirement,
+/// per-slice dispatch tail, and completion of the ring-routed
+/// expert-parallel all-to-all (`t3 cluster --collective a2a`).
+#[allow(clippy::too_many_arguments)]
+fn a2a_cluster_report(
+    sys: &SystemConfig,
+    model: &ModelCfg,
+    tp: u64,
+    sub: SubLayer,
+    scenario: &ScenarioSpec,
+    cm: &ClusterModel,
+    plan: StagePlan,
+    bytes: u64,
+) -> Table {
+    use crate::experiment::OverlapMode;
+
+    let mode = if scenario.overlap == OverlapMode::Fused {
+        A2aMode::Fused
+    } else {
+        A2aMode::Sequential
+    };
+    let coll = AllToAllCollective {
+        plan,
+        write_mode: scenario.write_mode,
+        bytes,
+        policy: scenario.policy,
+        mode,
+    };
+    let target = ExecTarget::Cluster(cm.clone());
+    let zeros = vec![SimTime::ZERO; tp as usize];
+    let run = run_collective(sys, &coll, tp, &zeros, &target, false, Interleave::Ascending);
+    let factors = cm.factors(tp, sys.seed);
+    let total_of = |rs: &[AllToAllResult]| {
+        rs.iter().map(|r| r.total).max().unwrap_or(SimTime::ZERO)
+    };
+    let mut t = Table::new(
+        "cluster",
+        &format!(
+            "{} TP={tp} {} — per-rank GEMM + all-to-all dispatch ({})",
+            model.name,
+            sub.name(),
+            cm.describe()
+        ),
+        &["rank", "node", "skew", "gemm ms", "dispatch tail ms", "a2a done ms", "total ms"],
+    );
+    for (r, res) in run.iter().enumerate() {
+        t.row(vec![
+            r.to_string(),
+            cm.topology.node_of(r as u64).to_string(),
+            format!("{:.3}", factors[r]),
+            ms(res.gemm_time),
+            ms(res.a2a_done - res.gemm_time),
+            ms(res.a2a_done),
+            ms(res.total),
+        ]);
+    }
+    t.note(match mode {
+        A2aMode::Fused => {
+            "dispatch: T3 track-and-trigger (slice h launches at its (h+1)/N GEMM prefix)"
+                .to_string()
+        }
+        A2aMode::Sequential => "dispatch: serialized at GEMM end (baseline)".to_string(),
+    });
+    t.note(format!("all-to-all end across the group: {} ms", ms(total_of(&run))));
     t
 }
 

@@ -11,7 +11,8 @@
 //!               [--scenarios s1,s2] [--future] [--threads n] [--csv dir]
 //! t3 cluster    [--model <name>] [--tp <n>] [--sublayer <s>] [--scenario <s>]
 //!               [--skew straggler:R:F|jitter:A] [--nodes g] [--inter-bw f] [--inter-lat-ns n]
-//!               [--ag ring|skip|fused|consumer] [--json] [--trace] [--out file.json]
+//!               [--collective ar|a2a] [--ag ring|skip|fused|consumer]
+//!               [--json] [--trace] [--out file.json]
 //! t3 trace      <preset> [--model <name>] [--tp <n>] [--sublayer <s>]
 //!               [--out file.json] [--diff other-preset] [--json]
 //! t3 figure     <4|6|14|15|16|17|18|19|20|table2|table3> [--csv <dir>]
@@ -65,6 +66,78 @@ fn sublayer_from(s: &str) -> Option<SubLayer> {
     }
 }
 
+/// The output flags every run-style subcommand shares (`--trace`,
+/// `--out`, `--json`) — parsed once instead of re-checked per arm.
+struct OutputOpts {
+    /// `--trace`: print the span-derived overlap report.
+    trace: bool,
+    /// `--out FILE`: export a Perfetto trace.
+    out: Option<String>,
+    /// `--json`: machine-readable stdout (one JSON document).
+    json: bool,
+}
+
+impl OutputOpts {
+    fn parse(flags: &HashMap<String, String>) -> OutputOpts {
+        OutputOpts {
+            trace: flags.contains_key("trace"),
+            out: flags.get("out").cloned(),
+            json: flags.contains_key("json"),
+        }
+    }
+
+    /// Was any timeline surface requested (`--trace` or `--out`)?
+    fn wants_trace(&self) -> bool {
+        self.trace || self.out.is_some()
+    }
+}
+
+/// The workload + output flags shared by the single-workload subcommands
+/// (`cluster`, `simulate`, `trace`) — parsed and validated once, in one
+/// place, with a single error path, instead of three hand-rolled copies.
+/// `experiment` takes grid-shaped flags (`--models`, `--tps`, ...) and
+/// uses [`OutputOpts`] alone, so a stray `--tp`/`--model` there is
+/// ignored exactly as before.
+struct CommonOpts {
+    model: t3::models::ModelCfg,
+    tp: u64,
+    sub: SubLayer,
+    output: OutputOpts,
+}
+
+impl CommonOpts {
+    fn parse(flags: &HashMap<String, String>) -> std::result::Result<CommonOpts, String> {
+        let model = flags.get("model").map(String::as_str).unwrap_or("T-NLG");
+        let m = by_name(model)
+            .ok_or_else(|| format!("unknown model {model}; try `t3 models --list`"))?;
+        let tp: u64 = match flags.get("tp") {
+            Some(s) => s
+                .parse()
+                .map_err(|_| format!("bad --tp '{s}' (expected a number)"))?,
+            None => 8,
+        };
+        if tp < 2 || m.hidden % tp != 0 {
+            return Err(format!(
+                "TP={tp} is not valid for {} (needs TP >= 2 dividing H={})",
+                m.name, m.hidden
+            ));
+        }
+        let sub_s = flags.get("sublayer").map(String::as_str).unwrap_or("fc2");
+        let sub =
+            sublayer_from(sub_s).ok_or_else(|| "unknown sublayer (op|fc2|fc1|ip)".to_string())?;
+        Ok(CommonOpts {
+            model: m,
+            tp,
+            sub,
+            output: OutputOpts::parse(flags),
+        })
+    }
+
+    fn wants_trace(&self) -> bool {
+        self.output.wants_trace()
+    }
+}
+
 /// Resolve a comma-separated scenario list against the registry.
 fn scenarios_from(s: &str) -> std::result::Result<Vec<ScenarioSpec>, String> {
     let mut out = Vec::new();
@@ -95,7 +168,8 @@ const USAGE: &str = "t3 <config|models|scenarios|simulate|experiment|cluster|tra
   t3 cluster [--model T-NLG] [--tp 8] [--sublayer fc2] [--scenario t3-mca]
              [--skew none|straggler:RANK:FACTOR|jitter:AMPLITUDE]
              [--nodes G] [--inter-bw FRAC] [--inter-lat-ns NS]
-             [--ag ring|skip|fused|consumer] [--json] [--trace] [--out trace.json]
+             [--collective ar|a2a] [--ag ring|skip|fused|consumer]
+             [--json] [--trace] [--out trace.json]
   t3 trace <preset> [--model T-NLG] [--tp 8] [--sublayer fc2]
            [--out trace.json] [--diff other-preset] [--json]
   t3 figure <4|6|14|15|16|17|18|19|20|table2|table3|ablation> [--csv results]
@@ -194,18 +268,14 @@ fn main() -> ExitCode {
             ExitCode::SUCCESS
         }
         "simulate" => {
-            let model = flags.get("model").map(String::as_str).unwrap_or("T-NLG");
-            let tp: u64 = flags.get("tp").and_then(|s| s.parse().ok()).unwrap_or(8);
-            let Some(m) = by_name(model) else {
-                eprintln!("unknown model {model}; try `t3 models --list`");
-                return ExitCode::FAILURE;
+            let co = match CommonOpts::parse(&flags) {
+                Ok(c) => c,
+                Err(e) => {
+                    eprintln!("{e}");
+                    return ExitCode::FAILURE;
+                }
             };
-            let Some(sub) =
-                sublayer_from(flags.get("sublayer").map(String::as_str).unwrap_or("fc2"))
-            else {
-                eprintln!("unknown sublayer (op|fc2|fc1|ip)");
-                return ExitCode::FAILURE;
-            };
+            let (m, tp, sub) = (co.model.clone(), co.tp, co.sub);
             let scenarios = match flags.get("scenario") {
                 Some(s) => match scenarios_from(&format!("sequential,{s}")) {
                     Ok(sc) => sc,
@@ -253,7 +323,7 @@ fn main() -> ExitCode {
             // Timeline capture: re-run the requested scenario (T3-MCA when
             // none was named) traced, print the span-derived report, and
             // optionally export a Perfetto JSON.
-            if flags.contains_key("trace") || flags.contains_key("out") {
+            if co.wants_trace() {
                 let sc = match flags.get("scenario") {
                     // `--scenario` accepts a comma-separated list (each
                     // entry validated above); trace the last one named.
@@ -267,7 +337,7 @@ fn main() -> ExitCode {
                 };
                 let (_tm, trace) = sc.run_traced(&SystemConfig::table1(), &m, tp, sub);
                 println!("{}", harness::trace_report(&trace).render());
-                if let Some(path) = flags.get("out") {
+                if let Some(path) = &co.output.out {
                     if let Err(e) = write_trace(&trace, path) {
                         eprintln!("{e}");
                         return ExitCode::FAILURE;
@@ -277,6 +347,10 @@ fn main() -> ExitCode {
             ExitCode::SUCCESS
         }
         "experiment" => {
+            // The grid subcommand shapes its own workload flags
+            // (--models/--tps/--sublayers); only the output flags are
+            // shared.
+            let out_opts = OutputOpts::parse(&flags);
             let model_names: Vec<String> = flags
                 .get("models")
                 .map(|s| s.split(',').map(str::to_string).collect())
@@ -364,7 +438,7 @@ fn main() -> ExitCode {
                 &format!("{} ({} cells)", rs.experiment, rs.cells.len()),
                 Some(&baseline),
             );
-            if flags.contains_key("json") {
+            if out_opts.json {
                 // Machine-readable: JSON on stdout, timing on stderr.
                 println!("{}", t.to_json());
                 eprintln!(
@@ -383,7 +457,7 @@ fn main() -> ExitCode {
             if let Some(dir) = flags.get("csv") {
                 match t.write_csv(dir) {
                     // Status to stderr under --json: stdout is one document.
-                    Ok(p) if flags.contains_key("json") => {
+                    Ok(p) if out_opts.json => {
                         eprintln!("  (csv: {})", p.display())
                     }
                     Ok(p) => println!("  (csv: {})", p.display()),
@@ -395,25 +469,14 @@ fn main() -> ExitCode {
         "cluster" => {
             use t3::cluster::{ClusterModel, SkewModel, TopologySpec};
             use t3::sim::time::SimTime;
-            let model = flags.get("model").map(String::as_str).unwrap_or("T-NLG");
-            let Some(m) = by_name(model) else {
-                eprintln!("unknown model {model}; try `t3 models --list`");
-                return ExitCode::FAILURE;
+            let co = match CommonOpts::parse(&flags) {
+                Ok(c) => c,
+                Err(e) => {
+                    eprintln!("{e}");
+                    return ExitCode::FAILURE;
+                }
             };
-            let tp: u64 = flags.get("tp").and_then(|s| s.parse().ok()).unwrap_or(8);
-            if tp < 2 || m.hidden % tp != 0 {
-                eprintln!(
-                    "TP={tp} is not valid for {} (needs TP >= 2 dividing H={})",
-                    m.name, m.hidden
-                );
-                return ExitCode::FAILURE;
-            }
-            let Some(sub) =
-                sublayer_from(flags.get("sublayer").map(String::as_str).unwrap_or("fc2"))
-            else {
-                eprintln!("unknown sublayer (op|fc2|fc1|ip)");
-                return ExitCode::FAILURE;
-            };
+            let (m, tp, sub) = (co.model.clone(), co.tp, co.sub);
             let mut scenario = match flags.get("scenario") {
                 Some(s) => match experiment::preset(s) {
                     Some(sc) => sc,
@@ -424,8 +487,30 @@ fn main() -> ExitCode {
                 },
                 None => ScenarioSpec::t3_mca(),
             };
+            if let Some(c) = flags.get("collective") {
+                use t3::experiment::CollectiveKind;
+                scenario = match c.to_ascii_lowercase().as_str() {
+                    "ar" | "allreduce" | "all-reduce" => {
+                        scenario.collective = CollectiveKind::AllReduce;
+                        scenario
+                    }
+                    // `all_to_all()` also clears the AG axis, keeping the
+                    // spec consistent with the builder API.
+                    "a2a" | "alltoall" | "all-to-all" => scenario.all_to_all(),
+                    other => {
+                        eprintln!("bad --collective '{other}' (ar | a2a)");
+                        return ExitCode::FAILURE;
+                    }
+                };
+            }
             if let Some(ag) = flags.get("ag") {
-                use t3::experiment::AgMode;
+                use t3::experiment::{AgMode, CollectiveKind};
+                if scenario.collective == CollectiveKind::AllToAll {
+                    eprintln!(
+                        "--ag does not apply to the all-to-all collective (no trailing all-gather)"
+                    );
+                    return ExitCode::FAILURE;
+                }
                 scenario.ag = match ag.to_ascii_lowercase().as_str() {
                     "ring" => AgMode::RingCu,
                     "skip" | "none" => AgMode::Skip,
@@ -497,11 +582,11 @@ fn main() -> ExitCode {
             let report = harness::cluster_report(&sys, &m, tp, sub, &scenario, &cm);
             // Timeline capture over the same cluster: per-rank trace report
             // plus optional Perfetto export.
-            let traced = (flags.contains_key("trace") || flags.contains_key("out")).then(|| {
+            let traced = co.wants_trace().then(|| {
                 let traced_scenario = scenario.clone().cluster(cm.clone());
                 traced_scenario.run_traced(&sys, &m, tp, sub).1
             });
-            let json = flags.contains_key("json");
+            let json = co.output.json;
             match &traced {
                 Some(trace) => {
                     let tr = harness::trace_report(trace);
@@ -517,7 +602,7 @@ fn main() -> ExitCode {
                 None => println!("{}", report.render()),
             }
             if let Some(trace) = &traced {
-                if let Some(path) = flags.get("out") {
+                if let Some(path) = &co.output.out {
                     if let Err(e) = write_trace(trace, path) {
                         eprintln!("{e}");
                         return ExitCode::FAILURE;
@@ -535,25 +620,14 @@ fn main() -> ExitCode {
                 eprintln!("unknown scenario '{which}'; see `t3 scenarios`");
                 return ExitCode::FAILURE;
             };
-            let model = flags.get("model").map(String::as_str).unwrap_or("T-NLG");
-            let Some(m) = by_name(model) else {
-                eprintln!("unknown model {model}; try `t3 models --list`");
-                return ExitCode::FAILURE;
+            let co = match CommonOpts::parse(&flags) {
+                Ok(c) => c,
+                Err(e) => {
+                    eprintln!("{e}");
+                    return ExitCode::FAILURE;
+                }
             };
-            let tp: u64 = flags.get("tp").and_then(|s| s.parse().ok()).unwrap_or(8);
-            if tp < 2 || m.hidden % tp != 0 {
-                eprintln!(
-                    "TP={tp} is not valid for {} (needs TP >= 2 dividing H={})",
-                    m.name, m.hidden
-                );
-                return ExitCode::FAILURE;
-            }
-            let Some(sub) =
-                sublayer_from(flags.get("sublayer").map(String::as_str).unwrap_or("fc2"))
-            else {
-                eprintln!("unknown sublayer (op|fc2|fc1|ip)");
-                return ExitCode::FAILURE;
-            };
+            let (m, tp, sub) = (co.model.clone(), co.tp, co.sub);
             let sys = SystemConfig::table1();
             let (meas, trace) = scenario.run_traced(&sys, &m, tp, sub);
             let report = harness::trace_report(&trace);
@@ -569,7 +643,7 @@ fn main() -> ExitCode {
                 }
                 None => None,
             };
-            if flags.contains_key("json") {
+            if co.output.json {
                 // One JSON document regardless of the flag combination.
                 match &diff_table {
                     Some(dt) => println!("{}", json_bundle(&[("report", &report), ("diff", dt)])),
@@ -591,7 +665,7 @@ fn main() -> ExitCode {
                     println!("{}", dt.render());
                 }
             }
-            if let Some(path) = flags.get("out") {
+            if let Some(path) = &co.output.out {
                 if let Err(e) = write_trace(&trace, path) {
                     eprintln!("{e}");
                     return ExitCode::FAILURE;

@@ -16,6 +16,10 @@
 //! chunks — true for every paper preset workload used here (and the
 //! cluster is the more faithful model when chunks are uneven).
 
+// The deprecated legacy entry points are exactly what these tests pin the
+// new trait-based path against.
+#![allow(deprecated)]
+
 use t3::cluster::{run_fused_cluster, ClusterModel, Interleave};
 use t3::config::{ArbPolicy, SystemConfig};
 use t3::engine::fused::FusedOpts;
@@ -316,6 +320,68 @@ fn ar_straggler_cluster_preset_localizes_the_damage() {
         ratio < 1.25,
         "fused-AR straggler damage should stay localized, got {ratio:.3}x"
     );
+}
+
+#[test]
+fn fused_a2a_strictly_beats_sequential_a2a_at_tp_4_8_16() {
+    // The AllToAll acceptance claim: the track-and-trigger dispatch preset
+    // is strictly faster than its serialized twin at TP 4, 8, and 16 —
+    // through the unified `cluster::execute` path (`ScenarioSpec::run`).
+    let s = sys();
+    let m = by_name("T-NLG").unwrap();
+    let fused = preset("a2a").expect("registry has T3-A2A-Fused");
+    let sequential = preset("seq-a2a").expect("registry has Sequential-A2A");
+    for tp in [4u64, 8, 16] {
+        let f = fused.run(&s, &m, tp, SubLayer::Fc2Fwd);
+        let q = sequential.run(&s, &m, tp, SubLayer::Fc2Fwd);
+        assert!(
+            f.total < q.total,
+            "tp={tp}: fused A2A {} !< sequential A2A {}",
+            f.total,
+            q.total
+        );
+        // Both presets dispatch the same payload through the ring.
+        assert_eq!(f.counters.ag_reads, q.counters.ag_reads, "tp={tp}");
+        assert_eq!(f.counters.ag_writes, q.counters.ag_writes, "tp={tp}");
+        // The dispatch tail is what shrinks; the exposed comm must still
+        // be positive (the last slice only triggers at the GEMM's end).
+        assert!(f.rs > SimTime::ZERO, "tp={tp}");
+        assert!(f.rs < q.rs, "tp={tp}: exposed dispatch must shrink");
+        assert_eq!(f.ag, SimTime::ZERO);
+    }
+}
+
+#[test]
+fn a2a_uniform_cluster_bit_matches_the_mirror() {
+    // The new collective inherits the mirror-vs-cluster contract from the
+    // shared driver: no bespoke parity code was written for it.
+    let s = sys();
+    let m = by_name("T-NLG").unwrap();
+    for name in ["a2a", "seq-a2a"] {
+        let scenario = preset(name).unwrap();
+        assert!(scenario.cluster.is_none());
+        let mirror = scenario.run(&s, &m, 4, SubLayer::OpFwd);
+        let clustered = scenario
+            .clone()
+            .cluster(ClusterModel::uniform())
+            .run(&s, &m, 4, SubLayer::OpFwd);
+        assert_eq!(mirror, clustered, "{name}");
+    }
+}
+
+#[test]
+fn a2a_straggler_localizes_like_the_fused_ar() {
+    // Under a 25% straggler the fused dispatch slows, but track-and-
+    // trigger keeps the damage below a global 25% stretch.
+    let s = sys();
+    let m = by_name("T-NLG").unwrap();
+    let uniform = preset("a2a").unwrap().cluster(ClusterModel::uniform());
+    let skewed = preset("a2a").unwrap().cluster(ClusterModel::straggler(1, 1.25));
+    let base = uniform.run(&s, &m, 8, SubLayer::OpFwd);
+    let slow = skewed.run(&s, &m, 8, SubLayer::OpFwd);
+    assert!(slow.total > base.total, "straggler must cost something");
+    let ratio = slow.total.as_ps() as f64 / base.total.as_ps() as f64;
+    assert!(ratio < 1.25, "a2a straggler damage should stay localized, got {ratio:.3}x");
 }
 
 #[test]

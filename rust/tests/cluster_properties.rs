@@ -16,15 +16,26 @@
 //! * **interleave invariance** — ascending and descending slot orders in
 //!   `cluster::drive` produce bit-identical per-rank results;
 //! * **executor thread-count invariance** — the same fuzzed cases produce
-//!   identical fingerprints on 1 and 4 worker threads.
+//!   identical fingerprints on 1 and 4 worker threads;
+//! * **API parity** — every preset family (all rank-machine kinds x skew x
+//!   topology) run through the unified `cluster::execute` /
+//!   `run_collective` path is bit-identical (`SimTime`s, DRAM counters)
+//!   to the legacy deprecated entry points, which are kept exactly for
+//!   this comparison.
+
+// The deprecated legacy entry points are the parity reference here.
+#![allow(deprecated)]
 
 use t3::cluster::{
-    run_ag_cluster, run_ag_cluster_traced, run_fused_cluster, run_fused_cluster_traced,
-    run_ring_cluster, run_ring_cluster_traced, AgClusterSpec, ClusterModel, Interleave,
-    RingClusterSpec, SkewModel, TopologySpec,
+    execute, run_ag_cluster, run_ag_cluster_traced, run_collective, run_fused_cluster,
+    run_fused_cluster_traced, run_gemm_cluster, run_ring_cluster, run_ring_cluster_traced,
+    AgClusterSpec, ClusterModel, ExecOpts, ExecTarget, FusedAgCollective, FusedGemmRsCollective,
+    GemmCollective, Interleave, PhaseRole, Program, RingCollective, SkewModel, StartRule,
+    TopologySpec,
 };
 use t3::config::{ArbPolicy, DType, SystemConfig};
 use t3::engine::allgather::ConsumerSpec;
+use t3::engine::alltoall::{A2aMode, AllToAllCollective};
 use t3::engine::collective_run::RingKind;
 use t3::engine::fused::FusedOpts;
 use t3::experiment::executor::run_indexed;
@@ -284,7 +295,7 @@ fn traced_rank_machines_satisfy_lane_invariants() {
     forall(48, |rng| {
         let tp = rng.range(2, 5);
         let model = fuzz_model(rng, tp);
-        match rng.index(3) {
+        match rng.index(4) {
             0 => {
                 // The fused GEMM-RS machine.
                 let m = *rng.choose(&[1024u64, 2048]);
@@ -323,7 +334,7 @@ fn traced_rank_machines_satisfy_lane_invariants() {
                     check_egress_bytes(t, res.link_bytes).unwrap();
                 }
             }
-            _ => {
+            2 => {
                 // The fused all-gather machine (sometimes with a consumer
                 // GEMM contending through the MC).
                 let chunk = rng.range(1, 3) * MB;
@@ -344,6 +355,36 @@ fn traced_rank_machines_satisfy_lane_invariants() {
                     check_lane_spans_disjoint(t, &EXCLUSIVE_LANES).unwrap();
                     check_dram_bytes_reconcile(t, &res.counters).unwrap();
                     check_egress_bytes(t, res.link_bytes).unwrap();
+                }
+            }
+            _ => {
+                // The all-to-all machine (fused or sequential dispatch) —
+                // the new collective satisfies the same lane invariants
+                // through the trait-based driver.
+                let chunk = rng.range(1, 3) * MB;
+                let coll = AllToAllCollective {
+                    plan: consumer_plan.clone(),
+                    write_mode: WriteMode::BypassLlc,
+                    bytes: chunk * tp,
+                    policy: ArbPolicy::T3Mca,
+                    mode: if rng.chance(0.5) { A2aMode::Fused } else { A2aMode::Sequential },
+                };
+                let starts = vec![SimTime::ZERO; tp as usize];
+                let run = run_collective(
+                    &s,
+                    &coll,
+                    tp,
+                    &starts,
+                    &ExecTarget::Cluster(model.clone()),
+                    true,
+                    Interleave::Ascending,
+                );
+                for res in &run {
+                    let t = res.timeline.as_ref().expect("traced run records a timeline");
+                    check_lane_spans_disjoint(t, &EXCLUSIVE_LANES).unwrap();
+                    check_dram_bytes_reconcile(t, &res.counters).unwrap();
+                    check_egress_bytes(t, res.link_bytes).unwrap();
+                    check_triggers_after_tracker(t).unwrap();
                 }
             }
         }
@@ -385,6 +426,187 @@ fn fused_ar_handoff_never_double_books_the_link() {
             check_lane_spans_disjoint(&merged, &LINK_LANES)
                 .unwrap_or_else(|e| panic!("rank {r}: {e}"));
         }
+    });
+}
+
+#[test]
+fn unified_execute_path_bit_matches_legacy_entry_points() {
+    // Satellite: API parity, fuzzed over the full skew x topology x TP
+    // space for all four pre-existing rank-machine kinds. The legacy
+    // `run_*_cluster` shims are the frozen reference; the Program path
+    // must reproduce them to the bit (`SimTime`s and DRAM counters).
+    let s = sys();
+    let plan = StagePlan::new(
+        GemmShape::new(1024, 512, 256, DType::F16),
+        Tiling::default(),
+        &s.gpu,
+    );
+    let opts = FusedOpts {
+        policy: ArbPolicy::T3Mca,
+        ..FusedOpts::default()
+    };
+    forall(48, |rng| {
+        let tp = rng.range(2, 5);
+        let model = fuzz_model(rng, tp);
+        let target = ExecTarget::Cluster(model.clone());
+        let order = Interleave::Ascending;
+        match rng.index(4) {
+            0 => {
+                // Isolated per-rank GEMMs.
+                let legacy = run_gemm_cluster(&s, &plan, 80, WriteMode::BypassLlc, tp, &model);
+                let coll = GemmCollective {
+                    plan: plan.clone(),
+                    cus: 80,
+                    write_mode: WriteMode::BypassLlc,
+                };
+                let starts = vec![SimTime::ZERO; tp as usize];
+                let via = run_collective(&s, &coll, tp, &starts, &target, false, order);
+                for (l, v) in legacy.iter().zip(&via) {
+                    assert_eq!(l.time, v.time);
+                    assert_eq!(l.stage_ends, v.stage_ends);
+                    assert_eq!(l.counters, v.counters);
+                }
+            }
+            1 => {
+                // Baseline rings, all three flavors.
+                let kind = *rng.choose(&[RingKind::RsCu, RingKind::AgCu, RingKind::RsNmc]);
+                let chunk = rng.range(1, 3) * MB;
+                let starts = fuzz_starts(rng, tp);
+                let spec = RingClusterSpec {
+                    bytes: chunk * tp,
+                    tp,
+                    cus: *rng.choose(&[8u32, 16, 80]),
+                    kind,
+                    starts: starts.clone(),
+                };
+                let legacy = run_ring_cluster(&s, &spec, &model, order);
+                let coll = RingCollective {
+                    bytes: spec.bytes,
+                    cus: spec.cus,
+                    kind,
+                };
+                let via = run_collective(&s, &coll, tp, &starts, &target, false, order);
+                assert_eq!(legacy.per_rank, via);
+            }
+            2 => {
+                // The fused GEMM-RS.
+                let legacy = run_fused_cluster(&s, &plan, tp, &opts, &model, order);
+                let coll = FusedGemmRsCollective {
+                    plan: plan.clone(),
+                    opts: opts.clone(),
+                };
+                let starts = vec![SimTime::ZERO; tp as usize];
+                let via = run_collective(&s, &coll, tp, &starts, &target, false, order);
+                for (l, v) in legacy.per_rank.iter().zip(&via) {
+                    assert_eq!(l.total, v.total);
+                    assert_eq!(l.gemm_time, v.gemm_time);
+                    assert_eq!(l.tracker_done, v.tracker_done);
+                    assert_eq!(l.sent_done, v.sent_done);
+                    assert_eq!(l.counters, v.counters);
+                }
+            }
+            _ => {
+                // The fused all-gather (sometimes with a consumer).
+                let chunk = rng.range(1, 3) * MB;
+                let starts = fuzz_starts(rng, tp);
+                let consumer = rng.chance(0.25).then(|| ConsumerSpec {
+                    plan: plan.clone(),
+                    write_mode: WriteMode::BypassLlc,
+                    compute_scale: 1.0,
+                });
+                let spec = AgClusterSpec {
+                    bytes: chunk * tp,
+                    tp,
+                    starts: starts.clone(),
+                    policy: ArbPolicy::T3Mca,
+                    consumer: consumer.clone(),
+                };
+                let legacy = run_ag_cluster(&s, &spec, &model, order);
+                let coll = FusedAgCollective {
+                    bytes: spec.bytes,
+                    policy: spec.policy,
+                    consumer,
+                };
+                let via = run_collective(&s, &coll, tp, &starts, &target, false, order);
+                assert_eq!(legacy.per_rank, via);
+            }
+        }
+    });
+}
+
+#[test]
+fn execute_composes_serialized_phases_like_the_legacy_pipeline() {
+    // A two-phase Program (skewed GEMMs, then a ring RS launched at each
+    // rank's GEMM end) must equal the hand-threaded legacy composition,
+    // fuzzed across the cluster-model space.
+    let s = sys();
+    let plan = StagePlan::new(
+        GemmShape::new(1024, 512, 256, DType::F16),
+        Tiling::default(),
+        &s.gpu,
+    );
+    forall(24, |rng| {
+        let tp = rng.range(2, 5);
+        let model = fuzz_model(rng, tp);
+        let chunk = rng.range(1, 3) * MB;
+
+        // Legacy: explicit start-offset threading through the shims.
+        let gemms = run_gemm_cluster(&s, &plan, 80, WriteMode::ThroughLlc, tp, &model);
+        let rs = run_ring_cluster(
+            &s,
+            &RingClusterSpec {
+                bytes: chunk * tp,
+                tp,
+                cus: 80,
+                kind: RingKind::RsCu,
+                starts: gemms.iter().map(|g| g.time).collect(),
+            },
+            &model,
+            Interleave::Ascending,
+        );
+
+        // Unified: the same pipeline as a Program.
+        let prog = Program::new("parity", tp)
+            .phase(
+                PhaseRole::Gemm,
+                StartRule::AtZero,
+                GemmCollective {
+                    plan: plan.clone(),
+                    cus: 80,
+                    write_mode: WriteMode::ThroughLlc,
+                },
+            )
+            .phase(
+                PhaseRole::ReduceScatter,
+                StartRule::AfterPrev,
+                RingCollective {
+                    bytes: chunk * tp,
+                    cus: 80,
+                    kind: RingKind::RsCu,
+                },
+            );
+        let report = execute(
+            &s,
+            &prog,
+            &ExecOpts {
+                target: ExecTarget::Cluster(model.clone()),
+                trace: false,
+                interleave: Interleave::Ascending,
+            },
+        );
+
+        let gemm_phase = &report.phases[0];
+        let rs_phase = &report.phases[1];
+        for r in 0..tp as usize {
+            assert_eq!(gemm_phase.ends[r], gemms[r].time, "rank {r} gemm end");
+            assert_eq!(rs_phase.ends[r], rs.per_rank[r].time, "rank {r} rs end");
+        }
+        assert_eq!(report.total, rs.end());
+        let mut counters = gemms[0].counters;
+        counters.add(&rs.per_rank[0].counters);
+        assert_eq!(report.counters, counters);
+        // Trace state is explicit: untraced reports carry no trace.
+        assert!(report.trace.is_none());
     });
 }
 

@@ -206,6 +206,48 @@ fn cli_cluster_rejects_bad_flags() {
 }
 
 #[test]
+fn cli_cluster_collective_a2a_renders_dispatch_table() {
+    let out = t3_cmd(&[
+        "cluster", "--model", "T-NLG", "--tp", "4", "--sublayer", "op", "--collective", "a2a",
+    ]);
+    assert!(out.status.success(), "stderr: {}", String::from_utf8_lossy(&out.stderr));
+    let stdout = String::from_utf8_lossy(&out.stdout);
+    assert!(stdout.contains("all-to-all dispatch"), "{stdout}");
+    assert!(stdout.contains("dispatch tail ms"), "{stdout}");
+    assert!(stdout.contains("track-and-trigger"), "{stdout}");
+    for rank in 0..4 {
+        assert!(stdout.contains(&format!("| {rank} ")), "missing rank {rank}: {stdout}");
+    }
+    // The serialized twin flips the dispatch note.
+    let seq = t3_cmd(&[
+        "cluster", "--model", "T-NLG", "--tp", "4", "--sublayer", "op",
+        "--collective", "a2a", "--scenario", "seq-a2a",
+    ]);
+    assert!(seq.status.success());
+    let seq_out = String::from_utf8_lossy(&seq.stdout);
+    assert!(seq_out.contains("serialized at GEMM end"), "{seq_out}");
+
+    let bad = t3_cmd(&["cluster", "--tp", "4", "--collective", "bogus"]);
+    assert!(!bad.status.success());
+    assert!(String::from_utf8_lossy(&bad.stderr).contains("bad --collective"));
+
+    // The AG axis has no meaning for the dispatch collective: explicit
+    // error instead of a silently ignored flag.
+    let conflict = t3_cmd(&["cluster", "--tp", "4", "--collective", "a2a", "--ag", "ring"]);
+    assert!(!conflict.status.success());
+    assert!(String::from_utf8_lossy(&conflict.stderr).contains("--ag does not apply"));
+}
+
+#[test]
+fn cli_trace_runs_the_a2a_preset() {
+    let res = t3_cmd(&["trace", "a2a", "--tp", "4", "--sublayer", "op"]);
+    assert!(res.status.success(), "stderr: {}", String::from_utf8_lossy(&res.stderr));
+    let stdout = String::from_utf8_lossy(&res.stdout);
+    assert!(stdout.contains("trace-derived overlap metrics"), "{stdout}");
+    assert!(stdout.contains("T3-A2A-Fused"), "{stdout}");
+}
+
+#[test]
 fn cli_scenarios_lists_the_ar_axis() {
     let out = t3_cmd(&["scenarios"]);
     assert!(out.status.success());

@@ -1,0 +1,174 @@
+//! Public-API surface snapshot: the exported `t3::` item names are pinned
+//! in a blessable golden so accidental surface regrowth fails CI.
+//!
+//! The ISSUE-5 redesign collapsed an N-entry-points-per-collective API
+//! into one trait + one pipeline; this test keeps it collapsed. It scans
+//! the library sources for top-level `pub` items (zero-indentation
+//! `pub fn|struct|enum|trait|type|const|mod|use` — methods and test
+//! modules are indented and excluded) and compares the sorted listing
+//! against `tests/golden/public_api.golden`:
+//!
+//! * `T3_BLESS=1` (re)writes the golden after an intentional API change;
+//! * a present golden always gates;
+//! * a missing golden is tolerated locally but hard-fails under
+//!   `T3_REQUIRE_GOLDEN=1` — CI blesses in one process and re-verifies in
+//!   a fresh one (no Rust toolchain exists in the container this repo is
+//!   grown in, so the file cannot be committed pre-blessed; see
+//!   tests/golden/README.md).
+
+use std::fs;
+use std::path::{Path, PathBuf};
+
+/// Crate-relative module path of a source file (`None` for the binary).
+fn module_of(src_root: &Path, file: &Path) -> Option<String> {
+    let rel = file.strip_prefix(src_root).ok()?;
+    let mut parts: Vec<String> = rel
+        .components()
+        .map(|c| c.as_os_str().to_string_lossy().into_owned())
+        .collect();
+    let last = parts.pop()?;
+    let stem = last.strip_suffix(".rs")?;
+    match stem {
+        // The binary's items are not library surface.
+        "main" => return None,
+        "lib" | "mod" => {}
+        s => parts.push(s.to_string()),
+    }
+    Some(if parts.is_empty() {
+        "t3".to_string()
+    } else {
+        format!("t3::{}", parts.join("::"))
+    })
+}
+
+/// First identifier of `s` (item name after its keyword).
+fn ident_prefix(s: &str) -> String {
+    s.chars()
+        .take_while(|c| c.is_ascii_alphanumeric() || *c == '_')
+        .collect()
+}
+
+/// Collect the surface entries of one file: one line per top-level `pub`
+/// item. `pub use` statements are captured whole (brace lists flattened to
+/// one normalized line) so re-export growth is visible too.
+fn scan_file(path: &Path, module: &str, out: &mut Vec<String>) {
+    let text = fs::read_to_string(path).unwrap_or_else(|e| panic!("read {path:?}: {e}"));
+    let mut lines = text.lines();
+    while let Some(line) = lines.next() {
+        // Top-level items only: zero indentation (methods, trait items,
+        // and #[cfg(test)] bodies are indented).
+        let Some(rest) = line.strip_prefix("pub ") else {
+            continue;
+        };
+        if let Some(tail) = rest.strip_prefix("use ") {
+            // Accumulate until the terminating ';' (multi-line brace lists).
+            let mut stmt = tail.to_string();
+            while !stmt.contains(';') {
+                match lines.next() {
+                    Some(l) => {
+                        stmt.push(' ');
+                        stmt.push_str(l.trim());
+                    }
+                    None => break,
+                }
+            }
+            let stmt: String = stmt
+                .split(';')
+                .next()
+                .unwrap_or("")
+                .split_whitespace()
+                .collect::<Vec<_>>()
+                .join(" ");
+            out.push(format!("{module}::use {stmt}"));
+            continue;
+        }
+        for kw in [
+            "fn", "struct", "enum", "trait", "type", "const", "static", "union", "mod",
+            "unsafe fn",
+        ] {
+            if let Some(tail) = rest.strip_prefix(&format!("{kw} ")) {
+                let name = ident_prefix(tail);
+                if !name.is_empty() {
+                    out.push(format!("{module}::{kw} {name}"));
+                }
+                break;
+            }
+        }
+    }
+}
+
+fn walk(dir: &Path, files: &mut Vec<PathBuf>) {
+    let mut entries: Vec<PathBuf> = fs::read_dir(dir)
+        .unwrap_or_else(|e| panic!("read_dir {dir:?}: {e}"))
+        .map(|e| e.unwrap().path())
+        .collect();
+    entries.sort();
+    for p in entries {
+        if p.is_dir() {
+            walk(&p, files);
+        } else if p.extension().is_some_and(|x| x == "rs") {
+            files.push(p);
+        }
+    }
+}
+
+fn surface() -> String {
+    let src_root = Path::new(env!("CARGO_MANIFEST_DIR")).join("src");
+    let mut files = Vec::new();
+    walk(&src_root, &mut files);
+    let mut entries = Vec::new();
+    for f in &files {
+        if let Some(module) = module_of(&src_root, f) {
+            scan_file(f, &module, &mut entries);
+        }
+    }
+    entries.sort();
+    entries.dedup();
+    entries.join("\n") + "\n"
+}
+
+/// Same golden protocol as tests/cluster.rs: bless with `T3_BLESS=1`, a
+/// present file always gates, a missing file hard-fails only under
+/// `T3_REQUIRE_GOLDEN=1`.
+fn assert_golden(name: &str, rendered: &str) {
+    let golden = Path::new(env!("CARGO_MANIFEST_DIR"))
+        .join("tests/golden")
+        .join(name);
+    if std::env::var("T3_BLESS").is_ok() {
+        fs::create_dir_all(golden.parent().unwrap()).unwrap();
+        fs::write(&golden, rendered).unwrap();
+    } else if let Ok(want) = fs::read_to_string(&golden) {
+        assert_eq!(
+            rendered, want,
+            "public API surface changed; if intended, re-bless with \
+             `T3_BLESS=1 cargo test --test public_api`"
+        );
+    } else if std::env::var("T3_REQUIRE_GOLDEN").is_ok() {
+        panic!(
+            "golden {name} missing at {}; bless with `T3_BLESS=1 cargo test --test public_api`",
+            golden.display()
+        );
+    }
+}
+
+#[test]
+fn public_api_surface_is_pinned() {
+    let s = surface();
+    // Sanity: the scan sees the API this PR is about — if these ever
+    // disappear the scanner itself broke, not the surface.
+    for must in [
+        "t3::cluster::collective::trait Collective",
+        "t3::cluster::program::fn execute",
+        "t3::cluster::program::struct Program",
+        "t3::engine::alltoall::struct AllToAllRank",
+        "t3::experiment::enum CollectiveKind",
+    ] {
+        assert!(s.contains(must), "scanner lost {must}\n{s}");
+    }
+    assert_golden("public_api.golden", &s);
+}
+
+#[test]
+fn surface_scan_is_deterministic() {
+    assert_eq!(surface(), surface(), "directory walk must be order-stable");
+}

@@ -77,10 +77,10 @@ fn every_registry_preset_emits_a_perfetto_trace_with_correct_overlap() {
                 "{name}: serialized composition must expose all communication"
             );
         }
-        if name == "T3-AR-Fused" || name == "T3-AR-Consumer" {
+        if name == "T3-AR-Fused" || name == "T3-AR-Consumer" || name == "T3-A2A-Fused" {
             assert!(
                 tm.overlap_fraction > 0.0,
-                "{name}: fused all-reduce must overlap compute with the link"
+                "{name}: fused collective must overlap compute with the link"
             );
         }
 
@@ -96,7 +96,9 @@ fn every_registry_preset_emits_a_perfetto_trace_with_correct_overlap() {
 fn tracing_is_passive_for_representative_presets() {
     let s = sys();
     let m = by_name("T-NLG").unwrap();
-    for which in ["sequential", "t3-mca", "ideal", "ar-fused", "ar-consumer", "straggler"] {
+    for which in [
+        "sequential", "t3-mca", "ideal", "ar-fused", "ar-consumer", "straggler", "a2a", "seq-a2a",
+    ] {
         let scenario = t3::experiment::preset(which).unwrap();
         let plain = scenario.run(&s, &m, TP, SubLayer::OpFwd);
         let (traced, _) = scenario.run_traced(&s, &m, TP, SubLayer::OpFwd);
