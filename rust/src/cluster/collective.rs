@@ -30,19 +30,23 @@
 //! [`crate::engine::alltoall`] for the worked example, added without
 //! touching `cluster::drive` or `engine::Runner`.
 
+use std::cell::RefCell;
+use std::rc::Rc;
+
 use crate::config::{ArbPolicy, LinkConfig, SystemConfig};
 use crate::engine::allgather::{AgRankSpec, AllGatherRank, AllGatherResult, ConsumerSpec};
 use crate::engine::collective_run::{CollectiveRunResult, RingKind, RingRank, RingRankSpec};
 use crate::engine::fused::{FusedOpts, FusedRank, FusedResult};
 use crate::engine::gemm_run::{GemmRank, GemmRankSpec, GemmRunResult};
+use crate::fabric::{EgressPort, Network};
 use crate::gemm::traffic::WriteMode;
 use crate::gemm::StagePlan;
 use crate::sim::stats::DramCounters;
 use crate::sim::time::SimTime;
-use crate::trace::RankTrace;
+use crate::trace::{FabricLinkTrace, RankTrace};
 
-use super::engine::{drive, Interleave, RankNode};
-use super::topology::ClusterModel;
+use super::engine::{drive_mapped, Interleave, RankNode};
+use super::topology::{ClusterModel, TopologySpec};
 
 /// Everything a collective needs to build one rank's machine.
 #[derive(Debug, Clone)]
@@ -99,6 +103,14 @@ pub trait Collective {
     /// Project the phase-composition view, taking the timeline out of the
     /// result (the caller owns trace assembly).
     fn outcome(&self, out: &mut Self::Out) -> RankOutcome;
+    /// Where rank `i`'s messages go: `None` for the canonical downstream
+    /// ring `(i + tp - 1) % tp` (every pre-existing collective); grouped
+    /// collectives (rack-local / cross-rack rings of a hierarchical
+    /// all-reduce) return an explicit permutation.
+    fn dest_map(&self, tp: u64) -> Option<Vec<usize>> {
+        let _ = tp;
+        None
+    }
 }
 
 /// Where a collective executes.
@@ -137,8 +149,28 @@ pub fn run_collective<C: Collective>(
     traced: bool,
     order: Interleave,
 ) -> Vec<C::Out> {
+    run_collective_with_links(sys, coll, tp, starts, target, traced, order).0
+}
+
+/// [`run_collective`] returning the fabric's per-physical-link traces
+/// alongside the per-rank results. The link vector is empty unless the
+/// target is a [`TopologySpec::Fabric`] cluster *and* `traced` is set —
+/// the dedicated-link paths have no shared physical links to report.
+pub fn run_collective_with_links<C: Collective>(
+    sys: &SystemConfig,
+    coll: &C,
+    tp: u64,
+    starts: &[SimTime],
+    target: &ExecTarget,
+    traced: bool,
+    order: Interleave,
+) -> (Vec<C::Out>, Vec<FabricLinkTrace>) {
     match target {
         ExecTarget::Mirror => {
+            debug_assert!(
+                coll.dest_map(tp).is_none(),
+                "grouped collectives need interacting ranks; the mirror has one"
+            );
             let ctx = RankCtx {
                 sys,
                 rank: 0,
@@ -157,12 +189,19 @@ pub fn run_collective<C: Collective>(
                     node.deliver(&m);
                 }
             }
-            vec![coll.finish(node)]
+            (vec![coll.finish(node)], Vec::new())
         }
         ExecTarget::Cluster(model) => {
             assert_eq!(starts.len(), tp as usize, "one start time per rank");
+            let n = tp as usize;
+            // Degenerate shapes (a two-tier node holding the whole group)
+            // collapse before any arm looks at them.
+            let topology = model.topology.clone().canonicalize(tp);
             let factors = model.factors(tp, sys.seed);
             let links = model.links(&sys.link, tp);
+            let dest = coll
+                .dest_map(tp)
+                .unwrap_or_else(|| (0..n).map(|i| (i + n - 1) % n).collect());
             let mut nodes: Vec<C::Node> = (0..tp)
                 .map(|d| {
                     let ctx = RankCtx {
@@ -173,15 +212,29 @@ pub fn run_collective<C: Collective>(
                         compute_scale: factors[d as usize],
                         link: links[d as usize].clone(),
                     };
-                    let mut n = coll.build(&ctx);
+                    let mut node = coll.build(&ctx);
                     if traced {
-                        n.enable_trace(d);
+                        node.enable_trace(d);
                     }
-                    n
+                    node
                 })
                 .collect();
-            drive(&mut nodes, order);
-            nodes.into_iter().map(|n| coll.finish(n)).collect()
+            // Fabric target: one shared Network, every rank's egress
+            // rebound to its `(rank, dest)` lane before the first event.
+            let net = if let TopologySpec::Fabric(spec) = &topology {
+                let net = Rc::new(RefCell::new(Network::new(spec, n, &sys.link, traced)));
+                for (r, node) in nodes.iter_mut().enumerate() {
+                    node.attach_port(EgressPort::fabric(Rc::clone(&net), r, dest[r]));
+                }
+                Some(net)
+            } else {
+                None
+            };
+            drive_mapped(&mut nodes, order, &dest);
+            let fabric = net
+                .map(|net| net.borrow_mut().take_link_traces())
+                .unwrap_or_default();
+            (nodes.into_iter().map(|node| coll.finish(node)).collect(), fabric)
         }
     }
 }
@@ -283,6 +336,109 @@ impl Collective for RingCollective {
             counters: out.counters,
             timeline: out.timeline.take(),
         }
+    }
+}
+
+/// Which sub-ring of a hierarchical collective a
+/// [`GroupedRingCollective`] runs over.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum RingGroup {
+    /// Contiguous racks of `size` ranks, one independent ring per rack
+    /// (rack-local reduce-scatter / all-gather stays on cheap intra-rack
+    /// routes).
+    Rack { size: u64 },
+    /// One ring per intra-rack index, striding across the `tp / size`
+    /// racks (the cross-rack stage: every ring member sits in a different
+    /// rack, so each ring moves only `1/size` of the payload over the
+    /// oversubscribed uplinks).
+    Strided { size: u64 },
+}
+
+impl RingGroup {
+    /// Ring size each member sees ([`RingRankSpec::devices`]).
+    pub fn devices(&self, tp: u64) -> u64 {
+        match *self {
+            RingGroup::Rack { size } => size,
+            RingGroup::Strided { size } => tp / size,
+        }
+    }
+
+    /// Downstream-neighbor permutation over the whole `tp` group.
+    pub fn dest_map(&self, tp: u64) -> Vec<usize> {
+        let n = tp as usize;
+        let g = match *self {
+            RingGroup::Rack { size } | RingGroup::Strided { size } => size as usize,
+        };
+        assert!(g >= 1 && n % g == 0, "rack size {g} must divide tp {n}");
+        match *self {
+            RingGroup::Rack { .. } => {
+                (0..n).map(|r| (r / g) * g + (r % g + g - 1) % g).collect()
+            }
+            RingGroup::Strided { .. } => {
+                let racks = n / g;
+                (0..n).map(|r| ((r / g + racks - 1) % racks) * g + r % g).collect()
+            }
+        }
+    }
+}
+
+/// A baseline ring collective over a *sub-ring* of the group — the
+/// building block of the hierarchical all-reduce (rack-local RS, cross-rack
+/// RS/AG over one-rack's-worth of ranks, rack-local AG). Each member runs
+/// the ordinary [`RingRank`] machine with `devices = group.devices(tp)`;
+/// only the destination permutation differs from [`RingCollective`].
+#[derive(Debug, Clone)]
+pub struct GroupedRingCollective {
+    /// Payload of *this* phase on every member (the hierarchical schedule
+    /// shrinks it for the cross-rack stages).
+    pub bytes: u64,
+    pub cus: u32,
+    pub kind: RingKind,
+    pub group: RingGroup,
+}
+
+impl Collective for GroupedRingCollective {
+    type Node = RingRank;
+    type Out = CollectiveRunResult;
+
+    fn label(&self) -> &'static str {
+        match self.group {
+            RingGroup::Rack { .. } => "ring-rack",
+            RingGroup::Strided { .. } => "ring-cross",
+        }
+    }
+
+    fn build(&self, ctx: &RankCtx) -> RingRank {
+        RingRank::new(
+            ctx.sys,
+            &RingRankSpec {
+                bytes: self.bytes,
+                devices: self.group.devices(ctx.tp),
+                cus: self.cus,
+                kind: self.kind,
+                start: ctx.start,
+                link: ctx.link.clone(),
+                issue_scale: ctx.compute_scale,
+            },
+        )
+    }
+
+    fn finish(&self, node: RingRank) -> CollectiveRunResult {
+        node.into_result()
+    }
+
+    fn outcome(&self, out: &mut CollectiveRunResult) -> RankOutcome {
+        RankOutcome {
+            end: out.time,
+            trigger: out.time,
+            gemm_end: SimTime::ZERO,
+            counters: out.counters,
+            timeline: out.timeline.take(),
+        }
+    }
+
+    fn dest_map(&self, tp: u64) -> Option<Vec<usize>> {
+        Some(self.group.dest_map(tp))
     }
 }
 
@@ -476,6 +632,94 @@ mod tests {
         assert!(outs[2].time > outs[0].time, "straggler must stretch");
         assert_eq!(outs[0].time, outs[1].time);
         assert_eq!(outs[0].time, outs[3].time);
+    }
+
+    #[test]
+    fn ring_group_dest_maps_are_permutations() {
+        // 8 ranks, racks of 4: rank 0's downstream is 3 (rack-local ring),
+        // rank 4's is 7; the strided rings pair r with r±4.
+        let rack = RingGroup::Rack { size: 4 }.dest_map(8);
+        assert_eq!(rack, vec![3, 0, 1, 2, 7, 4, 5, 6]);
+        let cross = RingGroup::Strided { size: 4 }.dest_map(8);
+        assert_eq!(cross, vec![4, 5, 6, 7, 0, 1, 2, 3]);
+        for map in [rack, cross] {
+            let mut seen = map.clone();
+            seen.sort_unstable();
+            assert_eq!(seen, (0..8).collect::<Vec<_>>(), "must be a permutation");
+        }
+        assert_eq!(RingGroup::Rack { size: 4 }.devices(8), 4);
+        assert_eq!(RingGroup::Strided { size: 4 }.devices(8), 2);
+    }
+
+    #[test]
+    fn degenerate_ring_fabric_matches_the_legacy_single_tier_engine() {
+        // The tentpole's pinned parity: routing the same ring through the
+        // shared Network is bit-identical to the dedicated-link path.
+        let s = sys();
+        let ring = RingCollective {
+            bytes: 32 << 20,
+            cus: 80,
+            kind: RingKind::RsCu,
+        };
+        let starts = vec![SimTime::ZERO; 4];
+        let legacy = run_collective(
+            &s,
+            &ring,
+            4,
+            &starts,
+            &ExecTarget::Cluster(ClusterModel::uniform()),
+            false,
+            Interleave::Ascending,
+        );
+        let fabric = run_collective(
+            &s,
+            &ring,
+            4,
+            &starts,
+            &ExecTarget::Cluster(ClusterModel::fabric(crate::fabric::FabricSpec::ring())),
+            false,
+            Interleave::Ascending,
+        );
+        assert_eq!(legacy, fabric);
+    }
+
+    #[test]
+    fn traced_fabric_run_reports_per_link_traces() {
+        let s = sys();
+        let ring = RingCollective {
+            bytes: 16 << 20,
+            cus: 80,
+            kind: RingKind::RsCu,
+        };
+        let starts = vec![SimTime::ZERO; 4];
+        let target = ExecTarget::Cluster(ClusterModel::fabric(crate::fabric::FabricSpec::ring()));
+        let (outs, links) = run_collective_with_links(
+            &s,
+            &ring,
+            4,
+            &starts,
+            &target,
+            true,
+            Interleave::Ascending,
+        );
+        assert_eq!(outs.len(), 4);
+        // Each rank's dedicated downstream edge carried its sends.
+        assert_eq!(links.len(), 4);
+        crate::trace::check::check_fabric_links(&links).unwrap();
+        let sent: u64 = links.iter().map(|l| l.bytes_carried).sum();
+        let expect: u64 = outs.iter().map(|o| o.link_bytes).sum();
+        assert_eq!(sent, expect);
+        // Untraced: no link traces.
+        let (_, none) = run_collective_with_links(
+            &s,
+            &ring,
+            4,
+            &starts,
+            &target,
+            false,
+            Interleave::Ascending,
+        );
+        assert!(none.is_empty());
     }
 
     #[test]

@@ -54,13 +54,14 @@ pub use engine::{
     run_gemm_cluster, run_gemm_cluster_traced, run_ring_cluster, run_ring_cluster_traced,
 };
 pub use engine::{
-    drive, AgClusterSpec, ClusterAgRun, ClusterFusedRun, ClusterRingRun, Interleave, RankNode,
-    RingClusterSpec,
+    drive, drive_mapped, AgClusterSpec, ClusterAgRun, ClusterFusedRun, ClusterRingRun, Interleave,
+    RankNode, RingClusterSpec,
 };
 
 pub use collective::{
-    run_collective, Collective, ExecTarget, FusedAgCollective, FusedGemmRsCollective,
-    GemmCollective, RankCtx, RankOutcome, RingCollective,
+    run_collective, run_collective_with_links, Collective, ExecTarget, FusedAgCollective,
+    FusedGemmRsCollective, GemmCollective, GroupedRingCollective, RankCtx, RankOutcome,
+    RingCollective, RingGroup,
 };
 pub use program::{execute, ExecOpts, Phase, PhaseReport, PhaseRole, Program, RunReport, StartRule};
 pub use topology::{ClusterModel, SkewModel, TopologySpec};

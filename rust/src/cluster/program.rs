@@ -28,9 +28,9 @@
 use crate::config::SystemConfig;
 use crate::sim::stats::DramCounters;
 use crate::sim::time::SimTime;
-use crate::trace::{RankTrace, Trace};
+use crate::trace::{merge_fabric_links, FabricLinkTrace, RankTrace, Trace};
 
-use super::collective::{run_collective, Collective, ExecTarget, RankOutcome};
+use super::collective::{run_collective_with_links, Collective, ExecTarget, RankOutcome};
 use super::engine::Interleave;
 
 /// How a phase's per-rank start times derive from the phases before it.
@@ -77,7 +77,7 @@ trait DynCollective: Send + Sync {
         target: &ExecTarget,
         traced: bool,
         order: Interleave,
-    ) -> Vec<RankOutcome>;
+    ) -> (Vec<RankOutcome>, Vec<FabricLinkTrace>);
 }
 
 impl<C> DynCollective for C
@@ -92,9 +92,10 @@ where
         target: &ExecTarget,
         traced: bool,
         order: Interleave,
-    ) -> Vec<RankOutcome> {
-        let mut outs = run_collective(sys, self, tp, starts, target, traced, order);
-        outs.iter_mut().map(|o| self.outcome(o)).collect()
+    ) -> (Vec<RankOutcome>, Vec<FabricLinkTrace>) {
+        let (mut outs, links) =
+            run_collective_with_links(sys, self, tp, starts, target, traced, order);
+        (outs.iter_mut().map(|o| self.outcome(o)).collect(), links)
     }
 }
 
@@ -259,6 +260,7 @@ pub fn execute(sys: &SystemConfig, prog: &Program, opts: &ExecOpts) -> RunReport
     let mut prev_ends: Vec<SimTime> = vec![SimTime::ZERO; nranks];
     let mut prev_triggers: Vec<SimTime> = vec![SimTime::ZERO; nranks];
     let mut timelines: Vec<RankTrace> = (0..nranks).map(|r| RankTrace::new(r as u64)).collect();
+    let mut fabric_links: Vec<FabricLinkTrace> = Vec::new();
     let mut counters = DramCounters::default();
     let mut phases = Vec::with_capacity(prog.phases.len());
     let mut total = SimTime::ZERO;
@@ -278,7 +280,7 @@ pub fn execute(sys: &SystemConfig, prog: &Program, opts: &ExecOpts) -> RunReport
                 })
                 .collect(),
         };
-        let mut outcomes = ph.coll.run_phase(
+        let (mut outcomes, links) = ph.coll.run_phase(
             sys,
             prog.tp,
             &starts,
@@ -287,6 +289,10 @@ pub fn execute(sys: &SystemConfig, prog: &Program, opts: &ExecOpts) -> RunReport
             opts.interleave,
         );
         debug_assert_eq!(outcomes.len(), nranks);
+        // Each phase gets a fresh Network (phases sequence through start
+        // rules, so no cross-phase queuing is lost); their per-link
+        // traces merge by link identity.
+        merge_fabric_links(&mut fabric_links, links);
         counters.add(&outcomes[0].counters);
         let ends: Vec<SimTime> = outcomes.iter().map(|o| o.end).collect();
         let triggers: Vec<SimTime> = outcomes.iter().map(|o| o.trigger).collect();
@@ -328,6 +334,7 @@ pub fn execute(sys: &SystemConfig, prog: &Program, opts: &ExecOpts) -> RunReport
         trace: opts.trace.then(|| Trace {
             name: prog.name.clone(),
             ranks: timelines,
+            links: fabric_links,
         }),
     }
 }

@@ -8,6 +8,7 @@
 //! experiment registry exposes named scenarios built from it.
 
 use crate::config::LinkConfig;
+use crate::fabric::FabricSpec;
 use crate::sim::rng::Rng;
 use crate::sim::time::SimTime;
 
@@ -70,14 +71,35 @@ pub enum TopologySpec {
         inter_bw_frac: f64,
         inter_latency: SimTime,
     },
+    /// Route every hop through an explicit [`crate::fabric::Network`]:
+    /// hop-by-hop links, shared switches, FIFO queuing, background flows.
+    /// The two variants above stay on the legacy dedicated-link path;
+    /// `Fabric(FabricSpec::ring())` models the same shape through the
+    /// fabric and is pinned bit-identical to `SingleTier` by the
+    /// cluster property tests.
+    Fabric(FabricSpec),
 }
 
 impl TopologySpec {
     /// The node index a rank belongs to.
     pub fn node_of(&self, rank: u64) -> u64 {
         match *self {
-            TopologySpec::SingleTier => 0,
+            TopologySpec::SingleTier | TopologySpec::Fabric(_) => 0,
             TopologySpec::TwoTier { node_size, .. } => rank / node_size,
+        }
+    }
+
+    /// Normalize degenerate shapes for a `tp`-rank group: a two-tier spec
+    /// whose nodes hold the whole group has no boundary hop, so it *is*
+    /// the single tier — collapsing it at construction keeps every
+    /// downstream `match` honest instead of each arm re-deriving the
+    /// special case.
+    pub fn canonicalize(self, tp: u64) -> TopologySpec {
+        match self {
+            TopologySpec::TwoTier { node_size, .. } if node_size >= tp => {
+                TopologySpec::SingleTier
+            }
+            other => other,
         }
     }
 
@@ -85,7 +107,10 @@ impl TopologySpec {
     /// downstream ring neighbor `(rank + tp - 1) % tp`.
     pub fn egress_link(&self, base: &LinkConfig, rank: u64, tp: u64) -> LinkConfig {
         match *self {
-            TopologySpec::SingleTier => base.clone(),
+            // Fabric ranks get the base link as a placeholder: the
+            // collective runner rebinds every rank's egress to a fabric
+            // port before the first event.
+            TopologySpec::SingleTier | TopologySpec::Fabric(_) => base.clone(),
             TopologySpec::TwoTier {
                 node_size,
                 inter_bw_frac,
@@ -111,6 +136,11 @@ impl TopologySpec {
             // A two-tier spec whose nodes hold the whole group degenerates
             // to a single tier.
             TopologySpec::TwoTier { node_size, .. } => node_size >= tp,
+            // Even a degenerate ring fabric runs through the shared
+            // Network (queues, routes), so it never takes the
+            // loopback-mirror shortcut; the property tests pin that the
+            // two paths agree bit-for-bit anyway.
+            TopologySpec::Fabric(_) => false,
         }
     }
 }
@@ -159,6 +189,14 @@ impl ClusterModel {
                 inter_bw_frac,
                 inter_latency,
             },
+        }
+    }
+
+    /// No skew, traffic routed through an explicit network fabric.
+    pub fn fabric(spec: FabricSpec) -> Self {
+        ClusterModel {
+            skew: SkewModel::None,
+            topology: TopologySpec::Fabric(spec),
         }
     }
 
@@ -211,6 +249,7 @@ impl ClusterModel {
                 "two-tier(node={node_size} inter-bw={:.0}% lat={inter_latency})",
                 inter_bw_frac * 100.0
             ),
+            TopologySpec::Fabric(ref spec) => spec.describe(),
         };
         format!("skew={skew} topo={topo}")
     }
@@ -264,6 +303,36 @@ mod tests {
         assert!(!m.is_uniform_for(8));
         // A node that holds the whole group is single-tier in disguise.
         assert!(ClusterModel::two_tier(8, 0.25, SimTime::us(2)).is_uniform_for(8));
+    }
+
+    #[test]
+    fn degenerate_two_tier_canonicalizes_to_single_tier() {
+        // node_size >= tp: no hop crosses a node boundary (including the
+        // wraparound), so the spec must collapse to SingleTier outright.
+        let t = TopologySpec::TwoTier {
+            node_size: 8,
+            inter_bw_frac: 0.25,
+            inter_latency: SimTime::us(2),
+        };
+        assert_eq!(t.clone().canonicalize(8), TopologySpec::SingleTier);
+        assert_eq!(t.clone().canonicalize(4), TopologySpec::SingleTier);
+        // A real boundary survives untouched.
+        assert_eq!(t.clone().canonicalize(16), t);
+        // And the collapse never changes the links it stood for.
+        let sys = SystemConfig::table1();
+        let m = ClusterModel::two_tier(8, 0.25, SimTime::us(2));
+        let canon = m.clone().with_topology(m.topology.clone().canonicalize(8));
+        assert_eq!(m.links(&sys.link, 8), canon.links(&sys.link, 8));
+        // Fabric specs canonicalize to themselves.
+        let f = TopologySpec::Fabric(crate::fabric::FabricSpec::ring());
+        assert_eq!(f.clone().canonicalize(8), f);
+    }
+
+    #[test]
+    fn fabric_model_reports_itself() {
+        let m = ClusterModel::fabric(crate::fabric::FabricSpec::fat_tree(16, 4.0));
+        assert!(!m.is_uniform_for(8));
+        assert!(m.describe().contains("fat-tree"), "{}", m.describe());
     }
 
     #[test]

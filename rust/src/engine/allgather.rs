@@ -230,6 +230,13 @@ impl AllGatherRank {
         self.r.enable_trace(rank);
     }
 
+    /// Rebind this rank's egress (fabric integration). Must be called
+    /// before the first event is processed.
+    pub fn attach_port(&mut self, port: crate::fabric::EgressPort) {
+        debug_assert!(!self.started, "attach_port after the rank started");
+        self.r.link_out = port;
+    }
+
     /// Time of this rank's next pending event.
     pub fn next_time(&self) -> Option<SimTime> {
         self.r.q.peek_time()
@@ -273,11 +280,10 @@ impl AllGatherRank {
         };
         self.r.sink.span(Lane::LinkEgress, w.start, w.done, self.chunk, SpanLabel::Chunk(fs));
         self.r.q.schedule(w.done, Ev::EgressDone { pos: fs });
-        let lat = self.r.link_out.cfg().latency;
         out.push(AgMsg {
             step: fs,
-            start: w.start + lat,
-            end: w.done + lat,
+            start: w.arrive_first,
+            end: w.arrive_last,
         });
     }
 
@@ -343,11 +349,10 @@ impl AllGatherRank {
                     .sink
                     .span(Lane::LinkEgress, w.start, w.done, self.chunk, SpanLabel::Chunk(0));
                 self.r.q.schedule(w.done, Ev::EgressDone { pos: 0 });
-                let lat = self.r.link_out.cfg().latency;
                 out.push(AgMsg {
                     step: 0,
-                    start: w.start + lat,
-                    end: w.done + lat,
+                    start: w.arrive_first,
+                    end: w.arrive_last,
                 });
                 if let Some(c) = &mut self.consumer {
                     Self::try_start_stage(&mut self.r, c, self.n, self.arrived);
@@ -441,7 +446,7 @@ impl AllGatherRank {
             consumer_done: self.consumer.as_ref().map(|c| c.done),
             counters: self.r.mem.counters,
             timeline,
-            link_bytes: self.r.link_out.bytes_carried,
+            link_bytes: self.r.link_out.bytes_carried(),
         }
     }
 }

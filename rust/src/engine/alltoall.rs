@@ -248,6 +248,13 @@ impl AllToAllRank {
         self.r.enable_trace(rank);
     }
 
+    /// Rebind this rank's egress (fabric integration). Must be called
+    /// before the first event is processed.
+    pub fn attach_port(&mut self, port: crate::fabric::EgressPort) {
+        debug_assert!(!self.started, "attach_port after the rank started");
+        self.r.link_out = port;
+    }
+
     /// Time of this rank's next pending event.
     pub fn next_time(&self) -> Option<SimTime> {
         self.r.q.peek_time()
@@ -299,12 +306,11 @@ impl AllToAllRank {
                 .sink
                 .span(Lane::LinkEgress, w.start, w.done, self.chunk, SpanLabel::Chunk(h));
             self.r.q.schedule(w.done, Ev::EgressDone { pos: h });
-            let lat = self.r.link_out.cfg().latency;
             out.push(A2aMsg {
                 slice: h,
                 hops_left: h - 1,
-                start: w.start + lat,
-                end: w.done + lat,
+                start: w.arrive_first,
+                end: w.arrive_last,
             });
         }
     }
@@ -328,12 +334,11 @@ impl AllToAllRank {
             .sink
             .span(Lane::LinkEgress, w.start, w.done, self.chunk, SpanLabel::Chunk(p.slice));
         self.r.q.schedule(w.done, Ev::EgressDone { pos: key });
-        let lat = self.r.link_out.cfg().latency;
         out.push(A2aMsg {
             slice: p.slice,
             hops_left: p.hops_left - 1,
-            start: w.start + lat,
-            end: w.done + lat,
+            start: w.arrive_first,
+            end: w.arrive_last,
         });
     }
 
@@ -472,7 +477,7 @@ impl AllToAllRank {
             send_triggers: self.send_triggers,
             counters: self.r.mem.counters,
             timeline,
-            link_bytes: self.r.link_out.bytes_carried,
+            link_bytes: self.r.link_out.bytes_carried(),
         }
     }
 }
@@ -490,6 +495,9 @@ impl crate::cluster::RankNode for AllToAllRank {
     }
     fn enable_trace(&mut self, rank: u64) {
         AllToAllRank::enable_trace(self, rank)
+    }
+    fn attach_port(&mut self, port: crate::fabric::EgressPort) {
+        AllToAllRank::attach_port(self, port)
     }
 }
 

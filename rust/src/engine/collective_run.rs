@@ -220,6 +220,13 @@ impl RingRank {
         self.r.enable_trace(rank);
     }
 
+    /// Rebind this rank's egress (fabric integration). Must be called
+    /// before the first event is processed.
+    pub fn attach_port(&mut self, port: crate::fabric::EgressPort) {
+        debug_assert!(!self.started, "attach_port after the rank started");
+        self.r.link_out = port;
+    }
+
     /// Start ring step `s`: paced local reads, an egress reservation on the
     /// downstream edge, and a [`RingMsg`] telling the receiver the hop's
     /// arrival window.
@@ -231,12 +238,10 @@ impl RingRank {
         let w = self.r.link_out.reserve_rate_limited(now, self.chunk, self.feed_bw);
         self.r.sink.span(Lane::LinkEgress, w.start, w.done, self.chunk, SpanLabel::Chunk(s));
         self.r.q.schedule(w.done, Ev::EgressDone { pos: s });
-        let lat = self.r.link_out.cfg().latency;
-        let link_bw = self.r.link_out.cfg().per_dir_bw_gbps;
         out.push(RingMsg {
             step: s,
-            start: w.start + lat,
-            rate_gbps: self.feed_bw.min(link_bw),
+            start: w.arrive_first,
+            rate_gbps: self.feed_bw.min(self.r.link_out.bw_gbps()),
         });
     }
 
@@ -356,7 +361,7 @@ impl RingRank {
             counters: self.r.mem.counters,
             step_ends: self.step_ends,
             timeline,
-            link_bytes: self.r.link_out.bytes_carried,
+            link_bytes: self.r.link_out.bytes_carried(),
         }
     }
 }

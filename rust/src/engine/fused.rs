@@ -332,6 +332,13 @@ impl FusedRank {
         self.r.enable_trace(rank);
     }
 
+    /// Rebind this rank's egress (fabric integration). Must be called
+    /// before the first event is processed.
+    pub fn attach_port(&mut self, port: crate::fabric::EgressPort) {
+        debug_assert!(port.bytes_carried() == 0, "attach_port expects a fresh port");
+        self.r.link_out = port;
+    }
+
     fn start_stage(&mut self, s: u64) {
         let bytes = stage_reads(&self.plan, self.dram_reads, s).max(self.r.sys.mem.txn_bytes);
         self.r.submit_tagged(
@@ -462,14 +469,13 @@ impl FusedRank {
                         // is ourselves.
                         let nxt = p + 1;
                         if nxt < self.n {
-                            let lat = self.r.link_out.cfg().latency;
                             out.push(FusedMsg::Segment {
                                 pos: nxt as u32,
                                 wgs,
                                 of_total: self.chunks.chunk_wgs
                                     [self.chunks.chunk_order[0] as usize],
-                                start: w.start + lat,
-                                end: w.done + lat,
+                                start: w.arrive_first,
+                                end: w.arrive_last,
                             });
                         }
                     }
@@ -521,11 +527,10 @@ impl FusedRank {
                 self.r.q.schedule(w.done, Ev::EgressDone { pos: p as u32 });
                 let nxt = p + 1;
                 if nxt < self.n {
-                    let lat = self.r.link_out.cfg().latency;
                     out.push(FusedMsg::Dma {
                         pos: nxt as u32,
-                        start: w.start + lat,
-                        end: w.done + lat,
+                        start: w.arrive_first,
+                        end: w.arrive_last,
                     });
                 }
             }
@@ -602,7 +607,7 @@ impl FusedRank {
         let tracker_peak_tiles = self.plan.stage_wgs * self.plan.tiling.wfs_per_wg()
             + self.chunks.chunk_wf_tiles.iter().max().copied().unwrap_or(0);
         let timeline = self.r.take_timeline(total);
-        let link_bytes = self.r.link_out.bytes_carried;
+        let link_bytes = self.r.link_out.bytes_carried();
         let mut mem = self.r.mem;
         FusedResult {
             total,

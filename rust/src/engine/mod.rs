@@ -51,8 +51,8 @@ pub mod gemm_run;
 use std::collections::HashMap;
 
 use crate::config::SystemConfig;
+use crate::fabric::EgressPort;
 use crate::hw::hbm::{GroupId, MemEvent, MemorySystem, TrafficClass, Txn, TxnKind};
-use crate::hw::link::Link;
 use crate::hw::mc::Stream;
 use crate::sim::events::EventQueue;
 use crate::sim::time::SimTime;
@@ -119,7 +119,9 @@ pub struct Runner {
     pub sys: SystemConfig,
     pub mem: MemorySystem,
     pub q: EventQueue<Ev>,
-    pub link_out: Link,
+    /// The rank's egress: a dedicated link (mirror and legacy cluster
+    /// paths) or a bound lane into a shared fabric [`crate::fabric::Network`].
+    pub link_out: EgressPort,
     /// Timeline recorder (`t3::trace`); off by default — recording is
     /// purely observational, so traced and untraced runs are bit-identical.
     pub sink: TraceSink,
@@ -146,7 +148,7 @@ impl Runner {
             sys: sys.clone(),
             mem: MemorySystem::new(sys.mem.clone(), policy, sys.mca.clone()),
             q: EventQueue::new(),
-            link_out: Link::new(link),
+            link_out: EgressPort::direct(link),
             sink: TraceSink::off(),
             tags: HashMap::new(),
             completions: Vec::new(),

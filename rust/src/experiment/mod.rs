@@ -45,9 +45,11 @@ pub use results::{Cell, EndToEnd, ResultSet};
 
 use crate::cluster::{
     execute, ClusterModel, ExecOpts, ExecTarget, FusedAgCollective, FusedGemmRsCollective,
-    GemmCollective, Interleave, PhaseRole, Program, RingCollective, RunReport, StartRule,
+    GemmCollective, GroupedRingCollective, Interleave, PhaseRole, Program, RingCollective,
+    RingGroup, RunReport, StartRule, TopologySpec,
 };
 use crate::config::{ArbPolicy, SystemConfig};
+use crate::fabric::{BgFlow, FabricSpec};
 use crate::engine::allgather::ConsumerSpec;
 use crate::engine::alltoall::{A2aMode, AllToAllCollective};
 use crate::engine::collective_run::RingKind;
@@ -171,6 +173,13 @@ pub struct ScenarioSpec {
     /// path; `Some(ClusterModel::uniform())` reproduces it bit-for-bit
     /// through the multi-rank engine.
     pub cluster: Option<ClusterModel>,
+    /// Decompose the all-reduce hierarchically over the cluster fabric's
+    /// racks: rack-local RS, cross-rack RS/AG over the rack shards, then
+    /// rack-local AG — `(racks-1)/racks` of the bytes never touch the
+    /// thin cross-rack links. Applies only when the cluster topology has
+    /// racks that divide `tp` evenly; flat topologies compile to the
+    /// ordinary ring chain.
+    pub hier_ar: bool,
 }
 
 impl ScenarioSpec {
@@ -189,6 +198,7 @@ impl ScenarioSpec {
             ag: AgMode::RingCu,
             trace_bin: None,
             cluster: None,
+            hier_ar: false,
         }
     }
 
@@ -300,6 +310,13 @@ impl ScenarioSpec {
         self
     }
 
+    /// Decompose the all-reduce hierarchically over the fabric's racks
+    /// (see [`ScenarioSpec::hier_ar`]).
+    pub fn hierarchical_ar(mut self) -> Self {
+        self.hier_ar = true;
+        self
+    }
+
     /// One-line knob summary for `t3 scenarios`.
     pub fn describe(&self) -> String {
         let overlap = match self.overlap {
@@ -340,6 +357,9 @@ impl ScenarioSpec {
         if self.collective == CollectiveKind::AllToAll {
             s.push_str(" coll=a2a");
         }
+        if self.hier_ar {
+            s.push_str(" hier-ar");
+        }
         if let Some(cm) = &self.cluster {
             s.push(' ');
             s.push_str(&cm.describe());
@@ -358,6 +378,23 @@ impl ScenarioSpec {
             write_mode: self.write_mode,
             compute_scale: 1.0,
         })
+    }
+
+    /// The rack size the hierarchical all-reduce decomposes over, read
+    /// from the cluster topology (fabric kinds report their natural
+    /// grouping; the legacy two-tier spec groups by node). `None` when
+    /// the decomposition would be degenerate — no cluster, a flat
+    /// topology, one rack, or a rack size that does not divide `tp` —
+    /// in which case [`ScenarioSpec::compile`] falls back to the flat
+    /// ring chain.
+    fn hier_rack_size(&self, tp: u64) -> Option<u64> {
+        let model = self.cluster.as_ref()?;
+        let g = match &model.topology {
+            TopologySpec::Fabric(spec) => spec.kind.rack_size(tp),
+            TopologySpec::TwoTier { node_size, .. } => (*node_size).clamp(1, tp),
+            TopologySpec::SingleTier => tp,
+        };
+        (g > 1 && g < tp && tp % g == 0).then_some(g)
     }
 
     /// Lower this scenario into an executable [`Program`]: one phase per
@@ -398,6 +435,69 @@ impl ScenarioSpec {
         }
 
         let rs_kind = if self.rs_nmc { RingKind::RsNmc } else { RingKind::RsCu };
+
+        // Hierarchical all-reduce over a racked fabric: serialized chain
+        // of rack-local RS (full tensor over the rack's cheap links),
+        // cross-rack RS + AG over the `1/g` shard (only these transit
+        // the thin uplinks), rack-local AG. Falls through to the flat
+        // chain when the topology gives no non-trivial rack.
+        if self.hier_ar {
+            if let Some(g) = self.hier_rack_size(tp) {
+                prog = prog.phase(
+                    PhaseRole::Gemm,
+                    StartRule::AtZero,
+                    GemmCollective {
+                        plan: plan.clone(),
+                        cus: gemm_cus,
+                        write_mode: self.write_mode,
+                    },
+                );
+                prog = prog.phase(
+                    PhaseRole::ReduceScatter,
+                    StartRule::AfterPrev,
+                    GroupedRingCollective {
+                        bytes: ar_bytes,
+                        cus: comm_cus,
+                        kind: rs_kind,
+                        group: RingGroup::Rack { size: g },
+                    },
+                );
+                prog = prog.phase(
+                    PhaseRole::ReduceScatter,
+                    StartRule::AfterPrev,
+                    GroupedRingCollective {
+                        bytes: ar_bytes / g,
+                        cus: comm_cus,
+                        kind: rs_kind,
+                        group: RingGroup::Strided { size: g },
+                    },
+                );
+                if self.ag != AgMode::Skip {
+                    prog = prog.phase(
+                        PhaseRole::AllGather,
+                        StartRule::AfterPrev,
+                        GroupedRingCollective {
+                            bytes: ar_bytes / g,
+                            cus: comm_cus,
+                            kind: RingKind::AgCu,
+                            group: RingGroup::Strided { size: g },
+                        },
+                    );
+                    prog = prog.phase(
+                        PhaseRole::AllGather,
+                        StartRule::AfterPrev,
+                        GroupedRingCollective {
+                            bytes: ar_bytes,
+                            cus: comm_cus,
+                            kind: RingKind::AgCu,
+                            group: RingGroup::Rack { size: g },
+                        },
+                    );
+                }
+                return prog;
+            }
+        }
+
         prog = match self.overlap {
             OverlapMode::Serialized => prog
                 .phase(
@@ -695,6 +795,41 @@ pub fn registry() -> Vec<ScenarioSpec> {
             .named("T3-AR-Fused-TwoTier")
             .fused_ag()
             .cluster(ClusterModel::two_tier(4, 1.0 / 3.0, SimTime::us(2))),
+        // -- fabric scenarios (route-aware network, t3::fabric) --
+        // The fused AR with every hop routed hop-by-hop through a 4:1
+        // oversubscribed fat tree: cross-rack chunks queue on the shared
+        // leaf uplinks instead of seeing a private degraded link.
+        ScenarioSpec::t3_mca()
+            .named("T3-AR-FatTree")
+            .fused_ag()
+            .cluster(ClusterModel::fabric(FabricSpec::fat_tree(16, 4.0))),
+        // Expert-parallel dispatch on a 2x4 torus (run at TP 8): the
+        // multi-hop grid routes share physical links visibly.
+        ScenarioSpec::t3_mca()
+            .named("T3-A2A-Torus")
+            .all_to_all()
+            .cluster(ClusterModel::fabric(FabricSpec::torus(2, 4))),
+        // Hierarchical AR on a heavily oversubscribed two-rack fat tree
+        // (TP 16): rack-local RS/AG keep half the bytes off the thin
+        // uplinks, beating the flat ring (pinned in tests/cluster.rs).
+        ScenarioSpec::sequential()
+            .named("T3-AR-Hierarchical")
+            .hierarchical_ar()
+            .cluster(ClusterModel::fabric(FabricSpec::fat_tree(16, 16.0))),
+        // Sequential A2A on the ring fabric with a 1 GiB background flow
+        // parked on link 1->0 from t=0 (long enough to outlast the
+        // producer GEMM): collective chunks crossing that link queue
+        // behind it — strictly later than the uncontended twin (same
+        // spec without the flow; pinned in tests/cluster.rs).
+        ScenarioSpec::sequential()
+            .named("Congested-A2A")
+            .all_to_all()
+            .cluster(ClusterModel::fabric(FabricSpec::ring().background(BgFlow {
+                src: 1,
+                dst: 0,
+                bytes: 1 << 30,
+                at: SimTime::ZERO,
+            }))),
     ]);
     all
 }
@@ -719,6 +854,10 @@ pub fn preset(name: &str) -> Option<ScenarioSpec> {
         "ar-two-tier" | "ar-twotier" => "T3-AR-Fused-TwoTier",
         "a2a" | "a2a-fused" | "fused-a2a" | "alltoall" => "T3-A2A-Fused",
         "seq-a2a" | "a2a-seq" => "Sequential-A2A",
+        "ar-fat-tree" | "ar-fattree" | "fat-tree" => "T3-AR-FatTree",
+        "a2a-torus" | "torus-a2a" | "torus" => "T3-A2A-Torus",
+        "ar-hier" | "hier-ar" | "hierarchical" => "T3-AR-Hierarchical",
+        "congested" | "congested-a2a" => "Congested-A2A",
         other => other,
     }
     .to_string();
@@ -820,6 +959,36 @@ mod tests {
         assert_eq!(s.overlap, OverlapMode::Serialized);
         // The default family stays all-reduce.
         assert_eq!(preset("mca").unwrap().collective, CollectiveKind::AllReduce);
+    }
+
+    #[test]
+    fn fabric_presets_resolve_and_describe() {
+        let ft = preset("ar-fat-tree").unwrap();
+        assert_eq!(ft.name, "T3-AR-FatTree");
+        assert!(ft.describe().contains("fabric=fat-tree"), "{}", ft.describe());
+        let torus = preset("a2a-torus").unwrap();
+        assert_eq!(torus.collective, CollectiveKind::AllToAll);
+        assert!(torus.describe().contains("fabric=torus"), "{}", torus.describe());
+        let hier = preset("ar-hier").unwrap();
+        assert!(hier.hier_ar);
+        assert!(hier.describe().contains("hier-ar"), "{}", hier.describe());
+        let cong = preset("congested-a2a").unwrap();
+        assert!(cong.describe().contains("bg-flows=1"), "{}", cong.describe());
+    }
+
+    #[test]
+    fn hierarchical_ar_compiles_to_grouped_phases() {
+        let sys = SystemConfig::table1();
+        let m = by_name("T-NLG").unwrap();
+        let hier = preset("ar-hier").unwrap();
+        // Two 8-host racks at TP 16: Gemm + rack RS + cross RS + cross
+        // AG + rack AG.
+        let prog = hier.compile(&sys, &m, 16, SubLayer::OpFwd);
+        assert_eq!(prog.phases.len(), 5);
+        // One rack at TP 8 (hosts_per_leaf = 8): degenerates to the flat
+        // Gemm + RS + AG chain.
+        let flat = hier.compile(&sys, &m, 8, SubLayer::OpFwd);
+        assert_eq!(flat.phases.len(), 3);
     }
 
     #[test]

@@ -1,0 +1,40 @@
+//! Route-aware network fabric: hop-by-hop links with finite bandwidth,
+//! deterministic shortest-path routing, and visible congestion.
+//!
+//! The legacy cluster model gives every rank one dedicated egress
+//! [`crate::hw::link::Link`] — it can degrade a hop's rate (two-tier) but
+//! can model neither routing nor contention between concurrent transfers.
+//! This subsystem makes the network physical:
+//!
+//! * [`Topology`] ([`topo`]) — a trait lowering a topology to a
+//!   [`FabricGraph`]: endpoint + switch vertices joined by *directed*
+//!   links, each with its own bandwidth and latency. Shipped
+//!   implementations: [`Ring`], [`TwoTierRing`] (the legacy two-tier spec
+//!   as a fabric), [`FatTree`] (oversubscribable uplinks), [`Torus2D`],
+//!   and [`RailOptimized`]. Routes are hop-count shortest paths,
+//!   precomputed per source and tie-broken by link id, so they are
+//!   deterministic everywhere.
+//! * [`Network`] ([`net`]) — the live fabric: one FIFO-reserving link per
+//!   directed edge. A multi-hop [`Network::send`] cuts through (hop `k+1`
+//!   opens at hop `k`'s first-byte arrival, rate-capped by the achieved
+//!   upstream feed), so flows sharing a link serialize visibly and a
+//!   single-hop base-rate route is bit-identical to a dedicated legacy
+//!   link. [`BgFlow`]s inject standing congestion.
+//! * [`EgressPort`] — what the rank engines actually hold: either a
+//!   dedicated legacy link (`Direct`, byte-for-byte the pre-fabric
+//!   model) or a bound `(src, dst)` lane into a shared `Network`.
+//!
+//! [`FabricSpec`] is the declarative form carried by
+//! [`crate::cluster::ClusterModel`]; per-link occupancy exports to the
+//! trace subsystem as [`crate::trace::FabricLinkTrace`] lanes. See
+//! DESIGN.md "Network fabric" for the contract and an add-a-topology
+//! walkthrough.
+
+pub mod net;
+pub mod topo;
+
+pub use net::{BgFlow, EgressPort, FabricSpec, Network};
+pub use topo::{
+    FabricGraph, FabricKind, FatTree, LinkId, LinkSpec, RailOptimized, Ring, Topology, Torus2D,
+    TwoTierRing,
+};

@@ -1,0 +1,514 @@
+//! The network fabric: per-link FIFO reservation state over a
+//! [`FabricGraph`], multi-hop cut-through sends, background flows, and
+//! the [`EgressPort`] abstraction the rank engines send through.
+//!
+//! Each directed link is an [`crate::hw::link::Link`] — a byte-serial
+//! resource granting contiguous bandwidth windows — so two flows sharing
+//! a link serialize visibly (FIFO by reservation order, which is
+//! simulation-event order). A multi-hop send cuts through: hop `k+1`
+//! opens at hop `k`'s first-byte arrival, rate-capped by the upstream
+//! hop's achieved feed, exactly the forwarding idiom of the fused
+//! all-gather and all-to-all engines. A single-hop send over a base-rate
+//! link is therefore bit-identical to a dedicated legacy `hw::Link`.
+
+use std::cell::RefCell;
+use std::rc::Rc;
+
+use crate::config::LinkConfig;
+use crate::hw::link::{Link, Window};
+use crate::sim::time::SimTime;
+use crate::trace::{FabricLinkTrace, Lane, Span, SpanLabel};
+
+use super::topo::{FabricGraph, FabricKind, LinkId};
+
+/// A standing transfer injected at fabric construction: `bytes` from
+/// `src` to `dst` entering the fabric at `at`. Collective flows crossing
+/// its route queue behind it — the congestion axis of the
+/// `Congested-A2A` preset.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct BgFlow {
+    pub src: usize,
+    pub dst: usize,
+    pub bytes: u64,
+    pub at: SimTime,
+}
+
+/// The fabric axis a [`crate::cluster::ClusterModel`] can carry: which
+/// physical topology, plus any background flows contending with the
+/// collective.
+#[derive(Debug, Clone, PartialEq)]
+pub struct FabricSpec {
+    pub kind: FabricKind,
+    pub background: Vec<BgFlow>,
+}
+
+impl FabricSpec {
+    pub fn of(kind: FabricKind) -> Self {
+        FabricSpec {
+            kind,
+            background: Vec::new(),
+        }
+    }
+
+    /// Bidirectional ring fabric (the degenerate form that reproduces the
+    /// legacy single-tier engine bit-for-bit).
+    pub fn ring() -> Self {
+        Self::of(FabricKind::Ring(super::topo::Ring))
+    }
+
+    /// Ring with degraded node-boundary links (the legacy two-tier spec
+    /// as a fabric).
+    pub fn two_tier_ring(node_size: u64, inter_bw_frac: f64, inter_latency: SimTime) -> Self {
+        Self::of(FabricKind::TwoTierRing(super::topo::TwoTierRing {
+            node_size,
+            inter_bw_frac,
+            inter_latency,
+        }))
+    }
+
+    pub fn fat_tree(radix: usize, oversubscription: f64) -> Self {
+        Self::of(FabricKind::FatTree(super::topo::FatTree {
+            radix,
+            oversubscription,
+        }))
+    }
+
+    pub fn torus(rows: usize, cols: usize) -> Self {
+        Self::of(FabricKind::Torus2D(super::topo::Torus2D { rows, cols }))
+    }
+
+    pub fn rail(node_size: usize, rails: usize) -> Self {
+        Self::of(FabricKind::RailOptimized(super::topo::RailOptimized {
+            node_size,
+            rails,
+        }))
+    }
+
+    /// Add a background flow (chainable).
+    pub fn background(mut self, flow: BgFlow) -> Self {
+        self.background.push(flow);
+        self
+    }
+
+    /// One-line knob summary for `t3 scenarios` / `t3 topologies`.
+    pub fn describe(&self) -> String {
+        let mut s = format!("fabric={}", self.kind.topology().name());
+        if !self.background.is_empty() {
+            s.push_str(&format!(" bg-flows={}", self.background.len()));
+        }
+        s
+    }
+}
+
+/// Per-link trace bookkeeping (allocated only when tracing).
+#[derive(Debug, Default)]
+struct LinkRecorder {
+    spans: Vec<Span>,
+    queue_depth: Vec<(SimTime, u32)>,
+    /// Done-times of every granted reservation (queue-depth probe).
+    pending_done: Vec<SimTime>,
+    flows: u32,
+}
+
+/// The live fabric: one [`Link`] per directed edge of the topology graph,
+/// routes precomputed per endpoint pair, and optional per-link trace
+/// capture. Built once per collective phase and shared by every rank's
+/// [`EgressPort`].
+#[derive(Debug)]
+pub struct Network {
+    graph: FabricGraph,
+    links: Vec<Link>,
+    /// `routes[src][dst]` for endpoint pairs (empty when `src == dst`).
+    routes: Vec<Vec<Vec<LinkId>>>,
+    trace: Option<Vec<LinkRecorder>>,
+}
+
+impl Network {
+    /// Build the fabric for `endpoints` ranks over the base link
+    /// technology, enable capture if `traced`, then inject the spec's
+    /// background flows (so their link occupancy is visible to both the
+    /// collective and the trace).
+    pub fn new(spec: &FabricSpec, endpoints: usize, base: &LinkConfig, traced: bool) -> Self {
+        let graph = spec.kind.topology().graph(endpoints, base);
+        let links = graph
+            .links
+            .iter()
+            .map(|l| {
+                Link::new(LinkConfig {
+                    per_dir_bw_gbps: l.bw_gbps,
+                    latency: l.latency,
+                })
+            })
+            .collect();
+        let routes = (0..endpoints)
+            .map(|src| {
+                let parent = graph.parents_from(src);
+                (0..endpoints)
+                    .map(|dst| graph.route_via(&parent, src, dst))
+                    .collect()
+            })
+            .collect();
+        let mut net = Network {
+            trace: traced.then(|| (0..graph.links.len()).map(|_| LinkRecorder::default()).collect()),
+            graph,
+            links,
+            routes,
+        };
+        for f in &spec.background {
+            assert!(f.src != f.dst, "background flow must cross the fabric");
+            net.send(f.src, f.dst, f.at, f.bytes, None);
+        }
+        net
+    }
+
+    pub fn graph(&self) -> &FabricGraph {
+        &self.graph
+    }
+
+    /// The precomputed route between two endpoints.
+    pub fn route(&self, src: usize, dst: usize) -> &[LinkId] {
+        &self.routes[src][dst]
+    }
+
+    /// Sum of hop latencies along the `src -> dst` route.
+    pub fn path_latency(&self, src: usize, dst: usize) -> SimTime {
+        self.routes[src][dst]
+            .iter()
+            .fold(SimTime::ZERO, |acc, &l| acc + self.graph.links[l].latency)
+    }
+
+    /// Bottleneck (minimum) bandwidth along the `src -> dst` route.
+    pub fn path_bw_gbps(&self, src: usize, dst: usize) -> f64 {
+        self.routes[src][dst]
+            .iter()
+            .fold(f64::INFINITY, |acc, &l| acc.min(self.graph.links[l].bw_gbps))
+    }
+
+    /// Total bytes a physical link has carried.
+    pub fn link_bytes(&self, id: LinkId) -> u64 {
+        self.links[id].bytes_carried
+    }
+
+    fn record(&mut self, id: LinkId, asked: SimTime, w: Window, bytes: u64) {
+        if let Some(rec) = &mut self.trace {
+            let r = &mut rec[id];
+            let depth = r.pending_done.iter().filter(|&&d| d > asked).count() as u32;
+            r.queue_depth.push((w.start, depth));
+            r.pending_done.push(w.done);
+            r.spans.push(Span {
+                lane: Lane::LinkEgress,
+                start: w.start,
+                end: w.done,
+                bytes,
+                label: SpanLabel::Chunk(r.flows),
+            });
+            r.flows += 1;
+        }
+    }
+
+    /// Push `bytes` from endpoint `src` to endpoint `dst`, ready at
+    /// `ready`, optionally rate-capped at the source by `source_gbps`.
+    ///
+    /// Hop 0 reserves a full FIFO window on its link; each later hop cuts
+    /// through from the previous hop's first-byte arrival, rate-capped by
+    /// the upstream hop's achieved feed. The returned [`Window`] spans
+    /// the whole path: `start`/`done` are the first hop's egress times
+    /// (the sender's occupancy), `arrive_first`/`arrive_last` the final
+    /// hop's arrival times at `dst`. A `src == dst` send is a zero-time
+    /// loopback.
+    pub fn send(
+        &mut self,
+        src: usize,
+        dst: usize,
+        ready: SimTime,
+        bytes: u64,
+        source_gbps: Option<f64>,
+    ) -> Window {
+        let route = self.routes[src][dst].clone();
+        let Some((&first_hop, rest)) = route.split_first() else {
+            return Window {
+                start: ready,
+                done: ready,
+                arrive_first: ready,
+                arrive_last: ready,
+            };
+        };
+        let w0 = match source_gbps {
+            None => self.links[first_hop].reserve(ready, bytes),
+            Some(g) => self.links[first_hop].reserve_rate_limited(ready, bytes, g),
+        };
+        self.record(first_hop, ready, w0, bytes);
+        let mut w = w0;
+        for &hop in rest {
+            let dur = w.done - w.start;
+            let asked = w.arrive_first;
+            let wk = if dur.is_zero() {
+                self.links[hop].reserve(asked, bytes)
+            } else {
+                let feed_gbps = bytes as f64 / dur.as_secs_f64() / 1e9;
+                self.links[hop].reserve_rate_limited(asked, bytes, feed_gbps)
+            };
+            self.record(hop, asked, wk, bytes);
+            w = wk;
+        }
+        Window {
+            start: w0.start,
+            done: w0.done,
+            arrive_first: w.arrive_first,
+            arrive_last: w.arrive_last,
+        }
+    }
+
+    /// Drain the per-link trace (when capture was enabled): one
+    /// [`FabricLinkTrace`] per physical link that carried at least one
+    /// flow, in link-id order.
+    pub fn take_link_traces(&mut self) -> Vec<FabricLinkTrace> {
+        let Some(rec) = self.trace.take() else {
+            return Vec::new();
+        };
+        rec.into_iter()
+            .enumerate()
+            .filter(|(_, r)| !r.spans.is_empty())
+            .map(|(id, r)| FabricLinkTrace {
+                id,
+                name: self.graph.link_name(id),
+                bytes_carried: self.links[id].bytes_carried,
+                spans: r.spans,
+                queue_depth: r.queue_depth,
+            })
+            .collect()
+    }
+}
+
+/// The egress abstraction a rank engine sends through: either a dedicated
+/// legacy [`Link`] (the loopback mirror and the legacy single/two-tier
+/// cluster paths — byte-for-byte the pre-fabric model) or a bound
+/// `(src, dst)` lane into a shared [`Network`].
+///
+/// The engines only consume [`Window`]s, so the two are interchangeable;
+/// over a single-hop base-rate fabric route the windows are bit-identical
+/// to the dedicated link's.
+#[derive(Debug, Clone)]
+pub enum EgressPort {
+    Direct(Link),
+    Fabric {
+        net: Rc<RefCell<Network>>,
+        src: usize,
+        dst: usize,
+        /// Bytes this port has pushed (the per-rank `link_bytes`
+        /// accounting the engines report).
+        sent: u64,
+    },
+}
+
+impl EgressPort {
+    pub fn direct(cfg: LinkConfig) -> Self {
+        EgressPort::Direct(Link::new(cfg))
+    }
+
+    pub fn fabric(net: Rc<RefCell<Network>>, src: usize, dst: usize) -> Self {
+        EgressPort::Fabric {
+            net,
+            src,
+            dst,
+            sent: 0,
+        }
+    }
+
+    /// Reserve a full-rate window for `bytes` starting no earlier than
+    /// `ready`.
+    pub fn reserve(&mut self, ready: SimTime, bytes: u64) -> Window {
+        match self {
+            EgressPort::Direct(l) => l.reserve(ready, bytes),
+            EgressPort::Fabric { net, src, dst, sent } => {
+                *sent += bytes;
+                net.borrow_mut().send(*src, *dst, ready, bytes, None)
+            }
+        }
+    }
+
+    /// [`EgressPort::reserve`] with the source's streaming rate capped at
+    /// `source_gbps`.
+    pub fn reserve_rate_limited(&mut self, ready: SimTime, bytes: u64, source_gbps: f64) -> Window {
+        match self {
+            EgressPort::Direct(l) => l.reserve_rate_limited(ready, bytes, source_gbps),
+            EgressPort::Fabric { net, src, dst, sent } => {
+                *sent += bytes;
+                net.borrow_mut().send(*src, *dst, ready, bytes, Some(source_gbps))
+            }
+        }
+    }
+
+    /// The port's saturation bandwidth: the link rate, or the route's
+    /// bottleneck rate through the fabric.
+    pub fn bw_gbps(&self) -> f64 {
+        match self {
+            EgressPort::Direct(l) => l.cfg().per_dir_bw_gbps,
+            EgressPort::Fabric { net, src, dst, .. } => net.borrow().path_bw_gbps(*src, *dst),
+        }
+    }
+
+    /// End-to-end first-byte latency: the link latency, or the sum of hop
+    /// latencies along the route.
+    pub fn latency(&self) -> SimTime {
+        match self {
+            EgressPort::Direct(l) => l.cfg().latency,
+            EgressPort::Fabric { net, src, dst, .. } => net.borrow().path_latency(*src, *dst),
+        }
+    }
+
+    /// Total bytes this port has carried.
+    pub fn bytes_carried(&self) -> u64 {
+        match self {
+            EgressPort::Direct(l) => l.bytes_carried,
+            EgressPort::Fabric { sent, .. } => *sent,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::SystemConfig;
+
+    const MB: u64 = 1 << 20;
+
+    fn base() -> LinkConfig {
+        SystemConfig::table1().link
+    }
+
+    #[test]
+    fn single_hop_ring_send_is_bit_identical_to_a_dedicated_link() {
+        let b = base();
+        let mut net = Network::new(&FabricSpec::ring(), 4, &b, false);
+        let mut link = Link::new(b.clone());
+        for (ready, bytes) in [
+            (SimTime::ZERO, 64 * MB),
+            (SimTime::us(3), 8 * MB),
+            (SimTime::ZERO, 1024),
+        ] {
+            let wf = net.send(2, 1, ready, bytes, None);
+            let wl = link.reserve(ready, bytes);
+            assert_eq!(wf, wl);
+        }
+        let wf = net.send(2, 1, SimTime::ZERO, 4 * MB, Some(20.0));
+        let wl = link.reserve_rate_limited(SimTime::ZERO, 4 * MB, 20.0);
+        assert_eq!(wf, wl);
+        assert_eq!(net.link_bytes(net.route(2, 1)[0]), link.bytes_carried);
+    }
+
+    #[test]
+    fn sharing_a_link_serializes_flows() {
+        let b = base();
+        let mut net = Network::new(&FabricSpec::ring(), 4, &b, false);
+        let w1 = net.send(1, 0, SimTime::ZERO, 75 * MB, None);
+        let w2 = net.send(1, 0, SimTime::ZERO, 75 * MB, None);
+        assert_eq!(w2.start, w1.done, "second flow queues behind the first");
+    }
+
+    #[test]
+    fn multi_hop_send_cuts_through_and_pays_each_hop_latency() {
+        let b = base();
+        let mut net = Network::new(&FabricSpec::fat_tree(8, 1.0), 8, &b, false);
+        assert_eq!(net.route(0, 7).len(), 4);
+        let w = net.send(0, 7, SimTime::ZERO, 64 * MB, None);
+        // Cut-through: each hop forwards at the incoming feed, so the
+        // last byte arrives one transfer + 4 hop latencies after start.
+        let expect = b.transfer_time(64 * MB) + b.latency * 4u64;
+        assert_eq!(w.arrive_last, expect);
+        assert_eq!(w.done, b.transfer_time(64 * MB), "sender occupancy is hop 0 only");
+    }
+
+    #[test]
+    fn oversubscribed_uplink_is_the_bottleneck() {
+        let b = base();
+        // radix 8 -> 4 hosts/leaf; oversub 4 -> uplink at 75 GB/s (= one
+        // host) shared by the whole rack.
+        let mut net = Network::new(&FabricSpec::fat_tree(8, 4.0), 8, &b, false);
+        assert_eq!(net.path_bw_gbps(0, 7), 75.0);
+        // Two cross-rack flows from different hosts contend on the uplink.
+        let w1 = net.send(0, 7, SimTime::ZERO, 75 * MB, None);
+        let w2 = net.send(1, 6, SimTime::ZERO, 75 * MB, None);
+        assert!(w2.arrive_last > w1.arrive_last);
+        // But two intra-rack flows do not.
+        let mut free = Network::new(&FabricSpec::fat_tree(8, 4.0), 8, &b, false);
+        let a = free.send(0, 1, SimTime::ZERO, 75 * MB, None);
+        let bfl = free.send(2, 3, SimTime::ZERO, 75 * MB, None);
+        assert_eq!(a.start, bfl.start);
+    }
+
+    #[test]
+    fn background_flow_delays_collective_traffic() {
+        let b = base();
+        let spec = FabricSpec::ring().background(BgFlow {
+            src: 1,
+            dst: 0,
+            bytes: 64 * MB,
+            at: SimTime::ZERO,
+        });
+        let mut congested = Network::new(&spec, 4, &b, false);
+        let mut free = Network::new(&FabricSpec::ring(), 4, &b, false);
+        let wc = congested.send(1, 0, SimTime::ZERO, 8 * MB, None);
+        let wf = free.send(1, 0, SimTime::ZERO, 8 * MB, None);
+        assert!(wc.start > wf.start, "collective queues behind the background flow");
+        // Off-route traffic is unaffected.
+        let on = congested.send(3, 2, SimTime::ZERO, 8 * MB, None);
+        let off = free.send(3, 2, SimTime::ZERO, 8 * MB, None);
+        assert_eq!(on, off);
+    }
+
+    #[test]
+    fn loopback_send_is_zero_time() {
+        let b = base();
+        let mut net = Network::new(&FabricSpec::ring(), 4, &b, false);
+        let w = net.send(2, 2, SimTime::us(5), MB, None);
+        assert_eq!(w.start, SimTime::us(5));
+        assert_eq!(w.arrive_last, SimTime::us(5));
+    }
+
+    #[test]
+    fn trace_records_spans_queue_depth_and_exact_bytes() {
+        let b = base();
+        let spec = FabricSpec::ring().background(BgFlow {
+            src: 1,
+            dst: 0,
+            bytes: 16 * MB,
+            at: SimTime::ZERO,
+        });
+        let mut net = Network::new(&spec, 4, &b, true);
+        net.send(1, 0, SimTime::ZERO, 8 * MB, None);
+        net.send(1, 0, SimTime::ZERO, 8 * MB, Some(20.0));
+        let traces = net.take_link_traces();
+        assert_eq!(traces.len(), 1, "only the 1->0 link carried flows");
+        let t = &traces[0];
+        assert_eq!(t.name, "h1->h0");
+        assert_eq!(t.bytes_carried, 32 * MB);
+        assert_eq!(t.spans.iter().map(|s| s.bytes).sum::<u64>(), t.bytes_carried);
+        assert_eq!(t.spans.len(), 3);
+        // The background flow saw an empty queue; the two collective
+        // flows queued behind 1 and 2 reservations.
+        assert_eq!(
+            t.queue_depth.iter().map(|&(_, d)| d).collect::<Vec<_>>(),
+            vec![0, 1, 2]
+        );
+        // Draining twice yields nothing.
+        assert!(net.take_link_traces().is_empty());
+    }
+
+    #[test]
+    fn egress_port_direct_and_fabric_agree_on_a_ring_edge() {
+        let b = base();
+        let net = Rc::new(RefCell::new(Network::new(&FabricSpec::ring(), 4, &b, false)));
+        let mut fp = EgressPort::fabric(net, 3, 2);
+        let mut dp = EgressPort::direct(b.clone());
+        assert_eq!(fp.bw_gbps(), dp.bw_gbps());
+        assert_eq!(fp.latency(), dp.latency());
+        let wf = fp.reserve(SimTime::ZERO, 4 * MB);
+        let wd = dp.reserve(SimTime::ZERO, 4 * MB);
+        assert_eq!(wf, wd);
+        let wf = fp.reserve_rate_limited(SimTime::us(1), 4 * MB, 33.3);
+        let wd = dp.reserve_rate_limited(SimTime::us(1), 4 * MB, 33.3);
+        assert_eq!(wf, wd);
+        assert_eq!(fp.bytes_carried(), dp.bytes_carried());
+    }
+}

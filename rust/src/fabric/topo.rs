@@ -1,0 +1,618 @@
+//! Physical topologies: node/switch graphs with per-directed-link
+//! bandwidth and latency, and deterministic shortest-path routing.
+//!
+//! A [`Topology`] builds a [`FabricGraph`] for a given number of endpoint
+//! ranks over a base link technology. Endpoints are vertices
+//! `0..endpoints`; switches follow. Every link is *directed* and carries
+//! its own bandwidth/latency, so asymmetric designs (oversubscribed
+//! uplinks, degraded boundary hops) are expressible per direction.
+//!
+//! Routing is hop-count shortest path, precomputed per source by a BFS
+//! that explores adjacency in increasing link-id order — ties are broken
+//! by the smallest link id at every level, so routes are deterministic
+//! across runs, thread counts, and platforms.
+
+use crate::config::LinkConfig;
+use crate::sim::time::SimTime;
+
+/// Index of a directed link in its [`FabricGraph`].
+pub type LinkId = usize;
+
+/// One directed physical link of the fabric.
+#[derive(Debug, Clone, PartialEq)]
+pub struct LinkSpec {
+    pub from: usize,
+    pub to: usize,
+    pub bw_gbps: f64,
+    pub latency: SimTime,
+}
+
+/// A topology lowered to vertices and directed links. Vertices
+/// `0..endpoints` are the communicating ranks ("h0", "h1", ...); the rest
+/// are switches named by the topology.
+#[derive(Debug, Clone, PartialEq)]
+pub struct FabricGraph {
+    /// Total vertex count (endpoints + switches).
+    pub vertices: usize,
+    /// Endpoint (rank) count; endpoints are vertices `0..endpoints`.
+    pub endpoints: usize,
+    /// Names of the switch vertices (`endpoints..vertices`), in order.
+    pub switch_names: Vec<String>,
+    pub links: Vec<LinkSpec>,
+}
+
+impl FabricGraph {
+    /// Display name of a vertex: "h{r}" for endpoints, the switch name
+    /// otherwise.
+    pub fn vertex_name(&self, v: usize) -> String {
+        if v < self.endpoints {
+            format!("h{v}")
+        } else {
+            self.switch_names[v - self.endpoints].clone()
+        }
+    }
+
+    /// Display name of a link: "h1->h0", "leaf0->spine", ...
+    pub fn link_name(&self, id: LinkId) -> String {
+        let l = &self.links[id];
+        format!("{}->{}", self.vertex_name(l.from), self.vertex_name(l.to))
+    }
+
+    /// Per-vertex outgoing link ids, in increasing id order (the BFS
+    /// exploration order that makes routing deterministic).
+    pub fn adjacency(&self) -> Vec<Vec<LinkId>> {
+        let mut adj = vec![Vec::new(); self.vertices];
+        for (id, l) in self.links.iter().enumerate() {
+            adj[l.from].push(id);
+        }
+        adj
+    }
+
+    /// BFS parent links from `src`: `parent[v]` is the link that first
+    /// discovered `v` (None for `src` and unreachable vertices).
+    pub fn parents_from(&self, src: usize) -> Vec<Option<LinkId>> {
+        let adj = self.adjacency();
+        let mut parent = vec![None; self.vertices];
+        let mut seen = vec![false; self.vertices];
+        seen[src] = true;
+        let mut frontier = vec![src];
+        while !frontier.is_empty() {
+            let mut next = Vec::new();
+            for &v in &frontier {
+                for &lid in &adj[v] {
+                    let to = self.links[lid].to;
+                    if !seen[to] {
+                        seen[to] = true;
+                        parent[to] = Some(lid);
+                        next.push(to);
+                    }
+                }
+            }
+            frontier = next;
+        }
+        parent
+    }
+
+    /// Deterministic shortest route `src -> dst` as a hop sequence of link
+    /// ids. Empty for `src == dst`; panics if `dst` is unreachable.
+    pub fn route(&self, src: usize, dst: usize) -> Vec<LinkId> {
+        let parent = self.parents_from(src);
+        self.route_via(&parent, src, dst)
+    }
+
+    /// Reconstruct the route to `dst` from a [`FabricGraph::parents_from`]
+    /// vector (precomputed-routing fast path).
+    pub fn route_via(&self, parent: &[Option<LinkId>], src: usize, dst: usize) -> Vec<LinkId> {
+        let mut hops = Vec::new();
+        let mut v = dst;
+        while v != src {
+            let lid = parent[v]
+                .unwrap_or_else(|| panic!("no route {} -> {}", src, dst));
+            hops.push(lid);
+            v = self.links[lid].from;
+        }
+        hops.reverse();
+        hops
+    }
+}
+
+/// A network topology: lowers itself to a [`FabricGraph`] for `endpoints`
+/// communicating ranks over the `base` link technology. Implementations
+/// are pure data; the graph (and its routes) is a deterministic function
+/// of `(self, endpoints, base)`.
+///
+/// To add a topology: implement this trait, add a [`FabricKind`] variant
+/// wrapping it, and (optionally) a CLI spelling in `t3 topologies` — see
+/// DESIGN.md "Network fabric".
+pub trait Topology {
+    /// Kind name for listings ("ring", "fat-tree", ...).
+    fn name(&self) -> &'static str;
+    /// Build the node/switch graph.
+    fn graph(&self, endpoints: usize, base: &LinkConfig) -> FabricGraph;
+    /// One-line human description for `t3 topologies`.
+    fn describe(&self) -> String;
+}
+
+/// Bidirectional ring: every rank has one link to each neighbor, both at
+/// the base bandwidth/latency. Link `2i` is `i -> i+1`, link `2i+1` is
+/// `i -> i-1` (mod n) — each sender owns a dedicated directed link to its
+/// downstream neighbor, which is exactly the legacy per-edge `hw::Link`
+/// model, so this fabric reproduces the single-tier engine bit-for-bit.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Ring;
+
+impl Topology for Ring {
+    fn name(&self) -> &'static str {
+        "ring"
+    }
+
+    fn graph(&self, n: usize, base: &LinkConfig) -> FabricGraph {
+        let mut links = Vec::with_capacity(2 * n);
+        for i in 0..n {
+            links.push(LinkSpec {
+                from: i,
+                to: (i + 1) % n,
+                bw_gbps: base.per_dir_bw_gbps,
+                latency: base.latency,
+            });
+            links.push(LinkSpec {
+                from: i,
+                to: (i + n - 1) % n,
+                bw_gbps: base.per_dir_bw_gbps,
+                latency: base.latency,
+            });
+        }
+        FabricGraph {
+            vertices: n,
+            endpoints: n,
+            switch_names: Vec::new(),
+            links,
+        }
+    }
+
+    fn describe(&self) -> String {
+        "bidirectional ring, one dedicated link per neighbor".to_string()
+    }
+}
+
+/// The legacy two-tier ring as a fabric: the [`Ring`] layout with every
+/// node-boundary link degraded to `inter_bw_frac` of the base bandwidth
+/// and `inter_latency` instead of the base latency — the exact arithmetic
+/// of `TopologySpec::TwoTier`, so the degenerate fabric path reproduces
+/// the legacy two-tier engine bit-for-bit.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct TwoTierRing {
+    pub node_size: u64,
+    pub inter_bw_frac: f64,
+    pub inter_latency: SimTime,
+}
+
+impl Topology for TwoTierRing {
+    fn name(&self) -> &'static str {
+        "two-tier-ring"
+    }
+
+    fn graph(&self, n: usize, base: &LinkConfig) -> FabricGraph {
+        let mut g = Ring.graph(n, base);
+        let node = |v: usize| v as u64 / self.node_size;
+        for l in &mut g.links {
+            if node(l.from) != node(l.to) {
+                l.bw_gbps = base.per_dir_bw_gbps * self.inter_bw_frac;
+                l.latency = self.inter_latency;
+            }
+        }
+        g
+    }
+
+    fn describe(&self) -> String {
+        format!(
+            "ring with {}-rank nodes; boundary links at {:.0}% bw, {} latency",
+            self.node_size,
+            self.inter_bw_frac * 100.0,
+            self.inter_latency
+        )
+    }
+}
+
+/// Two-level fat tree: `radix/2` hosts per leaf switch, one spine. Host
+/// links run at the base rate; each leaf's aggregate uplink carries
+/// `hosts_per_leaf / oversubscription` times the base bandwidth, so an
+/// oversubscription above 1 makes cross-rack hops the bottleneck.
+/// Intra-rack routes are 2 hops (host-leaf-host), cross-rack 4
+/// (host-leaf-spine-leaf-host).
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct FatTree {
+    /// Switch port count; `radix/2` ports face hosts.
+    pub radix: usize,
+    /// Host-bandwidth to uplink-bandwidth ratio (1 = non-blocking).
+    pub oversubscription: f64,
+}
+
+impl FatTree {
+    pub fn hosts_per_leaf(&self) -> usize {
+        (self.radix / 2).max(1)
+    }
+}
+
+impl Topology for FatTree {
+    fn name(&self) -> &'static str {
+        "fat-tree"
+    }
+
+    fn graph(&self, n: usize, base: &LinkConfig) -> FabricGraph {
+        let hpl = self.hosts_per_leaf();
+        let leaves = n.div_ceil(hpl).max(1);
+        let mut switch_names: Vec<String> = (0..leaves).map(|l| format!("leaf{l}")).collect();
+        let spine = (leaves > 1).then(|| {
+            switch_names.push("spine".to_string());
+            n + leaves
+        });
+        let leaf_of = |h: usize| n + h / hpl;
+        let mut links = Vec::new();
+        for h in 0..n {
+            links.push(LinkSpec {
+                from: h,
+                to: leaf_of(h),
+                bw_gbps: base.per_dir_bw_gbps,
+                latency: base.latency,
+            });
+            links.push(LinkSpec {
+                from: leaf_of(h),
+                to: h,
+                bw_gbps: base.per_dir_bw_gbps,
+                latency: base.latency,
+            });
+        }
+        if let Some(spine) = spine {
+            let up_bw = hpl as f64 * base.per_dir_bw_gbps / self.oversubscription;
+            for l in 0..leaves {
+                links.push(LinkSpec {
+                    from: n + l,
+                    to: spine,
+                    bw_gbps: up_bw,
+                    latency: base.latency,
+                });
+                links.push(LinkSpec {
+                    from: spine,
+                    to: n + l,
+                    bw_gbps: up_bw,
+                    latency: base.latency,
+                });
+            }
+        }
+        FabricGraph {
+            vertices: n + switch_names.len(),
+            endpoints: n,
+            switch_names,
+            links,
+        }
+    }
+
+    fn describe(&self) -> String {
+        format!(
+            "two-level fat tree, radix {} ({} hosts/leaf), {:.1}:1 oversubscription",
+            self.radix,
+            self.hosts_per_leaf(),
+            self.oversubscription
+        )
+    }
+}
+
+/// 2-D torus: ranks on a `rows x cols` grid, each with direct links to
+/// its four wraparound neighbors at the base rate (no switches). Routes
+/// are dimension-ordered by the BFS tie-break.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Torus2D {
+    pub rows: usize,
+    pub cols: usize,
+}
+
+impl Topology for Torus2D {
+    fn name(&self) -> &'static str {
+        "torus"
+    }
+
+    fn graph(&self, n: usize, base: &LinkConfig) -> FabricGraph {
+        assert_eq!(
+            self.rows * self.cols,
+            n,
+            "torus {}x{} must cover exactly {n} ranks",
+            self.rows,
+            self.cols
+        );
+        let at = |r: usize, c: usize| (r % self.rows) * self.cols + (c % self.cols);
+        let mut links = Vec::new();
+        for r in 0..self.rows {
+            for c in 0..self.cols {
+                let v = at(r, c);
+                let mut neighbors = Vec::new();
+                if self.cols > 1 {
+                    neighbors.push(at(r, c + 1));
+                    neighbors.push(at(r, c + self.cols - 1));
+                }
+                if self.rows > 1 {
+                    neighbors.push(at(r + 1, c));
+                    neighbors.push(at(r + self.rows - 1, c));
+                }
+                for to in neighbors {
+                    links.push(LinkSpec {
+                        from: v,
+                        to,
+                        bw_gbps: base.per_dir_bw_gbps,
+                        latency: base.latency,
+                    });
+                }
+            }
+        }
+        FabricGraph {
+            vertices: n,
+            endpoints: n,
+            switch_names: Vec::new(),
+            links,
+        }
+    }
+
+    fn describe(&self) -> String {
+        format!("{}x{} wraparound torus, direct neighbor links", self.rows, self.cols)
+    }
+}
+
+/// Rail-optimized cluster: ranks are packed into `node_size`-rank nodes
+/// joined by a fast intra-node switch (3x the base bandwidth — the
+/// NVLink-class tier), and rank `i` of every node attaches to rail switch
+/// `i % rails` at the base rate. Same-rail cross-node routes take 2 hops;
+/// cross-rail traffic transits a peer GPU of the node (host-node
+/// switch-host-rail switch-host), as in real rail-optimized designs.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct RailOptimized {
+    pub node_size: usize,
+    pub rails: usize,
+}
+
+impl Topology for RailOptimized {
+    fn name(&self) -> &'static str {
+        "rail"
+    }
+
+    fn graph(&self, n: usize, base: &LinkConfig) -> FabricGraph {
+        let nodes = n.div_ceil(self.node_size).max(1);
+        let rails = self.rails.min(self.node_size).max(1);
+        let mut switch_names: Vec<String> = (0..nodes).map(|i| format!("node{i}")).collect();
+        switch_names.extend((0..rails).map(|i| format!("rail{i}")));
+        let node_sw = |h: usize| n + h / self.node_size;
+        let rail_sw = |h: usize| n + nodes + (h % self.node_size) % rails;
+        let mut links = Vec::new();
+        for h in 0..n {
+            for (sw, bw) in [
+                (node_sw(h), 3.0 * base.per_dir_bw_gbps),
+                (rail_sw(h), base.per_dir_bw_gbps),
+            ] {
+                links.push(LinkSpec {
+                    from: h,
+                    to: sw,
+                    bw_gbps: bw,
+                    latency: base.latency,
+                });
+                links.push(LinkSpec {
+                    from: sw,
+                    to: h,
+                    bw_gbps: bw,
+                    latency: base.latency,
+                });
+            }
+        }
+        FabricGraph {
+            vertices: n + switch_names.len(),
+            endpoints: n,
+            switch_names,
+            links,
+        }
+    }
+
+    fn describe(&self) -> String {
+        format!(
+            "{}-rank nodes (3x-bw intra-node switch), {} rails at base bw",
+            self.node_size, self.rails
+        )
+    }
+}
+
+/// The closed set of shipped topologies (the registry / CLI surface).
+/// Open extension goes through the [`Topology`] trait; this enum is the
+/// *data* form a [`crate::cluster::ClusterModel`] can carry.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub enum FabricKind {
+    Ring(Ring),
+    TwoTierRing(TwoTierRing),
+    FatTree(FatTree),
+    Torus2D(Torus2D),
+    RailOptimized(RailOptimized),
+}
+
+impl FabricKind {
+    pub fn topology(&self) -> &dyn Topology {
+        match self {
+            FabricKind::Ring(t) => t,
+            FabricKind::TwoTierRing(t) => t,
+            FabricKind::FatTree(t) => t,
+            FabricKind::Torus2D(t) => t,
+            FabricKind::RailOptimized(t) => t,
+        }
+    }
+
+    /// The natural "rack" grouping for hierarchical collectives: the
+    /// ranks that share the cheapest tier (a leaf switch, a node, a torus
+    /// row). Flat topologies group everything into one rack, which makes
+    /// hierarchical decompositions degenerate to the flat ring.
+    pub fn rack_size(&self, endpoints: u64) -> u64 {
+        let g = match self {
+            FabricKind::Ring(_) => endpoints,
+            FabricKind::TwoTierRing(t) => t.node_size,
+            FabricKind::FatTree(t) => t.hosts_per_leaf() as u64,
+            FabricKind::Torus2D(t) => t.cols as u64,
+            FabricKind::RailOptimized(t) => t.node_size as u64,
+        };
+        g.clamp(1, endpoints)
+    }
+
+    /// All shipped kinds with representative parameters, for `t3
+    /// topologies`.
+    pub fn catalog() -> Vec<FabricKind> {
+        vec![
+            FabricKind::Ring(Ring),
+            FabricKind::TwoTierRing(TwoTierRing {
+                node_size: 4,
+                inter_bw_frac: 1.0 / 3.0,
+                inter_latency: SimTime::us(2),
+            }),
+            FabricKind::FatTree(FatTree {
+                radix: 16,
+                oversubscription: 4.0,
+            }),
+            FabricKind::Torus2D(Torus2D { rows: 2, cols: 4 }),
+            FabricKind::RailOptimized(RailOptimized {
+                node_size: 4,
+                rails: 4,
+            }),
+        ]
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::SystemConfig;
+
+    fn base() -> LinkConfig {
+        SystemConfig::table1().link
+    }
+
+    #[test]
+    fn ring_gives_each_sender_a_dedicated_downstream_link() {
+        let g = Ring.graph(4, &base());
+        assert_eq!(g.vertices, 4);
+        assert_eq!(g.links.len(), 8);
+        for i in 0..4usize {
+            let down = (i + 3) % 4;
+            let r = g.route(i, down);
+            assert_eq!(r, vec![2 * i + 1], "rank {i}");
+            assert_eq!(g.links[r[0]].to, down);
+        }
+        // The upstream neighbor is also one hop.
+        assert_eq!(g.route(1, 2), vec![2]);
+        assert!(g.route(2, 2).is_empty());
+    }
+
+    #[test]
+    fn two_tier_ring_degrades_exactly_the_boundary_links() {
+        let b = base();
+        let t = TwoTierRing {
+            node_size: 4,
+            inter_bw_frac: 0.25,
+            inter_latency: SimTime::us(2),
+        };
+        let g = t.graph(8, &b);
+        for (id, l) in g.links.iter().enumerate() {
+            let crossing = l.from / 4 != l.to / 4;
+            if crossing {
+                assert_eq!(l.bw_gbps, b.per_dir_bw_gbps * 0.25, "link {id}");
+                assert_eq!(l.latency, SimTime::us(2));
+            } else {
+                assert_eq!(l.bw_gbps, b.per_dir_bw_gbps, "link {id}");
+                assert_eq!(l.latency, b.latency);
+            }
+        }
+    }
+
+    #[test]
+    fn fat_tree_routes_two_hops_intra_four_hops_cross() {
+        let t = FatTree {
+            radix: 8,
+            oversubscription: 2.0,
+        };
+        let g = t.graph(8, &base());
+        // 8 hosts / 4 per leaf = 2 leaves + spine.
+        assert_eq!(g.vertices, 8 + 3);
+        assert_eq!(g.route(0, 1).len(), 2);
+        assert_eq!(g.route(0, 7).len(), 4);
+        // The cross-rack route transits the spine.
+        let cross = g.route(0, 7);
+        let names: Vec<String> = cross.iter().map(|&l| g.link_name(l)).collect();
+        assert_eq!(names, vec!["h0->leaf0", "leaf0->spine", "spine->leaf1", "leaf1->h7"]);
+        // Uplinks are oversubscribed: 4 hosts * 75 / 2.
+        let up = &g.links[cross[1]];
+        assert_eq!(up.bw_gbps, 4.0 * 75.0 / 2.0);
+    }
+
+    #[test]
+    fn torus_routes_are_manhattan_shortest() {
+        let t = Torus2D { rows: 4, cols: 4 };
+        let g = t.graph(16, &base());
+        assert_eq!(g.route(0, 1).len(), 1);
+        assert_eq!(g.route(0, 5).len(), 2);
+        // Wraparound: (0,0) -> (0,3) is one hop, not three.
+        assert_eq!(g.route(0, 3).len(), 1);
+        // Opposite corner of the 4x4 torus: 2+2 hops.
+        assert_eq!(g.route(0, 10).len(), 4);
+    }
+
+    #[test]
+    fn rail_same_rail_is_two_hops_cross_rail_transits_a_peer() {
+        let t = RailOptimized {
+            node_size: 4,
+            rails: 4,
+        };
+        let g = t.graph(8, &base());
+        // Rank 0 and rank 4 share rail 0: host-rail-host.
+        assert_eq!(g.route(0, 4).len(), 2);
+        // Same node: host-node switch-host.
+        assert_eq!(g.route(0, 1).len(), 2);
+        // Cross node, cross rail: 4 hops through a peer GPU.
+        assert_eq!(g.route(0, 5).len(), 4);
+    }
+
+    #[test]
+    fn routes_are_deterministic_and_valid() {
+        let b = base();
+        let kinds = FabricKind::catalog();
+        for kind in &kinds {
+            let n = match kind {
+                FabricKind::Torus2D(t) => t.rows * t.cols,
+                _ => 8,
+            };
+            let g = kind.topology().graph(n, &b);
+            for src in 0..n {
+                for dst in 0..n {
+                    let r1 = g.route(src, dst);
+                    let r2 = g.route(src, dst);
+                    assert_eq!(r1, r2, "{} route {src}->{dst}", kind.topology().name());
+                    // Hops chain src -> ... -> dst over existing links.
+                    let mut at = src;
+                    for &lid in &r1 {
+                        assert_eq!(g.links[lid].from, at);
+                        at = g.links[lid].to;
+                    }
+                    assert_eq!(at, dst);
+                    // Cycle-free: no vertex repeats.
+                    let mut seen = vec![src];
+                    for &lid in &r1 {
+                        assert!(!seen.contains(&g.links[lid].to));
+                        seen.push(g.links[lid].to);
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn catalog_names_are_unique_and_described() {
+        let kinds = FabricKind::catalog();
+        let mut names: Vec<&str> = kinds.iter().map(|k| k.topology().name()).collect();
+        names.sort_unstable();
+        names.dedup();
+        assert_eq!(names.len(), kinds.len());
+        for k in &kinds {
+            assert!(!k.topology().describe().is_empty());
+        }
+    }
+}

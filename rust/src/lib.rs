@@ -11,6 +11,10 @@
 //!   event-driven node with per-edge links, supporting rank skew,
 //!   stragglers, and two-tier topologies; its uniform configuration
 //!   reproduces the single-rank mirror engine bit-for-bit;
+//! * the route-aware network [`fabric`] — topology graphs (ring,
+//!   fat-tree, 2-D torus, rail-optimized) of hop-by-hop links with finite
+//!   per-direction bandwidth, deterministic shortest-path routing, and
+//!   visible congestion, backing the cluster's fabric axis;
 //! * the [`trace`] subsystem — deterministic, zero-cost-when-off timeline
 //!   capture on per-rank resource lanes, threaded through every engine:
 //!   Chrome/Perfetto export, trace-derived overlap / exposed-communication
@@ -44,6 +48,7 @@ pub mod coordinator;
 pub mod config;
 pub mod error;
 pub mod experiment;
+pub mod fabric;
 pub mod gemm;
 pub mod harness;
 pub mod hw;

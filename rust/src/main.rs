@@ -11,8 +11,10 @@
 //!               [--scenarios s1,s2] [--future] [--threads n] [--csv dir]
 //! t3 cluster    [--model <name>] [--tp <n>] [--sublayer <s>] [--scenario <s>]
 //!               [--skew straggler:R:F|jitter:A] [--nodes g] [--inter-bw f] [--inter-lat-ns n]
+//!               [--topology ring|two-tier-ring|fat-tree|torus|rail]
 //!               [--collective ar|a2a] [--ag ring|skip|fused|consumer]
 //!               [--json] [--trace] [--out file.json]
+//! t3 topologies           (fabric topology catalog, t3::fabric)
 //! t3 trace      <preset> [--model <name>] [--tp <n>] [--sublayer <s>]
 //!               [--out file.json] [--diff other-preset] [--json]
 //! t3 figure     <4|6|14|15|16|17|18|19|20|table2|table3> [--csv <dir>]
@@ -157,10 +159,11 @@ fn scenarios_from(s: &str) -> std::result::Result<Vec<ScenarioSpec>, String> {
     Ok(out)
 }
 
-const USAGE: &str = "t3 <config|models|scenarios|simulate|experiment|cluster|trace|figure|sweep|validate|run> [flags]
+const USAGE: &str = "t3 <config|models|scenarios|topologies|simulate|experiment|cluster|trace|figure|sweep|validate|run> [flags]
   t3 config [--future]
   t3 models --list
   t3 scenarios
+  t3 topologies
   t3 simulate --model T-NLG --tp 8 --sublayer fc2 [--scenario t3-mca] [--trace] [--out trace.json]
   t3 experiment [--models Mega-GPT-2,T-NLG] [--tps 8,16] [--sublayers op,fc2,fc1,ip]
                 [--scenarios sequential,t3-mca,ideal-72-8,straggler] [--future] [--threads N]
@@ -168,6 +171,7 @@ const USAGE: &str = "t3 <config|models|scenarios|simulate|experiment|cluster|tra
   t3 cluster [--model T-NLG] [--tp 8] [--sublayer fc2] [--scenario t3-mca]
              [--skew none|straggler:RANK:FACTOR|jitter:AMPLITUDE]
              [--nodes G] [--inter-bw FRAC] [--inter-lat-ns NS]
+             [--topology ring|two-tier-ring|fat-tree|torus|rail]
              [--collective ar|a2a] [--ag ring|skip|fused|consumer]
              [--json] [--trace] [--out trace.json]
   t3 trace <preset> [--model T-NLG] [--tp 8] [--sublayer fc2]
@@ -264,6 +268,21 @@ fn main() -> ExitCode {
                 t.row(vec![s.name.clone(), s.describe()]);
             }
             t.note("compose new ones in code: ScenarioSpec::new(..).overlap(..).gemm_cus(..)...");
+            println!("{}", t.render());
+            ExitCode::SUCCESS
+        }
+        "topologies" => {
+            use t3::fabric::Topology as _;
+            let mut t = harness::Table::new(
+                "topologies",
+                "Fabric topology catalog (t3::fabric)",
+                &["name", "layout"],
+            );
+            for kind in t3::fabric::FabricKind::catalog() {
+                let topo = kind.topology();
+                t.row(vec![topo.name().to_string(), topo.describe()]);
+            }
+            t.note("select with `t3 cluster --topology NAME`; parameters scale with --tp");
             println!("{}", t.render());
             ExitCode::SUCCESS
         }
@@ -577,6 +596,47 @@ fn main() -> ExitCode {
             } else if flags.contains_key("inter-bw") || flags.contains_key("inter-lat-ns") {
                 eprintln!("--inter-bw/--inter-lat-ns require --nodes (two-tier topology)");
                 return ExitCode::FAILURE;
+            }
+            if let Some(topo) = flags.get("topology") {
+                use t3::fabric::FabricSpec;
+                if flags.contains_key("nodes") {
+                    eprintln!("--topology and --nodes (legacy two-tier) are mutually exclusive");
+                    return ExitCode::FAILURE;
+                }
+                // Parameters scale with --tp: the torus picks the most
+                // square rows x cols grid, rail/two-tier nodes shrink to
+                // fit small rings.
+                let spec = match topo.to_ascii_lowercase().as_str() {
+                    "ring" => FabricSpec::ring(),
+                    "two-tier-ring" | "two-tier" => {
+                        FabricSpec::two_tier_ring(4.min(tp), 1.0 / 3.0, SimTime::us(2))
+                    }
+                    "fat-tree" | "fattree" => FabricSpec::fat_tree(16, 4.0),
+                    "torus" => {
+                        let n = tp as usize;
+                        let mut rows = 1;
+                        for r in 1..=n {
+                            if r * r > n {
+                                break;
+                            }
+                            if n % r == 0 {
+                                rows = r;
+                            }
+                        }
+                        FabricSpec::torus(rows, n / rows)
+                    }
+                    "rail" => {
+                        let node = (tp as usize).min(4);
+                        FabricSpec::rail(node, node)
+                    }
+                    other => {
+                        eprintln!(
+                            "bad --topology '{other}' (ring | two-tier-ring | fat-tree | torus | rail)"
+                        );
+                        return ExitCode::FAILURE;
+                    }
+                };
+                cm.topology = TopologySpec::Fabric(spec);
             }
             let sys = SystemConfig::table1();
             let report = harness::cluster_report(&sys, &m, tp, sub, &scenario, &cm);

@@ -18,7 +18,7 @@
 //! * [`check_triggers_after_tracker`] — causality of track-and-trigger:
 //!   no DMA trigger instant precedes its position's tracker completion.
 
-use super::{InstantKind, Lane, RankTrace};
+use super::{FabricLinkTrace, InstantKind, Lane, RankTrace};
 use crate::sim::stats::DramCounters;
 
 /// Lanes whose spans represent exclusive resource occupancy in a single
@@ -84,6 +84,43 @@ pub fn check_egress_bytes(t: &RankTrace, link_bytes: u64) -> Result<(), String> 
             "rank {}: egress lane bytes {got} != link bytes_carried {link_bytes}",
             t.rank
         ));
+    }
+    Ok(())
+}
+
+/// Per-physical-link byte conservation on a fabric trace: each link's
+/// span byte sum equals its `bytes_carried` exactly, spans never
+/// double-book the link, and every queue-depth sample has a granting
+/// span.
+pub fn check_fabric_links(links: &[FabricLinkTrace]) -> Result<(), String> {
+    for l in links {
+        let got: u64 = l.spans.iter().map(|s| s.bytes).sum();
+        if got != l.bytes_carried {
+            return Err(format!(
+                "link {} ({}): span bytes {got} != bytes_carried {}",
+                l.id, l.name, l.bytes_carried
+            ));
+        }
+        let mut windows: Vec<(u64, u64)> =
+            l.spans.iter().map(|s| (s.start.as_ps(), s.end.as_ps())).collect();
+        windows.sort_unstable();
+        for w in windows.windows(2) {
+            if w[1].0 < w[0].1 {
+                return Err(format!(
+                    "link {} ({}): double-booked: [{}, {}) overlaps [{}, {}) (ps)",
+                    l.id, l.name, w[0].0, w[0].1, w[1].0, w[1].1
+                ));
+            }
+        }
+        if l.queue_depth.len() != l.spans.len() {
+            return Err(format!(
+                "link {} ({}): {} queue-depth samples for {} granted flows",
+                l.id,
+                l.name,
+                l.queue_depth.len(),
+                l.spans.len()
+            ));
+        }
     }
     Ok(())
 }
@@ -167,6 +204,27 @@ mod tests {
         t.spans.push(span(Lane::LinkEgress, 0, 4, 64));
         assert!(check_egress_bytes(&t, 64).is_ok());
         assert!(check_egress_bytes(&t, 65).is_err());
+    }
+
+    #[test]
+    fn fabric_link_conservation() {
+        use crate::trace::FabricLinkTrace;
+        let mut l = FabricLinkTrace {
+            id: 0,
+            name: "h1->h0".to_string(),
+            bytes_carried: 150,
+            spans: vec![span(Lane::LinkEgress, 0, 10, 100), span(Lane::LinkEgress, 10, 15, 50)],
+            queue_depth: vec![(SimTime::ZERO, 0), (SimTime::ps(10), 1)],
+        };
+        assert!(check_fabric_links(std::slice::from_ref(&l)).is_ok());
+        l.bytes_carried = 151;
+        assert!(check_fabric_links(std::slice::from_ref(&l)).is_err());
+        l.bytes_carried = 150;
+        l.spans[1].start = SimTime::ps(5);
+        assert!(check_fabric_links(std::slice::from_ref(&l)).is_err());
+        l.spans[1].start = SimTime::ps(10);
+        l.queue_depth.pop();
+        assert!(check_fabric_links(std::slice::from_ref(&l)).is_err());
     }
 
     #[test]

@@ -433,6 +433,7 @@ mod tests {
         let tr = Trace {
             name: "t".into(),
             ranks: vec![a, b],
+            links: Vec::new(),
         };
         let m = tr.metrics();
         assert_eq!(m.end, SimTime::ps(100));

@@ -218,12 +218,51 @@ impl RankTrace {
     }
 }
 
+/// One physical fabric link's timeline: every bandwidth window it
+/// granted (span bytes sum exactly to `bytes_carried`) plus a
+/// queue-depth sample per granted flow — how many earlier reservations
+/// the flow found still draining. Recorded by
+/// [`crate::fabric::Network`] when trace capture is on; rendered as a
+/// per-link lane of the fabric pseudo-process in the Perfetto export.
+#[derive(Debug, Clone, PartialEq)]
+pub struct FabricLinkTrace {
+    /// Link id in the fabric graph.
+    pub id: usize,
+    /// Human link name ("h1->h0", "leaf0->spine", ...).
+    pub name: String,
+    /// Total bytes the link carried.
+    pub bytes_carried: u64,
+    /// Granted bandwidth windows, reservation order.
+    pub spans: Vec<Span>,
+    /// `(grant time, queued reservations still draining)` per flow.
+    pub queue_depth: Vec<(SimTime, u32)>,
+}
+
+/// Fold per-phase fabric link traces into an accumulator, merging
+/// entries of the same physical link (phases each drive a fresh
+/// [`crate::fabric::Network`], but the link identity persists).
+pub fn merge_fabric_links(into: &mut Vec<FabricLinkTrace>, more: Vec<FabricLinkTrace>) {
+    for link in more {
+        match into.iter_mut().find(|l| l.id == link.id && l.name == link.name) {
+            Some(l) => {
+                l.bytes_carried += link.bytes_carried;
+                l.spans.extend(link.spans);
+                l.queue_depth.extend(link.queue_depth);
+            }
+            None => into.push(link),
+        }
+    }
+}
+
 /// A named collection of per-rank timelines (one per TP rank; a single
-/// entry for the loopback-mirror engines).
+/// entry for the loopback-mirror engines), plus per-physical-link fabric
+/// lanes when the run went through a [`crate::fabric::Network`].
 #[derive(Debug, Clone, PartialEq)]
 pub struct Trace {
     pub name: String,
     pub ranks: Vec<RankTrace>,
+    /// Per-physical-link fabric occupancy (empty off the fabric path).
+    pub links: Vec<FabricLinkTrace>,
 }
 
 impl Trace {
@@ -231,6 +270,7 @@ impl Trace {
         Trace {
             name: name.into(),
             ranks: vec![rank],
+            links: Vec::new(),
         }
     }
 

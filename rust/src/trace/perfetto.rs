@@ -70,11 +70,62 @@ pub fn export(trace: &Trace) -> String {
             w.end_obj();
         }
     }
+    // Fabric pseudo-process: one thread per physical link, spans for the
+    // granted bandwidth windows and instants for queue-depth samples.
+    if !trace.links.is_empty() {
+        w.begin_obj();
+        w.key("ph").str_val("M");
+        w.key("pid").u64_val(FABRIC_PID);
+        w.key("name").str_val("process_name");
+        w.key("args").begin_obj();
+        w.key("name").str_val("fabric");
+        w.end_obj();
+        w.end_obj();
+        for link in &trace.links {
+            let tid = link.id as u64 + 1;
+            w.begin_obj();
+            w.key("ph").str_val("M");
+            w.key("pid").u64_val(FABRIC_PID);
+            w.key("tid").u64_val(tid);
+            w.key("name").str_val("thread_name");
+            w.key("args").begin_obj();
+            w.key("name").str_val(&format!("link {}", link.name));
+            w.end_obj();
+            w.end_obj();
+            for s in &link.spans {
+                w.begin_obj();
+                w.key("ph").str_val("X");
+                w.key("pid").u64_val(FABRIC_PID);
+                w.key("tid").u64_val(tid);
+                w.key("ts").f64_val(us(s.start));
+                w.key("dur").f64_val(us(s.end - s.start));
+                w.key("name").str_val(&s.label.describe());
+                w.key("args").begin_obj();
+                w.key("link").str_val(&link.name);
+                w.key("bytes").u64_val(s.bytes);
+                w.end_obj();
+                w.end_obj();
+            }
+            for &(at, depth) in &link.queue_depth {
+                w.begin_obj();
+                w.key("ph").str_val("i");
+                w.key("s").str_val("t");
+                w.key("pid").u64_val(FABRIC_PID);
+                w.key("tid").u64_val(tid);
+                w.key("ts").f64_val(us(at));
+                w.key("name").str_val(&format!("queue-depth {depth}"));
+                w.end_obj();
+            }
+        }
+    }
     w.end_arr();
     w.key("traceName").str_val(&trace.name);
     w.end_obj();
     w.finish()
 }
+
+/// Perfetto pid of the fabric pseudo-process (well above any rank id).
+const FABRIC_PID: u64 = 1_000_000;
 
 #[cfg(test)]
 mod tests {
@@ -125,5 +176,32 @@ mod tests {
         // both spans last 5us.
         assert!(json.contains("\"ts\":2,"), "{json}");
         assert!(json.contains("\"dur\":5,"), "{json}");
+        // No fabric pseudo-process without fabric lanes.
+        assert!(!json.contains("\"fabric\""), "{json}");
+    }
+
+    #[test]
+    fn fabric_links_render_as_their_own_process() {
+        use crate::trace::FabricLinkTrace;
+        let mut t = demo();
+        t.links.push(FabricLinkTrace {
+            id: 3,
+            name: "h1->h0".to_string(),
+            bytes_carried: 4096,
+            spans: vec![Span {
+                lane: Lane::LinkEgress,
+                start: SimTime::us(1),
+                end: SimTime::us(3),
+                bytes: 4096,
+                label: SpanLabel::Chunk(0),
+            }],
+            queue_depth: vec![(SimTime::us(1), 2)],
+        });
+        let json = export(&t);
+        assert!(json_balanced(&json), "unbalanced JSON: {json}");
+        assert!(json.contains("\"fabric\""), "{json}");
+        assert!(json.contains("link h1->h0"), "{json}");
+        assert!(json.contains("queue-depth 2"), "{json}");
+        assert!(json.contains(&format!("\"pid\":{}", 1_000_000u64)), "{json}");
     }
 }

@@ -413,6 +413,115 @@ fn two_tier_registry_scenario_behaves_end_to_end() {
 }
 
 #[test]
+fn every_pre_fabric_registry_preset_is_bit_identical_through_the_degenerate_fabric() {
+    // The fabric acceptance contract: for every registry preset that does
+    // not itself carry a fabric, swapping its (implicit or explicit)
+    // legacy topology for the degenerate fabric twin — SingleTier ->
+    // ring fabric, TwoTier -> two-tier-ring fabric — changes nothing,
+    // to the bit. The fabric is a strict generalization, not a new model.
+    use t3::cluster::TopologySpec;
+    use t3::fabric::FabricSpec;
+    let s = sys();
+    let m = by_name("T-NLG").unwrap();
+    for scenario in t3::experiment::registry() {
+        let model = scenario.cluster.clone().unwrap_or_else(ClusterModel::uniform);
+        let fabric_topo = match model.topology.clone() {
+            TopologySpec::SingleTier => FabricSpec::ring(),
+            TopologySpec::TwoTier {
+                node_size,
+                inter_bw_frac,
+                inter_latency,
+            } => FabricSpec::two_tier_ring(node_size, inter_bw_frac, inter_latency),
+            TopologySpec::Fabric(_) => continue, // already fabric-native
+        };
+        let twin = ClusterModel {
+            skew: model.skew.clone(),
+            topology: TopologySpec::Fabric(fabric_topo),
+        };
+        let legacy = scenario.clone().cluster(model).run(&s, &m, 4, SubLayer::OpFwd);
+        let through_fabric = scenario.clone().cluster(twin).run(&s, &m, 4, SubLayer::OpFwd);
+        assert_eq!(legacy, through_fabric, "{} diverged through the fabric", scenario.name);
+    }
+}
+
+#[test]
+fn congested_a2a_preset_is_strictly_later_than_its_uncontended_twin() {
+    // The congestion acceptance claim: the standing background flow on
+    // link 1->0 queues the collective's chunks behind it, so the
+    // congested preset finishes strictly later than the identical spec
+    // on the same fabric without the flow.
+    use t3::fabric::FabricSpec;
+    let s = sys();
+    let m = by_name("T-NLG").unwrap();
+    let congested = preset("congested-a2a").expect("registry has Congested-A2A");
+    let uncontended = ScenarioSpec::sequential()
+        .named("Uncongested-A2A")
+        .all_to_all()
+        .cluster(ClusterModel::fabric(FabricSpec::ring()));
+    for tp in [4u64, 8] {
+        let c = congested.run(&s, &m, tp, SubLayer::Fc2Fwd);
+        let u = uncontended.run(&s, &m, tp, SubLayer::Fc2Fwd);
+        assert!(
+            c.total > u.total,
+            "tp={tp}: congested A2A {} !> uncontended {}",
+            c.total,
+            u.total
+        );
+        // Congestion shifts time, never traffic.
+        assert_eq!(c.counters, u.counters, "tp={tp}");
+    }
+}
+
+#[test]
+fn hierarchical_ar_beats_flat_ring_ar_on_an_oversubscribed_fat_tree() {
+    // The hierarchical acceptance claim at TP 16 on a two-rack fat tree
+    // with 16:1 oversubscribed uplinks: the flat ring pushes the full
+    // tensor across the thin uplinks on every boundary step, while the
+    // hierarchical decomposition crosses racks with only the 1/8 shard.
+    use t3::fabric::FabricSpec;
+    let s = sys();
+    let m = by_name("T-NLG").unwrap();
+    let hier = preset("ar-hier").expect("registry has T3-AR-Hierarchical");
+    let flat = ScenarioSpec::sequential()
+        .named("Flat-AR-FatTree")
+        .cluster(ClusterModel::fabric(FabricSpec::fat_tree(16, 16.0)));
+    let h = hier.run(&s, &m, 16, SubLayer::OpFwd);
+    let f = flat.run(&s, &m, 16, SubLayer::OpFwd);
+    assert!(
+        h.total < f.total,
+        "hierarchical AR {} !< flat ring AR {}",
+        h.total,
+        f.total
+    );
+    // Same producer GEMM on both sides.
+    assert_eq!(h.gemm, f.gemm);
+}
+
+#[test]
+fn fabric_presets_run_end_to_end_and_congest_sensibly() {
+    // Registry smoke for the remaining fabric presets: the fat-tree AR
+    // preset runs and is no faster than the same scenario on the
+    // uncontended single-tier cluster (shared uplinks cannot help), and
+    // the torus A2A preset runs at its natural TP 8.
+    use t3::fabric::FabricSpec;
+    let s = sys();
+    let m = by_name("T-NLG").unwrap();
+    let tree = preset("ar-fat-tree").expect("registry has T3-AR-FatTree");
+    let tree_run = tree.run(&s, &m, 16, SubLayer::OpFwd);
+    let flat_twin = tree.clone().cluster(ClusterModel::fabric(FabricSpec::ring()));
+    let flat_run = flat_twin.run(&s, &m, 16, SubLayer::OpFwd);
+    assert!(
+        tree_run.total >= flat_run.total,
+        "oversubscribed fat tree {} cannot beat the flat ring {}",
+        tree_run.total,
+        flat_run.total
+    );
+    let torus = preset("a2a-torus").expect("registry has T3-A2A-Torus");
+    let t = torus.run(&s, &m, 8, SubLayer::OpFwd);
+    assert!(t.total > SimTime::ZERO);
+}
+
+#[test]
 fn straggler_extra_time_tracks_the_gemm_stretch() {
     // In the serialized baseline the 25% straggler's GEMM stretch lands
     // (almost) fully on the critical path: the ring propagates the delay

@@ -611,6 +611,238 @@ fn execute_composes_serialized_phases_like_the_legacy_pipeline() {
 }
 
 #[test]
+fn fabric_routes_are_valid_acyclic_and_reach_their_destination() {
+    // Route validity for every shipped topology kind at fuzzed endpoint
+    // counts: every hop names an existing directed link, hops chain
+    // (hop k's head is hop k+1's tail), no vertex repeats (cycle-free),
+    // and the walk ends at the destination.
+    use t3::fabric::{FabricKind, Topology, Torus2D};
+    let s = sys();
+    forall(32, |rng| {
+        let n = rng.range(2, 10) as usize;
+        for kind in FabricKind::catalog() {
+            // The torus requires rows * cols == n; re-shape to the
+            // fuzzed count (1 x n keeps the wraparound grid valid).
+            let kind = match kind {
+                FabricKind::Torus2D(_) => FabricKind::Torus2D(Torus2D { rows: 1, cols: n }),
+                k => k,
+            };
+            let g = kind.topology().graph(n, &s.link);
+            for src in 0..n {
+                for dst in 0..n {
+                    if src == dst {
+                        continue;
+                    }
+                    let route = g.route(src, dst);
+                    assert!(!route.is_empty(), "{}: empty route {src}->{dst}", kind.topology().name());
+                    let mut at = src;
+                    let mut seen = vec![false; g.vertices];
+                    seen[at] = true;
+                    for &hop in &route {
+                        let l = &g.links[hop];
+                        assert_eq!(
+                            l.from, at,
+                            "{}: route {src}->{dst} hop does not chain",
+                            kind.topology().name()
+                        );
+                        at = l.to;
+                        assert!(
+                            !seen[at],
+                            "{}: route {src}->{dst} revisits vertex {at}",
+                            kind.topology().name()
+                        );
+                        seen[at] = true;
+                    }
+                    assert_eq!(at, dst, "{}: route ends off-target", kind.topology().name());
+                }
+            }
+        }
+    });
+}
+
+#[test]
+fn fabric_route_tables_are_thread_count_invariant() {
+    // Precomputed route tables are pure functions of (kind, n): building
+    // them on the experiment executor at 1 and 4 workers fingerprints
+    // identically, so parallel grids can share fabric-backed scenarios.
+    use t3::fabric::{FabricKind, Topology, Torus2D};
+    let s = sys();
+    let kinds = FabricKind::catalog();
+    let cases = kinds.len() * 4;
+    let fingerprint = |i: usize| -> u64 {
+        let n = 3 + i / kinds.len(); // 3..=6 endpoints
+        let kind = match kinds[i % kinds.len()] {
+            FabricKind::Torus2D(_) => FabricKind::Torus2D(Torus2D { rows: 1, cols: n }),
+            k => k,
+        };
+        let g = kind.topology().graph(n, &s.link);
+        let mut h = TraceHash::new();
+        for src in 0..n {
+            for dst in 0..n {
+                for &hop in &g.route(src, dst) {
+                    h.mix(hop as u64);
+                }
+                h.mix(u64::MAX); // route delimiter
+            }
+        }
+        h.finish()
+    };
+    let serial = run_indexed(cases, 1, fingerprint);
+    let parallel = run_indexed(cases, 4, fingerprint);
+    assert_eq!(serial, parallel, "worker count changed a route table");
+}
+
+#[test]
+fn fabric_links_conserve_bytes_across_kinds_and_skew() {
+    // Traced fabric runs satisfy the per-link invariants (span bytes sum
+    // to `bytes_carried`, FIFO windows never double-book, one queue-depth
+    // sample per granted flow), and on the single-hop ring fabric the
+    // fabric's total carried bytes equal the sum of per-rank egress
+    // totals — nothing is created or lost in the network.
+    use t3::cluster::run_collective_with_links;
+    use t3::fabric::FabricSpec;
+    use t3::testkit::check_fabric_links;
+    let s = sys();
+    forall(48, |rng| {
+        let tp = rng.range(2, 6);
+        let chunk = rng.range(1, 3) * MB;
+        let kind = *rng.choose(&[RingKind::RsCu, RingKind::AgCu, RingKind::RsNmc]);
+        let skewed = fuzz_model(rng, tp);
+        let spec = match rng.index(3) {
+            0 => FabricSpec::ring(),
+            1 => FabricSpec::fat_tree(*rng.choose(&[4usize, 16]), 1.0 + rng.f64() * 3.0),
+            _ => FabricSpec::rail(2, 2),
+        };
+        let single_hop = matches!(rng_kind_name(&spec), "ring");
+        let model = ClusterModel {
+            skew: skewed.skew,
+            topology: TopologySpec::Fabric(spec),
+        };
+        let coll = RingCollective {
+            bytes: chunk * tp,
+            cus: 80,
+            kind,
+        };
+        let starts = fuzz_starts(rng, tp);
+        let (outs, links) = run_collective_with_links(
+            &s,
+            &coll,
+            tp,
+            &starts,
+            &ExecTarget::Cluster(model),
+            true,
+            Interleave::Ascending,
+        );
+        assert!(!links.is_empty(), "traced fabric run must report link lanes");
+        check_fabric_links(&links).unwrap();
+        let carried: u64 = links.iter().map(|l| l.bytes_carried).sum();
+        let sent: u64 = outs.iter().map(|o| o.link_bytes).sum();
+        if single_hop {
+            assert_eq!(carried, sent, "ring fabric carried != rank egress total");
+        } else {
+            // Multi-hop routes traverse >= 1 link per flow.
+            assert!(carried >= sent, "fabric lost bytes: {carried} < {sent}");
+        }
+    });
+}
+
+/// The fabric kind's name (test helper for single-hop detection).
+fn rng_kind_name(spec: &t3::fabric::FabricSpec) -> &'static str {
+    use t3::fabric::Topology;
+    spec.kind.topology().name()
+}
+
+#[test]
+fn degenerate_fabric_bit_matches_the_dedicated_link_engine() {
+    // Fabric-off parity: the ring fabric reproduces the single-tier
+    // engine and the two-tier-ring fabric reproduces the legacy two-tier
+    // engine, to the bit, for every collective kind x skew x TP. The
+    // single-hop cut-through window round-trips `SimTime::transfer`
+    // exactly, so exact equality is the contract, not a tolerance.
+    use t3::fabric::FabricSpec;
+    let s = sys();
+    let plan = StagePlan::new(
+        GemmShape::new(1024, 512, 256, DType::F16),
+        Tiling::default(),
+        &s.gpu,
+    );
+    let opts = FusedOpts {
+        policy: ArbPolicy::T3Mca,
+        ..FusedOpts::default()
+    };
+    forall(48, |rng| {
+        let tp = rng.range(2, 6);
+        let skewed = fuzz_model(rng, tp);
+        // Pair a legacy topology with its degenerate fabric twin.
+        let (legacy_topo, fabric_spec) = if rng.chance(0.5) {
+            (TopologySpec::SingleTier, FabricSpec::ring())
+        } else {
+            let node_size = rng.range(1, tp + 1);
+            let frac = 0.25 + rng.f64() * 0.75;
+            let lat = SimTime::ns(rng.range(100, 3000));
+            (
+                TopologySpec::TwoTier {
+                    node_size,
+                    inter_bw_frac: frac,
+                    inter_latency: lat,
+                },
+                FabricSpec::two_tier_ring(node_size, frac, lat),
+            )
+        };
+        let legacy = ClusterModel {
+            skew: skewed.skew.clone(),
+            topology: legacy_topo,
+        };
+        let fabric = ClusterModel {
+            skew: skewed.skew,
+            topology: TopologySpec::Fabric(fabric_spec),
+        };
+        let order = Interleave::Ascending;
+        match rng.index(3) {
+            0 => {
+                let kind = *rng.choose(&[RingKind::RsCu, RingKind::AgCu, RingKind::RsNmc]);
+                let chunk = rng.range(1, 3) * MB;
+                let coll = RingCollective {
+                    bytes: chunk * tp,
+                    cus: *rng.choose(&[8u32, 80]),
+                    kind,
+                };
+                let starts = fuzz_starts(rng, tp);
+                let a = run_collective(&s, &coll, tp, &starts, &ExecTarget::Cluster(legacy), false, order);
+                let b = run_collective(&s, &coll, tp, &starts, &ExecTarget::Cluster(fabric), false, order);
+                assert_eq!(a, b, "ring collective diverged on the degenerate fabric");
+            }
+            1 => {
+                let coll = FusedGemmRsCollective {
+                    plan: plan.clone(),
+                    opts: opts.clone(),
+                };
+                let starts = vec![SimTime::ZERO; tp as usize];
+                let a = run_collective(&s, &coll, tp, &starts, &ExecTarget::Cluster(legacy), false, order);
+                let b = run_collective(&s, &coll, tp, &starts, &ExecTarget::Cluster(fabric), false, order);
+                for (x, y) in a.iter().zip(&b) {
+                    assert_eq!(x.total, y.total);
+                    assert_eq!(x.tracker_done, y.tracker_done);
+                    assert_eq!(x.counters, y.counters);
+                }
+            }
+            _ => {
+                let chunk = rng.range(1, 3) * MB;
+                let coll = FusedAgCollective {
+                    bytes: chunk * tp,
+                    policy: ArbPolicy::T3Mca,
+                    consumer: None,
+                };
+                let starts = fuzz_starts(rng, tp);
+                let a = run_collective(&s, &coll, tp, &starts, &ExecTarget::Cluster(legacy), false, order);
+                let b = run_collective(&s, &coll, tp, &starts, &ExecTarget::Cluster(fabric), false, order);
+                assert_eq!(a, b, "fused AG diverged on the degenerate fabric");
+            }
+        }
+    });
+}
+
+#[test]
 fn fuzzed_cluster_runs_are_thread_count_invariant() {
     // 128 fuzzed cases, each a full cluster simulation, executed on the
     // experiment executor at two worker counts: the fingerprints must be
