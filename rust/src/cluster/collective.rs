@@ -30,8 +30,7 @@
 //! [`crate::engine::alltoall`] for the worked example, added without
 //! touching `cluster::drive` or `engine::Runner`.
 
-use std::cell::RefCell;
-use std::rc::Rc;
+use std::sync::{Arc, Mutex};
 
 use crate::config::{ArbPolicy, LinkConfig, SystemConfig};
 use crate::engine::allgather::{AgRankSpec, AllGatherRank, AllGatherResult, ConsumerSpec};
@@ -45,7 +44,7 @@ use crate::sim::stats::DramCounters;
 use crate::sim::time::SimTime;
 use crate::trace::{FabricLinkTrace, RankTrace};
 
-use super::engine::{drive_mapped, Interleave, RankNode};
+use super::engine::{drive_mapped_oracle, drive_mapped_sharded, shard_ranks, Interleave, RankNode};
 use super::topology::{ClusterModel, TopologySpec};
 
 /// Everything a collective needs to build one rank's machine.
@@ -90,7 +89,9 @@ pub struct RankOutcome {
 /// plain data (the knobs) — all simulation state lives in the rank machine.
 pub trait Collective {
     /// The per-rank machine (drives through [`super::engine::drive`]).
-    type Node: RankNode;
+    /// `Send` lets independent shards of a grouped collective advance on
+    /// separate workers ([`super::engine::drive_mapped_sharded`]).
+    type Node: RankNode + Send;
     /// The typed per-rank result.
     type Out;
 
@@ -165,6 +166,46 @@ pub fn run_collective_with_links<C: Collective>(
     traced: bool,
     order: Interleave,
 ) -> (Vec<C::Out>, Vec<FabricLinkTrace>) {
+    run_collective_impl(sys, coll, tp, starts, target, traced, order, Driver::Sharded)
+}
+
+/// [`run_collective`] driven by the retained legacy scheduler
+/// ([`super::engine::drive_mapped_oracle`]): a full per-round rescan of
+/// every rank, serial. Bit-identical to [`run_collective`] — that claim
+/// is exactly what the scheduler-equivalence suite fuzzes — and the
+/// baseline `benches/cluster_scale.rs` measures the fast path against.
+pub fn run_collective_oracle<C: Collective>(
+    sys: &SystemConfig,
+    coll: &C,
+    tp: u64,
+    starts: &[SimTime],
+    target: &ExecTarget,
+    traced: bool,
+    order: Interleave,
+) -> Vec<C::Out> {
+    run_collective_impl(sys, coll, tp, starts, target, traced, order, Driver::Oracle).0
+}
+
+/// Which scheduler advances the cluster's rank machines.
+#[derive(Clone, Copy)]
+enum Driver {
+    /// Calendar queue + link-disjoint shards on the work-stealing pool.
+    Sharded,
+    /// The legacy full-rescan reference loop, serial.
+    Oracle,
+}
+
+#[allow(clippy::too_many_arguments)]
+fn run_collective_impl<C: Collective>(
+    sys: &SystemConfig,
+    coll: &C,
+    tp: u64,
+    starts: &[SimTime],
+    target: &ExecTarget,
+    traced: bool,
+    order: Interleave,
+    driver: Driver,
+) -> (Vec<C::Out>, Vec<FabricLinkTrace>) {
     match target {
         ExecTarget::Mirror => {
             debug_assert!(
@@ -221,18 +262,36 @@ pub fn run_collective_with_links<C: Collective>(
                 .collect();
             // Fabric target: one shared Network, every rank's egress
             // rebound to its `(rank, dest)` lane before the first event.
-            let net = if let TopologySpec::Fabric(spec) = &topology {
-                let net = Rc::new(RefCell::new(Network::new(spec, n, &sys.link, traced)));
-                for (r, node) in nodes.iter_mut().enumerate() {
-                    node.attach_port(EgressPort::fabric(Rc::clone(&net), r, dest[r]));
+            // A single rank keeps its dedicated link: `tp == 1` *is* the
+            // loopback mirror (self-delivery), no fabric to route through.
+            let net = match &topology {
+                TopologySpec::Fabric(spec) if n > 1 => {
+                    let net = Arc::new(Mutex::new(Network::new(spec, n, &sys.link, traced)));
+                    for (r, node) in nodes.iter_mut().enumerate() {
+                        node.attach_port(EgressPort::fabric(Arc::clone(&net), r, dest[r]));
+                    }
+                    Some(net)
                 }
-                Some(net)
-            } else {
-                None
+                _ => None,
             };
-            drive_mapped(&mut nodes, order, &dest);
+            match driver {
+                Driver::Sharded => {
+                    // Independent rank groups (sub-rings of a grouped
+                    // collective) advance concurrently when their fabric
+                    // routes are link-disjoint; dedicated per-edge links
+                    // never conflict.
+                    let resources = net.as_ref().map(|net| {
+                        let net = net.lock().unwrap();
+                        (0..n).map(|r| net.route(r, dest[r]).to_vec()).collect::<Vec<_>>()
+                    });
+                    let shards = shard_ranks(&dest, resources.as_deref());
+                    let threads = crate::experiment::executor::default_threads();
+                    drive_mapped_sharded(&mut nodes, order, &dest, &shards, threads);
+                }
+                Driver::Oracle => drive_mapped_oracle(&mut nodes, order, &dest),
+            }
             let fabric = net
-                .map(|net| net.borrow_mut().take_link_traces())
+                .map(|net| net.lock().unwrap().take_link_traces())
                 .unwrap_or_default();
             (nodes.into_iter().map(|node| coll.finish(node)).collect(), fabric)
         }

@@ -31,8 +31,13 @@
 //!   (deterministic via [`crate::sim::rng`]) and single- vs two-tier link
 //!   topology;
 //! * [`drive`] ([`engine`]) — the canonical global event loop over
-//!   per-rank calendars (see [`engine`] for the delivery rule and its
-//!   determinism / interleaving-independence argument).
+//!   per-rank calendars: a calendar-queue scheduler (lazy-invalidation
+//!   min-heap over rank next-times) plus a sharded executor
+//!   ([`drive_mapped_sharded`]) that advances link-disjoint rank groups
+//!   concurrently; the legacy full-rescan loop survives as
+//!   [`drive_mapped_oracle`], the bit-exactness oracle of the
+//!   scheduler-equivalence suite (see [`engine`] for the delivery rule
+//!   and the determinism / equivalence arguments).
 //!
 //! **The old path is a special case:** with [`ClusterModel::uniform`]
 //! every rank runs an identical timeline and the cluster reproduces the
@@ -54,14 +59,14 @@ pub use engine::{
     run_gemm_cluster, run_gemm_cluster_traced, run_ring_cluster, run_ring_cluster_traced,
 };
 pub use engine::{
-    drive, drive_mapped, AgClusterSpec, ClusterAgRun, ClusterFusedRun, ClusterRingRun, Interleave,
-    RankNode, RingClusterSpec,
+    drive, drive_mapped, drive_mapped_oracle, drive_mapped_sharded, shard_ranks, AgClusterSpec,
+    ClusterAgRun, ClusterFusedRun, ClusterRingRun, Interleave, RankNode, RingClusterSpec,
 };
 
 pub use collective::{
-    run_collective, run_collective_with_links, Collective, ExecTarget, FusedAgCollective,
-    FusedGemmRsCollective, GemmCollective, GroupedRingCollective, RankCtx, RankOutcome,
-    RingCollective, RingGroup,
+    run_collective, run_collective_oracle, run_collective_with_links, Collective, ExecTarget,
+    FusedAgCollective, FusedGemmRsCollective, GemmCollective, GroupedRingCollective, RankCtx,
+    RankOutcome, RingCollective, RingGroup,
 };
 pub use program::{execute, ExecOpts, Phase, PhaseReport, PhaseRole, Program, RunReport, StartRule};
 pub use topology::{ClusterModel, SkewModel, TopologySpec};

@@ -252,7 +252,9 @@ impl RunReport {
 /// Run a [`Program`] to completion: the one execution entry point behind
 /// `ScenarioSpec::run`, `t3 cluster`, and `t3 trace`.
 pub fn execute(sys: &SystemConfig, prog: &Program, opts: &ExecOpts) -> RunReport {
-    assert!(prog.tp >= 2, "a ring needs at least two ranks");
+    // `tp == 1` degrades to the loopback mirror: a single rank delivering
+    // its ring messages back to itself, on either target.
+    assert!(prog.tp >= 1, "a program needs at least one rank");
     assert!(!prog.phases.is_empty(), "program has no phases");
     let nranks = opts.target.ranks(prog.tp);
 

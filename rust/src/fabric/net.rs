@@ -11,8 +11,7 @@
 //! all-gather and all-to-all engines. A single-hop send over a base-rate
 //! link is therefore bit-identical to a dedicated legacy `hw::Link`.
 
-use std::cell::RefCell;
-use std::rc::Rc;
+use std::sync::{Arc, Mutex};
 
 use crate::config::LinkConfig;
 use crate::hw::link::{Link, Window};
@@ -292,7 +291,7 @@ impl Network {
 pub enum EgressPort {
     Direct(Link),
     Fabric {
-        net: Rc<RefCell<Network>>,
+        net: Arc<Mutex<Network>>,
         src: usize,
         dst: usize,
         /// Bytes this port has pushed (the per-rank `link_bytes`
@@ -306,7 +305,7 @@ impl EgressPort {
         EgressPort::Direct(Link::new(cfg))
     }
 
-    pub fn fabric(net: Rc<RefCell<Network>>, src: usize, dst: usize) -> Self {
+    pub fn fabric(net: Arc<Mutex<Network>>, src: usize, dst: usize) -> Self {
         EgressPort::Fabric {
             net,
             src,
@@ -322,7 +321,7 @@ impl EgressPort {
             EgressPort::Direct(l) => l.reserve(ready, bytes),
             EgressPort::Fabric { net, src, dst, sent } => {
                 *sent += bytes;
-                net.borrow_mut().send(*src, *dst, ready, bytes, None)
+                net.lock().unwrap().send(*src, *dst, ready, bytes, None)
             }
         }
     }
@@ -334,7 +333,7 @@ impl EgressPort {
             EgressPort::Direct(l) => l.reserve_rate_limited(ready, bytes, source_gbps),
             EgressPort::Fabric { net, src, dst, sent } => {
                 *sent += bytes;
-                net.borrow_mut().send(*src, *dst, ready, bytes, Some(source_gbps))
+                net.lock().unwrap().send(*src, *dst, ready, bytes, Some(source_gbps))
             }
         }
     }
@@ -344,7 +343,9 @@ impl EgressPort {
     pub fn bw_gbps(&self) -> f64 {
         match self {
             EgressPort::Direct(l) => l.cfg().per_dir_bw_gbps,
-            EgressPort::Fabric { net, src, dst, .. } => net.borrow().path_bw_gbps(*src, *dst),
+            EgressPort::Fabric { net, src, dst, .. } => {
+                net.lock().unwrap().path_bw_gbps(*src, *dst)
+            }
         }
     }
 
@@ -353,7 +354,9 @@ impl EgressPort {
     pub fn latency(&self) -> SimTime {
         match self {
             EgressPort::Direct(l) => l.cfg().latency,
-            EgressPort::Fabric { net, src, dst, .. } => net.borrow().path_latency(*src, *dst),
+            EgressPort::Fabric { net, src, dst, .. } => {
+                net.lock().unwrap().path_latency(*src, *dst)
+            }
         }
     }
 
@@ -498,7 +501,7 @@ mod tests {
     #[test]
     fn egress_port_direct_and_fabric_agree_on_a_ring_edge() {
         let b = base();
-        let net = Rc::new(RefCell::new(Network::new(&FabricSpec::ring(), 4, &b, false)));
+        let net = Arc::new(Mutex::new(Network::new(&FabricSpec::ring(), 4, &b, false)));
         let mut fp = EgressPort::fabric(net, 3, 2);
         let mut dp = EgressPort::direct(b.clone());
         assert_eq!(fp.bw_gbps(), dp.bw_gbps());

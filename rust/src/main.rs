@@ -118,9 +118,11 @@ impl CommonOpts {
                 .map_err(|_| format!("bad --tp '{s}' (expected a number)"))?,
             None => 8,
         };
-        if tp < 2 || m.hidden % tp != 0 {
+        // TP=1 is the degenerate loopback ring (every target degrades to
+        // the single-rank mirror).
+        if tp < 1 || m.hidden % tp != 0 {
             return Err(format!(
-                "TP={tp} is not valid for {} (needs TP >= 2 dividing H={})",
+                "TP={tp} is not valid for {} (needs TP >= 1 dividing H={})",
                 m.name, m.hidden
             ));
         }

@@ -27,11 +27,12 @@
 #![allow(deprecated)]
 
 use t3::cluster::{
-    execute, run_ag_cluster, run_ag_cluster_traced, run_collective, run_fused_cluster,
+    drive_mapped, drive_mapped_oracle, drive_mapped_sharded, execute, run_ag_cluster,
+    run_ag_cluster_traced, run_collective, run_collective_oracle, run_fused_cluster,
     run_fused_cluster_traced, run_gemm_cluster, run_ring_cluster, run_ring_cluster_traced,
-    AgClusterSpec, ClusterModel, ExecOpts, ExecTarget, FusedAgCollective, FusedGemmRsCollective,
-    GemmCollective, Interleave, PhaseRole, Program, RingCollective, SkewModel, StartRule,
-    TopologySpec,
+    shard_ranks, AgClusterSpec, ClusterModel, ExecOpts, ExecTarget, FusedAgCollective,
+    FusedGemmRsCollective, GemmCollective, GroupedRingCollective, Interleave, PhaseRole, Program,
+    RingClusterSpec, RingCollective, RingGroup, SkewModel, StartRule, TopologySpec,
 };
 use t3::config::{ArbPolicy, DType, SystemConfig};
 use t3::engine::allgather::ConsumerSpec;
@@ -76,6 +77,21 @@ fn fuzz_model(rng: &mut Rng, tp: u64) -> ClusterModel {
         }
     };
     ClusterModel { skew, topology }
+}
+
+/// [`fuzz_model`], widened with the route-aware fabric topologies: the
+/// scheduler-equivalence suite must hold on shared multi-hop links too.
+fn fuzz_model_any(rng: &mut Rng, tp: u64) -> ClusterModel {
+    use t3::fabric::FabricSpec;
+    let mut model = fuzz_model(rng, tp);
+    if rng.chance(0.4) {
+        model.topology = TopologySpec::Fabric(match rng.index(3) {
+            0 => FabricSpec::ring(),
+            1 => FabricSpec::fat_tree(*rng.choose(&[4usize, 16]), 1.0 + rng.f64() * 3.0),
+            _ => FabricSpec::rail(2, 2),
+        });
+    }
+    model
 }
 
 fn fuzz_starts(rng: &mut Rng, tp: u64) -> Vec<SimTime> {
@@ -920,4 +936,201 @@ fn fuzzed_cluster_runs_are_thread_count_invariant() {
     let serial = run_indexed(cases.len(), 1, |i| fingerprint(&cases[i]));
     let parallel = run_indexed(cases.len(), 4, |i| fingerprint(&cases[i]));
     assert_eq!(serial, parallel, "worker count changed a simulation result");
+}
+
+#[test]
+fn fast_scheduler_bit_matches_the_oracle_everywhere() {
+    // The tentpole acceptance contract: `run_collective` (the calendar
+    // queue + sharded executor) vs `run_collective_oracle` (the retained
+    // per-round rescan loop) must be bit-identical — `SimTime`s, tracker
+    // and trigger times, and DRAM counters — fuzzed across every
+    // rank-machine kind x skew x topology (legacy and multi-hop fabric) x
+    // interleave x start offsets. Failing seeds replay via `T3_PROP_SEED`.
+    let s = sys();
+    let plan = StagePlan::new(
+        GemmShape::new(1024, 512, 256, DType::F16),
+        Tiling::default(),
+        &s.gpu,
+    );
+    let opts = FusedOpts {
+        policy: ArbPolicy::T3Mca,
+        ..FusedOpts::default()
+    };
+    forall(48, |rng| {
+        let order = if rng.chance(0.5) { Interleave::Ascending } else { Interleave::Descending };
+        match rng.index(5) {
+            0 => {
+                // Plain rings, at wider TP than the rest of the suite.
+                let tp = rng.range(2, 17);
+                let model = fuzz_model_any(rng, tp);
+                let coll = RingCollective {
+                    bytes: rng.range(1, 3) * MB * tp,
+                    cus: *rng.choose(&[8u32, 80]),
+                    kind: *rng.choose(&[RingKind::RsCu, RingKind::AgCu, RingKind::RsNmc]),
+                };
+                let starts = fuzz_starts(rng, tp);
+                let target = ExecTarget::Cluster(model);
+                let fast = run_collective(&s, &coll, tp, &starts, &target, false, order);
+                let oracle = run_collective_oracle(&s, &coll, tp, &starts, &target, false, order);
+                assert_eq!(fast, oracle, "ring diverged from the oracle");
+            }
+            1 => {
+                // Grouped rings: the hierarchical AR's rack-local and
+                // strided cross-rack stages — multi-component destination
+                // maps, the ones the sharded executor actually splits.
+                let size = *rng.choose(&[2u64, 4]);
+                let tp = size * rng.range(2, 5);
+                let model = fuzz_model_any(rng, tp);
+                let group = if rng.chance(0.5) {
+                    RingGroup::Rack { size }
+                } else {
+                    RingGroup::Strided { size }
+                };
+                let coll = GroupedRingCollective {
+                    bytes: rng.range(1, 3) * MB * size,
+                    cus: 80,
+                    kind: *rng.choose(&[RingKind::RsCu, RingKind::AgCu]),
+                    group,
+                };
+                let starts = fuzz_starts(rng, tp);
+                let target = ExecTarget::Cluster(model);
+                let fast = run_collective(&s, &coll, tp, &starts, &target, false, order);
+                let oracle = run_collective_oracle(&s, &coll, tp, &starts, &target, false, order);
+                assert_eq!(fast, oracle, "grouped ring diverged from the oracle");
+            }
+            2 => {
+                // The fused GEMM-RS machine (tracker/trigger state).
+                let tp = rng.range(2, 5);
+                let model = fuzz_model_any(rng, tp);
+                let coll = FusedGemmRsCollective {
+                    plan: plan.clone(),
+                    opts: opts.clone(),
+                };
+                let starts = vec![SimTime::ZERO; tp as usize];
+                let target = ExecTarget::Cluster(model);
+                let fast = run_collective(&s, &coll, tp, &starts, &target, false, order);
+                let oracle = run_collective_oracle(&s, &coll, tp, &starts, &target, false, order);
+                for (r, (f, o)) in fast.iter().zip(&oracle).enumerate() {
+                    assert_eq!(f.total, o.total, "rank {r} total");
+                    assert_eq!(f.gemm_time, o.gemm_time, "rank {r} gemm");
+                    assert_eq!(f.tracker_done, o.tracker_done, "rank {r} trackers");
+                    assert_eq!(f.sent_done, o.sent_done, "rank {r} sends");
+                    assert_eq!(f.counters, o.counters, "rank {r} counters");
+                }
+            }
+            3 => {
+                // The fused all-gather (sometimes with a consumer GEMM).
+                let tp = rng.range(2, 6);
+                let model = fuzz_model_any(rng, tp);
+                let coll = FusedAgCollective {
+                    bytes: rng.range(1, 3) * MB * tp,
+                    policy: ArbPolicy::T3Mca,
+                    consumer: rng.chance(0.25).then(|| ConsumerSpec {
+                        plan: plan.clone(),
+                        write_mode: WriteMode::BypassLlc,
+                        compute_scale: 1.0,
+                    }),
+                };
+                let starts = fuzz_starts(rng, tp);
+                let target = ExecTarget::Cluster(model);
+                let fast = run_collective(&s, &coll, tp, &starts, &target, false, order);
+                let oracle = run_collective_oracle(&s, &coll, tp, &starts, &target, false, order);
+                assert_eq!(fast, oracle, "fused AG diverged from the oracle");
+            }
+            _ => {
+                // The expert-parallel all-to-all, both dispatch modes.
+                let tp = rng.range(2, 5);
+                let model = fuzz_model_any(rng, tp);
+                let coll = AllToAllCollective {
+                    plan: plan.clone(),
+                    write_mode: WriteMode::BypassLlc,
+                    bytes: rng.range(1, 3) * MB * tp,
+                    policy: ArbPolicy::T3Mca,
+                    mode: if rng.chance(0.5) { A2aMode::Fused } else { A2aMode::Sequential },
+                };
+                let starts = fuzz_starts(rng, tp);
+                let target = ExecTarget::Cluster(model);
+                let fast = run_collective(&s, &coll, tp, &starts, &target, false, order);
+                let oracle = run_collective_oracle(&s, &coll, tp, &starts, &target, false, order);
+                assert_eq!(fast, oracle, "all-to-all diverged from the oracle");
+            }
+        }
+    });
+}
+
+#[test]
+fn sharded_driver_is_partition_and_thread_count_invariant() {
+    // The sharded driver's determinism contract on real ring machines with
+    // grouped (multi-component) destination maps: any valid partition —
+    // the canonical one from `shard_ranks`, a pairwise coarsening of it,
+    // or the single all-rank shard — on any worker count produces results
+    // bit-identical to the serial fast driver and the legacy oracle.
+    use t3::engine::collective_run::{CollectiveRunResult, RingRank, RingRankSpec};
+    let s = sys();
+    forall(24, |rng| {
+        let size = *rng.choose(&[2u64, 4]);
+        let racks = rng.range(2, 5);
+        let tp = size * racks;
+        let group = if rng.chance(0.5) {
+            RingGroup::Rack { size }
+        } else {
+            RingGroup::Strided { size }
+        };
+        let dest = group.dest_map(tp);
+        let kind = *rng.choose(&[RingKind::RsCu, RingKind::AgCu, RingKind::RsNmc]);
+        let chunk = rng.range(1, 3) * MB;
+        let starts = fuzz_starts(rng, tp);
+        let build = || -> Vec<RingRank> {
+            (0..tp as usize)
+                .map(|r| {
+                    RingRank::new(
+                        &s,
+                        &RingRankSpec {
+                            bytes: chunk * group.devices(tp),
+                            devices: group.devices(tp),
+                            cus: 80,
+                            kind,
+                            start: starts[r],
+                            link: s.link.clone(),
+                            issue_scale: 1.0,
+                        },
+                    )
+                })
+                .collect()
+        };
+        let results = |nodes: Vec<RingRank>| -> Vec<CollectiveRunResult> {
+            nodes.into_iter().map(|n| n.into_result()).collect()
+        };
+
+        let mut serial = build();
+        drive_mapped(&mut serial, Interleave::Ascending, &dest);
+        let want = results(serial);
+
+        let mut oracle = build();
+        drive_mapped_oracle(&mut oracle, Interleave::Ascending, &dest);
+        assert_eq!(want, results(oracle), "oracle departed from the fast driver");
+
+        let fine = shard_ranks(&dest, None);
+        let expect_shards = match group {
+            RingGroup::Rack { .. } => racks as usize,
+            RingGroup::Strided { .. } => size as usize,
+        };
+        assert_eq!(fine.len(), expect_shards, "one shard per independent ring");
+        let paired: Vec<Vec<usize>> = fine
+            .chunks(2)
+            .map(|pair| {
+                let mut v: Vec<usize> = pair.iter().flatten().copied().collect();
+                v.sort_unstable();
+                v
+            })
+            .collect();
+        let coarse = vec![(0..tp as usize).collect::<Vec<usize>>()];
+        for shards in [&fine, &paired, &coarse] {
+            for threads in [1usize, 2, 8] {
+                let mut nodes = build();
+                drive_mapped_sharded(&mut nodes, Interleave::Ascending, &dest, shards, threads);
+                assert_eq!(want, results(nodes), "a partition/thread count changed a result");
+            }
+        }
+    });
 }
