@@ -45,6 +45,7 @@ fn main() {
                 PhaseRole::FusedGemmRs,
                 StartRule::AtZero,
                 FusedGemmRsCollective {
+                    slices: 1,
                     plan: plan.clone(),
                     opts: opts.clone(),
                 },

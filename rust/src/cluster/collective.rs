@@ -82,6 +82,48 @@ pub struct RankOutcome {
     pub counters: DramCounters,
     /// Timeline (absolute times), `Some` iff the run was traced.
     pub timeline: Option<RankTrace>,
+    /// Per-slice trigger times for a downstream slice-decomposed phase
+    /// ([`super::program::StartRule::AtSliceTrigger`]): slice `h` of an
+    /// `S`-way decomposition fires when the producer has retired a
+    /// `ceil((h+1)·total_wgs/S)` WG prefix. Monotone non-decreasing; the
+    /// final entry is additionally floored at `trigger` (the full-payload
+    /// launch point). Empty when the collective was not asked to slice.
+    pub slice_triggers: Vec<SimTime>,
+}
+
+/// Map producer stage-retirement times to `slices` retired-WG-prefix
+/// trigger times: slice `h` fires at the end of the first stage whose
+/// cumulative WG count reaches `ceil((h+1)·total_wgs/slices)`. The final
+/// slice is floored at `last_floor` — the producer's full-payload trigger —
+/// so a decomposition never launches its last slice before the undecomposed
+/// collective could have launched at all.
+fn slice_triggers_from_stages(
+    plan: &StagePlan,
+    slices: u32,
+    stage_ends: &[SimTime],
+    last_floor: SimTime,
+) -> Vec<SimTime> {
+    if slices <= 1 || stage_ends.is_empty() {
+        return Vec::new();
+    }
+    let total = plan.total_wgs;
+    let s = slices as u64;
+    let mut out = Vec::with_capacity(slices as usize);
+    let mut stage = 0usize;
+    let mut retired = 0u64;
+    for h in 0..s {
+        let need = (total * (h + 1)).div_ceil(s);
+        while retired < need && stage < stage_ends.len() {
+            retired += plan.wgs_in_stage(stage as u64);
+            stage += 1;
+        }
+        out.push(stage_ends[stage.saturating_sub(1).min(stage_ends.len() - 1)]);
+    }
+    if let Some(last) = out.last_mut() {
+        *last = (*last).max(last_floor);
+    }
+    debug_assert!(out.windows(2).all(|w| w[0] <= w[1]));
+    out
 }
 
 /// A pluggable collective: chunking/schedule and machine construction on
@@ -310,6 +352,9 @@ fn run_collective_impl<C: Collective>(
 pub struct FusedGemmRsCollective {
     pub plan: StagePlan,
     pub opts: FusedOpts,
+    /// Report retired-WG-prefix triggers for an `slices`-way decomposed
+    /// downstream phase (1 = undecomposed, no triggers reported).
+    pub slices: u32,
 }
 
 impl Collective for FusedGemmRsCollective {
@@ -334,12 +379,19 @@ impl Collective for FusedGemmRsCollective {
     }
 
     fn outcome(&self, out: &mut FusedResult) -> RankOutcome {
+        let trigger = out.ag_trigger();
         RankOutcome {
             end: out.total,
-            trigger: out.ag_trigger(),
+            trigger,
             gemm_end: out.gemm_time,
             counters: out.counters,
             timeline: out.timeline.take(),
+            slice_triggers: slice_triggers_from_stages(
+                &self.plan,
+                self.slices,
+                &out.stage_ends,
+                trigger,
+            ),
         }
     }
 }
@@ -394,6 +446,7 @@ impl Collective for RingCollective {
             gemm_end: SimTime::ZERO,
             counters: out.counters,
             timeline: out.timeline.take(),
+            slice_triggers: Vec::new(),
         }
     }
 }
@@ -493,6 +546,7 @@ impl Collective for GroupedRingCollective {
             gemm_end: SimTime::ZERO,
             counters: out.counters,
             timeline: out.timeline.take(),
+            slice_triggers: Vec::new(),
         }
     }
 
@@ -556,6 +610,7 @@ impl Collective for FusedAgCollective {
             gemm_end: SimTime::ZERO,
             counters,
             timeline: out.timeline.take(),
+            slice_triggers: Vec::new(),
         }
     }
 }
@@ -567,6 +622,9 @@ pub struct GemmCollective {
     pub plan: StagePlan,
     pub cus: u32,
     pub write_mode: WriteMode,
+    /// Report retired-WG-prefix triggers for an `slices`-way decomposed
+    /// downstream phase (1 = undecomposed, no triggers reported).
+    pub slices: u32,
 }
 
 impl Collective for GemmCollective {
@@ -601,6 +659,12 @@ impl Collective for GemmCollective {
             gemm_end: out.time,
             counters: out.counters,
             timeline: out.timeline.take(),
+            slice_triggers: slice_triggers_from_stages(
+                &self.plan,
+                self.slices,
+                &out.stage_ends,
+                out.time,
+            ),
         }
     }
 }
@@ -631,6 +695,7 @@ mod tests {
         let s = sys();
         let p = plan();
         let coll = FusedGemmRsCollective {
+            slices: 1,
             plan: p.clone(),
             opts: FusedOpts::default(),
         };
@@ -672,6 +737,7 @@ mod tests {
     fn cluster_driver_scales_and_skews_per_rank() {
         let s = sys();
         let coll = GemmCollective {
+            slices: 1,
             plan: plan(),
             cus: 80,
             write_mode: WriteMode::BypassLlc,

@@ -48,6 +48,14 @@ pub enum StartRule {
     /// fused RS's AG trigger: chunk reduced + egress drained) — the
     /// track-and-trigger handoff.
     AtPrevTriggers,
+    /// Slice `slice` of a decomposed collective: each rank starts at entry
+    /// `slice` of the most recent phase that reported per-slice triggers
+    /// ([`super::collective::RankOutcome::slice_triggers`] — the producer's
+    /// retired-WG-prefix times). With `serial` set, the start is
+    /// additionally floored at the immediately preceding phase's per-rank
+    /// end, serializing sibling slices on the shared link while still
+    /// launching each no earlier than its data is ready.
+    AtSliceTrigger { slice: u32, serial: bool },
 }
 
 /// What a phase contributes to the sub-layer measurement (the view layer
@@ -261,6 +269,10 @@ pub fn execute(sys: &SystemConfig, prog: &Program, opts: &ExecOpts) -> RunReport
     let mut all_ends: Vec<Vec<SimTime>> = Vec::new();
     let mut prev_ends: Vec<SimTime> = vec![SimTime::ZERO; nranks];
     let mut prev_triggers: Vec<SimTime> = vec![SimTime::ZERO; nranks];
+    // Per-rank slice-trigger vectors of the most recent phase that reported
+    // any — kept separately from `prev_triggers` so a chain of sliced
+    // consumer phases all read the same producer's schedule.
+    let mut slice_triggers: Vec<Vec<SimTime>> = Vec::new();
     let mut timelines: Vec<RankTrace> = (0..nranks).map(|r| RankTrace::new(r as u64)).collect();
     let mut fabric_links: Vec<FabricLinkTrace> = Vec::new();
     let mut counters = DramCounters::default();
@@ -281,6 +293,28 @@ pub fn execute(sys: &SystemConfig, prog: &Program, opts: &ExecOpts) -> RunReport
                         .unwrap_or(SimTime::ZERO)
                 })
                 .collect(),
+            StartRule::AtSliceTrigger { slice, serial } => {
+                assert!(
+                    !slice_triggers.is_empty(),
+                    "AtSliceTrigger needs an upstream phase reporting slice triggers"
+                );
+                (0..nranks)
+                    .map(|r| {
+                        let ts = &slice_triggers[r];
+                        assert!(
+                            (slice as usize) < ts.len(),
+                            "slice {slice} out of range: the producer reported {} slices",
+                            ts.len()
+                        );
+                        let t = ts[slice as usize];
+                        if serial {
+                            t.max(prev_ends[r])
+                        } else {
+                            t
+                        }
+                    })
+                    .collect()
+            }
         };
         let (mut outcomes, links) = ph.coll.run_phase(
             sys,
@@ -322,6 +356,12 @@ pub fn execute(sys: &SystemConfig, prog: &Program, opts: &ExecOpts) -> RunReport
             gemm_end,
             counters: outcomes[0].counters,
         });
+        if outcomes.iter().any(|o| !o.slice_triggers.is_empty()) {
+            slice_triggers = outcomes
+                .iter()
+                .map(|o| o.slice_triggers.clone())
+                .collect();
+        }
         prev_ends = ends;
         prev_triggers = triggers;
         all_ends.push(prev_ends.clone());
@@ -368,6 +408,7 @@ mod tests {
                 PhaseRole::Gemm,
                 StartRule::AtZero,
                 GemmCollective {
+                    slices: 1,
                     plan: plan(),
                     cus: 80,
                     write_mode: WriteMode::ThroughLlc,
@@ -419,6 +460,7 @@ mod tests {
                 PhaseRole::Gemm,
                 StartRule::AtZero,
                 GemmCollective {
+                    slices: 1,
                     plan: plan(),
                     cus: 80,
                     write_mode: WriteMode::ThroughLlc,

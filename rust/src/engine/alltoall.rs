@@ -551,6 +551,10 @@ impl crate::cluster::Collective for AllToAllCollective {
             gemm_end: out.gemm_time,
             counters: out.counters,
             timeline: out.timeline.take(),
+            // The A2A machine slices internally (per-slice tracker
+            // triggers drive its own DMA); it exposes no external
+            // decomposition axis.
+            slice_triggers: Vec::new(),
         }
     }
 }

@@ -61,6 +61,10 @@ pub struct FusedResult {
     /// When the GEMM's last stage retired (to quantify GEMM slowdown
     /// under contention, Figure 17).
     pub gemm_time: SimTime,
+    /// Retirement time of every GEMM stage in order (monotone; the last
+    /// entry equals `gemm_time`). Slice-decomposed collectives derive
+    /// retired-WG prefix triggers from these.
+    pub stage_ends: Vec<SimTime>,
     /// Tracker-completion time per position.
     pub tracker_done: Vec<SimTime>,
     /// When each position's outbound transfer fully left the rank
@@ -217,6 +221,7 @@ pub struct FusedRank {
     stage: u64,
     stage_compute_done: bool,
     gemm_time: SimTime,
+    stage_ends: Vec<SimTime>,
 
     // scratch (reused across events to keep the hot loop allocation-free)
     tags: Vec<(GroupTag, SimTime)>,
@@ -308,6 +313,7 @@ impl FusedRank {
             stage: 0,
             stage_compute_done: false,
             gemm_time: SimTime::ZERO,
+            stage_ends: Vec::new(),
             tags: Vec::new(),
             newly_tracker_done: Vec::new(),
         };
@@ -493,6 +499,7 @@ impl FusedRank {
                     }
                 }
             }
+            self.stage_ends.push(t);
             self.stage += 1;
             self.stage_compute_done = false;
             if self.stage < self.plan.num_stages {
@@ -612,6 +619,7 @@ impl FusedRank {
         FusedResult {
             total,
             gemm_time: self.gemm_time,
+            stage_ends: self.stage_ends,
             tracker_done: self.tracker_done,
             sent_done: self.sent_done,
             counters: mem.counters,
@@ -839,6 +847,16 @@ mod tests {
             let res = r.into_result();
             assert!(res.total > SimTime::ZERO, "rank={rank}");
         }
+    }
+
+    #[test]
+    fn stage_ends_are_monotone_and_finish_at_gemm_time() {
+        let sys = SystemConfig::table1();
+        let p = plan(8192, 4256, 2128);
+        let res = run_fused_gemm_rs(&sys, &p, 8, &opts(ArbPolicy::T3Mca));
+        assert_eq!(res.stage_ends.len(), p.num_stages as usize);
+        assert!(res.stage_ends.windows(2).all(|w| w[0] <= w[1]));
+        assert_eq!(*res.stage_ends.last().unwrap(), res.gemm_time);
     }
 
     #[test]

@@ -1,0 +1,481 @@
+//! Monte-Carlo tail-latency ensembles: many seeded draws of one
+//! scenario, reduced to exact nearest-rank percentiles.
+//!
+//! A mean hides what distributed training and serving actually pay for:
+//! the slowest draw. [`EnsembleSpec`] re-runs one [`ScenarioSpec`] across
+//! `draws` deterministic seeds — each draw re-sampling the cluster's skew
+//! ([`SkewModel::Jitter`] re-rolls every rank's slowdown from the draw
+//! seed, [`SkewModel::Straggler`] re-rolls *which* rank lags) — on the
+//! work-stealing executor, and reduces the totals to p50/p99/p999 with
+//! [`percentile_sorted`] (exact sorted-sample nearest-rank, not the
+//! histogram approximation).
+//!
+//! Determinism is the contract: each draw's seed is a pure function of
+//! (root seed, draw index) via a [`splitmix64`] stream, and
+//! [`executor::run_indexed`] writes results into index-ordered slots, so
+//! the percentile triple is bit-identical for any worker count
+//! (`T3_THREADS`) and any visit order of the draw grid.
+//!
+//! The optional arrival front-end ([`ArrivalSpec`]) turns the scenario
+//! ensemble into request-level tail latency: a Poisson stream feeds the
+//! [`crate::coordinator::batcher`] (the §7.3 serving example), each
+//! formed batch executes one forward pass priced at that draw's simulated
+//! sub-layer total, and the reported percentiles are over per-request
+//! sojourn times (completion minus arrival). One simplification is
+//! deliberate: the batch service time does not scale with batch size —
+//! the prompt phase is throughput-bound and the scenario total already
+//! prices a full-occupancy pass.
+
+use crate::cluster::SkewModel;
+use crate::config::SystemConfig;
+use crate::coordinator::batcher::{BatchPolicy, Batcher, Request};
+use crate::harness::Table;
+use crate::models::{ModelCfg, SubLayer};
+use crate::sim::rng::{splitmix64, Rng};
+use crate::sim::stats::percentile_sorted;
+use crate::sim::time::SimTime;
+
+use super::executor;
+use super::results::{Cell, ResultSet};
+use super::{Measurement, ScenarioSpec};
+
+/// Salt separating the arrival-process seed stream from the draw stream.
+const ARRIVAL_SALT: u64 = 0xA441_7A1E_5EED_0001;
+
+/// Deterministic per-draw seed: a pure function of (root, draw), so any
+/// sharding or visit order of the draw grid sees identical cell seeds.
+pub fn draw_seed(root: u64, draw: u32) -> u64 {
+    let mut x = root.wrapping_add((draw as u64 + 1).wrapping_mul(0x9E37_79B9_7F4A_7C15));
+    splitmix64(&mut x)
+}
+
+/// Poisson arrival front-end for request-level tail latency.
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct ArrivalSpec {
+    /// Mean arrival rate, requests per second.
+    pub rate_per_s: f64,
+    /// Requests simulated per draw.
+    pub requests: u32,
+}
+
+/// One Monte-Carlo ensemble over a scenario: `draws` seeded re-runs of
+/// the same (system, model, tp, sub-layer) cell.
+#[derive(Debug, Clone)]
+pub struct EnsembleSpec {
+    pub scenario: ScenarioSpec,
+    /// Number of seeded draws (>= 1).
+    pub draws: u32,
+    /// Root seed; each draw derives its own via [`draw_seed`].
+    pub seed: u64,
+    /// Worker threads; `None` uses [`executor::default_threads`]
+    /// (`T3_THREADS` or the machine's parallelism).
+    pub threads: Option<usize>,
+    /// Request-level mode: feed a Poisson stream through the batcher and
+    /// report per-request latency percentiles alongside the draw totals.
+    pub arrivals: Option<ArrivalSpec>,
+}
+
+impl EnsembleSpec {
+    pub fn new(scenario: ScenarioSpec) -> Self {
+        EnsembleSpec {
+            scenario,
+            draws: 64,
+            seed: 0x7A11_5EED,
+            threads: None,
+            arrivals: None,
+        }
+    }
+
+    pub fn draws(mut self, n: u32) -> Self {
+        assert!(n >= 1, "an ensemble needs at least one draw");
+        self.draws = n;
+        self
+    }
+
+    pub fn seed(mut self, seed: u64) -> Self {
+        self.seed = seed;
+        self
+    }
+
+    pub fn threads(mut self, n: usize) -> Self {
+        self.threads = Some(n);
+        self
+    }
+
+    pub fn arrivals(mut self, a: ArrivalSpec) -> Self {
+        self.arrivals = Some(a);
+        self
+    }
+
+    /// The scenario as draw `i` sees it: jitter re-rolls through the
+    /// per-draw system seed; a straggler additionally re-rolls which rank
+    /// lags (the slow host is an accident of placement, not a constant).
+    fn draw_scenario(&self, tp: u64, seed: u64) -> ScenarioSpec {
+        let mut sc = self.scenario.clone();
+        if let Some(cm) = &mut sc.cluster {
+            if let SkewModel::Straggler { slowdown, .. } = cm.skew {
+                cm.skew = SkewModel::Straggler {
+                    rank: Rng::new(seed).range(0, tp),
+                    slowdown,
+                };
+            }
+        }
+        sc
+    }
+
+    /// Run the ensemble. Draw `i` re-runs the scenario under the system
+    /// seed [`draw_seed`]`(self.seed, i)`; a scenario without a cluster
+    /// model has nothing to re-roll and collapses to `draws` identical
+    /// samples.
+    pub fn run(
+        &self,
+        sys: &SystemConfig,
+        model: &ModelCfg,
+        tp: u64,
+        sub: SubLayer,
+    ) -> EnsembleRun {
+        let threads = self.threads.unwrap_or_else(executor::default_threads);
+        let draws: Vec<Measurement> = executor::run_indexed(self.draws as usize, threads, |i| {
+            let seed = draw_seed(self.seed, i as u32);
+            let mut sys_i = sys.clone();
+            sys_i.seed = seed;
+            self.draw_scenario(tp, seed).run(&sys_i, model, tp, sub)
+        });
+        let totals: Vec<SimTime> = draws.iter().map(|m| m.total).collect();
+        let requests = self
+            .arrivals
+            .map(|a| request_tail(&a, self.seed, &totals));
+        EnsembleRun {
+            scenario: self.scenario.name.clone(),
+            model: model.name.to_string(),
+            tp,
+            sublayer: sub,
+            seed: self.seed,
+            totals: TailSummary::from_samples(&totals),
+            draws,
+            requests,
+        }
+    }
+}
+
+/// Exact nearest-rank percentiles of a sample set (see
+/// [`percentile_sorted`]).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct TailSummary {
+    pub p50: SimTime,
+    pub p99: SimTime,
+    pub p999: SimTime,
+    pub min: SimTime,
+    pub max: SimTime,
+    pub mean: SimTime,
+}
+
+impl TailSummary {
+    /// Reduce samples (any order) to the summary. Empty input is all
+    /// zeros, matching [`percentile_sorted`]'s empty semantics.
+    pub fn from_samples(samples: &[SimTime]) -> TailSummary {
+        let mut ps: Vec<f64> = samples.iter().map(|t| t.as_ps() as f64).collect();
+        ps.sort_by(f64::total_cmp);
+        let pick = |q: f64| SimTime::ps(percentile_sorted(&ps, q) as u64);
+        let mean = if samples.is_empty() {
+            SimTime::ZERO
+        } else {
+            SimTime::ps(samples.iter().map(|t| t.as_ps()).sum::<u64>() / samples.len() as u64)
+        };
+        TailSummary {
+            p50: pick(0.50),
+            p99: pick(0.99),
+            p999: pick(0.999),
+            min: samples.iter().copied().min().unwrap_or(SimTime::ZERO),
+            max: samples.iter().copied().max().unwrap_or(SimTime::ZERO),
+            mean,
+        }
+    }
+}
+
+/// Request-level tail latency from the batcher front-end.
+#[derive(Debug, Clone, PartialEq)]
+pub struct RequestTail {
+    pub rate_per_s: f64,
+    pub requests_per_draw: u32,
+    /// Batches formed across every draw.
+    pub batches: u64,
+    /// Per-request sojourn time (completion - arrival) percentiles,
+    /// aggregated over every draw's request stream.
+    pub latency: TailSummary,
+}
+
+/// The reduced ensemble: per-draw measurements (in draw order) plus the
+/// percentile summaries.
+#[derive(Debug, Clone)]
+pub struct EnsembleRun {
+    pub scenario: String,
+    pub model: String,
+    pub tp: u64,
+    pub sublayer: SubLayer,
+    pub seed: u64,
+    /// One measurement per draw, in draw-index order.
+    pub draws: Vec<Measurement>,
+    /// Percentiles over the per-draw sub-layer totals.
+    pub totals: TailSummary,
+    /// Request-level percentiles when an [`ArrivalSpec`] was given.
+    pub requests: Option<RequestTail>,
+}
+
+impl EnsembleRun {
+    /// The ensemble as a [`ResultSet`]: one cell per reported percentile,
+    /// each carrying the *actual draw* at that nearest rank (the exact
+    /// percentile is always a sample), so every existing table, speedup,
+    /// and CSV query applies to the tail unchanged.
+    pub fn result_set(&self, system: &str) -> ResultSet {
+        let mut idx: Vec<usize> = (0..self.draws.len()).collect();
+        idx.sort_by_key(|&i| self.draws[i].total);
+        let cell = |q: f64, tag: &str| -> Cell {
+            let n = idx.len();
+            let rank = ((q * n as f64).ceil() as usize).clamp(1, n.max(1));
+            Cell {
+                system: system.to_string(),
+                model: self.model.clone(),
+                tp: self.tp,
+                sublayer: self.sublayer,
+                scenario: format!("{}@{tag}", self.scenario),
+                m: self.draws[idx[rank - 1]],
+            }
+        };
+        ResultSet {
+            experiment: format!("ensemble:{}", self.scenario),
+            cells: vec![cell(0.50, "p50"), cell(0.99, "p99"), cell(0.999, "p999")],
+        }
+    }
+
+    /// Render the summary as one table row per reported distribution.
+    pub fn table(&self) -> Table {
+        let mut t = Table::new(
+            "ensemble",
+            &format!(
+                "Tail ensemble: {} on {} TP={} {} ({} draws, seed {:#x})",
+                self.scenario,
+                self.model,
+                self.tp,
+                self.sublayer.name(),
+                self.draws.len(),
+                self.seed
+            ),
+            &["metric", "p50 ms", "p99 ms", "p999 ms", "min ms", "max ms", "mean ms"],
+        );
+        let row = |name: &str, s: &TailSummary| -> Vec<String> {
+            vec![
+                name.to_string(),
+                format!("{:.3}", s.p50.as_ms_f64()),
+                format!("{:.3}", s.p99.as_ms_f64()),
+                format!("{:.3}", s.p999.as_ms_f64()),
+                format!("{:.3}", s.min.as_ms_f64()),
+                format!("{:.3}", s.max.as_ms_f64()),
+                format!("{:.3}", s.mean.as_ms_f64()),
+            ]
+        };
+        t.row(row("sub-layer total", &self.totals));
+        if let Some(r) = &self.requests {
+            t.row(row("request latency", &r.latency));
+            t.note(format!(
+                "arrivals: poisson {}/s, {} requests/draw, {} batches served",
+                r.rate_per_s, r.requests_per_draw, r.batches
+            ));
+        }
+        t.note("exact nearest-rank percentiles over seeded draws (t3::experiment::ensemble)");
+        t
+    }
+}
+
+/// Simulate the request-level serving loop for every draw: Poisson
+/// arrivals into the dynamic batcher, batches served FIFO by a single
+/// server whose pass time is the draw's simulated total.
+fn request_tail(a: &ArrivalSpec, root: u64, service: &[SimTime]) -> RequestTail {
+    let mut latencies: Vec<SimTime> = Vec::new();
+    let mut batches = 0u64;
+    for (d, &svc) in service.iter().enumerate() {
+        let mut rng = Rng::new(draw_seed(root ^ ARRIVAL_SALT, d as u32));
+        let policy = BatchPolicy::default();
+        let max_wait = policy.max_wait;
+        // Arrival stream: exponential interarrivals at `rate_per_s`,
+        // prompt lengths in [64, 1024] tokens (inside the default
+        // per-batch token budget).
+        let mut at = SimTime::ZERO;
+        let reqs: Vec<Request> = (0..a.requests as u64)
+            .map(|id| {
+                let u = rng.f64().max(1e-12);
+                at += SimTime::ps((-u.ln() / a.rate_per_s * 1e12) as u64);
+                Request {
+                    id,
+                    tokens: 64 + rng.gen_range(961),
+                    arrival: at,
+                }
+            })
+            .collect();
+
+        let mut batcher = Batcher::new(policy);
+        let mut next = 0usize;
+        let mut now = SimTime::ZERO;
+        loop {
+            while next < reqs.len() && reqs[next].arrival <= now {
+                batcher.push(reqs[next].clone());
+                next += 1;
+            }
+            let batch = match batcher.next_batch(now) {
+                Some(b) => Some(b),
+                // End of the stream: drain whatever is queued.
+                None if next >= reqs.len() => batcher.flush(),
+                None => None,
+            };
+            match batch {
+                Some(b) => {
+                    let done = now + svc;
+                    for r in &b.requests {
+                        latencies.push(done.saturating_sub(r.arrival));
+                    }
+                    batches += 1;
+                    now = done;
+                }
+                None => {
+                    if next >= reqs.len() && batcher.pending() == 0 {
+                        break;
+                    }
+                    // Advance to the next decision point: the next
+                    // arrival, or the queue head's max-wait expiry
+                    // (whichever fires first). Both are strictly after
+                    // `now`, or `next_batch` would have formed a batch.
+                    let mut t = SimTime::MAX;
+                    if next < reqs.len() {
+                        t = reqs[next].arrival;
+                    }
+                    if batcher.pending() > 0 {
+                        // FIFO: the queued heads are reqs[next-pending..].
+                        t = t.min(reqs[next - batcher.pending()].arrival + max_wait);
+                    }
+                    debug_assert!(t > now, "serving loop stalled at {now}");
+                    now = t;
+                }
+            }
+        }
+    }
+    RequestTail {
+        rate_per_s: a.rate_per_s,
+        requests_per_draw: a.requests,
+        batches,
+        latency: TailSummary::from_samples(&latencies),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::ClusterModel;
+    use crate::models::by_name;
+
+    #[test]
+    fn draw_seeds_are_pure_and_distinct() {
+        let a: Vec<u64> = (0..64).map(|i| draw_seed(7, i)).collect();
+        let b: Vec<u64> = (0..64).map(|i| draw_seed(7, i)).collect();
+        assert_eq!(a, b);
+        let mut uniq = a.clone();
+        uniq.sort_unstable();
+        uniq.dedup();
+        assert_eq!(uniq.len(), a.len(), "seed collision in the draw stream");
+        assert_ne!(draw_seed(7, 0), draw_seed(8, 0), "root seed ignored");
+    }
+
+    #[test]
+    fn tail_summary_is_exact_nearest_rank() {
+        let samples: Vec<SimTime> = (1..=100).map(SimTime::us).collect();
+        let s = TailSummary::from_samples(&samples);
+        assert_eq!(s.p50, SimTime::us(50));
+        assert_eq!(s.p99, SimTime::us(99));
+        assert_eq!(s.p999, SimTime::us(100));
+        assert_eq!(s.min, SimTime::us(1));
+        assert_eq!(s.max, SimTime::us(100));
+        let empty = TailSummary::from_samples(&[]);
+        assert_eq!(empty.p50, SimTime::ZERO);
+        assert_eq!(empty.max, SimTime::ZERO);
+    }
+
+    #[test]
+    fn ensemble_is_thread_count_invariant() {
+        let sys = SystemConfig::table1();
+        let m = by_name("Mega-GPT-2").unwrap();
+        let spec = EnsembleSpec::new(
+            ScenarioSpec::t3_mca().cluster(ClusterModel::jitter(0.2)),
+        )
+        .draws(6)
+        .seed(0xD5);
+        let runs: Vec<EnsembleRun> = [1usize, 3, 8]
+            .iter()
+            .map(|&t| spec.clone().threads(t).run(&sys, &m, 4, SubLayer::OpFwd))
+            .collect();
+        for r in &runs[1..] {
+            assert_eq!(r.totals, runs[0].totals, "thread count changed the tail");
+            assert_eq!(r.draws, runs[0].draws, "thread count changed a draw");
+        }
+        // Jitter draws actually vary.
+        assert!(runs[0].totals.max > runs[0].totals.min);
+    }
+
+    #[test]
+    fn straggler_rank_rerolls_per_draw() {
+        let spec = EnsembleSpec::new(
+            ScenarioSpec::t3_mca().cluster(ClusterModel::straggler(0, 1.5)),
+        );
+        let ranks: Vec<u64> = (0..16)
+            .map(|i| {
+                let sc = spec.draw_scenario(8, draw_seed(spec.seed, i));
+                match sc.cluster.unwrap().skew {
+                    SkewModel::Straggler { rank, .. } => rank,
+                    other => panic!("skew kind changed: {other:?}"),
+                }
+            })
+            .collect();
+        assert!(ranks.iter().any(|&r| r != ranks[0]), "rank never re-rolled");
+        assert!(ranks.iter().all(|&r| r < 8), "re-rolled rank out of range");
+    }
+
+    #[test]
+    fn request_tail_serves_every_request_and_orders_percentiles() {
+        let a = ArrivalSpec {
+            rate_per_s: 2000.0,
+            requests: 40,
+        };
+        let service = vec![SimTime::ms(1); 3];
+        let r = request_tail(&a, 0x5E, &service);
+        // Every request of every draw lands exactly once.
+        let per_batch_max = BatchPolicy::default().max_requests as u64;
+        assert!(r.batches >= (40 * 3) as u64 / per_batch_max);
+        assert_eq!(r.requests_per_draw, 40);
+        assert!(r.latency.p50 <= r.latency.p99);
+        assert!(r.latency.p99 <= r.latency.p999);
+        assert!(r.latency.p999 <= r.latency.max);
+        // A batch waits for service, so no request finishes instantly.
+        assert!(r.latency.min >= SimTime::ms(1));
+    }
+
+    #[test]
+    fn result_set_cells_are_actual_draws() {
+        let sys = SystemConfig::table1();
+        let m = by_name("Mega-GPT-2").unwrap();
+        let run = EnsembleSpec::new(ScenarioSpec::t3_mca().cluster(ClusterModel::jitter(0.2)))
+            .draws(5)
+            .threads(2)
+            .run(&sys, &m, 4, SubLayer::OpFwd);
+        let rs = run.result_set("table1");
+        assert_eq!(rs.cells.len(), 3);
+        assert_eq!(rs.cells[0].scenario, "T3-MCA@p50");
+        for c in &rs.cells {
+            assert!(
+                run.draws.iter().any(|d| d == &c.m),
+                "percentile cell is not an actual draw"
+            );
+        }
+        // The p50/p99/p999 cells match the summary percentiles.
+        assert_eq!(rs.cells[0].m.total, run.totals.p50);
+        assert_eq!(rs.cells[1].m.total, run.totals.p99);
+        assert_eq!(rs.cells[2].m.total, run.totals.p999);
+    }
+}

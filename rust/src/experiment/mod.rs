@@ -36,10 +36,12 @@
 //! ([`crate::harness`]) are thin layers over this module. See DESIGN.md
 //! ("Execution API") for the full trait/pipeline/preset reference.
 
+pub mod ensemble;
 pub mod executor;
 pub mod grid;
 pub mod results;
 
+pub use ensemble::{ArrivalSpec, EnsembleRun, EnsembleSpec, RequestTail, TailSummary};
 pub use grid::ExperimentSpec;
 pub use results::{Cell, EndToEnd, ResultSet};
 
@@ -132,6 +134,26 @@ pub enum AgMode {
     OverlapConsumer,
 }
 
+/// How the slices of a decomposed collective ([`ScenarioSpec::slices`])
+/// are scheduled against the producer — the per-phase overlap policy
+/// lowered into [`crate::cluster::StartRule`]s by
+/// [`ScenarioSpec::compile`].
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum OverlapPolicy {
+    /// Launch slice `h` the moment its `(h+1)/S` retired-WG prefix of the
+    /// producer completes (T3's per-slice track-and-trigger, generalized
+    /// from the all-to-all machine). Sibling slices serialize on the
+    /// shared ring link.
+    Eager,
+    /// Launch every slice only at the producer's end — the decomposition
+    /// with none of the overlap, isolating the chunking overhead.
+    GemmEnd,
+    /// Launch slices a bucket at a time: each bucket of `per_bucket`
+    /// consecutive slices fires when its *last* member's prefix retires
+    /// (the Megatron-style bucketed overlap — fewer, larger launches).
+    Bucketed { per_bucket: u32 },
+}
+
 /// One composable simulation configuration.
 ///
 /// Build with the preset constructors ([`ScenarioSpec::sequential`],
@@ -180,6 +202,17 @@ pub struct ScenarioSpec {
     /// racks that divide `tp` evenly; flat topologies compile to the
     /// ordinary ring chain.
     pub hier_ar: bool,
+    /// Decompose the all-reduce's collectives into this many slices, each
+    /// launched per [`ScenarioSpec::overlap_policy`] at its retired-WG
+    /// prefix of the producer (1 = undecomposed). Applies to the fused
+    /// all-gather of [`AgMode::FusedTrigger`]/[`AgMode::OverlapConsumer`]
+    /// and to the serialized reduce-scatter; the ideal-overlap,
+    /// hierarchical, and all-to-all paths ignore it (the A2A machine
+    /// slices internally already).
+    pub slices: u32,
+    /// Launch schedule of the decomposed slices (ignored when
+    /// `slices == 1`).
+    pub overlap_policy: OverlapPolicy,
 }
 
 impl ScenarioSpec {
@@ -199,6 +232,8 @@ impl ScenarioSpec {
             trace_bin: None,
             cluster: None,
             hier_ar: false,
+            slices: 1,
+            overlap_policy: OverlapPolicy::Eager,
         }
     }
 
@@ -317,6 +352,20 @@ impl ScenarioSpec {
         self
     }
 
+    /// Decompose the all-reduce's collectives into `n` slices (see
+    /// [`ScenarioSpec::slices`]).
+    pub fn sliced(mut self, n: u32) -> Self {
+        assert!(n >= 1, "slices must be >= 1");
+        self.slices = n;
+        self
+    }
+
+    /// Launch schedule of the decomposed slices (see [`OverlapPolicy`]).
+    pub fn overlap_policy(mut self, policy: OverlapPolicy) -> Self {
+        self.overlap_policy = policy;
+        self
+    }
+
     /// One-line knob summary for `t3 scenarios`.
     pub fn describe(&self) -> String {
         let overlap = match self.overlap {
@@ -359,6 +408,17 @@ impl ScenarioSpec {
         }
         if self.hier_ar {
             s.push_str(" hier-ar");
+        }
+        if self.slices > 1 {
+            s.push_str(&format!(
+                " slices={}:{}",
+                self.slices,
+                match self.overlap_policy {
+                    OverlapPolicy::Eager => "eager".to_string(),
+                    OverlapPolicy::GemmEnd => "gemm-end".to_string(),
+                    OverlapPolicy::Bucketed { per_bucket } => format!("bucket{per_bucket}"),
+                }
+            ));
         }
         if let Some(cm) = &self.cluster {
             s.push(' ');
@@ -413,6 +473,15 @@ impl ScenarioSpec {
         let ar_bytes = shape.out_bytes();
         let gemm_cus = self.gemm_cus.resolve(sys);
         let comm_cus = self.comm_cus.resolve(sys);
+        // Effective decomposition width: only the all-reduce's flat chain
+        // slices (the A2A machine slices internally, the hierarchical
+        // schedule has its own decomposition), and never thinner than one
+        // byte per ring chunk.
+        let slices = if self.collective == CollectiveKind::AllReduce && !self.hier_ar {
+            (self.slices as u64).min((ar_bytes / tp.max(1)).max(1)) as u32
+        } else {
+            1
+        };
         let mut prog = Program::new(self.name.clone(), tp);
 
         if self.collective == CollectiveKind::AllToAll {
@@ -447,6 +516,7 @@ impl ScenarioSpec {
                     PhaseRole::Gemm,
                     StartRule::AtZero,
                     GemmCollective {
+                        slices: 1,
                         plan: plan.clone(),
                         cus: gemm_cus,
                         write_mode: self.write_mode,
@@ -499,11 +569,40 @@ impl ScenarioSpec {
         }
 
         prog = match self.overlap {
+            // Decomposed serialized path: the GEMM reports retired-WG
+            // prefix triggers, and the RS runs as `slices` sub-collectives
+            // launched per the overlap policy — the CommFuse-style
+            // decompose-and-overlap of an otherwise serialized baseline.
+            OverlapMode::Serialized if slices > 1 => {
+                prog = prog.phase(
+                    PhaseRole::Gemm,
+                    StartRule::AtZero,
+                    GemmCollective {
+                        slices,
+                        plan: plan.clone(),
+                        cus: gemm_cus,
+                        write_mode: self.write_mode,
+                    },
+                );
+                for h in 0..slices {
+                    prog = prog.phase(
+                        PhaseRole::ReduceScatter,
+                        slice_rule(self.overlap_policy, h, slices, StartRule::AfterPrev),
+                        RingCollective {
+                            bytes: slice_bytes(ar_bytes, slices, h),
+                            cus: comm_cus,
+                            kind: rs_kind,
+                        },
+                    );
+                }
+                prog
+            }
             OverlapMode::Serialized => prog
                 .phase(
                     PhaseRole::Gemm,
                     StartRule::AtZero,
                     GemmCollective {
+                        slices: 1,
                         plan: plan.clone(),
                         cus: gemm_cus,
                         write_mode: self.write_mode,
@@ -523,6 +622,7 @@ impl ScenarioSpec {
                     PhaseRole::Gemm,
                     StartRule::AtZero,
                     GemmCollective {
+                        slices: 1,
                         plan: plan.clone(),
                         cus: gemm_cus,
                         write_mode: self.write_mode,
@@ -537,18 +637,25 @@ impl ScenarioSpec {
                         kind: rs_kind,
                     },
                 ),
-            OverlapMode::Fused => prog.phase(
-                PhaseRole::FusedGemmRs,
-                StartRule::AtZero,
-                FusedGemmRsCollective {
-                    plan: plan.clone(),
-                    opts: FusedOpts {
-                        policy: self.policy,
-                        write_mode: self.write_mode,
-                        trace_bin: self.trace_bin,
+            OverlapMode::Fused => {
+                // The producer reports slice triggers only when a
+                // decomposed fused AG will consume them below.
+                let ag_sliced = slices > 1
+                    && matches!(self.ag, AgMode::FusedTrigger | AgMode::OverlapConsumer);
+                prog.phase(
+                    PhaseRole::FusedGemmRs,
+                    StartRule::AtZero,
+                    FusedGemmRsCollective {
+                        slices: if ag_sliced { slices } else { 1 },
+                        plan: plan.clone(),
+                        opts: FusedOpts {
+                            policy: self.policy,
+                            write_mode: self.write_mode,
+                            trace_bin: self.trace_bin,
+                        },
                     },
-                },
-            ),
+                )
+            }
         };
 
         // The trailing all-gather. Serialized compositions launch it at
@@ -578,6 +685,28 @@ impl ScenarioSpec {
                         kind: RingKind::AgCu,
                     },
                 )
+            }
+            // Decomposed fused AG: `slices` DMA all-gathers of `1/S` of
+            // the payload each, launched per the overlap policy off the
+            // fused producer's retired-WG prefix triggers. The consumer
+            // GEMM (if any) rides only the last slice — it models the
+            // next sub-layer, which needs the full gathered tensor.
+            AgMode::FusedTrigger | AgMode::OverlapConsumer
+                if slices > 1 && self.overlap == OverlapMode::Fused =>
+            {
+                for h in 0..slices {
+                    let last = h + 1 == slices;
+                    prog = prog.phase(
+                        PhaseRole::AllGather,
+                        slice_rule(self.overlap_policy, h, slices, ag_rule),
+                        FusedAgCollective {
+                            bytes: slice_bytes(ar_bytes, slices, h),
+                            policy: self.policy,
+                            consumer: if last { self.ag_consumer_spec(&plan) } else { None },
+                        },
+                    );
+                }
+                prog
             }
             AgMode::FusedTrigger | AgMode::OverlapConsumer => prog.phase(
                 PhaseRole::AllGather,
@@ -655,11 +784,17 @@ impl ScenarioSpec {
         let (gemm, rs) = match self.overlap {
             OverlapMode::Serialized => {
                 let g = r.phase(PhaseRole::Gemm).expect("serialized has a GEMM phase").end;
+                // Max over *all* RS phases: a decomposed RS runs as
+                // `slices` sub-collectives, and the exposed RS portion is
+                // whatever sticks out past the GEMM.
                 let rs = r
-                    .phase(PhaseRole::ReduceScatter)
-                    .expect("serialized has an RS phase")
-                    .end;
-                (g, rs - g)
+                    .phases
+                    .iter()
+                    .filter(|p| p.role == PhaseRole::ReduceScatter)
+                    .map(|p| p.end)
+                    .max()
+                    .expect("serialized has an RS phase");
+                (g, rs.saturating_sub(g))
             }
             OverlapMode::Ideal => {
                 // Both phases run from t=0: their ends are isolated times.
@@ -681,6 +816,43 @@ impl ScenarioSpec {
             ag: r.total - pre,
             total: r.total,
             counters: r.counters,
+        }
+    }
+}
+
+/// Byte share of slice `h` in an `s`-way split of `bytes` (the remainder
+/// rides the last slice, so the shares always sum to `bytes`).
+fn slice_bytes(bytes: u64, s: u32, h: u32) -> u64 {
+    let base = bytes / s as u64;
+    if h + 1 == s {
+        bytes - base * (s as u64 - 1)
+    } else {
+        base
+    }
+}
+
+/// Lower an [`OverlapPolicy`] into slice `h`'s [`StartRule`]. `at_end` is
+/// the rule the undecomposed phase would have used — the launch point of
+/// the [`OverlapPolicy::GemmEnd`] chain's first slice.
+fn slice_rule(policy: OverlapPolicy, h: u32, s: u32, at_end: StartRule) -> StartRule {
+    match policy {
+        OverlapPolicy::Eager => StartRule::AtSliceTrigger {
+            slice: h,
+            serial: h > 0,
+        },
+        OverlapPolicy::GemmEnd => {
+            if h == 0 {
+                at_end
+            } else {
+                StartRule::AfterPrev
+            }
+        }
+        OverlapPolicy::Bucketed { per_bucket } => {
+            let b = per_bucket.max(1);
+            StartRule::AtSliceTrigger {
+                slice: ((h / b) * b + b - 1).min(s - 1),
+                serial: h > 0,
+            }
         }
     }
 }
@@ -830,6 +1002,33 @@ pub fn registry() -> Vec<ScenarioSpec> {
                 bytes: 1 << 30,
                 at: SimTime::ZERO,
             }))),
+        // -- tail-latency scenarios (decomposed collectives, t3 ensemble) --
+        // The fused AR with its all-gather decomposed into 4 eager slices:
+        // slice h launches at the (h+1)/4 retired-WG prefix of the fused
+        // producer, serializing siblings on the shared ring link.
+        ScenarioSpec::t3_mca().named("T3-AR-Sliced").fused_ag().sliced(4),
+        // ...with Megatron-style bucketed launches: buckets of 2 slices,
+        // each bucket firing at its last member's prefix.
+        ScenarioSpec::t3_mca()
+            .named("T3-AR-Bucketed")
+            .fused_ag()
+            .sliced(4)
+            .overlap_policy(OverlapPolicy::Bucketed { per_bucket: 2 }),
+        // Jittered twins for the tail-latency ensembles: every rank draws
+        // a slowdown in [1, 1.25) from the run seed, so re-seeded draws
+        // sweep the skew distribution (`t3 ensemble`).
+        ScenarioSpec::t3_mca()
+            .named("T3-AR-Fused-Jitter")
+            .fused_ag()
+            .cluster(ClusterModel::jitter(0.25)),
+        ScenarioSpec::t3_mca()
+            .named("T3-AR-Sliced-Jitter")
+            .fused_ag()
+            .sliced(4)
+            .cluster(ClusterModel::jitter(0.25)),
+        // The decomposed serialized baseline: retired-WG-prefix-triggered
+        // RS slices overlap the tail of an otherwise serialized GEMM.
+        ScenarioSpec::sequential().named("Sequential-Sliced").sliced(4),
     ]);
     all
 }
@@ -858,6 +1057,11 @@ pub fn preset(name: &str) -> Option<ScenarioSpec> {
         "a2a-torus" | "torus-a2a" | "torus" => "T3-A2A-Torus",
         "ar-hier" | "hier-ar" | "hierarchical" => "T3-AR-Hierarchical",
         "congested" | "congested-a2a" => "Congested-A2A",
+        "ar-sliced" | "sliced" => "T3-AR-Sliced",
+        "ar-bucketed" | "bucketed" => "T3-AR-Bucketed",
+        "ar-jitter" | "jitter" => "T3-AR-Fused-Jitter",
+        "ar-sliced-jitter" | "sliced-jitter" => "T3-AR-Sliced-Jitter",
+        "seq-sliced" | "sliced-seq" => "Sequential-Sliced",
         other => other,
     }
     .to_string();
@@ -1071,6 +1275,138 @@ mod tests {
             .fused_ag()
             .run(&sys, &m, 8, SubLayer::OpFwd);
         assert!(ideal.total < fused_ag.total);
+    }
+
+    #[test]
+    fn sliced_presets_resolve_and_describe() {
+        let s = preset("ar-sliced").unwrap();
+        assert_eq!(s.name, "T3-AR-Sliced");
+        assert_eq!(s.slices, 4);
+        assert_eq!(s.ag, AgMode::FusedTrigger);
+        assert!(s.describe().contains("slices=4:eager"), "{}", s.describe());
+        let b = preset("ar-bucketed").unwrap();
+        assert_eq!(b.overlap_policy, OverlapPolicy::Bucketed { per_bucket: 2 });
+        assert!(b.describe().contains("slices=4:bucket2"), "{}", b.describe());
+        let j = preset("ar-sliced-jitter").unwrap();
+        assert_eq!(j.slices, 4);
+        assert_eq!(j.cluster, Some(ClusterModel::jitter(0.25)));
+        let sq = preset("seq-sliced").unwrap();
+        assert_eq!(sq.overlap, OverlapMode::Serialized);
+        assert_eq!(sq.slices, 4);
+        // Undecomposed presets stay that way.
+        assert_eq!(preset("ar-fused").unwrap().slices, 1);
+    }
+
+    #[test]
+    fn sliced_fused_ar_compiles_to_slice_phases() {
+        let sys = SystemConfig::table1();
+        let m = by_name("T-NLG").unwrap();
+        let prog = preset("ar-sliced").unwrap().compile(&sys, &m, 8, SubLayer::OpFwd);
+        let roles: Vec<PhaseRole> = prog.phases.iter().map(|p| p.role).collect();
+        assert_eq!(
+            roles,
+            vec![
+                PhaseRole::FusedGemmRs,
+                PhaseRole::AllGather,
+                PhaseRole::AllGather,
+                PhaseRole::AllGather,
+                PhaseRole::AllGather,
+            ]
+        );
+        // Slice h launches at its own trigger; siblings serialize on the
+        // shared ring link.
+        assert_eq!(
+            prog.phases[1].rule,
+            StartRule::AtSliceTrigger { slice: 0, serial: false }
+        );
+        assert_eq!(
+            prog.phases[3].rule,
+            StartRule::AtSliceTrigger { slice: 2, serial: true }
+        );
+    }
+
+    #[test]
+    fn sliced_serialized_compiles_to_rs_slices() {
+        let sys = SystemConfig::table1();
+        let m = by_name("T-NLG").unwrap();
+        let prog = preset("seq-sliced").unwrap().compile(&sys, &m, 8, SubLayer::OpFwd);
+        let roles: Vec<PhaseRole> = prog.phases.iter().map(|p| p.role).collect();
+        assert_eq!(
+            roles,
+            vec![
+                PhaseRole::Gemm,
+                PhaseRole::ReduceScatter,
+                PhaseRole::ReduceScatter,
+                PhaseRole::ReduceScatter,
+                PhaseRole::ReduceScatter,
+                PhaseRole::AllGather,
+            ]
+        );
+        assert_eq!(
+            prog.phases[1].rule,
+            StartRule::AtSliceTrigger { slice: 0, serial: false }
+        );
+        // The trailing ring AG chains off the last RS slice.
+        assert_eq!(prog.phases[5].rule, StartRule::AfterPrev);
+    }
+
+    #[test]
+    fn slice_rule_lowers_each_policy() {
+        let at_end = StartRule::AtPrevTriggers;
+        assert_eq!(
+            slice_rule(OverlapPolicy::Eager, 2, 4, at_end),
+            StartRule::AtSliceTrigger { slice: 2, serial: true }
+        );
+        assert_eq!(slice_rule(OverlapPolicy::GemmEnd, 0, 4, at_end), at_end);
+        assert_eq!(
+            slice_rule(OverlapPolicy::GemmEnd, 3, 4, at_end),
+            StartRule::AfterPrev
+        );
+        // Buckets of 2 in a 4-way split: slices 0-1 fire at slice 1's
+        // prefix, slices 2-3 at slice 3's.
+        let b = OverlapPolicy::Bucketed { per_bucket: 2 };
+        assert_eq!(
+            slice_rule(b, 0, 4, at_end),
+            StartRule::AtSliceTrigger { slice: 1, serial: false }
+        );
+        assert_eq!(
+            slice_rule(b, 1, 4, at_end),
+            StartRule::AtSliceTrigger { slice: 1, serial: true }
+        );
+        assert_eq!(
+            slice_rule(b, 3, 4, at_end),
+            StartRule::AtSliceTrigger { slice: 3, serial: true }
+        );
+    }
+
+    #[test]
+    fn slice_bytes_sum_to_total() {
+        for (bytes, s) in [(1000u64, 3u32), (1 << 20, 4), (7, 4), (8, 8)] {
+            let sum: u64 = (0..s).map(|h| slice_bytes(bytes, s, h)).sum();
+            assert_eq!(sum, bytes, "bytes={bytes} s={s}");
+        }
+        // The remainder rides the last slice.
+        assert_eq!(slice_bytes(1000, 3, 0), 333);
+        assert_eq!(slice_bytes(1000, 3, 2), 334);
+    }
+
+    #[test]
+    fn sliced_fused_ar_preserves_gemm_rs_and_never_loses() {
+        let sys = SystemConfig::table1();
+        let m = by_name("T-NLG").unwrap();
+        let fused = preset("ar-fused").unwrap().run(&sys, &m, 8, SubLayer::OpFwd);
+        let sliced = preset("ar-sliced").unwrap().run(&sys, &m, 8, SubLayer::OpFwd);
+        // Decomposition touches only the AG treatment.
+        assert_eq!(sliced.gemm, fused.gemm);
+        assert_eq!(sliced.rs, fused.rs);
+        // Early slices overlap the producer's tail, so the decomposed AR
+        // is never slower than the single AG launched at the trigger.
+        assert!(
+            sliced.total <= fused.total,
+            "sliced AR {} > unsliced {}",
+            sliced.total,
+            fused.total
+        );
     }
 
     #[test]

@@ -805,6 +805,7 @@ pub fn cluster_report(
         return a2a_cluster_report(sys, model, tp, sub, scenario, cm, plan, shape.out_bytes());
     }
     let coll = FusedGemmRsCollective {
+        slices: 1,
         plan: plan.clone(),
         opts: FusedOpts {
             policy: scenario.policy,

@@ -15,6 +15,9 @@
 //!               [--collective ar|a2a] [--ag ring|skip|fused|consumer]
 //!               [--json] [--trace] [--out file.json]
 //! t3 topologies           (fabric topology catalog, t3::fabric)
+//! t3 ensemble   <preset> [--draws N] [--seed S] [--model <name>] [--tp <n>] [--sublayer <s>]
+//!               [--slices K] [--skew none|straggler:R:F|jitter:A]
+//!               [--arrivals poisson:RATE] [--requests K] [--threads n] [--json]
 //! t3 trace      <preset> [--model <name>] [--tp <n>] [--sublayer <s>]
 //!               [--out file.json] [--diff other-preset] [--json]
 //! t3 figure     <4|6|14|15|16|17|18|19|20|table2|table3> [--csv <dir>]
@@ -161,7 +164,7 @@ fn scenarios_from(s: &str) -> std::result::Result<Vec<ScenarioSpec>, String> {
     Ok(out)
 }
 
-const USAGE: &str = "t3 <config|models|scenarios|topologies|simulate|experiment|cluster|trace|figure|sweep|validate|run> [flags]
+const USAGE: &str = "t3 <config|models|scenarios|topologies|simulate|experiment|cluster|ensemble|trace|figure|sweep|validate|run> [flags]
   t3 config [--future]
   t3 models --list
   t3 scenarios
@@ -176,6 +179,9 @@ const USAGE: &str = "t3 <config|models|scenarios|topologies|simulate|experiment|
              [--topology ring|two-tier-ring|fat-tree|torus|rail]
              [--collective ar|a2a] [--ag ring|skip|fused|consumer]
              [--json] [--trace] [--out trace.json]
+  t3 ensemble <preset> [--draws 64] [--seed S] [--model T-NLG] [--tp 8] [--sublayer fc2]
+              [--slices K] [--skew none|straggler:RANK:FACTOR|jitter:AMPLITUDE]
+              [--arrivals poisson:RATE] [--requests 64] [--threads N] [--json]
   t3 trace <preset> [--model T-NLG] [--tp 8] [--sublayer fc2]
            [--out trace.json] [--diff other-preset] [--json]
   t3 figure <4|6|14|15|16|17|18|19|20|table2|table3|ablation> [--csv results]
@@ -205,6 +211,39 @@ fn json_bundle(parts: &[(&str, &harness::Table)]) -> String {
     w.begin_obj();
     for (key, table) in parts {
         w.key(key).raw_val(&table.to_json());
+    }
+    w.end_obj();
+    w.finish()
+}
+
+/// One JSON document for `t3 ensemble --json`: flat percentile fields
+/// (`p50_ms`/`p99_ms`/`p999_ms`) so CI gates can compare tails across
+/// invocations without walking table structures.
+fn ensemble_json(run: &t3::experiment::EnsembleRun) -> String {
+    let mut w = t3::trace::json::JsonWriter::new();
+    w.begin_obj();
+    w.key("scenario").str_val(&run.scenario);
+    w.key("model").str_val(&run.model);
+    w.key("tp").u64_val(run.tp);
+    w.key("sublayer").str_val(run.sublayer.name());
+    w.key("draws").u64_val(run.draws.len() as u64);
+    w.key("seed").u64_val(run.seed);
+    w.key("p50_ms").f64_val(run.totals.p50.as_ms_f64());
+    w.key("p99_ms").f64_val(run.totals.p99.as_ms_f64());
+    w.key("p999_ms").f64_val(run.totals.p999.as_ms_f64());
+    w.key("min_ms").f64_val(run.totals.min.as_ms_f64());
+    w.key("max_ms").f64_val(run.totals.max.as_ms_f64());
+    w.key("mean_ms").f64_val(run.totals.mean.as_ms_f64());
+    if let Some(r) = &run.requests {
+        w.key("requests");
+        w.begin_obj();
+        w.key("rate_per_s").f64_val(r.rate_per_s);
+        w.key("per_draw").u64_val(r.requests_per_draw as u64);
+        w.key("batches").u64_val(r.batches);
+        w.key("p50_ms").f64_val(r.latency.p50.as_ms_f64());
+        w.key("p99_ms").f64_val(r.latency.p99.as_ms_f64());
+        w.key("p999_ms").f64_val(r.latency.p999.as_ms_f64());
+        w.end_obj();
     }
     w.end_obj();
     w.finish()
@@ -670,6 +709,125 @@ fn main() -> ExitCode {
                         return ExitCode::FAILURE;
                     }
                 }
+            }
+            ExitCode::SUCCESS
+        }
+        "ensemble" => {
+            use t3::cluster::ClusterModel;
+            use t3::experiment::{ArrivalSpec, EnsembleSpec};
+            let Some(which) = pos.first() else {
+                eprintln!("which preset? see `t3 scenarios`\n{USAGE}");
+                return ExitCode::FAILURE;
+            };
+            let Some(mut scenario) = experiment::preset(which) else {
+                eprintln!("unknown scenario '{which}'; see `t3 scenarios`");
+                return ExitCode::FAILURE;
+            };
+            let co = match CommonOpts::parse(&flags) {
+                Ok(c) => c,
+                Err(e) => {
+                    eprintln!("{e}");
+                    return ExitCode::FAILURE;
+                }
+            };
+            let (m, tp, sub) = (co.model.clone(), co.tp, co.sub);
+            if let Some(s) = flags.get("slices") {
+                match s.parse::<u32>() {
+                    Ok(n) if n >= 1 => scenario = scenario.sliced(n),
+                    _ => {
+                        eprintln!("bad --slices '{s}' (expected a positive integer)");
+                        return ExitCode::FAILURE;
+                    }
+                }
+            }
+            // A skew override promotes a mirror-path preset onto the
+            // cluster engine (skew needs per-rank machines to act on).
+            if let Some(spec) = flags.get("skew") {
+                match skew_from(spec) {
+                    Ok(skew) => {
+                        let mut cm =
+                            scenario.cluster.clone().unwrap_or_else(ClusterModel::uniform);
+                        cm.skew = skew;
+                        scenario = scenario.cluster(cm);
+                    }
+                    Err(e) => {
+                        eprintln!("{e}");
+                        return ExitCode::FAILURE;
+                    }
+                }
+            }
+            let mut spec = EnsembleSpec::new(scenario);
+            if let Some(d) = flags.get("draws") {
+                match d.parse::<u32>() {
+                    Ok(n) if n >= 1 => spec = spec.draws(n),
+                    _ => {
+                        eprintln!("bad --draws '{d}' (expected a positive integer)");
+                        return ExitCode::FAILURE;
+                    }
+                }
+            }
+            if let Some(s) = flags.get("seed") {
+                match s.parse::<u64>() {
+                    Ok(n) => spec = spec.seed(n),
+                    Err(_) => {
+                        eprintln!("bad --seed '{s}' (expected a number)");
+                        return ExitCode::FAILURE;
+                    }
+                }
+            }
+            if let Some(t) = flags.get("threads") {
+                match t.parse::<usize>() {
+                    Ok(n) if n >= 1 => spec = spec.threads(n),
+                    _ => {
+                        eprintln!("bad --threads '{t}' (expected a positive integer)");
+                        return ExitCode::FAILURE;
+                    }
+                }
+            }
+            match flags.get("arrivals") {
+                None if flags.contains_key("requests") => {
+                    eprintln!("--requests requires --arrivals");
+                    return ExitCode::FAILURE;
+                }
+                None => {}
+                Some(s) => {
+                    let rate = match s.split(':').collect::<Vec<_>>().as_slice() {
+                        ["poisson", rate] => match rate.parse::<f64>() {
+                            Ok(r) if r.is_finite() && r > 0.0 => r,
+                            _ => {
+                                eprintln!(
+                                    "bad --arrivals '{s}' (poisson:RATE, RATE requests/s > 0)"
+                                );
+                                return ExitCode::FAILURE;
+                            }
+                        },
+                        _ => {
+                            eprintln!("bad --arrivals '{s}' (expected poisson:RATE)");
+                            return ExitCode::FAILURE;
+                        }
+                    };
+                    let requests = match flags.get("requests") {
+                        Some(v) => match v.parse::<u32>() {
+                            Ok(n) if n >= 1 => n,
+                            _ => {
+                                eprintln!("bad --requests '{v}' (expected a positive integer)");
+                                return ExitCode::FAILURE;
+                            }
+                        },
+                        None => 64,
+                    };
+                    spec = spec.arrivals(ArrivalSpec {
+                        rate_per_s: rate,
+                        requests,
+                    });
+                }
+            }
+            let sys = SystemConfig::table1();
+            let run = spec.run(&sys, &m, tp, sub);
+            if co.output.json {
+                println!("{}", ensemble_json(&run));
+            } else {
+                println!("{}", run.table().render());
             }
             ExitCode::SUCCESS
         }

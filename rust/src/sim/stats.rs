@@ -98,8 +98,20 @@ impl Histogram {
     }
 
     /// Value below which `q` (0..=1) of the samples fall (bucket upper edge).
+    ///
+    /// Nearest-rank over bucket edges: the target rank is `ceil(q * total)`,
+    /// so `q = 0` (and an empty histogram) return 0 rather than the first
+    /// bucket edge. The `overflow` bucket participates in the cumulative
+    /// walk; a quantile that lands in overflow saturates to the maximum
+    /// tracked edge `buckets.len() * bucket_width` (the histogram does not
+    /// retain overflow sample values, so that edge is the tightest bound it
+    /// can report — callers needing exact tails keep raw samples and use
+    /// [`percentile_sorted`]).
     pub fn quantile(&self, q: f64) -> f64 {
-        let target = (q.clamp(0.0, 1.0) * self.total() as f64) as u64;
+        let target = (q.clamp(0.0, 1.0) * self.total() as f64).ceil() as u64;
+        if target == 0 {
+            return 0.0;
+        }
         let mut seen = 0;
         for (i, &c) in self.buckets.iter().enumerate() {
             seen += c;
@@ -107,8 +119,32 @@ impl Histogram {
                 return (i as f64 + 1.0) * self.bucket_width;
             }
         }
+        // Target rank falls in the overflow bucket: saturate.
         self.buckets.len() as f64 * self.bucket_width
     }
+}
+
+/// Exact nearest-rank percentile of a pre-sorted ascending sample slice.
+///
+/// Returns the smallest sample `x` such that at least `ceil(q * n)` samples
+/// are `<= x` (the classical nearest-rank definition, which for `q = 0.5`
+/// over an odd count returns the true median sample). Degenerate inputs:
+/// empty slice ⇒ 0.0; `q <= 0` ⇒ the minimum sample; `q >= 1` ⇒ the maximum.
+///
+/// The caller is responsible for sorting; debug builds assert order so a
+/// forgotten sort fails loudly in tests rather than skewing tails silently.
+pub fn percentile_sorted(sorted: &[f64], q: f64) -> f64 {
+    if sorted.is_empty() {
+        return 0.0;
+    }
+    debug_assert!(
+        sorted.windows(2).all(|w| w[0] <= w[1]),
+        "percentile_sorted requires an ascending slice"
+    );
+    let n = sorted.len();
+    let rank = (q.clamp(0.0, 1.0) * n as f64).ceil() as usize;
+    let idx = rank.saturating_sub(1).min(n - 1);
+    sorted[idx]
 }
 
 /// Accumulates a quantity (e.g., bytes) into fixed time bins; emitted as the
@@ -223,6 +259,69 @@ mod tests {
         assert!((h.quantile(0.5) - 5.0).abs() < 1e-9);
         h.add(99.0);
         assert_eq!(h.overflow, 1);
+    }
+
+    #[test]
+    fn quantile_edge_cases() {
+        // Empty histogram: every quantile is 0, not the first bucket edge.
+        let h = Histogram::new(1.0, 10);
+        assert_eq!(h.quantile(0.0), 0.0);
+        assert_eq!(h.quantile(0.5), 0.0);
+        assert_eq!(h.quantile(1.0), 0.0);
+
+        // Non-empty: q=0 is 0, q=1 is the edge covering the max sample.
+        let mut h = Histogram::new(1.0, 10);
+        for x in 0..10 {
+            h.add(x as f64 + 0.5);
+        }
+        assert_eq!(h.quantile(0.0), 0.0);
+        assert!((h.quantile(1.0) - 10.0).abs() < 1e-9);
+        // Smallest nonzero quantile resolves to the first occupied edge.
+        assert!((h.quantile(0.01) - 1.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn quantile_counts_overflow() {
+        // 8 tracked samples + 2 overflow: p50 stays in-range, p99/p100
+        // land in overflow and saturate to the max tracked edge.
+        let mut h = Histogram::new(1.0, 10);
+        for x in 0..8 {
+            h.add(x as f64 + 0.5);
+        }
+        h.add(50.0);
+        h.add(60.0);
+        assert_eq!(h.total(), 10);
+        assert_eq!(h.overflow, 2);
+        assert!((h.quantile(0.5) - 5.0).abs() < 1e-9);
+        assert!((h.quantile(0.8) - 8.0).abs() < 1e-9);
+        assert!((h.quantile(0.99) - 10.0).abs() < 1e-9);
+        assert!((h.quantile(1.0) - 10.0).abs() < 1e-9);
+
+        // All-overflow histogram: every nonzero quantile saturates.
+        let mut h = Histogram::new(1.0, 4);
+        h.add(100.0);
+        h.add(200.0);
+        assert_eq!(h.overflow, 2);
+        assert_eq!(h.quantile(0.0), 0.0);
+        assert!((h.quantile(0.5) - 4.0).abs() < 1e-9);
+        assert!((h.quantile(1.0) - 4.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn percentile_sorted_nearest_rank() {
+        assert_eq!(percentile_sorted(&[], 0.5), 0.0);
+        let one = [7.0];
+        assert_eq!(percentile_sorted(&one, 0.0), 7.0);
+        assert_eq!(percentile_sorted(&one, 1.0), 7.0);
+        let xs: Vec<f64> = (1..=100).map(|x| x as f64).collect();
+        assert_eq!(percentile_sorted(&xs, 0.5), 50.0);
+        assert_eq!(percentile_sorted(&xs, 0.99), 99.0);
+        assert_eq!(percentile_sorted(&xs, 0.999), 100.0);
+        assert_eq!(percentile_sorted(&xs, 0.0), 1.0);
+        assert_eq!(percentile_sorted(&xs, 1.0), 100.0);
+        // Odd count: q=0.5 is the true median sample.
+        let odd = [1.0, 2.0, 3.0, 4.0, 5.0];
+        assert_eq!(percentile_sorted(&odd, 0.5), 3.0);
     }
 
     #[test]

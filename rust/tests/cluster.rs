@@ -629,6 +629,7 @@ fn tp1_cluster_target_degrades_to_the_loopback_mirror() {
     let shape = sublayer_gemm(&m, 1, SubLayer::OpFwd);
     let plan = StagePlan::new(shape, Tiling::default(), &s.gpu);
     let coll = GemmCollective {
+        slices: 1,
         plan,
         cus: 80,
         write_mode: WriteMode::BypassLlc,

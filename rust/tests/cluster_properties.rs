@@ -471,6 +471,7 @@ fn unified_execute_path_bit_matches_legacy_entry_points() {
                 // Isolated per-rank GEMMs.
                 let legacy = run_gemm_cluster(&s, &plan, 80, WriteMode::BypassLlc, tp, &model);
                 let coll = GemmCollective {
+                    slices: 1,
                     plan: plan.clone(),
                     cus: 80,
                     write_mode: WriteMode::BypassLlc,
@@ -508,6 +509,7 @@ fn unified_execute_path_bit_matches_legacy_entry_points() {
                 // The fused GEMM-RS.
                 let legacy = run_fused_cluster(&s, &plan, tp, &opts, &model, order);
                 let coll = FusedGemmRsCollective {
+                    slices: 1,
                     plan: plan.clone(),
                     opts: opts.clone(),
                 };
@@ -587,6 +589,7 @@ fn execute_composes_serialized_phases_like_the_legacy_pipeline() {
                 PhaseRole::Gemm,
                 StartRule::AtZero,
                 GemmCollective {
+                    slices: 1,
                     plan: plan.clone(),
                     cus: 80,
                     write_mode: WriteMode::ThroughLlc,
@@ -830,6 +833,7 @@ fn degenerate_fabric_bit_matches_the_dedicated_link_engine() {
             }
             1 => {
                 let coll = FusedGemmRsCollective {
+                    slices: 1,
                     plan: plan.clone(),
                     opts: opts.clone(),
                 };
@@ -1003,6 +1007,7 @@ fn fast_scheduler_bit_matches_the_oracle_everywhere() {
                 let tp = rng.range(2, 5);
                 let model = fuzz_model_any(rng, tp);
                 let coll = FusedGemmRsCollective {
+                    slices: 1,
                     plan: plan.clone(),
                     opts: opts.clone(),
                 };
@@ -1132,5 +1137,43 @@ fn sharded_driver_is_partition_and_thread_count_invariant() {
                 assert_eq!(want, results(nodes), "a partition/thread count changed a result");
             }
         }
+    });
+}
+
+/// **Ensemble determinism** — over the whole fuzzed scenario space
+/// (fused/sequential overlap, sliced or not, every skew x topology from
+/// `fuzz_model`), the same root seed produces bit-identical draws and
+/// percentile triples for any worker count: the draw seeds are a pure
+/// function of (root, index), and the executor writes index-ordered
+/// slots, so the shard order is never observable.
+#[test]
+fn prop_ensemble_is_deterministic_over_scenario_space() {
+    let m = t3::models::by_name("Mega-GPT-2").unwrap();
+    forall(12, |rng| {
+        let tp = *rng.choose(&[4u64, 8]);
+        let base = if rng.chance(0.5) {
+            t3::experiment::ScenarioSpec::t3_mca().fused_ag()
+        } else {
+            t3::experiment::ScenarioSpec::sequential()
+        };
+        let base = if rng.chance(0.5) {
+            base.sliced(rng.range(2, 5) as u32)
+        } else {
+            base
+        };
+        let scenario = base.cluster(fuzz_model(rng, tp));
+        let spec = t3::experiment::EnsembleSpec::new(scenario)
+            .draws(rng.range(2, 6) as u32)
+            .seed(rng.next_u64());
+        let a = spec
+            .clone()
+            .threads(1)
+            .run(&sys(), &m, tp, t3::models::SubLayer::OpFwd);
+        let b = spec
+            .clone()
+            .threads(rng.range(2, 9) as usize)
+            .run(&sys(), &m, tp, t3::models::SubLayer::OpFwd);
+        assert_eq!(a.draws, b.draws, "worker count changed a draw");
+        assert_eq!(a.totals, b.totals, "worker count changed the tail");
     });
 }

@@ -7,8 +7,9 @@
 //! * **Passivity** — tracing is observational: the traced measurement is
 //!   bit-identical to the untraced one.
 //! * **Overlap semantics** — the trace-derived overlap fraction is 0 for
-//!   every `Sequential*` preset and strictly positive for the fused
-//!   all-reduce presets; exposed-communication time from the trace equals
+//!   every monolithic `Sequential*` preset, strictly positive for the
+//!   fused all-reduce presets and for `Sequential-Sliced` (whose
+//!   decomposed RS launches mid-GEMM); exposed-communication time equals
 //!   `total − gemm` in exact `SimTime` arithmetic (non-consumer presets;
 //!   the consumer's trailing GEMM is charged to the next sub-layer, so
 //!   its trace legitimately extends past the measured total).
@@ -69,13 +70,22 @@ fn every_registry_preset_emits_a_perfetto_trace_with_correct_overlap() {
             assert!(tm.exposed_comm >= meas.total - meas.gemm, "{name}");
         }
 
-        // Overlap fraction: zero for every serialized composition,
-        // strictly positive for the fused all-reduce presets.
+        // Overlap fraction: zero for every monolithic serialized
+        // composition, strictly positive for the fused all-reduce presets
+        // — and for the *sliced* serialized preset, whose RS slices launch
+        // at retired-WG prefixes inside the GEMM by design.
         if name.starts_with("Sequential") {
-            assert_eq!(
-                tm.overlap_fraction, 0.0,
-                "{name}: serialized composition must expose all communication"
-            );
+            if name.contains("Sliced") {
+                assert!(
+                    tm.overlap_fraction > 0.0,
+                    "{name}: eager RS slices must overlap the GEMM"
+                );
+            } else {
+                assert_eq!(
+                    tm.overlap_fraction, 0.0,
+                    "{name}: serialized composition must expose all communication"
+                );
+            }
         }
         if name == "T3-AR-Fused" || name == "T3-AR-Consumer" || name == "T3-A2A-Fused" {
             assert!(
