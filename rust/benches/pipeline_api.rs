@@ -53,8 +53,9 @@ fn main() {
         };
         let exec_opts = ExecOpts {
             target: ExecTarget::Mirror,
-            trace: false,
+            sink: t3::trace::SinkMode::Off,
             interleave: Interleave::Ascending,
+            oracle: false,
         };
 
         // Warm both paths once (page-in, allocator steady state).

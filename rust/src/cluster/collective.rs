@@ -42,7 +42,7 @@ use crate::gemm::traffic::WriteMode;
 use crate::gemm::StagePlan;
 use crate::sim::stats::DramCounters;
 use crate::sim::time::SimTime;
-use crate::trace::{FabricLinkTrace, RankTrace};
+use crate::trace::{FabricLinkTrace, RankTrace, SinkMode};
 
 use super::engine::{drive_mapped_oracle, drive_mapped_sharded, shard_ranks, Interleave, RankNode};
 use super::topology::{ClusterModel, TopologySpec};
@@ -208,7 +208,29 @@ pub fn run_collective_with_links<C: Collective>(
     traced: bool,
     order: Interleave,
 ) -> (Vec<C::Out>, Vec<FabricLinkTrace>) {
-    run_collective_impl(sys, coll, tp, starts, target, traced, order, Driver::Sharded)
+    let sink = if traced { SinkMode::Full } else { SinkMode::Off };
+    run_collective_impl(sys, coll, tp, starts, target, sink, order, Driver::Sharded)
+}
+
+/// [`run_collective_with_links`] with an explicit trace [`SinkMode`] and
+/// driver choice. [`SinkMode::Metrics`] streams every rank's spans and
+/// dependency edges into per-lane aggregates as they land (O(ranks + links)
+/// memory — the TP-1024 profiling path); `oracle` selects the retained
+/// legacy rescan scheduler instead of the sharded calendar queue (they are
+/// bit-identical; the pair is the profiler's determinism cross-check).
+#[allow(clippy::too_many_arguments)]
+pub fn run_collective_sink<C: Collective>(
+    sys: &SystemConfig,
+    coll: &C,
+    tp: u64,
+    starts: &[SimTime],
+    target: &ExecTarget,
+    sink: SinkMode,
+    order: Interleave,
+    oracle: bool,
+) -> (Vec<C::Out>, Vec<FabricLinkTrace>) {
+    let driver = if oracle { Driver::Oracle } else { Driver::Sharded };
+    run_collective_impl(sys, coll, tp, starts, target, sink, order, driver)
 }
 
 /// [`run_collective`] driven by the retained legacy scheduler
@@ -225,7 +247,8 @@ pub fn run_collective_oracle<C: Collective>(
     traced: bool,
     order: Interleave,
 ) -> Vec<C::Out> {
-    run_collective_impl(sys, coll, tp, starts, target, traced, order, Driver::Oracle).0
+    let sink = if traced { SinkMode::Full } else { SinkMode::Off };
+    run_collective_impl(sys, coll, tp, starts, target, sink, order, Driver::Oracle).0
 }
 
 /// Which scheduler advances the cluster's rank machines.
@@ -244,7 +267,7 @@ fn run_collective_impl<C: Collective>(
     tp: u64,
     starts: &[SimTime],
     target: &ExecTarget,
-    traced: bool,
+    sink: SinkMode,
     order: Interleave,
     driver: Driver,
 ) -> (Vec<C::Out>, Vec<FabricLinkTrace>) {
@@ -263,9 +286,7 @@ fn run_collective_impl<C: Collective>(
                 link: sys.link.clone(),
             };
             let mut node = coll.build(&ctx);
-            if traced {
-                node.enable_trace(0);
-            }
+            node.enable_trace_mode(0, sink);
             let mut msgs = Vec::new();
             while node.step(&mut msgs) {
                 for m in msgs.drain(..) {
@@ -296,9 +317,7 @@ fn run_collective_impl<C: Collective>(
                         link: links[d as usize].clone(),
                     };
                     let mut node = coll.build(&ctx);
-                    if traced {
-                        node.enable_trace(d);
-                    }
+                    node.enable_trace_mode(d, sink);
                     node
                 })
                 .collect();
@@ -308,7 +327,7 @@ fn run_collective_impl<C: Collective>(
             // loopback mirror (self-delivery), no fabric to route through.
             let net = match &topology {
                 TopologySpec::Fabric(spec) if n > 1 => {
-                    let net = Arc::new(Mutex::new(Network::new(spec, n, &sys.link, traced)));
+                    let net = Arc::new(Mutex::new(Network::with_mode(spec, n, &sys.link, sink)));
                     for (r, node) in nodes.iter_mut().enumerate() {
                         node.attach_port(EgressPort::fabric(Arc::clone(&net), r, dest[r]));
                     }

@@ -19,18 +19,25 @@
 //!   so no shifting), and returns one [`RunReport`].
 //!
 //! Trace capture is an [`ExecOpts`] field, not a separate entry point:
-//! `RunReport::trace` is `Some` **iff** `ExecOpts::trace` was set — a
+//! `RunReport::trace` is `Some` **iff** [`ExecOpts::sink`] was enabled — a
 //! traced run that recorded nothing still yields an (empty) timeline per
 //! rank, so "tracing off" and "empty trace" are distinguishable states.
-//! [`crate::experiment::ScenarioSpec::compile`] produces these programs;
-//! the legacy `run_*_cluster{,_traced}` functions are deprecated shims.
+//! [`SinkMode::Metrics`] streams spans and dependency edges into per-lane
+//! aggregates instead of keeping them (O(ranks + links) memory — the
+//! TP-1024 profiling path), with per-lane totals bit-identical to the full
+//! sink's. [`crate::experiment::ScenarioSpec::compile`] produces these
+//! programs; the legacy `run_*_cluster{,_traced}` functions are deprecated
+//! shims.
 
 use crate::config::SystemConfig;
 use crate::sim::stats::DramCounters;
 use crate::sim::time::SimTime;
-use crate::trace::{merge_fabric_links, FabricLinkTrace, RankTrace, Trace};
+use crate::trace::{
+    merge_fabric_links, DepEdge, DepKind, FabricLinkTrace, RankTrace, SinkMode, Trace, NO_LINK,
+    UNKNOWN_RANK,
+};
 
-use super::collective::{run_collective_with_links, Collective, ExecTarget, RankOutcome};
+use super::collective::{run_collective_sink, Collective, ExecTarget, RankOutcome};
 use super::engine::Interleave;
 
 /// How a phase's per-rank start times derive from the phases before it.
@@ -77,14 +84,16 @@ pub enum PhaseRole {
 /// Object-safe erasure of [`Collective`] for pipeline storage. Blanket-
 /// implemented for every `Collective`, so user code never sees it.
 trait DynCollective: Send + Sync {
+    #[allow(clippy::too_many_arguments)]
     fn run_phase(
         &self,
         sys: &SystemConfig,
         tp: u64,
         starts: &[SimTime],
         target: &ExecTarget,
-        traced: bool,
+        sink: SinkMode,
         order: Interleave,
+        oracle: bool,
     ) -> (Vec<RankOutcome>, Vec<FabricLinkTrace>);
 }
 
@@ -98,12 +107,35 @@ where
         tp: u64,
         starts: &[SimTime],
         target: &ExecTarget,
-        traced: bool,
+        sink: SinkMode,
         order: Interleave,
+        oracle: bool,
     ) -> (Vec<RankOutcome>, Vec<FabricLinkTrace>) {
         let (mut outs, links) =
-            run_collective_with_links(sys, self, tp, starts, target, traced, order);
-        (outs.iter_mut().map(|o| self.outcome(o)).collect(), links)
+            run_collective_sink(sys, self, tp, starts, target, sink, order, oracle);
+        let mut outcomes: Vec<RankOutcome> = outs.iter_mut().map(|o| self.outcome(o)).collect();
+        if sink == SinkMode::Full {
+            // Sender-side Msg edges record an unknown destination (every
+            // machine has exactly one egress peer, which only the driver
+            // knows); resolve it from this phase's destination map.
+            let n = outcomes.len();
+            let dest: Vec<usize> = match target {
+                ExecTarget::Mirror => vec![0],
+                ExecTarget::Cluster(_) => self
+                    .dest_map(tp)
+                    .unwrap_or_else(|| (0..n).map(|i| (i + n - 1) % n).collect()),
+            };
+            for (r, o) in outcomes.iter_mut().enumerate() {
+                if let Some(tl) = &mut o.timeline {
+                    for e in &mut tl.edges {
+                        if e.kind == DepKind::Msg && e.dst_rank == UNKNOWN_RANK {
+                            e.dst_rank = dest[r] as u64;
+                        }
+                    }
+                }
+            }
+        }
+        (outcomes, links)
     }
 }
 
@@ -168,12 +200,19 @@ impl Program {
 #[derive(Debug, Clone)]
 pub struct ExecOpts {
     pub target: ExecTarget,
-    /// Record per-rank timelines. Purely observational: traced runs are
-    /// bit-identical to untraced ones in every simulated quantity.
-    pub trace: bool,
+    /// Trace sink mode. [`SinkMode::Off`] records nothing;
+    /// [`SinkMode::Full`] keeps every span, instant, and dependency edge;
+    /// [`SinkMode::Metrics`] streams them into per-lane aggregates with
+    /// O(ranks + links) memory. Purely observational: every mode is
+    /// bit-identical to `Off` in every simulated quantity.
+    pub sink: SinkMode,
     /// Slot order of the cluster event loop (results are invariant; the
     /// knob exists so tests can prove it).
     pub interleave: Interleave,
+    /// Drive cluster ranks with the retained legacy full-rescan scheduler
+    /// instead of the sharded calendar queue. Bit-identical results — the
+    /// pair is the profiler's determinism cross-check.
+    pub oracle: bool,
 }
 
 impl ExecOpts {
@@ -181,8 +220,9 @@ impl ExecOpts {
     pub fn mirror() -> Self {
         ExecOpts {
             target: ExecTarget::Mirror,
-            trace: false,
+            sink: SinkMode::Off,
             interleave: Interleave::Ascending,
+            oracle: false,
         }
     }
 
@@ -190,15 +230,33 @@ impl ExecOpts {
     pub fn cluster(model: super::topology::ClusterModel) -> Self {
         ExecOpts {
             target: ExecTarget::Cluster(model),
-            trace: false,
+            sink: SinkMode::Off,
             interleave: Interleave::Ascending,
+            oracle: false,
         }
     }
 
-    /// Toggle timeline capture (chainable).
+    /// Toggle full timeline capture (chainable).
     pub fn traced(mut self, on: bool) -> Self {
-        self.trace = on;
+        self.sink = if on { SinkMode::Full } else { SinkMode::Off };
         self
+    }
+
+    /// Select an explicit trace sink mode (chainable).
+    pub fn sink(mut self, mode: SinkMode) -> Self {
+        self.sink = mode;
+        self
+    }
+
+    /// Drive with the legacy oracle scheduler (chainable).
+    pub fn oracle(mut self, on: bool) -> Self {
+        self.oracle = on;
+        self
+    }
+
+    /// Whether any trace sink is recording.
+    pub fn is_traced(&self) -> bool {
+        self.sink.enabled()
     }
 }
 
@@ -210,6 +268,9 @@ pub struct PhaseReport {
     pub start: SimTime,
     /// Latest per-rank accounted end (absolute).
     pub end: SimTime,
+    /// Per-rank start times, rank order (what the phase's [`StartRule`]
+    /// resolved to — the causal profiler's phase-level dependency record).
+    pub starts: Vec<SimTime>,
     /// Per-rank accounted ends, rank order.
     pub ends: Vec<SimTime>,
     /// Per-rank trigger times (== ends for collectives without an early
@@ -234,8 +295,8 @@ pub struct RunReport {
     /// Rank-0 DRAM counters summed over phases (consumer-GEMM traffic of a
     /// fused AG is already uncharged — it belongs to the next sub-layer).
     pub counters: DramCounters,
-    /// Per-rank merged timelines; `Some` **iff** [`ExecOpts::trace`] was
-    /// set (an empty trace is still `Some` — the state is explicit).
+    /// Per-rank merged timelines; `Some` **iff** [`ExecOpts::sink`] was
+    /// enabled (an empty trace is still `Some` — the state is explicit).
     pub trace: Option<Trace>,
 }
 
@@ -279,7 +340,8 @@ pub fn execute(sys: &SystemConfig, prog: &Program, opts: &ExecOpts) -> RunReport
     let mut phases = Vec::with_capacity(prog.phases.len());
     let mut total = SimTime::ZERO;
 
-    for ph in &prog.phases {
+    let traced = opts.sink.enabled();
+    for (phase_idx, ph) in prog.phases.iter().enumerate() {
         let starts: Vec<SimTime> = match ph.rule {
             StartRule::AtZero => vec![SimTime::ZERO; nranks],
             StartRule::AfterPrev => prev_ends.clone(),
@@ -321,8 +383,9 @@ pub fn execute(sys: &SystemConfig, prog: &Program, opts: &ExecOpts) -> RunReport
             prog.tp,
             &starts,
             &opts.target,
-            opts.trace,
+            opts.sink,
             opts.interleave,
+            opts.oracle,
         );
         debug_assert_eq!(outcomes.len(), nranks);
         // Each phase gets a fresh Network (phases sequence through start
@@ -338,11 +401,32 @@ pub fn execute(sys: &SystemConfig, prog: &Program, opts: &ExecOpts) -> RunReport
             .map(|o| o.gemm_end)
             .max()
             .expect("at least one rank");
-        if opts.trace {
+        if traced {
+            // The phase's `StartRule` is itself a dependency: record it as
+            // a zero-length PhaseStart edge at each rank's resolved start,
+            // anchoring the critical-path walk across phase boundaries.
+            // (`AtZero` and first phases depend on nothing.)
+            if phase_idx > 0 && !matches!(ph.rule, StartRule::AtZero) {
+                for (r, tl) in timelines.iter_mut().enumerate() {
+                    let at = starts[r];
+                    tl.edges.push(DepEdge {
+                        kind: DepKind::PhaseStart,
+                        src_rank: r as u64,
+                        dst_rank: r as u64,
+                        src_at: at,
+                        granted: at,
+                        dst_at: at,
+                        bytes: 0,
+                        cong: SimTime::ZERO,
+                        link: NO_LINK,
+                    });
+                }
+            }
             for (r, o) in outcomes.iter_mut().enumerate() {
                 // Explicit trace state: a traced phase that recorded no
                 // spans still contributes an (empty) timeline.
-                let tl = o.timeline.take().unwrap_or_else(|| RankTrace::new(r as u64));
+                let mut tl = o.timeline.take().unwrap_or_else(|| RankTrace::new(r as u64));
+                tl.seal_phase(phase_idx as u32);
                 timelines[r].merge(tl);
             }
         }
@@ -351,6 +435,7 @@ pub fn execute(sys: &SystemConfig, prog: &Program, opts: &ExecOpts) -> RunReport
             role: ph.role,
             start: starts.iter().copied().max().expect("at least one rank"),
             end,
+            starts: starts.clone(),
             ends: ends.clone(),
             triggers: triggers.clone(),
             gemm_end,
@@ -373,7 +458,7 @@ pub fn execute(sys: &SystemConfig, prog: &Program, opts: &ExecOpts) -> RunReport
         total,
         phases,
         counters,
-        trace: opts.trace.then(|| Trace {
+        trace: traced.then(|| Trace {
             name: prog.name.clone(),
             ranks: timelines,
             links: fabric_links,

@@ -48,7 +48,7 @@ use crate::hw::hbm::{GroupId, TrafficClass, Txn, TxnKind};
 use crate::hw::mc::{intensity_class, Stream};
 use crate::sim::stats::DramCounters;
 use crate::sim::time::SimTime;
-use crate::trace::{InstantKind, Lane, RankTrace, SpanLabel};
+use crate::trace::{InstantKind, Lane, RankTrace, SinkMode, SpanLabel};
 
 use super::{Ev, GroupTag, Runner, PACE_BATCH};
 
@@ -230,6 +230,12 @@ impl AllGatherRank {
         self.r.enable_trace(rank);
     }
 
+    /// [`AllGatherRank::enable_trace`] with an explicit [`SinkMode`]
+    /// (metrics mode folds spans into per-lane aggregates as they land).
+    pub fn enable_trace_with(&mut self, rank: u64, mode: SinkMode) {
+        self.r.enable_trace_with(rank, mode);
+    }
+
     /// Rebind this rank's egress (fabric integration). Must be called
     /// before the first event is processed.
     pub fn attach_port(&mut self, port: crate::fabric::EgressPort) {
@@ -273,12 +279,12 @@ impl AllGatherRank {
         let (in_start, in_end) = self.in_windows[fs as usize - 1];
         let dur = in_end - in_start;
         let w = if dur.is_zero() {
-            self.r.link_out.reserve(t, self.chunk)
+            self.r.egress(t, self.chunk, SpanLabel::Chunk(fs))
         } else {
             let feed_gbps = self.chunk as f64 / dur.as_secs_f64() / 1e9;
-            self.r.link_out.reserve_rate_limited(t, self.chunk, feed_gbps)
+            self.r
+                .egress_rate_limited(t, self.chunk, feed_gbps, SpanLabel::Chunk(fs))
         };
-        self.r.sink.span(Lane::LinkEgress, w.start, w.done, self.chunk, SpanLabel::Chunk(fs));
         self.r.q.schedule(w.done, Ev::EgressDone { pos: fs });
         out.push(AgMsg {
             step: fs,
@@ -344,10 +350,7 @@ impl AllGatherRank {
                     TrafficClass::AgRead,
                     GroupTag::DmaReads(0),
                 );
-                let w = self.r.link_out.reserve(t, self.chunk);
-                self.r
-                    .sink
-                    .span(Lane::LinkEgress, w.start, w.done, self.chunk, SpanLabel::Chunk(0));
+                let w = self.r.egress(t, self.chunk, SpanLabel::Chunk(0));
                 self.r.q.schedule(w.done, Ev::EgressDone { pos: 0 });
                 out.push(AgMsg {
                     step: 0,

@@ -46,7 +46,7 @@ use crate::hw::hbm::{GroupId, TrafficClass, Txn, TxnKind};
 use crate::hw::mc::{intensity_class, Stream};
 use crate::sim::stats::DramCounters;
 use crate::sim::time::SimTime;
-use crate::trace::{InstantKind, Lane, RankTrace, SpanLabel};
+use crate::trace::{DepKind, InstantKind, Lane, RankTrace, SinkMode, SpanLabel};
 
 use super::{Ev, GroupTag, Runner, PACE_BATCH};
 
@@ -248,6 +248,12 @@ impl AllToAllRank {
         self.r.enable_trace(rank);
     }
 
+    /// [`AllToAllRank::enable_trace`] with an explicit [`SinkMode`]
+    /// (metrics mode folds spans into per-lane aggregates as they land).
+    pub fn enable_trace_with(&mut self, rank: u64, mode: SinkMode) {
+        self.r.enable_trace_with(rank, mode);
+    }
+
     /// Rebind this rank's egress (fabric integration). Must be called
     /// before the first event is processed.
     pub fn attach_port(&mut self, port: crate::fabric::EgressPort) {
@@ -292,6 +298,7 @@ impl AllToAllRank {
             // retiring — completion and DMA trigger coincide.
             self.r.sink.instant(Lane::Tracker, t, InstantKind::TrackerDone(h));
             self.r.sink.instant(Lane::Tracker, t, InstantKind::Trigger(h));
+            self.r.note_local_edge(DepKind::Trigger, t, t);
             // DMA-read the slice via the comm stream; egress in parallel
             // (pipelined, as in the fused RS/AG).
             self.r.submit_tagged(
@@ -301,10 +308,7 @@ impl AllToAllRank {
                 TrafficClass::AgRead,
                 GroupTag::DmaReads(h),
             );
-            let w = self.r.link_out.reserve(t, self.chunk);
-            self.r
-                .sink
-                .span(Lane::LinkEgress, w.start, w.done, self.chunk, SpanLabel::Chunk(h));
+            let w = self.r.egress(t, self.chunk, SpanLabel::Chunk(h));
             self.r.q.schedule(w.done, Ev::EgressDone { pos: h });
             out.push(A2aMsg {
                 slice: h,
@@ -325,14 +329,12 @@ impl AllToAllRank {
         let p = self.pending_fwd.swap_remove(i);
         let dur = p.in_end - p.in_start;
         let w = if dur.is_zero() {
-            self.r.link_out.reserve(t, self.chunk)
+            self.r.egress(t, self.chunk, SpanLabel::Chunk(p.slice))
         } else {
             let feed_gbps = self.chunk as f64 / dur.as_secs_f64() / 1e9;
-            self.r.link_out.reserve_rate_limited(t, self.chunk, feed_gbps)
+            self.r
+                .egress_rate_limited(t, self.chunk, feed_gbps, SpanLabel::Chunk(p.slice))
         };
-        self.r
-            .sink
-            .span(Lane::LinkEgress, w.start, w.done, self.chunk, SpanLabel::Chunk(p.slice));
         self.r.q.schedule(w.done, Ev::EgressDone { pos: key });
         out.push(A2aMsg {
             slice: p.slice,
@@ -495,6 +497,9 @@ impl crate::cluster::RankNode for AllToAllRank {
     }
     fn enable_trace(&mut self, rank: u64) {
         AllToAllRank::enable_trace(self, rank)
+    }
+    fn enable_trace_mode(&mut self, rank: u64, mode: SinkMode) {
+        AllToAllRank::enable_trace_with(self, rank, mode)
     }
     fn attach_port(&mut self, port: crate::fabric::EgressPort) {
         AllToAllRank::attach_port(self, port)

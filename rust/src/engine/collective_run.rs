@@ -26,7 +26,7 @@ use crate::hw::hbm::{GroupId, TrafficClass, Txn, TxnKind};
 use crate::hw::mc::Stream;
 use crate::sim::stats::DramCounters;
 use crate::sim::time::SimTime;
-use crate::trace::{Lane, RankTrace, SpanLabel};
+use crate::trace::{DepKind, Lane, RankTrace, SinkMode, SpanLabel};
 
 use super::{Ev, GroupTag, Runner, PACE_BATCH};
 
@@ -220,6 +220,11 @@ impl RingRank {
         self.r.enable_trace(rank);
     }
 
+    /// [`RingRank::enable_trace`] with an explicit sink mode.
+    pub fn enable_trace_with(&mut self, rank: u64, mode: SinkMode) {
+        self.r.enable_trace_with(rank, mode);
+    }
+
     /// Rebind this rank's egress (fabric integration). Must be called
     /// before the first event is processed.
     pub fn attach_port(&mut self, port: crate::fabric::EgressPort) {
@@ -232,11 +237,17 @@ impl RingRank {
     /// arrival window.
     fn start_step(&mut self, s: u32, out: &mut Vec<RingMsg>) {
         let now = self.r.now();
+        if s > 0 {
+            // Intra-rank step ordering: step s launches at step s-1's end.
+            let prev = self.step_ends[s as usize - 1];
+            self.r.note_local_edge(DepKind::Step, prev, now);
+        }
         let read_txns = self.r.mem.txns_for(self.read_bytes_for(s));
         self.read_groups[s as usize] = self.r.register_group(read_txns, GroupTag::StepReads(s));
         self.r.schedule_issue(s, read_txns, now, self.read_bw, PACE_BATCH);
-        let w = self.r.link_out.reserve_rate_limited(now, self.chunk, self.feed_bw);
-        self.r.sink.span(Lane::LinkEgress, w.start, w.done, self.chunk, SpanLabel::Chunk(s));
+        let w = self
+            .r
+            .egress_rate_limited(now, self.chunk, self.feed_bw, SpanLabel::Chunk(s));
         self.r.q.schedule(w.done, Ev::EgressDone { pos: s });
         out.push(RingMsg {
             step: s,

@@ -49,7 +49,7 @@ use crate::hw::hbm::{GroupId, TrafficClass, Txn, TxnKind};
 use crate::hw::mc::{intensity_class, Stream};
 use crate::sim::stats::DramCounters;
 use crate::sim::time::SimTime;
-use crate::trace::{InstantKind, Lane, RankTrace, SpanLabel};
+use crate::trace::{DepKind, InstantKind, Lane, RankTrace, SinkMode, SpanLabel};
 
 use super::{Ev, GroupTag, Runner, PACE_BATCH};
 
@@ -338,6 +338,11 @@ impl FusedRank {
         self.r.enable_trace(rank);
     }
 
+    /// [`FusedRank::enable_trace`] with an explicit sink mode.
+    pub fn enable_trace_with(&mut self, rank: u64, mode: SinkMode) {
+        self.r.enable_trace_with(rank, mode);
+    }
+
     /// Rebind this rank's egress (fabric integration). Must be called
     /// before the first event is processed.
     pub fn attach_port(&mut self, port: crate::fabric::EgressPort) {
@@ -464,9 +469,7 @@ impl FusedRank {
                 match self.map.by_position[p] {
                     ChunkMap::Remote { .. } => {
                         // Fine-grained remote stores: straight to the link.
-                        let w = self.r.link_out.reserve(t, bytes);
-                        let lbl = SpanLabel::Chunk(p as u32);
-                        self.r.sink.span(Lane::LinkEgress, w.start, w.done, bytes, lbl);
+                        let w = self.r.egress(t, bytes, SpanLabel::Chunk(p as u32));
                         self.r.q.schedule(w.done, Ev::EgressDone { pos: p as u32 });
                         self.seg_to_come[p] -= 1;
                         // The downstream neighbor paces the matching
@@ -518,6 +521,9 @@ impl FusedRank {
             if let ChunkMap::Dma { .. } = self.map.by_position[p] {
                 self.dma.mark_ready(p).expect("dma entry");
                 self.r.sink.instant(Lane::Tracker, t, InstantKind::Trigger(p as u32));
+                // Tracker completion → DMA trigger: the causal edge the
+                // critical-path walker follows through the trigger.
+                self.r.note_local_edge(DepKind::Trigger, self.tracker_done[p], t);
                 let bytes = self.chunk_bytes_at(p);
                 // DMA reads the (partially reduced) chunk via the comm
                 // stream; egress window in parallel (pipelined).
@@ -528,9 +534,7 @@ impl FusedRank {
                     TrafficClass::RsRead,
                     GroupTag::DmaReads(p as u32),
                 );
-                let w = self.r.link_out.reserve(t, bytes);
-                let lbl = SpanLabel::Chunk(p as u32);
-                self.r.sink.span(Lane::LinkEgress, w.start, w.done, bytes, lbl);
+                let w = self.r.egress(t, bytes, SpanLabel::Chunk(p as u32));
                 self.r.q.schedule(w.done, Ev::EgressDone { pos: p as u32 });
                 let nxt = p + 1;
                 if nxt < self.n {

@@ -140,6 +140,12 @@ impl GemmRank {
         self.r.enable_trace(rank);
     }
 
+    /// [`GemmRank::enable_trace`] with an explicit [`crate::trace::SinkMode`]
+    /// (metrics mode folds spans into per-lane aggregates as they land).
+    pub fn enable_trace_with(&mut self, rank: u64, mode: crate::trace::SinkMode) {
+        self.r.enable_trace_with(rank, mode);
+    }
+
     /// Time of this rank's next pending event.
     pub fn next_time(&self) -> Option<SimTime> {
         self.r.q.peek_time()

@@ -54,9 +54,10 @@ use crate::config::SystemConfig;
 use crate::fabric::EgressPort;
 use crate::hw::hbm::{GroupId, MemEvent, MemorySystem, TrafficClass, Txn, TxnKind};
 use crate::hw::mc::Stream;
+use crate::hw::link::Window;
 use crate::sim::events::EventQueue;
 use crate::sim::time::SimTime;
-use crate::trace::TraceSink;
+use crate::trace::{DepEdge, DepKind, Lane, SinkMode, SpanLabel, TraceSink, UNKNOWN_RANK};
 
 /// Engine event type, shared by all run loops.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -165,8 +166,16 @@ impl Runner {
     /// spans go through [`Runner::sink`], DRAM service through the memory
     /// system's coalescing lanes.
     pub fn enable_trace(&mut self, rank: u64) {
-        self.sink = TraceSink::on(rank);
-        self.mem.enable_lane_trace();
+        self.enable_trace_with(rank, SinkMode::Full);
+    }
+
+    /// [`Runner::enable_trace`] with an explicit sink mode —
+    /// [`SinkMode::Metrics`] streams every record into O(lanes) state.
+    pub fn enable_trace_with(&mut self, rank: u64, mode: SinkMode) {
+        self.sink = TraceSink::with_mode(rank, mode);
+        if mode.enabled() {
+            self.mem.enable_lane_trace();
+        }
     }
 
     /// Whether timeline recording is currently enabled. Makes the trace
@@ -180,13 +189,75 @@ impl Runner {
     }
 
     /// Drain the recorded timeline (if tracing was enabled), folding in the
-    /// DRAM lane spans and stamping the phase's accounted `end`.
+    /// DRAM lane spans and stamping the phase's accounted `end`. The lane
+    /// spans pass through the sink so the metrics mode folds them too.
     pub fn take_timeline(&mut self, end: SimTime) -> Option<crate::trace::RankTrace> {
         let lanes = self.mem.take_lane_spans();
-        self.sink.finish(end).map(|mut t| {
-            t.spans.extend(lanes);
-            t
-        })
+        for s in &lanes {
+            self.sink.span(s.lane, s.start, s.end, s.bytes, s.label);
+        }
+        self.sink.finish(end)
+    }
+
+    /// Reserve a full-rate egress window and record its span plus the
+    /// send→delivery dependency edge.
+    pub fn egress(&mut self, ready: SimTime, bytes: u64, label: SpanLabel) -> Window {
+        let w = self.link_out.reserve(ready, bytes);
+        self.note_egress(ready, &w, bytes, label);
+        w
+    }
+
+    /// [`Runner::egress`] with the source's streaming rate capped.
+    pub fn egress_rate_limited(
+        &mut self,
+        ready: SimTime,
+        bytes: u64,
+        source_gbps: f64,
+        label: SpanLabel,
+    ) -> Window {
+        let w = self.link_out.reserve_rate_limited(ready, bytes, source_gbps);
+        self.note_egress(ready, &w, bytes, label);
+        w
+    }
+
+    /// Record an already-reserved egress window: the `LinkEgress` span and
+    /// a [`DepKind::Msg`] edge from send-ready to last-byte delivery. The
+    /// destination rank is [`UNKNOWN_RANK`] here — the cluster driver
+    /// patches it from its dest map after the run.
+    pub fn note_egress(&mut self, ready: SimTime, w: &Window, bytes: u64, label: SpanLabel) {
+        if !self.sink.enabled() {
+            return;
+        }
+        self.sink.span(Lane::LinkEgress, w.start, w.done, bytes, label);
+        let src = self.sink.rank().unwrap_or(UNKNOWN_RANK);
+        self.sink.edge(DepEdge {
+            kind: DepKind::Msg,
+            src_rank: src,
+            dst_rank: UNKNOWN_RANK,
+            src_at: ready,
+            granted: w.start,
+            dst_at: w.arrive_last,
+            bytes,
+            cong: self.link_out.last_congestion(),
+            link: self.link_out.first_link_id(),
+        });
+    }
+
+    /// Record a same-rank control edge (tracker→trigger, step ordering).
+    pub fn note_local_edge(&mut self, kind: DepKind, src_at: SimTime, dst_at: SimTime) {
+        if let Some(r) = self.sink.rank() {
+            self.sink.edge(DepEdge {
+                kind,
+                src_rank: r,
+                dst_rank: r,
+                src_at: src_at.min(dst_at),
+                granted: src_at.min(dst_at),
+                dst_at,
+                bytes: 0,
+                cong: SimTime::ZERO,
+                link: crate::trace::NO_LINK,
+            });
+        }
     }
 
     /// Submit `bytes` as a tagged burst; returns the number of txns.

@@ -61,7 +61,7 @@ use crate::gemm::{StagePlan, Tiling};
 use crate::models::{sublayer_gemm, ModelCfg, SubLayer};
 use crate::sim::stats::DramCounters;
 use crate::sim::time::SimTime;
-use crate::trace::Trace;
+use crate::trace::{SinkMode, Trace};
 
 /// Which collective family the sub-layer runs.
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
@@ -722,13 +722,21 @@ impl ScenarioSpec {
 
     /// The [`crate::cluster::ExecOpts`] this scenario runs under.
     fn exec_opts(&self, traced: bool) -> ExecOpts {
+        self.exec_opts_sink(if traced { SinkMode::Full } else { SinkMode::Off })
+    }
+
+    /// [`ScenarioSpec::exec_opts`] with an explicit [`SinkMode`] — the
+    /// causal profiler's entry, which needs the streaming metrics sink
+    /// ([`SinkMode::Metrics`]) for TP-1024-scale runs.
+    fn exec_opts_sink(&self, sink: SinkMode) -> ExecOpts {
         ExecOpts {
             target: match &self.cluster {
                 Some(cm) => ExecTarget::Cluster(cm.clone()),
                 None => ExecTarget::Mirror,
             },
-            trace: traced,
+            sink,
             interleave: Interleave::Ascending,
+            oracle: false,
         }
     }
 
@@ -764,6 +772,24 @@ impl ScenarioSpec {
         let m = self.measure(&report);
         let trace = report.trace.take().expect("ExecOpts{trace:true} yields a trace");
         (m, trace)
+    }
+
+    /// Execute this scenario and hand back the raw [`RunReport`] — phase
+    /// starts/ends, per-rank timelines and dependency edges when `sink`
+    /// records them, fabric link traces — the causal profiler's input
+    /// ([`crate::obs`]). [`SinkMode::Full`] keeps every span and edge for
+    /// the exact walker; [`SinkMode::Metrics`] folds them into
+    /// O(ranks + links) aggregates for TP-1024-scale profiles.
+    pub fn run_report(
+        &self,
+        sys: &SystemConfig,
+        model: &ModelCfg,
+        tp: u64,
+        sub: SubLayer,
+        sink: SinkMode,
+    ) -> RunReport {
+        let prog = self.compile(sys, model, tp, sub);
+        execute(sys, &prog, &self.exec_opts_sink(sink))
     }
 
     /// Slice a [`RunReport`] into the sub-layer measurement. The report's

@@ -16,7 +16,7 @@ use std::sync::{Arc, Mutex};
 use crate::config::LinkConfig;
 use crate::hw::link::{Link, Window};
 use crate::sim::time::SimTime;
-use crate::trace::{FabricLinkTrace, Lane, Span, SpanLabel};
+use crate::trace::{FabricLinkTrace, Lane, SinkMode, Span, SpanLabel, NO_LINK};
 
 use super::topo::{FabricGraph, FabricKind, LinkId};
 
@@ -120,6 +120,17 @@ pub struct Network {
     /// `routes[src][dst]` for endpoint pairs (empty when `src == dst`).
     routes: Vec<Vec<Vec<LinkId>>>,
     trace: Option<Vec<LinkRecorder>>,
+    mode: SinkMode,
+    /// Per-link busy windows of the *background* flows — the yardstick
+    /// congestion attribution measures collective waits against. Always
+    /// on (O(background flows × hops), usually empty).
+    bg_busy: Vec<Vec<(SimTime, SimTime)>>,
+    /// True while [`Network::new`] injects the spec's background flows.
+    injecting_bg: bool,
+    /// Congestion (queueing behind background flows) of the last
+    /// collective `send`, and its first-hop link id.
+    last_cong: SimTime,
+    last_link: u32,
 }
 
 impl Network {
@@ -128,8 +139,17 @@ impl Network {
     /// background flows (so their link occupancy is visible to both the
     /// collective and the trace).
     pub fn new(spec: &FabricSpec, endpoints: usize, base: &LinkConfig, traced: bool) -> Self {
+        let mode = if traced { SinkMode::Full } else { SinkMode::Off };
+        Self::with_mode(spec, endpoints, base, mode)
+    }
+
+    /// [`Network::new`] with an explicit capture mode. In
+    /// [`SinkMode::Metrics`] each link folds its windows into a single
+    /// aggregate span (exact bytes, first-to-last extent) so memory stays
+    /// O(links) regardless of flow count; queue-depth sampling is off.
+    pub fn with_mode(spec: &FabricSpec, endpoints: usize, base: &LinkConfig, mode: SinkMode) -> Self {
         let graph = spec.kind.topology().graph(endpoints, base);
-        let links = graph
+        let links: Vec<Link> = graph
             .links
             .iter()
             .map(|l| {
@@ -148,15 +168,24 @@ impl Network {
             })
             .collect();
         let mut net = Network {
-            trace: traced.then(|| (0..graph.links.len()).map(|_| LinkRecorder::default()).collect()),
+            trace: mode
+                .enabled()
+                .then(|| (0..graph.links.len()).map(|_| LinkRecorder::default()).collect()),
+            mode,
+            bg_busy: vec![Vec::new(); graph.links.len()],
+            injecting_bg: false,
+            last_cong: SimTime::ZERO,
+            last_link: NO_LINK,
             graph,
             links,
             routes,
         };
+        net.injecting_bg = true;
         for f in &spec.background {
             assert!(f.src != f.dst, "background flow must cross the fabric");
             net.send(f.src, f.dst, f.at, f.bytes, None);
         }
+        net.injecting_bg = false;
         net
     }
 
@@ -189,20 +218,69 @@ impl Network {
     }
 
     fn record(&mut self, id: LinkId, asked: SimTime, w: Window, bytes: u64) {
-        if let Some(rec) = &mut self.trace {
-            let r = &mut rec[id];
-            let depth = r.pending_done.iter().filter(|&&d| d > asked).count() as u32;
-            r.queue_depth.push((w.start, depth));
-            r.pending_done.push(w.done);
-            r.spans.push(Span {
-                lane: Lane::LinkEgress,
-                start: w.start,
-                end: w.done,
-                bytes,
-                label: SpanLabel::Chunk(r.flows),
-            });
+        let Some(rec) = &mut self.trace else { return };
+        let r = &mut rec[id];
+        if self.mode == SinkMode::Metrics {
+            // O(1) per link: one aggregate span (exact byte sum over the
+            // first-to-last extent); queue-depth sampling stays off so no
+            // per-flow state accumulates.
+            match r.spans.first_mut() {
+                Some(s) => {
+                    s.end = s.end.max(w.done);
+                    s.bytes += bytes;
+                }
+                None => {
+                    r.queue_depth.push((w.start, 0));
+                    r.spans.push(Span {
+                        lane: Lane::LinkEgress,
+                        start: w.start,
+                        end: w.done,
+                        bytes,
+                        label: SpanLabel::Chunk(0),
+                    });
+                }
+            }
             r.flows += 1;
+            return;
         }
+        let depth = r.pending_done.iter().filter(|&&d| d > asked).count() as u32;
+        r.queue_depth.push((w.start, depth));
+        r.pending_done.push(w.done);
+        r.spans.push(Span {
+            lane: Lane::LinkEgress,
+            start: w.start,
+            end: w.done,
+            bytes,
+            label: SpanLabel::Chunk(r.flows),
+        });
+        r.flows += 1;
+    }
+
+    /// Overlap of the wait interval `[asked, granted)` with a link's
+    /// background-flow busy windows — how much of the queueing was
+    /// congestion (vs the collective's own serialization).
+    fn bg_overlap(&self, id: LinkId, asked: SimTime, granted: SimTime) -> SimTime {
+        let mut total = SimTime::ZERO;
+        for &(b0, b1) in &self.bg_busy[id] {
+            let lo = asked.max(b0);
+            let hi = granted.min(b1);
+            if hi > lo {
+                total += hi - lo;
+            }
+        }
+        total
+    }
+
+    /// Congestion (time queued behind background flows, summed over
+    /// hops) of the most recent collective [`Network::send`].
+    pub fn last_congestion(&self) -> SimTime {
+        self.last_cong
+    }
+
+    /// First-hop link id of the most recent [`Network::send`]
+    /// ([`NO_LINK`] for loopback).
+    pub fn last_first_link(&self) -> u32 {
+        self.last_link
     }
 
     /// Push `bytes` from endpoint `src` to endpoint `dst`, ready at
@@ -225,6 +303,8 @@ impl Network {
     ) -> Window {
         let route = self.routes[src][dst].clone();
         let Some((&first_hop, rest)) = route.split_first() else {
+            self.last_cong = SimTime::ZERO;
+            self.last_link = NO_LINK;
             return Window {
                 start: ready,
                 done: ready,
@@ -236,6 +316,12 @@ impl Network {
             None => self.links[first_hop].reserve(ready, bytes),
             Some(g) => self.links[first_hop].reserve_rate_limited(ready, bytes, g),
         };
+        let mut cong = SimTime::ZERO;
+        if self.injecting_bg {
+            self.bg_busy[first_hop].push((w0.start, w0.done));
+        } else {
+            cong += self.bg_overlap(first_hop, ready, w0.start);
+        }
         self.record(first_hop, ready, w0, bytes);
         let mut w = w0;
         for &hop in rest {
@@ -247,9 +333,16 @@ impl Network {
                 let feed_gbps = bytes as f64 / dur.as_secs_f64() / 1e9;
                 self.links[hop].reserve_rate_limited(asked, bytes, feed_gbps)
             };
+            if self.injecting_bg {
+                self.bg_busy[hop].push((wk.start, wk.done));
+            } else {
+                cong += self.bg_overlap(hop, asked, wk.start);
+            }
             self.record(hop, asked, wk, bytes);
             w = wk;
         }
+        self.last_cong = cong;
+        self.last_link = first_hop as u32;
         Window {
             start: w0.start,
             done: w0.done,
@@ -297,6 +390,11 @@ pub enum EgressPort {
         /// Bytes this port has pushed (the per-rank `link_bytes`
         /// accounting the engines report).
         sent: u64,
+        /// Congestion of the last reservation (queueing behind
+        /// background flows), for dependency-edge attribution.
+        last_cong: SimTime,
+        /// First-hop link id of the last reservation.
+        last_link: u32,
     },
 }
 
@@ -311,6 +409,8 @@ impl EgressPort {
             src,
             dst,
             sent: 0,
+            last_cong: SimTime::ZERO,
+            last_link: NO_LINK,
         }
     }
 
@@ -319,9 +419,20 @@ impl EgressPort {
     pub fn reserve(&mut self, ready: SimTime, bytes: u64) -> Window {
         match self {
             EgressPort::Direct(l) => l.reserve(ready, bytes),
-            EgressPort::Fabric { net, src, dst, sent } => {
+            EgressPort::Fabric {
+                net,
+                src,
+                dst,
+                sent,
+                last_cong,
+                last_link,
+            } => {
                 *sent += bytes;
-                net.lock().unwrap().send(*src, *dst, ready, bytes, None)
+                let mut n = net.lock().unwrap();
+                let w = n.send(*src, *dst, ready, bytes, None);
+                *last_cong = n.last_congestion();
+                *last_link = n.last_first_link();
+                w
             }
         }
     }
@@ -331,10 +442,39 @@ impl EgressPort {
     pub fn reserve_rate_limited(&mut self, ready: SimTime, bytes: u64, source_gbps: f64) -> Window {
         match self {
             EgressPort::Direct(l) => l.reserve_rate_limited(ready, bytes, source_gbps),
-            EgressPort::Fabric { net, src, dst, sent } => {
+            EgressPort::Fabric {
+                net,
+                src,
+                dst,
+                sent,
+                last_cong,
+                last_link,
+            } => {
                 *sent += bytes;
-                net.lock().unwrap().send(*src, *dst, ready, bytes, Some(source_gbps))
+                let mut n = net.lock().unwrap();
+                let w = n.send(*src, *dst, ready, bytes, Some(source_gbps));
+                *last_cong = n.last_congestion();
+                *last_link = n.last_first_link();
+                w
             }
+        }
+    }
+
+    /// Congestion (time queued behind background fabric flows) of the
+    /// most recent reservation. Always zero on a dedicated link.
+    pub fn last_congestion(&self) -> SimTime {
+        match self {
+            EgressPort::Direct(_) => SimTime::ZERO,
+            EgressPort::Fabric { last_cong, .. } => *last_cong,
+        }
+    }
+
+    /// First-hop fabric link id of the most recent reservation
+    /// ([`NO_LINK`] on a dedicated link or loopback route).
+    pub fn first_link_id(&self) -> u32 {
+        match self {
+            EgressPort::Direct(_) => NO_LINK,
+            EgressPort::Fabric { last_link, .. } => *last_link,
         }
     }
 

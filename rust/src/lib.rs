@@ -59,4 +59,5 @@ pub mod tracker;
 pub mod engine;
 pub mod exec;
 pub mod models;
+pub mod obs;
 pub mod runtime;

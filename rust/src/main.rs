@@ -20,6 +20,9 @@
 //!               [--arrivals poisson:RATE] [--requests K] [--threads n] [--json]
 //! t3 trace      <preset> [--model <name>] [--tp <n>] [--sublayer <s>]
 //!               [--out file.json] [--diff other-preset] [--json]
+//! t3 profile    [preset] [--model <name>] [--tp <n>] [--sublayer <s>]
+//!               [--sink full|metrics|auto] [--what-if knob,knob] [--skew ...] [--topology ...]
+//!               [--json] [--out file.json]   (causal critical path + blame + what-if replay)
 //! t3 figure     <4|6|14|15|16|17|18|19|20|table2|table3> [--csv <dir>]
 //! t3 sweep      --model <name> [--tps 4,8,16,32]
 //! t3 validate             (tracker/functional-collective cross-checks)
@@ -164,7 +167,7 @@ fn scenarios_from(s: &str) -> std::result::Result<Vec<ScenarioSpec>, String> {
     Ok(out)
 }
 
-const USAGE: &str = "t3 <config|models|scenarios|topologies|simulate|experiment|cluster|ensemble|trace|figure|sweep|validate|run> [flags]
+const USAGE: &str = "t3 <config|models|scenarios|topologies|simulate|experiment|cluster|ensemble|trace|profile|figure|sweep|validate|run> [flags]
   t3 config [--future]
   t3 models --list
   t3 scenarios
@@ -184,6 +187,11 @@ const USAGE: &str = "t3 <config|models|scenarios|topologies|simulate|experiment|
               [--arrivals poisson:RATE] [--requests 64] [--threads N] [--json]
   t3 trace <preset> [--model T-NLG] [--tp 8] [--sublayer fc2]
            [--out trace.json] [--diff other-preset] [--json]
+  t3 profile [preset] [--model T-NLG] [--tp 8] [--sublayer fc2]
+             [--sink full|metrics|auto] [--what-if zero-skew,link-bw:2x,infinite-dram,zero-tracker]
+             [--skew none|straggler:RANK:FACTOR|jitter:AMPLITUDE]
+             [--topology ring|two-tier-ring|fat-tree|torus|rail]
+             [--json] [--out trace.json]
   t3 figure <4|6|14|15|16|17|18|19|20|table2|table3|ablation> [--csv results]
   t3 sweep --model T-NLG [--tps 4,8,16]
   t3 validate
@@ -276,6 +284,43 @@ fn skew_from(s: &str) -> std::result::Result<t3::cluster::SkewModel, String> {
         }
         _ => Err(bad()),
     }
+}
+
+/// Resolve a `--topology` name against the fabric catalog. Parameters
+/// scale with `tp`: the torus picks the most square rows x cols grid,
+/// rail/two-tier node sizes shrink to fit small rings.
+fn fabric_from(topo: &str, tp: u64) -> std::result::Result<t3::fabric::FabricSpec, String> {
+    use t3::fabric::FabricSpec;
+    use t3::sim::time::SimTime;
+    Ok(match topo.to_ascii_lowercase().as_str() {
+        "ring" => FabricSpec::ring(),
+        "two-tier-ring" | "two-tier" => {
+            FabricSpec::two_tier_ring(4.min(tp), 1.0 / 3.0, SimTime::us(2))
+        }
+        "fat-tree" | "fattree" => FabricSpec::fat_tree(16, 4.0),
+        "torus" => {
+            let n = tp as usize;
+            let mut rows = 1;
+            for r in 1..=n {
+                if r * r > n {
+                    break;
+                }
+                if n % r == 0 {
+                    rows = r;
+                }
+            }
+            FabricSpec::torus(rows, n / rows)
+        }
+        "rail" => {
+            let node = (tp as usize).min(4);
+            FabricSpec::rail(node, node)
+        }
+        other => {
+            return Err(format!(
+                "bad --topology '{other}' (ring | two-tier-ring | fat-tree | torus | rail)"
+            ))
+        }
+    })
 }
 
 fn main() -> ExitCode {
@@ -639,45 +684,17 @@ fn main() -> ExitCode {
                 return ExitCode::FAILURE;
             }
             if let Some(topo) = flags.get("topology") {
-                use t3::fabric::FabricSpec;
                 if flags.contains_key("nodes") {
                     eprintln!("--topology and --nodes (legacy two-tier) are mutually exclusive");
                     return ExitCode::FAILURE;
                 }
-                // Parameters scale with --tp: the torus picks the most
-                // square rows x cols grid, rail/two-tier nodes shrink to
-                // fit small rings.
-                let spec = match topo.to_ascii_lowercase().as_str() {
-                    "ring" => FabricSpec::ring(),
-                    "two-tier-ring" | "two-tier" => {
-                        FabricSpec::two_tier_ring(4.min(tp), 1.0 / 3.0, SimTime::us(2))
-                    }
-                    "fat-tree" | "fattree" => FabricSpec::fat_tree(16, 4.0),
-                    "torus" => {
-                        let n = tp as usize;
-                        let mut rows = 1;
-                        for r in 1..=n {
-                            if r * r > n {
-                                break;
-                            }
-                            if n % r == 0 {
-                                rows = r;
-                            }
-                        }
-                        FabricSpec::torus(rows, n / rows)
-                    }
-                    "rail" => {
-                        let node = (tp as usize).min(4);
-                        FabricSpec::rail(node, node)
-                    }
-                    other => {
-                        eprintln!(
-                            "bad --topology '{other}' (ring | two-tier-ring | fat-tree | torus | rail)"
-                        );
+                match fabric_from(topo, tp) {
+                    Ok(spec) => cm.topology = TopologySpec::Fabric(spec),
+                    Err(e) => {
+                        eprintln!("{e}");
                         return ExitCode::FAILURE;
                     }
-                };
-                cm.topology = TopologySpec::Fabric(spec);
+                }
             }
             let sys = SystemConfig::table1();
             let report = harness::cluster_report(&sys, &m, tp, sub, &scenario, &cm);
@@ -890,6 +907,109 @@ fn main() -> ExitCode {
                     eprintln!("{e}");
                     return ExitCode::FAILURE;
                 }
+            }
+            ExitCode::SUCCESS
+        }
+        "profile" => {
+            use t3::cluster::{ClusterModel, SkewModel, TopologySpec};
+            use t3::obs::{profile, ProfileOpts, WhatIf};
+            use t3::trace::SinkMode;
+            let which = pos.first().map(String::as_str).unwrap_or("T3-AR-Fused");
+            let Some(mut scenario) = experiment::preset(which) else {
+                eprintln!("unknown scenario '{which}'; see `t3 scenarios`");
+                return ExitCode::FAILURE;
+            };
+            let co = match CommonOpts::parse(&flags) {
+                Ok(c) => c,
+                Err(e) => {
+                    eprintln!("{e}");
+                    return ExitCode::FAILURE;
+                }
+            };
+            let (m, tp, sub) = (co.model.clone(), co.tp, co.sub);
+            // Skew / topology overrides compose with the preset's own
+            // cluster model (registry presets carry one).
+            if flags.contains_key("skew") || flags.contains_key("topology") {
+                let mut cm = scenario.cluster.clone().unwrap_or_else(ClusterModel::uniform);
+                if let Some(spec) = flags.get("skew") {
+                    match skew_from(spec) {
+                        Ok(s) => cm.skew = s,
+                        Err(e) => {
+                            eprintln!("{e}");
+                            return ExitCode::FAILURE;
+                        }
+                    }
+                }
+                if let SkewModel::Straggler { rank, .. } = cm.skew {
+                    if rank >= tp {
+                        eprintln!("straggler rank {rank} out of range (tp={tp})");
+                        return ExitCode::FAILURE;
+                    }
+                }
+                if let Some(topo) = flags.get("topology") {
+                    match fabric_from(topo, tp) {
+                        Ok(spec) => cm.topology = TopologySpec::Fabric(spec),
+                        Err(e) => {
+                            eprintln!("{e}");
+                            return ExitCode::FAILURE;
+                        }
+                    }
+                }
+                scenario = scenario.cluster(cm);
+            }
+            // `auto` keeps the exact walker for small groups and switches
+            // to the O(ranks + links) streaming capture at scale.
+            let sink = match flags.get("sink").map(String::as_str) {
+                None | Some("auto") => {
+                    if tp > 64 {
+                        SinkMode::Metrics
+                    } else {
+                        SinkMode::Full
+                    }
+                }
+                Some("full") => SinkMode::Full,
+                Some("metrics") => SinkMode::Metrics,
+                Some(other) => {
+                    eprintln!("bad --sink '{other}' (full | metrics | auto)");
+                    return ExitCode::FAILURE;
+                }
+            };
+            let mut what_if: Vec<WhatIf> = Vec::new();
+            if let Some(list) = flags.get("what-if") {
+                for k in list.split(',').filter(|s| !s.is_empty()) {
+                    match WhatIf::parse(k) {
+                        Some(w) => {
+                            if !what_if.contains(&w) {
+                                what_if.push(w);
+                            }
+                        }
+                        None => {
+                            eprintln!(
+                                "bad --what-if '{k}' (zero-skew | link-bw:2x | infinite-dram | zero-tracker)"
+                            );
+                            return ExitCode::FAILURE;
+                        }
+                    }
+                }
+            }
+            let sys = SystemConfig::table1();
+            let rep = profile(&sys, &scenario, &m, tp, sub, &ProfileOpts { sink, what_if });
+            if co.output.json {
+                println!("{}", rep.to_json());
+            } else {
+                print!("{}", rep.render());
+            }
+            if let Some(path) = &co.output.out {
+                let trace = rep.trace.as_ref().expect("profile keeps its trace");
+                let json = t3::trace::perfetto::export_with_path(trace, &rep.path);
+                if let Err(e) = std::fs::write(path, &json) {
+                    eprintln!("failed to write trace to {path}: {e}");
+                    return ExitCode::FAILURE;
+                }
+                eprintln!(
+                    "perfetto trace with critical-path overlay written to {path} ({} bytes)",
+                    json.len()
+                );
             }
             ExitCode::SUCCESS
         }

@@ -1,0 +1,570 @@
+//! Causal profiling: exact cross-rank critical path, blame attribution,
+//! and what-if replay over any executed scenario (`t3 profile`).
+//!
+//! The simulators record *true* dependencies while they run — message
+//! send→delivery edges (with per-hop congestion shares), tracker
+//! completion→trigger edges, intra-rank step ordering, and phase
+//! [`crate::cluster::StartRule`] anchors ([`crate::trace::DepEdge`]).
+//! This module turns one run into an explanation:
+//!
+//! * [`critical_path`] walks the dependency structure backward from the
+//!   makespan-defining rank and tiles `[0, total)` with attributed
+//!   [`PathSegment`]s — contiguous, gap-free, durations summing to the
+//!   run total in exact [`SimTime`] arithmetic (pinned by
+//!   [`crate::trace::check::check_critical_path`]).
+//! * [`BlameRollup`] partitions the path into compute / skew / wire /
+//!   queueing / congestion / DRAM / wait costs; [`LinkBlame`] rolls the
+//!   communication share up per physical link.
+//! * [`WhatIf`] replays the same scenario under a counterfactual knob
+//!   (zero skew, 2x links, infinite DRAM, free tracker) and reports the
+//!   projected speedup next to the blame that predicted it.
+//!
+//! Profiles run at two fidelities: [`SinkMode::Full`] keeps every span
+//! and edge (the exact walker), [`SinkMode::Metrics`] streams them into
+//! O(ranks + links) aggregates so `t3 profile --tp 1024` stays cheap —
+//! blame and lane rollups are bit-identical across the two; only the
+//! within-phase segment ordering coarsens. See DESIGN.md "Causal
+//! profiling".
+
+pub mod path;
+pub mod whatif;
+
+pub use path::{critical_path, makespan_rank};
+pub use whatif::{replay, WhatIf, WhatIfResult};
+
+use std::fmt::Write as _;
+
+use crate::config::SystemConfig;
+use crate::experiment::ScenarioSpec;
+use crate::models::{ModelCfg, SubLayer};
+use crate::sim::time::SimTime;
+use crate::trace::json::JsonWriter;
+use crate::trace::{Lane, SinkMode, Trace, NO_LINK};
+
+/// Why a stretch of the critical path took the time it did.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Blame {
+    /// Nominal compute (GEMM stages, CU collective kernels).
+    Compute,
+    /// The slowdown share of compute on a skewed rank (straggler/jitter).
+    Skew,
+    /// Wire time: bandwidth-limited transfer on a link.
+    Comm,
+    /// Queueing behind *foreground* traffic (the sender's own earlier
+    /// chunks, or grant arbitration) before the link granted bandwidth.
+    CommQueue,
+    /// Queueing behind *background* fabric flows — the congestion share
+    /// of a message's latency.
+    Congestion,
+    /// Exposed DRAM/MC service (memory contention cost).
+    Dram,
+    /// Recorded idle time / trigger latency the trace does not attribute
+    /// to a resource.
+    Wait,
+}
+
+impl Blame {
+    pub const ALL: [Blame; 7] = [
+        Blame::Compute,
+        Blame::Skew,
+        Blame::Comm,
+        Blame::CommQueue,
+        Blame::Congestion,
+        Blame::Dram,
+        Blame::Wait,
+    ];
+
+    pub fn name(self) -> &'static str {
+        match self {
+            Blame::Compute => "compute",
+            Blame::Skew => "skew",
+            Blame::Comm => "comm",
+            Blame::CommQueue => "comm-queue",
+            Blame::Congestion => "congestion",
+            Blame::Dram => "dram",
+            Blame::Wait => "wait",
+        }
+    }
+}
+
+/// One attributed stretch of the critical path.
+#[derive(Debug, Clone, PartialEq)]
+pub struct PathSegment {
+    /// Rank the cost accrued on.
+    pub rank: u64,
+    pub blame: Blame,
+    pub start: SimTime,
+    pub end: SimTime,
+    /// Payload the segment moved (0 for non-transfer segments).
+    pub bytes: u64,
+    /// First-hop fabric link id for message segments,
+    /// [`crate::trace::NO_LINK`] otherwise.
+    pub link: u32,
+    /// Human label: lane + span label, edge kind, or phase window.
+    pub detail: String,
+}
+
+impl PathSegment {
+    pub fn duration(&self) -> SimTime {
+        self.end - self.start
+    }
+}
+
+/// The extracted critical path: contiguous segments tiling `[0, total)`.
+#[derive(Debug, Clone, PartialEq)]
+pub struct CausalPath {
+    /// The makespan-defining rank the walk started from.
+    pub rank: u64,
+    /// The run's group-completion time (`RunReport::total`).
+    pub total: SimTime,
+    /// Attributed segments in time order; `segments.last().end == total`
+    /// and durations sum to `total` exactly.
+    pub segments: Vec<PathSegment>,
+}
+
+/// Blame taxonomy rollup: the path partitioned by [`Blame`]. Fields sum
+/// to the path total exactly (same integer arithmetic).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub struct BlameRollup {
+    pub compute: SimTime,
+    pub skew: SimTime,
+    pub comm: SimTime,
+    pub comm_queue: SimTime,
+    pub congestion: SimTime,
+    pub dram: SimTime,
+    pub wait: SimTime,
+}
+
+impl BlameRollup {
+    pub fn from_path(path: &CausalPath) -> Self {
+        let mut r = BlameRollup::default();
+        for s in &path.segments {
+            *r.slot(s.blame) += s.duration();
+        }
+        r
+    }
+
+    fn slot(&mut self, b: Blame) -> &mut SimTime {
+        match b {
+            Blame::Compute => &mut self.compute,
+            Blame::Skew => &mut self.skew,
+            Blame::Comm => &mut self.comm,
+            Blame::CommQueue => &mut self.comm_queue,
+            Blame::Congestion => &mut self.congestion,
+            Blame::Dram => &mut self.dram,
+            Blame::Wait => &mut self.wait,
+        }
+    }
+
+    pub fn get(&self, b: Blame) -> SimTime {
+        match b {
+            Blame::Compute => self.compute,
+            Blame::Skew => self.skew,
+            Blame::Comm => self.comm,
+            Blame::CommQueue => self.comm_queue,
+            Blame::Congestion => self.congestion,
+            Blame::Dram => self.dram,
+            Blame::Wait => self.wait,
+        }
+    }
+
+    /// Sum over the whole taxonomy (== the path total for a gap-free
+    /// path).
+    pub fn total(&self) -> SimTime {
+        Blame::ALL.iter().map(|&b| self.get(b)).sum()
+    }
+
+    /// Communication exposed on the critical path: wire + queueing +
+    /// congestion.
+    pub fn exposed_comm(&self) -> SimTime {
+        self.comm + self.comm_queue + self.congestion
+    }
+}
+
+/// Per-physical-link share of the path's communication time.
+#[derive(Debug, Clone, PartialEq)]
+pub struct LinkBlame {
+    /// Fabric link name, or `r{rank}-egress` for dedicated ring links.
+    pub link: String,
+    /// Exposed time ([`Blame::Comm`] + queue + congestion) on this link.
+    pub time: SimTime,
+    /// Payload bytes the path's segments moved over it.
+    pub bytes: u64,
+}
+
+/// Per-lane busy rollup over every rank — derived from the streaming
+/// aggregates, so bit-identical between [`SinkMode::Full`] and
+/// [`SinkMode::Metrics`] captures of the same run.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct LaneRollup {
+    pub lane: Lane,
+    pub busy: SimTime,
+    pub bytes: u64,
+    pub spans: u64,
+}
+
+/// Options of [`profile`].
+#[derive(Debug, Clone)]
+pub struct ProfileOpts {
+    /// Capture fidelity: [`SinkMode::Full`] for the exact walker,
+    /// [`SinkMode::Metrics`] for O(ranks + links) streaming profiles.
+    pub sink: SinkMode,
+    /// Counterfactual replays to run after the profiled execution.
+    pub what_if: Vec<WhatIf>,
+}
+
+impl Default for ProfileOpts {
+    fn default() -> Self {
+        ProfileOpts {
+            sink: SinkMode::Full,
+            what_if: Vec::new(),
+        }
+    }
+}
+
+/// One causal profile: the path, its rollups, and any what-if replays.
+#[derive(Debug, Clone)]
+pub struct ProfileReport {
+    pub name: String,
+    pub tp: u64,
+    /// The sink mode the profiled run recorded under.
+    pub sink: SinkMode,
+    /// Group-completion time of the profiled run.
+    pub total: SimTime,
+    pub path: CausalPath,
+    pub blame: BlameRollup,
+    pub links: Vec<LinkBlame>,
+    pub lanes: Vec<LaneRollup>,
+    /// Total congestion over every recorded edge (identical across sink
+    /// modes; the path carves only the share it walked).
+    pub cong_total: SimTime,
+    pub what_if: Vec<WhatIfResult>,
+    /// The recorded trace, for Perfetto export with the path overlay.
+    pub trace: Option<Trace>,
+}
+
+/// Profile one scenario: execute it with a recording sink, extract the
+/// critical path, roll up blame, and replay any requested what-ifs.
+pub fn profile(
+    sys: &SystemConfig,
+    spec: &ScenarioSpec,
+    model: &ModelCfg,
+    tp: u64,
+    sub: SubLayer,
+    opts: &ProfileOpts,
+) -> ProfileReport {
+    assert!(opts.sink.enabled(), "profiling needs a recording sink mode");
+    let mut report = spec.run_report(sys, model, tp, sub, opts.sink);
+    let nranks = report.trace.as_ref().map(|t| t.ranks.len()).unwrap_or(1);
+    let mut factors = match &spec.cluster {
+        Some(cm) => cm.factors(tp, sys.seed),
+        None => Vec::new(),
+    };
+    factors.resize(nranks, 1.0);
+    let path = critical_path(&report, &factors);
+    let trace = report.trace.take().expect("enabled sink yields a trace");
+    let blame = BlameRollup::from_path(&path);
+    let links = link_blame(&path, &trace);
+    let lanes = lane_rollup(&trace);
+    let cong_total = trace.ranks.iter().map(|r| r.cong).sum();
+    let what_if = opts
+        .what_if
+        .iter()
+        .map(|&k| replay(sys, spec, model, tp, sub, k, report.total))
+        .collect();
+    ProfileReport {
+        name: spec.name.clone(),
+        tp,
+        sink: opts.sink,
+        total: report.total,
+        path,
+        blame,
+        links,
+        lanes,
+        cong_total,
+        what_if,
+        trace: Some(trace),
+    }
+}
+
+/// Roll the path's communication segments up per physical link,
+/// first-seen order along the path.
+pub fn link_blame(path: &CausalPath, trace: &Trace) -> Vec<LinkBlame> {
+    let mut out: Vec<LinkBlame> = Vec::new();
+    for s in &path.segments {
+        if !matches!(s.blame, Blame::Comm | Blame::CommQueue | Blame::Congestion) {
+            continue;
+        }
+        let name = if s.link == NO_LINK {
+            format!("r{}-egress", s.rank)
+        } else {
+            trace
+                .links
+                .iter()
+                .find(|l| l.id == s.link as usize)
+                .map(|l| l.name.clone())
+                .unwrap_or_else(|| format!("link{}", s.link))
+        };
+        match out.iter_mut().find(|l| l.link == name) {
+            Some(l) => {
+                l.time += s.duration();
+                l.bytes += s.bytes;
+            }
+            None => out.push(LinkBlame {
+                link: name,
+                time: s.duration(),
+                bytes: s.bytes,
+            }),
+        }
+    }
+    out
+}
+
+/// Per-lane busy rollup over all ranks (from the sealed per-phase
+/// aggregates; empty lanes are omitted).
+pub fn lane_rollup(trace: &Trace) -> Vec<LaneRollup> {
+    Lane::ALL
+        .iter()
+        .filter_map(|&lane| {
+            let mut busy = SimTime::ZERO;
+            let mut bytes = 0u64;
+            let mut spans = 0u64;
+            for r in &trace.ranks {
+                for a in &r.agg {
+                    if a.lane == lane {
+                        busy += a.busy;
+                        bytes += a.bytes;
+                        spans += a.spans;
+                    }
+                }
+            }
+            (spans > 0).then_some(LaneRollup {
+                lane,
+                busy,
+                bytes,
+                spans,
+            })
+        })
+        .collect()
+}
+
+fn sink_name(mode: SinkMode) -> &'static str {
+    match mode {
+        SinkMode::Off => "off",
+        SinkMode::Full => "full",
+        SinkMode::Metrics => "metrics",
+    }
+}
+
+fn pct(part: SimTime, total: SimTime) -> f64 {
+    if total.is_zero() {
+        0.0
+    } else {
+        100.0 * part.as_ps() as f64 / total.as_ps() as f64
+    }
+}
+
+impl ProfileReport {
+    /// One machine-readable JSON document (the `t3 profile --json`
+    /// output). Times appear as exact picosecond integers (`*_ps`) for
+    /// bit-level comparisons plus human-scale milliseconds; the `blame`
+    /// object holds exactly the seven taxonomy fields, so consumers can
+    /// check `sum(blame.values()) == total_ps` directly.
+    pub fn to_json(&self) -> String {
+        let mut w = JsonWriter::new();
+        w.begin_obj();
+        w.key("name").str_val(&self.name);
+        w.key("tp").u64_val(self.tp);
+        w.key("sink").str_val(sink_name(self.sink));
+        w.key("total_ps").u64_val(self.total.as_ps());
+        w.key("total_ms").f64_val(self.total.as_ms_f64());
+        w.key("makespan_rank").u64_val(self.path.rank);
+        w.key("blame").begin_obj();
+        for b in Blame::ALL {
+            w.key(b.name()).u64_val(self.blame.get(b).as_ps());
+        }
+        w.end_obj();
+        w.key("exposed_comm_ps").u64_val(self.blame.exposed_comm().as_ps());
+        w.key("cong_ps").u64_val(self.cong_total.as_ps());
+        w.key("path").begin_arr();
+        for s in &self.path.segments {
+            w.begin_obj();
+            w.key("rank").u64_val(s.rank);
+            w.key("blame").str_val(s.blame.name());
+            w.key("start_ps").u64_val(s.start.as_ps());
+            w.key("end_ps").u64_val(s.end.as_ps());
+            w.key("bytes").u64_val(s.bytes);
+            if s.link != NO_LINK {
+                w.key("link").u64_val(s.link as u64);
+            }
+            w.key("detail").str_val(&s.detail);
+            w.end_obj();
+        }
+        w.end_arr();
+        w.key("links").begin_arr();
+        for l in &self.links {
+            w.begin_obj();
+            w.key("link").str_val(&l.link);
+            w.key("time_ps").u64_val(l.time.as_ps());
+            w.key("bytes").u64_val(l.bytes);
+            w.end_obj();
+        }
+        w.end_arr();
+        w.key("lanes").begin_arr();
+        for l in &self.lanes {
+            w.begin_obj();
+            w.key("lane").str_val(l.lane.name());
+            w.key("busy_ps").u64_val(l.busy.as_ps());
+            w.key("bytes").u64_val(l.bytes);
+            w.key("spans").u64_val(l.spans);
+            w.end_obj();
+        }
+        w.end_arr();
+        w.key("what_if").begin_arr();
+        for r in &self.what_if {
+            w.begin_obj();
+            w.key("knob").str_val(&r.knob);
+            w.key("total_ps").u64_val(r.total.as_ps());
+            w.key("total_ms").f64_val(r.total.as_ms_f64());
+            w.key("speedup").f64_val(r.speedup);
+            w.end_obj();
+        }
+        w.end_arr();
+        w.end_obj();
+        w.finish()
+    }
+
+    /// Human-readable profile summary (the default `t3 profile` output).
+    pub fn render(&self) -> String {
+        let mut s = String::new();
+        let _ = writeln!(
+            s,
+            "causal profile: {} TP={} ({} sink)",
+            self.name,
+            self.tp,
+            sink_name(self.sink)
+        );
+        let _ = writeln!(
+            s,
+            "  total {:.3} ms — {} path segments, makespan rank {}",
+            self.total.as_ms_f64(),
+            self.path.segments.len(),
+            self.path.rank
+        );
+        let mut blames: Vec<String> = Vec::new();
+        for b in Blame::ALL {
+            let t = self.blame.get(b);
+            if t.is_zero() {
+                continue;
+            }
+            blames.push(format!(
+                "{} {:.3} ms ({:.1}%)",
+                b.name(),
+                t.as_ms_f64(),
+                pct(t, self.total)
+            ));
+        }
+        let _ = writeln!(s, "  blame: {}", blames.join(" | "));
+        let _ = writeln!(
+            s,
+            "  exposed comm {:.3} ms, recorded congestion {:.3} ms",
+            self.blame.exposed_comm().as_ms_f64(),
+            self.cong_total.as_ms_f64()
+        );
+        for l in &self.links {
+            let _ = writeln!(
+                s,
+                "  link {:16} {:.3} ms exposed, {:.1} MiB on-path",
+                l.link,
+                l.time.as_ms_f64(),
+                l.bytes as f64 / (1 << 20) as f64
+            );
+        }
+        for l in &self.lanes {
+            let _ = writeln!(
+                s,
+                "  lane {:13} busy {:.3} ms, {:.1} MiB, {} spans",
+                l.lane.name(),
+                l.busy.as_ms_f64(),
+                l.bytes as f64 / (1 << 20) as f64,
+                l.spans
+            );
+        }
+        for r in &self.what_if {
+            let _ = writeln!(
+                s,
+                "  what-if {:14} -> {:.3} ms ({:.3}x)",
+                r.knob,
+                r.total.as_ms_f64(),
+                r.speedup
+            );
+        }
+        s
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn seg(blame: Blame, start: u64, end: u64) -> PathSegment {
+        PathSegment {
+            rank: 0,
+            blame,
+            start: SimTime::ps(start),
+            end: SimTime::ps(end),
+            bytes: 0,
+            link: NO_LINK,
+            detail: String::new(),
+        }
+    }
+
+    #[test]
+    fn blame_rollup_partitions_the_path() {
+        let path = CausalPath {
+            rank: 0,
+            total: SimTime::ps(100),
+            segments: vec![
+                seg(Blame::Compute, 0, 40),
+                seg(Blame::Skew, 40, 50),
+                seg(Blame::Comm, 50, 70),
+                seg(Blame::Congestion, 70, 85),
+                seg(Blame::Wait, 85, 100),
+            ],
+        };
+        let r = BlameRollup::from_path(&path);
+        assert_eq!(r.total(), path.total);
+        assert_eq!(r.compute, SimTime::ps(40));
+        assert_eq!(r.exposed_comm(), SimTime::ps(35));
+    }
+
+    #[test]
+    fn profile_json_blame_sums_to_total() {
+        // A hand-built report: the JSON contract (7 blame keys summing to
+        // total_ps) holds without running a simulation.
+        let path = CausalPath {
+            rank: 0,
+            total: SimTime::ps(10),
+            segments: vec![seg(Blame::Compute, 0, 4), seg(Blame::Wait, 4, 10)],
+        };
+        let blame = BlameRollup::from_path(&path);
+        let rep = ProfileReport {
+            name: "unit".into(),
+            tp: 1,
+            sink: SinkMode::Full,
+            total: path.total,
+            path,
+            blame,
+            links: Vec::new(),
+            lanes: Vec::new(),
+            cong_total: SimTime::ZERO,
+            what_if: Vec::new(),
+            trace: None,
+        };
+        let json = rep.to_json();
+        assert!(json.contains("\"total_ps\":10"), "{json}");
+        assert!(json.contains("\"compute\":4"), "{json}");
+        assert!(json.contains("\"wait\":6"), "{json}");
+        assert!(!rep.render().is_empty());
+    }
+}

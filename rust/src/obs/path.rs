@@ -1,0 +1,426 @@
+//! Critical-path extraction: walk the recorded dependency structure
+//! backward from the makespan-defining rank and produce a contiguous,
+//! gap-free attribution of every picosecond of the run.
+//!
+//! Two walkers share one output type:
+//!
+//! * **Exact** ([`SinkMode::Full`] traces): follows spans and
+//!   [`DepEdge`]s. At time `t` the explanation is the highest-priority
+//!   busy span covering `t` (compute > egress > DRAM); a gap means the
+//!   rank was blocked, and the latest unused edge delivering at or before
+//!   `t` explains it — message edges split into congestion / queueing /
+//!   wire time and jump the walk to the sender, in exact [`SimTime`]
+//!   arithmetic.
+//! * **Coarse** ([`SinkMode::Metrics`] traces): spans were folded into
+//!   per-phase [`crate::trace::LaneAgg`]s, so the walker tiles the
+//!   makespan rank's phase windows with per-lane busy totals (same
+//!   priority order) and calls the remainder wait. Lane and blame
+//!   *rollups* stay exact; only the within-phase ordering is coarse.
+//!
+//! Both tiles `[0, total)` exactly: segment durations sum to the run
+//! total to the bit (`trace::check::check_critical_path`).
+
+use std::cmp::Reverse;
+
+use crate::cluster::RunReport;
+use crate::sim::time::SimTime;
+use crate::trace::{DepEdge, DepKind, Lane, RankTrace, SinkMode, Span, Trace, NO_LINK};
+
+use super::{Blame, CausalPath, PathSegment};
+
+/// Lane priority when several spans cover the same instant: a running
+/// compute span beats the link edges, which beat DRAM service. Ingress
+/// windows are deliberately absent — an arrival is explained by its
+/// message edge (which carries the congestion split and the sender
+/// jump), not by a local echo of it.
+const PRIORITY: [Lane; 5] = [
+    Lane::CuCompute,
+    Lane::CuConsumer,
+    Lane::LinkEgress,
+    Lane::DramComm,
+    Lane::DramCompute,
+];
+
+/// Extract the causal critical path from an executed report. `factors`
+/// are the per-rank compute-skew multipliers the run was configured with
+/// ([`crate::cluster::ClusterModel::factors`]); compute segments on a
+/// skewed rank split into nominal compute + skew cost. Panics if the
+/// report carries no trace (profile with an enabled sink).
+pub fn critical_path(report: &RunReport, factors: &[f64]) -> CausalPath {
+    let trace = report
+        .trace
+        .as_ref()
+        .expect("critical_path needs a recorded trace (SinkMode::Full or Metrics)");
+    let full = trace.ranks.iter().any(|r| !r.spans.is_empty());
+    let mut segments = if full {
+        exact_walk(trace, factors)
+    } else {
+        coarse_walk(report, trace, factors)
+    };
+    segments.retain(|s| s.end > s.start);
+    segments.sort_by(|a, b| (a.start, a.end).cmp(&(b.start, b.end)));
+    CausalPath {
+        rank: makespan_rank(trace),
+        total: report.total,
+        segments,
+    }
+}
+
+/// Which sink mode produced a path with this resolution.
+pub fn path_mode(trace: &Trace) -> SinkMode {
+    if trace.ranks.iter().any(|r| !r.spans.is_empty()) {
+        SinkMode::Full
+    } else {
+        SinkMode::Metrics
+    }
+}
+
+/// The rank whose accounted end defines the makespan (lowest rank id on
+/// ties).
+pub fn makespan_rank(trace: &Trace) -> u64 {
+    trace
+        .ranks
+        .iter()
+        .max_by_key(|r| (r.end, Reverse(r.rank)))
+        .map(|r| r.rank)
+        .unwrap_or(0)
+}
+
+fn rank_trace(trace: &Trace, id: u64) -> &RankTrace {
+    trace
+        .ranks
+        .iter()
+        .find(|r| r.rank == id)
+        .expect("dependency edge references a recorded rank")
+}
+
+fn factor(factors: &[f64], rank: u64) -> f64 {
+    factors.get(rank as usize).copied().unwrap_or(1.0)
+}
+
+fn wait(rank: u64, start: SimTime, end: SimTime, detail: &str) -> PathSegment {
+    PathSegment {
+        rank,
+        blame: Blame::Wait,
+        start,
+        end,
+        bytes: 0,
+        link: NO_LINK,
+        detail: detail.to_string(),
+    }
+}
+
+// ---- exact walker (full traces) ----
+
+fn exact_walk(trace: &Trace, factors: &[f64]) -> Vec<PathSegment> {
+    let total = trace.ranks.iter().map(|r| r.end).max().unwrap_or(SimTime::ZERO);
+    let edges: Vec<&DepEdge> = trace.ranks.iter().flat_map(|r| r.edges.iter()).collect();
+    let mut used = vec![false; edges.len()];
+    let span_count: usize = trace.ranks.iter().map(|r| r.spans.len()).sum();
+    // Each iteration either consumes an edge or strictly lowers `t` past
+    // a span start / span end (at most two iterations per span: the idle
+    // hop down to its end, then its attribution), so this bound is never
+    // reached; it guards the walk against a malformed trace.
+    let mut fuel = 2 * (span_count + edges.len()) + trace.ranks.len() + 16;
+
+    let mut segs: Vec<PathSegment> = Vec::new();
+    let mut cur = makespan_rank(trace);
+    let mut t = total;
+    while !t.is_zero() {
+        if fuel == 0 {
+            segs.push(wait(cur, SimTime::ZERO, t, "fuel-exhausted"));
+            break;
+        }
+        fuel -= 1;
+        let rt = rank_trace(trace, cur);
+        if let Some(s) = covering_span(rt, t) {
+            attribute_span(&mut segs, cur, s, t, factor(factors, cur));
+            t = s.start;
+            continue;
+        }
+        // Gap: the rank was idle just before `t` — the latest unused
+        // arrival at or before `t` explains what it was blocked on.
+        match best_edge(&edges, &used, cur, t) {
+            Some(i) => {
+                used[i] = true;
+                let e = edges[i];
+                if e.dst_at < t {
+                    segs.push(wait(cur, e.dst_at, t, "idle"));
+                }
+                attribute_edge(&mut segs, e);
+                cur = e.src_rank;
+                t = e.src_at;
+            }
+            None => {
+                // Nothing recorded explains the gap: charge wait down to
+                // the rank's latest earlier activity.
+                let lo = rt
+                    .spans
+                    .iter()
+                    .map(|s| s.end)
+                    .filter(|&e| e < t)
+                    .max()
+                    .unwrap_or(SimTime::ZERO);
+                segs.push(wait(cur, lo, t, "idle"));
+                t = lo;
+            }
+        }
+    }
+    segs
+}
+
+/// The highest-priority span covering `t` (`start < t <= end`); ties on
+/// lane resolve to the latest start.
+fn covering_span(rt: &RankTrace, t: SimTime) -> Option<&Span> {
+    let mut best: Option<(usize, &Span)> = None;
+    for s in &rt.spans {
+        if !(s.start < t && s.end >= t) {
+            continue;
+        }
+        let Some(p) = PRIORITY.iter().position(|&l| l == s.lane) else {
+            continue;
+        };
+        let better = match best {
+            Some((bp, bs)) => (p, Reverse(s.start)) < (bp, Reverse(bs.start)),
+            None => true,
+        };
+        if better {
+            best = Some((p, s));
+        }
+    }
+    best.map(|(_, s)| s)
+}
+
+fn attribute_span(segs: &mut Vec<PathSegment>, rank: u64, s: &Span, t: SimTime, f: f64) {
+    let blame = match s.lane {
+        Lane::CuCompute | Lane::CuConsumer => Blame::Compute,
+        Lane::LinkEgress | Lane::LinkIngress => Blame::Comm,
+        Lane::DramCompute | Lane::DramComm => Blame::Dram,
+        Lane::Tracker => Blame::Wait,
+    };
+    let detail = format!("{} {}", s.lane.name(), s.label.describe());
+    if blame == Blame::Compute && f > 1.0 {
+        // A rank slowed by factor f spends dur/f of this stretch doing
+        // nominal work; the integer remainder is the skew cost, so the
+        // two parts re-sum to the stretch exactly.
+        let dur = t - s.start;
+        let nominal = SimTime::ps((dur.as_ps() as f64 / f) as u64);
+        let boundary = s.start + nominal;
+        segs.push(PathSegment {
+            rank,
+            blame: Blame::Compute,
+            start: s.start,
+            end: boundary,
+            bytes: s.bytes,
+            link: NO_LINK,
+            detail: detail.clone(),
+        });
+        segs.push(PathSegment {
+            rank,
+            blame: Blame::Skew,
+            start: boundary,
+            end: t,
+            bytes: 0,
+            link: NO_LINK,
+            detail,
+        });
+    } else {
+        segs.push(PathSegment {
+            rank,
+            blame,
+            start: s.start,
+            end: t,
+            bytes: s.bytes,
+            link: NO_LINK,
+            detail,
+        });
+    }
+}
+
+fn kind_pri(k: DepKind) -> u8 {
+    match k {
+        DepKind::Msg => 3,
+        DepKind::Trigger => 2,
+        DepKind::Step => 1,
+        DepKind::PhaseStart => 0,
+    }
+}
+
+/// The best unused edge delivering into `cur` at or before `t`: latest
+/// delivery first, then message > trigger > step > phase-start, then the
+/// most congested, then the latest/highest source — a total, deterministic
+/// order over the recorded edge set.
+fn best_edge(edges: &[&DepEdge], used: &[bool], cur: u64, t: SimTime) -> Option<usize> {
+    let mut best: Option<(usize, (SimTime, u8, SimTime, SimTime, u64))> = None;
+    for (i, e) in edges.iter().enumerate() {
+        if used[i] || e.dst_rank != cur || e.dst_at > t {
+            continue;
+        }
+        let key = (e.dst_at, kind_pri(e.kind), e.cong, e.src_at, e.src_rank);
+        let better = match &best {
+            Some((_, bk)) => key > *bk,
+            None => true,
+        };
+        if better {
+            best = Some((i, key));
+        }
+    }
+    best.map(|(i, _)| i)
+}
+
+fn attribute_edge(segs: &mut Vec<PathSegment>, e: &DepEdge) {
+    match e.kind {
+        DepKind::Msg => {
+            // Multi-hop routes accumulate congestion inside
+            // `[granted, dst_at)` too, so clamp to the whole extent and
+            // carve the congested share first, then residual queueing up
+            // to the grant, then wire time — three contiguous pieces that
+            // re-sum to `dst_at - src_at` exactly.
+            let dur = e.dst_at - e.src_at;
+            let c = e.cong.min(dur);
+            let cong_end = e.src_at + c;
+            let queue_end = e.granted.max(cong_end);
+            let mut push = |blame: Blame, start: SimTime, end: SimTime, bytes: u64| {
+                segs.push(PathSegment {
+                    rank: e.src_rank,
+                    blame,
+                    start,
+                    end,
+                    bytes,
+                    link: e.link,
+                    detail: "msg".to_string(),
+                });
+            };
+            push(Blame::Congestion, e.src_at, cong_end, 0);
+            push(Blame::CommQueue, cong_end, queue_end, 0);
+            push(Blame::Comm, queue_end, e.dst_at, e.bytes);
+        }
+        DepKind::Trigger => segs.push(wait(e.src_rank, e.src_at, e.dst_at, "trigger")),
+        DepKind::Step => segs.push(wait(e.src_rank, e.src_at, e.dst_at, "step")),
+        DepKind::PhaseStart => {
+            // Zero-length by construction (a rank's phase start equals its
+            // own predecessor end/trigger); nothing to attribute.
+        }
+    }
+}
+
+// ---- coarse walker (metrics traces) ----
+
+/// Tile the makespan rank's phase windows (latest end first, clipped to
+/// the unattributed prefix) with per-lane busy totals from the streaming
+/// aggregates; the unfilled remainder of each window is wait.
+fn coarse_walk(report: &RunReport, trace: &Trace, factors: &[f64]) -> Vec<PathSegment> {
+    let m = makespan_rank(trace);
+    let mi = m as usize;
+    let rt = rank_trace(trace, m);
+    let f = factor(factors, m);
+    let mut segs = Vec::new();
+    let mut t = trace.ranks.iter().map(|r| r.end).max().unwrap_or(SimTime::ZERO);
+
+    let mut wins: Vec<(SimTime, SimTime, usize)> = report
+        .phases
+        .iter()
+        .enumerate()
+        .map(|(i, ph)| {
+            let s = ph.starts.get(mi).copied().unwrap_or(ph.start);
+            let e = ph.ends.get(mi).copied().unwrap_or(ph.end);
+            (s, e, i)
+        })
+        .collect();
+    wins.sort_by_key(|&(s, e, i)| (Reverse(e), Reverse(s), i));
+
+    for (s, e, i) in wins {
+        if t.is_zero() {
+            break;
+        }
+        let hi = e.min(t);
+        let lo = s.min(hi);
+        if hi <= lo {
+            continue;
+        }
+        // A rank can go idle between its own phase windows (e.g. an
+        // `AfterAllPrev` barrier waiting on a slower rank): charge the
+        // uncovered stretch to wait so the tiling stays gap-free.
+        if hi < t {
+            segs.push(wait(m, hi, t, "phase-gap"));
+        }
+        allocate_window(&mut segs, m, rt, i, lo, hi, f);
+        t = lo;
+    }
+    if !t.is_zero() {
+        segs.push(wait(m, SimTime::ZERO, t, "pre-phase"));
+    }
+    segs
+}
+
+fn allocate_window(
+    segs: &mut Vec<PathSegment>,
+    rank: u64,
+    rt: &RankTrace,
+    phase: usize,
+    lo: SimTime,
+    hi: SimTime,
+    f: f64,
+) {
+    let mut top = hi;
+    for &lane in &PRIORITY {
+        if top <= lo {
+            break;
+        }
+        let Some(a) = rt
+            .agg
+            .iter()
+            .find(|a| a.phase == phase as u32 && a.lane == lane)
+        else {
+            continue;
+        };
+        let amt = a.busy.min(top - lo);
+        if amt.is_zero() {
+            continue;
+        }
+        let start = top - amt;
+        let detail = format!("phase{phase} {}", lane.name());
+        let blame = match lane {
+            Lane::CuCompute | Lane::CuConsumer => Blame::Compute,
+            Lane::LinkEgress | Lane::LinkIngress => Blame::Comm,
+            Lane::DramCompute | Lane::DramComm => Blame::Dram,
+            Lane::Tracker => Blame::Wait,
+        };
+        if blame == Blame::Compute && f > 1.0 {
+            let nominal = SimTime::ps((amt.as_ps() as f64 / f) as u64);
+            let boundary = start + nominal;
+            segs.push(PathSegment {
+                rank,
+                blame: Blame::Compute,
+                start,
+                end: boundary,
+                bytes: a.bytes,
+                link: NO_LINK,
+                detail: detail.clone(),
+            });
+            segs.push(PathSegment {
+                rank,
+                blame: Blame::Skew,
+                start: boundary,
+                end: top,
+                bytes: 0,
+                link: NO_LINK,
+                detail,
+            });
+        } else {
+            segs.push(PathSegment {
+                rank,
+                blame,
+                start,
+                end: top,
+                bytes: a.bytes,
+                link: NO_LINK,
+                detail,
+            });
+        }
+        top = start;
+    }
+    if top > lo {
+        segs.push(wait(rank, lo, top, &format!("phase{phase}")));
+    }
+}

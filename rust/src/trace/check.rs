@@ -18,8 +18,10 @@
 //! * [`check_triggers_after_tracker`] — causality of track-and-trigger:
 //!   no DMA trigger instant precedes its position's tracker completion.
 
-use super::{FabricLinkTrace, InstantKind, Lane, RankTrace};
+use super::{DepKind, FabricLinkTrace, InstantKind, Lane, RankTrace, Trace, UNKNOWN_RANK};
+use crate::obs::CausalPath;
 use crate::sim::stats::DramCounters;
+use crate::sim::time::SimTime;
 
 /// Lanes whose spans represent exclusive resource occupancy in a single
 /// engine run (everything but the instant-only tracker lane).
@@ -156,6 +158,97 @@ pub fn check_triggers_after_tracker(t: &RankTrace) -> Result<(), String> {
     Ok(())
 }
 
+/// Structural well-formedness of every recorded [`super::DepEdge`]:
+/// timestamps ordered (`src_at <= granted <= dst_at`), congestion bounded
+/// by the edge's whole extent, the edge recorded on its source rank, the
+/// destination either a recorded rank or the sender-side
+/// [`UNKNOWN_RANK`] sentinel, and (on full traces) every message edge
+/// anchored to a `LinkEgress` span granted at the same instant with the
+/// same payload.
+pub fn check_dep_edges(t: &Trace) -> Result<(), String> {
+    let nranks = t.ranks.len() as u64;
+    for r in &t.ranks {
+        for (i, e) in r.edges.iter().enumerate() {
+            let at = |m: &str| format!("rank {} edge {i} ({:?}): {m}", r.rank, e.kind);
+            if !(e.src_at <= e.granted && e.granted <= e.dst_at) {
+                return Err(at(&format!(
+                    "timestamps out of order: src {} granted {} dst {}",
+                    e.src_at, e.granted, e.dst_at
+                )));
+            }
+            if e.cong > e.dst_at - e.src_at {
+                return Err(at(&format!(
+                    "congestion {} exceeds extent {}",
+                    e.cong,
+                    e.dst_at - e.src_at
+                )));
+            }
+            if e.src_rank != r.rank {
+                return Err(at(&format!("recorded on rank {} but src is {}", r.rank, e.src_rank)));
+            }
+            if e.dst_rank != UNKNOWN_RANK && e.dst_rank >= nranks {
+                return Err(at(&format!("dst rank {} out of range (n={nranks})", e.dst_rank)));
+            }
+            if e.kind == DepKind::Msg && !r.spans.is_empty() {
+                let anchored = r.spans.iter().any(|s| {
+                    s.lane == Lane::LinkEgress && s.start == e.granted && s.bytes == e.bytes
+                });
+                if !anchored {
+                    return Err(at(&format!(
+                        "no egress span granted at {} carrying {} bytes",
+                        e.granted, e.bytes
+                    )));
+                }
+            }
+        }
+    }
+    Ok(())
+}
+
+/// The causal critical path explains the whole run: segments are
+/// non-empty, properly ordered (`start < end`), contiguous (each segment
+/// starts where the previous ended), and tile `[0, total)` exactly — so
+/// durations (and any blame partition of them) sum to the run total in
+/// exact integer arithmetic.
+pub fn check_critical_path(path: &CausalPath, total: SimTime) -> Result<(), String> {
+    if path.total != total {
+        return Err(format!("path total {} != run total {total}", path.total));
+    }
+    if total.is_zero() {
+        return Ok(());
+    }
+    let Some(first) = path.segments.first() else {
+        return Err("empty path for a non-empty run".to_string());
+    };
+    if !first.start.is_zero() {
+        return Err(format!("path starts at {} not 0", first.start));
+    }
+    let last = path.segments.last().expect("non-empty");
+    if last.end != total {
+        return Err(format!("path ends at {} not total {total}", last.end));
+    }
+    let mut sum = SimTime::ZERO;
+    for (i, s) in path.segments.iter().enumerate() {
+        if s.start >= s.end {
+            return Err(format!("segment {i} empty or inverted: [{}, {})", s.start, s.end));
+        }
+        if i > 0 {
+            let prev = &path.segments[i - 1];
+            if s.start != prev.end {
+                return Err(format!(
+                    "gap/overlap at segment {i}: prev ends {} next starts {}",
+                    prev.end, s.start
+                ));
+            }
+        }
+        sum += s.end - s.start;
+    }
+    if sum != total {
+        return Err(format!("segment durations sum to {sum}, total is {total}"));
+    }
+    Ok(())
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
@@ -225,6 +318,92 @@ mod tests {
         l.spans[1].start = SimTime::ps(10);
         l.queue_depth.pop();
         assert!(check_fabric_links(std::slice::from_ref(&l)).is_err());
+    }
+
+    #[test]
+    fn dep_edge_invariants() {
+        use crate::trace::{DepEdge, NO_LINK};
+        let mut t = RankTrace::new(0);
+        t.spans.push(span(Lane::LinkEgress, 10, 20, 64));
+        t.edges.push(DepEdge {
+            kind: DepKind::Msg,
+            src_rank: 0,
+            dst_rank: UNKNOWN_RANK,
+            src_at: SimTime::ps(5),
+            granted: SimTime::ps(10),
+            dst_at: SimTime::ps(20),
+            bytes: 64,
+            cong: SimTime::ps(5),
+            link: NO_LINK,
+        });
+        let trace = crate::trace::Trace::single("demo", t);
+        assert!(check_dep_edges(&trace).is_ok());
+
+        let mut bad = trace.clone();
+        bad.ranks[0].edges[0].cong = SimTime::ps(16); // > extent 15
+        assert!(check_dep_edges(&bad).unwrap_err().contains("congestion"));
+
+        let mut bad = trace.clone();
+        bad.ranks[0].edges[0].granted = SimTime::ps(25); // > dst_at
+        assert!(check_dep_edges(&bad).unwrap_err().contains("out of order"));
+
+        let mut bad = trace.clone();
+        bad.ranks[0].edges[0].bytes = 65; // no matching egress span
+        assert!(check_dep_edges(&bad).unwrap_err().contains("egress span"));
+
+        let mut bad = trace.clone();
+        bad.ranks[0].edges[0].dst_rank = 7; // only rank 0 exists
+        assert!(check_dep_edges(&bad).unwrap_err().contains("out of range"));
+    }
+
+    #[test]
+    fn critical_path_contiguity() {
+        use crate::obs::{Blame, PathSegment};
+        use crate::trace::NO_LINK;
+        let seg = |s: u64, e: u64| PathSegment {
+            rank: 0,
+            blame: Blame::Compute,
+            start: SimTime::ps(s),
+            end: SimTime::ps(e),
+            bytes: 0,
+            link: NO_LINK,
+            detail: String::new(),
+        };
+        let total = SimTime::ps(30);
+        let good = CausalPath {
+            rank: 0,
+            total,
+            segments: vec![seg(0, 10), seg(10, 30)],
+        };
+        assert!(check_critical_path(&good, total).is_ok());
+
+        let gap = CausalPath {
+            rank: 0,
+            total,
+            segments: vec![seg(0, 10), seg(12, 30)],
+        };
+        assert!(check_critical_path(&gap, total).unwrap_err().contains("gap"));
+
+        let short = CausalPath {
+            rank: 0,
+            total,
+            segments: vec![seg(0, 10)],
+        };
+        assert!(check_critical_path(&short, total).unwrap_err().contains("ends at"));
+
+        let empty = CausalPath {
+            rank: 0,
+            total,
+            segments: vec![],
+        };
+        assert!(check_critical_path(&empty, total).is_err());
+        // A zero-length run legitimately has an empty path.
+        let zero = CausalPath {
+            rank: 0,
+            total: SimTime::ZERO,
+            segments: vec![],
+        };
+        assert!(check_critical_path(&zero, SimTime::ZERO).is_ok());
     }
 
     #[test]

@@ -97,6 +97,42 @@ impl Intervals {
     pub fn union(&self, other: &Intervals) -> Intervals {
         Self::from_pairs(self.0.iter().chain(other.0.iter()).copied())
     }
+
+    /// Set difference: the part of this set not covered by `other`.
+    /// Linear two-pointer sweep — both sides are sorted and merged, and a
+    /// subtrahend interval can only carve the minuend intervals it
+    /// overlaps, so each side is visited once.
+    pub fn subtract(&self, other: &Intervals) -> Intervals {
+        let b = &other.0;
+        let mut out = Vec::new();
+        let mut j = 0usize;
+        for &(s, e) in &self.0 {
+            let mut cur = s;
+            while j < b.len() && b[j].1 <= cur {
+                j += 1;
+            }
+            let mut k = j;
+            while k < b.len() && b[k].0 < e {
+                if b[k].0 > cur {
+                    out.push((cur, b[k].0));
+                }
+                cur = cur.max(b[k].1);
+                if b[k].1 >= e {
+                    break;
+                }
+                k += 1;
+            }
+            if cur < e {
+                out.push((cur, e));
+            }
+        }
+        Intervals(out)
+    }
+
+    /// The merged, sorted `(start_ps, end_ps)` pairs.
+    pub fn pairs(&self) -> &[(u64, u64)] {
+        &self.0
+    }
 }
 
 /// Busy/byte summary of one lane.
@@ -330,6 +366,24 @@ mod tests {
         let b = iv(&[(5, 15), (20, 25)]);
         let u = a.union(&b);
         assert_eq!(u.total(), SimTime::ps(15 + 5));
+    }
+
+    #[test]
+    fn intervals_subtract() {
+        let a = iv(&[(0, 10), (20, 30), (40, 50)]);
+        // Carve the middle of the first, all of the second, nothing of
+        // the third.
+        let b = iv(&[(3, 7), (15, 35)]);
+        let d = a.subtract(&b);
+        assert_eq!(d.pairs(), &[(0, 3), (7, 10), (40, 50)]);
+        // subtract + intersect partition the minuend exactly.
+        assert_eq!(d.total() + a.intersect(&b).total(), a.total());
+        // One subtrahend interval spanning several minuend intervals.
+        let wide = iv(&[(5, 45)]);
+        assert_eq!(a.subtract(&wide).pairs(), &[(0, 5), (45, 50)]);
+        // Empty subtrahend is the identity; subtracting a superset empties.
+        assert_eq!(a.subtract(&iv(&[])), a);
+        assert!(a.subtract(&iv(&[(0, 50)])).is_empty());
     }
 
     fn span(lane: Lane, s: u64, e: u64, bytes: u64) -> Span {

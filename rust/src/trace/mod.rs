@@ -164,6 +164,112 @@ pub struct Instant {
     pub kind: InstantKind,
 }
 
+/// How a [`TraceSink`] records: nothing, full span/edge vectors, or
+/// streaming aggregates ([`LaneAgg`]) with O(lanes) memory per rank.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
+pub enum SinkMode {
+    /// No capture (the default): one `Option` branch per record call.
+    #[default]
+    Off,
+    /// Full capture: every span, instant, and dependency edge.
+    Full,
+    /// Streaming capture: spans fold into per-lane [`LaneAgg`]s, edges
+    /// into congestion/count totals — bit-identical aggregates to `Full`
+    /// with memory independent of event count (the TP-1024 mode).
+    Metrics,
+}
+
+impl SinkMode {
+    pub fn enabled(self) -> bool {
+        self != SinkMode::Off
+    }
+}
+
+/// Sentinel "no fabric link" id on a [`DepEdge`] (direct links and
+/// loopback routes have no physical link identity).
+pub const NO_LINK: u32 = u32::MAX;
+
+/// Sentinel "not yet resolved" rank on a [`DepEdge`]. Message edges are
+/// recorded by the *sender*, whose destination rank is assigned by the
+/// cluster driver's dest map; the driver patches it after the run.
+pub const UNKNOWN_RANK: u64 = u64::MAX;
+
+/// What kind of causal dependency a [`DepEdge`] records.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum DepKind {
+    /// Message send → delivery: `src_at` is send-ready, `granted` the
+    /// link grant, `dst_at` the last-byte arrival at the receiver.
+    Msg,
+    /// Tracker completion → trigger/slice-launch firing on the same rank.
+    Trigger,
+    /// Intra-rank step ordering (ring step `k` end → step `k+1` start).
+    Step,
+    /// Phase [`crate::cluster::StartRule`] edge: the predecessor time
+    /// that defined this rank's phase start (recorded by `execute`).
+    PhaseStart,
+}
+
+/// One true dependency recorded during execution — the raw material of
+/// the causal critical path ([`crate::obs`]). All times are absolute.
+/// Invariant: `src_at <= granted <= dst_at`, and `cong` (time spent
+/// queued behind background fabric flows, summed over the route's hops)
+/// never exceeds the edge's whole extent `dst_at - src_at` (later hops
+/// queue inside `[granted, dst_at)`, so it is not bounded by the
+/// first-hop wait alone).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct DepEdge {
+    pub kind: DepKind,
+    pub src_rank: u64,
+    pub dst_rank: u64,
+    /// When the cause was ready (send-ready / tracker-done / step end).
+    pub src_at: SimTime,
+    /// When the link granted bandwidth (`== src_at` for non-Msg edges).
+    pub granted: SimTime,
+    /// When the effect happened (delivery / trigger fire / phase start).
+    pub dst_at: SimTime,
+    /// Payload the edge moved (0 for control edges).
+    pub bytes: u64,
+    /// Queueing behind *background* flows, summed over the route's hops —
+    /// the congestion share of the edge's latency (bounded by
+    /// `dst_at - src_at`, not by the first-hop wait).
+    pub cong: SimTime,
+    /// First-hop fabric link id, [`NO_LINK`] off-fabric.
+    pub link: u32,
+}
+
+/// Streaming per-lane aggregate of one phase of one rank: the exact busy
+/// time, byte, and span-count sums a full span vector would yield —
+/// [`SinkMode::Metrics`] keeps only these.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct LaneAgg {
+    /// Phase index within the run (stamped by `execute`).
+    pub phase: u32,
+    pub lane: Lane,
+    /// Sum of span durations (spans on one lane never self-overlap).
+    pub busy: SimTime,
+    pub bytes: u64,
+    pub spans: u64,
+}
+
+/// Fold a span into a per-lane aggregate list (shared by the metrics
+/// sink and the full-trace equivalence fold).
+fn fold_span_into_agg(agg: &mut Vec<LaneAgg>, s: &Span) {
+    match agg.iter_mut().find(|a| a.lane == s.lane) {
+        Some(a) => {
+            a.busy += s.end - s.start;
+            a.bytes += s.bytes;
+            a.spans += 1;
+        }
+        None => agg.push(LaneAgg {
+            phase: 0,
+            lane: s.lane,
+            busy: s.end - s.start,
+            bytes: s.bytes,
+            spans: 1,
+        }),
+    }
+}
+
 /// One rank's timeline. `end` is the phase's accounted end (stamped by the
 /// engine at drain, carried exactly through shifts and merges), so
 /// trace-derived totals equal engine-reported totals to the bit.
@@ -173,6 +279,19 @@ pub struct RankTrace {
     pub end: SimTime,
     pub spans: Vec<Span>,
     pub instants: Vec<Instant>,
+    /// Dependency edges recorded on this rank (full mode; plus the
+    /// phase-start edges `execute` appends in every mode).
+    pub edges: Vec<DepEdge>,
+    /// Per-(phase, lane) streaming aggregates. Populated by the metrics
+    /// sink as events arrive, and by [`RankTrace::seal_phase`] from the
+    /// span vector in full mode — bit-identical by construction.
+    pub agg: Vec<LaneAgg>,
+    /// Total congestion over recorded edges (kept in every mode).
+    pub cong: SimTime,
+    /// Edges recorded through the sink (kept even when `edges` folds).
+    pub edge_count: u64,
+    /// Instants recorded through the sink (kept even when folded).
+    pub instant_count: u64,
 }
 
 impl RankTrace {
@@ -182,6 +301,11 @@ impl RankTrace {
             end: SimTime::ZERO,
             spans: Vec::new(),
             instants: Vec::new(),
+            edges: Vec::new(),
+            agg: Vec::new(),
+            cong: SimTime::ZERO,
+            edge_count: 0,
+            instant_count: 0,
         }
     }
 
@@ -195,6 +319,11 @@ impl RankTrace {
         for i in &mut self.instants {
             i.at += by;
         }
+        for e in &mut self.edges {
+            e.src_at += by;
+            e.granted += by;
+            e.dst_at += by;
+        }
         self.end += by;
         self
     }
@@ -206,6 +335,29 @@ impl RankTrace {
         self.end = self.end.max(other.end);
         self.spans.extend(other.spans);
         self.instants.extend(other.instants);
+        self.edges.extend(other.edges);
+        self.agg.extend(other.agg);
+        self.cong += other.cong;
+        self.edge_count += other.edge_count;
+        self.instant_count += other.instant_count;
+    }
+
+    /// Stamp this (single-phase) timeline with its phase index: in full
+    /// mode derive the per-lane aggregates from the span vector (the
+    /// same fold the metrics sink streams through), in metrics mode
+    /// re-stamp the sink-built entries. After this, `agg` is identical
+    /// across [`SinkMode::Full`] and [`SinkMode::Metrics`].
+    pub fn seal_phase(&mut self, phase: u32) {
+        if self.agg.is_empty() {
+            let mut agg = Vec::new();
+            for s in &self.spans {
+                fold_span_into_agg(&mut agg, s);
+            }
+            self.agg = agg;
+        }
+        for a in &mut self.agg {
+            a.phase = phase;
+        }
     }
 
     pub fn lane_spans(&self, lane: Lane) -> impl Iterator<Item = &Span> {
@@ -287,50 +439,94 @@ impl Trace {
 /// engine [`crate::engine::Runner`]. Off by default — one `Option` branch
 /// per record call, nothing allocated, and the simulation itself never
 /// reads it back, so disabled runs are bit-identical and benchmark-neutral
-/// (`benches/trace_overhead.rs` pins the overhead).
+/// (`benches/trace_overhead.rs` pins the overhead). In
+/// [`SinkMode::Metrics`] every record call folds into O(lanes) state
+/// instead of growing vectors — the aggregates stay bit-identical to a
+/// full capture, the memory stays constant per rank.
 #[derive(Debug, Default)]
-pub struct TraceSink(Option<Box<RankTrace>>);
+pub struct TraceSink {
+    mode: SinkMode,
+    t: Option<Box<RankTrace>>,
+}
 
 impl TraceSink {
     /// The no-op sink.
     pub fn off() -> Self {
-        TraceSink(None)
+        TraceSink::default()
     }
 
-    /// A recording sink for rank `rank`.
+    /// A full-capture recording sink for rank `rank`.
     pub fn on(rank: u64) -> Self {
-        TraceSink(Some(Box::new(RankTrace::new(rank))))
+        TraceSink::with_mode(rank, SinkMode::Full)
+    }
+
+    /// A recording sink for rank `rank` in the given mode.
+    pub fn with_mode(rank: u64, mode: SinkMode) -> Self {
+        TraceSink {
+            mode,
+            t: mode.enabled().then(|| Box::new(RankTrace::new(rank))),
+        }
     }
 
     #[inline]
     pub fn enabled(&self) -> bool {
-        self.0.is_some()
+        self.t.is_some()
+    }
+
+    pub fn mode(&self) -> SinkMode {
+        self.mode
+    }
+
+    /// The rank this sink records for (None when off).
+    pub fn rank(&self) -> Option<u64> {
+        self.t.as_ref().map(|t| t.rank)
     }
 
     #[inline]
     pub fn span(&mut self, lane: Lane, start: SimTime, end: SimTime, bytes: u64, label: SpanLabel) {
-        if let Some(t) = &mut self.0 {
+        if let Some(t) = &mut self.t {
             debug_assert!(end >= start, "span rewinds: {start} > {end}");
-            t.spans.push(Span {
+            let s = Span {
                 lane,
                 start,
                 end,
                 bytes,
                 label,
-            });
+            };
+            match self.mode {
+                SinkMode::Metrics => fold_span_into_agg(&mut t.agg, &s),
+                _ => t.spans.push(s),
+            }
         }
     }
 
     #[inline]
     pub fn instant(&mut self, lane: Lane, at: SimTime, kind: InstantKind) {
-        if let Some(t) = &mut self.0 {
-            t.instants.push(Instant { lane, at, kind });
+        if let Some(t) = &mut self.t {
+            t.instant_count += 1;
+            if self.mode != SinkMode::Metrics {
+                t.instants.push(Instant { lane, at, kind });
+            }
+        }
+    }
+
+    /// Record a dependency edge. Congestion and edge counts accumulate in
+    /// every mode; the edge itself is kept only by the full sink.
+    #[inline]
+    pub fn edge(&mut self, e: DepEdge) {
+        if let Some(t) = &mut self.t {
+            debug_assert!(e.src_at <= e.granted && e.granted <= e.dst_at, "edge rewinds");
+            t.edge_count += 1;
+            t.cong += e.cong;
+            if self.mode != SinkMode::Metrics {
+                t.edges.push(e);
+            }
         }
     }
 
     /// Drain the recorded timeline (if any), stamping the phase end.
     pub fn finish(&mut self, end: SimTime) -> Option<RankTrace> {
-        self.0.take().map(|mut t| {
+        self.t.take().map(|mut t| {
             t.end = t.end.max(end);
             *t
         })

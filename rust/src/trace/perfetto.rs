@@ -10,6 +10,7 @@
 
 use super::json::JsonWriter;
 use super::{Lane, Trace};
+use crate::obs::CausalPath;
 use crate::sim::time::SimTime;
 
 fn us(t: SimTime) -> f64 {
@@ -18,6 +19,17 @@ fn us(t: SimTime) -> f64 {
 
 /// Serialize a trace as a `trace_events` JSON document.
 pub fn export(trace: &Trace) -> String {
+    export_impl(trace, None)
+}
+
+/// Serialize a trace with the causal critical path overlaid as its own
+/// pseudo-process, sorted above every rank (`process_sort_index` -1): each
+/// attributed segment renders as a complete event named by its blame.
+pub fn export_with_path(trace: &Trace, path: &CausalPath) -> String {
+    export_impl(trace, Some(path))
+}
+
+fn export_impl(trace: &Trace, path: Option<&CausalPath>) -> String {
     let mut w = JsonWriter::new();
     w.begin_obj();
     w.key("displayTimeUnit").str_val("ms");
@@ -106,6 +118,17 @@ pub fn export(trace: &Trace) -> String {
                 w.end_obj();
                 w.end_obj();
             }
+            // Achieved-bandwidth counter track ("ph":"C"): the link's
+            // delivered rate over each granted window, dropping to zero
+            // between windows.
+            for s in &link.spans {
+                if s.end <= s.start {
+                    continue;
+                }
+                let gbps = 8000.0 * s.bytes as f64 / (s.end - s.start).as_ps() as f64;
+                counter(&mut w, tid, us(s.start), &format!("bw {}", link.name), gbps);
+                counter(&mut w, tid, us(s.end), &format!("bw {}", link.name), 0.0);
+            }
             for &(at, depth) in &link.queue_depth {
                 w.begin_obj();
                 w.key("ph").str_val("i");
@@ -115,8 +138,19 @@ pub fn export(trace: &Trace) -> String {
                 w.key("ts").f64_val(us(at));
                 w.key("name").str_val(&format!("queue-depth {depth}"));
                 w.end_obj();
+                // Queue-depth counter track alongside the instants.
+                counter(
+                    &mut w,
+                    tid,
+                    us(at),
+                    &format!("queue {}", link.name),
+                    depth as f64,
+                );
             }
         }
+    }
+    if let Some(p) = path {
+        emit_path(&mut w, p);
     }
     w.end_arr();
     w.key("traceName").str_val(&trace.name);
@@ -124,8 +158,69 @@ pub fn export(trace: &Trace) -> String {
     w.finish()
 }
 
+fn counter(w: &mut JsonWriter, tid: u64, ts: f64, name: &str, value: f64) {
+    w.begin_obj();
+    w.key("ph").str_val("C");
+    w.key("pid").u64_val(FABRIC_PID);
+    w.key("tid").u64_val(tid);
+    w.key("ts").f64_val(ts);
+    w.key("name").str_val(name);
+    w.key("args").begin_obj();
+    w.key("value").f64_val(value);
+    w.end_obj();
+    w.end_obj();
+}
+
+/// The critical-path pseudo-process: one track of blame-named complete
+/// events tiling `[0, total)`, pinned above every rank by sort index.
+fn emit_path(w: &mut JsonWriter, path: &CausalPath) {
+    w.begin_obj();
+    w.key("ph").str_val("M");
+    w.key("pid").u64_val(PATH_PID);
+    w.key("name").str_val("process_name");
+    w.key("args").begin_obj();
+    w.key("name").str_val("critical-path");
+    w.end_obj();
+    w.end_obj();
+    w.begin_obj();
+    w.key("ph").str_val("M");
+    w.key("pid").u64_val(PATH_PID);
+    w.key("name").str_val("process_sort_index");
+    w.key("args").begin_obj();
+    w.key("sort_index").raw_val("-1");
+    w.end_obj();
+    w.end_obj();
+    w.begin_obj();
+    w.key("ph").str_val("M");
+    w.key("pid").u64_val(PATH_PID);
+    w.key("tid").u64_val(1);
+    w.key("name").str_val("thread_name");
+    w.key("args").begin_obj();
+    w.key("name").str_val(&format!("path (makespan rank {})", path.rank));
+    w.end_obj();
+    w.end_obj();
+    for s in &path.segments {
+        w.begin_obj();
+        w.key("ph").str_val("X");
+        w.key("pid").u64_val(PATH_PID);
+        w.key("tid").u64_val(1);
+        w.key("ts").f64_val(us(s.start));
+        w.key("dur").f64_val(us(s.end - s.start));
+        w.key("name").str_val(s.blame.name());
+        w.key("args").begin_obj();
+        w.key("rank").u64_val(s.rank);
+        w.key("detail").str_val(&s.detail);
+        w.key("bytes").u64_val(s.bytes);
+        w.end_obj();
+        w.end_obj();
+    }
+}
+
 /// Perfetto pid of the fabric pseudo-process (well above any rank id).
 const FABRIC_PID: u64 = 1_000_000;
+
+/// Perfetto pid of the critical-path pseudo-process.
+const PATH_PID: u64 = 2_000_000;
 
 #[cfg(test)]
 mod tests {
@@ -203,5 +298,52 @@ mod tests {
         assert!(json.contains("link h1->h0"), "{json}");
         assert!(json.contains("queue-depth 2"), "{json}");
         assert!(json.contains(&format!("\"pid\":{}", 1_000_000u64)), "{json}");
+        // Counter tracks: queue depth and achieved bandwidth ("ph":"C").
+        assert!(json.contains("\"ph\":\"C\""), "{json}");
+        assert!(json.contains("queue h1->h0"), "{json}");
+        assert!(json.contains("bw h1->h0"), "{json}");
+        // 4096 B over 2 us is 16.384 Gbps.
+        assert!(json.contains("\"value\":16.384"), "{json}");
+    }
+
+    #[test]
+    fn path_overlay_renders_sorted_first() {
+        use crate::obs::{Blame, CausalPath, PathSegment};
+        use crate::trace::NO_LINK;
+        let t = demo();
+        let path = CausalPath {
+            rank: 0,
+            total: SimTime::us(10),
+            segments: vec![
+                PathSegment {
+                    rank: 0,
+                    blame: Blame::Compute,
+                    start: SimTime::ZERO,
+                    end: SimTime::us(5),
+                    bytes: 0,
+                    link: NO_LINK,
+                    detail: "cu-compute stage 0".to_string(),
+                },
+                PathSegment {
+                    rank: 0,
+                    blame: Blame::Wait,
+                    start: SimTime::us(5),
+                    end: SimTime::us(10),
+                    bytes: 0,
+                    link: NO_LINK,
+                    detail: "idle".to_string(),
+                },
+            ],
+        };
+        let json = export_with_path(&t, &path);
+        assert!(json_balanced(&json), "unbalanced JSON: {json}");
+        assert!(json.contains("\"critical-path\""), "{json}");
+        assert!(json.contains("\"sort_index\":-1"), "{json}");
+        assert!(json.contains("path (makespan rank 0)"), "{json}");
+        assert!(json.contains("\"compute\""), "{json}");
+        assert!(json.contains("\"wait\""), "{json}");
+        assert!(json.contains(&format!("\"pid\":{}", 2_000_000u64)), "{json}");
+        // Plain export carries no overlay.
+        assert!(!export(&t).contains("critical-path"));
     }
 }

@@ -609,8 +609,9 @@ fn execute_composes_serialized_phases_like_the_legacy_pipeline() {
             &prog,
             &ExecOpts {
                 target: ExecTarget::Cluster(model.clone()),
-                trace: false,
+                sink: t3::trace::SinkMode::Off,
                 interleave: Interleave::Ascending,
+                oracle: false,
             },
         );
 
@@ -1175,5 +1176,41 @@ fn prop_ensemble_is_deterministic_over_scenario_space() {
             .run(&sys(), &m, tp, t3::models::SubLayer::OpFwd);
         assert_eq!(a.draws, b.draws, "worker count changed a draw");
         assert_eq!(a.totals, b.totals, "worker count changed the tail");
+    });
+}
+
+#[test]
+fn dep_edges_are_well_formed_across_machine_kinds_and_topologies() {
+    // Satellite: `check_dep_edges` fuzzed across collective families x
+    // skew x topology (legacy + multi-hop fabric) x TP x sink mode. Every
+    // recorded dependency edge must be structurally sound — ordered
+    // timestamps, congestion bounded by the edge extent, source-rank
+    // recording, resolved destinations in range, and (full mode) message
+    // edges anchored to their egress span — and the causal critical path
+    // extracted from the same run must tile [0, total) exactly.
+    use t3::experiment::ScenarioSpec;
+    use t3::models::{by_name, SubLayer};
+    use t3::obs;
+    use t3::testkit::{check_critical_path, check_dep_edges};
+    use t3::trace::SinkMode;
+    let s = sys();
+    let m = by_name("Mega-GPT-2").unwrap();
+    forall(16, |rng| {
+        let tp = *rng.choose(&[2u64, 4, 8]);
+        let base = match rng.index(4) {
+            0 => ScenarioSpec::sequential(),
+            1 => ScenarioSpec::t3_mca(),
+            2 => ScenarioSpec::t3_mca().fused_ag(),
+            _ => ScenarioSpec::sequential().all_to_all(),
+        };
+        let scenario = base.cluster(fuzz_model_any(rng, tp));
+        let sink = if rng.chance(0.5) { SinkMode::Full } else { SinkMode::Metrics };
+        let report = scenario.run_report(&s, &m, tp, SubLayer::OpFwd, sink);
+        let trace = report.trace.as_ref().expect("sink enabled");
+        check_dep_edges(trace).unwrap_or_else(|e| panic!("{}: {e}", scenario.name));
+        let factors = scenario.cluster.as_ref().unwrap().factors(tp, s.seed);
+        let path = obs::critical_path(&report, &factors);
+        check_critical_path(&path, report.total)
+            .unwrap_or_else(|e| panic!("{} ({sink:?}): {e}", scenario.name));
     });
 }

@@ -1,0 +1,200 @@
+//! Acceptance pins for the causal profiler (`t3::obs`, `t3 profile`).
+//!
+//! * **Universality** — every registry preset yields a critical path that
+//!   tiles `[0, total)` contiguously, with blame durations summing to the
+//!   run total in exact `SimTime` arithmetic, under both sink modes.
+//! * **Full/metrics equivalence** — the streaming metrics sink produces
+//!   bit-identical lane rollups, totals, and recorded congestion to the
+//!   full sink on every preset (only within-phase path granularity
+//!   coarsens).
+//! * **Blame pins** — `T3-AR-Fused` exposes strictly less communication
+//!   on the path than `Sequential`; `Congested-A2A` carries strictly
+//!   positive congestion blame its uncontended twin lacks entirely.
+//! * **What-if** — the zero-skew replay of `T3-AR-Fused-Straggler`
+//!   projects a speedup >= 1 and lands bit-exactly on an independently
+//!   constructed no-skew run.
+//! * **Determinism** — sharded and oracle drivers profile identically,
+//!   and `t3 profile --json` emits byte-identical output across
+//!   `T3_THREADS` in {1, 2, 8}.
+
+use t3::cluster::{execute, ClusterModel, ExecOpts, ExecTarget, Interleave};
+use t3::config::SystemConfig;
+use t3::experiment::{preset, registry};
+use t3::models::{by_name, SubLayer};
+use t3::obs::{critical_path, profile, ProfileOpts, ProfileReport, WhatIf};
+use t3::testkit::{check_critical_path, check_dep_edges, json_balanced};
+use t3::trace::SinkMode;
+
+fn sys() -> SystemConfig {
+    SystemConfig::table1()
+}
+
+const TP: u64 = 4;
+
+/// Profile one scenario at the suite's standard operating point.
+fn prof(spec: &t3::experiment::ScenarioSpec, sink: SinkMode) -> ProfileReport {
+    let s = sys();
+    let m = by_name("T-NLG").unwrap();
+    let opts = ProfileOpts { sink, what_if: Vec::new() };
+    profile(&s, spec, &m, TP, SubLayer::OpFwd, &opts)
+}
+
+#[test]
+fn every_registry_preset_yields_an_exact_partitioned_path_in_both_sink_modes() {
+    for scenario in registry() {
+        let name = scenario.name.clone();
+        let full = prof(&scenario, SinkMode::Full);
+        let metrics = prof(&scenario, SinkMode::Metrics);
+
+        for (mode, rep) in [("full", &full), ("metrics", &metrics)] {
+            // The path tiles [0, total) with no gaps or overlaps.
+            check_critical_path(&rep.path, rep.total)
+                .unwrap_or_else(|e| panic!("{name} ({mode}): {e}"));
+            // Blame partitions the path: the seven-way rollup re-sums to
+            // the run total exactly.
+            assert_eq!(rep.blame.total(), rep.total, "{name} ({mode}): blame partition");
+            // Recorded dependency edges are well-formed in both modes.
+            let trace = rep.trace.as_ref().expect("profile keeps its trace");
+            check_dep_edges(trace).unwrap_or_else(|e| panic!("{name} ({mode}): {e}"));
+        }
+
+        // The streaming sink is bit-identical to the full sink on every
+        // derived aggregate: totals, per-lane rollups, congestion.
+        assert_eq!(full.total, metrics.total, "{name}: total across sinks");
+        assert_eq!(full.lanes, metrics.lanes, "{name}: lane rollups across sinks");
+        assert_eq!(full.cong_total, metrics.cong_total, "{name}: congestion across sinks");
+    }
+}
+
+#[test]
+fn fused_ar_exposes_less_comm_on_the_path_than_sequential() {
+    let seq = prof(&preset("sequential").unwrap(), SinkMode::Full);
+    let fused = prof(&preset("ar-fused").unwrap(), SinkMode::Full);
+    assert!(
+        fused.blame.exposed_comm() < seq.blame.exposed_comm(),
+        "fused {:?} vs sequential {:?}",
+        fused.blame.exposed_comm(),
+        seq.blame.exposed_comm()
+    );
+    // The overlap also wins end-to-end, so the blame shift is not an
+    // artifact of a slower run.
+    assert!(fused.total < seq.total);
+}
+
+#[test]
+fn congested_a2a_blames_congestion_its_uncontended_twin_lacks() {
+    use t3::fabric::FabricSpec;
+    let congested = prof(&preset("congested-a2a").unwrap(), SinkMode::Full);
+    // The uncontended twin: the same serialized A2A on the same ring
+    // fabric, minus the background flow.
+    let twin_spec = t3::experiment::ScenarioSpec::sequential()
+        .all_to_all()
+        .cluster(ClusterModel::fabric(FabricSpec::ring()));
+    let twin = prof(&twin_spec, SinkMode::Full);
+
+    assert!(
+        !congested.blame.congestion.is_zero(),
+        "congested blame: {:?}",
+        congested.blame
+    );
+    assert!(
+        twin.blame.congestion.is_zero(),
+        "uncontended twin blamed congestion: {:?}",
+        twin.blame
+    );
+    // The congestion share is real wall-clock: the congested run is
+    // strictly slower than its twin.
+    assert!(congested.total > twin.total);
+    // And the profile's link rollup names the fabric links it crossed.
+    assert!(!congested.links.is_empty());
+}
+
+#[test]
+fn zero_skew_what_if_matches_an_independent_no_skew_run_bit_exactly() {
+    let s = sys();
+    let m = by_name("T-NLG").unwrap();
+    let spec = preset("ar-straggler").unwrap();
+    let opts = ProfileOpts { sink: SinkMode::Full, what_if: vec![WhatIf::ZeroSkew] };
+    let rep = profile(&s, &spec, &m, TP, SubLayer::OpFwd, &opts);
+
+    assert_eq!(rep.what_if.len(), 1);
+    let wi = &rep.what_if[0];
+    assert_eq!(wi.knob, "zero-skew");
+    // Removing the straggler can only help.
+    assert!(wi.speedup >= 1.0, "speedup {}", wi.speedup);
+    assert!(wi.total <= rep.total);
+
+    // Non-tautological comparator: the same scenario family built from a
+    // *different* preset (`T3-AR-Fused`, which ships without a cluster
+    // model) put on an independently constructed uniform cluster. The
+    // replay must land on it to the bit.
+    let direct = preset("ar-fused")
+        .unwrap()
+        .cluster(ClusterModel::uniform())
+        .run_report(&s, &m, TP, SubLayer::OpFwd, SinkMode::Off);
+    assert_eq!(wi.total, direct.total, "zero-skew replay vs direct no-skew run");
+}
+
+#[test]
+fn sharded_and_oracle_drivers_profile_identically() {
+    let s = sys();
+    let m = by_name("T-NLG").unwrap();
+    let spec = preset("ar-straggler").unwrap();
+    let cm = spec.cluster.clone().expect("straggler preset carries a cluster");
+    let prog = spec.compile(&s, &m, TP, SubLayer::OpFwd);
+
+    let run = |oracle: bool| {
+        execute(
+            &s,
+            &prog,
+            &ExecOpts {
+                target: ExecTarget::Cluster(cm.clone()),
+                sink: SinkMode::Full,
+                interleave: Interleave::Ascending,
+                oracle,
+            },
+        )
+    };
+    let sharded = run(false);
+    let oracle = run(true);
+
+    assert_eq!(sharded.total, oracle.total);
+    assert_eq!(sharded.trace, oracle.trace, "recorded timelines diverge");
+
+    // Identical traces imply identical paths; assert it end-to-end
+    // through the walker anyway.
+    let factors = cm.factors(TP, s.seed);
+    let a = critical_path(&sharded, &factors);
+    let b = critical_path(&oracle, &factors);
+    assert_eq!(a, b);
+    check_critical_path(&a, sharded.total).unwrap();
+}
+
+#[test]
+fn profile_json_is_byte_identical_across_thread_counts() {
+    let bin = env!("CARGO_BIN_EXE_t3");
+    let outputs: Vec<Vec<u8>> = ["1", "2", "8"]
+        .iter()
+        .map(|threads| {
+            let out = std::process::Command::new(bin)
+                .args(["profile", "T3-AR-FatTree", "--tp", "4", "--json"])
+                .env("T3_THREADS", threads)
+                .output()
+                .expect("t3 profile runs");
+            assert!(
+                out.status.success(),
+                "T3_THREADS={threads}: {}",
+                String::from_utf8_lossy(&out.stderr)
+            );
+            out.stdout
+        })
+        .collect();
+    assert_eq!(outputs[0], outputs[1], "T3_THREADS=1 vs 2");
+    assert_eq!(outputs[0], outputs[2], "T3_THREADS=1 vs 8");
+
+    let json = String::from_utf8(outputs[0].clone()).unwrap();
+    assert!(json_balanced(&json), "unbalanced profile JSON");
+    assert!(json.contains("\"total_ps\""));
+    assert!(json.contains("\"blame\""));
+    assert!(json.contains("\"makespan_rank\""));
+}

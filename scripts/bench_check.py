@@ -1,0 +1,108 @@
+#!/usr/bin/env python3
+"""Bench regression gate: compare regenerated BENCH_*.json tables against
+their committed baselines and fail on a >25% wall-clock regression.
+
+Usage:
+    bench_check.py BASELINE CURRENT [BASELINE CURRENT ...]
+
+Each pair is a committed baseline snapshot and the freshly regenerated
+table (same schema: a top-level ``rows`` list of flat dicts). Rows are
+matched across the two files by their identity fields (every
+non-float value: ``tp``, ``variant``, ...). Within matched rows, two
+metric families gate:
+
+* ``*_wall_s``  — wall-clock seconds, regression when current > 1.25x
+  baseline;
+* ``*_per_s``   — throughput, regression when current < baseline / 1.25.
+
+Baselines with no rows are skipped (the canonical repo commits
+empty-row tables; CI fills them), as are metrics absent from either
+side — so schema growth never trips the gate. Tiny absolute values
+(< 1e-6) are ignored: they are timer noise, not signal.
+"""
+
+import json
+import sys
+
+THRESHOLD = 1.25
+NOISE_FLOOR = 1e-6
+
+
+def row_key(row):
+    """Identity of a row: every non-float field, sorted for stability."""
+    return tuple(sorted((k, v) for k, v in row.items() if not isinstance(v, float)))
+
+
+def metrics(row):
+    out = {}
+    for k, v in row.items():
+        if not isinstance(v, (int, float)) or isinstance(v, bool):
+            continue
+        if k.endswith("_wall_s") or k.endswith("_per_s"):
+            out[k] = float(v)
+    return out
+
+
+def check_pair(baseline_path, current_path):
+    """Return a list of regression messages for one baseline/current pair."""
+    with open(baseline_path) as f:
+        baseline = json.load(f)
+    with open(current_path) as f:
+        current = json.load(f)
+
+    base_rows = baseline.get("rows", [])
+    cur_rows = current.get("rows", [])
+    if not base_rows:
+        print(f"skip {baseline_path}: baseline has no rows")
+        return []
+    if not cur_rows:
+        return [f"{current_path}: regenerated table has no rows"]
+
+    cur_by_key = {row_key(r): r for r in cur_rows}
+    problems = []
+    compared = 0
+    for b in base_rows:
+        key = row_key(b)
+        c = cur_by_key.get(key)
+        if c is None:
+            print(f"note {current_path}: no current row matching {dict(key)}")
+            continue
+        cm = metrics(c)
+        for name, base_val in metrics(b).items():
+            cur_val = cm.get(name)
+            if cur_val is None:
+                continue
+            if max(abs(base_val), abs(cur_val)) < NOISE_FLOOR:
+                continue
+            label = f"{current_path} {dict(key)} {name}"
+            if name.endswith("_wall_s") and cur_val > base_val * THRESHOLD:
+                problems.append(
+                    f"{label}: {cur_val:.4f}s vs baseline {base_val:.4f}s "
+                    f"({cur_val / base_val:.2f}x, limit {THRESHOLD}x)"
+                )
+            elif name.endswith("_per_s") and cur_val * THRESHOLD < base_val:
+                problems.append(
+                    f"{label}: {cur_val:.1f}/s vs baseline {base_val:.1f}/s "
+                    f"({base_val / max(cur_val, NOISE_FLOOR):.2f}x slower, "
+                    f"limit {THRESHOLD}x)"
+                )
+            else:
+                compared += 1
+    print(f"ok {current_path}: {compared} metrics within {THRESHOLD}x of {baseline_path}")
+    return problems
+
+
+def main(argv):
+    if len(argv) < 2 or len(argv) % 2 != 0:
+        print(__doc__)
+        return 2
+    problems = []
+    for i in range(0, len(argv), 2):
+        problems.extend(check_pair(argv[i], argv[i + 1]))
+    for p in problems:
+        print(f"REGRESSION {p}", file=sys.stderr)
+    return 1 if problems else 0
+
+
+if __name__ == "__main__":
+    sys.exit(main(sys.argv[1:]))
