@@ -53,8 +53,11 @@ pub enum CollectiveKind {
 /// mapping plus which chunks are expected to arrive via DMA/remote writes.
 #[derive(Debug, Clone)]
 pub struct OutputMap {
+    /// Which collective the mapping implements.
     pub kind: CollectiveKind,
+    /// The owning device's rank.
     pub device_id: u64,
+    /// Ring size.
     pub devices: u64,
     /// Mapping for the chunk processed at position `i` (staggered order).
     pub by_position: Vec<ChunkMap>,
@@ -193,12 +196,17 @@ impl OutputMap {
 /// One pre-programmed DMA command-table entry (§4.2.2, Figure 9c).
 #[derive(Debug, Clone, PartialEq)]
 pub struct DmaCommand {
+    /// Processed-chunk position the entry fires for.
     pub position: usize,
+    /// Destination device of the remote write.
     pub dst_device: u64,
+    /// Plain store vs near-memory update at the destination.
     pub op: MemOp,
+    /// Chunk payload size.
     pub bytes: u64,
     /// WF tiles covered (granularity >= tracker granularity).
     pub wf_tiles: u64,
+    /// Flipped by the tracker when the chunk's WGs have all retired.
     pub ready: bool,
 }
 
@@ -206,10 +214,12 @@ pub struct DmaCommand {
 /// entries flipped ready by the Tracker at run time.
 #[derive(Debug, Clone, Default)]
 pub struct DmaTable {
+    /// The programmed entries, in processed-chunk order.
     pub entries: Vec<DmaCommand>,
 }
 
 impl DmaTable {
+    /// Build the table from the device's output map and chunk plan.
     pub fn program(map: &OutputMap, plan: &ChunkPlan) -> Self {
         let mut entries = Vec::new();
         for (pos, cm) in map.by_position.iter().enumerate() {
@@ -228,12 +238,14 @@ impl DmaTable {
         DmaTable { entries }
     }
 
+    /// Flip the entry at `position` ready, returning it if present.
     pub fn mark_ready(&mut self, position: usize) -> Option<&DmaCommand> {
         let e = self.entries.iter_mut().find(|e| e.position == position)?;
         e.ready = true;
         Some(e)
     }
 
+    /// Whether every entry has fired.
     pub fn all_fired(&self) -> bool {
         self.entries.iter().all(|e| e.ready)
     }

@@ -1,0 +1,232 @@
+//! Symbolic alpha-beta bounds on a program's end-to-end time, derived
+//! from the spec alone — no execution.
+//!
+//! The **lower** bound is classical alpha-beta reasoning: a phase cannot
+//! finish before its slowest of (a) pushing its per-rank egress bytes
+//! through the fastest link in the system at full rate, or (b) running
+//! its GEMM stages at peak efficiency on every CU. Phases chained by
+//! `AfterPrev`/`AfterAllPrev` serialize, so their floors accumulate;
+//! trigger-started phases may overlap their producer almost entirely, so
+//! the chain restarts at them. The **upper** bound serializes everything
+//! pessimistically — every chunk pays the slowest link, every hop the
+//! worst latency, DRAM at aggregate bandwidth, background flows in full —
+//! and then multiplies by a headroom factor for queuing effects the
+//! symbolic model cannot see.
+//!
+//! Both bounds are *sound*, not tight: `lower <= RunReport.total <=
+//! upper` holds in exact [`SimTime`] arithmetic for every registry
+//! preset. [`crate::analysis::preflight`] re-checks the lower bound after
+//! every debug-build run, and the property fuzz sweeps both across
+//! machine kinds, skew, topology, and TP.
+
+use crate::cluster::collective::ExecTarget;
+use crate::cluster::program::{Program, StartRule};
+use crate::cluster::topology::{SkewModel, TopologySpec};
+use crate::config::SystemConfig;
+use crate::sim::time::SimTime;
+
+use super::fabric::graph_for;
+
+/// Symbolic bracket on a program's `RunReport.total`.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Bounds {
+    /// No run of this program can finish earlier.
+    pub lower: SimTime,
+    /// No run of this program can finish later.
+    pub upper: SimTime,
+}
+
+/// Multiplier on the serialized sum absorbing effects the symbolic model
+/// cannot see: fabric queuing, NMC service factors, tracker stalls,
+/// overlap-interference penalties.
+const UPPER_HEADROOM: u64 = 8;
+
+/// Slack subtracted from every lower-bound term, in picoseconds per
+/// "rounding site": each per-chunk `SimTime::transfer` and per-stage
+/// compute-scale multiply rounds to the nearest picosecond, so the true
+/// machine can undercut the one-shot symbolic transfer by a fraction of a
+/// picosecond per site.
+const ROUNDING_SLACK_PS: u64 = 64;
+
+/// The link/skew environment a program runs in, flattened from its
+/// execution target: extremal bandwidths and latencies over every link
+/// the flows might touch.
+struct Env {
+    bw_max: f64,
+    bw_min: f64,
+    lat_max: SimTime,
+    /// Worst-case hop count of any single route.
+    hops: u64,
+    /// Total background-flow bytes contending with the collective.
+    bg_bytes: u64,
+    skew_max: f64,
+    skew_min: f64,
+    /// The environment could not be modeled (degenerate fabric); bounds
+    /// collapse to the trivial bracket.
+    degenerate: bool,
+}
+
+fn env_for(sys: &SystemConfig, target: &ExecTarget, tp: u64) -> Env {
+    let base = Env {
+        bw_max: sys.link.per_dir_bw_gbps,
+        bw_min: sys.link.per_dir_bw_gbps,
+        lat_max: sys.link.latency,
+        hops: 1,
+        bg_bytes: 0,
+        skew_max: 1.0,
+        skew_min: 1.0,
+        degenerate: false,
+    };
+    let ExecTarget::Cluster(model) = target else {
+        return base;
+    };
+    let (skew_max, skew_min) = match model.skew {
+        SkewModel::None => (1.0, 1.0),
+        // Shipped stragglers are always >= 1x, but guard both directions:
+        // a hypothetical speed-up rank lowers the floor, not the ceiling.
+        SkewModel::Straggler { slowdown, .. } => (slowdown.max(1.0), slowdown.min(1.0)),
+        SkewModel::Jitter { amplitude } => (1.0 + amplitude.max(0.0), 1.0),
+    };
+    let mut env = Env {
+        skew_max,
+        skew_min,
+        ..base
+    };
+    match model.topology.clone().canonicalize(tp) {
+        TopologySpec::SingleTier => {}
+        TopologySpec::TwoTier {
+            inter_bw_frac,
+            inter_latency,
+            ..
+        } => {
+            env.bw_min = sys.link.per_dir_bw_gbps * inter_bw_frac;
+            env.lat_max = env.lat_max.max(inter_latency);
+        }
+        TopologySpec::Fabric(spec) => match graph_for(&spec, tp as usize, &sys.link) {
+            Ok(graph) if !graph.links.is_empty() => {
+                env.bw_max = graph.links.iter().fold(0.0_f64, |m, l| m.max(l.bw_gbps));
+                env.bw_min = graph
+                    .links
+                    .iter()
+                    .fold(f64::INFINITY, |m, l| m.min(l.bw_gbps));
+                env.lat_max = graph
+                    .links
+                    .iter()
+                    .fold(SimTime::ZERO, |m, l| m.max(l.latency));
+                env.hops = graph.vertices as u64;
+                env.bg_bytes = spec.background.iter().map(|f| f.bytes).sum();
+            }
+            _ => env.degenerate = true,
+        },
+    }
+    if !(env.bw_min.is_finite() && env.bw_min > 0.0 && env.bw_max > 0.0) {
+        env.degenerate = true;
+    }
+    env
+}
+
+/// Derive the symbolic bracket for a compiled program on a target.
+///
+/// Degenerate environments (a fabric whose shape cannot host the group)
+/// return the trivial bracket `[0, SimTime::MAX / 2]` — the lint pass
+/// reports the real defect separately.
+pub fn program_bounds(sys: &SystemConfig, prog: &Program, target: &ExecTarget) -> Bounds {
+    let tp = prog.tp;
+    let env = env_for(sys, target, tp);
+    if env.degenerate || prog.phases.is_empty() {
+        return Bounds {
+            lower: SimTime::ZERO,
+            upper: SimTime::ps(u64::MAX / 2),
+        };
+    }
+
+    let mut lower = SimTime::ZERO;
+    let mut chain = SimTime::ZERO;
+    let mut upper_sum = SimTime::ZERO;
+    for ph in &prog.phases {
+        let caps = ph.caps(sys, tp);
+
+        // ---- lower: max(wire floor, compute floor) for this phase ----
+        // Wire: the phase's per-rank egress must cross the rank's first
+        // hop, whose bandwidth is at most bw_max. A 6.25% bandwidth
+        // margin plus a flat slack absorbs per-chunk transfer rounding
+        // (each of up to tp^2 chunk sends rounds down by < 1 ps).
+        let wire = SimTime::transfer(caps.egress_bytes, env.bw_max * 1.0625)
+            .saturating_sub(SimTime::ps(ROUNDING_SLACK_PS + tp * tp));
+        // Compute: stage times at peak efficiency on all CUs, scaled by
+        // the fastest rank, minus per-stage rounding slack.
+        let comp = (caps.compute_floor * env.skew_min)
+            .saturating_sub(SimTime::ps(ROUNDING_SLACK_PS + caps.compute_stages));
+        let floor = wire.max(comp);
+        chain = match ph.rule {
+            // Serialized on everything before it: floors accumulate.
+            StartRule::AfterPrev | StartRule::AfterAllPrev => chain + floor,
+            // May start at (or overlap to almost) t=0: restart the chain
+            // at this phase's own floor.
+            StartRule::AtZero
+            | StartRule::AtPrevTriggers
+            | StartRule::AtSliceTrigger { .. } => floor,
+        };
+        lower = lower.max(chain);
+
+        // ---- upper: fully serialized pessimism for this phase ----
+        let ph_upper = caps.compute_floor
+            + SimTime::transfer(caps.egress_bytes.saturating_mul(tp), env.bw_min)
+            + env.lat_max * (caps.wire_steps.saturating_mul(env.hops) + env.hops)
+            + SimTime::transfer(caps.dram_bytes, sys.mem.total_bw_gbps)
+            + caps.extra_upper
+            + env.lat_max;
+        upper_sum += ph_upper * env.skew_max;
+    }
+    // Background flows contend on the slowest link for their full length.
+    upper_sum += SimTime::transfer(env.bg_bytes, env.bw_min) * env.skew_max;
+    let upper = upper_sum * UPPER_HEADROOM + SimTime::us(1);
+    Bounds { lower, upper }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::topology::ClusterModel;
+    use crate::fabric::FabricSpec;
+
+    #[test]
+    fn mirror_env_is_the_base_link() {
+        let sys = SystemConfig::table1();
+        let env = env_for(&sys, &ExecTarget::Mirror, 8);
+        assert_eq!(env.bw_max, sys.link.per_dir_bw_gbps);
+        assert_eq!(env.bw_min, sys.link.per_dir_bw_gbps);
+        assert_eq!(env.hops, 1);
+        assert!(!env.degenerate);
+    }
+
+    #[test]
+    fn fabric_env_spans_link_extremes() {
+        let sys = SystemConfig::table1();
+        let model = ClusterModel::fabric(FabricSpec::fat_tree(16, 4.0));
+        let env = env_for(&sys, &ExecTarget::Cluster(model), 16);
+        assert!(env.bw_max >= env.bw_min);
+        assert!(env.bw_min > 0.0);
+        assert!(env.hops > 1, "fat tree routes cross switches");
+    }
+
+    #[test]
+    fn degenerate_fabric_collapses_the_bracket() {
+        let sys = SystemConfig::table1();
+        // 2x4 torus cannot host 16 endpoints.
+        let model = ClusterModel::fabric(FabricSpec::torus(2, 4));
+        let env = env_for(&sys, &ExecTarget::Cluster(model), 16);
+        assert!(env.degenerate);
+    }
+
+    #[test]
+    fn skew_widens_the_bracket_monotonically() {
+        let sys = SystemConfig::table1();
+        let env = env_for(&sys, &ExecTarget::Cluster(ClusterModel::jitter(0.25)), 8);
+        assert_eq!(env.skew_min, 1.0);
+        assert!((env.skew_max - 1.25).abs() < 1e-12);
+        let env = env_for(&sys, &ExecTarget::Cluster(ClusterModel::straggler(0, 1.5)), 8);
+        assert_eq!(env.skew_max, 1.5);
+        assert_eq!(env.skew_min, 1.0);
+    }
+}

@@ -1,0 +1,266 @@
+//! The diagnostics vocabulary of the static analyzer: stable codes,
+//! severities, spans, and rendering.
+//!
+//! Every check in [`crate::analysis`] reports through one type — [`Diag`] —
+//! so the CLI (`t3 lint`), the pre-flight inside
+//! [`crate::cluster::execute`], and the test suite all consume the same
+//! structured facts. Codes are stable identifiers (`T3E0xx` errors,
+//! `T3W0xx` warnings) that tests pin and users can grep; the human text is
+//! free to improve without breaking either.
+
+use crate::trace::json::JsonWriter;
+
+/// Severity of a diagnostic. Errors describe programs that will panic,
+/// hang, or silently compute the wrong preset; warnings describe legal but
+/// suspicious configurations (silent clamps, no-op rules, hot links).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord)]
+pub enum Severity {
+    /// Legal but suspicious; printed once, never fatal unless denied.
+    Warning,
+    /// The program cannot execute as written; pre-flight aborts.
+    Error,
+}
+
+impl Severity {
+    /// Lowercase label (`"warning"` / `"error"`), as rendered in text and
+    /// JSON output.
+    pub fn label(self) -> &'static str {
+        match self {
+            Severity::Warning => "warning",
+            Severity::Error => "error",
+        }
+    }
+}
+
+/// Stable diagnostic codes. The `T3E`/`T3W` prefix encodes the *default*
+/// severity; a deny-list ([`escalate`]) can harden warnings to errors, but
+/// the code itself never changes — tests pin codes, not severities.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum DiagCode {
+    /// T3E001: a program with no phases.
+    EmptyProgram,
+    /// T3E002: the phase-dependency graph has a cycle (deadlock: every
+    /// phase on it waits on another member).
+    CyclicDeps,
+    /// T3E003: a dependency edge points at a phase outside the program
+    /// (the wait can never resolve — the phase is unreachable).
+    DanglingDep,
+    /// T3E004: an `AtSliceTrigger` rule with no upstream phase declaring
+    /// slice triggers.
+    NoSliceProducer,
+    /// T3E005: an `AtSliceTrigger` slice index at or past the producer's
+    /// declared slice count.
+    SliceOutOfRange,
+    /// T3E006: the fabric cannot route a collective's `src -> dst` flow.
+    Unroutable,
+    /// T3E007: a route revisits a vertex (a corrupt parent table would
+    /// loop the hop walk forever).
+    RouteCycle,
+    /// T3E008: `hierarchical_ar()` requested but the topology's rack
+    /// grouping is degenerate at this TP (no rack, one rack, or a rack
+    /// size that does not divide TP) — the schedule silently flattens.
+    BadRackSize,
+    /// T3E009: a straggler skew model naming a rank outside `0..tp`.
+    StragglerOutOfRange,
+    /// T3E010: a fabric whose shape cannot host `tp` endpoints (e.g. a
+    /// torus with `rows * cols != tp`).
+    BadFabricShape,
+    /// T3E011: TP does not divide the model's hidden dimension (no valid
+    /// sub-layer GEMM shard exists).
+    BadTp,
+    /// T3W001: a slice count above the per-rank chunk bytes, silently
+    /// clamped by the compiler.
+    SliceClamp,
+    /// T3W002: an `AtPrevTriggers` rule whose producer declares no early
+    /// trigger — the fusion handoff degrades to `AfterPrev`.
+    TriggerlessWait,
+    /// T3W003: a link whose symbolic byte load is far above the median —
+    /// an oversubscription hot spot.
+    HotLink,
+    /// T3W004: a first phase with a rule that can only resolve to t=0
+    /// (nothing precedes it) — the rule is a no-op.
+    NoOpRule,
+}
+
+impl DiagCode {
+    /// The stable code string tests pin (e.g. `"T3E008"`).
+    pub fn as_str(self) -> &'static str {
+        match self {
+            DiagCode::EmptyProgram => "T3E001",
+            DiagCode::CyclicDeps => "T3E002",
+            DiagCode::DanglingDep => "T3E003",
+            DiagCode::NoSliceProducer => "T3E004",
+            DiagCode::SliceOutOfRange => "T3E005",
+            DiagCode::Unroutable => "T3E006",
+            DiagCode::RouteCycle => "T3E007",
+            DiagCode::BadRackSize => "T3E008",
+            DiagCode::StragglerOutOfRange => "T3E009",
+            DiagCode::BadFabricShape => "T3E010",
+            DiagCode::BadTp => "T3E011",
+            DiagCode::SliceClamp => "T3W001",
+            DiagCode::TriggerlessWait => "T3W002",
+            DiagCode::HotLink => "T3W003",
+            DiagCode::NoOpRule => "T3W004",
+        }
+    }
+
+    /// The code's default severity, encoded in its prefix.
+    pub fn severity(self) -> Severity {
+        if self.as_str().starts_with("T3E") {
+            Severity::Error
+        } else {
+            Severity::Warning
+        }
+    }
+}
+
+/// What a diagnostic points at.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum Span {
+    /// The program (or scenario spec) as a whole.
+    Program,
+    /// Phase `index` of the program, with its collective label.
+    Phase(usize),
+    /// A physical fabric link, by its `src -> dst` name.
+    Link(String),
+    /// A specific rank.
+    Rank(u64),
+}
+
+impl std::fmt::Display for Span {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            Span::Program => write!(f, "program"),
+            Span::Phase(i) => write!(f, "phase {i}"),
+            Span::Link(name) => write!(f, "link {name}"),
+            Span::Rank(r) => write!(f, "rank {r}"),
+        }
+    }
+}
+
+/// One static-analysis finding: a stable code, the severity it currently
+/// carries (the code's default, unless a deny-list escalated it), what it
+/// points at, and human text — a one-line message plus a `help:` hint.
+#[derive(Debug, Clone, PartialEq)]
+pub struct Diag {
+    /// The stable code.
+    pub code: DiagCode,
+    /// Effective severity (default from the code; [`escalate`] may raise).
+    pub severity: Severity,
+    /// What the finding points at.
+    pub span: Span,
+    /// One-line description of the defect.
+    pub message: String,
+    /// Actionable hint (what to change).
+    pub help: String,
+}
+
+impl Diag {
+    /// Build a diagnostic at the code's default severity.
+    pub fn new(
+        code: DiagCode,
+        span: Span,
+        message: impl Into<String>,
+        help: impl Into<String>,
+    ) -> Self {
+        Diag {
+            code,
+            severity: code.severity(),
+            span,
+            message: message.into(),
+            help: help.into(),
+        }
+    }
+
+    /// Render the finding as one JSON object on `w`.
+    pub fn write_json(&self, w: &mut JsonWriter) {
+        w.begin_obj();
+        w.key("code").str_val(self.code.as_str());
+        w.key("severity").str_val(self.severity.label());
+        w.key("span").str_val(&self.span.to_string());
+        w.key("message").str_val(&self.message);
+        w.key("help").str_val(&self.help);
+        w.end_obj();
+    }
+}
+
+impl std::fmt::Display for Diag {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        write!(
+            f,
+            "{} [{}] {}: {}\n  help: {}",
+            self.code.as_str(),
+            self.severity.label(),
+            self.span,
+            self.message,
+            self.help
+        )
+    }
+}
+
+/// Apply a deny-list: with `deny_warnings` set, every warning is raised to
+/// an error (the `t3 lint --deny warnings` gate). Codes are untouched.
+pub fn escalate(diags: &mut [Diag], deny_warnings: bool) {
+    if deny_warnings {
+        for d in diags.iter_mut() {
+            d.severity = Severity::Error;
+        }
+    }
+}
+
+/// Count of `(errors, warnings)` in a finding list.
+pub fn tally(diags: &[Diag]) -> (usize, usize) {
+    let errs = diags.iter().filter(|d| d.severity == Severity::Error).count();
+    (errs, diags.len() - errs)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn codes_encode_severity() {
+        assert_eq!(DiagCode::CyclicDeps.severity(), Severity::Error);
+        assert_eq!(DiagCode::SliceClamp.severity(), Severity::Warning);
+        assert_eq!(DiagCode::BadRackSize.as_str(), "T3E008");
+        assert_eq!(DiagCode::HotLink.as_str(), "T3W003");
+    }
+
+    #[test]
+    fn escalation_raises_warnings_only_under_deny() {
+        let mut ds = vec![Diag::new(
+            DiagCode::SliceClamp,
+            Span::Program,
+            "clamped",
+            "lower --slices",
+        )];
+        escalate(&mut ds, false);
+        assert_eq!(ds[0].severity, Severity::Warning);
+        escalate(&mut ds, true);
+        assert_eq!(ds[0].severity, Severity::Error);
+        assert_eq!(ds[0].code, DiagCode::SliceClamp, "codes never change");
+        assert_eq!(tally(&ds), (1, 0));
+    }
+
+    #[test]
+    fn display_carries_code_span_and_help() {
+        let d = Diag::new(
+            DiagCode::Unroutable,
+            Span::Rank(3),
+            "no route 3 -> 7",
+            "add links",
+        );
+        let s = d.to_string();
+        assert!(s.contains("T3E006") && s.contains("rank 3") && s.contains("help:"), "{s}");
+    }
+
+    #[test]
+    fn json_rendering_is_balanced() {
+        let d = Diag::new(DiagCode::HotLink, Span::Link("h0 -> s0".into()), "hot", "respread");
+        let mut w = JsonWriter::new();
+        d.write_json(&mut w);
+        let s = w.finish();
+        assert!(crate::testkit::json_balanced(&s), "{s}");
+        assert!(s.contains("\"T3W003\""));
+    }
+}

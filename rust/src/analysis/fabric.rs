@@ -1,0 +1,303 @@
+//! Static fabric checks: shape, reachability, route acyclicity, and
+//! symbolic per-link load (oversubscription hot spots).
+//!
+//! The run-time fabric ([`crate::fabric::Network`]) panics on an
+//! unroutable flow and would loop forever on a corrupt parent table; the
+//! topology constructors assert their shape. This module proves the same
+//! preconditions from the spec alone: it lowers the [`FabricSpec`] to its
+//! [`FabricGraph`] (guarding the shape asserts), walks every flow a
+//! program's collectives will inject — the ring algebra's
+//! `rank -> dest_map[rank]` pairs, plus background flows — over the
+//! precomputed BFS routes, and sums each flow's byte load onto every link
+//! it crosses. Links far above the median load are flagged as
+//! oversubscription hot spots (T3W003).
+
+use crate::cluster::program::Program;
+use crate::config::SystemConfig;
+use crate::fabric::{FabricGraph, FabricKind, FabricSpec, LinkId};
+use crate::sim::time::SimTime;
+
+use super::diag::{Diag, DiagCode, Span};
+
+/// Lower a fabric spec to its graph, statically guarding the shape
+/// asserts the topology constructors would otherwise hit (T3E010).
+pub fn graph_for(
+    spec: &FabricSpec,
+    endpoints: usize,
+    base: &crate::config::LinkConfig,
+) -> Result<FabricGraph, Diag> {
+    if let FabricKind::Torus2D(t) = &spec.kind {
+        if t.rows * t.cols != endpoints {
+            return Err(Diag::new(
+                DiagCode::BadFabricShape,
+                Span::Program,
+                format!(
+                    "a {}x{} torus holds {} endpoints, but the group has {endpoints} ranks",
+                    t.rows,
+                    t.cols,
+                    t.rows * t.cols
+                ),
+                "size the torus so rows * cols == tp",
+            ));
+        }
+    }
+    Ok(spec.kind.topology().graph(endpoints, base))
+}
+
+/// One symbolic flow: `src` endpoint sends `bytes` to `dst` endpoint.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct Flow {
+    /// Source endpoint (rank).
+    pub src: usize,
+    /// Destination endpoint (rank).
+    pub dst: usize,
+    /// Total bytes the flow moves.
+    pub bytes: u64,
+}
+
+/// Walk the BFS parent table from `dst` back to `src`, returning the hop
+/// list — or a diagnostic: unreachable destination (T3E006) or a parent
+/// table that revisits a vertex (T3E007; the run-time walk would loop).
+pub fn checked_route(
+    graph: &FabricGraph,
+    parents: &[Option<LinkId>],
+    src: usize,
+    dst: usize,
+) -> Result<Vec<LinkId>, Diag> {
+    let mut hops = Vec::new();
+    let mut cur = dst;
+    while cur != src {
+        let Some(l) = parents[cur] else {
+            return Err(Diag::new(
+                DiagCode::Unroutable,
+                Span::Rank(src as u64),
+                format!(
+                    "no route {} -> {}",
+                    graph.vertex_name(src),
+                    graph.vertex_name(dst)
+                ),
+                "every collective flow needs a physical path; add links or fix the shape",
+            ));
+        };
+        hops.push(l);
+        cur = graph.links[l].from;
+        if hops.len() > graph.vertices {
+            return Err(Diag::new(
+                DiagCode::RouteCycle,
+                Span::Rank(src as u64),
+                format!(
+                    "route {} -> {} revisits a vertex after {} hops — the hop walk would loop",
+                    graph.vertex_name(src),
+                    graph.vertex_name(dst),
+                    hops.len()
+                ),
+                "the parent table is corrupt; recompute routes from the graph",
+            ));
+        }
+    }
+    hops.reverse();
+    Ok(hops)
+}
+
+/// Absolute per-link load floor below which a hot-link warning never
+/// fires (noise guard for tiny payloads).
+const HOT_LINK_FLOOR_PS: u64 = 1_000_000; // 1 us
+
+/// Check a set of flows over a graph: reachability and route sanity per
+/// flow, then symbolic per-link byte loads — a link whose serialized
+/// occupancy is at least twice the median of loaded links is flagged as
+/// an oversubscription hot spot (T3W003).
+pub fn check_flows(graph: &FabricGraph, flows: &[Flow]) -> Vec<Diag> {
+    let mut diags = Vec::new();
+    let mut loads_ps: Vec<u64> = vec![0; graph.links.len()];
+    // BFS parent tables are per-source; cache them across flows.
+    let mut parents: std::collections::HashMap<usize, Vec<Option<LinkId>>> =
+        std::collections::HashMap::new();
+    let mut dead: std::collections::HashSet<(usize, usize)> = std::collections::HashSet::new();
+    for f in flows {
+        if f.src >= graph.endpoints || f.dst >= graph.endpoints {
+            if dead.insert((f.src, f.dst)) {
+                diags.push(Diag::new(
+                    DiagCode::Unroutable,
+                    Span::Rank(f.src as u64),
+                    format!(
+                        "flow {} -> {} names an endpoint outside the fabric ({} endpoints)",
+                        f.src, f.dst, graph.endpoints
+                    ),
+                    "background and collective flows must use endpoint ids below tp",
+                ));
+            }
+            continue;
+        }
+        if f.src == f.dst {
+            continue; // self-delivery never touches the fabric
+        }
+        let p = parents
+            .entry(f.src)
+            .or_insert_with(|| graph.parents_from(f.src));
+        match checked_route(graph, p, f.src, f.dst) {
+            Ok(hops) => {
+                for l in hops {
+                    loads_ps[l] = loads_ps[l]
+                        .saturating_add(SimTime::transfer(f.bytes, graph.links[l].bw_gbps).as_ps());
+                }
+            }
+            Err(d) => {
+                // One report per (src, dst) pair, however many phases
+                // inject the flow.
+                if dead.insert((f.src, f.dst)) {
+                    diags.push(d);
+                }
+            }
+        }
+    }
+    let mut loaded: Vec<u64> = loads_ps.iter().copied().filter(|&l| l > 0).collect();
+    if loaded.len() >= 3 {
+        loaded.sort_unstable();
+        let median = loaded[loaded.len() / 2];
+        for (l, &load) in loads_ps.iter().enumerate() {
+            if load >= HOT_LINK_FLOOR_PS && load >= 2 * median {
+                diags.push(Diag::new(
+                    DiagCode::HotLink,
+                    Span::Link(graph.link_name(l)),
+                    format!(
+                        "symbolic load {:.3} ms is {:.1}x the median loaded link ({:.3} ms)",
+                        load as f64 / 1e9,
+                        load as f64 / median.max(1) as f64,
+                        median as f64 / 1e9
+                    ),
+                    "an oversubscribed link serializes every flow crossing it; respread the \
+                     schedule (hierarchical AR) or raise its bandwidth",
+                ));
+            }
+        }
+    }
+    diags
+}
+
+/// Gather the symbolic flows a compiled program injects into its fabric:
+/// for every phase with non-zero per-rank egress, one flow per rank along
+/// the phase's destination permutation, plus the spec's background flows.
+pub fn program_flows(sys: &SystemConfig, prog: &Program, spec: &FabricSpec) -> Vec<Flow> {
+    let n = prog.tp as usize;
+    let mut flows = Vec::new();
+    for ph in &prog.phases {
+        let caps = ph.caps(sys, prog.tp);
+        if caps.egress_bytes == 0 {
+            continue;
+        }
+        let dest = ph
+            .dest_map(prog.tp)
+            .unwrap_or_else(|| (0..n).map(|i| (i + n - 1) % n).collect());
+        for (r, &d) in dest.iter().enumerate() {
+            flows.push(Flow {
+                src: r,
+                dst: d,
+                bytes: caps.egress_bytes,
+            });
+        }
+    }
+    for bg in &spec.background {
+        flows.push(Flow {
+            src: bg.src,
+            dst: bg.dst,
+            bytes: bg.bytes,
+        });
+    }
+    flows
+}
+
+/// The full fabric pass over one compiled program: shape, reachability,
+/// route sanity, and hot links for every flow its phases inject.
+pub fn check_program_fabric(sys: &SystemConfig, prog: &Program, spec: &FabricSpec) -> Vec<Diag> {
+    match graph_for(spec, prog.tp as usize, &sys.link) {
+        Ok(graph) => check_flows(&graph, &program_flows(sys, prog, spec)),
+        Err(d) => vec![d],
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::config::SystemConfig;
+
+    fn sys() -> SystemConfig {
+        SystemConfig::table1()
+    }
+
+    #[test]
+    fn torus_shape_mismatch_is_static() {
+        let spec = FabricSpec::torus(2, 4);
+        assert!(graph_for(&spec, 8, &sys().link).is_ok());
+        let err = graph_for(&spec, 16, &sys().link).unwrap_err();
+        assert_eq!(err.code, DiagCode::BadFabricShape);
+    }
+
+    #[test]
+    fn disconnected_fabric_reports_unroutable_once_per_pair() {
+        // Two endpoints, no links at all.
+        let graph = FabricGraph {
+            vertices: 2,
+            endpoints: 2,
+            switch_names: Vec::new(),
+            links: Vec::new(),
+        };
+        let flow = Flow {
+            src: 0,
+            dst: 1,
+            bytes: 1 << 20,
+        };
+        let diags = check_flows(&graph, &[flow, flow]);
+        assert_eq!(diags.len(), 1, "{diags:?}");
+        assert_eq!(diags[0].code, DiagCode::Unroutable);
+    }
+
+    #[test]
+    fn corrupt_parent_table_reports_route_cycle() {
+        let spec = FabricSpec::ring();
+        let graph = graph_for(&spec, 4, &sys().link).unwrap();
+        // A parent table that points 1 and 2 at each other: walking from
+        // dst 2 toward src 0 bounces between them forever.
+        let mut parents = graph.parents_from(0);
+        let to_1 = graph
+            .links
+            .iter()
+            .position(|l| l.from == 2 && l.to == 1)
+            .expect("ring has 2 -> 1");
+        let to_2 = graph
+            .links
+            .iter()
+            .position(|l| l.from == 1 && l.to == 2)
+            .expect("ring has 1 -> 2");
+        parents[1] = Some(to_1); // link into 1 from 2
+        parents[2] = Some(to_2); // link into 2 from 1
+        let err = checked_route(&graph, &parents, 0, 2).unwrap_err();
+        assert_eq!(err.code, DiagCode::RouteCycle);
+    }
+
+    #[test]
+    fn background_elephant_flow_is_a_hot_link() {
+        let spec = FabricSpec::ring();
+        let graph = graph_for(&spec, 4, &sys().link).unwrap();
+        let mut flows: Vec<Flow> = (0..4)
+            .map(|r| Flow {
+                src: r,
+                dst: (r + 3) % 4,
+                bytes: 8 << 20,
+            })
+            .collect();
+        flows.push(Flow {
+            src: 1,
+            dst: 0,
+            bytes: 1 << 30,
+        });
+        let diags = check_flows(&graph, &flows);
+        assert!(
+            diags.iter().any(|d| d.code == DiagCode::HotLink),
+            "1 GiB over an 8 MiB ring must flag its link: {diags:?}"
+        );
+        // Balanced loads stay quiet.
+        let quiet = check_flows(&graph, &flows[..4]);
+        assert!(quiet.is_empty(), "{quiet:?}");
+    }
+}

@@ -1,0 +1,284 @@
+//! Static analysis of scenarios, programs, and fabrics: prove the
+//! invariants *before* execution that the trace checkers and property
+//! fuzz can only observe after.
+//!
+//! Four passes, one diagnostics vocabulary ([`diag`]):
+//!
+//! * [`program`] — the Program verifier: phase-dependency graph shape
+//!   (cycles, dangling edges), start-rule trigger contracts checked
+//!   against each collective's declared
+//!   [`PhaseCaps`](crate::cluster::PhaseCaps), skew-model sanity;
+//! * [`fabric`] — the fabric/route checker: topology shape, static
+//!   reachability of every collective flow, route acyclicity, symbolic
+//!   per-link loads (oversubscription hot spots);
+//! * [`bounds`] — the symbolic bounds analyzer: an alpha-beta lower bound
+//!   and a serialized upper bound on `RunReport.total`, derived from the
+//!   spec alone and cross-checked live against every debug-build run;
+//! * this module — the entry points: [`lint_spec`]/[`lint_registry`] for
+//!   `t3 lint`, and [`preflight`], the fail-fast gate inside
+//!   [`crate::cluster::execute`] (errors abort before driving, warnings
+//!   print once).
+
+pub mod bounds;
+pub mod diag;
+pub mod fabric;
+pub mod program;
+
+pub use bounds::{program_bounds, Bounds};
+pub use diag::{escalate, tally, Diag, DiagCode, Severity, Span};
+pub use program::{verify_program, DepGraph};
+
+use std::collections::HashSet;
+use std::sync::{Mutex, OnceLock};
+
+use crate::cluster::collective::ExecTarget;
+use crate::cluster::program::Program;
+use crate::cluster::topology::TopologySpec;
+use crate::config::SystemConfig;
+use crate::experiment::{CollectiveKind, ScenarioSpec};
+use crate::fabric::FabricKind;
+use crate::models::{sublayer_gemm, ModelCfg, SubLayer};
+
+/// Spec-level findings that exist *before* compilation: a TP degree the
+/// model cannot shard over (T3E011), a hierarchical AR whose rack
+/// grouping is degenerate and would silently flatten (T3E008), a slice
+/// count the compiler would silently clamp (T3W001).
+pub fn spec_diags(spec: &ScenarioSpec, model: &ModelCfg, tp: u64, sub: SubLayer) -> Vec<Diag> {
+    let mut diags = Vec::new();
+    if tp == 0 || model.hidden % tp != 0 {
+        diags.push(Diag::new(
+            DiagCode::BadTp,
+            Span::Program,
+            format!(
+                "TP {tp} cannot shard {} (hidden {} is not divisible)",
+                model.name, model.hidden
+            ),
+            "pick a TP degree that divides the model's hidden dimension",
+        ));
+        return diags;
+    }
+    if spec.hier_ar && spec.hier_rack_size(tp).is_none() {
+        diags.push(Diag::new(
+            DiagCode::BadRackSize,
+            Span::Program,
+            format!(
+                "`{}` requests a hierarchical all-reduce, but the topology gives no rack \
+                 grouping that divides tp={tp} — the schedule silently flattens to the ring",
+                spec.name
+            ),
+            "run on a racked fabric (fat tree, torus, two-tier) at a TP its rack size divides",
+        ));
+    }
+    if spec.collective == CollectiveKind::AllReduce && !spec.hier_ar {
+        let ar_bytes = sublayer_gemm(model, tp, sub).out_bytes();
+        let max_slices = (ar_bytes / tp.max(1)).max(1);
+        if spec.slices as u64 > max_slices {
+            diags.push(Diag::new(
+                DiagCode::SliceClamp,
+                Span::Program,
+                format!(
+                    "`{}` asks for {} slices, but the {ar_bytes}-byte payload over tp={tp} \
+                     supports at most {max_slices} — the compiler clamps silently",
+                    spec.name, spec.slices
+                ),
+                format!("lower --slices to at most {max_slices}"),
+            ));
+        }
+    }
+    diags
+}
+
+/// Lint one scenario at a given model/TP/sub-layer: spec-level findings,
+/// then — unless the spec cannot compile at all — the full program and
+/// fabric verification of what it compiles to.
+pub fn lint_spec(
+    sys: &SystemConfig,
+    spec: &ScenarioSpec,
+    model: &ModelCfg,
+    tp: u64,
+    sub: SubLayer,
+) -> Vec<Diag> {
+    let mut diags = spec_diags(spec, model, tp, sub);
+    if diags.iter().any(|d| d.code == DiagCode::BadTp) {
+        return diags;
+    }
+    let prog = spec.compile(sys, model, tp, sub);
+    let target = match &spec.cluster {
+        Some(cm) => ExecTarget::Cluster(cm.clone()),
+        None => ExecTarget::Mirror,
+    };
+    diags.extend(verify_program(sys, &prog, &target));
+    diags
+}
+
+/// The TP degree `t3 lint` checks a preset at when none is given: the
+/// exact size a fixed-shape fabric demands (a torus), the smallest
+/// evaluated degree a hierarchical AR decomposes non-trivially at, or the
+/// paper's smallest degree (8) otherwise.
+pub fn default_lint_tp(spec: &ScenarioSpec, model: &ModelCfg) -> u64 {
+    if let Some(cm) = &spec.cluster {
+        if let TopologySpec::Fabric(f) = &cm.topology {
+            if let FabricKind::Torus2D(t) = &f.kind {
+                return (t.rows * t.cols) as u64;
+            }
+        }
+    }
+    if spec.hier_ar {
+        for c in [8, 16, 32, 64, 128] {
+            if spec.hier_rack_size(c).is_some() && model.hidden % c == 0 {
+                return c;
+            }
+        }
+    }
+    8
+}
+
+/// Lint the whole preset registry: `(name, tp, findings)` per preset,
+/// each at its [`default_lint_tp`]. The CI gate asserts zero errors here.
+pub fn lint_registry(
+    sys: &SystemConfig,
+    model: &ModelCfg,
+    sub: SubLayer,
+) -> Vec<(String, u64, Vec<Diag>)> {
+    crate::experiment::registry()
+        .iter()
+        .map(|spec| {
+            let tp = default_lint_tp(spec, model);
+            (spec.name.clone(), tp, lint_spec(sys, spec, model, tp, sub))
+        })
+        .collect()
+}
+
+/// Print a warning-severity diagnostic at most once per process (keyed by
+/// program/spec, code, and span) — pre-flight runs on every `execute`
+/// call, but a sweep should not drown in repeats.
+fn warn_once(key: String, d: &Diag) {
+    static SEEN: OnceLock<Mutex<HashSet<String>>> = OnceLock::new();
+    let seen = SEEN.get_or_init(|| Mutex::new(HashSet::new()));
+    let mut guard = seen.lock().unwrap_or_else(|e| e.into_inner());
+    if guard.insert(key) {
+        eprintln!("warning: {d}");
+    }
+}
+
+/// The fail-fast gate inside [`crate::cluster::execute`]: verify the
+/// program, panic with every error finding before any rank machine is
+/// built (the run would hang, panic mid-drive, or silently compute the
+/// wrong preset), and print warnings once.
+pub fn preflight(sys: &SystemConfig, prog: &Program, target: &ExecTarget) {
+    let diags = verify_program(sys, prog, target);
+    let (errors, _) = tally(&diags);
+    if errors > 0 {
+        let mut msg = format!(
+            "static analysis found {errors} error(s) in program `{}`:\n",
+            prog.name
+        );
+        for d in diags.iter().filter(|d| d.severity == Severity::Error) {
+            msg.push_str(&d.to_string());
+            msg.push('\n');
+        }
+        panic!("{msg}");
+    }
+    for d in &diags {
+        warn_once(format!("{}:{}:{}", prog.name, d.code.as_str(), d.span), d);
+    }
+}
+
+/// Spec-level warning pre-flight of the run entry points
+/// ([`ScenarioSpec::run`] and friends): surface what the compiler would
+/// otherwise do silently (the `slices` clamp), printing each finding once.
+/// Never aborts — error-severity spec findings are `t3 lint`'s to report.
+pub(crate) fn warn_spec(spec: &ScenarioSpec, model: &ModelCfg, tp: u64, sub: SubLayer) {
+    for d in spec_diags(spec, model, tp, sub) {
+        if d.severity == Severity::Warning {
+            warn_once(format!("{}:{}:tp{tp}", spec.name, d.code.as_str()), &d);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::topology::ClusterModel;
+    use crate::fabric::FabricSpec;
+    use crate::models::by_name;
+
+    fn sys() -> SystemConfig {
+        SystemConfig::table1()
+    }
+
+    fn model() -> ModelCfg {
+        by_name("Mega-GPT-2").unwrap()
+    }
+
+    #[test]
+    fn torus_preset_defaults_to_its_exact_size() {
+        let spec = crate::experiment::preset("a2a-torus").unwrap();
+        assert_eq!(default_lint_tp(&spec, &model()), 8);
+        let diags = lint_spec(&sys(), &spec, &model(), 8, SubLayer::OpFwd);
+        assert_eq!(tally(&diags).0, 0, "{diags:?}");
+    }
+
+    #[test]
+    fn hier_ar_on_an_unracked_shape_is_a_bad_rack_size() {
+        // fat_tree(16, _) racks 8 hosts per leaf; at tp 6 the rack clamps
+        // to the whole group and the hierarchy silently flattens.
+        let spec = crate::experiment::preset("hier-ar").unwrap();
+        let diags = spec_diags(&spec, &model(), 6, SubLayer::OpFwd);
+        assert!(
+            diags.iter().any(|d| d.code == DiagCode::BadRackSize),
+            "{diags:?}"
+        );
+        // At its default TP the same preset is clean.
+        let tp = default_lint_tp(&spec, &model());
+        assert_eq!(tp, 16);
+        let diags = lint_spec(&sys(), &spec, &model(), tp, SubLayer::OpFwd);
+        assert_eq!(tally(&diags).0, 0, "{diags:?}");
+    }
+
+    #[test]
+    fn indivisible_tp_is_reported_not_panicked() {
+        let spec = ScenarioSpec::sequential();
+        let diags = lint_spec(&sys(), &spec, &model(), 7, SubLayer::OpFwd);
+        assert!(diags.iter().any(|d| d.code == DiagCode::BadTp), "{diags:?}");
+    }
+
+    #[test]
+    fn absurd_slice_count_warns_instead_of_clamping_silently() {
+        let m = model();
+        let tp = 8;
+        let bytes = sublayer_gemm(&m, tp, SubLayer::OpFwd).out_bytes();
+        let spec = ScenarioSpec::sequential().sliced(u32::MAX);
+        let diags = spec_diags(&spec, &m, tp, SubLayer::OpFwd);
+        assert!(
+            diags.iter().any(|d| d.code == DiagCode::SliceClamp),
+            "{diags:?}"
+        );
+        // A count the payload supports stays quiet.
+        assert!((4u64) < bytes / tp);
+        let spec = ScenarioSpec::sequential().sliced(4);
+        assert!(spec_diags(&spec, &m, tp, SubLayer::OpFwd).is_empty());
+    }
+
+    #[test]
+    fn straggler_outside_the_group_fails_preflight() {
+        let spec = ScenarioSpec::t3_mca().cluster(ClusterModel::straggler(9, 1.25));
+        let diags = lint_spec(&sys(), &spec, &model(), 8, SubLayer::OpFwd);
+        assert!(
+            diags.iter().any(|d| d.code == DiagCode::StragglerOutOfRange),
+            "{diags:?}"
+        );
+    }
+
+    #[test]
+    fn torus_at_the_wrong_tp_is_a_shape_error() {
+        let spec = ScenarioSpec::t3_mca()
+            .all_to_all()
+            .cluster(ClusterModel::fabric(FabricSpec::torus(2, 4)));
+        let diags = lint_spec(&sys(), &spec, &model(), 16, SubLayer::OpFwd);
+        assert!(
+            diags.iter().any(|d| d.code == DiagCode::BadFabricShape),
+            "{diags:?}"
+        );
+    }
+}

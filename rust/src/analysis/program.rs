@@ -1,0 +1,301 @@
+//! Static verification of a compiled [`Program`]: the phase-dependency
+//! graph, trigger-arity contracts, and skew-model sanity.
+//!
+//! [`StartRule`]s induce a dependency graph over phases (who waits on
+//! whom). Programs built through [`Program::phase`] are acyclic by
+//! construction — every rule references an *earlier* phase — but the
+//! checks are written over a free-standing [`DepGraph`] so hand-assembled
+//! graphs (and the mutation tests) exercise the cycle/dangling detectors
+//! on shapes the builder cannot produce.
+//!
+//! The trigger checks replay [`crate::cluster::execute`]'s start-rule
+//! resolution symbolically: the verifier tracks the most recent phase
+//! whose [`PhaseCaps`] declare slice triggers — exactly the state the
+//! driver keeps at run time — and proves every `AtSliceTrigger` index in
+//! range *before* anything executes.
+
+use crate::cluster::collective::ExecTarget;
+use crate::cluster::program::{Program, StartRule};
+use crate::cluster::topology::{SkewModel, TopologySpec};
+use crate::config::SystemConfig;
+
+use super::diag::{Diag, DiagCode, Span};
+use super::fabric;
+
+/// The phase-dependency graph: `deps[i]` lists the phases that phase `i`
+/// waits on. Derived from [`StartRule`]s by [`DepGraph::from_rules`];
+/// mutation tests hand-build adversarial shapes directly.
+#[derive(Debug, Clone, Default)]
+pub struct DepGraph {
+    /// Per-phase dependency lists (indices into the same phase vector).
+    pub deps: Vec<Vec<usize>>,
+}
+
+impl DepGraph {
+    /// Build the graph a rule list induces. `AtZero` depends on nothing;
+    /// `AfterPrev`, `AtPrevTriggers`, and `AtSliceTrigger` wait on the
+    /// immediately preceding phase (the slice producer is always at or
+    /// before it); `AfterAllPrev` waits on everything earlier.
+    pub fn from_rules(rules: &[StartRule]) -> Self {
+        let deps = rules
+            .iter()
+            .enumerate()
+            .map(|(i, rule)| match rule {
+                StartRule::AtZero => Vec::new(),
+                StartRule::AfterPrev
+                | StartRule::AtPrevTriggers
+                | StartRule::AtSliceTrigger { .. } => {
+                    if i > 0 {
+                        vec![i - 1]
+                    } else {
+                        Vec::new()
+                    }
+                }
+                StartRule::AfterAllPrev => (0..i).collect(),
+            })
+            .collect();
+        DepGraph { deps }
+    }
+
+    /// Check the graph for dangling edges (T3E003) and cycles (T3E002).
+    /// A cycle is a deadlock: every phase on it waits for another member,
+    /// so none can ever start — the whole strongly-connected knot (and
+    /// anything downstream of it) is unreachable.
+    pub fn validate(&self) -> Vec<Diag> {
+        let mut diags = Vec::new();
+        let n = self.deps.len();
+        for (i, ds) in self.deps.iter().enumerate() {
+            for &d in ds {
+                if d >= n {
+                    diags.push(Diag::new(
+                        DiagCode::DanglingDep,
+                        Span::Phase(i),
+                        format!("phase {i} depends on phase {d}, but the program has {n} phases"),
+                        "dependencies must reference phases inside the program",
+                    ));
+                }
+            }
+        }
+        // Iterative three-color DFS; report each cycle once, at its
+        // smallest member.
+        const WHITE: u8 = 0;
+        const GRAY: u8 = 1;
+        const BLACK: u8 = 2;
+        let mut color = vec![WHITE; n];
+        let mut on_cycle = vec![false; n];
+        for start in 0..n {
+            if color[start] != WHITE {
+                continue;
+            }
+            // (node, next dep index) explicit stack.
+            let mut stack = vec![(start, 0usize)];
+            color[start] = GRAY;
+            while let Some(&(v, next)) = stack.last() {
+                if next < self.deps[v].len() {
+                    stack.last_mut().expect("non-empty").1 += 1;
+                    let d = self.deps[v][next];
+                    if d >= n {
+                        continue; // dangling, already reported
+                    }
+                    match color[d] {
+                        WHITE => {
+                            color[d] = GRAY;
+                            stack.push((d, 0));
+                        }
+                        GRAY => {
+                            // Back edge: everything on the stack from `d`
+                            // up is one waiting cycle.
+                            let from = stack.iter().position(|&(x, _)| x == d).unwrap_or(0);
+                            for &(x, _) in &stack[from..] {
+                                on_cycle[x] = true;
+                            }
+                        }
+                        _ => {}
+                    }
+                } else {
+                    color[v] = BLACK;
+                    stack.pop();
+                }
+            }
+        }
+        if let Some(first) = (0..n).find(|&i| on_cycle[i]) {
+            let members: Vec<String> = (0..n)
+                .filter(|&i| on_cycle[i])
+                .map(|i| i.to_string())
+                .collect();
+            diags.push(Diag::new(
+                DiagCode::CyclicDeps,
+                Span::Phase(first),
+                format!(
+                    "phase dependencies form a cycle through phases {{{}}} — none can ever start",
+                    members.join(", ")
+                ),
+                "break the cycle: start rules must only wait on earlier phases",
+            ));
+        }
+        diags
+    }
+}
+
+/// Verify a compiled program against a system config and execution
+/// target: dependency-graph shape, trigger-arity contracts
+/// ([`crate::cluster::PhaseCaps`]), skew sanity, and — on a routed-fabric
+/// target — the full [`fabric`] checks over this program's flows.
+///
+/// Returns every finding; [`super::preflight`] aborts on errors and
+/// prints warnings once, `t3 lint` renders the list.
+pub fn verify_program(sys: &SystemConfig, prog: &Program, target: &ExecTarget) -> Vec<Diag> {
+    let mut diags = Vec::new();
+    if prog.phases.is_empty() {
+        diags.push(Diag::new(
+            DiagCode::EmptyProgram,
+            Span::Program,
+            "program has no phases",
+            "compile a scenario or append at least one phase",
+        ));
+        return diags;
+    }
+
+    let rules: Vec<StartRule> = prog.phases.iter().map(|p| p.rule).collect();
+    diags.extend(DepGraph::from_rules(&rules).validate());
+
+    // Replay the driver's trigger bookkeeping symbolically: the most
+    // recent phase declaring slice triggers is what an `AtSliceTrigger`
+    // below it reads.
+    let mut producer: Option<(usize, u32)> = None;
+    for (i, ph) in prog.phases.iter().enumerate() {
+        let caps = ph.caps(sys, prog.tp);
+        match ph.rule {
+            StartRule::AtSliceTrigger { slice, .. } => match producer {
+                None => diags.push(Diag::new(
+                    DiagCode::NoSliceProducer,
+                    Span::Phase(i),
+                    format!(
+                        "phase {i} ({}) waits on slice trigger {slice}, but no upstream phase \
+                         declares slice triggers",
+                        ph.label()
+                    ),
+                    "give an upstream GEMM/fused phase `slices > 1`, or use AfterPrev",
+                )),
+                Some((p, count)) if slice >= count => diags.push(Diag::new(
+                    DiagCode::SliceOutOfRange,
+                    Span::Phase(i),
+                    format!(
+                        "phase {i} ({}) waits on slice trigger {slice}, but the producer \
+                         (phase {p}) declares only {count} slices",
+                        ph.label()
+                    ),
+                    format!("use a slice index below {count}, or widen the producer's split"),
+                )),
+                Some(_) => {}
+            },
+            StartRule::AtPrevTriggers => {
+                if i == 0 {
+                    diags.push(Diag::new(
+                        DiagCode::NoOpRule,
+                        Span::Phase(0),
+                        format!(
+                            "first phase ({}) uses AtPrevTriggers with nothing before it — \
+                             it resolves to t=0",
+                            ph.label()
+                        ),
+                        "use AtZero on first phases; the rule reads as intent",
+                    ));
+                } else {
+                    let prev = &prog.phases[i - 1];
+                    if !prev.caps(sys, prog.tp).early_trigger {
+                        diags.push(Diag::new(
+                            DiagCode::TriggerlessWait,
+                            Span::Phase(i),
+                            format!(
+                                "phase {i} ({}) waits on phase {}'s trigger, but {} declares no \
+                                 early trigger — the handoff degrades to AfterPrev",
+                                ph.label(),
+                                i - 1,
+                                prev.label()
+                            ),
+                            "fuse onto a triggering producer (fused GEMM-RS, A2A), or say \
+                             AfterPrev explicitly",
+                        ));
+                    }
+                }
+            }
+            _ => {}
+        }
+        if caps.slice_triggers > 0 {
+            producer = Some((i, caps.slice_triggers));
+        }
+    }
+
+    if let ExecTarget::Cluster(model) = target {
+        if let SkewModel::Straggler { rank, .. } = model.skew {
+            if rank >= prog.tp {
+                diags.push(Diag::new(
+                    DiagCode::StragglerOutOfRange,
+                    Span::Rank(rank),
+                    format!("straggler rank {rank} is outside the {}-rank group", prog.tp),
+                    format!("pick a rank in 0..{}", prog.tp),
+                ));
+            }
+        }
+        let topology = model.topology.clone().canonicalize(prog.tp);
+        if let TopologySpec::Fabric(spec) = &topology {
+            if prog.tp > 1 {
+                diags.extend(fabric::check_program_fabric(sys, prog, spec));
+            }
+        }
+    }
+    diags
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn builder_rules_are_acyclic() {
+        let g = DepGraph::from_rules(&[
+            StartRule::AtZero,
+            StartRule::AfterPrev,
+            StartRule::AfterAllPrev,
+            StartRule::AtSliceTrigger { slice: 0, serial: false },
+            StartRule::AtPrevTriggers,
+        ]);
+        assert_eq!(g.deps[0], Vec::<usize>::new());
+        assert_eq!(g.deps[1], vec![0]);
+        assert_eq!(g.deps[2], vec![0, 1]);
+        assert_eq!(g.deps[3], vec![2]);
+        assert!(g.validate().is_empty());
+    }
+
+    #[test]
+    fn cycle_detection_reports_all_members_once() {
+        // 0 -> 1 -> 2 -> 0, plus 3 hanging off the cycle.
+        let g = DepGraph {
+            deps: vec![vec![1], vec![2], vec![0], vec![2]],
+        };
+        let diags = g.validate();
+        assert_eq!(diags.len(), 1);
+        assert_eq!(diags[0].code, DiagCode::CyclicDeps);
+        assert!(diags[0].message.contains("0, 1, 2"), "{}", diags[0].message);
+    }
+
+    #[test]
+    fn dangling_dep_is_reported_per_edge() {
+        let g = DepGraph {
+            deps: vec![vec![5], vec![0]],
+        };
+        let diags = g.validate();
+        assert_eq!(diags.len(), 1);
+        assert_eq!(diags[0].code, DiagCode::DanglingDep);
+        assert_eq!(diags[0].span, Span::Phase(0));
+    }
+
+    #[test]
+    fn self_loop_is_a_cycle() {
+        let g = DepGraph { deps: vec![vec![0]] };
+        let diags = g.validate();
+        assert_eq!(diags.len(), 1);
+        assert_eq!(diags[0].code, DiagCode::CyclicDeps);
+    }
+}

@@ -50,6 +50,7 @@ use super::topology::{ClusterModel, TopologySpec};
 /// Everything a collective needs to build one rank's machine.
 #[derive(Debug, Clone)]
 pub struct RankCtx<'a> {
+    /// The simulated system configuration.
     pub sys: &'a SystemConfig,
     /// Ring rank id (0 on the loopback mirror).
     pub rank: u64,
@@ -127,6 +128,52 @@ fn slice_triggers_from_stages(
 }
 
 /// A pluggable collective: chunking/schedule and machine construction on
+/// A collective's statically declared capabilities: what the phase emits
+/// (triggers), moves (egress/DRAM bytes), and computes — everything the
+/// static analyzer ([`crate::analysis`]) needs to verify start-rule
+/// contracts and derive symbolic time bounds *without* building a rank
+/// machine. The defaults describe a phase that does nothing; every
+/// shipped collective overrides [`Collective::caps`].
+#[derive(Debug, Clone, Default, PartialEq)]
+pub struct PhaseCaps {
+    /// The phase's trigger fires *before* its end (a downstream
+    /// `AtPrevTriggers` phase genuinely overlaps it). `false` means
+    /// `trigger == end` and the handoff degrades to `AfterPrev`.
+    pub early_trigger: bool,
+    /// Number of retired-WG-prefix slice triggers the phase reports for a
+    /// downstream `AtSliceTrigger` phase (0 = none).
+    pub slice_triggers: u32,
+    /// Bytes every rank pushes through its egress link over the whole
+    /// phase (a *floor*: the smallest any rank sends).
+    pub egress_bytes: u64,
+    /// Serialized wire steps of the collective's schedule (ring: one per
+    /// forwarded chunk), for latency ceilings.
+    pub wire_steps: u64,
+    /// Minimum compute time of the phase's GEMM stages at nominal skew
+    /// (`SimTime::ZERO` for pure-wire phases).
+    pub compute_floor: SimTime,
+    /// Number of GEMM stages behind `compute_floor` (per-stage rounding
+    /// slack in the lower bound).
+    pub compute_stages: u64,
+    /// Generous ceiling on the DRAM bytes the phase moves (upper bound
+    /// only).
+    pub dram_bytes: u64,
+    /// Extra serialized upper-bound time for work the other fields cannot
+    /// see (e.g. an overlapped consumer GEMM).
+    pub extra_upper: SimTime,
+}
+
+/// Per-rank egress-byte floor of a `devices`-way ring schedule: every
+/// member forwards `devices - 1` chunks of at least `bytes / devices`
+/// bytes each (a single member sends nothing).
+fn ring_egress(bytes: u64, devices: u64) -> u64 {
+    if devices < 2 {
+        0
+    } else {
+        (devices - 1) * (bytes / devices)
+    }
+}
+
 /// one side, result/trigger extraction on the other. Implementations are
 /// plain data (the knobs) — all simulation state lives in the rank machine.
 pub trait Collective {
@@ -153,6 +200,14 @@ pub trait Collective {
     fn dest_map(&self, tp: u64) -> Option<Vec<usize>> {
         let _ = tp;
         None
+    }
+    /// Statically declared capabilities (triggers, egress, compute) for
+    /// the pre-flight verifier and the symbolic bounds analyzer. The
+    /// default — an inert phase — is sound but vacuous; every shipped
+    /// collective overrides it.
+    fn caps(&self, sys: &SystemConfig, tp: u64) -> PhaseCaps {
+        let _ = (sys, tp);
+        PhaseCaps::default()
     }
 }
 
@@ -369,7 +424,9 @@ fn run_collective_impl<C: Collective>(
 /// ([`FusedResult::ag_trigger`]) for downstream triggered phases.
 #[derive(Debug, Clone)]
 pub struct FusedGemmRsCollective {
+    /// The producer GEMM's stage decomposition.
     pub plan: StagePlan,
+    /// Fused-engine knobs (CU split, MCA, tracker).
     pub opts: FusedOpts,
     /// Report retired-WG-prefix triggers for an `slices`-way decomposed
     /// downstream phase (1 = undecomposed, no triggers reported).
@@ -413,6 +470,28 @@ impl Collective for FusedGemmRsCollective {
             ),
         }
     }
+
+    fn caps(&self, sys: &SystemConfig, tp: u64) -> PhaseCaps {
+        // The fused RS forwards the n-1 chunks of the producer's
+        // ChunkPlan, each holding at least `total_wgs / tp` workgroups.
+        let egress_bytes = if tp < 2 {
+            0
+        } else {
+            (tp - 1) * (self.plan.total_wgs / tp) * self.plan.wg_out_bytes()
+        };
+        let io =
+            self.plan.shape.a_bytes() + self.plan.shape.b_bytes() + self.plan.shape.out_bytes();
+        PhaseCaps {
+            early_trigger: true,
+            slice_triggers: if self.slices > 1 { self.slices } else { 0 },
+            egress_bytes,
+            wire_steps: tp.saturating_sub(1),
+            compute_floor: self.plan.total_compute_time(&sys.gpu, sys.gpu.cu_count),
+            compute_stages: self.plan.num_stages,
+            dram_bytes: 4 * io + 4 * self.plan.shape.out_bytes(),
+            extra_upper: SimTime::ZERO,
+        }
+    }
 }
 
 /// A baseline CU/NMC ring collective ([`RingKind`] selects RS-on-CUs,
@@ -424,6 +503,7 @@ pub struct RingCollective {
     pub bytes: u64,
     /// CUs granted to the kernel (ignored by [`RingKind::RsNmc`]).
     pub cus: u32,
+    /// Which ring algorithm runs.
     pub kind: RingKind,
 }
 
@@ -466,6 +546,15 @@ impl Collective for RingCollective {
             counters: out.counters,
             timeline: out.timeline.take(),
             slice_triggers: Vec::new(),
+        }
+    }
+
+    fn caps(&self, _sys: &SystemConfig, tp: u64) -> PhaseCaps {
+        PhaseCaps {
+            egress_bytes: ring_egress(self.bytes, tp),
+            wire_steps: tp.saturating_sub(1),
+            dram_bytes: 4 * self.bytes,
+            ..PhaseCaps::default()
         }
     }
 }
@@ -523,8 +612,11 @@ pub struct GroupedRingCollective {
     /// Payload of *this* phase on every member (the hierarchical schedule
     /// shrinks it for the cross-rack stages).
     pub bytes: u64,
+    /// CUs granted to the kernel.
     pub cus: u32,
+    /// Which ring algorithm runs.
     pub kind: RingKind,
+    /// The member subset and its neighbor permutation.
     pub group: RingGroup,
 }
 
@@ -572,6 +664,16 @@ impl Collective for GroupedRingCollective {
     fn dest_map(&self, tp: u64) -> Option<Vec<usize>> {
         Some(self.group.dest_map(tp))
     }
+
+    fn caps(&self, _sys: &SystemConfig, tp: u64) -> PhaseCaps {
+        let devices = self.group.devices(tp);
+        PhaseCaps {
+            egress_bytes: ring_egress(self.bytes, devices),
+            wire_steps: devices.saturating_sub(1),
+            dram_bytes: 4 * self.bytes,
+            ..PhaseCaps::default()
+        }
+    }
 }
 
 /// The T3-fused ring all-gather (§7.1): triggered per rank at `ctx.start`
@@ -584,7 +686,9 @@ impl Collective for GroupedRingCollective {
 pub struct FusedAgCollective {
     /// Total collective payload (all chunks).
     pub bytes: u64,
+    /// Memory-controller arbitration policy during the AG.
     pub policy: ArbPolicy,
+    /// Optional downstream consumer kernel fed by arriving chunks.
     pub consumer: Option<ConsumerSpec>,
 }
 
@@ -632,14 +736,38 @@ impl Collective for FusedAgCollective {
             slice_triggers: Vec::new(),
         }
     }
+
+    fn caps(&self, sys: &SystemConfig, tp: u64) -> PhaseCaps {
+        // An overlapped consumer GEMM extends the phase past the gather;
+        // bound it by its serialized stage time at the worst plausible
+        // contention stretch.
+        let extra_upper = self
+            .consumer
+            .as_ref()
+            .map(|c| {
+                c.plan.total_compute_time(&sys.gpu, sys.gpu.cu_count)
+                    * (c.compute_scale.max(1.0) * 4.0)
+            })
+            .unwrap_or(SimTime::ZERO);
+        PhaseCaps {
+            egress_bytes: ring_egress(self.bytes, tp),
+            wire_steps: tp.saturating_sub(1),
+            dram_bytes: 4 * self.bytes,
+            extra_upper,
+            ..PhaseCaps::default()
+        }
+    }
 }
 
 /// The isolated producer GEMM as a (degenerate) collective: `tp`
 /// independent skewed kernels, no ring traffic. Launches at `ctx.start`.
 #[derive(Debug, Clone)]
 pub struct GemmCollective {
+    /// The GEMM's stage decomposition.
     pub plan: StagePlan,
+    /// CUs granted to the kernel.
     pub cus: u32,
+    /// Output write path (through-LLC vs streaming).
     pub write_mode: WriteMode,
     /// Report retired-WG-prefix triggers for an `slices`-way decomposed
     /// downstream phase (1 = undecomposed, no triggers reported).
@@ -684,6 +812,18 @@ impl Collective for GemmCollective {
                 &out.stage_ends,
                 out.time,
             ),
+        }
+    }
+
+    fn caps(&self, sys: &SystemConfig, _tp: u64) -> PhaseCaps {
+        let io =
+            self.plan.shape.a_bytes() + self.plan.shape.b_bytes() + self.plan.shape.out_bytes();
+        PhaseCaps {
+            slice_triggers: if self.slices > 1 { self.slices } else { 0 },
+            compute_floor: self.plan.total_compute_time(&sys.gpu, self.cus),
+            compute_stages: self.plan.num_stages,
+            dram_bytes: 4 * io,
+            ..PhaseCaps::default()
         }
     }
 }

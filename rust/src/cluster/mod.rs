@@ -65,8 +65,8 @@ pub use engine::{
 
 pub use collective::{
     run_collective, run_collective_oracle, run_collective_with_links, Collective, ExecTarget,
-    FusedAgCollective, FusedGemmRsCollective, GemmCollective, GroupedRingCollective, RankCtx,
-    RankOutcome, RingCollective, RingGroup,
+    FusedAgCollective, FusedGemmRsCollective, GemmCollective, GroupedRingCollective, PhaseCaps,
+    RankCtx, RankOutcome, RingCollective, RingGroup,
 };
 pub use program::{execute, ExecOpts, Phase, PhaseReport, PhaseRole, Program, RunReport, StartRule};
 pub use topology::{ClusterModel, SkewModel, TopologySpec};

@@ -95,6 +95,13 @@ trait DynCollective: Send + Sync {
         order: Interleave,
         oracle: bool,
     ) -> (Vec<RankOutcome>, Vec<FabricLinkTrace>);
+    /// Forward [`Collective::label`] through the erasure.
+    fn dyn_label(&self) -> &'static str;
+    /// Forward [`Collective::caps`] through the erasure (the static
+    /// analyzer's window into a boxed phase).
+    fn dyn_caps(&self, sys: &SystemConfig, tp: u64) -> super::collective::PhaseCaps;
+    /// Forward [`Collective::dest_map`] through the erasure.
+    fn dyn_dest_map(&self, tp: u64) -> Option<Vec<usize>>;
 }
 
 impl<C> DynCollective for C
@@ -137,16 +144,31 @@ where
         }
         (outcomes, links)
     }
+
+    fn dyn_label(&self) -> &'static str {
+        self.label()
+    }
+
+    fn dyn_caps(&self, sys: &SystemConfig, tp: u64) -> super::collective::PhaseCaps {
+        self.caps(sys, tp)
+    }
+
+    fn dyn_dest_map(&self, tp: u64) -> Option<Vec<usize>> {
+        self.dest_map(tp)
+    }
 }
 
 /// One pipeline stage: a collective plus its composition rule.
 pub struct Phase {
+    /// What the phase is, for reports.
     pub role: PhaseRole,
+    /// When the phase starts relative to its predecessors.
     pub rule: StartRule,
     coll: Box<dyn DynCollective>,
 }
 
 impl Phase {
+    /// A phase wrapping `coll` under the given role and start rule.
     pub fn new<C>(role: PhaseRole, rule: StartRule, coll: C) -> Self
     where
         C: Collective + Send + Sync + 'static,
@@ -156,6 +178,24 @@ impl Phase {
             rule,
             coll: Box::new(coll),
         }
+    }
+
+    /// The collective's short stable name.
+    pub fn label(&self) -> &'static str {
+        self.coll.dyn_label()
+    }
+
+    /// The collective's statically declared capabilities
+    /// ([`super::collective::PhaseCaps`]) — the static analyzer's view of
+    /// a boxed phase.
+    pub fn caps(&self, sys: &SystemConfig, tp: u64) -> super::collective::PhaseCaps {
+        self.coll.dyn_caps(sys, tp)
+    }
+
+    /// The collective's destination permutation (`None` = canonical
+    /// downstream ring).
+    pub fn dest_map(&self, tp: u64) -> Option<Vec<usize>> {
+        self.coll.dyn_dest_map(tp)
     }
 }
 
@@ -171,12 +211,16 @@ impl std::fmt::Debug for Phase {
 /// An ordered pipeline of phases over a `tp`-rank ring.
 #[derive(Debug)]
 pub struct Program {
+    /// Display name (reports, diagnostics).
     pub name: String,
+    /// Ring size — the TP degree every phase runs at.
     pub tp: u64,
+    /// The pipeline stages, in order.
     pub phases: Vec<Phase>,
 }
 
 impl Program {
+    /// An empty program over a `tp`-rank ring.
     pub fn new(name: impl Into<String>, tp: u64) -> Self {
         Program {
             name: name.into(),
@@ -199,6 +243,7 @@ impl Program {
 /// instead of a `_traced` twin per entry point.
 #[derive(Debug, Clone)]
 pub struct ExecOpts {
+    /// Where the program runs (mirror or a modeled cluster).
     pub target: ExecTarget,
     /// Trace sink mode. [`SinkMode::Off`] records nothing;
     /// [`SinkMode::Full`] keeps every span, instant, and dependency edge;
@@ -263,6 +308,7 @@ impl ExecOpts {
 /// Per-phase slice of a [`RunReport`].
 #[derive(Debug, Clone)]
 pub struct PhaseReport {
+    /// The phase's declared role.
     pub role: PhaseRole,
     /// Latest per-rank start of the phase.
     pub start: SimTime,
@@ -287,10 +333,13 @@ pub struct PhaseReport {
 /// The result of one [`execute`] run.
 #[derive(Debug, Clone)]
 pub struct RunReport {
+    /// The executed program's name.
     pub name: String,
+    /// Ring size the run used.
     pub tp: u64,
     /// Group completion: the max accounted end over all phases and ranks.
     pub total: SimTime,
+    /// Per-phase slices, in pipeline order.
     pub phases: Vec<PhaseReport>,
     /// Rank-0 DRAM counters summed over phases (consumer-GEMM traffic of a
     /// fused AG is already uncharged — it belongs to the next sub-layer).
@@ -325,6 +374,9 @@ pub fn execute(sys: &SystemConfig, prog: &Program, opts: &ExecOpts) -> RunReport
     // its ring messages back to itself, on either target.
     assert!(prog.tp >= 1, "a program needs at least one rank");
     assert!(!prog.phases.is_empty(), "program has no phases");
+    // Fail-fast static analysis: abort on errors (the run would hang,
+    // panic, or silently compute the wrong thing), print warnings once.
+    crate::analysis::preflight(sys, prog, &opts.target);
     let nranks = opts.target.ranks(prog.tp);
 
     let mut all_ends: Vec<Vec<SimTime>> = Vec::new();
@@ -450,6 +502,22 @@ pub fn execute(sys: &SystemConfig, prog: &Program, opts: &ExecOpts) -> RunReport
         prev_ends = ends;
         prev_triggers = triggers;
         all_ends.push(prev_ends.clone());
+    }
+
+    // Live oracle: the symbolic alpha-beta lower bound can never exceed
+    // what any run actually took (the upper bound is asserted by the
+    // registry sweep and the property fuzz, where every phase declares
+    // real capabilities).
+    #[cfg(debug_assertions)]
+    {
+        let b = crate::analysis::program_bounds(sys, prog, &opts.target);
+        debug_assert!(
+            b.lower <= total,
+            "symbolic lower bound {:?} exceeds the run's total {:?} ({})",
+            b.lower,
+            total,
+            prog.name
+        );
     }
 
     RunReport {

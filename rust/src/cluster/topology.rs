@@ -51,6 +51,7 @@ impl SkewModel {
         }
     }
 
+    /// Whether this is the no-skew model.
     pub fn is_none(&self) -> bool {
         matches!(self, SkewModel::None)
     }
@@ -148,7 +149,9 @@ impl TopologySpec {
 /// The complete cluster description: skew + topology.
 #[derive(Debug, Clone, PartialEq)]
 pub struct ClusterModel {
+    /// Per-rank compute-speed variation.
     pub skew: SkewModel,
+    /// The interconnect model.
     pub topology: TopologySpec,
 }
 

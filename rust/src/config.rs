@@ -10,11 +10,14 @@ use crate::sim::time::SimTime;
 /// Datatype of tensors moving through the system.
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
 pub enum DType {
+    /// 16-bit floating point.
     F16,
+    /// 32-bit floating point.
     F32,
 }
 
 impl DType {
+    /// Bytes per element.
     #[inline]
     pub fn bytes(self) -> u64 {
         match self {
@@ -22,6 +25,7 @@ impl DType {
             DType::F32 => 4,
         }
     }
+    /// Display name ("fp16" / "fp32").
     pub fn name(self) -> &'static str {
         match self {
             DType::F16 => "fp16",
@@ -128,6 +132,7 @@ pub struct LinkConfig {
 }
 
 impl LinkConfig {
+    /// Serialization time of `bytes` at the per-direction rate.
     pub fn transfer_time(&self, bytes: u64) -> SimTime {
         SimTime::transfer(bytes, self.per_dir_bw_gbps)
     }
@@ -145,6 +150,7 @@ pub struct TrackerConfig {
 }
 
 impl TrackerConfig {
+    /// Total tracker entries (sets x ways).
     pub fn capacity(&self) -> u32 {
         self.sets * self.ways
     }
@@ -190,11 +196,17 @@ impl Default for McaConfig {
 /// Complete single-node system description.
 #[derive(Debug, Clone, PartialEq)]
 pub struct SystemConfig {
+    /// Configuration name ("Table 1", "future-2x-cu", ...).
     pub name: String,
+    /// GPU compute resources.
     pub gpu: GpuConfig,
+    /// HBM + memory-controller model.
     pub mem: MemConfig,
+    /// Inter-GPU link.
     pub link: LinkConfig,
+    /// T3 tracker hardware budget.
     pub tracker: TrackerConfig,
+    /// Memory-controller arbitration (T3-MCA) parameters.
     pub mca: McaConfig,
     /// Deterministic simulation seed.
     pub seed: u64,

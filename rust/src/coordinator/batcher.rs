@@ -13,6 +13,7 @@ use crate::sim::time::SimTime;
 /// One inference request (prompt phase).
 #[derive(Debug, Clone, PartialEq)]
 pub struct Request {
+    /// Monotonic request id.
     pub id: u64,
     /// Prompt length in tokens.
     pub tokens: u64,
@@ -44,13 +45,16 @@ impl Default for BatchPolicy {
 /// A formed batch.
 #[derive(Debug, Clone, PartialEq)]
 pub struct Batch {
+    /// The member requests, in admission order.
     pub requests: Vec<Request>,
 }
 
 impl Batch {
+    /// Total tokens across the batch.
     pub fn tokens(&self) -> u64 {
         self.requests.iter().map(|r| r.tokens).sum()
     }
+    /// Earliest member arrival (ZERO for an empty batch).
     pub fn oldest_arrival(&self) -> SimTime {
         self.requests
             .iter()
@@ -68,6 +72,7 @@ pub struct Batcher {
 }
 
 impl Batcher {
+    /// An empty batcher under the given policy.
     pub fn new(policy: BatchPolicy) -> Self {
         Batcher {
             policy,
@@ -75,6 +80,7 @@ impl Batcher {
         }
     }
 
+    /// Enqueue a request (must fit the policy's token budget).
     pub fn push(&mut self, req: Request) {
         assert!(
             req.tokens <= self.policy.max_tokens,
@@ -84,6 +90,7 @@ impl Batcher {
         self.queue.push_back(req);
     }
 
+    /// Requests waiting to be batched.
     pub fn pending(&self) -> usize {
         self.queue.len()
     }

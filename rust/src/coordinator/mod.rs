@@ -91,6 +91,7 @@ impl Coordinator {
         Ok(Coordinator { workers })
     }
 
+    /// Number of worker devices.
     pub fn devices(&self) -> usize {
         self.workers.len()
     }

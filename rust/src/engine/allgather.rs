@@ -58,6 +58,7 @@ use super::{Ev, GroupTag, Runner, PACE_BATCH};
 /// to — identical on both ends (ring steps are globally aligned).
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub struct AgMsg {
+    /// Globally-aligned ring step the chunk belongs to.
     pub step: u32,
     /// First-byte arrival time at the receiver.
     pub start: SimTime,
@@ -69,7 +70,9 @@ pub struct AgMsg {
 /// contend through the memory-controller arbitration (consumer overlap).
 #[derive(Debug, Clone)]
 pub struct ConsumerSpec {
+    /// The consumer GEMM's stage plan.
     pub plan: StagePlan,
+    /// Write mode for the consumer's stores.
     pub write_mode: WriteMode,
     /// Per-rank compute slowdown (1.0 = nominal; the cluster skew model).
     pub compute_scale: f64,
@@ -80,6 +83,7 @@ pub struct ConsumerSpec {
 pub struct AgRankSpec {
     /// Total collective payload (all chunks).
     pub bytes: u64,
+    /// Ring size.
     pub devices: u64,
     /// When this rank may launch its own chunk's send — its chunk fully
     /// reduced and its egress link free
@@ -90,6 +94,7 @@ pub struct AgRankSpec {
     pub link: LinkConfig,
     /// MC arbitration policy (matters when a consumer GEMM is present).
     pub policy: ArbPolicy,
+    /// The next sub-layer's GEMM to overlap with, if any.
     pub consumer: Option<ConsumerSpec>,
 }
 
@@ -106,6 +111,7 @@ pub struct AllGatherResult {
     pub step_ends: Vec<SimTime>,
     /// Consumer GEMM retirement (last stage), when a consumer ran.
     pub consumer_done: Option<SimTime>,
+    /// DRAM traffic counters for the run.
     pub counters: DramCounters,
     /// Timeline trace (when [`AllGatherRank::enable_trace`] was called).
     pub timeline: Option<RankTrace>,
@@ -166,6 +172,7 @@ pub struct AllGatherRank {
 }
 
 impl AllGatherRank {
+    /// Build one rank's machine from its spec.
     pub fn new(sys: &SystemConfig, spec: &AgRankSpec) -> Self {
         assert!(spec.devices >= 2, "a ring needs at least two ranks");
         let chunk = spec.bytes / spec.devices;

@@ -87,11 +87,13 @@ pub struct A2aRankSpec {
     pub write_mode: WriteMode,
     /// Total dispatch payload (all `N` slices; slice 0 stays local).
     pub bytes: u64,
+    /// Ring size.
     pub devices: u64,
     /// MC arbitration between the GEMM's reads and the dispatch DMA.
     pub policy: ArbPolicy,
     /// This rank's egress edge (to its downstream ring neighbor).
     pub link: LinkConfig,
+    /// Fused (tracker-triggered) vs serialized dispatch.
     pub mode: A2aMode,
     /// Per-rank compute slowdown (1.0 = nominal; the cluster skew model).
     pub compute_scale: f64,
@@ -115,6 +117,7 @@ pub struct AllToAllResult {
     pub recv_ends: Vec<SimTime>,
     /// Per-slice trigger times (own sends), indexed by slice − 1.
     pub send_triggers: Vec<SimTime>,
+    /// DRAM traffic counters for the run.
     pub counters: DramCounters,
     /// Timeline trace (when [`AllToAllRank::enable_trace`] was called).
     pub timeline: Option<RankTrace>,
@@ -178,6 +181,7 @@ pub struct AllToAllRank {
 }
 
 impl AllToAllRank {
+    /// Build one rank's machine from its spec.
     pub fn new(sys: &SystemConfig, spec: &A2aRankSpec) -> Self {
         assert!(spec.devices >= 2, "a ring needs at least two ranks");
         assert!(spec.devices <= u16::MAX as u64, "fwd_key packs slice/hops into 16 bits each");
@@ -512,11 +516,15 @@ impl crate::cluster::RankNode for AllToAllRank {
 /// pipeline, CLI) comes from the shared machinery.
 #[derive(Debug, Clone)]
 pub struct AllToAllCollective {
+    /// The producer GEMM's stage plan.
     pub plan: StagePlan,
+    /// Producer write mode for its local stores.
     pub write_mode: WriteMode,
     /// Total dispatch payload (all slices).
     pub bytes: u64,
+    /// MC arbitration between GEMM reads and dispatch DMA.
     pub policy: ArbPolicy,
+    /// Fused (tracker-triggered) vs serialized dispatch.
     pub mode: A2aMode,
 }
 
@@ -560,6 +568,25 @@ impl crate::cluster::Collective for AllToAllCollective {
             // triggers drive its own DMA); it exposes no external
             // decomposition axis.
             slice_triggers: Vec::new(),
+        }
+    }
+
+    fn caps(&self, sys: &SystemConfig, tp: u64) -> crate::cluster::PhaseCaps {
+        let io =
+            self.plan.shape.a_bytes() + self.plan.shape.b_bytes() + self.plan.shape.out_bytes();
+        // Every rank originates n-1 direct slices of `bytes / n`;
+        // ring-routed forwarding only adds to that.
+        let egress_bytes = if tp < 2 { 0 } else { (tp - 1) * (self.bytes / tp) };
+        crate::cluster::PhaseCaps {
+            early_trigger: true,
+            slice_triggers: 0,
+            egress_bytes,
+            // Ring-routed dispatch forwards up to O(n^2) chunk hops.
+            wire_steps: tp.saturating_mul(tp),
+            compute_floor: self.plan.total_compute_time(&sys.gpu, sys.gpu.cu_count),
+            compute_stages: self.plan.num_stages,
+            dram_bytes: 4 * io + 4 * self.bytes,
+            extra_upper: crate::sim::time::SimTime::ZERO,
         }
     }
 }

@@ -35,7 +35,9 @@ use super::{Ev, GroupTag, Runner, PACE_BATCH};
 /// offset.
 #[derive(Debug, Clone, PartialEq)]
 pub struct CollectiveRunResult {
+    /// Absolute completion time of the rank's calendar.
     pub time: SimTime,
+    /// DRAM traffic counters for the run.
     pub counters: DramCounters,
     /// Per-step completion times.
     pub step_ends: Vec<SimTime>,
@@ -89,9 +91,11 @@ pub fn run_rs_nmc(sys: &SystemConfig, bytes: u64, devices: u64) -> CollectiveRun
 pub struct RingRankSpec {
     /// Total collective payload (all chunks).
     pub bytes: u64,
+    /// Ring size.
     pub devices: u64,
     /// CUs granted to the kernel (ignored by [`RingKind::RsNmc`]).
     pub cus: u32,
+    /// Which ring collective (RS/AG) and reduction path to run.
     pub kind: RingKind,
     /// When this rank's kernel launches (offset composition: e.g. after
     /// the rank's — possibly skewed — producer GEMM).
@@ -131,6 +135,7 @@ pub struct RingRank {
 }
 
 impl RingRank {
+    /// Build one rank's machine from its spec.
     pub fn new(sys: &SystemConfig, spec: &RingRankSpec) -> Self {
         assert!(spec.devices >= 2);
         let chunk = spec.bytes / spec.devices;

@@ -71,6 +71,7 @@ pub struct FusedResult {
     /// (egress window + DMA reads complete); `SimTime::MAX` for the local
     /// final chunk, which is never sent.
     pub sent_done: Vec<SimTime>,
+    /// DRAM traffic counters for the run.
     pub counters: DramCounters,
     /// Peak concurrently-live tracker WF-tiles (hardware budget check).
     pub tracker_peak_tiles: u64,
@@ -104,6 +105,7 @@ impl FusedResult {
 /// Options for a fused run.
 #[derive(Debug, Clone)]
 pub struct FusedOpts {
+    /// MC arbitration between GEMM reads and collective traffic.
     pub policy: ArbPolicy,
     /// Producer write mode for the GEMM's local (non-remote) stores. T3's
     /// default is the uncached NMC bypass (§4.3); `ThroughLlc` models a

@@ -31,8 +31,11 @@ use super::{Ev, GroupTag, Runner};
 /// Result of one isolated GEMM run.
 #[derive(Debug, Clone)]
 pub struct GemmRunResult {
+    /// Kernel retirement time.
     pub time: SimTime,
+    /// DRAM traffic counters for the run.
     pub counters: DramCounters,
+    /// The analytic traffic estimate the run was driven by.
     pub traffic: GemmTraffic,
     /// Per-stage end times (diagnostics / fused-engine validation).
     pub stage_ends: Vec<SimTime>,
@@ -45,9 +48,11 @@ pub struct GemmRunResult {
 /// Construction parameters of one [`GemmRank`].
 #[derive(Debug, Clone)]
 pub struct GemmRankSpec {
+    /// The GEMM's stage plan.
     pub plan: StagePlan,
     /// CUs granted to the kernel.
     pub cus: u32,
+    /// Write mode for the kernel's stores.
     pub mode: WriteMode,
     /// Per-rank compute slowdown (1.0 = nominal; the cluster skew model).
     pub compute_scale: f64,
@@ -83,6 +88,7 @@ pub struct GemmRank {
 }
 
 impl GemmRank {
+    /// Build one rank's machine from its spec.
     pub fn new(sys: &SystemConfig, spec: &GemmRankSpec) -> Self {
         Self::from_runner(Runner::new(sys, ArbPolicy::ComputePriority), spec)
     }

@@ -117,8 +117,11 @@ struct Pacer {
 /// Shared plumbing: memory system + event queue + group-tag registry +
 /// egress link.
 pub struct Runner {
+    /// The system configuration the run models.
     pub sys: SystemConfig,
+    /// The rank's memory system (LLC + HBM + MCA).
     pub mem: MemorySystem,
+    /// The rank's event calendar.
     pub q: EventQueue<Ev>,
     /// The rank's egress: a dedicated link (mirror and legacy cluster
     /// paths) or a bound lane into a shared fabric [`crate::fabric::Network`].
@@ -133,6 +136,7 @@ pub struct Runner {
 }
 
 impl Runner {
+    /// A runner over the system's default egress link.
     pub fn new(sys: &SystemConfig, policy: crate::config::ArbPolicy) -> Self {
         Self::with_link(sys, policy, sys.link.clone())
     }
@@ -158,6 +162,7 @@ impl Runner {
         }
     }
 
+    /// Current simulated time on the rank's calendar.
     pub fn now(&self) -> SimTime {
         self.q.now()
     }

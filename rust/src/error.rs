@@ -15,6 +15,7 @@ pub struct Error {
 }
 
 impl Error {
+    /// A leaf error from a bare message.
     pub fn msg(msg: impl Into<String>) -> Self {
         Error {
             msg: msg.into(),
@@ -22,6 +23,7 @@ impl Error {
         }
     }
 
+    /// An error wrapping an underlying source.
     pub fn wrap(
         msg: impl Into<String>,
         source: impl std::error::Error + Send + Sync + 'static,
@@ -53,11 +55,14 @@ impl From<std::io::Error> for Error {
     }
 }
 
+/// Crate-wide result alias.
 pub type Result<T> = std::result::Result<T, Error>;
 
 /// `anyhow::Context`-style helpers for results and options.
 pub trait Context<T> {
+    /// Attach a static message to the error, if any.
     fn context(self, msg: impl Into<String>) -> Result<T>;
+    /// Attach a lazily-built message to the error, if any.
     fn with_context<F: FnOnce() -> String>(self, f: F) -> Result<T>;
 }
 

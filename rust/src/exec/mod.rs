@@ -32,14 +32,20 @@ use crate::sim::time::SimTime;
 /// Evaluated configuration (§5.3).
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
 pub enum Scenario {
+    /// GEMM then collective, no overlap (the baseline).
     Sequential,
+    /// Transparent tracking & triggering (fine-grained overlap).
     T3,
+    /// T3 plus the memory-controller arbitration policy.
     T3Mca,
+    /// Contention-free overlap upper bound.
     IdealOverlap,
+    /// Ideal overlap with near-memory RS reductions.
     IdealRsNmc,
 }
 
 impl Scenario {
+    /// Every scenario, in paper order.
     pub const ALL: [Scenario; 5] = [
         Scenario::Sequential,
         Scenario::T3,
@@ -48,6 +54,7 @@ impl Scenario {
         Scenario::IdealRsNmc,
     ];
 
+    /// Display name (matches the paper's figure legends).
     pub fn name(self) -> &'static str {
         match self {
             Scenario::Sequential => "Sequential",
@@ -73,6 +80,7 @@ impl Scenario {
 /// Result of one sub-layer under one scenario.
 #[derive(Debug, Clone)]
 pub struct SublayerResult {
+    /// The scenario the cell ran under.
     pub scenario: Scenario,
     /// Isolated (or fused-effective) GEMM time.
     pub gemm: SimTime,
@@ -82,6 +90,7 @@ pub struct SublayerResult {
     pub ag: SimTime,
     /// Total sub-layer time (GEMM + AR complete).
     pub total: SimTime,
+    /// DRAM traffic by Figure-18 category.
     pub counters: DramCounters,
 }
 
@@ -112,8 +121,11 @@ pub fn sublayer_speedup(seq: &SublayerResult, other: &SublayerResult) -> f64 {
 /// End-to-end iteration results (Figure 19).
 #[derive(Debug, Clone)]
 pub struct EndToEndResult {
+    /// The evaluated model's name.
     pub model: String,
+    /// Tensor-parallel degree.
     pub tp: u64,
+    /// Training vs prompt phase.
     pub phase: Phase,
     /// Non-sliced ("other") time per iteration.
     pub other: SimTime,
@@ -122,9 +134,11 @@ pub struct EndToEndResult {
 }
 
 impl EndToEndResult {
+    /// The iteration total under one scenario (must have been run).
     pub fn total(&self, s: Scenario) -> SimTime {
         self.totals.iter().find(|(x, _)| *x == s).unwrap().1
     }
+    /// Speedup of `s` over the Sequential baseline.
     pub fn speedup(&self, s: Scenario) -> f64 {
         self.total(Scenario::Sequential).as_ps() as f64 / self.total(s).as_ps() as f64
     }
@@ -193,11 +207,18 @@ pub fn cached_sublayer(
         sub.name(),
         scenario,
     );
-    if let Some(hit) = cache().lock().unwrap().get(&key) {
+    // Poison-recovery: a worker thread that panicked mid-run poisons the
+    // mutex, but the cache itself (plain deterministic results) is never
+    // left in a torn state — recover the guard instead of cascading the
+    // panic into every later cached run.
+    if let Some(hit) = cache().lock().unwrap_or_else(|e| e.into_inner()).get(&key) {
         return hit.clone();
     }
     let res = run_sublayer(sys, model, tp, sub, scenario);
-    cache().lock().unwrap().insert(key, res.clone());
+    cache()
+        .lock()
+        .unwrap_or_else(|e| e.into_inner())
+        .insert(key, res.clone());
     res
 }
 

@@ -62,6 +62,7 @@ pub struct ArrivalSpec {
 /// the same (system, model, tp, sub-layer) cell.
 #[derive(Debug, Clone)]
 pub struct EnsembleSpec {
+    /// The scenario every draw re-runs.
     pub scenario: ScenarioSpec,
     /// Number of seeded draws (>= 1).
     pub draws: u32,
@@ -76,6 +77,7 @@ pub struct EnsembleSpec {
 }
 
 impl EnsembleSpec {
+    /// An ensemble over `scenario` with the default draws/seed.
     pub fn new(scenario: ScenarioSpec) -> Self {
         EnsembleSpec {
             scenario,
@@ -86,22 +88,26 @@ impl EnsembleSpec {
         }
     }
 
+    /// Set the draw count (must be >= 1).
     pub fn draws(mut self, n: u32) -> Self {
         assert!(n >= 1, "an ensemble needs at least one draw");
         self.draws = n;
         self
     }
 
+    /// Set the root seed.
     pub fn seed(mut self, seed: u64) -> Self {
         self.seed = seed;
         self
     }
 
+    /// Pin the worker-thread count.
     pub fn threads(mut self, n: usize) -> Self {
         self.threads = Some(n);
         self
     }
 
+    /// Enable request-level Poisson arrivals through the batcher.
     pub fn arrivals(mut self, a: ArrivalSpec) -> Self {
         self.arrivals = Some(a);
         self
@@ -162,11 +168,17 @@ impl EnsembleSpec {
 /// [`percentile_sorted`]).
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub struct TailSummary {
+    /// Median (nearest-rank).
     pub p50: SimTime,
+    /// 99th percentile.
     pub p99: SimTime,
+    /// 99.9th percentile.
     pub p999: SimTime,
+    /// Smallest sample.
     pub min: SimTime,
+    /// Largest sample.
     pub max: SimTime,
+    /// Arithmetic mean.
     pub mean: SimTime,
 }
 
@@ -196,7 +208,9 @@ impl TailSummary {
 /// Request-level tail latency from the batcher front-end.
 #[derive(Debug, Clone, PartialEq)]
 pub struct RequestTail {
+    /// Mean arrival rate, requests per second.
     pub rate_per_s: f64,
+    /// Requests simulated per draw.
     pub requests_per_draw: u32,
     /// Batches formed across every draw.
     pub batches: u64,
@@ -209,10 +223,15 @@ pub struct RequestTail {
 /// percentile summaries.
 #[derive(Debug, Clone)]
 pub struct EnsembleRun {
+    /// The swept scenario's name.
     pub scenario: String,
+    /// The swept model's name.
     pub model: String,
+    /// Tensor-parallel degree of the cell.
     pub tp: u64,
+    /// Sub-layer of the cell.
     pub sublayer: SubLayer,
+    /// Root seed the draws derived from.
     pub seed: u64,
     /// One measurement per draw, in draw-index order.
     pub draws: Vec<Measurement>,

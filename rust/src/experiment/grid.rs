@@ -18,13 +18,18 @@ use super::ScenarioSpec;
 /// A declarative grid of simulation cells.
 #[derive(Debug, Clone)]
 pub struct ExperimentSpec {
+    /// Grid name (labels results and reports).
     pub name: String,
+    /// System configurations to sweep.
     pub systems: Vec<SystemConfig>,
+    /// Models to sweep.
     pub models: Vec<ModelCfg>,
     /// Explicit TP degrees, or `None` to use each model's paper degrees
     /// (`ModelCfg::tp_degrees`).
     pub tps: Option<Vec<u64>>,
+    /// Sub-layers to sweep (defaults to all).
     pub sublayers: Vec<SubLayer>,
+    /// Scenarios to sweep.
     pub scenarios: Vec<ScenarioSpec>,
     /// Worker threads; `None` uses [`executor::default_threads`].
     pub threads: Option<usize>,
@@ -33,14 +38,20 @@ pub struct ExperimentSpec {
 /// One expanded grid cell, before execution.
 #[derive(Debug, Clone)]
 pub struct CellSpec {
+    /// Index into the spec's `systems`.
     pub system: usize,
+    /// Index into the spec's `models`.
     pub model: usize,
+    /// Tensor-parallel degree of the cell.
     pub tp: u64,
+    /// Sub-layer of the cell.
     pub sublayer: SubLayer,
+    /// Index into the spec's `scenarios`.
     pub scenario: usize,
 }
 
 impl ExperimentSpec {
+    /// An empty grid with the given name (all sub-layers, no cells yet).
     pub fn new(name: impl Into<String>) -> Self {
         ExperimentSpec {
             name: name.into(),
@@ -55,11 +66,13 @@ impl ExperimentSpec {
 
     // ---- chainable builders ----
 
+    /// Add a system configuration.
     pub fn system(mut self, sys: SystemConfig) -> Self {
         self.systems.push(sys);
         self
     }
 
+    /// Add one model.
     pub fn model(mut self, model: ModelCfg) -> Self {
         self.models.push(model);
         self
@@ -81,21 +94,25 @@ impl ExperimentSpec {
         self
     }
 
+    /// Replace the swept sub-layers.
     pub fn sublayers(mut self, subs: impl IntoIterator<Item = SubLayer>) -> Self {
         self.sublayers = subs.into_iter().collect();
         self
     }
 
+    /// Add one scenario.
     pub fn scenario(mut self, spec: ScenarioSpec) -> Self {
         self.scenarios.push(spec);
         self
     }
 
+    /// Add several scenarios.
     pub fn scenarios(mut self, specs: impl IntoIterator<Item = ScenarioSpec>) -> Self {
         self.scenarios.extend(specs);
         self
     }
 
+    /// Pin the worker-thread count.
     pub fn threads(mut self, n: usize) -> Self {
         self.threads = Some(n);
         self

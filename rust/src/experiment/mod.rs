@@ -100,6 +100,7 @@ pub enum CuAlloc {
 }
 
 impl CuAlloc {
+    /// The concrete CU count under `sys`.
     pub fn resolve(self, sys: &SystemConfig) -> u32 {
         match self {
             CuAlloc::All => sys.gpu.cu_count,
@@ -165,6 +166,7 @@ pub struct ScenarioSpec {
     pub name: String,
     /// Which collective family the sub-layer runs.
     pub collective: CollectiveKind,
+    /// Serialized, fused (T3), or ideal overlap.
     pub overlap: OverlapMode,
     /// Producer GEMM write mode. Non-fused paths default to the baseline
     /// write-allocate ([`WriteMode::ThroughLlc`]); the fused engine
@@ -185,6 +187,7 @@ pub struct ScenarioSpec {
     /// instead of a CU kernel. Ignored by the fused engine, which always
     /// reduces in-DRAM.
     pub rs_nmc: bool,
+    /// How the trailing all-gather runs.
     pub ag: AgMode,
     /// Record a Figure-17-style DRAM traffic trace with this bin size
     /// (fused paths only).
@@ -272,41 +275,49 @@ impl ScenarioSpec {
 
     // ---- chainable setters ----
 
+    /// Rename the scenario.
     pub fn named(mut self, name: impl Into<String>) -> Self {
         self.name = name.into();
         self
     }
 
+    /// Set the overlap mode.
     pub fn overlap(mut self, mode: OverlapMode) -> Self {
         self.overlap = mode;
         self
     }
 
+    /// Set the producer GEMM's write mode.
     pub fn write_mode(mut self, mode: WriteMode) -> Self {
         self.write_mode = mode;
         self
     }
 
+    /// Set the memory-controller arbitration policy.
     pub fn policy(mut self, policy: ArbPolicy) -> Self {
         self.policy = policy;
         self
     }
 
+    /// Pin the producer GEMM's CU count.
     pub fn gemm_cus(mut self, cus: u32) -> Self {
         self.gemm_cus = CuAlloc::Count(cus);
         self
     }
 
+    /// Pin the collective kernels' CU count.
     pub fn comm_cus(mut self, cus: u32) -> Self {
         self.comm_cus = CuAlloc::Count(cus);
         self
     }
 
+    /// Toggle near-memory-compute reduce-scatter.
     pub fn nmc(mut self, on: bool) -> Self {
         self.rs_nmc = on;
         self
     }
 
+    /// Drop the trailing all-gather ([`AgMode::Skip`]).
     pub fn skip_ag(mut self) -> Self {
         self.ag = AgMode::Skip;
         self
@@ -334,6 +345,7 @@ impl ScenarioSpec {
         self
     }
 
+    /// Record a DRAM traffic time-series with this bin width.
     pub fn trace_bin(mut self, bin: SimTime) -> Self {
         self.trace_bin = Some(bin);
         self
@@ -447,7 +459,7 @@ impl ScenarioSpec {
     /// topology, one rack, or a rack size that does not divide `tp` —
     /// in which case [`ScenarioSpec::compile`] falls back to the flat
     /// ring chain.
-    fn hier_rack_size(&self, tp: u64) -> Option<u64> {
+    pub(crate) fn hier_rack_size(&self, tp: u64) -> Option<u64> {
         let model = self.cluster.as_ref()?;
         let g = match &model.topology {
             TopologySpec::Fabric(spec) => spec.kind.rack_size(tp),
@@ -748,6 +760,7 @@ impl ScenarioSpec {
         tp: u64,
         sub: SubLayer,
     ) -> Measurement {
+        crate::analysis::warn_spec(self, model, tp, sub);
         let prog = self.compile(sys, model, tp, sub);
         let report = execute(sys, &prog, &self.exec_opts(false));
         self.measure(&report)
@@ -767,6 +780,7 @@ impl ScenarioSpec {
         tp: u64,
         sub: SubLayer,
     ) -> (Measurement, Trace) {
+        crate::analysis::warn_spec(self, model, tp, sub);
         let prog = self.compile(sys, model, tp, sub);
         let mut report = execute(sys, &prog, &self.exec_opts(true));
         let m = self.measure(&report);
@@ -788,6 +802,7 @@ impl ScenarioSpec {
         sub: SubLayer,
         sink: SinkMode,
     ) -> RunReport {
+        crate::analysis::warn_spec(self, model, tp, sub);
         let prog = self.compile(sys, model, tp, sub);
         execute(sys, &prog, &self.exec_opts_sink(sink))
     }
@@ -895,6 +910,7 @@ pub struct Measurement {
     pub ag: SimTime,
     /// Total sub-layer time.
     pub total: SimTime,
+    /// DRAM traffic by Figure-18 category.
     pub counters: DramCounters,
 }
 

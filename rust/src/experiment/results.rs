@@ -18,18 +18,26 @@ use crate::config::SystemConfig;
 /// One simulated (system, model, tp, sub-layer, scenario) cell.
 #[derive(Debug, Clone, PartialEq)]
 pub struct Cell {
+    /// The system configuration's name.
     pub system: String,
+    /// The model's name.
     pub model: String,
+    /// Tensor-parallel degree.
     pub tp: u64,
+    /// Sub-layer of the cell.
     pub sublayer: SubLayer,
+    /// The scenario's name.
     pub scenario: String,
+    /// The measured times and counters.
     pub m: Measurement,
 }
 
 /// The results of one experiment, in deterministic grid order.
 #[derive(Debug, Clone, PartialEq)]
 pub struct ResultSet {
+    /// The producing experiment's name.
     pub experiment: String,
+    /// Every simulated cell, in grid order.
     pub cells: Vec<Cell>,
 }
 
@@ -215,8 +223,11 @@ impl ResultSet {
 /// End-to-end iteration totals composed from a [`ResultSet`].
 #[derive(Debug, Clone)]
 pub struct EndToEnd {
+    /// The composed model's name.
     pub model: String,
+    /// Tensor-parallel degree.
     pub tp: u64,
+    /// Training vs prompt phase.
     pub phase: Phase,
     /// Non-sliced ("other") time per iteration.
     pub other: SimTime,
@@ -225,6 +236,7 @@ pub struct EndToEnd {
 }
 
 impl EndToEnd {
+    /// The iteration total under one scenario (panics when absent).
     pub fn total(&self, scenario: &str) -> SimTime {
         self.totals
             .iter()

@@ -26,9 +26,13 @@ use super::topo::{FabricGraph, FabricKind, LinkId};
 /// `Congested-A2A` preset.
 #[derive(Debug, Clone, Copy, PartialEq)]
 pub struct BgFlow {
+    /// Source endpoint rank.
     pub src: usize,
+    /// Destination endpoint rank.
     pub dst: usize,
+    /// Transfer size.
     pub bytes: u64,
+    /// Injection time.
     pub at: SimTime,
 }
 
@@ -37,11 +41,14 @@ pub struct BgFlow {
 /// collective.
 #[derive(Debug, Clone, PartialEq)]
 pub struct FabricSpec {
+    /// The physical topology.
     pub kind: FabricKind,
+    /// Standing flows contending with the collective.
     pub background: Vec<BgFlow>,
 }
 
 impl FabricSpec {
+    /// A fabric over `kind` with no background flows.
     pub fn of(kind: FabricKind) -> Self {
         FabricSpec {
             kind,
@@ -65,6 +72,7 @@ impl FabricSpec {
         }))
     }
 
+    /// A leaf-spine fat tree fabric.
     pub fn fat_tree(radix: usize, oversubscription: f64) -> Self {
         Self::of(FabricKind::FatTree(super::topo::FatTree {
             radix,
@@ -72,10 +80,12 @@ impl FabricSpec {
         }))
     }
 
+    /// A 2-D wraparound torus fabric.
     pub fn torus(rows: usize, cols: usize) -> Self {
         Self::of(FabricKind::Torus2D(super::topo::Torus2D { rows, cols }))
     }
 
+    /// A rail-optimized multi-node fabric.
     pub fn rail(node_size: usize, rails: usize) -> Self {
         Self::of(FabricKind::RailOptimized(super::topo::RailOptimized {
             node_size,
@@ -189,6 +199,7 @@ impl Network {
         net
     }
 
+    /// The lowered topology graph the network routes over.
     pub fn graph(&self) -> &FabricGraph {
         &self.graph
     }
@@ -382,7 +393,9 @@ impl Network {
 /// to the dedicated link's.
 #[derive(Debug, Clone)]
 pub enum EgressPort {
+    /// A dedicated point-to-point link (the legacy engines' model).
     Direct(Link),
+    /// A shared route through a fabric [`Network`].
     Fabric {
         net: Arc<Mutex<Network>>,
         src: usize,
@@ -399,10 +412,12 @@ pub enum EgressPort {
 }
 
 impl EgressPort {
+    /// A port backed by a dedicated link.
     pub fn direct(cfg: LinkConfig) -> Self {
         EgressPort::Direct(Link::new(cfg))
     }
 
+    /// A port reserving windows on the shared fabric's `src -> dst` route.
     pub fn fabric(net: Arc<Mutex<Network>>, src: usize, dst: usize) -> Self {
         EgressPort::Fabric {
             net,

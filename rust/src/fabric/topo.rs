@@ -21,9 +21,13 @@ pub type LinkId = usize;
 /// One directed physical link of the fabric.
 #[derive(Debug, Clone, PartialEq)]
 pub struct LinkSpec {
+    /// Source vertex.
     pub from: usize,
+    /// Destination vertex.
     pub to: usize,
+    /// Link bandwidth in GB/s.
     pub bw_gbps: f64,
+    /// Per-hop propagation latency.
     pub latency: SimTime,
 }
 
@@ -38,6 +42,7 @@ pub struct FabricGraph {
     pub endpoints: usize,
     /// Names of the switch vertices (`endpoints..vertices`), in order.
     pub switch_names: Vec<String>,
+    /// Every directed link, indexed by [`LinkId`].
     pub links: Vec<LinkSpec>,
 }
 
@@ -182,8 +187,11 @@ impl Topology for Ring {
 /// the legacy two-tier engine bit-for-bit.
 #[derive(Debug, Clone, Copy, PartialEq)]
 pub struct TwoTierRing {
+    /// Ranks per node (the intra-tier ring size).
     pub node_size: u64,
+    /// Inter-node bandwidth as a fraction of the base rate.
     pub inter_bw_frac: f64,
+    /// Inter-node hop latency.
     pub inter_latency: SimTime,
 }
 
@@ -229,6 +237,7 @@ pub struct FatTree {
 }
 
 impl FatTree {
+    /// Hosts attached per leaf switch (half the radix, at least 1).
     pub fn hosts_per_leaf(&self) -> usize {
         (self.radix / 2).max(1)
     }
@@ -303,7 +312,9 @@ impl Topology for FatTree {
 /// are dimension-ordered by the BFS tie-break.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub struct Torus2D {
+    /// Grid rows.
     pub rows: usize,
+    /// Grid columns.
     pub cols: usize,
 }
 
@@ -365,7 +376,9 @@ impl Topology for Torus2D {
 /// switch-host-rail switch-host), as in real rail-optimized designs.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub struct RailOptimized {
+    /// Ranks per node.
     pub node_size: usize,
+    /// Rail-switch count (ranks attach by `i % rails`).
     pub rails: usize,
 }
 
@@ -422,14 +435,20 @@ impl Topology for RailOptimized {
 /// *data* form a [`crate::cluster::ClusterModel`] can carry.
 #[derive(Debug, Clone, Copy, PartialEq)]
 pub enum FabricKind {
+    /// Flat unidirectional ring.
     Ring(Ring),
+    /// Two-tier ring (fast intra-node, slow inter-node hops).
     TwoTierRing(TwoTierRing),
+    /// Folded-Clos / leaf-spine fat tree.
     FatTree(FatTree),
+    /// 2-D wraparound torus grid.
     Torus2D(Torus2D),
+    /// Rail-optimized multi-node design.
     RailOptimized(RailOptimized),
 }
 
 impl FabricKind {
+    /// The carried topology as a trait object.
     pub fn topology(&self) -> &dyn Topology {
         match self {
             FabricKind::Ring(t) => t,

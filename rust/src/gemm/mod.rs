@@ -21,13 +21,18 @@ use crate::sim::time::SimTime;
 /// A (possibly tensor-sliced) GEMM: `C[M,N] += A[M,K] @ B[K,N]`.
 #[derive(Debug, Clone, Copy, PartialEq)]
 pub struct GemmShape {
+    /// Output rows.
     pub m: u64,
+    /// Output columns.
     pub n: u64,
+    /// Dot-product (reduction) dimension.
     pub k: u64,
+    /// Element type of all three operands.
     pub dtype: DType,
 }
 
 impl GemmShape {
+    /// A GEMM shape; all dimensions must be positive.
     pub fn new(m: u64, n: u64, k: u64, dtype: DType) -> Self {
         assert!(m > 0 && n > 0 && k > 0);
         GemmShape { m, n, k, dtype }
@@ -37,12 +42,15 @@ impl GemmShape {
     pub fn flops(&self) -> u64 {
         2 * self.m * self.n * self.k
     }
+    /// Bytes of the `A[M,K]` operand.
     pub fn a_bytes(&self) -> u64 {
         self.m * self.k * self.dtype.bytes()
     }
+    /// Bytes of the `B[K,N]` operand.
     pub fn b_bytes(&self) -> u64 {
         self.k * self.n * self.dtype.bytes()
     }
+    /// Bytes of the `C[M,N]` output.
     pub fn out_bytes(&self) -> u64 {
         self.m * self.n * self.dtype.bytes()
     }
@@ -67,9 +75,13 @@ impl GemmShape {
 /// (128x128 WG macro-tile, 4 WFs of 64x64 each).
 #[derive(Debug, Clone, Copy, PartialEq)]
 pub struct Tiling {
+    /// Workgroup macro-tile rows.
     pub mt: u64,
+    /// Workgroup macro-tile columns.
     pub nt: u64,
+    /// Wavefront tile rows.
     pub wf_mt: u64,
+    /// Wavefront tile columns.
     pub wf_nt: u64,
 }
 
@@ -85,9 +97,11 @@ impl Default for Tiling {
 }
 
 impl Tiling {
+    /// Wavefronts per workgroup (macro-tile area over WF-tile area).
     pub fn wfs_per_wg(&self) -> u64 {
         (self.mt / self.wf_mt) * (self.nt / self.wf_nt)
     }
+    /// Output elements per wavefront tile.
     pub fn wf_tile_elems(&self) -> u64 {
         self.wf_mt * self.wf_nt
     }
@@ -96,10 +110,13 @@ impl Tiling {
 /// The stage decomposition of one GEMM on one GPU.
 #[derive(Debug, Clone)]
 pub struct StagePlan {
+    /// The GEMM being staged.
     pub shape: GemmShape,
+    /// The tiling it is staged under.
     pub tiling: Tiling,
     /// Output tile grid.
     pub tiles_m: u64,
+    /// Output tile columns.
     pub tiles_n: u64,
     /// WGs resident per stage (= cu_count * wgs_per_cu).
     pub stage_wgs: u64,
@@ -110,6 +127,7 @@ pub struct StagePlan {
 }
 
 impl StagePlan {
+    /// Stage a GEMM onto one GPU's CU/WG capacity.
     pub fn new(shape: GemmShape, tiling: Tiling, gpu: &GpuConfig) -> Self {
         let tiles_m = shape.m.div_ceil(tiling.mt);
         let tiles_n = shape.n.div_ceil(tiling.nt);
@@ -183,6 +201,7 @@ impl StagePlan {
 /// WG scheduling).
 #[derive(Debug, Clone)]
 pub struct ChunkPlan {
+    /// Ring size the output is chunked for.
     pub devices: u64,
     /// chunk_order[i] = which chunk this device computes i-th.
     pub chunk_order: Vec<u64>,
@@ -195,6 +214,7 @@ pub struct ChunkPlan {
 }
 
 impl ChunkPlan {
+    /// Chunk `plan`'s output for `device_id` of a `devices`-wide ring.
     pub fn new(plan: &StagePlan, devices: u64, device_id: u64) -> Self {
         assert!(devices >= 2, "need at least 2 devices for a collective");
         assert!(device_id < devices);
@@ -232,6 +252,7 @@ impl ChunkPlan {
         }
     }
 
+    /// Total output bytes across every chunk.
     pub fn total_bytes(&self) -> u64 {
         self.chunk_bytes.iter().sum()
     }

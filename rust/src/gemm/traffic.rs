@@ -34,7 +34,9 @@ pub enum WriteMode {
 /// Per-GEMM DRAM traffic estimate, in bytes.
 #[derive(Debug, Clone, Copy, PartialEq)]
 pub struct GemmTraffic {
+    /// Bytes read from DRAM (post-LLC misses).
     pub dram_reads: u64,
+    /// Bytes written to DRAM.
     pub dram_writes: u64,
     /// Fraction of reads serviced by LLC (diagnostics).
     pub read_hit_fraction: f64,
@@ -71,6 +73,7 @@ fn hit_cap(mode: WriteMode, b_frac: f64) -> f64 {
     (1.0 - miss).max(0.0)
 }
 
+/// Estimate the DRAM traffic of one planned GEMM under a write mode.
 pub fn gemm_traffic(plan: &StagePlan, mem: &MemConfig, mode: WriteMode) -> GemmTraffic {
     let g = &plan.shape;
     let a = g.a_bytes();

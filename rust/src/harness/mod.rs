@@ -32,9 +32,13 @@ use crate::sim::time::SimTime;
 /// A rendered result table.
 #[derive(Debug, Clone)]
 pub struct Table {
+    /// Stable identifier (figure/table tag, e.g. `fig4`).
     pub id: String,
+    /// Human-readable caption.
     pub title: String,
+    /// Column headers.
     pub headers: Vec<String>,
+    /// Data rows; every row matches `headers` in length.
     pub rows: Vec<Vec<String>>,
     /// Key findings appended below the table.
     pub notes: Vec<String>,
@@ -43,8 +47,11 @@ pub struct Table {
 /// A row whose cell count does not match the table's header count.
 #[derive(Debug, Clone, PartialEq, Eq)]
 pub struct ArityError {
+    /// The offending table's id.
     pub table: String,
+    /// The table's header count.
     pub expected: usize,
+    /// The rejected row's cell count.
     pub got: usize,
 }
 
@@ -61,6 +68,7 @@ impl std::fmt::Display for ArityError {
 impl std::error::Error for ArityError {}
 
 impl Table {
+    /// An empty table with the given id, caption, and headers.
     pub fn new(id: &str, title: &str, headers: &[&str]) -> Self {
         Table {
             id: id.to_string(),
@@ -92,6 +100,7 @@ impl Table {
         }
     }
 
+    /// Append a key-finding line below the table.
     pub fn note(&mut self, s: impl Into<String>) {
         self.notes.push(s.into());
     }
@@ -189,6 +198,7 @@ fn pct(x: f64) -> String {
 // Analytic (roofline + alpha-beta) across the full zoo incl. futuristic.
 // ---------------------------------------------------------------------
 
+/// Figure 4: share of transformer time in sliced GEMMs + RS/AG.
 pub fn fig4(sys: &SystemConfig) -> Table {
     use crate::collectives::analytic::{ring_all_gather, ring_reduce_scatter};
     use crate::config::DType;
@@ -246,6 +256,7 @@ pub fn fig4(sys: &SystemConfig) -> Table {
 // (partial-CU ideal overlap) that the old closed enum could not state.
 // ---------------------------------------------------------------------
 
+/// Figure 6: CU-split contention study over composed scenarios.
 pub fn fig6(sys: &SystemConfig) -> Table {
     let rs = ExperimentSpec::new("fig6")
         .system(sys.clone())
@@ -308,6 +319,7 @@ pub fn fig6(sys: &SystemConfig) -> Table {
 // Figure 14 — event-driven RS vs the alpha-beta law, 6-192 MB, 4 GPUs.
 // ---------------------------------------------------------------------
 
+/// Figure 14: event-driven RS against the alpha-beta reference.
 pub fn fig14(sys: &SystemConfig) -> Table {
     use crate::collectives::analytic::ring_reduce_scatter;
     let mut t = Table::new(
@@ -340,12 +352,19 @@ pub fn fig14(sys: &SystemConfig) -> Table {
 // Figures 15 & 16 — sub-layer runtime distribution and speedups.
 // ---------------------------------------------------------------------
 
+/// The Figure-15/16 output pair plus its headline aggregates.
 pub struct SublayerGrid {
+    /// Figure 15: sub-layer runtime distribution (Sequential).
     pub dist: Table,
+    /// Figure 16: per-sub-layer speedups over Sequential.
     pub speedups: Table,
+    /// Geomean T3 speedup across the grid.
     pub t3_geomean: f64,
+    /// Geomean T3-MCA speedup across the grid.
     pub t3mca_geomean: f64,
+    /// Geomean ideal-overlap speedup across the grid.
     pub ideal_geomean: f64,
+    /// Best single-cell T3-MCA speedup.
     pub t3mca_max: f64,
 }
 
@@ -359,6 +378,7 @@ pub fn fig15_16_results(sys: &SystemConfig) -> ResultSet {
         .run()
 }
 
+/// Figures 15 & 16: sub-layer distribution and speedup tables.
 pub fn fig15_16(sys: &SystemConfig) -> SublayerGrid {
     let rs = fig15_16_results(sys);
     let mut dist = Table::new(
@@ -436,6 +456,7 @@ pub fn fig15_16(sys: &SystemConfig) -> SublayerGrid {
 // Figure 17 — DRAM traffic time series for T-NLG FC-2 (TP=8, SLB=4K).
 // ---------------------------------------------------------------------
 
+/// Figure 17: DRAM traffic time series (CSV written to `out_dir`).
 pub fn fig17(sys: &SystemConfig, out_dir: impl AsRef<Path>) -> Table {
     // SLB = seq*batch = 4K tokens (the paper's Fig 17 workload).
     let mut m = by_name("T-NLG").unwrap();
@@ -493,6 +514,7 @@ pub fn fig17(sys: &SystemConfig, out_dir: impl AsRef<Path>) -> Table {
 // Figure 18 — DRAM access breakdown + §6.2 data-movement reductions.
 // ---------------------------------------------------------------------
 
+/// Figure 18: DRAM access breakdown and data-movement reductions.
 pub fn fig18(sys: &SystemConfig) -> Table {
     let rs = ExperimentSpec::new("fig18")
         .system(sys.clone())
@@ -565,6 +587,7 @@ pub fn fig18(sys: &SystemConfig) -> Table {
 // Figure 19 — end-to-end training/prompt speedups.
 // ---------------------------------------------------------------------
 
+/// Figure 19: end-to-end training/prompt speedups across the zoo.
 pub fn fig19(sys: &SystemConfig) -> Table {
     let models = ["Mega-GPT-2", "T-NLG", "GPT-3", "PALM", "MT-NLG"];
     let rs = ExperimentSpec::new("fig19")
@@ -623,6 +646,7 @@ pub fn fig19(sys: &SystemConfig) -> Table {
 // Figure 20 — future hardware with 2x CUs (a two-system experiment grid).
 // ---------------------------------------------------------------------
 
+/// Figure 20: speedups on future hardware with doubled CUs.
 pub fn fig20() -> Table {
     let base = SystemConfig::table1();
     let fut = SystemConfig::future_2x_cu();
@@ -695,6 +719,7 @@ pub fn fig20() -> Table {
 // Table 3 — qualitative comparison vs prior approaches.
 // ---------------------------------------------------------------------
 
+/// Table 3: qualitative comparison with prior approaches.
 pub fn table3() -> Table {
     let mut t = Table::new(
         "table3",
@@ -722,6 +747,7 @@ pub fn table3() -> Table {
 // shows the trade-off directly.
 // ---------------------------------------------------------------------
 
+/// §6.1.3 ablation: MCA occupancy-threshold sensitivity sweep.
 pub fn ablation_mca_thresholds(sys: &SystemConfig) -> Table {
     let mut t = Table::new(
         "ablation_mca",
@@ -1059,6 +1085,7 @@ pub fn table1(sys: &SystemConfig) -> String {
     sys.describe()
 }
 
+/// Table 2: the studied model zoo and its derived sizes.
 pub fn table2() -> Table {
     let mut t = Table::new(
         "table2",

@@ -23,7 +23,9 @@ use crate::sim::time::SimTime;
 /// DRAM transaction type.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum TxnKind {
+    /// Plain DRAM read.
     Read,
+    /// Plain DRAM write.
     Write,
     /// Near-memory op-and-store (atomic update at the bank ALUs).
     NmcUpdate,
@@ -32,11 +34,17 @@ pub enum TxnKind {
 /// Traffic class for Figure-18 style accounting.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum TrafficClass {
+    /// GEMM operand read.
     GemmRead,
+    /// GEMM output write.
     GemmWrite,
+    /// Reduce-scatter read.
     RsRead,
+    /// Reduce-scatter write.
     RsWrite,
+    /// All-gather read.
     AgRead,
+    /// All-gather write.
     AgWrite,
 }
 
@@ -45,21 +53,27 @@ pub enum TrafficClass {
 pub struct GroupId(pub u32);
 
 impl GroupId {
+    /// The sentinel "no completion group" handle.
     pub const NONE: GroupId = GroupId(u32::MAX);
 }
 
 /// One memory transaction (all transactions are `cfg.txn_bytes` long).
 #[derive(Debug, Clone, Copy)]
 pub struct Txn {
+    /// Read, write, or near-memory update.
     pub kind: TxnKind,
+    /// Compute vs communication arbitration stream.
     pub stream: Stream,
+    /// Figure-18 accounting category.
     pub class: TrafficClass,
+    /// Completion group to notify ([`GroupId::NONE`] for none).
     pub group: GroupId,
 }
 
 /// Event type the memory system schedules into the engine's queue.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub struct MemEvent {
+    /// The channel whose service completes at the event time.
     pub channel: u32,
 }
 
@@ -91,13 +105,18 @@ impl Channel {
 /// Optional per-class traffic time-series (Figure 17).
 #[derive(Debug, Clone)]
 pub struct TrafficTrace {
+    /// GEMM read bytes per bin.
     pub gemm_reads: TimeSeries,
+    /// GEMM write bytes per bin.
     pub gemm_writes: TimeSeries,
+    /// Collective read bytes per bin.
     pub comm_reads: TimeSeries,
+    /// Collective write bytes per bin.
     pub comm_writes: TimeSeries,
 }
 
 impl TrafficTrace {
+    /// Four empty per-class series with the given bin width.
     pub fn new(bin: SimTime) -> Self {
         TrafficTrace {
             gemm_reads: TimeSeries::new("gemm_reads", bin),
@@ -125,7 +144,9 @@ pub struct MemorySystem {
     groups: Vec<(u64, u64)>,
     free_groups: Vec<u32>,
     completions: Vec<(GroupId, SimTime)>,
+    /// Byte counters by Figure-18 category.
     pub counters: DramCounters,
+    /// Optional per-class traffic time-series (Figure 17).
     pub trace: Option<TrafficTrace>,
     /// Coalesced DRAM-service timeline lanes (`t3::trace`); `None` (the
     /// default) costs one branch per serviced transaction.
@@ -133,6 +154,7 @@ pub struct MemorySystem {
 }
 
 impl MemorySystem {
+    /// A memory system with empty queues and zeroed counters.
     pub fn new(cfg: MemConfig, policy: ArbPolicy, mca: McaConfig) -> Self {
         let channels = (0..cfg.channels).map(|_| Channel::new()).collect();
         let service_plain = cfg.txn_service(false);
@@ -169,10 +191,12 @@ impl MemorySystem {
         self.lanes.take().map(|l| l.into_spans()).unwrap_or_default()
     }
 
+    /// The arbitration policy the MCs run.
     pub fn policy(&self) -> ArbPolicy {
         self.policy
     }
 
+    /// Bytes per DRAM transaction.
     pub fn txn_bytes(&self) -> u64 {
         self.cfg.txn_bytes
     }

@@ -15,6 +15,7 @@ use crate::sim::time::SimTime;
 pub struct Link {
     cfg: LinkConfig,
     busy_until: SimTime,
+    /// Total bytes granted over the link's lifetime.
     pub bytes_carried: u64,
 }
 
@@ -32,6 +33,7 @@ pub struct Window {
 }
 
 impl Link {
+    /// An idle link with the given configuration.
     pub fn new(cfg: LinkConfig) -> Self {
         Link {
             cfg,
@@ -40,6 +42,7 @@ impl Link {
         }
     }
 
+    /// The link's configuration.
     pub fn cfg(&self) -> &LinkConfig {
         &self.cfg
     }

@@ -19,7 +19,9 @@ use crate::sim::time::SimTime;
 /// Which stream a request belongs to.
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
 pub enum Stream {
+    /// The kernel's own reads/writes.
     Compute,
+    /// Collective (DMA/NMC) traffic.
     Comm,
 }
 
@@ -35,8 +37,11 @@ pub struct ArbState {
 /// Inputs to one arbitration decision.
 #[derive(Debug, Clone, Copy)]
 pub struct ArbInputs {
+    /// Decision time.
     pub now: SimTime,
+    /// A compute request is waiting.
     pub compute_pending: bool,
+    /// A comm request is waiting.
     pub comm_pending: bool,
     /// Current occupancy of this channel's DRAM command queue.
     pub dram_occupancy: u32,

@@ -38,10 +38,19 @@
 //! * the figure/table regeneration [`harness`], a thin view layer over
 //!   [`experiment`].
 //!
+//! * the static [`analysis`] subsystem — a Program/fabric verifier with
+//!   stable diagnostic codes (`T3E`/`T3W`), symbolic alpha-beta time
+//!   bounds, and the fail-fast pre-flight behind `t3 lint` and
+//!   [`cluster::execute`].
+//!
 //! See DESIGN.md for the architecture (including the paper-section →
 //! source-file map) and README.md for the quickstart and CLI tour.
 
+#![forbid(unsafe_code)]
+#![warn(missing_docs)]
+
 pub mod addrspace;
+pub mod analysis;
 pub mod cluster;
 pub mod collectives;
 pub mod coordinator;

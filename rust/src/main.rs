@@ -25,6 +25,8 @@
 //!               [--json] [--out file.json]   (causal critical path + blame + what-if replay)
 //! t3 figure     <4|6|14|15|16|17|18|19|20|table2|table3> [--csv <dir>]
 //! t3 sweep      --model <name> [--tps 4,8,16,32]
+//! t3 lint       <preset>|--all [--model <name>] [--tp <n>] [--sublayer <s>]
+//!               [--deny warnings] [--future] [--json]   (static analysis, t3::analysis)
 //! t3 validate             (tracker/functional-collective cross-checks)
 //! t3 run        [--artifacts <dir>]   (PJRT numeric smoke; needs --features pjrt)
 //! ```
@@ -167,7 +169,7 @@ fn scenarios_from(s: &str) -> std::result::Result<Vec<ScenarioSpec>, String> {
     Ok(out)
 }
 
-const USAGE: &str = "t3 <config|models|scenarios|topologies|simulate|experiment|cluster|ensemble|trace|profile|figure|sweep|validate|run> [flags]
+const USAGE: &str = "t3 <config|models|scenarios|topologies|simulate|experiment|cluster|ensemble|trace|profile|figure|sweep|lint|validate|run> [flags]
   t3 config [--future]
   t3 models --list
   t3 scenarios
@@ -194,6 +196,8 @@ const USAGE: &str = "t3 <config|models|scenarios|topologies|simulate|experiment|
              [--json] [--out trace.json]
   t3 figure <4|6|14|15|16|17|18|19|20|table2|table3|ablation> [--csv results]
   t3 sweep --model T-NLG [--tps 4,8,16]
+  t3 lint <preset>|--all [--model T-NLG] [--tp N] [--sublayer fc2] [--deny warnings]
+          [--future] [--json]
   t3 validate
   t3 run [--artifacts artifacts]";
 
@@ -1083,6 +1087,124 @@ fn main() -> ExitCode {
                 );
             }
             ExitCode::SUCCESS
+        }
+        "lint" => {
+            use t3::analysis::{default_lint_tp, escalate, lint_registry, lint_spec, tally, Diag};
+            let deny_warnings = match flags.get("deny").map(String::as_str) {
+                None => false,
+                Some("warnings") => true,
+                Some(other) => {
+                    eprintln!("bad --deny '{other}' (only `warnings` is supported)");
+                    return ExitCode::FAILURE;
+                }
+            };
+            let json = flags.contains_key("json");
+            let sys = if flags.contains_key("future") {
+                SystemConfig::future_2x_cu()
+            } else {
+                SystemConfig::table1()
+            };
+            let model_name = flags.get("model").map(String::as_str).unwrap_or("T-NLG");
+            let Some(model) = by_name(model_name) else {
+                eprintln!("unknown model {model_name}; try `t3 models --list`");
+                return ExitCode::FAILURE;
+            };
+            let sub_s = flags.get("sublayer").map(String::as_str).unwrap_or("fc2");
+            let Some(sub) = sublayer_from(sub_s) else {
+                eprintln!("unknown sublayer (op|fc2|fc1|ip)");
+                return ExitCode::FAILURE;
+            };
+            // Unlike the run subcommands, an indivisible --tp is NOT a CLI
+            // error here: it is exactly what the linter exists to report
+            // (T3E011), so the value passes through unvalidated.
+            let tp_flag: Option<u64> = match flags.get("tp") {
+                Some(s) => match s.parse() {
+                    Ok(n) => Some(n),
+                    Err(_) => {
+                        eprintln!("bad --tp '{s}' (expected a number)");
+                        return ExitCode::FAILURE;
+                    }
+                },
+                None => None,
+            };
+            let mut results: Vec<(String, u64, Vec<Diag>)> = if flags.contains_key("all") {
+                match tp_flag {
+                    Some(tp) => experiment::registry()
+                        .iter()
+                        .map(|s| (s.name.clone(), tp, lint_spec(&sys, s, &model, tp, sub)))
+                        .collect(),
+                    None => lint_registry(&sys, &model, sub),
+                }
+            } else {
+                let Some(name) = pos.first() else {
+                    eprintln!("t3 lint: give a preset name or --all\n{USAGE}");
+                    return ExitCode::FAILURE;
+                };
+                let Some(spec) = experiment::preset(name) else {
+                    eprintln!("unknown preset {name}; try `t3 scenarios`");
+                    return ExitCode::FAILURE;
+                };
+                let tp = tp_flag.unwrap_or_else(|| default_lint_tp(&spec, &model));
+                vec![(
+                    spec.name.clone(),
+                    tp,
+                    lint_spec(&sys, &spec, &model, tp, sub),
+                )]
+            };
+            if deny_warnings {
+                for (_, _, diags) in &mut results {
+                    escalate(diags, true);
+                }
+            }
+            let (mut errors, mut warnings) = (0usize, 0usize);
+            for (_, _, diags) in &results {
+                let (e, w) = tally(diags);
+                errors += e;
+                warnings += w;
+            }
+            if json {
+                let mut w = t3::trace::json::JsonWriter::new();
+                w.begin_obj();
+                w.key("model").str_val(&model.name);
+                w.key("presets").begin_arr();
+                for (name, tp, diags) in &results {
+                    w.begin_obj();
+                    w.key("name").str_val(name);
+                    w.key("tp").u64_val(*tp);
+                    w.key("diags").begin_arr();
+                    for d in diags {
+                        d.write_json(&mut w);
+                    }
+                    w.end_arr().end_obj();
+                }
+                w.end_arr();
+                w.key("errors").u64_val(errors as u64);
+                w.key("warnings").u64_val(warnings as u64);
+                w.end_obj();
+                println!("{}", w.finish());
+            } else {
+                for (name, tp, diags) in &results {
+                    if diags.is_empty() {
+                        println!("{name} (tp={tp}): clean");
+                    } else {
+                        println!("{name} (tp={tp}):");
+                        for d in diags {
+                            for line in d.to_string().lines() {
+                                println!("  {line}");
+                            }
+                        }
+                    }
+                }
+                println!(
+                    "{errors} error(s), {warnings} warning(s) across {} preset(s)",
+                    results.len()
+                );
+            }
+            if errors > 0 {
+                ExitCode::FAILURE
+            } else {
+                ExitCode::SUCCESS
+            }
         }
         "validate" => {
             // Cross-check the detailed Tracker model on a full stage's

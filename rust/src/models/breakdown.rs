@@ -32,8 +32,11 @@ pub enum Phase {
 /// One non-sliced operation with its roofline inputs.
 #[derive(Debug, Clone)]
 pub struct OpCost {
+    /// The operation's display name.
     pub name: &'static str,
+    /// Floating-point operations per invocation.
     pub flops: u64,
+    /// Bytes moved per invocation.
     pub bytes: u64,
 }
 

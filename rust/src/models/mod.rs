@@ -17,6 +17,7 @@ use crate::gemm::GemmShape;
 /// One Transformer model configuration (paper Table 2).
 #[derive(Debug, Clone, PartialEq)]
 pub struct ModelCfg {
+    /// The model's display name.
     pub name: &'static str,
     /// Hidden dimension H.
     pub hidden: u64,
@@ -35,6 +36,7 @@ pub struct ModelCfg {
 }
 
 impl ModelCfg {
+    /// Tokens per iteration (sequence length × batch).
     pub fn tokens(&self) -> u64 {
         self.seq_len * self.batch
     }
@@ -126,6 +128,7 @@ pub fn zoo() -> Vec<ModelCfg> {
     ]
 }
 
+/// Look a model up by (case-insensitive) name.
 pub fn by_name(name: &str) -> Option<ModelCfg> {
     zoo().into_iter().find(|m| m.name.eq_ignore_ascii_case(name))
 }
@@ -144,6 +147,7 @@ pub enum SubLayer {
 }
 
 impl SubLayer {
+    /// Every sliced sub-layer, in paper order.
     pub const ALL: [SubLayer; 4] = [
         SubLayer::OpFwd,
         SubLayer::Fc2Fwd,
@@ -151,6 +155,7 @@ impl SubLayer {
         SubLayer::IpBwd,
     ];
 
+    /// The paper's display name for the sub-layer.
     pub fn name(self) -> &'static str {
         match self {
             SubLayer::OpFwd => "OP(fwd)",

@@ -64,6 +64,7 @@ pub enum Blame {
 }
 
 impl Blame {
+    /// Every blame category, in stable display order.
     pub const ALL: [Blame; 7] = [
         Blame::Compute,
         Blame::Skew,
@@ -74,6 +75,7 @@ impl Blame {
         Blame::Wait,
     ];
 
+    /// Stable kebab-case category name (report rows, JSON keys).
     pub fn name(self) -> &'static str {
         match self {
             Blame::Compute => "compute",
@@ -92,8 +94,11 @@ impl Blame {
 pub struct PathSegment {
     /// Rank the cost accrued on.
     pub rank: u64,
+    /// Which resource the stretch is attributed to.
     pub blame: Blame,
+    /// Absolute segment start.
     pub start: SimTime,
+    /// Absolute segment end (`start <= end`).
     pub end: SimTime,
     /// Payload the segment moved (0 for non-transfer segments).
     pub bytes: u64,
@@ -105,6 +110,7 @@ pub struct PathSegment {
 }
 
 impl PathSegment {
+    /// The segment's length (`end - start`).
     pub fn duration(&self) -> SimTime {
         self.end - self.start
     }
@@ -126,16 +132,24 @@ pub struct CausalPath {
 /// to the path total exactly (same integer arithmetic).
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Default)]
 pub struct BlameRollup {
+    /// Path time attributed to [`Blame::Compute`].
     pub compute: SimTime,
+    /// Path time attributed to [`Blame::Skew`].
     pub skew: SimTime,
+    /// Path time attributed to [`Blame::Comm`].
     pub comm: SimTime,
+    /// Path time attributed to [`Blame::CommQueue`].
     pub comm_queue: SimTime,
+    /// Path time attributed to [`Blame::Congestion`].
     pub congestion: SimTime,
+    /// Path time attributed to [`Blame::Dram`].
     pub dram: SimTime,
+    /// Path time attributed to [`Blame::Wait`].
     pub wait: SimTime,
 }
 
 impl BlameRollup {
+    /// Partition a path's segments by blame category.
     pub fn from_path(path: &CausalPath) -> Self {
         let mut r = BlameRollup::default();
         for s in &path.segments {
@@ -156,6 +170,7 @@ impl BlameRollup {
         }
     }
 
+    /// The accumulated time for one category.
     pub fn get(&self, b: Blame) -> SimTime {
         match b {
             Blame::Compute => self.compute,
@@ -197,9 +212,13 @@ pub struct LinkBlame {
 /// [`SinkMode::Metrics`] captures of the same run.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub struct LaneRollup {
+    /// The lane the rollup folds.
     pub lane: Lane,
+    /// Total busy time across every rank.
     pub busy: SimTime,
+    /// Total payload bytes across every rank.
     pub bytes: u64,
+    /// Total spans folded in.
     pub spans: u64,
 }
 
@@ -225,19 +244,26 @@ impl Default for ProfileOpts {
 /// One causal profile: the path, its rollups, and any what-if replays.
 #[derive(Debug, Clone)]
 pub struct ProfileReport {
+    /// The profiled program's name.
     pub name: String,
+    /// Tensor-parallel degree of the profiled run.
     pub tp: u64,
     /// The sink mode the profiled run recorded under.
     pub sink: SinkMode,
     /// Group-completion time of the profiled run.
     pub total: SimTime,
+    /// The exact critical path (empty segments under metrics mode).
     pub path: CausalPath,
+    /// The path partitioned by blame category.
     pub blame: BlameRollup,
+    /// Per-link congestion attribution, hottest first.
     pub links: Vec<LinkBlame>,
+    /// Per-lane busy rollups across every rank.
     pub lanes: Vec<LaneRollup>,
     /// Total congestion over every recorded edge (identical across sink
     /// modes; the path carves only the share it walked).
     pub cong_total: SimTime,
+    /// Results of the requested counterfactual replays, in order.
     pub what_if: Vec<WhatIfResult>,
     /// The recorded trace, for Perfetto export with the path overlay.
     pub trace: Option<Trace>,

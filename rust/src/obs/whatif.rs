@@ -35,6 +35,7 @@ pub enum WhatIf {
 }
 
 impl WhatIf {
+    /// Every counterfactual, in CLI listing order.
     pub const ALL: [WhatIf; 4] = [
         WhatIf::ZeroSkew,
         WhatIf::LinkBw2x,

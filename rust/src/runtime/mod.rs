@@ -19,11 +19,14 @@ use std::path::{Path, PathBuf};
 /// A named f32 tensor argument.
 #[derive(Debug, Clone)]
 pub struct TensorF32 {
+    /// Row-major element data (`dims` product long).
     pub data: Vec<f32>,
+    /// Tensor dimensions.
     pub dims: Vec<usize>,
 }
 
 impl TensorF32 {
+    /// A tensor from data and dimensions (lengths must agree).
     pub fn new(data: Vec<f32>, dims: &[usize]) -> Self {
         assert_eq!(data.len(), dims.iter().product::<usize>());
         TensorF32 {
@@ -32,6 +35,7 @@ impl TensorF32 {
         }
     }
 
+    /// An all-zero tensor of the given dimensions.
     pub fn zeros(dims: &[usize]) -> Self {
         TensorF32 {
             data: vec![0.0; dims.iter().product()],
@@ -80,10 +84,12 @@ mod imp {
             })
         }
 
+        /// The conventional artifact directory.
         pub fn default_dir() -> PathBuf {
             super::default_artifact_dir()
         }
 
+        /// The PJRT platform name (e.g. "cpu").
         pub fn platform(&self) -> String {
             self.client.platform_name()
         }
@@ -93,6 +99,7 @@ mod imp {
             true
         }
 
+        /// Whether `dir` holds a compiled-artifact manifest.
         pub fn artifacts_available(dir: impl AsRef<Path>) -> bool {
             super::artifacts_present(dir.as_ref())
         }
@@ -179,14 +186,17 @@ mod imp {
         "PJRT runtime disabled: rebuild with `--features pjrt` (see Cargo.toml)";
 
     impl Runtime {
+        /// Always fails: the `pjrt` feature is off in this build.
         pub fn new(_dir: impl AsRef<Path>) -> Result<Self> {
             Err(Error::msg(DISABLED))
         }
 
+        /// The conventional artifact directory.
         pub fn default_dir() -> PathBuf {
             super::default_artifact_dir()
         }
 
+        /// The stub platform name.
         pub fn platform(&self) -> String {
             "pjrt-disabled".to_string()
         }
@@ -196,18 +206,22 @@ mod imp {
             false
         }
 
+        /// Whether `dir` holds a compiled-artifact manifest.
         pub fn artifacts_available(dir: impl AsRef<Path>) -> bool {
             super::artifacts_present(dir.as_ref())
         }
 
+        /// Always fails: the `pjrt` feature is off in this build.
         pub fn manifest(&self) -> Result<Vec<String>> {
             Err(Error::msg(DISABLED))
         }
 
+        /// Always fails: the `pjrt` feature is off in this build.
         pub fn load(&mut self, _name: &str) -> Result<()> {
             Err(Error::msg(DISABLED))
         }
 
+        /// Always fails: the `pjrt` feature is off in this build.
         pub fn exec_f32(&mut self, _name: &str, _inputs: &[TensorF32]) -> Result<Vec<Vec<f32>>> {
             Err(Error::msg(DISABLED))
         }

@@ -52,6 +52,7 @@ impl<E> Default for EventQueue<E> {
 }
 
 impl<E> EventQueue<E> {
+    /// An empty queue at time zero.
     pub fn new() -> Self {
         EventQueue {
             heap: BinaryHeap::new(),
@@ -73,11 +74,13 @@ impl<E> EventQueue<E> {
         self.popped
     }
 
+    /// Number of pending events.
     #[inline]
     pub fn len(&self) -> usize {
         self.heap.len()
     }
 
+    /// Whether no events are pending.
     #[inline]
     pub fn is_empty(&self) -> bool {
         self.heap.is_empty()

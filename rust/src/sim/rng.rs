@@ -35,6 +35,7 @@ impl Rng {
         Rng { s }
     }
 
+    /// Next raw 64-bit draw (xoshiro256**).
     #[inline]
     pub fn next_u64(&mut self) -> u64 {
         let result = self.s[0]
@@ -126,9 +127,11 @@ impl Default for TraceHash {
 }
 
 impl TraceHash {
+    /// A fresh FNV-1a accumulator.
     pub fn new() -> Self {
         TraceHash(0xcbf2_9ce4_8422_2325)
     }
+    /// Fold one value into the hash.
     #[inline]
     pub fn mix(&mut self, v: u64) {
         for b in v.to_le_bytes() {
@@ -136,6 +139,7 @@ impl TraceHash {
             self.0 = self.0.wrapping_mul(0x100_0000_01b3);
         }
     }
+    /// The accumulated digest.
     pub fn finish(&self) -> u64 {
         self.0
     }

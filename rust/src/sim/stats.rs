@@ -30,13 +30,18 @@ pub fn mean(xs: &[f64]) -> f64 {
 /// Running min/max/mean/count summary without storing samples.
 #[derive(Debug, Clone, Default)]
 pub struct Summary {
+    /// Samples folded in.
     pub count: u64,
+    /// Sum of all samples.
     pub sum: f64,
+    /// Smallest sample (`+inf` when empty).
     pub min: f64,
+    /// Largest sample (`-inf` when empty).
     pub max: f64,
 }
 
 impl Summary {
+    /// An empty summary (min/max at the identity infinities).
     pub fn new() -> Self {
         Summary {
             count: 0,
@@ -46,6 +51,7 @@ impl Summary {
         }
     }
 
+    /// Fold one sample in.
     pub fn add(&mut self, x: f64) {
         self.count += 1;
         self.sum += x;
@@ -53,6 +59,7 @@ impl Summary {
         self.max = self.max.max(x);
     }
 
+    /// Arithmetic mean of the folded samples (empty ⇒ 0).
     pub fn mean(&self) -> f64 {
         if self.count == 0 {
             0.0
@@ -66,13 +73,18 @@ impl Summary {
 /// DRAM queue-occupancy and latency distributions.
 #[derive(Debug, Clone)]
 pub struct Histogram {
+    /// Width of each bucket in sample units.
     pub bucket_width: f64,
+    /// Per-bucket sample counts.
     pub buckets: Vec<u64>,
+    /// Samples past the last bucket edge.
     pub overflow: u64,
+    /// Running min/max/mean over all samples (overflow included).
     pub summary: Summary,
 }
 
 impl Histogram {
+    /// `num_buckets` buckets of `bucket_width` each, all empty.
     pub fn new(bucket_width: f64, num_buckets: usize) -> Self {
         assert!(bucket_width > 0.0 && num_buckets > 0);
         Histogram {
@@ -83,6 +95,7 @@ impl Histogram {
         }
     }
 
+    /// Bin one sample (past-the-end samples land in `overflow`).
     pub fn add(&mut self, x: f64) {
         self.summary.add(x);
         let idx = (x / self.bucket_width) as usize;
@@ -93,6 +106,7 @@ impl Histogram {
         }
     }
 
+    /// Total samples binned, overflow included.
     pub fn total(&self) -> u64 {
         self.summary.count
     }
@@ -151,12 +165,16 @@ pub fn percentile_sorted(sorted: &[f64], q: f64) -> f64 {
 /// Figure-17 style traffic time-series CSV.
 #[derive(Debug, Clone)]
 pub struct TimeSeries {
+    /// Bin width in simulated time.
     pub bin: SimTime,
+    /// Accumulated amount per bin, growing on demand.
     pub bins: Vec<f64>,
+    /// Series name used in CSV headers.
     pub label: String,
 }
 
 impl TimeSeries {
+    /// An empty series with the given label and bin width.
     pub fn new(label: impl Into<String>, bin: SimTime) -> Self {
         assert!(!bin.is_zero());
         TimeSeries {
@@ -166,6 +184,7 @@ impl TimeSeries {
         }
     }
 
+    /// Accumulate `amount` into the bin containing time `t`.
     pub fn add(&mut self, t: SimTime, amount: f64) {
         let idx = (t.as_ps() / self.bin.as_ps()) as usize;
         if idx >= self.bins.len() {
@@ -174,6 +193,7 @@ impl TimeSeries {
         self.bins[idx] += amount;
     }
 
+    /// Sum over all bins.
     pub fn total(&self) -> f64 {
         self.bins.iter().sum()
     }
@@ -191,15 +211,22 @@ impl TimeSeries {
 /// paper's Figure 18 (DRAM access breakdown per sub-layer).
 #[derive(Debug, Clone, Copy, Default, PartialEq)]
 pub struct DramCounters {
+    /// Bytes read by GEMM compute.
     pub gemm_reads: u64,
+    /// Bytes written by GEMM compute.
     pub gemm_writes: u64,
+    /// Bytes read by reduce-scatter.
     pub rs_reads: u64,
+    /// Bytes written by reduce-scatter.
     pub rs_writes: u64,
+    /// Bytes read by all-gather.
     pub ag_reads: u64,
+    /// Bytes written by all-gather.
     pub ag_writes: u64,
 }
 
 impl DramCounters {
+    /// Total bytes across every category.
     pub fn total(&self) -> u64 {
         self.gemm_reads
             + self.gemm_writes
@@ -209,6 +236,7 @@ impl DramCounters {
             + self.ag_writes
     }
 
+    /// Accumulate another device's counters into this one.
     pub fn add(&mut self, other: &DramCounters) {
         self.gemm_reads += other.gemm_reads;
         self.gemm_writes += other.gemm_writes;

@@ -13,27 +13,37 @@ use std::ops::{Add, AddAssign, Div, Mul, Sub, SubAssign};
 #[derive(Debug, Clone, Copy, PartialEq, Eq, PartialOrd, Ord, Hash, Default)]
 pub struct SimTime(pub u64);
 
+/// Picoseconds per nanosecond.
 pub const PS_PER_NS: u64 = 1_000;
+/// Picoseconds per microsecond.
 pub const PS_PER_US: u64 = 1_000_000;
+/// Picoseconds per millisecond.
 pub const PS_PER_MS: u64 = 1_000_000_000;
+/// Picoseconds per second.
 pub const PS_PER_S: u64 = 1_000_000_000_000;
 
 impl SimTime {
+    /// The zero duration / simulation epoch.
     pub const ZERO: SimTime = SimTime(0);
+    /// The largest representable time.
     pub const MAX: SimTime = SimTime(u64::MAX);
 
+    /// From picoseconds.
     #[inline]
     pub fn ps(v: u64) -> Self {
         SimTime(v)
     }
+    /// From nanoseconds.
     #[inline]
     pub fn ns(v: u64) -> Self {
         SimTime(v * PS_PER_NS)
     }
+    /// From microseconds.
     #[inline]
     pub fn us(v: u64) -> Self {
         SimTime(v * PS_PER_US)
     }
+    /// From milliseconds.
     #[inline]
     pub fn ms(v: u64) -> Self {
         SimTime(v * PS_PER_MS)
@@ -59,42 +69,51 @@ impl SimTime {
         SimTime((s * PS_PER_S as f64).round() as u64)
     }
 
+    /// The exact picosecond count.
     #[inline]
     pub fn as_ps(self) -> u64 {
         self.0
     }
+    /// As fractional nanoseconds.
     #[inline]
     pub fn as_ns_f64(self) -> f64 {
         self.0 as f64 / PS_PER_NS as f64
     }
+    /// As fractional microseconds.
     #[inline]
     pub fn as_us_f64(self) -> f64 {
         self.0 as f64 / PS_PER_US as f64
     }
+    /// As fractional milliseconds.
     #[inline]
     pub fn as_ms_f64(self) -> f64 {
         self.0 as f64 / PS_PER_MS as f64
     }
+    /// As fractional seconds.
     #[inline]
     pub fn as_secs_f64(self) -> f64 {
         self.0 as f64 / PS_PER_S as f64
     }
 
+    /// Subtraction clamped at zero.
     #[inline]
     pub fn saturating_sub(self, rhs: SimTime) -> SimTime {
         SimTime(self.0.saturating_sub(rhs.0))
     }
 
+    /// The later of the two times.
     #[inline]
     pub fn max(self, rhs: SimTime) -> SimTime {
         SimTime(self.0.max(rhs.0))
     }
 
+    /// The earlier of the two times.
     #[inline]
     pub fn min(self, rhs: SimTime) -> SimTime {
         SimTime(self.0.min(rhs.0))
     }
 
+    /// Whether this is exactly zero.
     #[inline]
     pub fn is_zero(self) -> bool {
         self.0 == 0

@@ -27,9 +27,9 @@ use crate::sim::rng::Rng;
 // assertions over recorded timelines, re-exported here so property tests
 // pull everything from one place.
 pub use crate::trace::check::{
-    check_critical_path, check_dep_edges, check_dram_bytes_reconcile, check_egress_bytes,
-    check_fabric_links, check_lane_spans_disjoint, check_triggers_after_tracker, EXCLUSIVE_LANES,
-    LINK_LANES,
+    check_bounds, check_critical_path, check_dep_edges, check_dram_bytes_reconcile,
+    check_egress_bytes, check_fabric_links, check_lane_spans_disjoint,
+    check_triggers_after_tracker, EXCLUSIVE_LANES, LINK_LANES,
 };
 
 /// Base seed; override with `T3_PROP_SEED` to explore other corners.

@@ -249,6 +249,25 @@ pub fn check_critical_path(path: &CausalPath, total: SimTime) -> Result<(), Stri
     Ok(())
 }
 
+/// The symbolic bounds bracket the run: `lower <= total <= upper` in
+/// exact [`SimTime`] arithmetic (the static analyzer's live oracle; see
+/// [`crate::analysis::bounds`]).
+pub fn check_bounds(total: SimTime, bounds: &crate::analysis::Bounds) -> Result<(), String> {
+    if total < bounds.lower {
+        return Err(format!(
+            "total {total} undercuts the symbolic lower bound {}",
+            bounds.lower
+        ));
+    }
+    if total > bounds.upper {
+        return Err(format!(
+            "total {total} exceeds the symbolic upper bound {}",
+            bounds.upper
+        ));
+    }
+    Ok(())
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;

@@ -11,9 +11,13 @@ use super::{Lane, Trace};
 /// bytes are gigabytes — `unit` says which.
 #[derive(Debug, Clone, PartialEq)]
 pub struct DiffRow {
+    /// Metric name (e.g. "total", "cu-compute busy").
     pub metric: String,
+    /// Unit label ("ms", "%", "GB").
     pub unit: &'static str,
+    /// The metric's value in trace A.
     pub a: f64,
+    /// The metric's value in trace B.
     pub b: f64,
 }
 
@@ -31,8 +35,11 @@ impl DiffRow {
 /// A metric-by-metric comparison of two traces.
 #[derive(Debug, Clone, PartialEq)]
 pub struct TraceDiff {
+    /// Trace A's name.
     pub a: String,
+    /// Trace B's name.
     pub b: String,
+    /// The compared metrics, in report order.
     pub rows: Vec<DiffRow>,
 }
 

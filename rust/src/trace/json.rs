@@ -25,6 +25,7 @@ impl Default for JsonWriter {
 }
 
 impl JsonWriter {
+    /// An empty writer ready for one top-level value.
     pub fn new() -> Self {
         JsonWriter {
             out: String::new(),
@@ -46,6 +47,7 @@ impl JsonWriter {
         }
     }
 
+    /// Open an object (`{`).
     pub fn begin_obj(&mut self) -> &mut Self {
         self.pre();
         self.out.push('{');
@@ -59,6 +61,7 @@ impl JsonWriter {
         self
     }
 
+    /// Open an array (`[`).
     pub fn begin_arr(&mut self) -> &mut Self {
         self.pre();
         self.out.push('[');
@@ -66,12 +69,14 @@ impl JsonWriter {
         self
     }
 
+    /// Close the innermost array (`]`).
     pub fn end_arr(&mut self) -> &mut Self {
         self.comma.pop();
         self.out.push(']');
         self
     }
 
+    /// Write an object key; the next call writes its value.
     pub fn key(&mut self, k: &str) -> &mut Self {
         self.pre();
         self.push_escaped(k);
@@ -80,12 +85,14 @@ impl JsonWriter {
         self
     }
 
+    /// Write an escaped string value.
     pub fn str_val(&mut self, s: &str) -> &mut Self {
         self.pre();
         self.push_escaped(s);
         self
     }
 
+    /// Write an unsigned integer value.
     pub fn u64_val(&mut self, v: u64) -> &mut Self {
         self.pre();
         let _ = write!(self.out, "{v}");
@@ -130,6 +137,7 @@ impl JsonWriter {
         self.out.push('"');
     }
 
+    /// Consume the writer and return the JSON text.
     pub fn finish(self) -> String {
         self.out
     }

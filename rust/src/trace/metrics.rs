@@ -30,10 +30,12 @@ use crate::sim::time::SimTime;
 pub struct Intervals(Vec<(u64, u64)>);
 
 impl Intervals {
+    /// The merged union of the spans' `[start, end)` intervals.
     pub fn from_spans<'a>(spans: impl Iterator<Item = &'a Span>) -> Self {
         Self::from_pairs(spans.map(|s| (s.start.as_ps(), s.end.as_ps())))
     }
 
+    /// The merged union of raw `(start, end)` picosecond pairs.
     pub fn from_pairs(pairs: impl Iterator<Item = (u64, u64)>) -> Self {
         let mut v: Vec<(u64, u64)> = pairs.filter(|&(a, b)| b > a).collect();
         v.sort_unstable();
@@ -60,6 +62,7 @@ impl Intervals {
         SimTime::ps(self.0.last().map(|&(_, e)| e).unwrap_or(0))
     }
 
+    /// Whether the set covers nothing.
     pub fn is_empty(&self) -> bool {
         self.0.is_empty()
     }
@@ -138,11 +141,13 @@ impl Intervals {
 /// Busy/byte summary of one lane.
 #[derive(Debug, Clone, PartialEq)]
 pub struct LaneStats {
+    /// The summarized lane.
     pub lane: Lane,
     /// Union busy time of the lane's spans.
     pub busy: SimTime,
     /// Total payload bytes recorded on the lane.
     pub bytes: u64,
+    /// Number of spans recorded on the lane.
     pub spans: usize,
 }
 
@@ -158,6 +163,7 @@ pub enum CriticalKind {
 }
 
 impl CriticalKind {
+    /// Stable kebab-case name (report rows).
     pub fn name(self) -> &'static str {
         match self {
             CriticalKind::GemmBound => "gemm-bound",
@@ -170,6 +176,7 @@ impl CriticalKind {
 /// Critical-path decomposition of the exposed window `[gemm_end, end)`.
 #[derive(Debug, Clone, PartialEq)]
 pub struct CriticalPath {
+    /// Which resource dominates the exposed window.
     pub kind: CriticalKind,
     /// Length of the exposed window.
     pub window: SimTime,
@@ -182,6 +189,7 @@ pub struct CriticalPath {
 /// Span-derived metrics of one rank's timeline.
 #[derive(Debug, Clone, PartialEq)]
 pub struct RankMetrics {
+    /// The rank the metrics describe.
     pub rank: u64,
     /// Accounted end of the timeline.
     pub end: SimTime,
@@ -197,12 +205,14 @@ pub struct RankMetrics {
     pub overlap_fraction: f64,
     /// `end − gemm_end`.
     pub exposed_comm: SimTime,
+    /// Decomposition of the exposed window.
     pub critical: CriticalPath,
     /// Per-lane stats in [`Lane::ALL`] order.
     pub lanes: Vec<LaneStats>,
 }
 
 impl RankMetrics {
+    /// The stats of one lane (lanes always cover [`Lane::ALL`]).
     pub fn lane(&self, lane: Lane) -> &LaneStats {
         self.lanes
             .iter()
@@ -296,10 +306,12 @@ pub struct TraceMetrics {
     pub comm_busy: SimTime,
     /// `overlap / comm_busy` (0 when no link traffic anywhere).
     pub overlap_fraction: f64,
+    /// Per-rank metrics, rank order.
     pub per_rank: Vec<RankMetrics>,
 }
 
 impl Trace {
+    /// Derive the whole-trace metrics from every rank's spans.
     pub fn metrics(&self) -> TraceMetrics {
         let per_rank: Vec<RankMetrics> = self.ranks.iter().map(RankTrace::metrics).collect();
         let end = per_rank.iter().map(|r| r.end).max().unwrap_or(SimTime::ZERO);

@@ -65,6 +65,7 @@ pub enum Lane {
 }
 
 impl Lane {
+    /// Every lane, in stable display order.
     pub const ALL: [Lane; 7] = [
         Lane::CuCompute,
         Lane::CuConsumer,
@@ -75,6 +76,7 @@ impl Lane {
         Lane::Tracker,
     ];
 
+    /// Stable kebab-case lane name (Perfetto thread names, checkers).
     pub fn name(self) -> &'static str {
         match self {
             Lane::CuCompute => "cu-compute",
@@ -113,6 +115,7 @@ pub enum SpanLabel {
 }
 
 impl SpanLabel {
+    /// Human-readable span name (Perfetto event titles).
     pub fn describe(self) -> String {
         match self {
             SpanLabel::Stage(s) => format!("stage {s}"),
@@ -127,10 +130,15 @@ impl SpanLabel {
 /// sums against `DramCounters` and link byte totals exactly.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub struct Span {
+    /// The resource lane the interval occupies.
     pub lane: Lane,
+    /// Absolute interval start.
     pub start: SimTime,
+    /// Absolute interval end (`start <= end`).
     pub end: SimTime,
+    /// Payload bytes the span moved (0 for pure compute).
     pub bytes: u64,
+    /// What the interval represents.
     pub label: SpanLabel,
 }
 
@@ -148,6 +156,7 @@ pub enum InstantKind {
 }
 
 impl InstantKind {
+    /// Human-readable instant name (Perfetto event titles).
     pub fn describe(self) -> String {
         match self {
             InstantKind::TrackerDone(p) => format!("tracker-done p{p}"),
@@ -157,10 +166,14 @@ impl InstantKind {
     }
 }
 
+/// A point event on a lane (tracker completions, trigger firings).
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub struct Instant {
+    /// The lane the event belongs to.
     pub lane: Lane,
+    /// Absolute event time.
     pub at: SimTime,
+    /// What fired.
     pub kind: InstantKind,
 }
 
@@ -180,6 +193,7 @@ pub enum SinkMode {
 }
 
 impl SinkMode {
+    /// Whether the sink records anything at all.
     pub fn enabled(self) -> bool {
         self != SinkMode::Off
     }
@@ -218,8 +232,11 @@ pub enum DepKind {
 /// first-hop wait alone).
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub struct DepEdge {
+    /// The kind of causal dependency.
     pub kind: DepKind,
+    /// Rank where the cause happened.
     pub src_rank: u64,
+    /// Rank where the effect happened ([`UNKNOWN_RANK`] until patched).
     pub dst_rank: u64,
     /// When the cause was ready (send-ready / tracker-done / step end).
     pub src_at: SimTime,
@@ -244,10 +261,13 @@ pub struct DepEdge {
 pub struct LaneAgg {
     /// Phase index within the run (stamped by `execute`).
     pub phase: u32,
+    /// The lane the aggregate folds.
     pub lane: Lane,
     /// Sum of span durations (spans on one lane never self-overlap).
     pub busy: SimTime,
+    /// Sum of span payload bytes.
     pub bytes: u64,
+    /// Number of spans folded in.
     pub spans: u64,
 }
 
@@ -275,9 +295,13 @@ fn fold_span_into_agg(agg: &mut Vec<LaneAgg>, s: &Span) {
 /// trace-derived totals equal engine-reported totals to the bit.
 #[derive(Debug, Clone, PartialEq)]
 pub struct RankTrace {
+    /// The rank this timeline belongs to.
     pub rank: u64,
+    /// The phase's accounted end (engine-stamped, bit-exact).
     pub end: SimTime,
+    /// Busy intervals, in recording order (full mode only).
     pub spans: Vec<Span>,
+    /// Point events, in recording order (full mode only).
     pub instants: Vec<Instant>,
     /// Dependency edges recorded on this rank (full mode; plus the
     /// phase-start edges `execute` appends in every mode).
@@ -295,6 +319,7 @@ pub struct RankTrace {
 }
 
 impl RankTrace {
+    /// An empty timeline for `rank`.
     pub fn new(rank: u64) -> Self {
         RankTrace {
             rank,
@@ -360,6 +385,7 @@ impl RankTrace {
         }
     }
 
+    /// The spans recorded on one lane, in recording order.
     pub fn lane_spans(&self, lane: Lane) -> impl Iterator<Item = &Span> {
         self.spans.iter().filter(move |s| s.lane == lane)
     }
@@ -411,13 +437,16 @@ pub fn merge_fabric_links(into: &mut Vec<FabricLinkTrace>, more: Vec<FabricLinkT
 /// lanes when the run went through a [`crate::fabric::Network`].
 #[derive(Debug, Clone, PartialEq)]
 pub struct Trace {
+    /// The run's display name (preset/program name).
     pub name: String,
+    /// One timeline per participating rank.
     pub ranks: Vec<RankTrace>,
     /// Per-physical-link fabric occupancy (empty off the fabric path).
     pub links: Vec<FabricLinkTrace>,
 }
 
 impl Trace {
+    /// Wrap one rank's timeline as a whole trace (mirror engines).
     pub fn single(name: impl Into<String>, rank: RankTrace) -> Self {
         Trace {
             name: name.into(),
@@ -426,10 +455,12 @@ impl Trace {
         }
     }
 
+    /// Total spans retained across all ranks.
     pub fn span_count(&self) -> usize {
         self.ranks.iter().map(|r| r.spans.len()).sum()
     }
 
+    /// Total instants retained across all ranks.
     pub fn instant_count(&self) -> usize {
         self.ranks.iter().map(|r| r.instants.len()).sum()
     }
@@ -468,11 +499,13 @@ impl TraceSink {
         }
     }
 
+    /// Whether the sink is recording (false when constructed off).
     #[inline]
     pub fn enabled(&self) -> bool {
         self.t.is_some()
     }
 
+    /// The mode the sink was constructed with.
     pub fn mode(&self) -> SinkMode {
         self.mode
     }
@@ -482,6 +515,7 @@ impl TraceSink {
         self.t.as_ref().map(|t| t.rank)
     }
 
+    /// Record a busy interval (folded to aggregates in metrics mode).
     #[inline]
     pub fn span(&mut self, lane: Lane, start: SimTime, end: SimTime, bytes: u64, label: SpanLabel) {
         if let Some(t) = &mut self.t {
@@ -500,6 +534,7 @@ impl TraceSink {
         }
     }
 
+    /// Record a point event (counted but dropped in metrics mode).
     #[inline]
     pub fn instant(&mut self, lane: Lane, at: SimTime, kind: InstantKind) {
         if let Some(t) = &mut self.t {
@@ -600,6 +635,7 @@ pub struct DramLanes {
 }
 
 impl DramLanes {
+    /// Two coalescers (compute + comm) merging spans closer than `gap`.
     pub fn new(gap: SimTime) -> Self {
         DramLanes {
             comp: LaneCoalescer::new(Lane::DramCompute, gap),
@@ -617,6 +653,7 @@ impl DramLanes {
         }
     }
 
+    /// Flush both lanes into their coalesced spans.
     pub fn into_spans(self) -> Vec<Span> {
         let mut out = self.comp.into_spans();
         out.extend(self.comm.into_spans());

@@ -23,7 +23,9 @@ use crate::config::TrackerConfig;
 /// Identifies one wavefront's output tile.
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
 pub struct WfKey {
+    /// Workgroup id.
     pub wg_id: u32,
+    /// Wavefront id within the workgroup.
     pub wf_id: u8,
 }
 
@@ -62,6 +64,7 @@ pub struct Tracker {
 }
 
 impl Tracker {
+    /// An empty tracker with the given capacity/set configuration.
     pub fn new(cfg: TrackerConfig) -> Self {
         let sets = (0..cfg.sets).map(|_| Vec::new()).collect();
         Tracker {
@@ -152,6 +155,7 @@ impl Tracker {
             .map(|e| e.start_vaddr)
     }
 
+    /// Whether no entries are live.
     pub fn is_empty(&self) -> bool {
         self.live == 0
     }
@@ -162,11 +166,13 @@ impl Tracker {
 /// completion").
 #[derive(Debug, Clone)]
 pub struct ChunkProgress {
+    /// Processed-chunk position the counter guards.
     pub position: usize,
     remaining: u64,
 }
 
 impl ChunkProgress {
+    /// A counter expecting `wf_tiles` completions for `position`.
     pub fn new(position: usize, wf_tiles: u64) -> Self {
         assert!(wf_tiles > 0);
         ChunkProgress {
@@ -182,6 +188,7 @@ impl ChunkProgress {
         self.remaining == 0
     }
 
+    /// Whether the chunk has fully completed.
     pub fn done(&self) -> bool {
         self.remaining == 0
     }

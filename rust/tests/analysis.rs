@@ -1,0 +1,212 @@
+//! Integration pass over the static analysis subsystem (`t3::analysis`):
+//! the registry-wide lint sweep the CI gate runs, mutation tests pinning
+//! each diagnostic code to the exact defect that raises it, and the
+//! symbolic bounds oracle bracketing every preset's simulated total.
+
+use t3::analysis::fabric::{check_flows, Flow};
+use t3::analysis::{
+    default_lint_tp, lint_registry, lint_spec, program_bounds, tally, verify_program, DepGraph,
+    DiagCode,
+};
+use t3::cluster::{
+    execute, ExecOpts, ExecTarget, GemmCollective, PhaseRole, Program, RingCollective, StartRule,
+};
+use t3::config::SystemConfig;
+use t3::engine::collective_run::RingKind;
+use t3::fabric::FabricGraph;
+use t3::gemm::traffic::WriteMode;
+use t3::gemm::{StagePlan, Tiling};
+use t3::models::{by_name, sublayer_gemm, ModelCfg, SubLayer};
+use t3::testkit::check_bounds;
+
+fn sys() -> SystemConfig {
+    SystemConfig::table1()
+}
+
+fn model() -> ModelCfg {
+    by_name("T-NLG").unwrap()
+}
+
+fn plan(sys: &SystemConfig, tp: u64) -> StagePlan {
+    let shape = sublayer_gemm(&model(), tp, SubLayer::Fc2);
+    StagePlan::new(shape, Tiling::default(), &sys.gpu)
+}
+
+fn ring(bytes: u64) -> RingCollective {
+    RingCollective {
+        bytes,
+        cus: 80,
+        kind: RingKind::RsCu,
+    }
+}
+
+/// The CI gate's contract: every registry preset, at its default lint TP,
+/// verifies with zero error-severity findings.
+#[test]
+fn registry_lints_clean_at_default_tps() {
+    let s = sys();
+    let m = model();
+    for (name, tp, diags) in lint_registry(&s, &m, SubLayer::Fc2) {
+        let (errors, _) = tally(&diags);
+        assert_eq!(errors, 0, "preset `{name}` (tp={tp}) has errors: {diags:?}");
+    }
+}
+
+/// Mutation: a hand-assembled waiting cycle (a shape the `Program`
+/// builder cannot produce) is reported as T3E002, once, naming every
+/// member.
+#[test]
+fn mutation_cyclic_rules_raise_t3e002() {
+    let g = DepGraph {
+        deps: vec![vec![2], vec![0], vec![1]],
+    };
+    let diags = g.validate();
+    assert_eq!(diags.len(), 1);
+    assert_eq!(diags[0].code, DiagCode::CyclicDeps);
+    assert!(diags[0].message.contains("0, 1, 2"), "{}", diags[0].message);
+}
+
+/// Mutation: an `AtSliceTrigger` index past the producer's declared split
+/// is T3E005 — caught statically, where the driver would panic mid-run.
+#[test]
+fn mutation_out_of_range_slice_trigger_raises_t3e005() {
+    let s = sys();
+    let tp = 8;
+    let prog = Program::new("mutant-slice-oob", tp)
+        .phase(
+            PhaseRole::Gemm,
+            StartRule::AtZero,
+            GemmCollective {
+                plan: plan(&s, tp),
+                cus: 80,
+                write_mode: WriteMode::ThroughLlc,
+                slices: 4,
+            },
+        )
+        .phase(
+            PhaseRole::ReduceScatter,
+            StartRule::AtSliceTrigger {
+                slice: 7,
+                serial: false,
+            },
+            ring(8 << 20),
+        );
+    let diags = verify_program(&s, &prog, &ExecTarget::Mirror);
+    assert!(
+        diags.iter().any(|d| d.code == DiagCode::SliceOutOfRange),
+        "{diags:?}"
+    );
+}
+
+/// Mutation: an `AtSliceTrigger` with no upstream phase declaring any
+/// slice split is T3E004.
+#[test]
+fn mutation_slice_trigger_without_producer_raises_t3e004() {
+    let s = sys();
+    let tp = 8;
+    let prog = Program::new("mutant-no-producer", tp)
+        .phase(PhaseRole::ReduceScatter, StartRule::AtZero, ring(8 << 20))
+        .phase(
+            PhaseRole::AllGather,
+            StartRule::AtSliceTrigger {
+                slice: 0,
+                serial: false,
+            },
+            ring(8 << 20),
+        );
+    let diags = verify_program(&s, &prog, &ExecTarget::Mirror);
+    assert!(
+        diags.iter().any(|d| d.code == DiagCode::NoSliceProducer),
+        "{diags:?}"
+    );
+}
+
+/// The fail-fast gate: `execute` refuses to drive a program static
+/// analysis rejects, instead of asserting deep inside the event loop.
+#[test]
+#[should_panic(expected = "static analysis found")]
+fn execute_preflight_aborts_on_errors() {
+    let s = sys();
+    let tp = 8;
+    let prog = Program::new("mutant-preflight", tp)
+        .phase(PhaseRole::ReduceScatter, StartRule::AtZero, ring(8 << 20))
+        .phase(
+            PhaseRole::AllGather,
+            StartRule::AtSliceTrigger {
+                slice: 0,
+                serial: false,
+            },
+            ring(8 << 20),
+        );
+    let _ = execute(&s, &prog, &ExecOpts::mirror());
+}
+
+/// Mutation: a flow between endpoints no link path connects is T3E006,
+/// reported once per (src, dst) pair.
+#[test]
+fn mutation_unroutable_fabric_raises_t3e006() {
+    // Two endpoints, zero links: nothing is reachable.
+    let graph = FabricGraph {
+        vertices: 2,
+        endpoints: 2,
+        switch_names: Vec::new(),
+        links: Vec::new(),
+    };
+    let flow = Flow {
+        src: 0,
+        dst: 1,
+        bytes: 1 << 20,
+    };
+    let diags = check_flows(&graph, &[flow, flow]);
+    let unroutable: Vec<_> = diags
+        .iter()
+        .filter(|d| d.code == DiagCode::Unroutable)
+        .collect();
+    assert_eq!(unroutable.len(), 1, "{diags:?}");
+}
+
+/// Mutation: a hierarchical all-reduce at a TP the fabric's rack size
+/// does not divide is T3E008 (the schedule would silently flatten).
+#[test]
+fn mutation_non_dividing_rack_size_raises_t3e008() {
+    let s = sys();
+    // GPT-3's hidden (12288) is divisible by 6, so TP itself is fine —
+    // the defect is purely the rack grouping (fat tree racks 8 per leaf).
+    let m = by_name("GPT-3").unwrap();
+    let spec = t3::experiment::preset("hier-ar").unwrap();
+    let diags = lint_spec(&s, &spec, &m, 6, SubLayer::Fc2);
+    assert!(
+        diags.iter().any(|d| d.code == DiagCode::BadRackSize),
+        "{diags:?}"
+    );
+    // At the preset's own default TP the finding disappears.
+    let tp = default_lint_tp(&spec, &m);
+    let diags = lint_spec(&s, &spec, &m, tp, SubLayer::Fc2);
+    assert_eq!(tally(&diags).0, 0, "{diags:?}");
+}
+
+/// The live oracle: for every registry preset, the symbolic bounds
+/// derived from the spec alone bracket the simulated total — in exact
+/// `SimTime` arithmetic, at the preset's default lint TP.
+#[test]
+fn symbolic_bounds_bracket_every_registry_preset() {
+    let s = sys();
+    let m = model();
+    for spec in t3::experiment::registry() {
+        let tp = default_lint_tp(&spec, &m);
+        let prog = spec.compile(&s, &m, tp, SubLayer::Fc2);
+        let (target, opts) = match spec.cluster.clone() {
+            Some(cm) => (ExecTarget::Cluster(cm.clone()), ExecOpts::cluster(cm)),
+            None => (ExecTarget::Mirror, ExecOpts::mirror()),
+        };
+        let report = execute(&s, &prog, &opts);
+        let bounds = program_bounds(&s, &prog, &target);
+        check_bounds(report.total, &bounds)
+            .unwrap_or_else(|e| panic!("preset `{}` (tp={tp}): {e}", spec.name));
+        assert!(
+            bounds.lower > t3::sim::time::SimTime::ZERO,
+            "preset `{}`: a zero lower bound proves nothing",
+            spec.name
+        );
+    }
+}

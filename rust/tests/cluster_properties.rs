@@ -1180,6 +1180,122 @@ fn prop_ensemble_is_deterministic_over_scenario_space() {
 }
 
 #[test]
+fn symbolic_bounds_bracket_fuzzed_programs() {
+    // Satellite: the bounds oracle on *arbitrary* programs, not just the
+    // registry presets — 1..=3 fuzzed phases drawn from the three machine
+    // families, composed under every chain-sound start rule (serialized,
+    // barrier, track-and-trigger, sliced), executed on fuzzed cluster
+    // models (legacy + multi-hop fabric) and the mirror target. The
+    // symbolic bracket from `program_bounds` must hold in exact `SimTime`
+    // arithmetic; debug builds additionally re-assert the lower bound
+    // inside `execute` itself. Fused phases ignore their start offset
+    // (the engine is the producer), so they only draw chain-restarting
+    // rules — the analyzer's declared soundness envelope.
+    use t3::analysis::program_bounds;
+    use t3::cluster::PhaseRole;
+    use t3::testkit::check_bounds;
+    let s = sys();
+    let plan = StagePlan::new(
+        GemmShape::new(1024, 512, 256, DType::F16),
+        Tiling::default(),
+        &s.gpu,
+    );
+    let opts = FusedOpts {
+        policy: ArbPolicy::T3Mca,
+        ..FusedOpts::default()
+    };
+    forall(48, |rng| {
+        let tp = *rng.choose(&[2u64, 4, 8]);
+        let target = if rng.chance(0.25) {
+            ExecTarget::Mirror
+        } else {
+            ExecTarget::Cluster(fuzz_model_any(rng, tp))
+        };
+        let nphases = rng.range(1, 4);
+        let mut prog = Program::new("fuzzed-bounds", tp);
+        // Slice count the most recent producer declared (0 = none), and
+        // whether the immediately preceding phase fires an early trigger.
+        let mut producer_slices = 0u32;
+        let mut prev_early = false;
+        for i in 0..nphases {
+            let family = rng.index(3);
+            let rule = if i == 0 {
+                StartRule::AtZero
+            } else if family == 2 {
+                // Fused: only rules that restart the lower-bound chain.
+                if prev_early && rng.chance(0.5) {
+                    StartRule::AtPrevTriggers
+                } else {
+                    StartRule::AtZero
+                }
+            } else if producer_slices > 0 && rng.chance(0.4) {
+                StartRule::AtSliceTrigger {
+                    slice: rng.range(0, u64::from(producer_slices)) as u32,
+                    serial: rng.chance(0.5),
+                }
+            } else if prev_early && rng.chance(0.4) {
+                StartRule::AtPrevTriggers
+            } else if rng.chance(0.5) {
+                StartRule::AfterPrev
+            } else {
+                StartRule::AfterAllPrev
+            };
+            match family {
+                0 => {
+                    let slices = if rng.chance(0.3) { rng.range(2, 5) as u32 } else { 1 };
+                    prog = prog.phase(
+                        PhaseRole::Gemm,
+                        rule,
+                        GemmCollective {
+                            slices,
+                            plan: plan.clone(),
+                            cus: *rng.choose(&[16u32, 80]),
+                            write_mode: WriteMode::BypassLlc,
+                        },
+                    );
+                    if slices > 1 {
+                        producer_slices = slices;
+                    }
+                    prev_early = false;
+                }
+                1 => {
+                    prog = prog.phase(
+                        PhaseRole::ReduceScatter,
+                        rule,
+                        RingCollective {
+                            bytes: rng.range(1, 3) * MB * tp,
+                            cus: 80,
+                            kind: *rng.choose(&[RingKind::RsCu, RingKind::AgCu, RingKind::RsNmc]),
+                        },
+                    );
+                    prev_early = false;
+                }
+                _ => {
+                    prog = prog.phase(
+                        PhaseRole::FusedGemmRs,
+                        rule,
+                        FusedGemmRsCollective {
+                            slices: 1,
+                            plan: plan.clone(),
+                            opts: opts.clone(),
+                        },
+                    );
+                    prev_early = true;
+                }
+            }
+        }
+        let exec_opts = match &target {
+            ExecTarget::Mirror => ExecOpts::mirror(),
+            ExecTarget::Cluster(cm) => ExecOpts::cluster(cm.clone()),
+        };
+        let report = execute(&s, &prog, &exec_opts);
+        let bounds = program_bounds(&s, &prog, &target);
+        check_bounds(report.total, &bounds)
+            .unwrap_or_else(|e| panic!("fuzzed program ({nphases} phases, tp={tp}): {e}"));
+    });
+}
+
+#[test]
 fn dep_edges_are_well_formed_across_machine_kinds_and_topologies() {
     // Satellite: `check_dep_edges` fuzzed across collective families x
     // skew x topology (legacy + multi-hop fabric) x TP x sink mode. Every
